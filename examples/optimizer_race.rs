@@ -1,0 +1,65 @@
+//! The Figure-1 experiment, live: race every optimizer on a binarized
+//! dataset and watch the Newton-family baselines blow up at weak
+//! regularization while the surrogate methods descend monotonically.
+//!
+//! Run with: `cargo run --release --example optimizer_race [--dataset flchain]`
+
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::binarize::{binarize, BinarizeConfig};
+use fastsurvival::data::datasets;
+use fastsurvival::optim::{self, FitConfig, Objective, Optimizer};
+use fastsurvival::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.str_or("dataset", "flchain");
+    let mut spec = datasets::spec(&name);
+    spec.n = args.get_or("n", 1000);
+    // quantiles=40 yields rare threshold indicators with near-zero
+    // curvature at β=0 — the regime where plain Newton overshoots (Fig 1).
+    let raw = datasets::generate_stand_in(&spec, args.get_or("seed", 1));
+    let ds = binarize(&raw, &BinarizeConfig {
+        max_quantiles: args.get_or("quantiles", 40),
+        ..Default::default()
+    });
+    let pr = CoxProblem::new(&ds);
+    println!("{name}: n={} p={} (binarized)", ds.n(), ds.p());
+
+    for (l1, l2) in [(0.0, 1.0), (1.0, 5.0)] {
+        println!("\n=== λ1={l1} λ2={l2} ===");
+        println!(
+            "{:<20} {:>12} {:>8} {:>10} {:>9} {:>9}",
+            "method", "final loss", "iters", "time(ms)", "monotone", "diverged"
+        );
+        let methods: &[&str] = if l1 == 0.0 {
+            &["quadratic", "cubic", "newton", "quasi-newton", "prox-newton", "gd"]
+        } else {
+            &["quadratic", "cubic", "quasi-newton", "prox-newton", "gd"]
+        };
+        for m in methods {
+            let opt = optim::by_name(m);
+            let cfg = FitConfig {
+                objective: Objective { l1, l2 },
+                max_iters: args.get_or("iters", 30),
+                tol: 1e-11,
+                budget_secs: 30.0,
+                record_trace: true,
+            };
+            let t0 = std::time::Instant::now();
+            let res = opt.fit(&pr, &cfg);
+            println!(
+                "{:<20} {:>12.4} {:>8} {:>10.1} {:>9} {:>9}",
+                opt.name(),
+                res.objective_value,
+                res.iterations,
+                t0.elapsed().as_secs_f64() * 1e3,
+                res.trace.monotone(1e-8),
+                res.trace.diverged
+            );
+        }
+    }
+    println!(
+        "\nExpected shape (paper Fig. 1): surrogates always monotone and fastest\n\
+         to high precision; exact Newton explodes at weak λ2 on binarized data."
+    );
+}

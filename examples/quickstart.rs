@@ -1,0 +1,68 @@
+//! Quickstart: fit a Cox proportional hazards model with FastSurvival's
+//! cubic-surrogate coordinate descent and inspect the result.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::metrics::concordance_index;
+use fastsurvival::optim::{CubicSurrogate, FitConfig, Objective, Optimizer};
+
+fn main() {
+    // 1. A synthetic survival dataset (Appendix C.2 generator): 500
+    //    samples, 20 features, 4 of which carry signal.
+    let ds = generate(&SyntheticConfig {
+        n: 500,
+        p: 20,
+        rho: 0.5,
+        k: 4,
+        s: 0.1,
+        seed: 7,
+    });
+    println!(
+        "dataset: n={} p={} events={} censoring={:.0}%",
+        ds.n(),
+        ds.p(),
+        ds.n_events(),
+        100.0 * ds.censoring_rate()
+    );
+
+    // 2. Preprocess: sort by descending time so risk sets are prefixes.
+    let problem = CoxProblem::new(&ds);
+
+    // 3. Fit with the cubic surrogate (guaranteed monotone descent,
+    //    no line search, O(n) exact second derivatives per coordinate).
+    let cfg = FitConfig {
+        objective: Objective { l1: 0.5, l2: 0.1 },
+        max_iters: 200,
+        tol: 1e-10,
+        ..Default::default()
+    };
+    let result = CubicSurrogate.fit(&problem, &cfg);
+    println!(
+        "fit: objective {:.4} in {} sweeps (monotone descent: {})",
+        result.objective_value,
+        result.iterations,
+        result.trace.monotone(1e-9)
+    );
+
+    // 4. Inspect the model.
+    let nonzero: Vec<(usize, f64)> = result
+        .beta
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.abs() > 1e-10)
+        .map(|(j, &b)| (j, b))
+        .collect();
+    println!("selected {} features:", nonzero.len());
+    for (j, b) in &nonzero {
+        let truth = ds.true_beta.as_ref().unwrap()[*j];
+        println!("  x{j:<3} beta = {b:+.4}   (true {truth:+.1})");
+    }
+
+    // 5. Evaluate.
+    let eta = ds.x.matvec(&result.beta);
+    let ci = concordance_index(&ds.time, &ds.event, &eta);
+    println!("train concordance index: {ci:.4}");
+    assert!(ci > 0.7, "expected an informative model");
+}

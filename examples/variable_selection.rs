@@ -1,0 +1,56 @@
+//! Variable selection under extreme correlation (the Figure-2 workload):
+//! beam search vs ABESS vs Coxnet vs Adaptive Lasso on AR(1) ρ=0.9
+//! synthetic data with a planted 15-feature support.
+//!
+//! Run with: `cargo run --release --example variable_selection`
+
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::metrics::support_f1;
+use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
+
+fn main() {
+    let ds = generate(&SyntheticConfig {
+        n: 1200,
+        p: 1200,
+        rho: 0.9,
+        k: 15,
+        s: 0.1,
+        seed: 0,
+    });
+    let truth = ds.true_beta.clone().unwrap();
+    println!(
+        "synthetic high-correlation dataset (paper Fig. 2, leftmost): n={} p={} true support 15, rho=0.9",
+        ds.n(),
+        ds.p()
+    );
+    let problem = CoxProblem::new(&ds);
+
+    let selectors: Vec<Box<dyn VariableSelector>> = vec![
+        Box::new(BeamSearch { width: 8, screen: 20, ..Default::default() }),
+        Box::new(Abess::default()),
+        Box::new(CoxnetPath { n_lambdas: 30, ..Default::default() }),
+        Box::new(AdaptiveLasso::default()),
+    ];
+
+    println!("\n{:<22} {:>4} {:>10} {:>8} {:>8} {:>8}", "method", "k", "loss", "P", "R", "F1");
+    for sel in &selectors {
+        let sols = sel.select(&problem, &[15]);
+        for sol in sols {
+            let s = support_f1(&truth, &sol.beta, 1e-10);
+            println!(
+                "{:<22} {:>4} {:>10.3} {:>8.3} {:>8.3} {:>8.3}",
+                sel.name(),
+                sol.k,
+                sol.train_loss,
+                s.precision,
+                s.recall,
+                s.f1
+            );
+        }
+    }
+    println!(
+        "\nThe beam search (ours) should dominate the F1 column — the paper's\n\
+         headline variable-selection result (Figure 2)."
+    );
+}

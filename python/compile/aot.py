@@ -1,0 +1,99 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for Rust.
+
+HLO text (NOT ``lowered.serialize()``): jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids, so
+text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts land in ``artifacts/`` together with ``manifest.tsv``
+(tab-separated: name, file, n, p, comma-joined input dtypes) which
+``rust/src/runtime/artifacts.rs`` parses — no serde needed on either side.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from ``python/``
+(what ``make artifacts`` does). Python never runs at request time.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets the Rust runtime pads into. Per-coordinate entries exist
+# for each n; the batched screening entry for (n, p) pairs.
+N_BUCKETS = (1024, 4096, 16384)
+NP_BUCKETS = ((1024, 128), (4096, 512))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points():
+    """(name, fn, example_args, n, p) for every artifact."""
+    out = []
+    for n in N_BUCKETS:
+        out.append(
+            (f"coord_derivs_n{n}", model.coord_derivs,
+             (f32(n), f32(n), f32(n), i32(n)), n, 1)
+        )
+        out.append(
+            (f"cox_loss_n{n}", model.cox_loss,
+             (f32(n), f32(n), f32(n), i32(n)), n, 1)
+        )
+        out.append(
+            (f"lipschitz_n{n}", model.lipschitz_constants,
+             (f32(n), f32(n), i32(n), f32(n)), n, 1)
+        )
+    for n, p in NP_BUCKETS:
+        out.append(
+            (f"all_derivs_n{n}_p{p}", model.all_coord_d1_d2,
+             (f32(n), f32(n, p), f32(n), i32(n)), n, p)
+        )
+    return out
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args, n, p in entry_points():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        dtypes = ",".join(
+            f"{a.dtype}:{'x'.join(str(d) for d in a.shape)}" for a in args
+        )
+        manifest_lines.append(f"{name}\t{fname}\t{n}\t{p}\t{dtypes}")
+        print(f"lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: blocked risk-set cumulative moments.
+
+The computational heart of FastSurvival (Corollary 3.3): with samples
+sorted by descending observation time, every risk set is a prefix, so the
+weighted power sums
+
+    S_r(i) = sum_{k <= i} w_k * x_k^r,   r = 0..3,  w_k = exp(eta_k - max)
+
+are forward cumulative sums. This kernel streams `(w, x)` through VMEM in
+blocks of ``BLOCK`` elements, computes the four moment streams in one
+pass, and carries the running totals across grid steps in scratch memory
+— the TPU-style prefix-scan schedule (sequential grid, one carry).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against the pure-jnp oracle in ``ref.py`` by pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Block length for the HBM->VMEM pipeline. 4 streams x BLOCK x 4 B =
+# 32 KiB of VMEM at 2048 — far below the ~16 MiB budget, leaving room
+# for double buffering.
+BLOCK = 256
+
+
+def _moments_kernel(w_ref, x_ref, s0_ref, s1_ref, s2_ref, s3_ref, carry):
+    """One grid step: blockwise cumsum of w, wx, wx^2, wx^3 plus carry."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[...] = jnp.zeros_like(carry)
+
+    w = w_ref[...]
+    x = x_ref[...]
+    m0 = w
+    m1 = w * x
+    m2 = m1 * x
+    m3 = m2 * x
+
+    c0 = jnp.cumsum(m0)
+    c1 = jnp.cumsum(m1)
+    c2 = jnp.cumsum(m2)
+    c3 = jnp.cumsum(m3)
+
+    s0_ref[...] = c0 + carry[0]
+    s1_ref[...] = c1 + carry[1]
+    s2_ref[...] = c2 + carry[2]
+    s3_ref[...] = c3 + carry[3]
+
+    carry[0] = carry[0] + c0[-1]
+    carry[1] = carry[1] + c1[-1]
+    carry[2] = carry[2] + c2[-1]
+    carry[3] = carry[3] + c3[-1]
+
+
+def risk_set_moments(w, x, *, block=BLOCK, interpret=True):
+    """Cumulative moment sums (S0, S1, S2, S3) of one feature column.
+
+    Args:
+      w: (n,) nonnegative hazard weights exp(eta - shift), descending-time
+         order. Padding entries must be 0.
+      x: (n,) feature column in the same order.
+      block: VMEM block length; must divide n.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      Tuple of four (n,) arrays: prefix sums of w, w*x, w*x^2, w*x^3.
+    """
+    n = w.shape[0]
+    block = min(block, n)  # small problems: single block
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    out = jax.ShapeDtypeStruct((n,), w.dtype)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec],
+        out_specs=(spec, spec, spec, spec),
+        out_shape=(out, out, out, out),
+        scratch_shapes=[pltpu.VMEM((4,), w.dtype)],
+        interpret=interpret,
+    )(w, x)

@@ -1,0 +1,94 @@
+"""Layer-2 JAX compute graphs for FastSurvival.
+
+Entry points consumed by the Rust coordinator after AOT lowering
+(``aot.py``). Conventions shared with ``rust/src/runtime``:
+
+* Samples arrive sorted by **descending** observation time, so every risk
+  set is a prefix. Padding rows go at the end with ``w = 0, delta = 0``
+  and contribute nothing.
+* ``w`` is the stabilized hazard weight ``exp(eta - shift)`` and ``v`` is
+  ``eta - shift``; ratios and the loss are shift-invariant (see ref.py).
+* ``tie_end[i]`` is the index of the last member of i's tie group —
+  Breslow handling of tied times; for padding rows use index n-1.
+
+The per-coordinate path routes its cumulative sums through the Layer-1
+Pallas kernel (``kernels.cox_cumsum``), so the kernel lowers into the
+same HLO artifact the coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cox_cumsum import risk_set_moments
+
+
+def coord_derivs(w, x, delta, tie_end):
+    """Exact (d1, d2, d3) at one coordinate (Theorem 3.1), O(n).
+
+    Returns a 3-vector [d1, d2, d3]; d1 already includes the constant
+    -(X^T delta)_l term.
+    """
+    s0, s1, s2, s3 = risk_set_moments(w, x)
+    g0 = jnp.take(s0, tie_end)
+    g1 = jnp.take(s1, tie_end)
+    g2 = jnp.take(s2, tie_end)
+    g3 = jnp.take(s3, tie_end)
+    safe = jnp.where(g0 > 0, g0, 1.0)
+    m1 = g1 / safe
+    m2 = g2 / safe
+    m3 = g3 / safe
+    d1 = jnp.sum(delta * m1) - jnp.sum(delta * x)
+    d2 = jnp.sum(delta * (m2 - m1 * m1))
+    d3 = jnp.sum(delta * (m3 + 2.0 * m1**3 - 3.0 * m2 * m1))
+    return jnp.stack([d1, d2, d3])
+
+
+def cox_loss(w, v, delta, tie_end):
+    """Negative log partial likelihood (Eq. 4), shift-free formulation.
+
+    Uses the Pallas kernel's S0 stream (x = 0 keeps the other streams
+    trivially zero but shares the artifact's code path).
+    """
+    s0, _, _, _ = risk_set_moments(w, jnp.zeros_like(w))
+    g0 = jnp.take(s0, tie_end)
+    safe = jnp.where(g0 > 0, g0, 1.0)
+    terms = delta * (jnp.log(safe) - v)
+    return jnp.sum(jnp.where(delta > 0, terms, 0.0))
+
+
+def all_coord_d1_d2(w, x_mat, delta, tie_end):
+    """Batched (d1[p], d2[p]) over all coordinates — beam-search screening.
+
+    ``x_mat`` is (n, p). Cumulative sums run along the sample axis; this
+    is the vectorized Layer-2 formulation (the Pallas kernel covers the
+    single-column hot path; XLA fuses this batched variant itself).
+    """
+    wx = w[:, None] * x_mat
+    wxx = wx * x_mat
+    s0 = jnp.cumsum(w)
+    s1 = jnp.cumsum(wx, axis=0)
+    s2 = jnp.cumsum(wxx, axis=0)
+    g0 = jnp.take(s0, tie_end)
+    safe = jnp.where(g0 > 0, g0, 1.0)[:, None]
+    m1 = jnp.take(s1, tie_end, axis=0) / safe
+    m2 = jnp.take(s2, tie_end, axis=0) / safe
+    d = delta[:, None]
+    d1 = jnp.sum(d * m1, axis=0) - x_mat.T @ delta
+    d2 = jnp.sum(d * (m2 - m1 * m1), axis=0)
+    return d1, d2
+
+
+def lipschitz_constants(x, delta, tie_end, valid):
+    """(L2, L3) for one coordinate (Theorem 3.4).
+
+    Running prefix extrema of the column gathered at tie-group ends;
+    ``valid`` masks padding rows out of the extrema (0/1 floats).
+    """
+    big = jnp.asarray(1e30, x.dtype)
+    hi = jax.lax.cummax(jnp.where(valid > 0, x, -big))
+    lo = jax.lax.cummin(jnp.where(valid > 0, x, big))
+    rng = jnp.take(hi, tie_end) - jnp.take(lo, tie_end)
+    rng = jnp.maximum(rng, 0.0)
+    l2 = 0.25 * jnp.sum(delta * rng * rng)
+    l3 = jnp.sum(delta * rng**3) / (6.0 * jnp.sqrt(3.0))
+    return jnp.stack([l2, l3])

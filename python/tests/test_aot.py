@@ -1,0 +1,62 @@
+"""AOT lowering sanity: every entry point lowers to parseable HLO text
+with the expected parameter signature, and the manifest is well-formed."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_artifacts(tmp_path_factory, monkeypatch_module=None):
+    # Lower a reduced bucket set to keep the test fast.
+    out = tmp_path_factory.mktemp("artifacts")
+    orig_n, orig_np = aot.N_BUCKETS, aot.NP_BUCKETS
+    aot.N_BUCKETS = (256,)
+    aot.NP_BUCKETS = ((256, 16),)
+    try:
+        aot.build(str(out))
+    finally:
+        aot.N_BUCKETS, aot.NP_BUCKETS = orig_n, orig_np
+    return out
+
+
+def test_artifacts_written(small_artifacts):
+    files = sorted(os.listdir(small_artifacts))
+    assert "manifest.tsv" in files
+    hlo = [f for f in files if f.endswith(".hlo.txt")]
+    assert len(hlo) == 4  # coord_derivs, cox_loss, lipschitz, all_derivs
+
+
+def test_hlo_text_parseable_header(small_artifacts):
+    for f in os.listdir(small_artifacts):
+        if not f.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(small_artifacts, f)).read()
+        assert text.startswith("HloModule"), f"{f} missing HloModule header"
+        assert "ENTRY" in text
+        # The 64-bit-id proto problem does not apply to text, but make
+        # sure we did not accidentally serialize a proto.
+        assert "\x00" not in text
+
+
+def test_manifest_schema(small_artifacts):
+    lines = open(os.path.join(small_artifacts, "manifest.tsv")).read().strip().splitlines()
+    assert len(lines) == 4
+    for line in lines:
+        name, fname, n, p, dtypes = line.split("\t")
+        assert os.path.exists(os.path.join(small_artifacts, fname))
+        assert int(n) > 0 and int(p) > 0
+        assert all(":" in d for d in dtypes.split(","))
+
+
+def test_entry_points_cover_buckets():
+    eps = aot.entry_points()
+    names = [e[0] for e in eps]
+    for n in aot.N_BUCKETS:
+        assert f"coord_derivs_n{n}" in names
+        assert f"cox_loss_n{n}" in names
+        assert f"lipschitz_n{n}" in names
+    for n, p in aot.NP_BUCKETS:
+        assert f"all_derivs_n{n}_p{p}" in names

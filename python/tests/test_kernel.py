@@ -1,0 +1,72 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes and value ranges; each case asserts the blocked
+scan matches jnp.cumsum to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cox_cumsum import risk_set_moments
+from compile.kernels.ref import risk_set_moments_ref
+
+
+def _compare(w, x, block):
+    got = risk_set_moments(jnp.asarray(w), jnp.asarray(x), block=block)
+    want = risk_set_moments_ref(jnp.asarray(w), jnp.asarray(x))
+    for g, r, name in zip(got, want, ["s0", "s1", "s2", "s3"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=2e-5, atol=2e-5,
+            err_msg=f"stream {name}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_random(blocks, block, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * block
+    w = rng.exponential(size=n).astype(np.float32)
+    x = rng.normal(size=n).astype(np.float32)
+    _compare(w, x, block)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_with_zero_padding_tail(seed):
+    # Padding convention: trailing w=0 rows leave all streams constant.
+    rng = np.random.default_rng(seed)
+    n, valid = 256, 100
+    w = np.zeros(n, np.float32)
+    w[:valid] = rng.exponential(size=valid)
+    x = rng.normal(size=n).astype(np.float32)
+    s0, s1, s2, s3 = risk_set_moments(jnp.asarray(w), jnp.asarray(x), block=64)
+    for s in (s0, s1, s2, s3):
+        tail = np.asarray(s)[valid:]
+        assert np.allclose(tail, tail[0]), "padding must not move the sums"
+
+
+def test_kernel_single_block():
+    w = np.ones(32, np.float32)
+    x = np.arange(32, dtype=np.float32)
+    _compare(w, x, 32)
+
+
+def test_kernel_rejects_indivisible_n():
+    with pytest.raises(ValueError):
+        risk_set_moments(jnp.ones(100), jnp.ones(100), block=64)
+
+
+def test_kernel_many_blocks_carry_exact():
+    # Constant w=1 makes S0 = arange+1 exactly; checks the carry chain.
+    n, block = 1024, 128
+    w = np.ones(n, np.float32)
+    x = np.ones(n, np.float32)
+    s0, s1, _, _ = risk_set_moments(jnp.asarray(w), jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(s0), np.arange(1, n + 1, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(s1), np.arange(1, n + 1, dtype=np.float32))

@@ -1,0 +1,181 @@
+"""Layer-2 graph correctness: analytic derivatives vs jax.grad, loss vs a
+naive python implementation, batched-vs-single parity, padding
+invariance, and Lipschitz-bound checks (Theorem 3.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import coord_derivs_ref, cox_loss_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_problem(n_valid, n_pad, seed, ties=False):
+    """Sorted (descending time) problem with trailing padding rows."""
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0.5, 9.5, size=n_valid)
+    if ties:
+        t = np.round(t * 2.0) / 2.0
+    order = np.argsort(-t, kind="stable")
+    t = t[order]
+    delta = (rng.uniform(size=n_valid) < 0.7).astype(np.float64)
+    if delta.sum() == 0:
+        delta[0] = 1.0
+    x = rng.normal(size=n_valid)
+    eta = rng.normal(size=n_valid) * 0.5
+
+    n = n_valid + n_pad
+    # tie_end: last index with equal time.
+    tie_end = np.zeros(n, np.int32)
+    i = 0
+    while i < n_valid:
+        j = i
+        while j + 1 < n_valid and t[j + 1] == t[i]:
+            j += 1
+        tie_end[i:j + 1] = j
+        i = j + 1
+    tie_end[n_valid:] = n - 1
+
+    pad = lambda a, fill: np.concatenate([a, np.full(n_pad, fill, a.dtype)])
+    return {
+        "eta": pad(eta, -1e30),
+        "x": pad(x, 0.0),
+        "delta": pad(delta, 0.0),
+        "tie_end": tie_end,
+        "valid": pad(np.ones(n_valid), 0.0),
+        "n_valid": n_valid,
+    }
+
+
+def wv(eta):
+    shift = float(np.max(eta[np.isfinite(eta) & (eta > -1e29)]))
+    w = np.exp(np.clip(eta - shift, -700, 50))
+    v = np.where(eta < -1e29, 0.0, eta - shift)
+    # padding: w exactly 0
+    w = np.where(eta < -1e29, 0.0, w)
+    return jnp.asarray(w), jnp.asarray(v)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_valid=st.integers(min_value=5, max_value=60),
+    n_pad=st.sampled_from([0, 7, 30]),
+    seed=st.integers(min_value=0, max_value=10_000),
+    ties=st.booleans(),
+)
+def test_coord_derivs_match_jax_grad(n_valid, n_pad, seed, ties):
+    pr = make_problem(n_valid, n_pad, seed, ties)
+    x = jnp.asarray(pr["x"])
+    delta = jnp.asarray(pr["delta"])
+    tie_end = jnp.asarray(pr["tie_end"])
+    eta = jnp.asarray(pr["eta"])
+
+    def loss_of_beta(b):
+        e = eta + b * x
+        w = jnp.where(e < -1e29, 0.0, jnp.exp(e - 0.0))
+        v = jnp.where(e < -1e29, 0.0, e)
+        return cox_loss_ref(w, v, delta, tie_end)
+
+    d1_auto = jax.grad(loss_of_beta)(0.0)
+    d2_auto = jax.grad(jax.grad(loss_of_beta))(0.0)
+    d3_auto = jax.grad(jax.grad(jax.grad(loss_of_beta)))(0.0)
+
+    w, _ = wv(pr["eta"])
+    d1, d2, d3 = coord_derivs_ref(w, x, delta, tie_end)
+    np.testing.assert_allclose(float(d1), float(d1_auto), rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(float(d2), float(d2_auto), rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(float(d3), float(d3_auto), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_valid=st.integers(min_value=5, max_value=40),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_padding_invariance(n_valid, seed):
+    a = make_problem(n_valid, 0, seed)
+    b = make_problem(n_valid, 24, seed)
+    wa, va = wv(a["eta"])
+    wb, vb = wv(b["eta"])
+    la = cox_loss_ref(wa, va, jnp.asarray(a["delta"]), jnp.asarray(a["tie_end"]))
+    lb = cox_loss_ref(wb, vb, jnp.asarray(b["delta"]), jnp.asarray(b["tie_end"]))
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-12)
+
+    da = coord_derivs_ref(wa, jnp.asarray(a["x"]), jnp.asarray(a["delta"]), jnp.asarray(a["tie_end"]))
+    db = coord_derivs_ref(wb, jnp.asarray(b["x"]), jnp.asarray(b["delta"]), jnp.asarray(b["tie_end"]))
+    for ga, gb in zip(da, db):
+        np.testing.assert_allclose(float(ga), float(gb), rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_valid=st.integers(min_value=5, max_value=40),
+    p=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_all_derivs_match_single(n_valid, p, seed):
+    pr = make_problem(n_valid, 8, seed)
+    rng = np.random.default_rng(seed + 1)
+    n = len(pr["eta"])
+    x_mat = rng.normal(size=(n, p))
+    x_mat[pr["valid"] == 0.0, :] = 0.0
+    w, _ = wv(pr["eta"])
+    delta = jnp.asarray(pr["delta"])
+    tie_end = jnp.asarray(pr["tie_end"])
+    d1b, d2b = model.all_coord_d1_d2(w, jnp.asarray(x_mat), delta, tie_end)
+    for l in range(p):
+        d1, d2, _ = coord_derivs_ref(w, jnp.asarray(x_mat[:, l]), delta, tie_end)
+        np.testing.assert_allclose(float(d1b[l]), float(d1), rtol=1e-9, atol=1e-10)
+        np.testing.assert_allclose(float(d2b[l]), float(d2), rtol=1e-9, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_valid=st.integers(min_value=5, max_value=40),
+    seed=st.integers(min_value=0, max_value=10_000),
+    scale=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_lipschitz_bounds_hold(n_valid, seed, scale):
+    pr = make_problem(n_valid, 8, seed)
+    x = jnp.asarray(pr["x"])
+    delta = jnp.asarray(pr["delta"])
+    tie_end = jnp.asarray(pr["tie_end"])
+    valid = jnp.asarray(pr["valid"])
+    l2, l3 = model.lipschitz_constants(x, delta, tie_end, valid)
+    # derivatives at a random beta along this coordinate
+    eta = np.where(pr["eta"] < -1e29, -1e30, pr["eta"] + scale * np.asarray(x))
+    w, _ = wv(eta)
+    _, d2, d3 = coord_derivs_ref(w, x, delta, tie_end)
+    assert float(d2) <= float(l2) + 1e-6
+    assert abs(float(d3)) <= float(l3) + 1e-6
+    assert float(d2) >= -1e-9
+
+
+def test_pallas_coord_derivs_matches_ref_f32():
+    # The Layer-2 entry (through the Pallas kernel) against the oracle.
+    pr = make_problem(200, 56, 3)
+    w, _ = wv(pr["eta"])
+    w32 = jnp.asarray(np.asarray(w), jnp.float32)
+    x32 = jnp.asarray(pr["x"], jnp.float32)
+    d32 = jnp.asarray(pr["delta"], jnp.float32)
+    te = jnp.asarray(pr["tie_end"])
+    got = model.coord_derivs(w32, x32, d32, te)
+    want = coord_derivs_ref(w, jnp.asarray(pr["x"]), jnp.asarray(pr["delta"]), te)
+    for g, r in zip(np.asarray(got), want):
+        np.testing.assert_allclose(float(g), float(r), rtol=5e-4, atol=5e-4)
+
+
+def test_cox_loss_entry_matches_ref():
+    pr = make_problem(128, 0, 9)
+    w, v = wv(pr["eta"])
+    w32 = jnp.asarray(np.asarray(w), jnp.float32)
+    v32 = jnp.asarray(np.asarray(v), jnp.float32)
+    d32 = jnp.asarray(pr["delta"], jnp.float32)
+    te = jnp.asarray(pr["tie_end"])
+    got = model.cox_loss(w32, v32, d32, te)
+    want = cox_loss_ref(w, v, jnp.asarray(pr["delta"]), te)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

@@ -1,0 +1,72 @@
+//! L1 hot-path microbenchmarks: the O(n) derivative passes (Corollary
+//! 3.3) that make the surrogate methods cheap — native vs AOT-XLA.
+//!
+//! Run with `cargo bench` (set FASTSURVIVAL_BENCH_QUICK=1 for CI).
+
+use fastsurvival::cox::derivatives::{all_coord_d1_d2, coord_d1, coord_d1_d2, coord_derivs, Workspace};
+use fastsurvival::cox::lipschitz::coord_lipschitz;
+use fastsurvival::cox::{CoxProblem, CoxState};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::linalg::Matrix;
+use fastsurvival::runtime::engine::{CoxEngine, XlaEngine};
+use fastsurvival::util::bench::Bencher;
+use fastsurvival::util::rng::Rng;
+use std::hint::black_box;
+
+fn problem(n: usize, p: usize, seed: u64) -> CoxProblem {
+    let mut rng = Rng::new(seed);
+    let cols: Vec<Vec<f64>> = (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.5, 9.5)).collect();
+    let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+    CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "b"))
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("== L1 hot path: exact O(n) coordinate derivatives ==");
+
+    for &n in &[1024usize, 4096, 16384] {
+        let pr = problem(n, 4, 42);
+        let st = CoxState::from_beta(&pr, &[0.2, -0.1, 0.3, 0.0]);
+        b.bench(&format!("coord_d1            n={n}"), || {
+            black_box(coord_d1(&pr, &st, 0));
+        });
+        b.bench(&format!("coord_d1_d2         n={n}"), || {
+            black_box(coord_d1_d2(&pr, &st, 0));
+        });
+        b.bench(&format!("coord_derivs(d1-d3) n={n}"), || {
+            black_box(coord_derivs(&pr, &st, 0));
+        });
+        b.bench(&format!("lipschitz           n={n}"), || {
+            black_box(coord_lipschitz(&pr, 0));
+        });
+    }
+
+    println!("\n== batched screening pass (beam-search hot path) ==");
+    for &(n, p) in &[(1024usize, 128usize), (4096, 256)] {
+        let pr = problem(n, p, 7);
+        let st = CoxState::zeros(&pr);
+        let mut ws = Workspace::default();
+        b.bench(&format!("all_coord_d1_d2     n={n} p={p}"), || {
+            black_box(all_coord_d1_d2(&pr, &st, &mut ws));
+        });
+    }
+
+    // Native vs AOT-XLA comparison (three-layer composition cost).
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("\n== native vs AOT-XLA engine (n=1024) ==");
+        let xe = XlaEngine::new(std::path::Path::new("artifacts")).expect("xla engine");
+        let pr = problem(1000, 4, 9);
+        let st = CoxState::from_beta(&pr, &[0.1, 0.2, -0.1, 0.0]);
+        b.bench("xla coord_derivs     n=1024(pad)", || {
+            black_box(xe.coord_derivs(&pr, &st, 0).unwrap());
+        });
+        b.bench("xla cox_loss         n=1024(pad)", || {
+            black_box(xe.loss(&pr, &st).unwrap());
+        });
+    } else {
+        println!("(artifacts missing; skipping XLA benches — run `make artifacts`)");
+    }
+
+    b.summary("bench_derivatives");
+}

@@ -1,0 +1,62 @@
+//! Figure-3/4 timing basis: fit + predict cost of every model class
+//! compared in the Dialysis / EmployeeAttrition experiments.
+
+use fastsurvival::baselines::forest::{ForestConfig, RandomSurvivalForest};
+use fastsurvival::baselines::gbst::{GbstConfig, GradientBoostedCox};
+use fastsurvival::baselines::svm::{FastSurvivalSvm, NaiveSurvivalSvm, SvmConfig};
+use fastsurvival::baselines::tree::{SurvivalTree, TreeConfig};
+use fastsurvival::baselines::SurvivalModel;
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::datasets;
+use fastsurvival::optim::{CubicSurrogate, FitConfig, Objective, Optimizer};
+use fastsurvival::util::bench::Bencher;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut spec = datasets::spec("dialysis");
+    spec.n = 800;
+    let ds = datasets::generate_stand_in(&spec, 3);
+    println!("== model-class fit cost (dialysis stand-in, n={} p={}) ==", ds.n(), ds.p());
+
+    let pr = CoxProblem::new(&ds);
+    b.bench("cox cubic-surrogate (ours)      fit", || {
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 0.1 },
+            max_iters: 50,
+            tol: 1e-8,
+            record_trace: false,
+            ..Default::default()
+        };
+        black_box(CubicSurrogate.fit(&pr, &cfg));
+    });
+    b.bench("survival-tree  (depth 4)        fit", || {
+        black_box(SurvivalTree::fit(&ds, &TreeConfig::default()));
+    });
+    b.bench("rsf            (20 trees)       fit", || {
+        black_box(RandomSurvivalForest::fit(
+            &ds,
+            &ForestConfig { n_trees: 20, ..Default::default() },
+        ));
+    });
+    b.bench("gbst           (30 stages)      fit", || {
+        black_box(GradientBoostedCox::fit(
+            &ds,
+            &GbstConfig { n_stages: 30, ..Default::default() },
+        ));
+    });
+    b.bench("fast-svm       (adjacent pairs) fit", || {
+        black_box(FastSurvivalSvm::fit(&ds, &SvmConfig { max_iters: 100, ..Default::default() }));
+    });
+    b.bench("naive-svm      (all pairs)      fit", || {
+        black_box(NaiveSurvivalSvm::fit(&ds, &SvmConfig { max_iters: 20, ..Default::default() }));
+    });
+
+    println!("\n== prediction cost ==");
+    let rf = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 20, ..Default::default() });
+    b.bench("rsf predict_risk (n=800)", || {
+        black_box(rf.predict_risk(&ds.x));
+    });
+
+    b.summary("bench_model_classes (Figures 3/4 timing basis)");
+}

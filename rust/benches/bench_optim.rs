@@ -1,0 +1,57 @@
+//! Figure-1 timing basis: per-iteration cost of each optimizer on a
+//! binarized dataset. The paper's wall-clock claim reduces to the ratio
+//! between one surrogate CD sweep and one (quasi/prox/exact) Newton
+//! iteration; this bench regenerates those per-iteration costs.
+
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::binarize::{binarize, BinarizeConfig};
+use fastsurvival::data::datasets;
+use fastsurvival::optim::{self, FitConfig, Objective, Optimizer};
+use fastsurvival::util::bench::Bencher;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut spec = datasets::spec("flchain");
+    spec.n = 1000;
+    let raw = datasets::generate_stand_in(&spec, 1);
+    let ds = binarize(&raw, &BinarizeConfig { max_quantiles: 15, ..Default::default() });
+    let pr = CoxProblem::new(&ds);
+    println!("== per-iteration optimizer cost (flchain stand-in, n={} p={}) ==", ds.n(), ds.p());
+
+    for (l1, l2, tag) in [(0.0, 1.0, "l2=1"), (1.0, 5.0, "l1=1,l2=5")] {
+        for m in ["quadratic", "cubic", "newton", "quasi-newton", "prox-newton", "gd"] {
+            if m == "newton" && l1 > 0.0 {
+                continue; // exact Newton has no ℓ1 mode (paper)
+            }
+            let opt = optim::by_name(m);
+            let cfg = FitConfig {
+                objective: Objective { l1, l2 },
+                max_iters: 1, // one outer iteration
+                tol: 0.0,
+                record_trace: false,
+                ..Default::default()
+            };
+            b.bench(&format!("{:<18} 1 iter  ({tag})", opt.name()), || {
+                black_box(opt.fit(&pr, &cfg));
+            });
+        }
+    }
+
+    println!("\n== end-to-end to tolerance 1e-8 (the Figure-1 wall-clock race) ==");
+    for m in ["quadratic", "cubic", "quasi-newton", "prox-newton"] {
+        let opt = optim::by_name(m);
+        let cfg = FitConfig {
+            objective: Objective { l1: 1.0, l2: 5.0 },
+            max_iters: 500,
+            tol: 1e-8,
+            record_trace: false,
+            ..Default::default()
+        };
+        b.bench(&format!("{:<18} to 1e-8 (l1=1,l2=5)", opt.name()), || {
+            black_box(opt.fit(&pr, &cfg));
+        });
+    }
+
+    b.summary("bench_optim (Figure 1 / Figs 5-20 timing basis)");
+}

@@ -1,0 +1,52 @@
+//! Figure-2 timing basis: variable-selection cost. Benchmarks the beam
+//! search's two inner operations (batched screening, exact candidate
+//! evaluation) and whole-path runs for each selector.
+
+use fastsurvival::cox::{CoxProblem, CoxState};
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::select::beam::screen_gains;
+use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
+use fastsurvival::util::bench::Bencher;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ds = generate(&SyntheticConfig { n: 400, p: 400, rho: 0.9, k: 10, s: 0.1, seed: 0 });
+    let pr = CoxProblem::new(&ds);
+    println!("== selection primitives (synthetic rho=0.9, n=p=400) ==");
+
+    let st = CoxState::zeros(&pr);
+    b.bench("screen_gains (all p surrogate gains)", || {
+        black_box(screen_gains(&pr, &st));
+    });
+
+    println!("\n== full selection paths to k=5 ==");
+    let selectors: Vec<(&str, Box<dyn VariableSelector>)> = vec![
+        (
+            "beam(width=5,screen=10)",
+            Box::new(BeamSearch { width: 5, screen: 10, ..Default::default() }),
+        ),
+        ("abess", Box::new(Abess::default())),
+        ("coxnet-path", Box::new(CoxnetPath { n_lambdas: 20, ..Default::default() })),
+        (
+            "adaptive-lasso(3 alphas)",
+            Box::new(AdaptiveLasso { alphas: vec![0.1, 1.0, 10.0], ..Default::default() }),
+        ),
+    ];
+    let ks: Vec<usize> = (1..=5).collect();
+    for (name, sel) in &selectors {
+        b.bench(&format!("{name:<28} ks=1..5"), || {
+            black_box(sel.select(&pr, &ks));
+        });
+    }
+
+    println!("\n== ablation: beam swap-polish (DESIGN.md design choice) ==");
+    for (name, rounds) in [("polish off", 0usize), ("polish 2 rounds", 2)] {
+        let bs = BeamSearch { width: 5, screen: 10, polish_rounds: rounds, ..Default::default() };
+        b.bench(&format!("beam k=5 {name}"), || {
+            black_box(bs.select(&pr, &ks));
+        });
+    }
+
+    b.summary("bench_select (Figure 2 timing basis)");
+}

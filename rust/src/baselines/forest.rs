@@ -1,0 +1,156 @@
+//! Random survival forest \[37\] (the paper's SksurvRSF baseline).
+//!
+//! Bagged log-rank survival trees with per-split feature subsampling;
+//! the ensemble cumulative hazard is the average of the trees' Nelson–
+//! Aalen leaf estimates.
+
+use super::tree::{SurvivalTree, TreeConfig};
+use super::SurvivalModel;
+use crate::data::SurvivalDataset;
+use crate::linalg::Matrix;
+use crate::util::parallel::par_map_indices;
+use crate::util::rng::Rng;
+
+/// RSF configuration (paper grid: depth 2..9 × estimators {10,50,100,...}).
+#[derive(Clone, Copy, Debug)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig { n_trees: 50, max_depth: 4, min_leaf: 10, seed: 2024 }
+    }
+}
+
+pub struct RandomSurvivalForest {
+    trees: Vec<SurvivalTree>,
+    /// Fixed horizon grid for the ensemble risk score (sum of cumhaz).
+    risk_grid: Vec<f64>,
+}
+
+impl RandomSurvivalForest {
+    pub fn fit(ds: &SurvivalDataset, cfg: &ForestConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mtry = ((ds.p() as f64).sqrt().ceil() as usize).max(1);
+        // Pre-draw bootstrap seeds so tree fits can run in parallel.
+        let seeds: Vec<u64> = (0..cfg.n_trees).map(|_| rng.next_u64()).collect();
+        let trees = par_map_indices(cfg.n_trees, |t| {
+            let mut trng = Rng::new(seeds[t]);
+            let rows = trng.sample_with_replacement(ds.n(), ds.n());
+            let boot = ds.subset(&rows);
+            SurvivalTree::fit(
+                &boot,
+                &TreeConfig {
+                    max_depth: cfg.max_depth,
+                    min_leaf: cfg.min_leaf,
+                    mtry,
+                    seed: seeds[t] ^ 0xF0F0,
+                },
+            )
+        });
+        // Risk grid: deciles of observed event times.
+        let mut ev: Vec<f64> = ds
+            .time
+            .iter()
+            .zip(&ds.event)
+            .filter(|(_, &e)| e)
+            .map(|(&t, _)| t)
+            .collect();
+        if ev.is_empty() {
+            ev = ds.time.clone();
+        }
+        ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let risk_grid: Vec<f64> =
+            (1..10).map(|d| ev[(d * (ev.len() - 1)) / 10]).collect();
+        RandomSurvivalForest { trees, risk_grid }
+    }
+
+    /// Ensemble cumulative hazard at (row, t).
+    pub fn cumhaz(&self, x: &Matrix, row: usize, t: f64) -> f64 {
+        self.trees.iter().map(|tr| tr.cumhaz(x, row, t)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl SurvivalModel for RandomSurvivalForest {
+    fn name(&self) -> &'static str {
+        "random-survival-forest"
+    }
+
+    fn predict_risk(&self, x: &Matrix) -> Vec<f64> {
+        // Ishwaran's ensemble mortality: sum of CHF over the time grid.
+        (0..x.rows)
+            .map(|r| self.risk_grid.iter().map(|&t| self.cumhaz(x, r, t)).sum())
+            .collect()
+    }
+
+    fn predict_survival(&self, x: &Matrix, row: usize, t: f64) -> f64 {
+        (-self.cumhaz(x, row, t)).exp()
+    }
+
+    fn complexity(&self) -> usize {
+        self.trees.iter().map(|t| t.node_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::concordance_index;
+
+    fn signal_ds(n: usize, seed: u64) -> SurvivalDataset {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> = (0..5).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n)
+            .map(|i| rng.exponential() / (1.5 * cols[0][i]).exp())
+            .collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.8)).collect();
+        SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "sig")
+    }
+
+    #[test]
+    fn forest_beats_chance() {
+        let ds = signal_ds(300, 1);
+        let rf = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 20, ..Default::default() });
+        let risk = rf.predict_risk(&ds.x);
+        let c = concordance_index(&ds.time, &ds.event, &risk);
+        assert!(c > 0.65, "c={c}");
+    }
+
+    #[test]
+    fn survival_in_unit_interval_and_monotone() {
+        let ds = signal_ds(150, 2);
+        let rf = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 10, ..Default::default() });
+        let mut prev = 1.0;
+        for t in [0.0, 0.1, 0.5, 1.0, 2.0] {
+            let s = rf.predict_survival(&ds.x, 0, t);
+            assert!((0.0..=1.0).contains(&s));
+            assert!(s <= prev + 1e-12);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn complexity_scales_with_trees() {
+        let ds = signal_ds(120, 3);
+        let small = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 5, ..Default::default() });
+        let big = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 20, ..Default::default() });
+        assert!(big.complexity() > small.complexity());
+        assert_eq!(small.n_trees(), 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = signal_ds(100, 4);
+        let a = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 8, seed: 7, ..Default::default() });
+        let b = RandomSurvivalForest::fit(&ds, &ForestConfig { n_trees: 8, seed: 7, ..Default::default() });
+        assert_eq!(a.predict_risk(&ds.x), b.predict_risk(&ds.x));
+    }
+}

@@ -1,0 +1,67 @@
+//! Non-Cox model classes for the Figure-4 comparison: survival trees
+//! (log-rank splitting \[43\]), random survival forests \[37\], gradient-
+//! boosted Cox trees, and linear survival SVMs [65, 57].
+
+pub mod forest;
+pub mod gbst;
+pub mod svm;
+pub mod tree;
+
+use crate::data::SurvivalDataset;
+use crate::linalg::Matrix;
+
+/// Interface shared by every model class in the Figure-4 experiments.
+pub trait SurvivalModel {
+    fn name(&self) -> &'static str;
+
+    /// Risk score per row of `x` (higher = expected to fail earlier).
+    fn predict_risk(&self, x: &Matrix) -> Vec<f64>;
+
+    /// Predicted survival probability S(t | x_row).
+    fn predict_survival(&self, x: &Matrix, row: usize, t: f64) -> f64;
+
+    /// "Support size" proxy as recorded in Appendix C.3: number of tree
+    /// nodes for tree-based models, nonzero coefficients for linear ones.
+    fn complexity(&self) -> usize;
+}
+
+/// Train/test container for model-class experiments.
+pub struct ModelEval {
+    pub name: String,
+    pub complexity: usize,
+    pub train_cindex: f64,
+    pub test_cindex: f64,
+    pub train_ibs: f64,
+    pub test_ibs: f64,
+}
+
+/// Evaluate a fitted model on train/test splits (CIndex + IBS).
+pub fn evaluate_model(
+    model: &dyn SurvivalModel,
+    train: &SurvivalDataset,
+    test: &SurvivalDataset,
+) -> ModelEval {
+    use crate::metrics::brier::{default_grid, integrated_brier_score};
+    use crate::metrics::{concordance_index, KaplanMeier};
+
+    let censor_km = KaplanMeier::fit_censoring(&train.time, &train.event);
+    let grid = default_grid(&train.time, &train.event, 30);
+
+    let eval_split = |ds: &SurvivalDataset| -> (f64, f64) {
+        let risk = model.predict_risk(&ds.x);
+        let ci = concordance_index(&ds.time, &ds.event, &risk);
+        let surv = |i: usize, t: f64| model.predict_survival(&ds.x, i, t);
+        let ibs = integrated_brier_score(&ds.time, &ds.event, &surv, &censor_km, &grid);
+        (ci, ibs)
+    };
+    let (train_cindex, train_ibs) = eval_split(train);
+    let (test_cindex, test_ibs) = eval_split(test);
+    ModelEval {
+        name: model.name().to_string(),
+        complexity: model.complexity(),
+        train_cindex,
+        test_cindex,
+        train_ibs,
+        test_ibs,
+    }
+}

@@ -1,0 +1,421 @@
+//! Survival trees.
+//!
+//! [`SurvivalTree`]: recursive partitioning with the log-rank splitting
+//! rule \[43\] and Nelson–Aalen leaf estimates (the sksurv `SurvivalTree`
+//! analogue). [`RegressionTree`]: a variance-reduction CART used as the
+//! base learner for gradient boosting.
+
+use super::SurvivalModel;
+use crate::data::SurvivalDataset;
+use crate::linalg::Matrix;
+use crate::metrics::km::NelsonAalen;
+use crate::util::rng::Rng;
+
+/// Split candidates per feature (quantile-limited for speed).
+const MAX_SPLIT_CANDIDATES: usize = 16;
+
+/// Two-sample log-rank statistic (squared, i.e. the chi-square form).
+/// Larger = better separation of the two survival curves.
+pub fn log_rank_statistic(
+    time: &[f64],
+    event: &[bool],
+    in_left: &[bool],
+) -> f64 {
+    // Sort event times ascending; walk risk sets for both groups.
+    let n = time.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| time[a].partial_cmp(&time[b]).unwrap());
+
+    let mut n_left = in_left.iter().filter(|&&l| l).count() as f64;
+    let mut n_total = n as f64;
+    let (mut o_minus_e, mut var) = (0.0_f64, 0.0_f64);
+
+    let mut i = 0;
+    while i < n {
+        let t = time[idx[i]];
+        let (mut d_total, mut d_left, mut leave_left, mut leave_total) = (0.0, 0.0, 0.0, 0.0);
+        while i < n && time[idx[i]] == t {
+            let k = idx[i];
+            if event[k] {
+                d_total += 1.0;
+                if in_left[k] {
+                    d_left += 1.0;
+                }
+            }
+            leave_total += 1.0;
+            if in_left[k] {
+                leave_left += 1.0;
+            }
+            i += 1;
+        }
+        if d_total > 0.0 && n_total > 1.0 {
+            let e_left = d_total * n_left / n_total;
+            o_minus_e += d_left - e_left;
+            var += d_total * (n_left / n_total) * (1.0 - n_left / n_total)
+                * (n_total - d_total)
+                / (n_total - 1.0);
+        }
+        n_left -= leave_left;
+        n_total -= leave_total;
+    }
+    if var <= 0.0 {
+        0.0
+    } else {
+        o_minus_e * o_minus_e / var
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        /// Nelson–Aalen cumulative hazard of the leaf's samples.
+        na: NelsonAalen,
+        /// Risk score: total cumulative hazard (ranks leaves).
+        risk: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+impl Node {
+    fn count(&self) -> usize {
+        match self {
+            Node::Leaf { .. } => 1,
+            Node::Split { left, right, .. } => 1 + left.count() + right.count(),
+        }
+    }
+
+    fn leaf_for<'a>(&'a self, x: &Matrix, row: usize) -> (&'a NelsonAalen, f64) {
+        match self {
+            Node::Leaf { na, risk } => (na, *risk),
+            Node::Split { feature, threshold, left, right } => {
+                if x.get(row, *feature) <= *threshold {
+                    left.leaf_for(x, row)
+                } else {
+                    right.leaf_for(x, row)
+                }
+            }
+        }
+    }
+}
+
+/// Log-rank survival tree.
+#[derive(Clone, Debug)]
+pub struct SurvivalTree {
+    root: Node,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+}
+
+/// Tree-growing options (shared with the forest).
+#[derive(Clone, Copy, Debug)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// Features tried per split (0 = all; forests pass √p).
+    pub mtry: usize,
+    /// Seed for feature subsampling.
+    pub seed: u64,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { max_depth: 4, min_leaf: 10, mtry: 0, seed: 0 }
+    }
+}
+
+fn grow(
+    ds: &SurvivalDataset,
+    rows: &[usize],
+    depth: usize,
+    cfg: &TreeConfig,
+    rng: &mut Rng,
+) -> Node {
+    let make_leaf = |rows: &[usize]| -> Node {
+        let time: Vec<f64> = rows.iter().map(|&r| ds.time[r]).collect();
+        let event: Vec<bool> = rows.iter().map(|&r| ds.event[r]).collect();
+        let na = NelsonAalen::fit(&time, &event);
+        let risk = na.cumhaz.last().copied().unwrap_or(0.0);
+        Node::Leaf { na, risk }
+    };
+
+    if depth >= cfg.max_depth || rows.len() < 2 * cfg.min_leaf {
+        return make_leaf(rows);
+    }
+
+    // Candidate features.
+    let p = ds.p();
+    let feats: Vec<usize> = if cfg.mtry == 0 || cfg.mtry >= p {
+        (0..p).collect()
+    } else {
+        rng.sample_indices(p, cfg.mtry)
+    };
+
+    let time: Vec<f64> = rows.iter().map(|&r| ds.time[r]).collect();
+    let event: Vec<bool> = rows.iter().map(|&r| ds.event[r]).collect();
+
+    let mut best: Option<(f64, usize, f64)> = None; // (stat, feature, threshold)
+    for &f in &feats {
+        let mut vals: Vec<f64> = rows.iter().map(|&r| ds.x.get(r, f)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        let step = (vals.len() - 1).div_ceil(MAX_SPLIT_CANDIDATES).max(1);
+        for w in (0..vals.len() - 1).step_by(step) {
+            let thr = 0.5 * (vals[w] + vals[w + 1]);
+            let in_left: Vec<bool> = rows.iter().map(|&r| ds.x.get(r, f) <= thr).collect();
+            let n_left = in_left.iter().filter(|&&l| l).count();
+            if n_left < cfg.min_leaf || rows.len() - n_left < cfg.min_leaf {
+                continue;
+            }
+            let stat = log_rank_statistic(&time, &event, &in_left);
+            if best.map(|(s, _, _)| stat > s).unwrap_or(stat > 0.0) {
+                best = Some((stat, f, thr));
+            }
+        }
+    }
+
+    match best {
+        None => make_leaf(rows),
+        Some((_, f, thr)) => {
+            let (lrows, rrows): (Vec<usize>, Vec<usize>) =
+                rows.iter().partition(|&&r| ds.x.get(r, f) <= thr);
+            Node::Split {
+                feature: f,
+                threshold: thr,
+                left: Box::new(grow(ds, &lrows, depth + 1, cfg, rng)),
+                right: Box::new(grow(ds, &rrows, depth + 1, cfg, rng)),
+            }
+        }
+    }
+}
+
+impl SurvivalTree {
+    pub fn fit(ds: &SurvivalDataset, cfg: &TreeConfig) -> Self {
+        let rows: Vec<usize> = (0..ds.n()).collect();
+        let mut rng = Rng::new(cfg.seed);
+        SurvivalTree {
+            root: grow(ds, &rows, 0, cfg, &mut rng),
+            max_depth: cfg.max_depth,
+            min_leaf: cfg.min_leaf,
+        }
+    }
+
+    /// Cumulative hazard for a row of x at time t (used by forests).
+    pub fn cumhaz(&self, x: &Matrix, row: usize, t: f64) -> f64 {
+        let (na, _) = self.root.leaf_for(x, row);
+        na.at(t)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.root.count()
+    }
+}
+
+impl SurvivalModel for SurvivalTree {
+    fn name(&self) -> &'static str {
+        "survival-tree"
+    }
+
+    fn predict_risk(&self, x: &Matrix) -> Vec<f64> {
+        (0..x.rows).map(|r| self.root.leaf_for(x, r).1).collect()
+    }
+
+    fn predict_survival(&self, x: &Matrix, row: usize, t: f64) -> f64 {
+        (-self.cumhaz(x, row, t)).exp()
+    }
+
+    fn complexity(&self) -> usize {
+        self.node_count()
+    }
+}
+
+/// CART regression tree (variance reduction), base learner for boosting.
+#[derive(Clone, Debug)]
+pub struct RegressionTree {
+    root: RegNode,
+}
+
+#[derive(Clone, Debug)]
+enum RegNode {
+    Leaf(f64),
+    Split { feature: usize, threshold: f64, left: Box<RegNode>, right: Box<RegNode> },
+}
+
+impl RegNode {
+    fn count(&self) -> usize {
+        match self {
+            RegNode::Leaf(_) => 1,
+            RegNode::Split { left, right, .. } => 1 + left.count() + right.count(),
+        }
+    }
+}
+
+fn grow_reg(
+    x: &Matrix,
+    y: &[f64],
+    rows: &[usize],
+    depth: usize,
+    cfg: &TreeConfig,
+    rng: &mut Rng,
+) -> RegNode {
+    let mean =
+        rows.iter().map(|&r| y[r]).sum::<f64>() / rows.len().max(1) as f64;
+    if depth >= cfg.max_depth || rows.len() < 2 * cfg.min_leaf {
+        return RegNode::Leaf(mean);
+    }
+    let p = x.cols;
+    let feats: Vec<usize> = if cfg.mtry == 0 || cfg.mtry >= p {
+        (0..p).collect()
+    } else {
+        rng.sample_indices(p, cfg.mtry)
+    };
+
+    let total_sum: f64 = rows.iter().map(|&r| y[r]).sum();
+    let mut best: Option<(f64, usize, f64)> = None;
+    for &f in &feats {
+        // Sort rows by feature value; scan prefix sums for best SSE split.
+        let mut order: Vec<usize> = rows.to_vec();
+        order.sort_by(|&a, &b| x.get(a, f).partial_cmp(&x.get(b, f)).unwrap());
+        let mut left_sum = 0.0;
+        for (i, &r) in order.iter().enumerate() {
+            left_sum += y[r];
+            if i + 1 < cfg.min_leaf || order.len() - (i + 1) < cfg.min_leaf {
+                continue;
+            }
+            let xv = x.get(r, f);
+            let xnext = x.get(order[i + 1], f);
+            if xv == xnext {
+                continue;
+            }
+            let nl = (i + 1) as f64;
+            let nr = (order.len() - i - 1) as f64;
+            let right_sum = total_sum - left_sum;
+            // Variance reduction ∝ nl·nr·(mean_l − mean_r)² / (nl+nr).
+            let diff = left_sum / nl - right_sum / nr;
+            let gain = nl * nr / (nl + nr) * diff * diff;
+            if best.map(|(g, _, _)| gain > g).unwrap_or(gain > 1e-12) {
+                best = Some((gain, f, 0.5 * (xv + xnext)));
+            }
+        }
+    }
+    match best {
+        None => RegNode::Leaf(mean),
+        Some((_, f, thr)) => {
+            let (l, r): (Vec<usize>, Vec<usize>) =
+                rows.iter().partition(|&&row| x.get(row, f) <= thr);
+            RegNode::Split {
+                feature: f,
+                threshold: thr,
+                left: Box::new(grow_reg(x, y, &l, depth + 1, cfg, rng)),
+                right: Box::new(grow_reg(x, y, &r, depth + 1, cfg, rng)),
+            }
+        }
+    }
+}
+
+impl RegressionTree {
+    pub fn fit(x: &Matrix, y: &[f64], cfg: &TreeConfig) -> Self {
+        let rows: Vec<usize> = (0..x.rows).collect();
+        let mut rng = Rng::new(cfg.seed);
+        RegressionTree { root: grow_reg(x, y, &rows, 0, cfg, &mut rng) }
+    }
+
+    pub fn predict_row(&self, x: &Matrix, row: usize) -> f64 {
+        let mut node = &self.root;
+        loop {
+            match node {
+                RegNode::Leaf(v) => return *v,
+                RegNode::Split { feature, threshold, left, right } => {
+                    node = if x.get(row, *feature) <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.root.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_group_ds(n: usize, seed: u64) -> SurvivalDataset {
+        // Feature 0 separates fast vs slow failures; feature 1 is noise.
+        let mut rng = Rng::new(seed);
+        let mut cols = vec![Vec::new(), Vec::new()];
+        let mut time = Vec::new();
+        let mut event = Vec::new();
+        for i in 0..n {
+            let fast = i % 2 == 0;
+            cols[0].push(if fast { 1.0 } else { 0.0 });
+            cols[1].push(rng.normal());
+            let base = if fast { 0.5 } else { 3.0 };
+            time.push(base + 0.2 * rng.uniform());
+            event.push(rng.bernoulli(0.9));
+        }
+        SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "two")
+    }
+
+    #[test]
+    fn log_rank_detects_separation() {
+        let ds = two_group_ds(80, 1);
+        let in_left: Vec<bool> = (0..80).map(|i| ds.x.get(i, 0) > 0.5).collect();
+        let strong = log_rank_statistic(&ds.time, &ds.event, &in_left);
+        let random: Vec<bool> = (0..80).map(|i| i % 3 == 0).collect();
+        let weak = log_rank_statistic(&ds.time, &ds.event, &random);
+        assert!(strong > 10.0 * weak.max(1e-9), "strong={strong} weak={weak}");
+    }
+
+    #[test]
+    fn tree_splits_on_signal_feature() {
+        let ds = two_group_ds(100, 2);
+        let tree = SurvivalTree::fit(&ds, &TreeConfig { max_depth: 1, ..Default::default() });
+        match &tree.root {
+            Node::Split { feature, .. } => assert_eq!(*feature, 0),
+            Node::Leaf { .. } => panic!("expected a split"),
+        }
+        // Fast group gets the higher risk.
+        let risk = tree.predict_risk(&ds.x);
+        let fast_risk = risk[0];
+        let slow_risk = risk[1];
+        assert!(fast_risk > slow_risk, "{fast_risk} vs {slow_risk}");
+    }
+
+    #[test]
+    fn survival_monotone_in_time() {
+        let ds = two_group_ds(100, 3);
+        let tree = SurvivalTree::fit(&ds, &TreeConfig::default());
+        let mut prev = 1.0;
+        for t in [0.0, 0.5, 1.0, 2.0, 3.0, 4.0] {
+            let s = tree.predict_survival(&ds.x, 0, t);
+            assert!(s <= prev + 1e-12 && (0.0..=1.0).contains(&s));
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let ds = two_group_ds(30, 4);
+        let tree =
+            SurvivalTree::fit(&ds, &TreeConfig { max_depth: 10, min_leaf: 20, ..Default::default() });
+        assert_eq!(tree.node_count(), 1, "cannot split 30 rows with min_leaf 20");
+    }
+
+    #[test]
+    fn regression_tree_fits_step_function() {
+        let x = Matrix::from_columns(&[(0..50).map(|i| i as f64).collect()]);
+        let y: Vec<f64> = (0..50).map(|i| if i < 25 { 1.0 } else { 5.0 }).collect();
+        let t = RegressionTree::fit(&x, &y, &TreeConfig { max_depth: 2, min_leaf: 5, ..Default::default() });
+        assert!((t.predict_row(&x, 3) - 1.0).abs() < 0.2);
+        assert!((t.predict_row(&x, 45) - 5.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,196 @@
+//! 5-fold cross-validation driver (Appendix C.3).
+//!
+//! Runs a variable selector (or a non-Cox model class) on each train
+//! fold, evaluates CPH loss / CIndex / IBS (and F1 when the ground truth
+//! is known) on both train and test folds, and aggregates mean ± std per
+//! support size — the data behind Figures 2–4 and 21–35.
+
+use crate::baselines::SurvivalModel;
+use crate::cox::{loss::loss_for_eta, CoxProblem};
+use crate::data::SurvivalDataset;
+use crate::metrics::brier::{default_grid, integrated_brier_score};
+use crate::metrics::{concordance_index, support_f1, BreslowBaseline, KaplanMeier};
+use crate::select::VariableSelector;
+use crate::util::parallel::par_map;
+use crate::util::rng::Rng;
+
+/// One (method, support size, fold) evaluation record.
+#[derive(Clone, Debug)]
+pub struct CvRow {
+    pub method: String,
+    pub k: usize,
+    pub fold: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub train_cindex: f64,
+    pub test_cindex: f64,
+    pub train_ibs: f64,
+    pub test_ibs: f64,
+    /// Support-recovery F1 (synthetic data only).
+    pub f1: Option<f64>,
+}
+
+/// Evaluate a fitted linear (Cox) solution on a split.
+fn eval_linear(
+    beta: &[f64],
+    train: &SurvivalDataset,
+    test: &SurvivalDataset,
+) -> (f64, f64, f64, f64, f64, f64) {
+    let eta_train = train.x.matvec(beta);
+    let eta_test = test.x.matvec(beta);
+
+    let pr_train = CoxProblem::new(train);
+    let pr_test = CoxProblem::new(test);
+    let eta_tr_sorted: Vec<f64> = pr_train.order.iter().map(|&i| eta_train[i]).collect();
+    let eta_te_sorted: Vec<f64> = pr_test.order.iter().map(|&i| eta_test[i]).collect();
+    let train_loss = loss_for_eta(&pr_train, &eta_tr_sorted);
+    let test_loss = loss_for_eta(&pr_test, &eta_te_sorted);
+
+    let train_ci = concordance_index(&train.time, &train.event, &eta_train);
+    let test_ci = concordance_index(&test.time, &test.event, &eta_test);
+
+    let baseline = BreslowBaseline::fit(&train.time, &train.event, &eta_train);
+    let censor_km = KaplanMeier::fit_censoring(&train.time, &train.event);
+    let grid = default_grid(&train.time, &train.event, 30);
+    let surv_tr = |i: usize, t: f64| baseline.survival(t, eta_train[i]);
+    let surv_te = |i: usize, t: f64| baseline.survival(t, eta_test[i]);
+    let train_ibs =
+        integrated_brier_score(&train.time, &train.event, &surv_tr, &censor_km, &grid);
+    let test_ibs =
+        integrated_brier_score(&test.time, &test.event, &surv_te, &censor_km, &grid);
+    (train_loss, test_loss, train_ci, test_ci, train_ibs, test_ibs)
+}
+
+/// 5-fold CV of a variable selector at the given support sizes.
+pub fn cv_selector(
+    ds: &SurvivalDataset,
+    selector: &dyn VariableSelector,
+    ks: &[usize],
+    folds: usize,
+    seed: u64,
+) -> Vec<CvRow> {
+    let mut rng = Rng::new(seed);
+    let splits = ds.kfold_indices(folds, &mut rng);
+    let fold_inputs: Vec<(usize, Vec<usize>, Vec<usize>)> = splits
+        .into_iter()
+        .enumerate()
+        .map(|(f, (tr, te))| (f, tr, te))
+        .collect();
+
+    let per_fold: Vec<Vec<CvRow>> = par_map(&fold_inputs, |(fold, tr_idx, te_idx)| {
+        let train = ds.subset(tr_idx);
+        let test = ds.subset(te_idx);
+        let pr = CoxProblem::new(&train);
+        let sols = selector.select(&pr, ks);
+        sols.iter()
+            .map(|sol| {
+                let (train_loss, test_loss, train_ci, test_ci, train_ibs, test_ibs) =
+                    eval_linear(&sol.beta, &train, &test);
+                let f1 = ds
+                    .true_beta
+                    .as_ref()
+                    .map(|tb| support_f1(tb, &sol.beta, 1e-10).f1);
+                CvRow {
+                    method: selector.name().to_string(),
+                    k: sol.k,
+                    fold: *fold,
+                    train_loss,
+                    test_loss,
+                    train_cindex: train_ci,
+                    test_cindex: test_ci,
+                    train_ibs,
+                    test_ibs,
+                    f1,
+                }
+            })
+            .collect()
+    });
+    per_fold.into_iter().flatten().collect()
+}
+
+/// 5-fold CV of a non-Cox model class (Figure 4 / 22 / 24).
+pub fn cv_model<F>(
+    ds: &SurvivalDataset,
+    name: &str,
+    fit: F,
+    folds: usize,
+    seed: u64,
+) -> Vec<CvRow>
+where
+    F: Fn(&SurvivalDataset) -> Box<dyn SurvivalModel> + Sync,
+{
+    let mut rng = Rng::new(seed);
+    let splits = ds.kfold_indices(folds, &mut rng);
+    let fold_inputs: Vec<(usize, Vec<usize>, Vec<usize>)> = splits
+        .into_iter()
+        .enumerate()
+        .map(|(f, (tr, te))| (f, tr, te))
+        .collect();
+    let rows: Vec<CvRow> = par_map(&fold_inputs, |(fold, tr_idx, te_idx)| {
+        let train = ds.subset(tr_idx);
+        let test = ds.subset(te_idx);
+        let model = fit(&train);
+        let ev = crate::baselines::evaluate_model(model.as_ref(), &train, &test);
+        CvRow {
+            method: name.to_string(),
+            k: ev.complexity,
+            fold: *fold,
+            train_loss: f64::NAN,
+            test_loss: f64::NAN,
+            train_cindex: ev.train_cindex,
+            test_cindex: ev.test_cindex,
+            train_ibs: ev.train_ibs,
+            test_ibs: ev.test_ibs,
+            f1: None,
+        }
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::select::BeamSearch;
+
+    #[test]
+    fn cv_produces_rows_per_fold_and_k() {
+        let ds = generate(&SyntheticConfig { n: 150, p: 10, rho: 0.3, k: 2, s: 0.1, seed: 31 });
+        let bs = BeamSearch { width: 2, screen: 5, ..Default::default() };
+        let rows = cv_selector(&ds, &bs, &[1, 2], 3, 0);
+        assert_eq!(rows.len(), 3 * 2);
+        for r in &rows {
+            assert!(r.test_cindex > 0.0 && r.test_cindex < 1.0 + 1e-12);
+            assert!(r.train_ibs >= 0.0);
+            assert!(r.f1.is_some(), "synthetic data has ground truth");
+        }
+    }
+
+    #[test]
+    fn informative_model_beats_chance_out_of_fold() {
+        let ds = generate(&SyntheticConfig { n: 300, p: 8, rho: 0.2, k: 2, s: 0.1, seed: 32 });
+        let bs = BeamSearch { width: 3, screen: 6, ..Default::default() };
+        let rows = cv_selector(&ds, &bs, &[2], 3, 1);
+        let mean_ci: f64 =
+            rows.iter().map(|r| r.test_cindex).sum::<f64>() / rows.len() as f64;
+        assert!(mean_ci > 0.6, "mean test cindex {mean_ci}");
+    }
+
+    #[test]
+    fn cv_model_runs_tree() {
+        use crate::baselines::tree::{SurvivalTree, TreeConfig};
+        let ds = generate(&SyntheticConfig { n: 200, p: 6, rho: 0.2, k: 2, s: 0.1, seed: 33 });
+        let rows = cv_model(
+            &ds,
+            "survival-tree",
+            |train| {
+                Box::new(SurvivalTree::fit(train, &TreeConfig::default()))
+                    as Box<dyn SurvivalModel>
+            },
+            3,
+            2,
+        );
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.k >= 1));
+    }
+}

@@ -1,0 +1,10 @@
+//! The Layer-3 coordinator: fit driver (engine-generic coordinate
+//! descent), k-fold cross-validation, and the experiment harness that
+//! regenerates every table and figure of the paper.
+
+pub mod cv;
+pub mod driver;
+pub mod experiments;
+
+pub use cv::{cv_selector, CvRow};
+pub use driver::{fit_with_engine, EngineFitConfig};

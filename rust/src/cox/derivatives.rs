@@ -1,0 +1,465 @@
+//! Exact O(n) partial derivatives (Theorem 3.1 / Corollary 3.3) plus the
+//! η-space quantities the Newton baselines need.
+//!
+//! Key observation: with samples sorted by descending time, every risk
+//! set is a prefix, so the weighted power sums
+//! `S_r(i) = Σ_{k∈R_i} w_k x_{kl}^r` for r = 0..3 are running prefix sums.
+//! All events within a tie group share one risk set, so each group
+//! contributes its moment expression once, scaled by its event count.
+
+use super::problem::CoxProblem;
+use super::state::CoxState;
+use crate::linalg::Matrix;
+
+/// First/second/third partial derivatives at one coordinate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordDerivs {
+    pub d1: f64,
+    pub d2: f64,
+    pub d3: f64,
+}
+
+/// Reusable buffers for batched (all-coordinate) passes.
+#[derive(Default, Debug)]
+pub struct Workspace {
+    /// Per-group event count ÷ S0 prefix (risk-set weights), reused by
+    /// the batched first/second-derivative pass.
+    group_weight: Vec<f64>,
+    /// Per-group prefix S0.
+    group_s0: Vec<f64>,
+}
+
+/// d1 only (Eq. 7). One fused pass; the cheapest quantity the quadratic
+/// surrogate needs per coordinate update.
+pub fn coord_d1(problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
+    let col = problem.x.col(l);
+    let w = &state.w;
+    let (mut s0, mut s1) = (0.0_f64, 0.0_f64);
+    let mut d1 = 0.0_f64;
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            let wk = w[k];
+            s0 += wk;
+            s1 += wk * col[k];
+        }
+        if g.n_events > 0 {
+            d1 += g.n_events as f64 * (s1 / s0);
+        }
+    }
+    d1 - problem.xt_delta[l]
+}
+
+/// d1 and d2 (Eqs. 7–8). Used by the cubic surrogate and by screening.
+pub fn coord_d1_d2(problem: &CoxProblem, state: &CoxState, l: usize) -> (f64, f64) {
+    let col = problem.x.col(l);
+    let w = &state.w;
+    let (mut s0, mut s1, mut s2) = (0.0_f64, 0.0_f64, 0.0_f64);
+    let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            let wk = w[k];
+            let x = col[k];
+            s0 += wk;
+            s1 += wk * x;
+            s2 += wk * x * x;
+        }
+        if g.n_events > 0 {
+            let ne = g.n_events as f64;
+            let m1 = s1 / s0;
+            let m2 = s2 / s0;
+            d1 += ne * m1;
+            d2 += ne * (m2 - m1 * m1);
+        }
+    }
+    (d1 - problem.xt_delta[l], d2)
+}
+
+/// Full first/second/third derivatives (Eqs. 7–9) in one O(n) pass.
+pub fn coord_derivs(problem: &CoxProblem, state: &CoxState, l: usize) -> CoordDerivs {
+    let col = problem.x.col(l);
+    let w = &state.w;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
+    let mut out = CoordDerivs::default();
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            let wk = w[k];
+            let x = col[k];
+            let wx = wk * x;
+            s0 += wk;
+            s1 += wx;
+            s2 += wx * x;
+            s3 += wx * x * x;
+        }
+        if g.n_events > 0 {
+            let ne = g.n_events as f64;
+            let m1 = s1 / s0;
+            let m2 = s2 / s0;
+            let m3 = s3 / s0;
+            out.d1 += ne * m1;
+            // Second central moment (variance form of Eq. 8).
+            out.d2 += ne * (m2 - m1 * m1);
+            // Third central moment (skewness form of Eq. 9).
+            out.d3 += ne * (m3 + 2.0 * m1 * m1 * m1 - 3.0 * m2 * m1);
+        }
+    }
+    out.d1 -= problem.xt_delta[l];
+    out
+}
+
+/// Batched (d1\[p\], d2\[p\]) over all coordinates — the beam-search screening
+/// hot path. Shares the per-group S0 prefix across all columns, so the
+/// total cost is O(np) with a single pass per column over contiguous
+/// column-major storage.
+pub fn all_coord_d1_d2(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+) -> (Vec<f64>, Vec<f64>) {
+    let ngroups = problem.groups.len();
+    ws.group_s0.clear();
+    ws.group_s0.reserve(ngroups);
+    ws.group_weight.clear();
+    ws.group_weight.reserve(ngroups);
+    let mut s0 = 0.0_f64;
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            s0 += state.w[k];
+        }
+        ws.group_s0.push(s0);
+        ws.group_weight.push(g.n_events as f64 / s0);
+    }
+
+    let p = problem.p();
+    let mut d1 = vec![0.0; p];
+    let mut d2 = vec![0.0; p];
+    for l in 0..p {
+        let col = problem.x.col(l);
+        let (mut s1, mut s2) = (0.0_f64, 0.0_f64);
+        let (mut a1, mut a2) = (0.0_f64, 0.0_f64);
+        for (gi, g) in problem.groups.iter().enumerate() {
+            for k in g.start..g.end {
+                let wx = state.w[k] * col[k];
+                s1 += wx;
+                s2 += wx * col[k];
+            }
+            if g.n_events > 0 {
+                let ne = g.n_events as f64;
+                let inv_s0 = 1.0 / ws.group_s0[gi];
+                let m1 = s1 * inv_s0;
+                let m2 = s2 * inv_s0;
+                a1 += ne * m1;
+                a2 += ne * (m2 - m1 * m1);
+            }
+        }
+        d1[l] = a1 - problem.xt_delta[l];
+        d2[l] = a2;
+    }
+    (d1, d2)
+}
+
+/// Gradient of ℓ w.r.t. η (sample space), O(n). For sample k:
+/// `u_k = w_k · Σ_{groups g ⪰ g(k)} (n_events(g) / S0(g)) − δ_k`,
+/// the suffix sum running over groups whose risk set contains k.
+pub fn eta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
+    let n = problem.n();
+    let ngroups = problem.groups.len();
+    // Prefix S0 per group.
+    let mut s0 = vec![0.0_f64; ngroups];
+    let mut acc = 0.0;
+    for (gi, g) in problem.groups.iter().enumerate() {
+        for k in g.start..g.end {
+            acc += state.w[k];
+        }
+        s0[gi] = acc;
+    }
+    // Suffix sums A(g) = Σ_{g' >= g} ne / S0.
+    let mut a = vec![0.0_f64; ngroups];
+    let mut suffix = 0.0;
+    for gi in (0..ngroups).rev() {
+        suffix += problem.groups[gi].n_events as f64 / s0[gi];
+        a[gi] = suffix;
+    }
+    let mut u = vec![0.0; n];
+    for k in 0..n {
+        u[k] = state.w[k] * a[problem.group_of[k]] - problem.delta[k];
+    }
+    u
+}
+
+/// Diagonal of the η-space Hessian, O(n):
+/// `h_k = w_k·A(g(k)) − w_k²·B(g(k))` with `B(g) = Σ_{g'⪰g} ne/S0²`.
+pub fn eta_hessian_diag(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
+    let n = problem.n();
+    let ngroups = problem.groups.len();
+    let mut s0 = vec![0.0_f64; ngroups];
+    let mut acc = 0.0;
+    for (gi, g) in problem.groups.iter().enumerate() {
+        for k in g.start..g.end {
+            acc += state.w[k];
+        }
+        s0[gi] = acc;
+    }
+    let (mut a, mut b) = (vec![0.0_f64; ngroups], vec![0.0_f64; ngroups]);
+    let (mut sa, mut sb) = (0.0, 0.0);
+    for gi in (0..ngroups).rev() {
+        let ne = problem.groups[gi].n_events as f64;
+        sa += ne / s0[gi];
+        sb += ne / (s0[gi] * s0[gi]);
+        a[gi] = sa;
+        b[gi] = sb;
+    }
+    let mut h = vec![0.0; n];
+    for k in 0..n {
+        let g = problem.group_of[k];
+        h[k] = state.w[k] * a[g] - state.w[k] * state.w[k] * b[g];
+    }
+    h
+}
+
+/// Full gradient ∇_β ℓ = X^T ∇_η ℓ, O(np).
+pub fn beta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
+    let u = eta_gradient(problem, state);
+    problem.x.tr_matvec(&u)
+}
+
+/// Full β-space Hessian for exact Newton, O(n·p²):
+/// `H = Σ_i δ_i [ M(R_i)/S0_i − v(R_i) v(R_i)^T / S0_i² ]`
+/// where `M(R) = Σ_{k∈R} w_k x_k x_k^T` and `v(R) = Σ_{k∈R} w_k x_k` are
+/// prefix accumulations.
+pub fn beta_hessian(problem: &CoxProblem, state: &CoxState) -> Matrix {
+    let p = problem.p();
+    let mut h = Matrix::zeros(p, p);
+    let mut m = Matrix::zeros(p, p);
+    let mut v = vec![0.0_f64; p];
+    let mut s0 = 0.0_f64;
+    let mut xk = vec![0.0_f64; p];
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            let wk = state.w[k];
+            s0 += wk;
+            for (j, x) in xk.iter_mut().enumerate() {
+                *x = problem.x.get(k, j);
+            }
+            for j in 0..p {
+                let wx = wk * xk[j];
+                v[j] += wx;
+                // Upper triangle only; mirror at the end.
+                for j2 in j..p {
+                    let val = m.get(j, j2) + wx * xk[j2];
+                    m.set(j, j2, val);
+                }
+            }
+        }
+        if g.n_events > 0 {
+            let ne = g.n_events as f64;
+            let inv = 1.0 / s0;
+            let inv2 = inv * inv;
+            for j in 0..p {
+                for j2 in j..p {
+                    let val = h.get(j, j2) + ne * (m.get(j, j2) * inv - v[j] * v[j2] * inv2);
+                    h.set(j, j2, val);
+                }
+            }
+        }
+    }
+    // Mirror to lower triangle.
+    for j in 0..p {
+        for j2 in (j + 1)..p {
+            let v_ = h.get(j, j2);
+            h.set(j2, j, v_);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cox::loss::loss_for_eta;
+    use crate::cox::moments::{naive_coord_derivs, naive_eta_gradient};
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64, ties: bool) -> CoxProblem {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n)
+            .map(|_| {
+                let t = rng.uniform_range(0.5, 9.5);
+                if ties {
+                    (t * 2.0).round() / 2.0
+                } else {
+                    t
+                }
+            })
+            .collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.6)).collect();
+        CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r"))
+    }
+
+    #[test]
+    fn matches_naive_o_n2() {
+        for &ties in &[false, true] {
+            for seed in 0..3 {
+                let pr = random_problem(35, 4, seed, ties);
+                let mut rng = Rng::new(50 + seed);
+                let beta: Vec<f64> = (0..4).map(|_| rng.normal() * 0.4).collect();
+                let st = CoxState::from_beta(&pr, &beta);
+                for l in 0..4 {
+                    let fast = coord_derivs(&pr, &st, l);
+                    let naive = naive_coord_derivs(&pr, &st.eta, l);
+                    assert!((fast.d1 - naive.d1).abs() < 1e-8, "d1 {} {}", fast.d1, naive.d1);
+                    assert!((fast.d2 - naive.d2).abs() < 1e-8, "d2 {} {}", fast.d2, naive.d2);
+                    assert!((fast.d3 - naive.d3).abs() < 1e-7, "d3 {} {}", fast.d3, naive.d3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d1_matches_finite_difference_of_loss() {
+        let pr = random_problem(40, 3, 7, false);
+        let beta = vec![0.2, -0.1, 0.3];
+        let st = CoxState::from_beta(&pr, &beta);
+        let h = 1e-5;
+        for l in 0..3 {
+            let d = coord_derivs(&pr, &st, l);
+            let mut bp = beta.clone();
+            bp[l] += h;
+            let mut bm = beta.clone();
+            bm[l] -= h;
+            let lp = loss_for_eta(&pr, &pr.x.matvec(&bp));
+            let lm = loss_for_eta(&pr, &pr.x.matvec(&bm));
+            let fd1 = (lp - lm) / (2.0 * h);
+            let l0 = loss_for_eta(&pr, &pr.x.matvec(&beta));
+            let fd2 = (lp - 2.0 * l0 + lm) / (h * h);
+            assert!((d.d1 - fd1).abs() < 1e-5, "fd d1: {} vs {}", d.d1, fd1);
+            assert!((d.d2 - fd2).abs() < 1e-3, "fd d2: {} vs {}", d.d2, fd2);
+        }
+    }
+
+    #[test]
+    fn d3_matches_finite_difference_of_d2() {
+        let pr = random_problem(30, 2, 17, false);
+        let beta = vec![0.1, -0.2];
+        let h = 1e-5;
+        for l in 0..2 {
+            let d0 = coord_derivs(&pr, &CoxState::from_beta(&pr, &beta), l);
+            let mut bp = beta.clone();
+            bp[l] += h;
+            let dp = coord_derivs(&pr, &CoxState::from_beta(&pr, &bp), l);
+            let fd3 = (dp.d2 - d0.d2) / h;
+            assert!((d0.d3 - fd3).abs() < 1e-3, "fd d3: {} vs {}", d0.d3, fd3);
+        }
+    }
+
+    #[test]
+    fn d2_nonnegative_always() {
+        // Variance interpretation ⇒ d2 ≥ 0 (Theorem 3.4 lower bound).
+        for seed in 0..6 {
+            let pr = random_problem(25, 3, seed, seed % 2 == 0);
+            let mut rng = Rng::new(seed + 200);
+            let beta: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            for l in 0..3 {
+                let d = coord_derivs(&pr, &st, l);
+                assert!(d.d2 >= -1e-10, "d2={}", d.d2);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_single() {
+        let pr = random_problem(30, 5, 23, true);
+        let st = CoxState::from_beta(&pr, &[0.1, 0.2, -0.3, 0.0, 0.5]);
+        let mut ws = Workspace::default();
+        let (d1s, d2s) = all_coord_d1_d2(&pr, &st, &mut ws);
+        for l in 0..5 {
+            let (d1, d2) = coord_d1_d2(&pr, &st, l);
+            assert!((d1s[l] - d1).abs() < 1e-10);
+            assert!((d2s[l] - d2).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn eta_gradient_matches_naive_and_chain_rule() {
+        let pr = random_problem(25, 3, 31, true);
+        let st = CoxState::from_beta(&pr, &[0.4, -0.2, 0.1]);
+        let u = eta_gradient(&pr, &st);
+        let naive = naive_eta_gradient(&pr, &st.eta);
+        for k in 0..pr.n() {
+            assert!((u[k] - naive[k]).abs() < 1e-9, "k={k}: {} vs {}", u[k], naive[k]);
+        }
+        // β gradient via X^T u must equal per-coordinate d1.
+        let g = beta_gradient(&pr, &st);
+        for l in 0..3 {
+            let d1 = coord_d1(&pr, &st, l);
+            assert!((g[l] - d1).abs() < 1e-8, "{} vs {}", g[l], d1);
+        }
+    }
+
+    #[test]
+    fn hessian_diag_matches_coord_d2_for_unit_columns() {
+        // For the η-space Hessian, e_k^T ∇²η ℓ e_k equals the coordinate
+        // second derivative when X = I.
+        let n = 12;
+        let mut rng = Rng::new(37);
+        let cols: Vec<Vec<f64>> = (0..n)
+            .map(|j| (0..n).map(|i| if i == j { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(1.0, 9.0)).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        let ds = SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "i");
+        let pr = CoxProblem::new(&ds);
+        let beta: Vec<f64> = (0..n).map(|_| rng.normal() * 0.3).collect();
+        let st = CoxState::from_beta(&pr, &beta);
+        let diag = eta_hessian_diag(&pr, &st);
+        for l in 0..n {
+            // Column l indicates *original* sample l; that sample sits at
+            // sorted position `pos`, where the η-space diagonal lives.
+            let pos = pr.order.iter().position(|&o| o == l).unwrap();
+            let (_, d2) = coord_d1_d2(&pr, &st, l);
+            assert!((diag[pos] - d2).abs() < 1e-9, "l={l}: {} vs {}", diag[pos], d2);
+        }
+    }
+
+    #[test]
+    fn beta_hessian_diagonal_matches_coord_d2() {
+        let pr = random_problem(30, 4, 41, false);
+        let st = CoxState::from_beta(&pr, &[0.1, -0.4, 0.2, 0.0]);
+        let h = beta_hessian(&pr, &st);
+        for l in 0..4 {
+            let (_, d2) = coord_d1_d2(&pr, &st, l);
+            assert!((h.get(l, l) - d2).abs() < 1e-8, "{} vs {}", h.get(l, l), d2);
+        }
+        // Symmetry.
+        for a in 0..4 {
+            for b in 0..4 {
+                assert!((h.get(a, b) - h.get(b, a)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_hessian_matches_finite_difference_gradient() {
+        let pr = random_problem(20, 3, 43, false);
+        let beta = vec![0.2, 0.1, -0.3];
+        let st = CoxState::from_beta(&pr, &beta);
+        let h = beta_hessian(&pr, &st);
+        let eps = 1e-5;
+        for j in 0..3 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let gp = beta_gradient(&pr, &CoxState::from_beta(&pr, &bp));
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let gm = beta_gradient(&pr, &CoxState::from_beta(&pr, &bm));
+            for i in 0..3 {
+                let fd = (gp[i] - gm[i]) / (2.0 * eps);
+                assert!((h.get(i, j) - fd).abs() < 1e-4, "H[{i}{j}] {} vs {}", h.get(i, j), fd);
+            }
+        }
+    }
+}

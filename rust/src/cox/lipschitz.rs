@@ -1,0 +1,161 @@
+//! Explicit Lipschitz constants (Theorem 3.4).
+//!
+//! `L2_l = ¼ Σ_i δ_i (max_{k∈R_i} X_kl − min_{k∈R_i} X_kl)²`  (Popoviciu)
+//! `L3_l = 1/(6√3) Σ_i δ_i |max_{k∈R_i} X_kl − min_{k∈R_i} X_kl|³` (Sharma
+//! et al. third-central-moment bound).
+//!
+//! Both depend only on the data (not β), so they are computed once per
+//! fit. With descending-time order the risk sets are prefixes, so the
+//! max/min over R_i are running prefix extrema — O(n) per coordinate.
+
+use super::problem::CoxProblem;
+
+/// Per-coordinate surrogate constants.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LipschitzPair {
+    /// Bound on d²ℓ/dβ_l² ⇒ Lipschitz constant of d1 (Eq. 13).
+    pub l2: f64,
+    /// Bound on |d³ℓ/dβ_l³| ⇒ Lipschitz constant of d2 (Eq. 14).
+    pub l3: f64,
+}
+
+const INV_6_SQRT3: f64 = 0.09622504486493764; // 1 / (6 √3)
+
+/// Lipschitz constants for one coordinate, O(n).
+pub fn coord_lipschitz(problem: &CoxProblem, l: usize) -> LipschitzPair {
+    let col = problem.x.col(l);
+    let mut hi = f64::NEG_INFINITY;
+    let mut lo = f64::INFINITY;
+    let mut out = LipschitzPair::default();
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            let x = col[k];
+            if x > hi {
+                hi = x;
+            }
+            if x < lo {
+                lo = x;
+            }
+        }
+        if g.n_events > 0 {
+            let range = hi - lo;
+            let ne = g.n_events as f64;
+            out.l2 += ne * 0.25 * range * range;
+            out.l3 += ne * INV_6_SQRT3 * range * range * range;
+        }
+    }
+    out
+}
+
+/// All coordinates, O(np).
+pub fn all_lipschitz(problem: &CoxProblem) -> Vec<LipschitzPair> {
+    (0..problem.p()).map(|l| coord_lipschitz(problem, l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cox::derivatives::coord_derivs;
+    use crate::cox::state::CoxState;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64) -> CoxProblem {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.5, 9.5)).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.6)).collect();
+        CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r"))
+    }
+
+    /// Property: for any β, 0 ≤ d2 ≤ L2 and |d3| ≤ L3 (Theorem 3.4).
+    #[test]
+    fn bounds_hold_for_random_beta() {
+        check(
+            "lipschitz-bounds",
+            7,
+            40,
+            |r| {
+                let seed = r.next_u64();
+                let beta = gen::uniform_vec(r, 3, -3.0, 3.0);
+                (seed, beta)
+            },
+            |(seed, beta)| {
+                let pr = random_problem(20, 3, *seed);
+                let st = CoxState::from_beta(&pr, beta);
+                for l in 0..3 {
+                    let d = coord_derivs(&pr, &st, l);
+                    let lc = coord_lipschitz(&pr, l);
+                    if d.d2 < -1e-9 || d.d2 > lc.l2 + 1e-9 {
+                        return Err(format!("d2={} outside [0, {}]", d.d2, lc.l2));
+                    }
+                    if d.d3.abs() > lc.l3 + 1e-9 {
+                        return Err(format!("|d3|={} > L3={}", d.d3.abs(), lc.l3));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn constant_column_has_zero_constants() {
+        let x = Matrix::from_columns(&[vec![2.5; 6], vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0]]);
+        let ds = SurvivalDataset::new(
+            x,
+            vec![6.0, 5.0, 4.0, 3.0, 2.0, 1.0],
+            vec![true; 6],
+            "c",
+        );
+        let pr = CoxProblem::new(&ds);
+        let lc = coord_lipschitz(&pr, 0);
+        assert_eq!(lc.l2, 0.0);
+        assert_eq!(lc.l3, 0.0);
+        assert!(coord_lipschitz(&pr, 1).l2 > 0.0);
+    }
+
+    #[test]
+    fn binary_column_closed_form() {
+        // Binary column: range in risk set i is 1 once both levels are in
+        // the prefix, so L2 = ¼ · (#events with mixed prefix).
+        let x = Matrix::from_columns(&[vec![1.0, 0.0, 1.0, 0.0]]);
+        let ds = SurvivalDataset::new(x, vec![4.0, 3.0, 2.0, 1.0], vec![true; 4], "b");
+        let pr = CoxProblem::new(&ds);
+        let lc = coord_lipschitz(&pr, 0);
+        // Events at prefix sizes 1..4; mixed from the 2nd on → 3 events.
+        assert!((lc.l2 - 3.0 * 0.25).abs() < 1e-12);
+        assert!((lc.l3 - 3.0 * INV_6_SQRT3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn popoviciu_tightness_example() {
+        // Appendix A.3's tight example: P[a]=P[b]=¼, P[mid]=½ attains the
+        // third-central-moment bound |b−a|³/(6√3). Check our constant.
+        let a = -1.0_f64;
+        let b = 1.0_f64;
+        let probs = [0.25, 0.5, 0.25];
+        let xs = [a, (a + b) / 2.0, b];
+        let m3 = crate::cox::moments::central_moment(&probs, &xs, 3);
+        // This symmetric example has zero skew; the extremal distribution
+        // from the proof is asymmetric: P[a]=2/3 at variance (b−a)²/6.
+        assert!(m3.abs() < 1e-12);
+        // Extremal: variance V=(b−a)²/6 with two-point mass p at a:
+        // p(1−p)(b−a)² = V ⇒ p = (3±√3)/6; skew = (b−a)³ p(1−p)(1−2p).
+        let range = b - a;
+        let p = (3.0 - 3.0_f64.sqrt()) / 6.0;
+        let skew = range.powi(3) * p * (1.0 - p) * (1.0 - 2.0 * p);
+        assert!((skew - INV_6_SQRT3 * range.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_lipschitz_matches_each() {
+        let pr = random_problem(25, 4, 3);
+        let all = all_lipschitz(&pr);
+        for l in 0..4 {
+            assert_eq!(all[l], coord_lipschitz(&pr, l));
+        }
+    }
+}

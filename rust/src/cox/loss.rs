@@ -1,0 +1,142 @@
+//! Negative log partial likelihood (Eq. 4), Breslow convention for ties.
+
+use super::problem::CoxProblem;
+use super::state::CoxState;
+
+/// ℓ(β) = Σ_{i: δ_i=1} [ log Σ_{j∈R_i} e^{η_j} − η_i ].
+///
+/// One pass over tie groups: the risk set of every sample in a group is
+/// the prefix ending at the group, so events in a group share one
+/// log-denominator. O(n).
+pub fn loss(problem: &CoxProblem, state: &CoxState) -> f64 {
+    loss_for(problem, &state.eta, &state.w, state.shift)
+}
+
+/// Loss from explicit (η, w = exp(η − shift), shift) arrays — used by
+/// line searches evaluating trial points without committing state.
+pub fn loss_for(problem: &CoxProblem, eta: &[f64], w: &[f64], shift: f64) -> f64 {
+    let mut s0 = 0.0_f64;
+    let mut total = 0.0_f64;
+    for g in &problem.groups {
+        for k in g.start..g.end {
+            s0 += w[k];
+        }
+        if g.n_events == 0 {
+            continue;
+        }
+        let log_denom = s0.ln() + shift;
+        total += g.n_events as f64 * log_denom;
+        for i in g.start..g.end {
+            if problem.delta[i] == 1.0 {
+                total -= eta[i];
+            }
+        }
+    }
+    total
+}
+
+/// Loss at a trial η (recomputes the stabilization internally).
+pub fn loss_for_eta(problem: &CoxProblem, eta: &[f64]) -> f64 {
+    let m = eta.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let m = if m.is_finite() { m } else { 0.0 };
+    let w: Vec<f64> = eta.iter().map(|&e| (e - m).exp()).collect();
+    loss_for(problem, eta, &w, m)
+}
+
+/// Loss plus separable penalties: λ1‖β‖₁ + λ2‖β‖₂².
+pub fn penalized_loss(problem: &CoxProblem, state: &CoxState, l1: f64, l2: f64) -> f64 {
+    let base = loss(problem, state);
+    let pen1: f64 = state.beta.iter().map(|b| b.abs()).sum::<f64>() * l1;
+    let pen2: f64 = state.beta.iter().map(|b| b * b).sum::<f64>() * l2;
+    base + pen1 + pen2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cox::moments::naive_loss;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64, ties: bool) -> (SurvivalDataset, CoxProblem) {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> = (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n)
+            .map(|_| {
+                let t = rng.uniform_range(0.5, 9.5);
+                if ties {
+                    t.round()
+                } else {
+                    t
+                }
+            })
+            .collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        let ds = SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r");
+        let pr = CoxProblem::new(&ds);
+        (ds, pr)
+    }
+
+    #[test]
+    fn matches_naive_no_ties() {
+        for seed in 0..4 {
+            let (_, pr) = random_problem(40, 3, seed, false);
+            let mut rng = Rng::new(100 + seed);
+            let beta: Vec<f64> = (0..3).map(|_| rng.normal() * 0.5).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            let fast = loss(&pr, &st);
+            let naive = naive_loss(&pr, &st.eta);
+            assert!((fast - naive).abs() < 1e-9, "{fast} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_with_ties() {
+        for seed in 0..4 {
+            let (_, pr) = random_problem(50, 2, seed, true);
+            let st = CoxState::from_beta(&pr, &[0.3, -0.7]);
+            let fast = loss(&pr, &st);
+            let naive = naive_loss(&pr, &st.eta);
+            assert!((fast - naive).abs() < 1e-9, "{fast} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn zero_beta_closed_form_no_ties() {
+        // At β=0, each event i (risk set size m_i) contributes log(m_i).
+        let (_, pr) = random_problem(30, 2, 9, false);
+        let st = CoxState::zeros(&pr);
+        let expect: f64 = (0..pr.n())
+            .filter(|&i| pr.delta[i] == 1.0)
+            .map(|i| (pr.risk_end(i) as f64).ln())
+            .sum();
+        assert!((loss(&pr, &st) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stable_under_huge_eta() {
+        let (_, pr) = random_problem(30, 2, 11, false);
+        let st = CoxState::from_beta(&pr, &[200.0, -150.0]);
+        let l = loss(&pr, &st);
+        assert!(l.is_finite(), "loss={l}");
+    }
+
+    #[test]
+    fn penalized_adds_terms() {
+        let (_, pr) = random_problem(20, 2, 13, false);
+        let st = CoxState::from_beta(&pr, &[1.0, -2.0]);
+        let base = loss(&pr, &st);
+        let pl = penalized_loss(&pr, &st, 0.5, 0.25);
+        assert!((pl - (base + 0.5 * 3.0 + 0.25 * 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_censored_loss_is_zero() {
+        let x = Matrix::from_columns(&[vec![1.0, 2.0]]);
+        let ds = SurvivalDataset::new(x, vec![2.0, 1.0], vec![false, false], "c");
+        let pr = CoxProblem::new(&ds);
+        let st = CoxState::from_beta(&pr, &[0.4]);
+        assert_eq!(loss(&pr, &st), 0.0);
+    }
+}

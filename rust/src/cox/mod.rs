@@ -1,0 +1,23 @@
+//! The Cox proportional hazards core: loss, exact O(n) per-coordinate
+//! derivatives (Theorem 3.1 / Corollary 3.3), explicit Lipschitz constants
+//! (Theorem 3.4), and central-moment utilities (Lemma 3.2).
+//!
+//! Everything operates on a [`CoxProblem`] — the dataset re-sorted by
+//! descending observation time so that every risk set
+//! `R_i = {j : t_j >= t_i}` is a *prefix* of the sorted order (Breslow
+//! convention for ties: all samples tied at `t_i` are in `R_i`). That
+//! prefix structure is exactly what makes the paper's reverse-cumulative-
+//! sum trick work.
+
+pub mod derivatives;
+pub mod lipschitz;
+pub mod loss;
+pub mod moments;
+pub mod problem;
+pub mod state;
+pub mod stratified;
+pub mod time_varying;
+
+pub use derivatives::{CoordDerivs, Workspace};
+pub use problem::CoxProblem;
+pub use state::CoxState;

@@ -1,0 +1,165 @@
+//! Preprocessed Cox problem: samples sorted by descending time with tie
+//! groups, so risk sets are prefixes.
+
+use crate::data::SurvivalDataset;
+use crate::linalg::Matrix;
+
+/// A tie group: positions `[start, end)` in sorted order share one time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TieGroup {
+    pub start: usize,
+    pub end: usize,
+    /// Number of events (δ=1) in this group.
+    pub n_events: usize,
+}
+
+/// Dataset re-sorted by descending time; the immutable half of a fit.
+#[derive(Clone, Debug)]
+pub struct CoxProblem {
+    /// Features in sorted order, column-major (n×p).
+    pub x: Matrix,
+    /// Observation times, descending.
+    pub time: Vec<f64>,
+    /// Event indicators in sorted order (1.0 / 0.0 for arithmetic use).
+    pub delta: Vec<f64>,
+    /// Tie groups in sorted order. Risk set of any sample in group g is
+    /// the prefix `0..groups[g].end`.
+    pub groups: Vec<TieGroup>,
+    /// For each sorted position, its group index.
+    pub group_of: Vec<usize>,
+    /// Precomputed constant term of the gradient: `(X^T δ)_l` (Eq. 7's
+    /// second sum) — independent of β.
+    pub xt_delta: Vec<f64>,
+    /// Map sorted position -> original dataset index.
+    pub order: Vec<usize>,
+    /// Total number of events.
+    pub n_events: usize,
+    /// Per-column flag: values all in {0, 1}. The Sec-4.2 binarized
+    /// datasets are entirely binary, enabling a shared exp(Δ) factor on
+    /// the coordinate-update hot path (see `CoxState::update_coord`).
+    pub col_binary: Vec<bool>,
+}
+
+impl CoxProblem {
+    /// Build from a dataset (copies + sorts; O(n log n + np)).
+    pub fn new(ds: &SurvivalDataset) -> Self {
+        let n = ds.n();
+        assert!(n > 0, "empty dataset");
+        let mut order: Vec<usize> = (0..n).collect();
+        // Descending time; stable on ties by original index for determinism.
+        order.sort_by(|&a, &b| {
+            ds.time[b]
+                .partial_cmp(&ds.time[a])
+                .expect("NaN time")
+                .then(a.cmp(&b))
+        });
+
+        let x = ds.x.select_rows(&order);
+        let time: Vec<f64> = order.iter().map(|&i| ds.time[i]).collect();
+        let delta: Vec<f64> = order.iter().map(|&i| if ds.event[i] { 1.0 } else { 0.0 }).collect();
+
+        // Tie groups over equal times.
+        let mut groups = Vec::new();
+        let mut group_of = vec![0usize; n];
+        let mut start = 0;
+        while start < n {
+            let mut end = start + 1;
+            while end < n && time[end] == time[start] {
+                end += 1;
+            }
+            let n_events = delta[start..end].iter().map(|&d| d as usize).sum();
+            let g = groups.len();
+            for item in group_of.iter_mut().take(end).skip(start) {
+                *item = g;
+            }
+            groups.push(TieGroup { start, end, n_events });
+            start = end;
+        }
+
+        let xt_delta = x.tr_matvec(&delta);
+        let n_events = delta.iter().map(|&d| d as usize).sum();
+        let col_binary = (0..x.cols)
+            .map(|c| x.col(c).iter().all(|&v| v == 0.0 || v == 1.0))
+            .collect();
+
+        CoxProblem { x, time, delta, groups, group_of, xt_delta, order, n_events, col_binary }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Risk-set end (exclusive) for sorted position i: all of R_i is the
+    /// prefix `0..risk_end(i)`.
+    #[inline]
+    pub fn risk_end(&self, i: usize) -> usize {
+        self.groups[self.group_of[i]].end
+    }
+
+    /// Map a β in problem (feature) space back to the original dataset's
+    /// feature order — identical here (columns are not permuted), provided
+    /// for symmetry with `order` on samples.
+    pub fn beta_to_original(&self, beta: &[f64]) -> Vec<f64> {
+        beta.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+
+    fn ds_with_ties() -> SurvivalDataset {
+        let x = Matrix::from_columns(&[vec![1.0, 2.0, 3.0, 4.0, 5.0]]);
+        SurvivalDataset::new(
+            x,
+            vec![2.0, 5.0, 2.0, 7.0, 1.0],
+            vec![true, true, false, true, true],
+            "ties",
+        )
+    }
+
+    #[test]
+    fn sorted_descending_with_groups() {
+        let p = CoxProblem::new(&ds_with_ties());
+        assert_eq!(p.time, vec![7.0, 5.0, 2.0, 2.0, 1.0]);
+        assert_eq!(p.groups.len(), 4);
+        assert_eq!(p.groups[2], TieGroup { start: 2, end: 4, n_events: 1 });
+        // Risk set of either tied sample covers both.
+        assert_eq!(p.risk_end(2), 4);
+        assert_eq!(p.risk_end(3), 4);
+        assert_eq!(p.risk_end(0), 1);
+    }
+
+    #[test]
+    fn order_maps_back() {
+        let ds = ds_with_ties();
+        let p = CoxProblem::new(&ds);
+        for (pos, &orig) in p.order.iter().enumerate() {
+            assert_eq!(p.time[pos], ds.time[orig]);
+            assert_eq!(p.x.get(pos, 0), ds.x.get(orig, 0));
+        }
+    }
+
+    #[test]
+    fn xt_delta_matches_manual() {
+        let ds = ds_with_ties();
+        let p = CoxProblem::new(&ds);
+        // events at original idx 0,1,3,4 → x values 1,2,4,5 → sum 12
+        assert_eq!(p.xt_delta, vec![12.0]);
+        assert_eq!(p.n_events, 4);
+    }
+
+    #[test]
+    fn stable_tie_order() {
+        let ds = ds_with_ties();
+        let p = CoxProblem::new(&ds);
+        // Tied at t=2.0: original indices 0 then 2.
+        assert_eq!(&p.order[2..4], &[0, 2]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Mutable optimizer state: β, η = Xβ, and stabilized exp(η).
+//!
+//! The coordinate-descent hot path updates one β_l, then needs fresh
+//! exp(η) for the next derivative pass. We store `w_k = exp(η_k − shift)`
+//! with a running max-shift so no overflow occurs even when baseline
+//! Newton methods push η to ±hundreds (the paper's blow-up experiments).
+
+use super::problem::CoxProblem;
+
+/// How many incremental coordinate updates before a full recompute of w
+/// from η (bounds multiplicative drift).
+const REFRESH_EVERY: usize = 512;
+
+#[derive(Clone, Debug)]
+pub struct CoxState {
+    pub beta: Vec<f64>,
+    /// Linear predictor per sorted sample.
+    pub eta: Vec<f64>,
+    /// Stabilized hazard weights w = exp(η − shift).
+    pub w: Vec<f64>,
+    /// Current stabilization shift (max η at last refresh).
+    pub shift: f64,
+    updates_since_refresh: usize,
+}
+
+impl CoxState {
+    /// State at β = 0 (the paper's initialization for every method).
+    pub fn zeros(problem: &CoxProblem) -> Self {
+        let n = problem.n();
+        CoxState {
+            beta: vec![0.0; problem.p()],
+            eta: vec![0.0; n],
+            w: vec![1.0; n],
+            shift: 0.0,
+            updates_since_refresh: 0,
+        }
+    }
+
+    /// State at a given β (recomputes η = Xβ).
+    pub fn from_beta(problem: &CoxProblem, beta: &[f64]) -> Self {
+        assert_eq!(beta.len(), problem.p());
+        let eta = problem.x.matvec(beta);
+        let mut s = CoxState {
+            beta: beta.to_vec(),
+            eta,
+            w: Vec::new(),
+            shift: 0.0,
+            updates_since_refresh: 0,
+        };
+        s.refresh_w();
+        s
+    }
+
+    /// Recompute w = exp(η − max η) from scratch.
+    pub fn refresh_w(&mut self) {
+        let m = self.eta.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m = if m.is_finite() { m } else { 0.0 };
+        self.shift = m;
+        self.w = self.eta.iter().map(|&e| (e - m).exp()).collect();
+        self.updates_since_refresh = 0;
+    }
+
+    /// Apply a single-coordinate step β_l += Δ, updating η and w
+    /// incrementally. O(nnz(x_l)) when the column is sparse/binary.
+    pub fn update_coord(&mut self, problem: &CoxProblem, l: usize, delta: f64) {
+        if delta == 0.0 {
+            return;
+        }
+        self.beta[l] += delta;
+        let col = problem.x.col(l);
+        let mut max_eta = f64::NEG_INFINITY;
+        if problem.col_binary[l] {
+            // Binary column (the Sec-4.2 binarized regime): every nonzero
+            // entry shares one multiplicative factor exp(Δ) — one exp()
+            // for the whole update instead of one per sample.
+            let factor = delta.exp();
+            for (k, &xkl) in col.iter().enumerate() {
+                if xkl != 0.0 {
+                    self.eta[k] += delta;
+                    self.w[k] *= factor;
+                }
+                if self.eta[k] > max_eta {
+                    max_eta = self.eta[k];
+                }
+            }
+        } else {
+            for (k, &xkl) in col.iter().enumerate() {
+                if xkl != 0.0 {
+                    self.eta[k] += delta * xkl;
+                    self.w[k] *= (delta * xkl).exp();
+                }
+                if self.eta[k] > max_eta {
+                    max_eta = self.eta[k];
+                }
+            }
+        }
+        self.updates_since_refresh += 1;
+        // Rebase if η drifted far from the shift (overflow guard) or after
+        // many incremental multiplies (precision guard).
+        if max_eta - self.shift > 30.0
+            || max_eta - self.shift < -30.0
+            || self.updates_since_refresh >= REFRESH_EVERY
+        {
+            self.refresh_w();
+        }
+    }
+
+    /// Replace β wholesale (full-vector methods like Newton), recomputing
+    /// η and w.
+    pub fn set_beta(&mut self, problem: &CoxProblem, beta: &[f64]) {
+        self.beta.copy_from_slice(beta);
+        self.eta = problem.x.matvec(beta);
+        self.refresh_w();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+
+    fn problem() -> CoxProblem {
+        let x = Matrix::from_columns(&[
+            vec![1.0, 0.0, 1.0, 0.5],
+            vec![0.0, 1.0, 1.0, -0.5],
+        ]);
+        let ds = SurvivalDataset::new(
+            x,
+            vec![4.0, 3.0, 2.0, 1.0],
+            vec![true, true, false, true],
+            "t",
+        );
+        CoxProblem::new(&ds)
+    }
+
+    #[test]
+    fn zeros_state() {
+        let p = problem();
+        let s = CoxState::zeros(&p);
+        assert!(s.w.iter().all(|&w| w == 1.0));
+        assert_eq!(s.shift, 0.0);
+    }
+
+    #[test]
+    fn incremental_matches_full_recompute() {
+        let p = problem();
+        let mut s = CoxState::zeros(&p);
+        s.update_coord(&p, 0, 0.7);
+        s.update_coord(&p, 1, -0.3);
+        s.update_coord(&p, 0, 0.1);
+        let full = CoxState::from_beta(&p, &s.beta);
+        for k in 0..p.n() {
+            assert!((s.eta[k] - full.eta[k]).abs() < 1e-12);
+            let wa = s.w[k] * s.shift.exp();
+            let wb = full.w[k] * full.shift.exp();
+            assert!((wa - wb).abs() / wb.max(1e-300) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn large_eta_does_not_overflow() {
+        let p = problem();
+        let mut s = CoxState::zeros(&p);
+        for _ in 0..50 {
+            s.update_coord(&p, 0, 20.0); // η up to ~1000
+        }
+        assert!(s.w.iter().all(|w| w.is_finite()));
+        assert!(s.w.iter().cloned().fold(0.0f64, f64::max) <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn set_beta_roundtrip() {
+        let p = problem();
+        let mut s = CoxState::zeros(&p);
+        s.set_beta(&p, &[0.3, -0.2]);
+        let expect = CoxState::from_beta(&p, &[0.3, -0.2]);
+        assert_eq!(s.eta, expect.eta);
+    }
+}

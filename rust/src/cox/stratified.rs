@@ -1,0 +1,222 @@
+//! Stratified Cox model — one of the paper's listed extensions
+//! ("we can apply our method to solve the CPH models with ...
+//! stratifications \[40\]").
+//!
+//! Each stratum has its own baseline hazard: risk sets never cross
+//! strata, so the partial likelihood is a *sum of per-stratum CPH
+//! losses sharing one β*. Every per-coordinate quantity (d1, d2, d3,
+//! Lipschitz constants) is therefore the sum over strata, and the whole
+//! surrogate machinery applies unchanged.
+
+use super::derivatives::{coord_d1_d2, CoordDerivs};
+use super::lipschitz::{coord_lipschitz, LipschitzPair};
+use super::loss::loss;
+use super::problem::CoxProblem;
+use super::state::CoxState;
+use crate::data::SurvivalDataset;
+use crate::optim::prox::{cubic_l1_step, cubic_step};
+use crate::optim::{Objective, Trace};
+use std::time::Instant;
+
+/// A stratified CPH problem: one [`CoxProblem`] per stratum, shared β.
+pub struct StratifiedCoxProblem {
+    pub strata: Vec<CoxProblem>,
+    pub p: usize,
+}
+
+impl StratifiedCoxProblem {
+    /// Split a dataset by stratum labels (one label per sample).
+    pub fn new(ds: &SurvivalDataset, labels: &[usize]) -> Self {
+        assert_eq!(labels.len(), ds.n());
+        let max_label = *labels.iter().max().expect("non-empty dataset");
+        let mut strata = Vec::new();
+        for s in 0..=max_label {
+            let idx: Vec<usize> =
+                (0..ds.n()).filter(|&i| labels[i] == s).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            strata.push(CoxProblem::new(&ds.subset(&idx)));
+        }
+        assert!(!strata.is_empty());
+        let p = ds.p();
+        StratifiedCoxProblem { strata, p }
+    }
+
+    /// Combined loss Σ_s ℓ_s(β).
+    pub fn loss(&self, states: &[CoxState]) -> f64 {
+        self.strata.iter().zip(states).map(|(pr, st)| loss(pr, st)).sum()
+    }
+
+    /// Combined (d1, d2) at a coordinate.
+    pub fn coord_d1_d2(&self, states: &[CoxState], l: usize) -> (f64, f64) {
+        let mut d = (0.0, 0.0);
+        for (pr, st) in self.strata.iter().zip(states) {
+            let (d1, d2) = coord_d1_d2(pr, st, l);
+            d.0 += d1;
+            d.1 += d2;
+        }
+        d
+    }
+
+    /// Combined third-derivative data is never needed directly; the
+    /// Lipschitz constants add across strata (sums of bounded terms).
+    pub fn lipschitz(&self, l: usize) -> LipschitzPair {
+        let mut out = LipschitzPair::default();
+        for pr in &self.strata {
+            let lp = coord_lipschitz(pr, l);
+            out.l2 += lp.l2;
+            out.l3 += lp.l3;
+        }
+        out
+    }
+
+    /// States at β = 0 for every stratum.
+    pub fn zero_states(&self) -> Vec<CoxState> {
+        self.strata.iter().map(CoxState::zeros).collect()
+    }
+
+    /// Fit by cubic-surrogate coordinate descent (shared β).
+    pub fn fit(
+        &self,
+        obj: Objective,
+        max_sweeps: usize,
+        tol: f64,
+    ) -> (Vec<f64>, Trace) {
+        let mut states = self.zero_states();
+        let mut beta = vec![0.0; self.p];
+        let lip: Vec<LipschitzPair> = (0..self.p).map(|l| self.lipschitz(l)).collect();
+        let mut trace = Trace::default();
+        let start = Instant::now();
+        let mut prev = f64::INFINITY;
+        for sweep in 0..max_sweeps {
+            for l in 0..self.p {
+                let (d1, d2) = self.coord_d1_d2(&states, l);
+                let a = d1 + 2.0 * obj.l2 * beta[l];
+                let b = (d2 + 2.0 * obj.l2).max(0.0);
+                if b <= 0.0 && lip[l].l3 <= 0.0 {
+                    continue;
+                }
+                let delta = if obj.l1 > 0.0 {
+                    cubic_l1_step(a, b, lip[l].l3, beta[l], obj.l1)
+                } else {
+                    cubic_step(a, b, lip[l].l3)
+                };
+                if delta != 0.0 {
+                    beta[l] += delta;
+                    for (pr, st) in self.strata.iter().zip(states.iter_mut()) {
+                        st.update_coord(pr, l, delta);
+                        // update_coord also moves st.beta; keep it in sync
+                        // (harmless — states' beta is not read here).
+                    }
+                }
+            }
+            let base = self.loss(&states);
+            let pen = obj.l1 * beta.iter().map(|b| b.abs()).sum::<f64>()
+                + obj.l2 * beta.iter().map(|b| b * b).sum::<f64>();
+            let val = base + pen;
+            trace.push(sweep, start, val);
+            if prev.is_finite() && (prev - val).abs() < tol * (prev.abs() + 1.0) {
+                trace.converged = true;
+                break;
+            }
+            prev = val;
+        }
+        (beta, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Two strata with *different baseline hazards* but a shared β.
+    fn stratified_ds(n_per: usize, seed: u64, beta: f64) -> (SurvivalDataset, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let n = 2 * n_per;
+        let mut x = Vec::with_capacity(n);
+        let mut time = Vec::with_capacity(n);
+        let mut event = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = i % 2;
+            let xv = rng.normal();
+            // Stratum 1's baseline is 20x faster.
+            let base = if s == 0 { 1.0 } else { 20.0 };
+            time.push(rng.exponential() / (base * (beta * xv).exp()));
+            event.push(rng.bernoulli(0.85));
+            x.push(xv);
+            labels.push(s);
+        }
+        (
+            SurvivalDataset::new(Matrix::from_columns(&[x]), time, event, "strat"),
+            labels,
+        )
+    }
+
+    #[test]
+    fn strata_partition_samples() {
+        let (ds, labels) = stratified_ds(30, 1, 0.5);
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        assert_eq!(sp.strata.len(), 2);
+        assert_eq!(sp.strata[0].n() + sp.strata[1].n(), 60);
+    }
+
+    #[test]
+    fn monotone_and_recovers_shared_effect() {
+        let (ds, labels) = stratified_ds(300, 2, 0.8);
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        let (beta, trace) = sp.fit(Objective { l1: 0.0, l2: 0.1 }, 200, 1e-10);
+        assert!(trace.monotone(1e-9));
+        assert!(
+            (beta[0] - 0.8).abs() < 0.2,
+            "stratified fit should recover β≈0.8, got {}",
+            beta[0]
+        );
+    }
+
+    #[test]
+    fn unstratified_fit_is_biased_by_baseline_mixture() {
+        // Ignoring strata mixes two very different baselines; the
+        // stratified estimate must be at least as close to the truth.
+        let (ds, labels) = stratified_ds(300, 3, 0.8);
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        let (beta_s, _) = sp.fit(Objective { l1: 0.0, l2: 0.1 }, 200, 1e-10);
+        use crate::optim::{CubicSurrogate, FitConfig, Optimizer};
+        let pr = CoxProblem::new(&ds);
+        let res = CubicSurrogate.fit(
+            &pr,
+            &FitConfig {
+                objective: Objective { l1: 0.0, l2: 0.1 },
+                max_iters: 200,
+                tol: 1e-10,
+                ..Default::default()
+            },
+        );
+        let err_s = (beta_s[0] - 0.8).abs();
+        let err_u = (res.beta[0] - 0.8).abs();
+        assert!(err_s <= err_u + 0.05, "stratified {err_s} vs pooled {err_u}");
+    }
+
+    #[test]
+    fn single_stratum_matches_plain_cox() {
+        let (ds, _) = stratified_ds(100, 4, 0.5);
+        let labels = vec![0usize; ds.n()];
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        let (beta_s, _) = sp.fit(Objective { l1: 0.0, l2: 1.0 }, 300, 1e-12);
+        use crate::optim::{CubicSurrogate, FitConfig, Optimizer};
+        let pr = CoxProblem::new(&ds);
+        let res = CubicSurrogate.fit(
+            &pr,
+            &FitConfig {
+                objective: Objective { l1: 0.0, l2: 1.0 },
+                max_iters: 300,
+                tol: 1e-12,
+                ..Default::default()
+            },
+        );
+        assert!((beta_s[0] - res.beta[0]).abs() < 1e-6);
+    }
+}

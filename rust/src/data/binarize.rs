@@ -1,0 +1,160 @@
+//! Quantile threshold binarization (Sec. 4.2 preprocessing).
+//!
+//! Each continuous feature is expanded into one-hot threshold indicators
+//! `1{x <= q}` over up to `max_quantiles` distinct quantile cutpoints
+//! (the paper uses 1000 quantiles). Adjacent thresholds of one source
+//! column are nested and therefore *highly correlated* — exactly the
+//! regime where the paper claims existing variable selectors fail.
+
+use super::survival::SurvivalDataset;
+use crate::linalg::Matrix;
+
+/// Binarization settings.
+#[derive(Clone, Debug)]
+pub struct BinarizeConfig {
+    /// Number of quantile cutpoints per continuous column (paper: 1000).
+    pub max_quantiles: usize,
+    /// Columns with at most this many distinct values are treated as
+    /// categorical and one-hot encoded per value instead.
+    pub categorical_max_distinct: usize,
+}
+
+impl Default for BinarizeConfig {
+    fn default() -> Self {
+        BinarizeConfig { max_quantiles: 1000, categorical_max_distinct: 8 }
+    }
+}
+
+fn distinct_sorted(col: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = col.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.dedup();
+    v
+}
+
+/// Threshold cutpoints: up to `q` distinct quantiles of the column
+/// (excluding the maximum so no indicator is identically 1).
+pub fn quantile_cutpoints(col: &[f64], q: usize) -> Vec<f64> {
+    let distinct = distinct_sorted(col);
+    if distinct.len() <= 1 {
+        return Vec::new();
+    }
+    let candidates = &distinct[..distinct.len() - 1]; // drop max
+    if candidates.len() <= q {
+        return candidates.to_vec();
+    }
+    // Evenly spaced quantile picks over the distinct values.
+    let mut cuts = Vec::with_capacity(q);
+    for i in 0..q {
+        let idx = (i as f64 + 0.5) / q as f64 * candidates.len() as f64;
+        let idx = (idx as usize).min(candidates.len() - 1);
+        cuts.push(candidates[idx]);
+    }
+    cuts.dedup();
+    cuts
+}
+
+/// Expand every column into binary threshold features.
+pub fn binarize(ds: &SurvivalDataset, cfg: &BinarizeConfig) -> SurvivalDataset {
+    let n = ds.n();
+    let mut columns: Vec<Vec<f64>> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+
+    for j in 0..ds.p() {
+        let col = ds.x.col(j);
+        let distinct = distinct_sorted(col);
+        if distinct.len() <= 2 {
+            // Already binary (or constant): keep as-is.
+            columns.push(col.to_vec());
+            names.push(ds.feature_names[j].clone());
+            continue;
+        }
+        if distinct.len() <= cfg.categorical_max_distinct {
+            // Categorical: one-hot per value, dropping one reference level.
+            for v in distinct.iter().skip(1) {
+                columns.push(col.iter().map(|&x| if x == *v { 1.0 } else { 0.0 }).collect());
+                names.push(format!("{}=={}", ds.feature_names[j], v));
+            }
+            continue;
+        }
+        for cut in quantile_cutpoints(col, cfg.max_quantiles) {
+            columns.push(col.iter().map(|&x| if x <= cut { 1.0 } else { 0.0 }).collect());
+            names.push(format!("{}<={:.6}", ds.feature_names[j], cut));
+        }
+    }
+
+    let x = if columns.is_empty() {
+        Matrix::zeros(n, 0)
+    } else {
+        Matrix::from_columns(&columns)
+    };
+    let mut out = SurvivalDataset::new(x, ds.time.clone(), ds.event.clone(), &ds.name);
+    out.feature_names = names;
+    out.name = format!("{}_bin", ds.name);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn continuous_ds(n: usize, p: usize, seed: u64) -> SurvivalDataset {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> = (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 5.0)).collect();
+        let event: Vec<bool> = (0..n).map(|i| i % 3 != 0).collect();
+        SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "cont")
+    }
+
+    #[test]
+    fn binary_columns_pass_through() {
+        let x = Matrix::from_columns(&[vec![0.0, 1.0, 0.0, 1.0]]);
+        let ds = SurvivalDataset::new(x, vec![1.0, 2.0, 3.0, 4.0], vec![true; 4], "b");
+        let out = binarize(&ds, &BinarizeConfig::default());
+        assert_eq!(out.p(), 1);
+        assert_eq!(out.x.col(0), ds.x.col(0));
+    }
+
+    #[test]
+    fn continuous_expands_and_is_nested() {
+        let ds = continuous_ds(200, 1, 3);
+        let cfg = BinarizeConfig { max_quantiles: 10, ..Default::default() };
+        let out = binarize(&ds, &cfg);
+        assert!(out.p() >= 8 && out.p() <= 10, "p={}", out.p());
+        // Nested: indicator columns for increasing cutpoints are ordered.
+        for i in 0..out.n() {
+            let mut prev = 0.0;
+            for j in 0..out.p() {
+                let v = out.x.get(i, j);
+                assert!(v >= prev - 1e-12, "thresholds must be nested");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn all_columns_binary_after() {
+        let ds = continuous_ds(100, 3, 9);
+        let out = binarize(&ds, &BinarizeConfig { max_quantiles: 7, ..Default::default() });
+        for j in 0..out.p() {
+            assert!(out.x.col(j).iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn categorical_one_hot() {
+        let x = Matrix::from_columns(&[vec![0.0, 1.0, 2.0, 1.0, 0.0, 2.0]]);
+        let ds = SurvivalDataset::new(x, vec![1., 2., 3., 4., 5., 6.], vec![true; 6], "cat");
+        let out = binarize(&ds, &BinarizeConfig::default());
+        assert_eq!(out.p(), 2); // 3 levels, drop reference
+    }
+
+    #[test]
+    fn constant_column_kept_single() {
+        let x = Matrix::from_columns(&[vec![5.0; 4]]);
+        let ds = SurvivalDataset::new(x, vec![1., 2., 3., 4.], vec![true; 4], "c");
+        let out = binarize(&ds, &BinarizeConfig::default());
+        assert_eq!(out.p(), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal CSV reader for survival data (no external crates offline).
+//!
+//! Expected layout: a header row, a `time` column, an `event` column
+//! (0/1 or true/false), and numeric feature columns. Used when a real
+//! dataset CSV is dropped into `data/` to replace a stand-in.
+
+use super::survival::SurvivalDataset;
+use crate::linalg::Matrix;
+use std::path::Path;
+
+/// Split one CSV line honoring double quotes.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+fn parse_event(s: &str) -> Result<bool, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "dead" | "event" => Ok(true),
+        "0" | "false" | "no" | "censored" => Ok(false),
+        other => other
+            .parse::<f64>()
+            .map(|v| v != 0.0)
+            .map_err(|_| format!("unparseable event value {other:?}")),
+    }
+}
+
+/// Load a survival CSV. Column named `time` (or first column) is the
+/// observation time; column named `event`/`status`/`delta` (or second)
+/// is the indicator; everything else is a numeric feature.
+pub fn load_survival_csv(path: &Path, name: &str) -> Result<SurvivalDataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = split_csv_line(lines.next().ok_or("empty file")?)
+        .into_iter()
+        .map(|h| h.trim().to_string())
+        .collect();
+
+    let lower: Vec<String> = header.iter().map(|h| h.to_ascii_lowercase()).collect();
+    let time_col = lower.iter().position(|h| h == "time" || h == "t").unwrap_or(0);
+    let event_col = lower
+        .iter()
+        .position(|h| h == "event" || h == "status" || h == "delta" || h == "censor")
+        .unwrap_or(1);
+    if time_col == event_col {
+        return Err("time and event columns coincide".into());
+    }
+
+    let feat_cols: Vec<usize> =
+        (0..header.len()).filter(|&i| i != time_col && i != event_col).collect();
+
+    let mut time = Vec::new();
+    let mut event = Vec::new();
+    let mut feats: Vec<Vec<f64>> = vec![Vec::new(); feat_cols.len()];
+    for (lineno, line) in lines.enumerate() {
+        let cells = split_csv_line(line);
+        if cells.len() != header.len() {
+            return Err(format!(
+                "row {} has {} cells, expected {}",
+                lineno + 2,
+                cells.len(),
+                header.len()
+            ));
+        }
+        time.push(
+            cells[time_col]
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad time at row {}", lineno + 2))?,
+        );
+        event.push(parse_event(&cells[event_col])?);
+        for (k, &c) in feat_cols.iter().enumerate() {
+            feats[k].push(
+                cells[c]
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad feature {:?} at row {}", header[c], lineno + 2))?,
+            );
+        }
+    }
+
+    let x = Matrix::from_columns(&feats);
+    let mut ds = SurvivalDataset::new(x, time, event, name);
+    ds.feature_names = feat_cols.iter().map(|&c| header[c].clone()).collect();
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_temp(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fs_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.csv", content.len()));
+        std::fs::write(&path, content).unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_basic_csv() {
+        let p = write_temp("time,event,age,bp\n5.0,1,60,120\n3.0,0,50,110\n");
+        let ds = load_survival_csv(&p, "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.p(), 2);
+        assert_eq!(ds.time, vec![5.0, 3.0]);
+        assert_eq!(ds.event, vec![true, false]);
+        assert_eq!(ds.feature_names, vec!["age", "bp"]);
+    }
+
+    #[test]
+    fn handles_quoted_cells() {
+        let cells = split_csv_line("a,\"b,c\",\"d\"\"e\"");
+        assert_eq!(cells, vec!["a", "b,c", "d\"e"]);
+    }
+
+    #[test]
+    fn reorders_named_columns() {
+        let p = write_temp("age,status,time\n60,1,5.0\n50,0,3.0\n");
+        let ds = load_survival_csv(&p, "t").unwrap();
+        assert_eq!(ds.time, vec![5.0, 3.0]);
+        assert_eq!(ds.feature_names, vec!["age"]);
+    }
+
+    #[test]
+    fn errors_on_ragged_rows() {
+        let p = write_temp("time,event,a\n1.0,1\n");
+        assert!(load_survival_csv(&p, "t").is_err());
+    }
+
+    #[test]
+    fn errors_on_bad_event() {
+        let p = write_temp("time,event,a\n1.0,maybe,2\n");
+        assert!(load_survival_csv(&p, "t").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Datasets: the survival-data container, the paper's synthetic generator
+//! (Appendix C.2), stand-ins for the four real datasets, the quantile
+//! binarization preprocessor (Sec. 4.2), and a CSV loader.
+
+pub mod binarize;
+pub mod csv;
+pub mod datasets;
+pub mod survival;
+pub mod synthetic;
+
+pub use survival::SurvivalDataset;

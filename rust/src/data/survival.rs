@@ -1,0 +1,152 @@
+//! The time-to-event dataset container `{x_i, t_i, δ_i}` and split helpers.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// A survival dataset: features `x` (n×p), observation times `t`, and
+/// event indicators `δ` (true = failure observed, false = censored).
+#[derive(Clone, Debug)]
+pub struct SurvivalDataset {
+    pub x: Matrix,
+    pub time: Vec<f64>,
+    pub event: Vec<bool>,
+    /// Human-readable feature names (len p).
+    pub feature_names: Vec<String>,
+    /// Ground-truth coefficients when known (synthetic data), for F1.
+    pub true_beta: Option<Vec<f64>>,
+    pub name: String,
+}
+
+impl SurvivalDataset {
+    pub fn new(x: Matrix, time: Vec<f64>, event: Vec<bool>, name: &str) -> Self {
+        assert_eq!(x.rows, time.len());
+        assert_eq!(x.rows, event.len());
+        let feature_names = (0..x.cols).map(|j| format!("f{j}")).collect();
+        SurvivalDataset {
+            x,
+            time,
+            event,
+            feature_names,
+            true_beta: None,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.event.iter().filter(|&&e| e).count()
+    }
+
+    /// Fraction of censored samples.
+    pub fn censoring_rate(&self) -> f64 {
+        1.0 - self.n_events() as f64 / self.n() as f64
+    }
+
+    /// Subset by sample indices.
+    pub fn subset(&self, idx: &[usize]) -> SurvivalDataset {
+        SurvivalDataset {
+            x: self.x.select_rows(idx),
+            time: idx.iter().map(|&i| self.time[i]).collect(),
+            event: idx.iter().map(|&i| self.event[i]).collect(),
+            feature_names: self.feature_names.clone(),
+            true_beta: self.true_beta.clone(),
+            name: self.name.clone(),
+        }
+    }
+
+    /// Keep only the given feature columns.
+    pub fn select_features(&self, cols: &[usize]) -> SurvivalDataset {
+        SurvivalDataset {
+            x: self.x.select_columns(cols),
+            time: self.time.clone(),
+            event: self.event.clone(),
+            feature_names: cols.iter().map(|&c| self.feature_names[c].clone()).collect(),
+            true_beta: self
+                .true_beta
+                .as_ref()
+                .map(|b| cols.iter().map(|&c| b[c]).collect()),
+            name: self.name.clone(),
+        }
+    }
+
+    /// Shuffled k-fold split: returns (train, test) index pairs.
+    pub fn kfold_indices(&self, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+        assert!(k >= 2 && k <= self.n());
+        let perm = rng.permutation(self.n());
+        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &s) in perm.iter().enumerate() {
+            folds[i % k].push(s);
+        }
+        (0..k)
+            .map(|f| {
+                let test = folds[f].clone();
+                let train: Vec<usize> = (0..k)
+                    .filter(|&g| g != f)
+                    .flat_map(|g| folds[g].iter().copied())
+                    .collect();
+                (train, test)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SurvivalDataset {
+        let x = Matrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![0.0, 0.0],
+        ]);
+        SurvivalDataset::new(x, vec![4.0, 3.0, 2.0, 1.0], vec![true, false, true, true], "tiny")
+    }
+
+    #[test]
+    fn basic_stats() {
+        let d = tiny();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.p(), 2);
+        assert_eq!(d.n_events(), 3);
+        assert!((d.censoring_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_consistent() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.time, vec![2.0, 4.0]);
+        assert_eq!(s.event, vec![true, true]);
+        assert_eq!(s.x.row(0), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn select_features_tracks_names() {
+        let d = tiny();
+        let s = d.select_features(&[1]);
+        assert_eq!(s.p(), 1);
+        assert_eq!(s.feature_names, vec!["f1"]);
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        let folds = d.kfold_indices(2, &mut rng);
+        assert_eq!(folds.len(), 2);
+        for (train, test) in &folds {
+            let mut all: Vec<usize> = train.iter().chain(test.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3]);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! FastSurvival: fast training of Cox proportional hazards (CPH) models.
+//!
+//! Reproduction of "FastSurvival: Hidden Computational Blessings in Training
+//! Cox Proportional Hazards Models" (Liu, Zhang, Rudin; NeurIPS 2024).
+//!
+//! Three-layer architecture:
+//! - Layer 1 (build time): Pallas kernels computing risk-set cumulative
+//!   moments, lowered to HLO via `python/compile/aot.py`.
+//! - Layer 2 (build time): JAX compute graphs (loss, per-coordinate and
+//!   all-coordinate derivatives), also lowered to HLO.
+//! - Layer 3 (this crate): the optimization coordinator — quadratic/cubic
+//!   surrogate coordinate descent, Newton-family baselines, beam-search
+//!   variable selection, metrics, datasets, and the experiment harness.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cox;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod select;
+pub mod util;

@@ -1,0 +1,171 @@
+//! Cholesky factorization and SPD solves for Newton systems.
+//!
+//! The exact-Newton baseline solves `(H + λI) Δ = -g` with `H` the full
+//! β-space Hessian (Sec. 2 of the paper). `H` is positive semidefinite, so
+//! Cholesky with a diagonal-jitter retry is the right factorization.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+/// Error when the matrix is not (numerically) positive definite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not positive definite at pivot {} (value {:.3e})",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn factor(a: &Matrix) -> Result<Self, NotPositiveDefinite> {
+        assert_eq!(a.rows, a.cols, "Cholesky requires a square matrix");
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut d = a.get(j, j);
+            for k in 0..j {
+                let ljk = l.get(j, k);
+                d -= ljk * ljk;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotPositiveDefinite { pivot: j, value: d });
+            }
+            let djs = d.sqrt();
+            l.set(j, j, djs);
+            for i in (j + 1)..n {
+                let mut s = a.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s / djs);
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with escalating diagonal jitter (for PSD Hessians at β far
+    /// from the optimum where curvature vanishes — the paper's flaw #1).
+    pub fn factor_with_jitter(a: &Matrix, base_jitter: f64) -> (Self, f64) {
+        if let Ok(c) = Cholesky::factor(a) {
+            return (c, 0.0);
+        }
+        let mut jitter = base_jitter.max(1e-12);
+        loop {
+            let mut aj = a.clone();
+            for i in 0..a.rows {
+                aj.set(i, i, aj.get(i, i) + jitter);
+            }
+            if let Ok(c) = Cholesky::factor(&aj) {
+                return (c, jitter);
+            }
+            jitter *= 10.0;
+            assert!(jitter < 1e12, "could not regularize matrix to SPD");
+        }
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.get(i, k) * y[k];
+            }
+            y[i] = s / self.l.get(i, i);
+        }
+        // Backward: L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l.get(k, i) * x[k];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+        x
+    }
+
+    /// log-determinant of A (useful for diagnostics).
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        for c in 0..n {
+            for r in 0..n {
+                b.set(r, c, rng.normal());
+            }
+        }
+        // A = B B^T + n * I is SPD.
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        for seed in 0..5 {
+            let n = 8;
+            let a = random_spd(n, seed);
+            let mut rng = Rng::new(100 + seed);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let c = Cholesky::factor(&a).unwrap();
+            let x = c.solve(&b);
+            for (xi, ti) in x.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-8, "{xi} vs {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigvals 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_psd() {
+        // Rank-deficient PSD matrix.
+        let a = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let (c, jitter) = Cholesky::factor_with_jitter(&a, 1e-8);
+        assert!(jitter > 0.0);
+        let x = c.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let c = Cholesky::factor(&Matrix::eye(5)).unwrap();
+        assert!(c.logdet().abs() < 1e-12);
+    }
+}

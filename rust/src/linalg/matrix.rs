@@ -1,0 +1,243 @@
+//! Dense column-major matrix.
+//!
+//! Column-major because the Cox coordinate-descent hot path walks single
+//! feature columns (`x_l` over all samples) — those must be contiguous.
+
+/// Dense column-major `rows x cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major storage: element (r, c) at `data[c * rows + r]`.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from row-major nested vectors (test convenience).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Build from column vectors.
+    pub fn from_columns(cols: &[Vec<f64>]) -> Self {
+        let c = cols.len();
+        let r = if c == 0 { 0 } else { cols[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for col in cols {
+            assert_eq!(col.len(), r, "ragged columns");
+            data.extend_from_slice(col);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[c * self.rows + r]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[c * self.rows + r] = v;
+    }
+
+    /// Contiguous view of column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> &[f64] {
+        &self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    /// Mutable view of column `c`.
+    #[inline]
+    pub fn col_mut(&mut self, c: usize) -> &mut [f64] {
+        &mut self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    /// Copy of row `r`.
+    pub fn row(&self, r: usize) -> Vec<f64> {
+        (0..self.cols).map(|c| self.get(r, c)).collect()
+    }
+
+    /// Matrix-vector product `A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for c in 0..self.cols {
+            let xc = x[c];
+            if xc == 0.0 {
+                continue; // sparse β fast path: skip zero coefficients
+            }
+            let col = self.col(c);
+            for (yi, &a) in y.iter_mut().zip(col) {
+                *yi += a * xc;
+            }
+        }
+        y
+    }
+
+    /// Transposed product `A^T x`.
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        (0..self.cols)
+            .map(|c| {
+                let col = self.col(c);
+                col.iter().zip(x).map(|(&a, &b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Dense product `A * B`.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        for j in 0..b.cols {
+            let bj = b.col(j);
+            let oj = out.col_mut(j);
+            for (k, &bkj) in bj.iter().enumerate() {
+                if bkj == 0.0 {
+                    continue;
+                }
+                let ak = self.col(k);
+                for (o, &a) in oj.iter_mut().zip(ak) {
+                    *o += a * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    /// Subset of columns (for restricted-support fits).
+    pub fn select_columns(&self, idx: &[usize]) -> Matrix {
+        let cols: Vec<Vec<f64>> = idx.iter().map(|&c| self.col(c).to_vec()).collect();
+        Matrix::from_columns(&cols)
+    }
+
+    /// Subset of rows (for CV folds / bootstrap).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), self.cols);
+        for c in 0..self.cols {
+            let src = self.col(c);
+            let dst = m.col_mut(c);
+            for (k, &r) in idx.iter().enumerate() {
+                dst[k] = src[r];
+            }
+        }
+        m
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Standardize columns in place to mean 0 / std 1; returns (means, stds).
+    /// Constant columns keep std=1 so they become all-zero rather than NaN.
+    pub fn standardize_columns(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.rows as f64;
+        let mut means = Vec::with_capacity(self.cols);
+        let mut stds = Vec::with_capacity(self.cols);
+        for c in 0..self.cols {
+            let col = self.col_mut(c);
+            let mean = col.iter().sum::<f64>() / n;
+            let var = col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+            let std = if var > 1e-24 { var.sqrt() } else { 1.0 };
+            for x in col.iter_mut() {
+                *x = (*x - mean) / std;
+            }
+            means.push(mean);
+            stds.push(std);
+        }
+        (means, stds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_major_layout() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.col(0), &[1.0, 3.0]);
+        assert_eq!(m.col(1), &[2.0, 4.0]);
+        assert_eq!(m.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(m.tr_matvec(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+        assert_eq!(m.transpose().get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.row(0), vec![19.0, 22.0]);
+        assert_eq!(c.row(1), vec![43.0, 50.0]);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let s = m.select_columns(&[2, 0]);
+        assert_eq!(s.col(0), &[3.0, 6.0]);
+        let r = m.select_rows(&[1]);
+        assert_eq!(r.row(0), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn standardize_handles_constant_column() {
+        let mut m = Matrix::from_columns(&[vec![2.0, 2.0, 2.0], vec![0.0, 1.0, 2.0]]);
+        let (means, stds) = m.standardize_columns();
+        assert_eq!(means[0], 2.0);
+        assert_eq!(stds[0], 1.0);
+        assert!(m.col(0).iter().all(|&x| x == 0.0));
+        assert!(m.col(1).iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    #[test]
+    fn eye_matvec_identity() {
+        let m = Matrix::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x);
+    }
+}

@@ -1,0 +1,11 @@
+//! Minimal dense linear algebra (no external crates offline).
+//!
+//! Provides the column-major [`Matrix`] used throughout, Cholesky
+//! factorization for SPD Newton systems, and small vector helpers.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod vecops;
+
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;

@@ -1,0 +1,216 @@
+//! FastSurvival CLI — the Layer-3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   fit         train a CPH model on a dataset
+//!   select      cardinality-constrained variable selection
+//!   experiment  regenerate a paper table/figure (see DESIGN.md)
+//!   datasets    list datasets (Table 1 view)
+//!
+//! Examples:
+//!   fastsurvival fit --dataset flchain --method cubic --l2 1
+//!   fastsurvival fit --dataset synthetic --engine xla
+//!   fastsurvival select --dataset synthetic --method beam --k 15
+//!   fastsurvival experiment --id fig1 --scale 0.25
+
+use anyhow::{bail, Result};
+use fastsurvival::coordinator::experiments::{self, ExperimentConfig};
+use fastsurvival::coordinator::{fit_with_engine, EngineFitConfig};
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::binarize::{binarize, BinarizeConfig};
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::{datasets, SurvivalDataset};
+use fastsurvival::linalg::vecops::support_size;
+use fastsurvival::metrics::concordance_index;
+use fastsurvival::optim::{self, FitConfig, Objective, Optimizer};
+use fastsurvival::runtime::engine::engine_by_name;
+use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
+use fastsurvival::util::args::Args;
+use std::path::Path;
+
+fn load_dataset(args: &Args) -> SurvivalDataset {
+    let name = args.str_or("dataset", "synthetic");
+    let seed = args.get_or::<u64>("seed", 0);
+    if name == "synthetic" {
+        let cfg = SyntheticConfig {
+            n: args.get_or("n", 600),
+            p: args.get_or("p", 100),
+            rho: args.get_or("rho", 0.9),
+            k: args.get_or("true-k", 10),
+            s: 0.1,
+            seed,
+        };
+        return generate(&cfg);
+    }
+    let scale = args.get_or::<f64>("scale", 0.25);
+    let mut spec = datasets::spec(&name);
+    spec.n = ((spec.n as f64 * scale) as usize).max(200);
+    let raw = datasets::generate_stand_in(&spec, seed);
+    if args.flag("raw") {
+        raw
+    } else {
+        binarize(
+            &raw,
+            &BinarizeConfig {
+                max_quantiles: args.get_or("quantiles", 25),
+                ..Default::default()
+            },
+        )
+    }
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let ds = load_dataset(args);
+    let pr = CoxProblem::new(&ds);
+    let objective = Objective {
+        l1: args.get_or("l1", 0.0),
+        l2: args.get_or("l2", 0.0),
+    };
+    let engine_name = args.str_or("engine", "native");
+    println!(
+        "fit: dataset={} n={} p={} events={} engine={engine_name}",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        ds.n_events()
+    );
+
+    let beta = if engine_name == "native" {
+        let method = args.str_or("method", "cubic");
+        let opt = optim::by_name(&method);
+        let cfg = FitConfig {
+            objective,
+            max_iters: args.get_or("iters", 200),
+            tol: args.get_or("tol", 1e-9),
+            budget_secs: args.get_or("budget-secs", 0.0),
+            record_trace: true,
+        };
+        let res = opt.fit(&pr, &cfg);
+        println!(
+            "{}: final objective {:.6} after {} iterations (monotone={}, diverged={})",
+            opt.name(),
+            res.objective_value,
+            res.iterations,
+            res.trace.monotone(1e-8),
+            res.trace.diverged
+        );
+        res.beta
+    } else {
+        // Engine-generic cubic CD (runs on the AOT XLA artifacts).
+        let engine =
+            engine_by_name(&engine_name, Path::new(&args.str_or("artifacts", "artifacts")))?;
+        let cfg = EngineFitConfig {
+            objective,
+            max_sweeps: args.get_or("iters", 100),
+            tol: args.get_or("tol", 1e-9),
+        };
+        let (beta, trace) = fit_with_engine(engine.as_ref(), &pr, &cfg)?;
+        println!(
+            "engine={} final loss {:.6} after {} sweeps",
+            engine.name(),
+            trace.final_loss(),
+            trace.points.len()
+        );
+        beta
+    };
+
+    let eta = ds.x.matvec(&beta);
+    let ci = concordance_index(&ds.time, &ds.event, &eta);
+    println!(
+        "nonzero coefficients: {} / {}; train CIndex {:.4}",
+        support_size(&beta, 1e-10),
+        ds.p(),
+        ci
+    );
+    if args.flag("print-beta") {
+        for (j, b) in beta.iter().enumerate() {
+            if b.abs() > 1e-10 {
+                println!("  {} = {:+.6}", ds.feature_names[j], b);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let ds = load_dataset(args);
+    let pr = CoxProblem::new(&ds);
+    let k = args.get_or("k", 10);
+    let method = args.str_or("method", "beam");
+    let selector: Box<dyn VariableSelector> = match method.as_str() {
+        "beam" => Box::new(BeamSearch {
+            width: args.get_or("width", 10),
+            screen: args.get_or("screen", 20),
+            ..Default::default()
+        }),
+        "abess" => Box::new(Abess::default()),
+        "coxnet" => Box::new(CoxnetPath::default()),
+        "alasso" => Box::new(AdaptiveLasso::default()),
+        other => bail!("unknown selector {other:?} (beam|abess|coxnet|alasso)"),
+    };
+    println!(
+        "select: dataset={} n={} p={} method={} k={k}",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        selector.name()
+    );
+    let ks: Vec<usize> = (1..=k).collect();
+    let sols = selector.select(&pr, &ks);
+    for sol in &sols {
+        let eta = ds.x.matvec(&sol.beta);
+        let ci = concordance_index(&ds.time, &ds.event, &eta);
+        let f1 = ds
+            .true_beta
+            .as_ref()
+            .map(|tb| fastsurvival::metrics::support_f1(tb, &sol.beta, 1e-10).f1);
+        println!(
+            "  k={:<3} loss={:<12.4} cindex={:.4}{}",
+            sol.k,
+            sol.train_loss,
+            ci,
+            f1.map(|v| format!(" f1={v:.3}")).unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        scale: args.get_or("scale", 0.25),
+        quantiles: args.get_or("quantiles", 25),
+        folds: args.get_or("folds", 5),
+        ks: args.list_or("ks", &(1..=10).collect::<Vec<usize>>()),
+        optim_iters: args.get_or("optim-iters", 40),
+        seed: args.get_or("seed", 0),
+        out_dir: args.str_or("out", "results").into(),
+    };
+    let id = args.str_or("id", "table1");
+    experiments::run(&id, &cfg)
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        scale: args.get_or("scale", 0.25),
+        quantiles: args.get_or("quantiles", 25),
+        ..Default::default()
+    };
+    experiments::run("table1", &cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("fit") => cmd_fit(&args),
+        Some("select") => cmd_select(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("datasets") => cmd_datasets(&args),
+        _ => {
+            println!(
+                "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
+                 usage: fastsurvival <fit|select|experiment|datasets> [--options]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}

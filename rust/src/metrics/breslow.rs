@@ -1,0 +1,130 @@
+//! Breslow baseline cumulative hazard for the fitted CPH model.
+//!
+//! `H₀(t) = Σ_{event times t_i ≤ t} d_i / Σ_{j ∈ R_i} exp(η_j)`, giving
+//! individual survival predictions `S(t|x) = exp(−H₀(t)·e^{x^Tβ})` — the
+//! link from a Cox risk score to the survival curves the Brier score needs.
+
+/// Breslow estimator fit on training data.
+#[derive(Clone, Debug)]
+pub struct BreslowBaseline {
+    /// Distinct event times, ascending.
+    pub times: Vec<f64>,
+    /// Cumulative baseline hazard at each time.
+    pub cumhaz: Vec<f64>,
+}
+
+impl BreslowBaseline {
+    /// Fit from training observations and their linear predictors η.
+    pub fn fit(time: &[f64], event: &[bool], eta: &[f64]) -> Self {
+        let n = time.len();
+        assert_eq!(n, event.len());
+        assert_eq!(n, eta.len());
+        // Stabilized exp.
+        let m = eta.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m = if m.is_finite() { m } else { 0.0 };
+        let w: Vec<f64> = eta.iter().map(|&e| (e - m).exp()).collect();
+
+        // Ascending time order; risk set = suffix.
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| time[a].partial_cmp(&time[b]).unwrap());
+        // Suffix sums of w in ascending order.
+        let mut suffix = vec![0.0_f64; n + 1];
+        for k in (0..n).rev() {
+            suffix[k] = suffix[k + 1] + w[idx[k]];
+        }
+
+        let mut times = Vec::new();
+        let mut cumhaz = Vec::new();
+        let mut h = 0.0_f64;
+        let mut k = 0;
+        while k < n {
+            let t = time[idx[k]];
+            let mut d = 0.0;
+            let denom = suffix[k]; // all with time >= t (ties included)
+            let mut kk = k;
+            while kk < n && time[idx[kk]] == t {
+                if event[idx[kk]] {
+                    d += 1.0;
+                }
+                kk += 1;
+            }
+            if d > 0.0 && denom > 0.0 {
+                // Un-shift: denom is Σ e^{η−m}, so divide by e^m implicitly
+                // by scaling d (equivalently multiply hazard by e^{-m}).
+                h += d / (denom * m.exp());
+                times.push(t);
+                cumhaz.push(h);
+            }
+            k = kk;
+        }
+        BreslowBaseline { times, cumhaz }
+    }
+
+    /// H₀(t), right-continuous.
+    pub fn cumulative_hazard(&self, t: f64) -> f64 {
+        match self.times.partition_point(|&x| x <= t) {
+            0 => 0.0,
+            k => self.cumhaz[k - 1],
+        }
+    }
+
+    /// Predicted survival S(t | η) = exp(−H₀(t) e^η).
+    pub fn survival(&self, t: f64, eta: f64) -> f64 {
+        (-self.cumulative_hazard(t) * eta.exp()).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_eta_matches_nelson_aalen() {
+        use crate::metrics::km::NelsonAalen;
+        let time = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let event = vec![true, false, true, true, false];
+        let eta = vec![0.0; 5];
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        let na = NelsonAalen::fit(&time, &event);
+        for t in [0.5, 1.0, 2.5, 3.0, 4.5, 6.0] {
+            assert!(
+                (b.cumulative_hazard(t) - na.at(t)).abs() < 1e-12,
+                "t={t}: {} vs {}",
+                b.cumulative_hazard(t),
+                na.at(t)
+            );
+        }
+    }
+
+    #[test]
+    fn survival_decreasing_in_time_and_risk() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let eta = vec![0.5, -0.5, 0.2, -0.2];
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        let mut prev = 1.0;
+        for t in [0.5, 1.0, 2.0, 3.0, 4.0] {
+            let s = b.survival(t, 0.0);
+            assert!(s <= prev + 1e-12);
+            prev = s;
+        }
+        assert!(b.survival(2.0, 1.0) < b.survival(2.0, -1.0));
+    }
+
+    #[test]
+    fn shift_invariant() {
+        // Adding a constant to all η must rescale H0 so that predicted
+        // survival for a training subject is unchanged.
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true, true, false, true];
+        let eta = vec![0.3, -0.1, 0.7, 0.0];
+        let eta_shift: Vec<f64> = eta.iter().map(|e| e + 5.0).collect();
+        let b0 = BreslowBaseline::fit(&time, &event, &eta);
+        let b1 = BreslowBaseline::fit(&time, &event, &eta_shift);
+        for (i, t) in [(0usize, 1.5), (2, 3.5)] {
+            let s0 = b0.survival(t, eta[i]);
+            let s1 = b1.survival(t, eta_shift[i]);
+            assert!((s0 - s1).abs() < 1e-10, "{s0} vs {s1}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! (Integrated) Brier score with IPCW weights, Graf et al. \[24\].
+//!
+//! `BS(t) = n⁻¹ Σ_i [ Ŝ(t|x_i)²·1{t_i ≤ t, δ_i=1}/G(t_i⁻)
+//!                   + (1−Ŝ(t|x_i))²·1{t_i > t}/G(t) ]`
+//! where G is the Kaplan–Meier estimate of the censoring distribution on
+//! the training data. IBS integrates BS over a time grid (trapezoid).
+
+use super::km::KaplanMeier;
+
+/// Brier score at a single horizon `t`. `surv(i, t)` is the model's
+/// predicted survival probability for test sample `i` at time `t`.
+pub fn brier_score(
+    time: &[f64],
+    event: &[bool],
+    surv: &dyn Fn(usize, f64) -> f64,
+    censor_km: &KaplanMeier,
+    t: f64,
+) -> f64 {
+    let n = time.len();
+    let mut total = 0.0;
+    for i in 0..n {
+        let s = surv(i, t).clamp(0.0, 1.0);
+        if time[i] <= t && event[i] {
+            let g = censor_km.at_left(time[i]).max(1e-10);
+            total += s * s / g;
+        } else if time[i] > t {
+            let g = censor_km.at(t).max(1e-10);
+            total += (1.0 - s) * (1.0 - s) / g;
+        }
+        // censored before t: weight 0
+    }
+    total / n as f64
+}
+
+/// Integrated Brier score over `grid` (must be ascending), trapezoid rule
+/// normalized by the grid span.
+pub fn integrated_brier_score(
+    time: &[f64],
+    event: &[bool],
+    surv: &dyn Fn(usize, f64) -> f64,
+    censor_km: &KaplanMeier,
+    grid: &[f64],
+) -> f64 {
+    assert!(grid.len() >= 2, "need at least two grid points");
+    let bs: Vec<f64> = grid.iter().map(|&t| brier_score(time, event, surv, censor_km, t)).collect();
+    let mut integral = 0.0;
+    for k in 1..grid.len() {
+        let dt = grid[k] - grid[k - 1];
+        assert!(dt >= 0.0, "grid must be ascending");
+        integral += 0.5 * (bs[k] + bs[k - 1]) * dt;
+    }
+    integral / (grid[grid.len() - 1] - grid[0])
+}
+
+/// Default evaluation grid: `n_points` between the 5th and 95th
+/// percentile of observed *event* times (sksurv convention).
+pub fn default_grid(time: &[f64], event: &[bool], n_points: usize) -> Vec<f64> {
+    let mut ev: Vec<f64> = time
+        .iter()
+        .zip(event)
+        .filter(|(_, &e)| e)
+        .map(|(&t, _)| t)
+        .collect();
+    if ev.len() < 2 {
+        ev = time.to_vec();
+    }
+    ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = ev[(0.05 * (ev.len() - 1) as f64) as usize];
+    let hi = ev[(0.95 * (ev.len() - 1) as f64) as usize];
+    let hi = if hi > lo { hi } else { lo + 1e-9 };
+    (0..n_points)
+        .map(|k| lo + (hi - lo) * k as f64 / (n_points - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_predictions_score_zero() {
+        // No censoring; oracle survival: S(t|i) = 1{t < t_i}.
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let g = KaplanMeier::fit_censoring(&time, &event); // G == 1
+        let t_copy = time.clone();
+        let surv = move |i: usize, t: f64| if t < t_copy[i] { 1.0 } else { 0.0 };
+        for t in [0.5, 1.5, 2.5, 3.5] {
+            let bs = brier_score(&time, &event, &surv, &g, t);
+            assert!(bs.abs() < 1e-12, "t={t} bs={bs}");
+        }
+    }
+
+    #[test]
+    fn constant_half_scores_quarter() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let g = KaplanMeier::fit_censoring(&time, &event);
+        let surv = |_i: usize, _t: f64| 0.5;
+        let bs = brier_score(&time, &event, &surv, &g, 2.5);
+        assert!((bs - 0.25).abs() < 1e-12, "bs={bs}");
+    }
+
+    #[test]
+    fn ibs_integrates_constant() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let g = KaplanMeier::fit_censoring(&time, &event);
+        let surv = |_i: usize, _t: f64| 0.5;
+        let grid = vec![1.0, 2.0, 3.0];
+        let ibs = integrated_brier_score(&time, &event, &surv, &g, &grid);
+        assert!((ibs - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn informative_model_beats_constant() {
+        use crate::metrics::breslow::BreslowBaseline;
+        let mut rng = Rng::new(17);
+        let n = 500;
+        let eta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let time: Vec<f64> = eta.iter().map(|&e| rng.exponential() / e.exp()).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.8)).collect();
+        let g = KaplanMeier::fit_censoring(&time, &event);
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        let grid = default_grid(&time, &event, 25);
+        let eta_c = eta.clone();
+        let model = move |i: usize, t: f64| b.survival(t, eta_c[i]);
+        let ibs_model = integrated_brier_score(&time, &event, &model, &g, &grid);
+        let km = crate::metrics::km::KaplanMeier::fit(&time, &event);
+        let marginal = move |_i: usize, t: f64| km.at(t);
+        let ibs_marginal = integrated_brier_score(&time, &event, &marginal, &g, &grid);
+        assert!(
+            ibs_model < ibs_marginal,
+            "model {ibs_model} should beat marginal {ibs_marginal}"
+        );
+    }
+
+    #[test]
+    fn default_grid_ascending_within_range() {
+        let time = vec![1.0, 5.0, 2.0, 8.0, 3.0];
+        let event = vec![true, true, false, true, true];
+        let grid = default_grid(&time, &event, 10);
+        assert_eq!(grid.len(), 10);
+        assert!(grid.windows(2).all(|w| w[1] >= w[0]));
+        assert!(grid[0] >= 1.0 && grid[9] <= 8.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Harrell's concordance index \[26\].
+//!
+//! Fraction of comparable pairs whose predicted risks are correctly
+//! ordered. A pair (i, j) is comparable when t_i < t_j and δ_i = 1 (the
+//! earlier time is an observed event). Ties in predicted risk count ½.
+
+/// Concordance index of `risk` (higher = fails earlier) on (time, event).
+/// Returns 0.5 when there are no comparable pairs.
+///
+/// Dispatches to an O(n log n) Fenwick-tree counting implementation for
+/// large n; the O(n²) pair scan remains as the small-n path and as the
+/// test oracle.
+pub fn concordance_index(time: &[f64], event: &[bool], risk: &[f64]) -> f64 {
+    if time.len() > 512 {
+        concordance_index_fast(time, event, risk)
+    } else {
+        concordance_index_naive(time, event, risk)
+    }
+}
+
+/// O(n²) reference implementation (exact Harrell definition).
+pub fn concordance_index_naive(time: &[f64], event: &[bool], risk: &[f64]) -> f64 {
+    let n = time.len();
+    assert_eq!(n, event.len());
+    assert_eq!(n, risk.len());
+    // Sort by time ascending so comparable pairs are (earlier event, later).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| time[a].partial_cmp(&time[b]).unwrap());
+
+    let mut concordant = 0.0_f64;
+    let mut comparable = 0.0_f64;
+    for (a_pos, &i) in idx.iter().enumerate() {
+        if !event[i] {
+            continue;
+        }
+        for &j in &idx[a_pos + 1..] {
+            if time[j] <= time[i] {
+                continue; // tied times are not comparable under Harrell
+            }
+            comparable += 1.0;
+            if risk[i] > risk[j] {
+                concordant += 1.0;
+            } else if risk[i] == risk[j] {
+                concordant += 0.5;
+            }
+        }
+    }
+    if comparable == 0.0 {
+        0.5
+    } else {
+        concordant / comparable
+    }
+}
+
+/// Fenwick tree over rank-compressed risks (counts per rank).
+struct Fenwick {
+    tree: Vec<u64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Fenwick { tree: vec![0; n + 1] }
+    }
+
+    fn add(&mut self, mut i: usize) {
+        i += 1;
+        while i < self.tree.len() {
+            self.tree[i] += 1;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Count of inserted ranks in [0, i].
+    fn prefix(&self, mut i: usize) -> u64 {
+        i += 1;
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// O(n log n) concordance: walk tie groups from latest to earliest time,
+/// keeping a Fenwick tree of the risks of all strictly-later samples;
+/// each event then counts later samples with smaller/equal/greater risk
+/// in O(log n).
+pub fn concordance_index_fast(time: &[f64], event: &[bool], risk: &[f64]) -> f64 {
+    let n = time.len();
+    assert_eq!(n, event.len());
+    assert_eq!(n, risk.len());
+
+    // Rank-compress risks.
+    let mut sorted_risk: Vec<f64> = risk.to_vec();
+    sorted_risk.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted_risk.dedup();
+    let rank = |r: f64| sorted_risk.partition_point(|&x| x < r);
+
+    // Time-descending order, grouped by equal time.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| time[b].partial_cmp(&time[a]).unwrap());
+
+    let mut bit = Fenwick::new(sorted_risk.len());
+    let mut inserted: u64 = 0;
+    let (mut concordant, mut comparable) = (0.0_f64, 0.0_f64);
+    let mut g = 0;
+    while g < n {
+        let mut h = g;
+        while h < n && time[idx[h]] == time[idx[g]] {
+            h += 1;
+        }
+        // Events in this group compare against everything inserted so
+        // far (strictly later times).
+        for &i in &idx[g..h] {
+            if !event[i] || inserted == 0 {
+                continue;
+            }
+            let r = rank(risk[i]);
+            let le = bit.prefix(r); // later samples with risk <= risk_i
+            let lt = if r == 0 { 0 } else { bit.prefix(r - 1) };
+            let eq = le - lt;
+            comparable += inserted as f64;
+            concordant += lt as f64 + 0.5 * eq as f64;
+        }
+        for &i in &idx[g..h] {
+            bit.add(rank(risk[i]));
+            inserted += 1;
+        }
+        g = h;
+    }
+    if comparable == 0.0 {
+        0.5
+    } else {
+        concordant / comparable
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_ordering_gives_one() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let risk = vec![4.0, 3.0, 2.0, 1.0];
+        assert_eq!(concordance_index(&time, &event, &risk), 1.0);
+    }
+
+    #[test]
+    fn reversed_ordering_gives_zero() {
+        let time = vec![1.0, 2.0, 3.0];
+        let event = vec![true; 3];
+        let risk = vec![1.0, 2.0, 3.0];
+        assert_eq!(concordance_index(&time, &event, &risk), 0.0);
+    }
+
+    #[test]
+    fn constant_risk_gives_half() {
+        let time = vec![1.0, 2.0, 3.0];
+        let event = vec![true; 3];
+        let risk = vec![7.0; 3];
+        assert_eq!(concordance_index(&time, &event, &risk), 0.5);
+    }
+
+    #[test]
+    fn censored_earlier_times_are_not_comparable() {
+        // i censored at t=1: pairs starting at i don't count.
+        let time = vec![1.0, 2.0];
+        let event = vec![false, true];
+        let risk = vec![0.0, 1.0];
+        assert_eq!(concordance_index(&time, &event, &risk), 0.5); // no pairs
+    }
+
+    #[test]
+    fn random_risk_near_half() {
+        let mut rng = Rng::new(5);
+        let n = 400;
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        let risk: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let c = concordance_index(&time, &event, &risk);
+        assert!((c - 0.5).abs() < 0.05, "c={c}");
+    }
+
+    #[test]
+    fn fast_matches_naive_exactly() {
+        use crate::util::proptest::check;
+        check(
+            "cindex-fast-vs-naive",
+            211,
+            40,
+            |r| {
+                let n = 5 + r.below(120);
+                // Quantized times + risks force tie handling on both axes.
+                let time: Vec<f64> = (0..n).map(|_| (r.uniform() * 8.0).round()).collect();
+                let event: Vec<bool> = (0..n).map(|_| r.bernoulli(0.6)).collect();
+                let risk: Vec<f64> = (0..n).map(|_| (r.normal() * 2.0).round()).collect();
+                (time, event, risk)
+            },
+            |(time, event, risk)| {
+                let a = concordance_index_naive(time, event, risk);
+                let b = concordance_index_fast(time, event, risk);
+                if (a - b).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("naive {a} vs fast {b}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn informative_risk_above_half() {
+        let mut rng = Rng::new(6);
+        let n = 300;
+        let risk: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let time: Vec<f64> = risk.iter().map(|&r| rng.exponential() / r.exp()).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.8)).collect();
+        let c = concordance_index(&time, &event, &risk);
+        assert!(c > 0.7, "c={c}");
+    }
+}

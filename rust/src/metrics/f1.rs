@@ -1,0 +1,89 @@
+//! Support-recovery precision / recall / F1 (Appendix C.2).
+//!
+//! `P = |supp(β*) ∩ supp(β̂)| / |supp(β̂)|`,
+//! `R = |supp(β*) ∩ supp(β̂)| / |supp(β*)|`, `F1 = 2PR/(P+R)`.
+
+/// Precision / recall / F1 for variable selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SupportScores {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Compute support-recovery scores with tolerance `tol` for "nonzero".
+pub fn support_f1(true_beta: &[f64], est_beta: &[f64], tol: f64) -> SupportScores {
+    assert_eq!(true_beta.len(), est_beta.len());
+    let mut tp = 0usize;
+    let mut est_nnz = 0usize;
+    let mut true_nnz = 0usize;
+    for (t, e) in true_beta.iter().zip(est_beta) {
+        let t_on = t.abs() > tol;
+        let e_on = e.abs() > tol;
+        if t_on {
+            true_nnz += 1;
+        }
+        if e_on {
+            est_nnz += 1;
+        }
+        if t_on && e_on {
+            tp += 1;
+        }
+    }
+    let precision = if est_nnz == 0 { 0.0 } else { tp as f64 / est_nnz as f64 };
+    let recall = if true_nnz == 0 { 0.0 } else { tp as f64 / true_nnz as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    SupportScores { precision, recall, f1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_recovery_is_one() {
+        let t = vec![1.0, 0.0, 1.0, 0.0];
+        let s = support_f1(&t, &t, 1e-9);
+        assert_eq!(s.f1, 1.0);
+        assert_eq!(s.precision, 1.0);
+        assert_eq!(s.recall, 1.0);
+    }
+
+    #[test]
+    fn disjoint_supports_zero() {
+        let t = vec![1.0, 0.0];
+        let e = vec![0.0, 1.0];
+        let s = support_f1(&t, &e, 1e-9);
+        assert_eq!(s.f1, 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        let t = vec![1.0, 1.0, 0.0, 0.0];
+        let e = vec![0.5, 0.0, 0.3, 0.0];
+        let s = support_f1(&t, &e, 1e-9);
+        assert_eq!(s.precision, 0.5);
+        assert_eq!(s.recall, 0.5);
+        assert_eq!(s.f1, 0.5);
+    }
+
+    #[test]
+    fn empty_estimate_handled() {
+        let t = vec![1.0, 0.0];
+        let e = vec![0.0, 0.0];
+        let s = support_f1(&t, &e, 1e-9);
+        assert_eq!(s.f1, 0.0);
+    }
+
+    #[test]
+    fn tolerance_respected() {
+        let t = vec![1.0];
+        let e = vec![1e-12];
+        assert_eq!(support_f1(&t, &e, 1e-9).f1, 0.0);
+        assert_eq!(support_f1(&t, &e, 1e-15).f1, 1.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Kaplan–Meier and Nelson–Aalen estimators.
+
+/// A right-continuous step function S(t) = P(T > t) estimated by
+/// Kaplan–Meier. Also used (with flipped indicators) for the censoring
+/// distribution G(t) needed by IPCW Brier weights.
+#[derive(Clone, Debug)]
+pub struct KaplanMeier {
+    /// Distinct event times, ascending.
+    pub times: Vec<f64>,
+    /// Survival value *at and after* the corresponding time (until next).
+    pub surv: Vec<f64>,
+}
+
+impl KaplanMeier {
+    /// Fit S(t) from observations. `event[i] = true` marks the terminal
+    /// event; censored observations leave the risk set silently.
+    pub fn fit(time: &[f64], event: &[bool]) -> Self {
+        assert_eq!(time.len(), event.len());
+        let n = time.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| time[a].partial_cmp(&time[b]).unwrap());
+
+        let mut times = Vec::new();
+        let mut surv = Vec::new();
+        let mut s = 1.0_f64;
+        let mut at_risk = n as f64;
+        let mut i = 0;
+        while i < n {
+            let t = time[idx[i]];
+            let mut d = 0.0; // events at t
+            let mut m = 0.0; // total leaving at t
+            while i < n && time[idx[i]] == t {
+                if event[idx[i]] {
+                    d += 1.0;
+                }
+                m += 1.0;
+                i += 1;
+            }
+            if d > 0.0 {
+                s *= 1.0 - d / at_risk;
+                times.push(t);
+                surv.push(s);
+            }
+            at_risk -= m;
+        }
+        KaplanMeier { times, surv }
+    }
+
+    /// Censoring-distribution KM: flip the indicator (a "censoring event"
+    /// is the event of interest) — used for IPCW weights G(t).
+    pub fn fit_censoring(time: &[f64], event: &[bool]) -> Self {
+        let flipped: Vec<bool> = event.iter().map(|&e| !e).collect();
+        KaplanMeier::fit(time, &flipped)
+    }
+
+    /// S(t): right-continuous evaluation.
+    pub fn at(&self, t: f64) -> f64 {
+        // Last index with times[i] <= t.
+        match self.times.partition_point(|&x| x <= t) {
+            0 => 1.0,
+            k => self.surv[k - 1],
+        }
+    }
+
+    /// S(t−): left limit (used by IPCW at the observation's own time).
+    pub fn at_left(&self, t: f64) -> f64 {
+        match self.times.partition_point(|&x| x < t) {
+            0 => 1.0,
+            k => self.surv[k - 1],
+        }
+    }
+}
+
+/// Nelson–Aalen cumulative hazard Λ(t) = Σ_{t_i ≤ t} d_i / n_i.
+#[derive(Clone, Debug)]
+pub struct NelsonAalen {
+    pub times: Vec<f64>,
+    pub cumhaz: Vec<f64>,
+}
+
+impl NelsonAalen {
+    pub fn fit(time: &[f64], event: &[bool]) -> Self {
+        let n = time.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| time[a].partial_cmp(&time[b]).unwrap());
+        let mut times = Vec::new();
+        let mut cumhaz = Vec::new();
+        let mut h = 0.0_f64;
+        let mut at_risk = n as f64;
+        let mut i = 0;
+        while i < n {
+            let t = time[idx[i]];
+            let mut d = 0.0;
+            let mut m = 0.0;
+            while i < n && time[idx[i]] == t {
+                if event[idx[i]] {
+                    d += 1.0;
+                }
+                m += 1.0;
+                i += 1;
+            }
+            if d > 0.0 {
+                h += d / at_risk;
+                times.push(t);
+                cumhaz.push(h);
+            }
+            at_risk -= m;
+        }
+        NelsonAalen { times, cumhaz }
+    }
+
+    pub fn at(&self, t: f64) -> f64 {
+        match self.times.partition_point(|&x| x <= t) {
+            0 => 0.0,
+            k => self.cumhaz[k - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_censoring_matches_empirical() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true; 4];
+        let km = KaplanMeier::fit(&time, &event);
+        assert!((km.at(0.5) - 1.0).abs() < 1e-12);
+        assert!((km.at(1.0) - 0.75).abs() < 1e-12);
+        assert!((km.at(2.5) - 0.5).abs() < 1e-12);
+        assert!((km.at(4.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn censoring_shrinks_risk_set_without_drop() {
+        // Classic textbook check: censored at 2 leaves S unchanged at 2,
+        // but the next event divides by a smaller risk set.
+        let time = vec![1.0, 2.0, 3.0];
+        let event = vec![true, false, true];
+        let km = KaplanMeier::fit(&time, &event);
+        assert!((km.at(1.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((km.at(2.5) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((km.at(3.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn left_limit_differs_at_event_times() {
+        let time = vec![1.0, 2.0];
+        let event = vec![true, true];
+        let km = KaplanMeier::fit(&time, &event);
+        assert!((km.at_left(1.0) - 1.0).abs() < 1e-12);
+        assert!((km.at(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_handled_together() {
+        let time = vec![1.0, 1.0, 2.0, 2.0];
+        let event = vec![true, true, true, false];
+        let km = KaplanMeier::fit(&time, &event);
+        assert!((km.at(1.0) - 0.5).abs() < 1e-12);
+        assert!((km.at(2.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nelson_aalen_monotone_and_consistent() {
+        let time = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let event = vec![true, false, true, true, false];
+        let na = NelsonAalen::fit(&time, &event);
+        assert_eq!(na.at(0.0), 0.0);
+        assert!((na.at(1.0) - 0.2).abs() < 1e-12);
+        assert!((na.at(3.0) - (0.2 + 1.0 / 3.0)).abs() < 1e-12);
+        let mut prev = 0.0;
+        for t in [0.5, 1.5, 2.5, 3.5, 4.5, 5.5] {
+            assert!(na.at(t) >= prev);
+            prev = na.at(t);
+        }
+    }
+
+    #[test]
+    fn censoring_km_flips() {
+        let time = vec![1.0, 2.0];
+        let event = vec![true, false];
+        let g = KaplanMeier::fit_censoring(&time, &event);
+        // Censoring event at t=2 only.
+        assert!((g.at(1.5) - 1.0).abs() < 1e-12);
+        assert!((g.at(2.0) - 0.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Evaluation metrics (Appendix C.2): Harrell's C-index, the integrated
+//! Brier score with IPCW weights, Kaplan–Meier / Nelson–Aalen estimators,
+//! the Breslow baseline hazard, and support-recovery precision/recall/F1.
+
+pub mod breslow;
+pub mod brier;
+pub mod cindex;
+pub mod f1;
+pub mod km;
+
+pub use breslow::BreslowBaseline;
+pub use brier::{brier_score, integrated_brier_score};
+pub use cindex::concordance_index;
+pub use f1::{support_f1, SupportScores};
+pub use km::KaplanMeier;

@@ -1,0 +1,46 @@
+//! Optimizers for the (regularized) CPH problem.
+//!
+//! The paper's methods — coordinate descent on the **quadratic** (Eq. 15)
+//! and **cubic** (Eq. 16) surrogate functions — plus every baseline from
+//! Section 2: exact Newton, quasi Newton (Simon et al. / glmnet-style),
+//! proximal Newton (skglm-style diagonal bound), and gradient descent.
+//!
+//! All optimizers implement [`Optimizer::fit`] and record a [`Trace`] of
+//! (iteration, wall-clock, loss) so the Figure-1 experiments can plot
+//! loss vs. iterations and loss vs. time for every method uniformly.
+
+pub mod cubic;
+pub mod gradient_descent;
+pub mod newton;
+pub mod nonconvex;
+pub mod objective;
+pub mod prox;
+pub mod prox_newton;
+pub mod quadratic;
+pub mod quasi_newton;
+
+pub use cubic::CubicSurrogate;
+pub use gradient_descent::GradientDescent;
+pub use newton::ExactNewton;
+pub use objective::{FitConfig, FitResult, Objective, Optimizer, Trace};
+pub use prox_newton::ProxNewton;
+pub use quadratic::QuadraticSurrogate;
+pub use quasi_newton::QuasiNewton;
+
+/// Construct an optimizer by name (CLI / experiment harness).
+pub fn by_name(name: &str) -> Box<dyn Optimizer> {
+    match name {
+        "quadratic" => Box::new(QuadraticSurrogate::default()),
+        "cubic" => Box::new(CubicSurrogate::default()),
+        "newton" => Box::new(ExactNewton::default()),
+        "newton-ls" => Box::new(ExactNewton { line_search: true }),
+        "quasi-newton" => Box::new(QuasiNewton::default()),
+        "prox-newton" => Box::new(ProxNewton::default()),
+        "gd" => Box::new(GradientDescent::default()),
+        other => panic!("unknown optimizer {other:?}"),
+    }
+}
+
+/// Names usable with [`by_name`].
+pub const ALL_OPTIMIZERS: [&str; 6] =
+    ["quadratic", "cubic", "newton", "quasi-newton", "prox-newton", "gd"];

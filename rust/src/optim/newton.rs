@@ -1,0 +1,195 @@
+//! Exact Newton baseline (Section 2, method 1).
+//!
+//! Full β-space Hessian + Cholesky solve per iteration. Without line
+//! search this method diverges from β = 0 under weak regularization —
+//! the paper's Figure-1 blow-up — because second derivatives vanish far
+//! from the minimizer and the step overshoots. `line_search = true`
+//! enables backtracking (the ablation the paper says one wants to avoid
+//! paying for).
+
+use super::objective::{FitConfig, FitResult, Optimizer, Stopper};
+use crate::cox::derivatives::{beta_gradient, beta_hessian};
+use crate::cox::loss::loss_for_eta;
+use crate::cox::{CoxProblem, CoxState};
+use crate::linalg::{Cholesky, Matrix};
+
+/// Exact Newton. ℓ1 is not supported (the paper: "the exact Newton method
+/// cannot be directly applied" to ℓ1 problems); `fit` panics if λ1 > 0.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactNewton {
+    pub line_search: bool,
+}
+
+impl Optimizer for ExactNewton {
+    fn name(&self) -> &'static str {
+        if self.line_search {
+            "exact-newton+ls"
+        } else {
+            "exact-newton"
+        }
+    }
+
+    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+        let obj = config.objective;
+        assert!(
+            obj.l1 == 0.0,
+            "exact Newton does not handle ℓ1 (non-smooth) objectives"
+        );
+        let p = problem.p();
+        let mut stopper = Stopper::new();
+        let mut iters = 0;
+        for it in 0..config.max_iters {
+            let mut g = beta_gradient(problem, &state);
+            let mut h: Matrix = beta_hessian(problem, &state);
+            for l in 0..p {
+                g[l] += 2.0 * obj.l2 * state.beta[l];
+                h.set(l, l, h.get(l, l) + 2.0 * obj.l2);
+            }
+            // Numerical breakdown (η overflowed): record divergence, stop.
+            if g.iter().any(|v| !v.is_finite()) || h.data.iter().any(|v| !v.is_finite()) {
+                stopper.trace.diverged = true;
+                break;
+            }
+            let (chol, _jitter) = Cholesky::factor_with_jitter(&h, 1e-10);
+            let step = chol.solve(&g);
+
+            let mut t = 1.0;
+            if self.line_search {
+                // Armijo backtracking on the penalized objective.
+                let f0 = obj.value(problem, &state);
+                let g_dot_d: f64 = g.iter().zip(&step).map(|(a, b)| -a * b).sum();
+                loop {
+                    let trial: Vec<f64> = state
+                        .beta
+                        .iter()
+                        .zip(&step)
+                        .map(|(b, s)| b - t * s)
+                        .collect();
+                    let eta = problem.x.matvec(&trial);
+                    let f = loss_for_eta(problem, &eta)
+                        + obj.l2 * trial.iter().map(|b| b * b).sum::<f64>();
+                    if f <= f0 + 1e-4 * t * g_dot_d || t < 1e-10 {
+                        break;
+                    }
+                    t *= 0.5;
+                }
+            }
+            let new_beta: Vec<f64> =
+                state.beta.iter().zip(&step).map(|(b, s)| b - t * s).collect();
+            state.set_beta(problem, &new_beta);
+
+            iters = it + 1;
+            let loss = obj.value(problem, &state);
+            if stopper.step(it, loss, config) {
+                break;
+            }
+        }
+        let objective_value = obj.value(problem, &state);
+        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::objective::Objective;
+    use crate::optim::QuadraticSurrogate;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64, beta_scale: f64) -> CoxProblem {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        // Plant a real signal so the unpenalized optimum is away from 0.
+        let time: Vec<f64> = (0..n)
+            .map(|i| {
+                let eta: f64 = (0..p).map(|j| cols[j][i]).sum::<f64>() * beta_scale;
+                rng.exponential() / eta.exp()
+            })
+            .collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.8)).collect();
+        CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r"))
+    }
+
+    #[test]
+    fn converges_with_strong_l2_near_optimum() {
+        let pr = random_problem(80, 3, 1, 0.2);
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 5.0 },
+            max_iters: 50,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        let rn = ExactNewton::default().fit(&pr, &cfg);
+        let rq = QuadraticSurrogate.fit(
+            &pr,
+            &FitConfig { max_iters: 2000, tol: 1e-13, ..cfg.clone() },
+        );
+        assert!(!rn.trace.diverged);
+        assert!(
+            (rn.objective_value - rq.objective_value).abs() < 1e-5,
+            "newton {} vs cd {}",
+            rn.objective_value,
+            rq.objective_value
+        );
+    }
+
+    #[test]
+    fn blows_up_on_binarized_data_with_weak_regularization() {
+        // The paper's Figure-1 phenomenon: quantile-binarized features
+        // include rare indicators with near-zero curvature at β = 0, so
+        // the full Newton step overshoots and the loss explodes.
+        use crate::data::binarize::{binarize, BinarizeConfig};
+        use crate::data::datasets;
+        let mut s = datasets::spec("flchain");
+        s.n = 150;
+        let raw = datasets::generate_stand_in(&s, 5);
+        let ds = binarize(&raw, &BinarizeConfig { max_quantiles: 10, ..Default::default() });
+        let pr = CoxProblem::new(&ds);
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 0.01 },
+            max_iters: 6,
+            tol: 1e-14,
+            ..Default::default()
+        };
+        let res = ExactNewton::default().fit(&pr, &cfg);
+        assert!(
+            res.trace.ever_increased(1e-6) || res.trace.diverged,
+            "expected plain Newton blow-up; losses {:?}",
+            res.trace.points.iter().map(|p| p.loss).collect::<Vec<_>>()
+        );
+        // Our surrogate on the same problem stays monotone (the contrast
+        // the paper draws in Figure 1).
+        let rc = crate::optim::CubicSurrogate.fit(
+            &pr,
+            &FitConfig { max_iters: 10, ..cfg.clone() },
+        );
+        assert!(rc.trace.monotone(1e-9));
+    }
+
+    #[test]
+    fn line_search_newton_is_monotone() {
+        let pr = random_problem(100, 5, 2, 1.5);
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 0.01 },
+            max_iters: 20,
+            tol: 1e-14,
+            ..Default::default()
+        };
+        let ls = ExactNewton { line_search: true }.fit(&pr, &cfg);
+        assert!(ls.trace.monotone(1e-8), "line-search Newton must be monotone");
+    }
+
+    #[test]
+    #[should_panic(expected = "exact Newton does not handle")]
+    fn rejects_l1() {
+        let pr = random_problem(20, 2, 3, 0.2);
+        let cfg = FitConfig {
+            objective: Objective { l1: 1.0, l2: 0.0 },
+            ..Default::default()
+        };
+        ExactNewton::default().fit(&pr, &cfg);
+    }
+}

@@ -1,0 +1,179 @@
+//! Shared optimizer interface: objective spec, fit config, trace, result.
+
+use crate::cox::loss::penalized_loss;
+use crate::cox::{CoxProblem, CoxState};
+use std::time::Instant;
+
+/// The regularized objective ℓ(β) + λ1‖β‖₁ + λ2‖β‖₂².
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Objective {
+    pub l1: f64,
+    pub l2: f64,
+}
+
+impl Objective {
+    pub fn value(&self, problem: &CoxProblem, state: &CoxState) -> f64 {
+        penalized_loss(problem, state, self.l1, self.l2)
+    }
+}
+
+/// Stopping / recording configuration.
+#[derive(Clone, Debug)]
+pub struct FitConfig {
+    pub objective: Objective,
+    /// Maximum outer iterations (CD sweeps, Newton steps, ...).
+    pub max_iters: usize,
+    /// Relative loss-decrease tolerance.
+    pub tol: f64,
+    /// Wall-clock budget in seconds (0 = unlimited).
+    pub budget_secs: f64,
+    /// Record a loss-history trace (small overhead: one loss eval/iter).
+    pub record_trace: bool,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            objective: Objective::default(),
+            max_iters: 200,
+            tol: 1e-9,
+            budget_secs: 0.0,
+            record_trace: true,
+        }
+    }
+}
+
+/// One trace point: (iteration index, seconds since fit start, loss).
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub secs: f64,
+    pub loss: f64,
+}
+
+/// Loss history with divergence bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    pub diverged: bool,
+    pub converged: bool,
+}
+
+impl Trace {
+    pub fn push(&mut self, iter: usize, start: Instant, loss: f64) {
+        self.points.push(TracePoint { iter, secs: start.elapsed().as_secs_f64(), loss });
+    }
+
+    /// True if the loss ever increased from one record to the next by more
+    /// than `tol` (the Newton blow-up signature in Figure 1).
+    pub fn ever_increased(&self, tol: f64) -> bool {
+        self.points.windows(2).any(|w| w[1].loss > w[0].loss + tol)
+    }
+
+    /// Monotone non-increasing (the paper's guarantee for surrogates).
+    pub fn monotone(&self, tol: f64) -> bool {
+        !self.ever_increased(tol)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+}
+
+/// Fit output.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub beta: Vec<f64>,
+    pub trace: Trace,
+    /// Final penalized objective value.
+    pub objective_value: f64,
+    pub iterations: usize,
+}
+
+/// The optimizer interface shared by our methods and every baseline.
+pub trait Optimizer {
+    /// Human-readable name (figure legends).
+    fn name(&self) -> &'static str;
+
+    /// Fit from β = 0 (the paper's initialization everywhere).
+    fn fit(&self, problem: &CoxProblem, config: &FitConfig) -> FitResult {
+        let state = CoxState::zeros(problem);
+        self.fit_from(problem, state, config)
+    }
+
+    /// Fit from a warm-started state.
+    fn fit_from(&self, problem: &CoxProblem, state: CoxState, config: &FitConfig) -> FitResult;
+}
+
+/// Shared stopping logic for iterative fits.
+pub(crate) struct Stopper {
+    start: Instant,
+    prev_loss: f64,
+    pub trace: Trace,
+}
+
+impl Stopper {
+    pub fn new() -> Self {
+        Stopper { start: Instant::now(), prev_loss: f64::INFINITY, trace: Trace::default() }
+    }
+
+    /// Record the end-of-iteration loss; returns true if fitting should
+    /// stop (converged, diverged, or out of budget).
+    pub fn step(&mut self, iter: usize, loss: f64, config: &FitConfig) -> bool {
+        if config.record_trace {
+            self.trace.push(iter, self.start, loss);
+        }
+        if !loss.is_finite() || loss > 1e300 {
+            self.trace.diverged = true;
+            return true;
+        }
+        let rel = (self.prev_loss - loss).abs() / (self.prev_loss.abs() + 1.0);
+        let converged = self.prev_loss.is_finite() && rel < config.tol;
+        self.prev_loss = loss;
+        if converged {
+            self.trace.converged = true;
+            return true;
+        }
+        if config.budget_secs > 0.0 && self.start.elapsed().as_secs_f64() > config.budget_secs {
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_monotone_detection() {
+        let mut t = Trace::default();
+        let start = Instant::now();
+        for (i, l) in [5.0, 4.0, 3.5].iter().enumerate() {
+            t.push(i, start, *l);
+        }
+        assert!(t.monotone(1e-12));
+        t.push(3, start, 4.2);
+        assert!(t.ever_increased(1e-12));
+        assert_eq!(t.final_loss(), 4.2);
+    }
+
+    #[test]
+    fn stopper_converges_on_flat_loss() {
+        let mut s = Stopper::new();
+        let cfg = FitConfig { tol: 1e-6, ..Default::default() };
+        assert!(!s.step(0, 10.0, &cfg));
+        assert!(!s.step(1, 9.0, &cfg));
+        assert!(s.step(2, 9.0 - 1e-9, &cfg));
+        assert!(s.trace.converged);
+    }
+
+    #[test]
+    fn stopper_flags_divergence() {
+        let mut s = Stopper::new();
+        let cfg = FitConfig::default();
+        assert!(!s.step(0, 10.0, &cfg));
+        assert!(s.step(1, f64::INFINITY, &cfg));
+        assert!(s.trace.diverged);
+    }
+}

@@ -1,0 +1,137 @@
+//! Artifact manifest parsing (TSV — no serde offline) and shape-bucket
+//! selection.
+//!
+//! `manifest.tsv` columns: name, file, n, p, comma-joined `dtype:shape`
+//! input signatures, one row per lowered entry point.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub p: usize,
+    pub input_sig: Vec<String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e} (run `make artifacts`)"))?;
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(format!("manifest line {} malformed: {line:?}", lineno + 1));
+            }
+            let spec = ArtifactSpec {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                n: cols[2].parse().map_err(|e| format!("bad n: {e}"))?,
+                p: cols[3].parse().map_err(|e| format!("bad p: {e}"))?,
+                input_sig: cols[4].split(',').map(|s| s.to_string()).collect(),
+            };
+            entries.insert(spec.name.clone(), spec);
+        }
+        if entries.is_empty() {
+            return Err("manifest is empty".into());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Smallest per-coordinate bucket with capacity >= n, by entry prefix
+    /// (e.g. "coord_derivs").
+    pub fn bucket_for_n(&self, prefix: &str, n: usize) -> Option<&ArtifactSpec> {
+        self.entries
+            .values()
+            .filter(|s| s.name.starts_with(prefix) && !s.name.contains("_p") && s.n >= n)
+            .min_by_key(|s| s.n)
+    }
+
+    /// Smallest (n, p) bucket covering the problem, for batched entries.
+    pub fn bucket_for_np(&self, prefix: &str, n: usize, p: usize) -> Option<&ArtifactSpec> {
+        self.entries
+            .values()
+            .filter(|s| s.name.starts_with(prefix) && s.n >= n && s.p >= p)
+            .min_by_key(|s| (s.n, s.p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_manifest_{}", lines.len()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_rows() {
+        let dir = write_manifest(
+            "coord_derivs_n1024\tcoord_derivs_n1024.hlo.txt\t1024\t1\tfloat32:1024,int32:1024\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let s = &m.entries["coord_derivs_n1024"];
+        assert_eq!(s.n, 1024);
+        assert_eq!(s.input_sig.len(), 2);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let dir = write_manifest(
+            "coord_derivs_n1024\ta\t1024\t1\tx:1\n\
+             coord_derivs_n4096\tb\t4096\t1\tx:1\n\
+             all_derivs_n1024_p128\tc\t1024\t128\tx:1\n\
+             all_derivs_n4096_p512\td\t4096\t512\tx:1\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for_n("coord_derivs", 500).unwrap().n, 1024);
+        assert_eq!(m.bucket_for_n("coord_derivs", 1025).unwrap().n, 4096);
+        assert!(m.bucket_for_n("coord_derivs", 999999).is_none());
+        let np = m.bucket_for_np("all_derivs", 1000, 200).unwrap();
+        assert_eq!((np.n, np.p), (4096, 512));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = write_manifest("too\tfew\tcols\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration check against the actual build output when it exists.
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.bucket_for_n("coord_derivs", 1).is_some());
+            assert!(m.bucket_for_n("cox_loss", 1).is_some());
+            assert!(m.bucket_for_n("lipschitz", 1).is_some());
+            assert!(m.bucket_for_np("all_derivs", 1, 1).is_some());
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT CPU client wrapper: lazy compilation and typed execution of the
+//! AOT artifacts. Adapted from /opt/xla-example/load_hlo (the smoke-
+//! verified reference wiring for this image).
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, manifest, executables: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec: &ArtifactSpec = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// elements of the (return_tuple=True) result.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of compiled (cached) executables — used by perf telemetry.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+}
+
+/// f32 vector literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// i32 vector literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 matrix literal with shape (rows, cols), from column-major f64 data.
+pub fn lit_f32_matrix(rows: usize, cols: usize, col_major: &[f64]) -> Result<xla::Literal> {
+    // XLA expects row-major contiguous data for the default layout.
+    let mut row_major = vec![0.0_f32; rows * cols];
+    for c in 0..cols {
+        for r in 0..rows {
+            row_major[r * cols + c] = col_major[c * rows + r] as f32;
+        }
+    }
+    Ok(xla::Literal::vec1(&row_major).reshape(&[rows as i64, cols as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(XlaRuntime::new(dir).expect("runtime"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_client_boots_and_compiles_loss() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.platform().is_empty());
+        // cox_loss on trivial data: n=1024 bucket, one event at index 0.
+        let n = 1024;
+        let mut w = vec![0.0_f32; n];
+        let mut v = vec![0.0_f32; n];
+        let mut delta = vec![0.0_f32; n];
+        let tie_end: Vec<i32> = (0..n as i32).collect();
+        // two samples: w=1 each; event at first → loss = ln(1) = 0
+        w[0] = 1.0;
+        w[1] = 1.0;
+        v[0] = 0.0;
+        v[1] = 0.0;
+        delta[0] = 1.0;
+        let out = rt
+            .execute(
+                "cox_loss_n1024",
+                &[lit_f32(&w), lit_f32(&v), lit_f32(&delta), lit_i32(&tie_end)],
+            )
+            .unwrap();
+        let loss: f32 = out[0].to_vec::<f32>().unwrap()[0];
+        // Risk set of sample 0 is {0} → log(1) − 0 = 0.
+        assert!(loss.abs() < 1e-6, "loss={loss}");
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn matrix_literal_round_trip() {
+        let lit = lit_f32_matrix(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        // column-major input [c0=(1,2), c1=(3,4), c2=(5,6)] → row major
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+}

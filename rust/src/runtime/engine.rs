@@ -1,0 +1,303 @@
+//! The compute-engine abstraction: the same Cox quantities served either
+//! by the native Rust kernels (sequential CD hot path) or by the AOT-
+//! compiled XLA artifacts (batched screening / parity proof that the
+//! three layers compose). Integration tests assert parity.
+
+use super::client::{lit_f32, lit_f32_matrix, lit_i32, XlaRuntime};
+use crate::cox::derivatives::{self, CoordDerivs, Workspace};
+use crate::cox::lipschitz::{self, LipschitzPair};
+use crate::cox::{loss, CoxProblem, CoxState};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Cox quantities every optimizer needs, engine-agnostic.
+pub trait CoxEngine {
+    fn name(&self) -> &'static str;
+
+    /// Unpenalized loss ℓ(β).
+    fn loss(&self, problem: &CoxProblem, state: &CoxState) -> Result<f64>;
+
+    /// (d1, d2, d3) at one coordinate.
+    fn coord_derivs(&self, problem: &CoxProblem, state: &CoxState, l: usize)
+        -> Result<CoordDerivs>;
+
+    /// Batched (d1\[p\], d2\[p\]) over all coordinates.
+    fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)>;
+
+    /// Lipschitz constants for one coordinate (Theorem 3.4).
+    fn lipschitz(&self, problem: &CoxProblem, l: usize) -> Result<LipschitzPair>;
+}
+
+/// In-process Rust kernels (the default request path).
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl CoxEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn loss(&self, problem: &CoxProblem, state: &CoxState) -> Result<f64> {
+        Ok(loss::loss(problem, state))
+    }
+
+    fn coord_derivs(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        l: usize,
+    ) -> Result<CoordDerivs> {
+        Ok(derivatives::coord_derivs(problem, state, l))
+    }
+
+    fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)> {
+        let mut ws = Workspace::default();
+        Ok(derivatives::all_coord_d1_d2(problem, state, &mut ws))
+    }
+
+    fn lipschitz(&self, problem: &CoxProblem, l: usize) -> Result<LipschitzPair> {
+        Ok(lipschitz::coord_lipschitz(problem, l))
+    }
+}
+
+/// AOT-compiled XLA artifacts on the PJRT CPU client.
+pub struct XlaEngine {
+    rt: XlaRuntime,
+}
+
+impl XlaEngine {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        Ok(XlaEngine { rt: XlaRuntime::new(artifact_dir)? })
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.rt
+    }
+
+    /// Padded per-sample tensors for an n-bucket: (w, v, delta, tie_end).
+    fn padded_base(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        bucket_n: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let n = problem.n();
+        assert!(bucket_n >= n);
+        let mut w = vec![0.0_f32; bucket_n];
+        let mut v = vec![0.0_f32; bucket_n];
+        let mut delta = vec![0.0_f32; bucket_n];
+        let mut tie_end = vec![(bucket_n - 1) as i32; bucket_n];
+        for k in 0..n {
+            w[k] = state.w[k] as f32;
+            v[k] = (state.eta[k] - state.shift) as f32;
+            delta[k] = problem.delta[k] as f32;
+            tie_end[k] = (problem.risk_end(k) - 1) as i32;
+        }
+        (w, v, delta, tie_end)
+    }
+}
+
+impl CoxEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn loss(&self, problem: &CoxProblem, state: &CoxState) -> Result<f64> {
+        let spec = self
+            .rt
+            .manifest
+            .bucket_for_n("cox_loss", problem.n())
+            .ok_or_else(|| anyhow!("no cox_loss bucket for n={}", problem.n()))?;
+        let (w, v, delta, tie_end) = self.padded_base(problem, state, spec.n);
+        let name = spec.name.clone();
+        let out = self.rt.execute(
+            &name,
+            &[lit_f32(&w), lit_f32(&v), lit_f32(&delta), lit_i32(&tie_end)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[0] as f64)
+    }
+
+    fn coord_derivs(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        l: usize,
+    ) -> Result<CoordDerivs> {
+        let spec = self
+            .rt
+            .manifest
+            .bucket_for_n("coord_derivs", problem.n())
+            .ok_or_else(|| anyhow!("no coord_derivs bucket for n={}", problem.n()))?;
+        let bucket_n = spec.n;
+        let name = spec.name.clone();
+        let (w, _v, delta, tie_end) = self.padded_base(problem, state, bucket_n);
+        let mut x = vec![0.0_f32; bucket_n];
+        let col = problem.x.col(l);
+        for k in 0..problem.n() {
+            x[k] = col[k] as f32;
+        }
+        let out = self.rt.execute(
+            &name,
+            &[lit_f32(&w), lit_f32(&x), lit_f32(&delta), lit_i32(&tie_end)],
+        )?;
+        let d = out[0].to_vec::<f32>()?;
+        Ok(CoordDerivs { d1: d[0] as f64, d2: d[1] as f64, d3: d[2] as f64 })
+    }
+
+    fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)> {
+        let n = problem.n();
+        let p = problem.p();
+        let spec = self
+            .rt
+            .manifest
+            .bucket_for_np("all_derivs", n, p)
+            .ok_or_else(|| anyhow!("no all_derivs bucket for n={n}, p={p}"))?;
+        let (bn, bp) = (spec.n, spec.p);
+        let name = spec.name.clone();
+        let (w, _v, delta, tie_end) = self.padded_base(problem, state, bn);
+        // Padded (bn, bp) matrix in column-major f64 for the helper.
+        let mut col_major = vec![0.0_f64; bn * bp];
+        for c in 0..p {
+            let col = problem.x.col(c);
+            col_major[c * bn..c * bn + n].copy_from_slice(col);
+        }
+        let x_lit = lit_f32_matrix(bn, bp, &col_major)?;
+        let out = self.rt.execute(
+            &name,
+            &[lit_f32(&w), x_lit, lit_f32(&delta), lit_i32(&tie_end)],
+        )?;
+        let d1_full = out[0].to_vec::<f32>()?;
+        let d2_full = out[1].to_vec::<f32>()?;
+        Ok((
+            d1_full[..p].iter().map(|&v| v as f64).collect(),
+            d2_full[..p].iter().map(|&v| v as f64).collect(),
+        ))
+    }
+
+    fn lipschitz(&self, problem: &CoxProblem, l: usize) -> Result<LipschitzPair> {
+        let spec = self
+            .rt
+            .manifest
+            .bucket_for_n("lipschitz", problem.n())
+            .ok_or_else(|| anyhow!("no lipschitz bucket for n={}", problem.n()))?;
+        let bn = spec.n;
+        let name = spec.name.clone();
+        let n = problem.n();
+        let mut x = vec![0.0_f32; bn];
+        let mut delta = vec![0.0_f32; bn];
+        let mut tie_end = vec![(bn - 1) as i32; bn];
+        let mut valid = vec![0.0_f32; bn];
+        let col = problem.x.col(l);
+        for k in 0..n {
+            x[k] = col[k] as f32;
+            delta[k] = problem.delta[k] as f32;
+            tie_end[k] = (problem.risk_end(k) - 1) as i32;
+            valid[k] = 1.0;
+        }
+        let out = self.rt.execute(
+            &name,
+            &[lit_f32(&x), lit_f32(&delta), lit_i32(&tie_end), lit_f32(&valid)],
+        )?;
+        let v = out[0].to_vec::<f32>()?;
+        Ok(LipschitzPair { l2: v[0] as f64, l3: v[1] as f64 })
+    }
+}
+
+/// Engine factory for the CLI.
+pub fn engine_by_name(name: &str, artifact_dir: &Path) -> Result<Box<dyn CoxEngine>> {
+    match name {
+        "native" => Ok(Box::new(NativeEngine)),
+        "xla" => Ok(Box::new(XlaEngine::new(artifact_dir)?)),
+        other => Err(anyhow!("unknown engine {other:?} (native|xla)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64, ties: bool) -> CoxProblem {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n)
+            .map(|_| {
+                let t = rng.uniform_range(0.5, 9.5);
+                if ties {
+                    (t * 2.0).round() / 2.0
+                } else {
+                    t
+                }
+            })
+            .collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r"))
+    }
+
+    fn xla() -> Option<XlaEngine> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(XlaEngine::new(dir).expect("xla engine"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn parity_loss() {
+        let Some(xe) = xla() else { return };
+        let ne = NativeEngine;
+        for &ties in &[false, true] {
+            let pr = random_problem(200, 4, 42, ties);
+            let st = CoxState::from_beta(&pr, &[0.3, -0.2, 0.1, 0.4]);
+            let a = ne.loss(&pr, &st).unwrap();
+            let b = xe.loss(&pr, &st).unwrap();
+            assert!((a - b).abs() / (a.abs() + 1.0) < 1e-4, "native {a} vs xla {b}");
+        }
+    }
+
+    #[test]
+    fn parity_coord_derivs() {
+        let Some(xe) = xla() else { return };
+        let ne = NativeEngine;
+        let pr = random_problem(300, 3, 43, true);
+        let st = CoxState::from_beta(&pr, &[0.2, -0.5, 0.0]);
+        for l in 0..3 {
+            let a = ne.coord_derivs(&pr, &st, l).unwrap();
+            let b = xe.coord_derivs(&pr, &st, l).unwrap();
+            assert!((a.d1 - b.d1).abs() < 1e-2 * (a.d1.abs() + 1.0), "d1 {} vs {}", a.d1, b.d1);
+            assert!((a.d2 - b.d2).abs() < 1e-2 * (a.d2.abs() + 1.0), "d2 {} vs {}", a.d2, b.d2);
+            assert!((a.d3 - b.d3).abs() < 2e-2 * (a.d3.abs() + 1.0), "d3 {} vs {}", a.d3, b.d3);
+        }
+    }
+
+    #[test]
+    fn parity_all_derivs() {
+        let Some(xe) = xla() else { return };
+        let ne = NativeEngine;
+        let pr = random_problem(150, 6, 44, false);
+        let st = CoxState::from_beta(&pr, &[0.1, 0.2, -0.1, 0.0, 0.3, -0.2]);
+        let (a1, a2) = ne.all_d1_d2(&pr, &st).unwrap();
+        let (b1, b2) = xe.all_d1_d2(&pr, &st).unwrap();
+        for l in 0..6 {
+            assert!((a1[l] - b1[l]).abs() < 1e-2 * (a1[l].abs() + 1.0), "{} vs {}", a1[l], b1[l]);
+            assert!((a2[l] - b2[l]).abs() < 1e-2 * (a2[l].abs() + 1.0), "{} vs {}", a2[l], b2[l]);
+        }
+    }
+
+    #[test]
+    fn parity_lipschitz() {
+        let Some(xe) = xla() else { return };
+        let ne = NativeEngine;
+        let pr = random_problem(250, 3, 45, true);
+        for l in 0..3 {
+            let a = ne.lipschitz(&pr, l).unwrap();
+            let b = xe.lipschitz(&pr, l).unwrap();
+            assert!((a.l2 - b.l2).abs() < 1e-3 * (a.l2 + 1.0), "{} vs {}", a.l2, b.l2);
+            assert!((a.l3 - b.l3).abs() < 1e-3 * (a.l3 + 1.0), "{} vs {}", a.l3, b.l3);
+        }
+    }
+}

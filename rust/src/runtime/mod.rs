@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust request path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the
+//! binary is self-contained: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use client::XlaRuntime;
+pub use engine::{CoxEngine, NativeEngine, XlaEngine};

@@ -1,0 +1,161 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another option
+                    // or missing, in which case it is a bare flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => out.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Bare flag present (`--verbose`)? Options with values also count.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI boundary, so panicking is the right behavior).
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("invalid value for --{key}: {v:?} ({e})")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .get(key)
+            .unwrap_or_else(|| panic!("missing required option --{key}"));
+        v.parse::<T>()
+            .unwrap_or_else(|e| panic!("invalid value for --{key}: {v:?} ({e})"))
+    }
+
+    /// Comma-separated list of T.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T::Err: std::fmt::Display,
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>()
+                        .unwrap_or_else(|e| panic!("invalid list item for --{key}: {s:?} ({e})"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["fit", "--dataset", "flchain", "--l2=5.0", "--verbose"]);
+        assert_eq!(a.positional, vec!["fit"]);
+        assert_eq!(a.get("dataset"), Some("flchain"));
+        assert_eq!(a.get_or::<f64>("l2", 0.0), 5.0);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get_or::<usize>("iters", 10), 10);
+        assert_eq!(a.str_or("method", "cubic"), "cubic");
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        // "-1.5" does not start with "--" so it is consumed as a value.
+        let a = parse(&["--shift", "-1.5"]);
+        assert_eq!(a.get_or::<f64>("shift", 0.0), -1.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--ks", "1,2,5"]);
+        assert_eq!(a.list_or::<usize>("ks", &[9]), vec![1, 2, 5]);
+        assert_eq!(a.list_or::<usize>("absent", &[9]), vec![9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing required option")]
+    fn require_missing_panics() {
+        let a = parse(&[]);
+        let _: usize = a.require("k");
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--dry-run", "--k", "3"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_or::<usize>("k", 0), 3);
+    }
+}

@@ -1,0 +1,201 @@
+//! Benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, calibrated iteration counts, robust statistics (median + MAD),
+//! and a one-line-per-benchmark report compatible with shell pipelines.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub mad_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Human units for a nanosecond quantity.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed per-benchmark time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher (used under `FASTSURVIVAL_BENCH_QUICK=1`, e.g. CI).
+    pub fn from_env() -> Self {
+        if std::env::var("FASTSURVIVAL_BENCH_QUICK").as_deref() == Ok("1") {
+            Bencher {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(250),
+                min_samples: 5,
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which must consume its output (use `std::hint::black_box`).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Warmup + calibration: find iters per sample so a sample ~2ms.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters_per_sample = ((2e6 / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let budget = Instant::now();
+        while budget.elapsed() < self.measure || samples.len() < self.min_samples {
+            let s = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+
+        let mut sorted = samples.clone();
+        let med = median(&mut sorted);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut devs: Vec<f64> = samples.iter().map(|x| (x - med).abs()).collect();
+        let mad = median(&mut devs);
+
+        let stats = Stats {
+            name: name.to_string(),
+            samples,
+            median_ns: med,
+            mean_ns: mean,
+            min_ns: min,
+            mad_ns: mad,
+            iters_per_sample,
+        };
+        println!(
+            "bench {:<52} median {:>12}  min {:>12}  ±{:>10}  (n={} x{})",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.mad_ns),
+            stats.samples.len(),
+            stats.iters_per_sample,
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All collected stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Render a closing summary table.
+    pub fn summary(&self, title: &str) {
+        println!("\n== {title} ==");
+        for s in &self.results {
+            println!("  {:<52} {:>12}/iter", s.name, fmt_ns(s.median_ns));
+        }
+    }
+}
+
+/// Measure a single closure once (for coarse end-to-end timings in the
+/// experiment harness, not microbenches).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(10),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median_ns > 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(d.as_nanos() > 0);
+    }
+}

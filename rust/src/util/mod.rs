@@ -1,0 +1,13 @@
+//! Small infrastructure substrates.
+//!
+//! The offline build has no access to `rand`, `clap`, `criterion`,
+//! `proptest`, or `serde`, so this module provides minimal, well-tested
+//! in-repo replacements: a PRNG, an argument parser, a scoped thread pool,
+//! a property-testing helper, a benchmark harness, and a table renderer.
+
+pub mod args;
+pub mod bench;
+pub mod parallel;
+pub mod proptest;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,105 @@
+//! Scoped data-parallel helpers over `std::thread` (no tokio offline).
+//!
+//! The experiment harness fans out independent work items (CV folds,
+//! figure cells, bootstrap trees) across cores; everything here is
+//! fork-join with deterministic output ordering.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (respects `FASTSURVIVAL_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("FASTSURVIVAL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel, preserving input order in the output.
+///
+/// Work stealing is a shared atomic cursor; each worker grabs the next
+/// index. `f` must be `Sync` (called concurrently) and items are accessed
+/// by shared reference.
+pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(items: &[T], f: F) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Parallel map over an index range 0..n.
+pub fn par_map_indices<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec<R> {
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<usize> = vec![];
+        let out: Vec<usize> = par_map(&items, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        let out = par_map(&[41usize], |&x| x + 1);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn indices_helper() {
+        let out = par_map_indices(10, |i| i * i);
+        assert_eq!(out[9], 81);
+    }
+
+    #[test]
+    fn heavy_items_all_complete() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = par_map(&items, |&x| {
+            // small CPU-bound task
+            let mut acc = x;
+            for i in 0..1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal property-based testing harness (no `proptest` crate offline).
+//!
+//! [`check`] runs a property over many randomized cases drawn from a
+//! generator; on failure it reports the seed and case index so the exact
+//! failing input can be regenerated deterministically. [`check_shrink`]
+//! additionally performs greedy shrinking when the case type supports it.
+
+use crate::util::rng::Rng;
+
+/// Default number of randomized cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with seed + case
+/// index on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], but greedily shrinks the failing case with `shrink`
+/// (which returns smaller candidate inputs) before reporting.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing smaller candidate.
+            let mut current = input.clone();
+            let mut msg = first_msg;
+            'outer: loop {
+                for cand in shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}): {msg}\nshrunk input: {current:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers used by the cox/optim property tests.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Random vector of length in [lo, hi] with N(0,1) entries.
+    pub fn normal_vec(rng: &mut Rng, lo: usize, hi: usize) -> Vec<f64> {
+        let n = lo + rng.below(hi - lo + 1);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Random vector of fixed length with entries in [lo, hi).
+    pub fn uniform_vec(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.uniform_range(lo, hi)).collect()
+    }
+
+    /// Random event indicators with at least one event.
+    pub fn events(rng: &mut Rng, n: usize, p_event: f64) -> Vec<bool> {
+        let mut d: Vec<bool> = (0..n).map(|_| rng.bernoulli(p_event)).collect();
+        if !d.iter().any(|&x| x) {
+            let i = rng.below(n);
+            d[i] = true;
+        }
+        d
+    }
+
+    /// Random observation times, possibly with ties (quantized).
+    pub fn times(rng: &mut Rng, n: usize, with_ties: bool) -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                let t = rng.uniform_range(0.1, 10.0);
+                if with_ties {
+                    (t * 4.0).round() / 4.0
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-nonneg",
+            1,
+            32,
+            |r| gen::uniform_vec(r, 8, 0.0, 1.0),
+            |xs| {
+                if xs.iter().sum::<f64>() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_reports() {
+        check("always-fails", 2, 4, |r| r.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: 0")]
+    fn shrinking_minimizes() {
+        // Property "x < 0" fails for any u64; shrinker halves toward 0, so
+        // the reported counterexample must be exactly 0.
+        check_shrink(
+            "lt-zero",
+            3,
+            1,
+            |r| r.below(1000) as u64 + 1,
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |&x| if x < u64::MAX { Err(format!("x={x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn events_always_has_event() {
+        let mut r = Rng::new(4);
+        for _ in 0..50 {
+            let d = gen::events(&mut r, 10, 0.01);
+            assert!(d.iter().any(|&x| x));
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Edge cases and failure modes: degenerate datasets, extreme ties,
+//! constant features, single samples, all-censored data.
+
+use fastsurvival::cox::derivatives::{coord_derivs, Workspace, all_coord_d1_d2};
+use fastsurvival::cox::lipschitz::coord_lipschitz;
+use fastsurvival::cox::loss::loss;
+use fastsurvival::cox::{CoxProblem, CoxState};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::linalg::Matrix;
+use fastsurvival::metrics::{concordance_index, KaplanMeier};
+use fastsurvival::optim::{CubicSurrogate, FitConfig, Objective, Optimizer, QuadraticSurrogate};
+use fastsurvival::select::{BeamSearch, VariableSelector};
+
+fn ds(x_cols: &[Vec<f64>], time: Vec<f64>, event: Vec<bool>) -> SurvivalDataset {
+    SurvivalDataset::new(Matrix::from_columns(x_cols), time, event, "edge")
+}
+
+#[test]
+fn all_censored_fit_is_noop() {
+    let d = ds(&[vec![1.0, -1.0, 0.5, 0.0]], vec![4.0, 3.0, 2.0, 1.0], vec![false; 4]);
+    let pr = CoxProblem::new(&d);
+    let st = CoxState::zeros(&pr);
+    assert_eq!(loss(&pr, &st), 0.0);
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    assert!(res.beta.iter().all(|&b| b == 0.0), "no events → nothing to fit");
+}
+
+#[test]
+fn single_sample_problem() {
+    let d = ds(&[vec![1.5]], vec![1.0], vec![true]);
+    let pr = CoxProblem::new(&d);
+    let st = CoxState::zeros(&pr);
+    // One sample: its risk set is itself → loss = log(1) = 0, derivs 0.
+    assert_eq!(loss(&pr, &st), 0.0);
+    let der = coord_derivs(&pr, &st, 0);
+    assert_eq!(der.d1, 0.0);
+    assert_eq!(der.d2, 0.0);
+    let res = QuadraticSurrogate.fit(&pr, &FitConfig::default());
+    assert!(res.beta[0].abs() < 1e-12);
+}
+
+#[test]
+fn all_times_tied() {
+    // Every sample in one tie group: every risk set is everything.
+    let d = ds(
+        &[vec![1.0, 2.0, 3.0, 4.0]],
+        vec![5.0; 4],
+        vec![true, true, false, true],
+    );
+    let pr = CoxProblem::new(&d);
+    assert_eq!(pr.groups.len(), 1);
+    let st = CoxState::zeros(&pr);
+    let l = loss(&pr, &st);
+    assert!((l - 3.0 * (4.0_f64).ln()).abs() < 1e-12);
+    // Fit stays finite and monotone.
+    let res = CubicSurrogate.fit(
+        &pr,
+        &FitConfig { objective: Objective { l1: 0.0, l2: 0.1 }, ..Default::default() },
+    );
+    assert!(res.trace.monotone(1e-10));
+    assert!(res.beta[0].is_finite());
+}
+
+#[test]
+fn constant_feature_is_ignored() {
+    let d = ds(
+        &[vec![2.0; 6], vec![1.0, -1.0, 0.5, -0.5, 0.2, -0.2]],
+        vec![6.0, 5.0, 4.0, 3.0, 2.0, 1.0],
+        vec![true; 6],
+    );
+    let pr = CoxProblem::new(&d);
+    assert_eq!(coord_lipschitz(&pr, 0).l2, 0.0);
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    assert_eq!(res.beta[0], 0.0, "constant column gets no weight");
+    assert!(res.beta[1].abs() > 0.0);
+}
+
+#[test]
+fn perfectly_separated_feature_stays_finite() {
+    // Feature that exactly orders failures: unregularized MLE → ∞, but
+    // the surrogate steps remain finite and the loss decreases.
+    let d = ds(
+        &[vec![3.0, 2.0, 1.0, 0.0, -1.0, -2.0]],
+        vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        vec![true; 6],
+    );
+    let pr = CoxProblem::new(&d);
+    let res = QuadraticSurrogate.fit(
+        &pr,
+        &FitConfig { max_iters: 200, ..Default::default() },
+    );
+    assert!(res.beta[0].is_finite());
+    assert!(res.trace.monotone(1e-10));
+    assert!(res.beta[0] > 1.0, "separation should drive a large coefficient");
+}
+
+#[test]
+fn huge_feature_scale_is_stable() {
+    let d = ds(
+        &[vec![1e6, -1e6, 5e5, -5e5]],
+        vec![4.0, 3.0, 2.0, 1.0],
+        vec![true; 4],
+    );
+    let pr = CoxProblem::new(&d);
+    let res = CubicSurrogate.fit(
+        &pr,
+        &FitConfig { objective: Objective { l1: 0.0, l2: 1.0 }, ..Default::default() },
+    );
+    assert!(res.beta[0].is_finite());
+    assert!(res.trace.monotone(1e-8));
+}
+
+#[test]
+fn batched_derivs_on_empty_events_are_constant_term_only() {
+    let d = ds(
+        &[vec![1.0, 2.0], vec![0.5, -0.5]],
+        vec![2.0, 1.0],
+        vec![false, false],
+    );
+    let pr = CoxProblem::new(&d);
+    let st = CoxState::zeros(&pr);
+    let mut ws = Workspace::default();
+    let (d1, d2) = all_coord_d1_d2(&pr, &st, &mut ws);
+    assert!(d1.iter().all(|&v| v == 0.0));
+    assert!(d2.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn beam_search_with_k_exceeding_p() {
+    let d = ds(
+        &[vec![1.0, -1.0, 0.5, -0.5, 0.7], vec![0.3, 0.1, -0.4, 0.9, -0.2]],
+        vec![5.0, 4.0, 3.0, 2.0, 1.0],
+        vec![true; 5],
+    );
+    let pr = CoxProblem::new(&d);
+    let bs = BeamSearch { width: 2, screen: 4, ..Default::default() };
+    let path = bs.run(&pr, 10); // k > p: clipped to p
+    assert!(path.iter().all(|s| s.k <= 2));
+}
+
+#[test]
+fn kaplan_meier_single_observation() {
+    let km = KaplanMeier::fit(&[1.0], &[true]);
+    assert_eq!(km.at(0.5), 1.0);
+    assert_eq!(km.at(1.0), 0.0);
+    let g = KaplanMeier::fit_censoring(&[1.0], &[true]);
+    assert_eq!(g.at(2.0), 1.0, "no censoring events");
+}
+
+#[test]
+fn cindex_degenerate_inputs() {
+    // All censored → no comparable pairs → 0.5 by convention.
+    assert_eq!(concordance_index(&[1.0, 2.0], &[false, false], &[1.0, 0.0]), 0.5);
+    // Identical times → not comparable.
+    assert_eq!(concordance_index(&[1.0, 1.0], &[true, true], &[1.0, 0.0]), 0.5);
+}
+
+#[test]
+fn zero_iteration_budget() {
+    let d = ds(&[vec![1.0, -1.0, 0.5]], vec![3.0, 2.0, 1.0], vec![true; 3]);
+    let pr = CoxProblem::new(&d);
+    let res = QuadraticSurrogate.fit(
+        &pr,
+        &FitConfig { max_iters: 0, ..Default::default() },
+    );
+    assert!(res.beta.iter().all(|&b| b == 0.0));
+    assert_eq!(res.iterations, 0);
+}
+
+#[test]
+fn negative_and_zero_times_are_valid() {
+    // Observation times only enter through their ordering.
+    let d = ds(
+        &[vec![1.0, -1.0, 0.5, -0.5]],
+        vec![0.0, -1.0, 2.0, -3.0],
+        vec![true, true, false, true],
+    );
+    let pr = CoxProblem::new(&d);
+    assert_eq!(pr.time, vec![2.0, 0.0, -1.0, -3.0]);
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    assert!(res.trace.monotone(1e-10));
+}

@@ -1,0 +1,187 @@
+//! End-to-end integration tests: whole-pipeline fits, optimizer
+//! agreement, runtime failure injection, CV reproducibility.
+
+use fastsurvival::coordinator::cv::cv_selector;
+use fastsurvival::coordinator::{fit_with_engine, EngineFitConfig};
+use fastsurvival::cox::{CoxProblem, CoxState};
+use fastsurvival::data::binarize::{binarize, BinarizeConfig};
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::datasets;
+use fastsurvival::metrics::concordance_index;
+use fastsurvival::optim::{
+    self, CubicSurrogate, FitConfig, Objective, Optimizer, QuadraticSurrogate,
+};
+use fastsurvival::runtime::engine::{CoxEngine, NativeEngine, XlaEngine};
+use fastsurvival::runtime::Manifest;
+use fastsurvival::select::{BeamSearch, VariableSelector};
+use std::path::Path;
+
+/// All convergent optimizers agree on the strictly convex ℓ2 problem.
+#[test]
+fn all_optimizers_agree_on_l2_optimum() {
+    let ds = generate(&SyntheticConfig { n: 250, p: 8, rho: 0.4, k: 3, s: 0.1, seed: 1 });
+    let pr = CoxProblem::new(&ds);
+    let reference = CubicSurrogate.fit(
+        &pr,
+        &FitConfig {
+            objective: Objective { l1: 0.0, l2: 2.0 },
+            max_iters: 3000,
+            tol: 1e-13,
+            ..Default::default()
+        },
+    );
+    for name in ["quadratic", "quasi-newton", "prox-newton", "newton-ls"] {
+        let opt = optim::by_name(name);
+        let res = opt.fit(
+            &pr,
+            &FitConfig {
+                objective: Objective { l1: 0.0, l2: 2.0 },
+                max_iters: 3000,
+                tol: 1e-13,
+                ..Default::default()
+            },
+        );
+        assert!(
+            (res.objective_value - reference.objective_value).abs() < 1e-4,
+            "{name}: {} vs reference {}",
+            res.objective_value,
+            reference.objective_value
+        );
+    }
+}
+
+/// The full paper pipeline: generate → binarize → select → evaluate.
+#[test]
+fn binarized_selection_pipeline() {
+    let mut spec = datasets::spec("dialysis");
+    spec.n = 600;
+    let raw = datasets::generate_stand_in(&spec, 7);
+    let ds = binarize(&raw, &BinarizeConfig { max_quantiles: 12, ..Default::default() });
+    assert!(ds.p() > raw.p());
+    let pr = CoxProblem::new(&ds);
+    let bs = BeamSearch { width: 3, screen: 8, ..Default::default() };
+    let sols = bs.select(&pr, &[1, 3, 5]);
+    assert_eq!(sols.len(), 3);
+    // Larger support must not have larger training loss.
+    assert!(sols[2].train_loss <= sols[0].train_loss + 1e-9);
+    // The k=5 model must rank risk better than chance.
+    let eta = ds.x.matvec(&sols[2].beta);
+    let ci = concordance_index(&ds.time, &ds.event, &eta);
+    assert!(ci > 0.55, "cindex {ci}");
+}
+
+/// CV with a fixed seed is bit-reproducible.
+#[test]
+fn cv_reproducible() {
+    let ds = generate(&SyntheticConfig { n: 150, p: 10, rho: 0.3, k: 2, s: 0.1, seed: 3 });
+    let bs = BeamSearch { width: 2, screen: 5, ..Default::default() };
+    let a = cv_selector(&ds, &bs, &[1, 2], 3, 9);
+    let b = cv_selector(&ds, &bs, &[1, 2], 3, 9);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.k, y.k);
+        assert_eq!(x.fold, y.fold);
+        assert_eq!(x.test_cindex, y.test_cindex);
+        assert_eq!(x.train_loss, y.train_loss);
+    }
+}
+
+/// Failure injection: missing artifact dir and corrupted HLO text.
+#[test]
+fn runtime_failure_injection() {
+    // Missing directory → helpful error.
+    assert!(XlaEngine::new(Path::new("/definitely/not/here")).is_err());
+
+    // Corrupted HLO → compile-time error surfaced, not a crash.
+    let dir = std::env::temp_dir().join("fs_bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "cox_loss_n64\tbad.hlo.txt\t64\t1\tfloat32:64\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule garbage THIS IS NOT HLO").unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    assert_eq!(manifest.entries.len(), 1);
+    let eng = XlaEngine::new(&dir).unwrap();
+    let ds = generate(&SyntheticConfig { n: 30, p: 2, rho: 0.1, k: 1, s: 0.1, seed: 4 });
+    let pr = CoxProblem::new(&ds);
+    let st = CoxState::zeros(&pr);
+    assert!(eng.loss(&pr, &st).is_err(), "corrupted HLO must error cleanly");
+}
+
+/// Native vs XLA on *binarized* (binary-feature) data — the paper's
+/// actual regime — through the engine-generic CD driver.
+#[test]
+fn engine_parity_on_binarized_data() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut spec = datasets::spec("dialysis");
+    spec.n = 300;
+    let raw = datasets::generate_stand_in(&spec, 11);
+    let ds = binarize(&raw, &BinarizeConfig { max_quantiles: 6, ..Default::default() });
+    let pr = CoxProblem::new(&ds);
+    let cfg = EngineFitConfig {
+        objective: Objective { l1: 0.5, l2: 0.5 },
+        max_sweeps: 20,
+        tol: 1e-8,
+    };
+    let (bn, _) = fit_with_engine(&NativeEngine, &pr, &cfg).unwrap();
+    let xe = XlaEngine::new(dir).unwrap();
+    let (bx, tx) = fit_with_engine(&xe, &pr, &cfg).unwrap();
+    assert!(tx.monotone(1e-4));
+    for l in 0..pr.p() {
+        assert!(
+            (bn[l] - bx[l]).abs() < 1e-2,
+            "coord {l}: native {} vs xla {}",
+            bn[l],
+            bx[l]
+        );
+    }
+}
+
+/// Warm-started fits resume without loss jumps.
+#[test]
+fn warm_start_continuity() {
+    let ds = generate(&SyntheticConfig { n: 200, p: 6, rho: 0.5, k: 2, s: 0.1, seed: 5 });
+    let pr = CoxProblem::new(&ds);
+    let cfg = FitConfig {
+        objective: Objective { l1: 0.0, l2: 1.0 },
+        max_iters: 5,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let first = QuadraticSurrogate.fit(&pr, &cfg);
+    let warm = CoxState::from_beta(&pr, &first.beta);
+    let second = QuadraticSurrogate.fit_from(&pr, warm, &cfg);
+    let first_end = first.trace.final_loss();
+    let second_start = second.trace.points.first().unwrap().loss;
+    assert!(
+        second_start <= first_end + 1e-9,
+        "warm start must not regress: {second_start} vs {first_end}"
+    );
+}
+
+/// The experiment harness writes every advertised file for a tiny run.
+#[test]
+fn experiment_harness_outputs() {
+    use fastsurvival::coordinator::experiments::{run, ExperimentConfig};
+    let out = std::env::temp_dir().join("fs_integration_results");
+    let cfg = ExperimentConfig {
+        scale: 0.03,
+        quantiles: 5,
+        folds: 2,
+        ks: vec![1, 2],
+        optim_iters: 3,
+        seed: 0,
+        out_dir: out.clone(),
+    };
+    run("table1", &cfg).unwrap();
+    run("fig17", &cfg).unwrap(); // dialysis grid cell (λ1=0, λ2=1)
+    assert!(out.join("table1.csv").exists());
+    assert!(out.join("fig17_curves.csv").exists());
+    assert!(out.join("fig17_summary.csv").exists());
+}

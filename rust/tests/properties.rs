@@ -1,0 +1,230 @@
+//! Property-based tests over the paper's core mathematical claims,
+//! using the in-repo randomized-property harness (util::proptest).
+
+use fastsurvival::cox::derivatives::{coord_d1_d2, coord_derivs};
+use fastsurvival::cox::lipschitz::coord_lipschitz;
+use fastsurvival::cox::loss::{loss, penalized_loss};
+use fastsurvival::cox::{CoxProblem, CoxState};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::linalg::Matrix;
+use fastsurvival::optim::cubic::cubic_coord_step;
+use fastsurvival::optim::quadratic::quad_coord_step;
+use fastsurvival::optim::Objective;
+use fastsurvival::util::proptest::{check, gen};
+use fastsurvival::util::rng::Rng;
+
+fn random_problem(rng: &mut Rng, max_n: usize, p: usize) -> (CoxProblem, Vec<f64>) {
+    let n = 8 + rng.below(max_n - 8);
+    let cols: Vec<Vec<f64>> = (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let with_ties = rng.bernoulli(0.5);
+    let time = gen::times(rng, n, with_ties);
+    let event = gen::events(rng, n, 0.6);
+    let ds = SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "prop");
+    let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 0.7).collect();
+    (CoxProblem::new(&ds), beta)
+}
+
+/// Theorem 3.4 as a property: for arbitrary data, ties, and β —
+/// 0 ≤ d2 ≤ L2 and |d3| ≤ L3.
+#[test]
+fn prop_lipschitz_bounds() {
+    check(
+        "thm-3.4-bounds",
+        101,
+        80,
+        |r| {
+            let (pr, beta) = random_problem(r, 50, 3);
+            (pr, beta)
+        },
+        |(pr, beta)| {
+            let st = CoxState::from_beta(pr, beta);
+            for l in 0..pr.p() {
+                let d = coord_derivs(pr, &st, l);
+                let lc = coord_lipschitz(pr, l);
+                if d.d2 < -1e-9 {
+                    return Err(format!("d2 negative: {}", d.d2));
+                }
+                if d.d2 > lc.l2 + 1e-9 {
+                    return Err(format!("d2 {} > L2 {}", d.d2, lc.l2));
+                }
+                if d.d3.abs() > lc.l3 + 1e-9 {
+                    return Err(format!("|d3| {} > L3 {}", d.d3.abs(), lc.l3));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The quadratic surrogate step NEVER increases the penalized loss
+/// (Eq. 15 majorization), for any data and any current β.
+#[test]
+fn prop_quadratic_step_monotone() {
+    check(
+        "quad-step-monotone",
+        103,
+        60,
+        |r| {
+            let (pr, beta) = random_problem(r, 40, 2);
+            let l1 = if r.bernoulli(0.5) { r.uniform_range(0.0, 2.0) } else { 0.0 };
+            let l2 = r.uniform_range(0.0, 2.0);
+            let l = r.below(2);
+            (pr, beta, l1, l2, l)
+        },
+        |(pr, beta, l1, l2, l)| {
+            let obj = Objective { l1: *l1, l2: *l2 };
+            let mut st = CoxState::from_beta(pr, beta);
+            let before = penalized_loss(pr, &st, obj.l1, obj.l2);
+            let lip = coord_lipschitz(pr, *l);
+            quad_coord_step(pr, &mut st, *l, lip, obj);
+            let after = penalized_loss(pr, &st, obj.l1, obj.l2);
+            if after <= before + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("loss increased: {before} -> {after}"))
+            }
+        },
+    );
+}
+
+/// Same majorization property for the cubic surrogate step (Eq. 16).
+#[test]
+fn prop_cubic_step_monotone() {
+    check(
+        "cubic-step-monotone",
+        107,
+        60,
+        |r| {
+            let (pr, beta) = random_problem(r, 40, 2);
+            let l1 = if r.bernoulli(0.5) { r.uniform_range(0.0, 2.0) } else { 0.0 };
+            let l2 = r.uniform_range(0.0, 2.0);
+            let l = r.below(2);
+            (pr, beta, l1, l2, l)
+        },
+        |(pr, beta, l1, l2, l)| {
+            let obj = Objective { l1: *l1, l2: *l2 };
+            let mut st = CoxState::from_beta(pr, beta);
+            let before = penalized_loss(pr, &st, obj.l1, obj.l2);
+            let lip = coord_lipschitz(pr, *l);
+            cubic_coord_step(pr, &mut st, *l, lip, obj);
+            let after = penalized_loss(pr, &st, obj.l1, obj.l2);
+            if after <= before + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("loss increased: {before} -> {after}"))
+            }
+        },
+    );
+}
+
+/// The cubic surrogate's predicted decrease is a valid lower bound on
+/// the actual decrease (the surrogate upper-bounds the loss).
+#[test]
+fn prop_surrogate_upper_bounds_loss() {
+    check(
+        "surrogate-majorizes",
+        109,
+        60,
+        |r| {
+            let (pr, beta) = random_problem(r, 40, 1);
+            let delta = r.uniform_range(-1.5, 1.5);
+            (pr, beta, delta)
+        },
+        |(pr, beta, delta)| {
+            let st = CoxState::from_beta(pr, beta);
+            let f0 = loss(pr, &st);
+            let (d1, d2) = coord_d1_d2(pr, &st, 0);
+            let lip = coord_lipschitz(pr, 0);
+            let surrogate = f0
+                + d1 * delta
+                + 0.5 * d2 * delta * delta
+                + lip.l3 / 6.0 * delta.abs().powi(3);
+            let mut moved = st.clone();
+            moved.update_coord(pr, 0, *delta);
+            let f1 = loss(pr, &moved);
+            if f1 <= surrogate + 1e-7 * (f0.abs() + 1.0) {
+                Ok(())
+            } else {
+                Err(format!("h(Δ)={surrogate} < f(x+Δ)={f1} at Δ={delta}"))
+            }
+        },
+    );
+}
+
+/// Quadratic majorization too: f(x+Δ) ≤ f(x) + d1·Δ + L2/2·Δ².
+#[test]
+fn prop_quadratic_majorizes() {
+    check(
+        "quad-majorizes",
+        113,
+        60,
+        |r| {
+            let (pr, beta) = random_problem(r, 40, 1);
+            let delta = r.uniform_range(-1.5, 1.5);
+            (pr, beta, delta)
+        },
+        |(pr, beta, delta)| {
+            let st = CoxState::from_beta(pr, beta);
+            let f0 = loss(pr, &st);
+            let (d1, _) = coord_d1_d2(pr, &st, 0);
+            let lip = coord_lipschitz(pr, 0);
+            let surrogate = f0 + d1 * delta + 0.5 * lip.l2 * delta * delta;
+            let mut moved = st.clone();
+            moved.update_coord(pr, 0, *delta);
+            let f1 = loss(pr, &moved);
+            if f1 <= surrogate + 1e-7 * (f0.abs() + 1.0) {
+                Ok(())
+            } else {
+                Err(format!("g(Δ)={surrogate} < f(x+Δ)={f1} at Δ={delta}"))
+            }
+        },
+    );
+}
+
+/// Loss invariance: permuting samples does not change the loss or the
+/// coordinate derivatives (the problem is order-normalized internally).
+#[test]
+fn prop_permutation_invariance() {
+    check(
+        "permutation-invariant",
+        127,
+        40,
+        |r| {
+            let n = 10 + r.below(30);
+            let col: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let time = gen::times(r, n, true);
+            let event = gen::events(r, n, 0.6);
+            let perm = r.permutation(n);
+            let beta = r.uniform_range(-1.0, 1.0);
+            (col, time, event, perm, beta)
+        },
+        |(col, time, event, perm, beta)| {
+            let ds1 = SurvivalDataset::new(
+                Matrix::from_columns(&[col.clone()]),
+                time.clone(),
+                event.clone(),
+                "a",
+            );
+            let ds2 = SurvivalDataset::new(
+                Matrix::from_columns(&[perm.iter().map(|&i| col[i]).collect()]),
+                perm.iter().map(|&i| time[i]).collect(),
+                perm.iter().map(|&i| event[i]).collect(),
+                "b",
+            );
+            let p1 = CoxProblem::new(&ds1);
+            let p2 = CoxProblem::new(&ds2);
+            let s1 = CoxState::from_beta(&p1, &[*beta]);
+            let s2 = CoxState::from_beta(&p2, &[*beta]);
+            let (l1v, l2v) = (loss(&p1, &s1), loss(&p2, &s2));
+            if (l1v - l2v).abs() > 1e-8 {
+                return Err(format!("loss differs under permutation: {l1v} vs {l2v}"));
+            }
+            let d1 = coord_derivs(&p1, &s1, 0);
+            let d2 = coord_derivs(&p2, &s2, 0);
+            if (d1.d1 - d2.d1).abs() > 1e-8 || (d1.d2 - d2.d2).abs() > 1e-8 {
+                return Err("derivatives differ under permutation".into());
+            }
+            Ok(())
+        },
+    );
+}
