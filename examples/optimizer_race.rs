@@ -1,13 +1,15 @@
 //! The Figure-1 experiment, live: race every optimizer on a binarized
-//! dataset and watch the Newton-family baselines blow up at weak
-//! regularization while the surrogate methods descend monotonically.
+//! dataset through the one `CoxFit` builder path and watch the
+//! Newton-family baselines blow up at weak regularization (surfacing as
+//! a typed `Diverged` error) while the surrogate methods descend
+//! monotonically.
 //!
 //! Run with: `cargo run --release --example optimizer_race [--dataset flchain]`
 
-use fastsurvival::cox::CoxProblem;
+use fastsurvival::api::{CoxFit, OptimizerKind};
 use fastsurvival::data::binarize::{binarize, BinarizeConfig};
 use fastsurvival::data::datasets;
-use fastsurvival::optim::{self, FitConfig, Objective, Optimizer};
+use fastsurvival::error::FastSurvivalError;
 use fastsurvival::util::args::Args;
 
 fn main() {
@@ -22,44 +24,56 @@ fn main() {
         max_quantiles: args.get_or("quantiles", 40),
         ..Default::default()
     });
-    let pr = CoxProblem::new(&ds);
     println!("{name}: n={} p={} (binarized)", ds.n(), ds.p());
 
     for (l1, l2) in [(0.0, 1.0), (1.0, 5.0)] {
         println!("\n=== λ1={l1} λ2={l2} ===");
         println!(
             "{:<20} {:>12} {:>8} {:>10} {:>9} {:>9}",
-            "method", "final loss", "iters", "time(ms)", "monotone", "diverged"
+            "method", "final loss", "iters", "time(ms)", "monotone", "outcome"
         );
-        let methods: &[&str] = if l1 == 0.0 {
-            &["quadratic", "cubic", "newton", "quasi-newton", "prox-newton", "gd"]
-        } else {
-            &["quadratic", "cubic", "quasi-newton", "prox-newton", "gd"]
-        };
-        for m in methods {
-            let opt = optim::by_name(m);
-            let cfg = FitConfig {
-                objective: Objective { l1, l2 },
-                max_iters: args.get_or("iters", 30),
-                tol: 1e-11,
-                budget_secs: 30.0,
-                record_trace: true,
-            };
-            let t0 = std::time::Instant::now();
-            let res = opt.fit(&pr, &cfg);
-            println!(
-                "{:<20} {:>12.4} {:>8} {:>10.1} {:>9} {:>9}",
-                opt.name(),
-                res.objective_value,
-                res.iterations,
-                t0.elapsed().as_secs_f64() * 1e3,
-                res.trace.monotone(1e-8),
-                res.trace.diverged
-            );
+        for kind in OptimizerKind::ALL {
+            if kind == OptimizerKind::NewtonLineSearch {
+                continue; // the ablation; the race runs the paper's six
+            }
+            if l1 > 0.0 && !kind.supports_l1() {
+                continue; // exact Newton has no ℓ1 mode (paper)
+            }
+            let fit = CoxFit::new()
+                .l1(l1)
+                .l2(l2)
+                .optimizer(kind)
+                .max_iters(args.get_or("iters", 30))
+                .tol(1e-11)
+                .budget_secs(30.0);
+            match fit.fit(&ds) {
+                Ok(model) => {
+                    let d = model.diagnostics();
+                    println!(
+                        "{:<20} {:>12.4} {:>8} {:>10.1} {:>9} {:>9}",
+                        d.optimizer,
+                        d.objective_value,
+                        d.iterations,
+                        d.wall_secs * 1e3,
+                        d.trace.monotone(1e-8),
+                        if d.converged { "converged" } else { "maxiter" }
+                    );
+                }
+                Err(FastSurvivalError::Diverged { optimizer, iterations }) => {
+                    println!(
+                        "{:<20} {:>12} {:>8} {:>10} {:>9} {:>9}",
+                        optimizer, "-", iterations, "-", "false", "DIVERGED"
+                    );
+                }
+                Err(e) => {
+                    println!("{:<20} failed: {e}", kind.name());
+                }
+            }
         }
     }
     println!(
         "\nExpected shape (paper Fig. 1): surrogates always monotone and fastest\n\
-         to high precision; exact Newton explodes at weak λ2 on binarized data."
+         to high precision; exact Newton explodes at weak λ2 on binarized data\n\
+         and surfaces as the typed Diverged error."
     );
 }

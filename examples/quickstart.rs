@@ -1,14 +1,14 @@
-//! Quickstart: fit a Cox proportional hazards model with FastSurvival's
-//! cubic-surrogate coordinate descent and inspect the result.
+//! Quickstart: the unified estimator API end to end — build a `CoxFit`,
+//! fit a `CoxModel`, predict survival curves, and round-trip the model
+//! through JSON persistence.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use fastsurvival::cox::CoxProblem;
+use fastsurvival::api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
 use fastsurvival::data::synthetic::{generate, SyntheticConfig};
-use fastsurvival::metrics::concordance_index;
-use fastsurvival::optim::{CubicSurrogate, FitConfig, Objective, Optimizer};
+use fastsurvival::error::Result;
 
-fn main() {
+fn main() -> Result<()> {
     // 1. A synthetic survival dataset (Appendix C.2 generator): 500
     //    samples, 20 features, 4 of which carry signal.
     let ds = generate(&SyntheticConfig {
@@ -27,42 +27,59 @@ fn main() {
         100.0 * ds.censoring_rate()
     );
 
-    // 2. Preprocess: sort by descending time so risk sets are prefixes.
-    let problem = CoxProblem::new(&ds);
-
-    // 3. Fit with the cubic surrogate (guaranteed monotone descent,
-    //    no line search, O(n) exact second derivatives per coordinate).
-    let cfg = FitConfig {
-        objective: Objective { l1: 0.5, l2: 0.1 },
-        max_iters: 200,
-        tol: 1e-10,
-        ..Default::default()
-    };
-    let result = CubicSurrogate.fit(&problem, &cfg);
+    // 2. One builder call: penalties, optimizer, engine, stopping — the
+    //    cubic surrogate gives guaranteed monotone descent with no line
+    //    search and O(n) exact second derivatives per coordinate.
+    let model = CoxFit::new()
+        .l1(0.5)
+        .l2(0.1)
+        .optimizer(OptimizerKind::Cubic)
+        .engine(EngineKind::Native)
+        .max_iters(200)
+        .tol(1e-10)
+        .fit(&ds)?;
+    let d = model.diagnostics();
     println!(
-        "fit: objective {:.4} in {} sweeps (monotone descent: {})",
-        result.objective_value,
-        result.iterations,
-        result.trace.monotone(1e-9)
+        "fit: objective {:.4} in {} sweeps via {} on {} (monotone descent: {})",
+        d.objective_value,
+        d.iterations,
+        d.optimizer,
+        d.engine,
+        d.trace.monotone(1e-9)
     );
 
-    // 4. Inspect the model.
-    let nonzero: Vec<(usize, f64)> = result
-        .beta
-        .iter()
-        .enumerate()
-        .filter(|(_, b)| b.abs() > 1e-10)
-        .map(|(j, &b)| (j, b))
-        .collect();
-    println!("selected {} features:", nonzero.len());
-    for (j, b) in &nonzero {
-        let truth = ds.true_beta.as_ref().unwrap()[*j];
-        println!("  x{j:<3} beta = {b:+.4}   (true {truth:+.1})");
+    // 3. Inspect the selected coefficients, keyed by feature name.
+    let truth = ds.true_beta.as_ref().unwrap();
+    let selected = model.nonzero_coefficients(1e-10);
+    println!("selected {} features:", selected.len());
+    for c in &selected {
+        println!("  {:<4} beta = {:+.4}   (true {:+.1})", c.name, c.value, truth[c.index]);
     }
 
-    // 5. Evaluate.
-    let eta = ds.x.matvec(&result.beta);
-    let ci = concordance_index(&ds.time, &ds.event, &eta);
+    // 4. Predict: risk scores and individual survival curves.
+    let ci = model.concordance(&ds)?;
     println!("train concordance index: {ci:.4}");
     assert!(ci > 0.7, "expected an informative model");
+    let horizons = [0.25, 0.5, 1.0, 2.0];
+    let mut prev = vec![1.0; 3];
+    print!("survival of first 3 subjects:");
+    for &t in &horizons {
+        let s = model.predict_survival(&ds.x, t)?;
+        print!("  t={t}: [{:.3} {:.3} {:.3}]", s[0], s[1], s[2]);
+        for i in 0..3 {
+            assert!(s[i] <= prev[i] + 1e-12, "survival must be monotone in t");
+            prev[i] = s[i];
+        }
+    }
+    println!();
+
+    // 5. Persist and reload: predictions must be bit-identical.
+    let path = std::env::temp_dir().join("fastsurvival_quickstart_model.json");
+    model.save(&path)?;
+    let loaded = CoxModel::load(&path)?;
+    let before = model.predict_survival(&ds.x, 1.0)?;
+    let after = loaded.predict_survival(&ds.x, 1.0)?;
+    assert_eq!(before, after, "save/load must preserve predictions exactly");
+    println!("model round-tripped through {} ✓", path.display());
+    Ok(())
 }

@@ -53,9 +53,8 @@ fn main() {
     }
 
     // Native vs AOT-XLA comparison (three-layer composition cost).
-    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+    if let Ok(xe) = XlaEngine::new(std::path::Path::new("artifacts")) {
         println!("\n== native vs AOT-XLA engine (n=1024) ==");
-        let xe = XlaEngine::new(std::path::Path::new("artifacts")).expect("xla engine");
         let pr = problem(1000, 4, 9);
         let st = CoxState::from_beta(&pr, &[0.1, 0.2, -0.1, 0.0]);
         b.bench("xla coord_derivs     n=1024(pad)", || {

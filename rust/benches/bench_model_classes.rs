@@ -28,7 +28,7 @@ fn main() {
             record_trace: false,
             ..Default::default()
         };
-        black_box(CubicSurrogate.fit(&pr, &cfg));
+        black_box(CubicSurrogate.fit(&pr, &cfg).unwrap());
     });
     b.bench("survival-tree  (depth 4)        fit", || {
         black_box(SurvivalTree::fit(&ds, &TreeConfig::default()));

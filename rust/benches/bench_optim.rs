@@ -24,7 +24,7 @@ fn main() {
             if m == "newton" && l1 > 0.0 {
                 continue; // exact Newton has no ℓ1 mode (paper)
             }
-            let opt = optim::by_name(m);
+            let opt = optim::by_name(m).unwrap();
             let cfg = FitConfig {
                 objective: Objective { l1, l2 },
                 max_iters: 1, // one outer iteration
@@ -33,14 +33,14 @@ fn main() {
                 ..Default::default()
             };
             b.bench(&format!("{:<18} 1 iter  ({tag})", opt.name()), || {
-                black_box(opt.fit(&pr, &cfg));
+                black_box(opt.fit(&pr, &cfg).unwrap());
             });
         }
     }
 
     println!("\n== end-to-end to tolerance 1e-8 (the Figure-1 wall-clock race) ==");
     for m in ["quadratic", "cubic", "quasi-newton", "prox-newton"] {
-        let opt = optim::by_name(m);
+        let opt = optim::by_name(m).unwrap();
         let cfg = FitConfig {
             objective: Objective { l1: 1.0, l2: 5.0 },
             max_iters: 500,
@@ -49,7 +49,7 @@ fn main() {
             ..Default::default()
         };
         b.bench(&format!("{:<18} to 1e-8 (l1=1,l2=5)", opt.name()), || {
-            black_box(opt.fit(&pr, &cfg));
+            black_box(opt.fit(&pr, &cfg).unwrap());
         });
     }
 

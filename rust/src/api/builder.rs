@@ -1,0 +1,328 @@
+//! The `CoxFit` builder: one fluent entry point that assembles the
+//! problem, the compute engine, and the optimizer, fits, and returns a
+//! [`CoxModel`].
+//!
+//! ```no_run
+//! use fastsurvival::api::{CoxFit, EngineKind, OptimizerKind};
+//! # let ds = fastsurvival::data::synthetic::generate(&Default::default());
+//! let model = CoxFit::new()
+//!     .l1(0.5)
+//!     .l2(0.1)
+//!     .optimizer(OptimizerKind::Cubic)
+//!     .engine(EngineKind::Native)
+//!     .max_iters(200)
+//!     .fit(&ds)?;
+//! let risk = model.predict_risk(&ds.x)?;
+//! # Ok::<(), fastsurvival::error::FastSurvivalError>(())
+//! ```
+
+use super::model::{CoxModel, FitDiagnostics};
+use crate::cox::{CoxProblem, CoxState};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::metrics::BreslowBaseline;
+use crate::optim::{FitConfig, Objective, Optimizer};
+use crate::runtime::engine::CoxEngine;
+use std::path::PathBuf;
+use std::time::Instant;
+
+// The typed registries live with the layers they enumerate; the api
+// module re-exports them as part of the stable surface.
+pub use crate::optim::OptimizerKind;
+pub use crate::runtime::engine::EngineKind;
+
+/// Fluent builder for fitting a Cox proportional hazards model.
+///
+/// Defaults: cubic surrogate, native engine, no regularization,
+/// `max_iters = 200`, `tol = 1e-9`, unlimited wall clock.
+#[derive(Clone, Debug)]
+pub struct CoxFit {
+    l1: f64,
+    l2: f64,
+    optimizer: OptimizerKind,
+    engine: EngineKind,
+    artifact_dir: PathBuf,
+    max_iters: usize,
+    tol: f64,
+    budget_secs: f64,
+    record_trace: bool,
+}
+
+impl Default for CoxFit {
+    fn default() -> Self {
+        CoxFit {
+            l1: 0.0,
+            l2: 0.0,
+            optimizer: OptimizerKind::Cubic,
+            engine: EngineKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            max_iters: 200,
+            tol: 1e-9,
+            budget_secs: 0.0,
+            record_trace: true,
+        }
+    }
+}
+
+impl CoxFit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// ℓ1 (lasso) penalty weight λ1 ≥ 0.
+    pub fn l1(mut self, l1: f64) -> Self {
+        self.l1 = l1;
+        self
+    }
+
+    /// ℓ2 (ridge) penalty weight λ2 ≥ 0.
+    pub fn l2(mut self, l2: f64) -> Self {
+        self.l2 = l2;
+        self
+    }
+
+    pub fn optimizer(mut self, kind: OptimizerKind) -> Self {
+        self.optimizer = kind;
+        self
+    }
+
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.engine = kind;
+        self
+    }
+
+    /// Directory holding the AOT artifacts (`manifest.tsv`) for
+    /// [`EngineKind::Xla`].
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    /// Maximum outer iterations (CD sweeps / Newton steps).
+    pub fn max_iters(mut self, iters: usize) -> Self {
+        self.max_iters = iters;
+        self
+    }
+
+    /// Relative loss-decrease convergence tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Wall-clock budget in seconds (0 = unlimited); exhaustion is
+    /// reported on `FitDiagnostics::budget_exhausted`.
+    pub fn budget_secs(mut self, secs: f64) -> Self {
+        self.budget_secs = secs;
+        self
+    }
+
+    /// Record the per-iteration loss trace (on by default).
+    pub fn record_trace(mut self, record: bool) -> Self {
+        self.record_trace = record;
+        self
+    }
+
+    fn validate(&self, ds: &SurvivalDataset) -> Result<()> {
+        if !self.l1.is_finite() || self.l1 < 0.0 || !self.l2.is_finite() || self.l2 < 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "penalties must be finite and non-negative (got l1={}, l2={})",
+                self.l1, self.l2
+            )));
+        }
+        if self.max_iters == 0 {
+            return Err(FastSurvivalError::InvalidConfig(
+                "max_iters must be at least 1".into(),
+            ));
+        }
+        if !self.tol.is_finite() || self.tol < 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "tol must be finite and non-negative (got {})",
+                self.tol
+            )));
+        }
+        if self.l1 > 0.0 && !self.optimizer.supports_l1() {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "optimizer {:?} does not support ℓ1 (non-smooth) objectives; \
+                 use quadratic/cubic/quasi-newton/prox-newton/gd",
+                self.optimizer.name()
+            )));
+        }
+        if self.engine != EngineKind::Native && !self.optimizer.engine_generic() {
+            return Err(FastSurvivalError::Unsupported(format!(
+                "optimizer {:?} runs on the native engine only; the quadratic and \
+                 cubic surrogates are engine-generic",
+                self.optimizer.name()
+            )));
+        }
+        if ds.p() == 0 {
+            return Err(FastSurvivalError::InvalidData(
+                "dataset has no feature columns".into(),
+            ));
+        }
+        if ds.n() > 0 && ds.n_events() == 0 {
+            return Err(FastSurvivalError::InvalidData(
+                "all samples are censored: the Cox partial likelihood has no events \
+                 to fit".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate, preprocess, fit, and package the result. Invalid data
+    /// or configuration, an unavailable engine, and optimizer divergence
+    /// all surface as typed errors instead of panics.
+    pub fn fit(&self, ds: &SurvivalDataset) -> Result<CoxModel> {
+        self.validate(ds)?;
+        let problem = CoxProblem::try_new(ds)?;
+        let engine: Box<dyn CoxEngine> = self.engine.build(&self.artifact_dir)?;
+        let optimizer: Box<dyn Optimizer> = self.optimizer.build();
+        let config = FitConfig {
+            objective: Objective { l1: self.l1, l2: self.l2 },
+            max_iters: self.max_iters,
+            tol: self.tol,
+            budget_secs: self.budget_secs,
+            record_trace: self.record_trace,
+        };
+
+        let t0 = Instant::now();
+        let state = CoxState::zeros(&problem);
+        let res = optimizer.fit_from(&problem, state, &config, engine.as_ref())?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        if res.trace.diverged {
+            return Err(FastSurvivalError::Diverged {
+                optimizer: optimizer.name().to_string(),
+                iterations: res.iterations,
+            });
+        }
+
+        // Baseline hazard from the training linear predictors.
+        let eta = ds.x.matvec(&res.beta);
+        let baseline = BreslowBaseline::fit(&ds.time, &ds.event, &eta);
+
+        let diagnostics = FitDiagnostics {
+            optimizer: optimizer.name().to_string(),
+            engine: engine.name().to_string(),
+            iterations: res.iterations,
+            converged: res.trace.converged,
+            budget_exhausted: res.trace.budget_exhausted,
+            objective_value: res.objective_value,
+            l1: self.l1,
+            l2: self.l2,
+            n_train: ds.n(),
+            n_events: ds.n_events(),
+            wall_secs,
+            trace: res.trace,
+        };
+        Ok(CoxModel::from_parts(
+            ds.feature_names.clone(),
+            res.beta,
+            baseline,
+            diagnostics,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::linalg::Matrix;
+
+    fn ds() -> SurvivalDataset {
+        generate(&SyntheticConfig { n: 200, p: 10, rho: 0.4, k: 3, s: 0.1, seed: 11 })
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in OptimizerKind::ALL {
+            assert_eq!(OptimizerKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(OptimizerKind::from_name("sgd").is_err());
+        assert_eq!(EngineKind::from_name("native").unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::from_name("xla").unwrap(), EngineKind::Xla);
+        assert!(EngineKind::from_name("tpu").is_err());
+    }
+
+    #[test]
+    fn default_fit_produces_informative_model() {
+        let ds = ds();
+        let model = CoxFit::new().l2(0.1).fit(&ds).unwrap();
+        assert_eq!(model.p(), ds.p());
+        let ci = model.concordance(&ds).unwrap();
+        assert!(ci > 0.6, "cindex {ci}");
+        let d = model.diagnostics();
+        assert_eq!(d.engine, "native");
+        assert_eq!(d.optimizer, "cubic-surrogate");
+        assert!(d.iterations > 0);
+        assert!(!d.budget_exhausted);
+    }
+
+    #[test]
+    fn every_optimizer_kind_fits_through_the_builder() {
+        // Strong ridge keeps the Newton-family baselines convergent so
+        // every kind exercises the same one builder path.
+        let ds = ds();
+        for k in OptimizerKind::ALL {
+            let model = CoxFit::new().l2(5.0).optimizer(k).max_iters(30).fit(&ds).unwrap();
+            assert!(
+                model.beta().iter().all(|b| b.is_finite()),
+                "{:?} produced non-finite beta",
+                k
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let ds = ds();
+        assert!(matches!(
+            CoxFit::new().l1(-1.0).fit(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().l2(f64::NAN).fit(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().max_iters(0).fit(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().l1(1.0).optimizer(OptimizerKind::Newton).fit(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().optimizer(OptimizerKind::Newton).engine(EngineKind::Xla).fit(&ds),
+            Err(FastSurvivalError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn all_censored_dataset_is_a_typed_error() {
+        let x = Matrix::from_columns(&[vec![1.0, -1.0, 0.5]]);
+        let d = SurvivalDataset::new(x, vec![3.0, 2.0, 1.0], vec![false; 3], "censored");
+        assert!(matches!(
+            CoxFit::new().fit(&d),
+            Err(FastSurvivalError::InvalidData(_))
+        ));
+    }
+
+    #[test]
+    fn budget_exhaustion_is_reported_on_diagnostics() {
+        // A generous problem with a vanishing budget: the fit must stop
+        // early and say why.
+        let ds = generate(&SyntheticConfig { n: 400, p: 40, rho: 0.5, k: 5, s: 0.1, seed: 3 });
+        let model = CoxFit::new()
+            .l2(0.5)
+            .max_iters(100_000)
+            .tol(0.0)
+            .budget_secs(1e-6)
+            .fit(&ds)
+            .unwrap();
+        let d = model.diagnostics();
+        assert!(d.budget_exhausted, "budget flag must be set");
+        assert!(!d.converged);
+        assert!(d.iterations < 100_000);
+    }
+}

@@ -1,0 +1,493 @@
+//! Minimal JSON reader/writer for model persistence (the offline build
+//! has no `serde`).
+//!
+//! Writing uses Rust's shortest-round-trip `f64` formatting, so a
+//! save → load cycle reproduces coefficients and baseline hazards
+//! bit-for-bit; non-finite values serialize as `null` and parse back as
+//! NaN. The parser is a strict recursive-descent implementation of the
+//! JSON grammar (objects, arrays, strings with escapes, numbers, bools,
+//! null) that rejects trailing garbage.
+
+use crate::error::{FastSurvivalError, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn err(msg: impl Into<String>) -> FastSurvivalError {
+    FastSurvivalError::Persist(msg.into())
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup that errors with the missing key's name.
+    pub fn require(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| err(format!("missing field {key:?}")))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            // Non-finite values are serialized as null.
+            Json::Null => Ok(f64::NAN),
+            other => Err(err(format!("expected number, found {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u32::MAX as f64 => {
+                Ok(*v as usize)
+            }
+            other => Err(err(format!("expected non-negative integer, found {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(err(format!("expected bool, found {other:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(err(format!("expected string, found {other:?}"))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(err(format!("expected array, found {other:?}"))),
+        }
+    }
+
+    /// Array of numbers → `Vec<f64>`.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_array()?.iter().map(Json::as_f64).collect()
+    }
+
+    /// Array of strings → `Vec<String>`.
+    pub fn as_string_vec(&self) -> Result<Vec<String>> {
+        self.as_array()?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Append a JSON string literal (with escapes) to `out`.
+pub fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append an f64 with shortest-round-trip formatting (`null` if not
+/// finite, so the output stays valid JSON).
+pub fn write_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+        // Bare integers like "3" parse back exactly; no suffix needed.
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append `[v0,v1,...]` of f64.
+pub fn write_f64_array(out: &mut String, vs: &[f64]) {
+    out.push('[');
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_f64(out, *v);
+    }
+    out.push(']');
+}
+
+/// Append `["a","b",...]` of strings.
+pub fn write_str_array(out: &mut String, vs: &[String]) {
+    out.push('[');
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_str(out, v);
+    }
+    out.push(']');
+}
+
+// ---------------------------------------------------------------- parser
+
+/// Parse a complete JSON document (rejects trailing non-whitespace).
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(err(format!("trailing characters at byte {}", p.pos)));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(err(format!(
+                "expected {:?} at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )))
+        }
+    }
+
+    fn eat_keyword(&mut self, kw: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') if self.eat_keyword("true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.eat_keyword("false") => Ok(Json::Bool(false)),
+            Some(b'n') if self.eat_keyword("null") => Ok(Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            ))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(err(format!("expected ',' or '}}' at byte {}", self.pos))),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(err(format!("expected ',' or ']' at byte {}", self.pos))),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(err("truncated \\u escape"));
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| err("invalid \\u escape"))?;
+        let v = u16::from_str_radix(s, 16).map_err(|_| err("invalid \\u escape"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => {
+                            out.push('"');
+                            self.pos += 1;
+                        }
+                        Some(b'\\') => {
+                            out.push('\\');
+                            self.pos += 1;
+                        }
+                        Some(b'/') => {
+                            out.push('/');
+                            self.pos += 1;
+                        }
+                        Some(b'n') => {
+                            out.push('\n');
+                            self.pos += 1;
+                        }
+                        Some(b'r') => {
+                            out.push('\r');
+                            self.pos += 1;
+                        }
+                        Some(b't') => {
+                            out.push('\t');
+                            self.pos += 1;
+                        }
+                        Some(b'b') => {
+                            out.push('\u{0008}');
+                            self.pos += 1;
+                        }
+                        Some(b'f') => {
+                            out.push('\u{000c}');
+                            self.pos += 1;
+                        }
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: require \uXXXX low half.
+                                if !self.eat_keyword("\\u") {
+                                    return Err(err("unpaired surrogate in \\u escape"));
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(err("invalid low surrogate in \\u escape"));
+                                }
+                                let cp = 0x10000
+                                    + ((hi as u32 - 0xD800) << 10)
+                                    + (lo as u32 - 0xDC00);
+                                char::from_u32(cp).ok_or_else(|| err("invalid code point"))?
+                            } else {
+                                char::from_u32(hi as u32)
+                                    .ok_or_else(|| err("invalid code point"))?
+                            };
+                            out.push(c);
+                        }
+                        other => {
+                            return Err(err(format!(
+                                "invalid escape {:?}",
+                                other.map(|c| c as char)
+                            )))
+                        }
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so byte
+                    // boundaries are valid; find the char at this offset).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| err("invalid utf-8"))?;
+                    let c = rest.chars().next().ok_or_else(|| err("unterminated string"))?;
+                    if (c as u32) < 0x20 {
+                        return Err(err("unescaped control character in string"));
+                    }
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| err("invalid number"))?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| err(format!("invalid number {s:?} at byte {start}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_f64_exactly() {
+        let vals = [
+            0.0,
+            -0.0,
+            1.5,
+            -3.25e-17,
+            std::f64::consts::PI,
+            1e300,
+            f64::MIN_POSITIVE,
+            123456789.123456789,
+        ];
+        let mut out = String::new();
+        write_f64_array(&mut out, &vals);
+        let parsed = parse(&out).unwrap().as_f64_vec().unwrap();
+        for (a, b) in vals.iter().zip(&parsed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null_and_parses_as_nan() {
+        let mut out = String::new();
+        write_f64_array(&mut out, &[f64::NAN, f64::INFINITY, 1.0]);
+        assert_eq!(out, "[null,null,1]");
+        let v = parse(&out).unwrap().as_f64_vec().unwrap();
+        assert!(v[0].is_nan() && v[1].is_nan());
+        assert_eq!(v[2], 1.0);
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let names = vec![
+            "plain".to_string(),
+            "has \"quotes\" and \\slashes\\".to_string(),
+            "tab\there\nnewline".to_string(),
+            "unicode: β ≤ λ₂ 💡".to_string(),
+            "control: \u{0007}".to_string(),
+        ];
+        let mut out = String::new();
+        write_str_array(&mut out, &names);
+        let parsed = parse(&out).unwrap().as_string_vec().unwrap();
+        assert_eq!(names, parsed);
+    }
+
+    #[test]
+    fn parses_nested_object() {
+        let doc = r#" { "a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "e": "x" } "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.require("a").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.5, -300.0]);
+        assert!(v.require("b").unwrap().require("c").unwrap().as_bool().unwrap());
+        assert_eq!(v.require("e").unwrap().as_str().unwrap(), "x");
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn surrogate_pair_escape() {
+        let v = parse(r#""💡""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "💡");
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "[1] trailing",
+            "\"unterminated",
+            "nul",
+            "{\"a\": 1,}",
+            "[01abc]",
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn as_usize_guards() {
+        assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
+        assert!(parse("-1").unwrap().as_usize().is_err());
+        assert!(parse("1.5").unwrap().as_usize().is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The public estimator API — the stable surface every workload targets.
+//!
+//! [`CoxFit`] is a lifelines/scikit-survival-style builder: choose
+//! penalties, an optimizer ([`OptimizerKind`]), and a compute engine
+//! ([`EngineKind`]), call [`CoxFit::fit`] on a
+//! [`crate::data::SurvivalDataset`], and get a [`CoxModel`] that owns
+//! the coefficients, the fitted Breslow baseline, and fit diagnostics,
+//! with `predict_risk` / `predict_survival` / `concordance` and JSON
+//! `save` / `load`.
+//!
+//! Everything underneath — problem preprocessing, engines, optimizers,
+//! metrics — stays public for power users, but fallible paths route
+//! through [`crate::error::FastSurvivalError`] here rather than
+//! panicking.
+
+pub mod builder;
+pub mod json;
+pub mod model;
+
+pub use builder::{CoxFit, EngineKind, OptimizerKind};
+pub use model::{Coefficient, CoxModel, FitDiagnostics};

@@ -1,0 +1,340 @@
+//! The fitted estimator returned by [`crate::api::CoxFit`]: coefficients,
+//! the fitted Breslow baseline, fit diagnostics, prediction, evaluation,
+//! and JSON persistence.
+
+use super::json;
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::linalg::Matrix;
+use crate::metrics::{concordance_index, BreslowBaseline};
+use crate::optim::Trace;
+use std::path::Path;
+
+/// Version tag written into saved model files.
+const FORMAT_VERSION: usize = 1;
+
+/// What happened during the fit, preserved on the model.
+#[derive(Clone, Debug)]
+pub struct FitDiagnostics {
+    /// Optimizer display name (e.g. "cubic-surrogate").
+    pub optimizer: String,
+    /// Engine display name ("native" or "xla").
+    pub engine: String,
+    /// Outer iterations (CD sweeps / Newton steps) actually run.
+    pub iterations: usize,
+    /// Relative-tolerance convergence reached.
+    pub converged: bool,
+    /// The fit stopped because the wall-clock budget ran out — distinct
+    /// from convergence (see `Trace::budget_exhausted`).
+    pub budget_exhausted: bool,
+    /// Final penalized objective value.
+    pub objective_value: f64,
+    /// Penalties the model was trained with.
+    pub l1: f64,
+    pub l2: f64,
+    /// Training-set shape.
+    pub n_train: usize,
+    pub n_events: usize,
+    /// Wall-clock fit time in seconds.
+    pub wall_secs: f64,
+    /// Full loss history (empty on loaded models — it is not persisted).
+    pub trace: Trace,
+}
+
+/// One coefficient keyed by its original feature index and name — the
+/// documented replacement for the old no-op `CoxProblem::beta_to_original`
+/// (feature columns are never permuted by preprocessing, so the index is
+/// the dataset's own column index).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coefficient {
+    pub index: usize,
+    pub name: String,
+    pub value: f64,
+}
+
+/// A fitted Cox proportional hazards model.
+#[derive(Clone, Debug)]
+pub struct CoxModel {
+    feature_names: Vec<String>,
+    beta: Vec<f64>,
+    baseline: BreslowBaseline,
+    diagnostics: FitDiagnostics,
+}
+
+impl CoxModel {
+    pub(crate) fn from_parts(
+        feature_names: Vec<String>,
+        beta: Vec<f64>,
+        baseline: BreslowBaseline,
+        diagnostics: FitDiagnostics,
+    ) -> Self {
+        CoxModel { feature_names, beta, baseline, diagnostics }
+    }
+
+    /// Coefficient vector in the dataset's feature order.
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Number of features the model was trained on.
+    pub fn p(&self) -> usize {
+        self.beta.len()
+    }
+
+    pub fn feature_names(&self) -> &[String] {
+        &self.feature_names
+    }
+
+    /// The fitted Breslow baseline cumulative hazard.
+    pub fn baseline(&self) -> &BreslowBaseline {
+        &self.baseline
+    }
+
+    pub fn diagnostics(&self) -> &FitDiagnostics {
+        &self.diagnostics
+    }
+
+    /// All coefficients keyed by original feature index and name.
+    pub fn coefficients(&self) -> Vec<Coefficient> {
+        self.beta
+            .iter()
+            .enumerate()
+            .map(|(index, &value)| Coefficient {
+                index,
+                name: self.feature_names[index].clone(),
+                value,
+            })
+            .collect()
+    }
+
+    /// Coefficients with `|value| > threshold` (the selected features),
+    /// sorted by descending magnitude.
+    pub fn nonzero_coefficients(&self, threshold: f64) -> Vec<Coefficient> {
+        let mut out: Vec<Coefficient> = self
+            .coefficients()
+            .into_iter()
+            .filter(|c| c.value.abs() > threshold)
+            .collect();
+        out.sort_by(|a, b| {
+            b.value.abs().partial_cmp(&a.value.abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+
+    fn check_features(&self, x: &Matrix) -> Result<()> {
+        if x.cols != self.beta.len() {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "feature-count mismatch: model has {} coefficients, input has {} columns",
+                self.beta.len(),
+                x.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Linear risk scores η = Xβ (higher = higher hazard).
+    pub fn predict_risk(&self, x: &Matrix) -> Result<Vec<f64>> {
+        self.check_features(x)?;
+        Ok(x.matvec(&self.beta))
+    }
+
+    /// Individual survival probabilities S(t | x_i) = exp(−H₀(t)·e^{η_i}).
+    pub fn predict_survival(&self, x: &Matrix, t: f64) -> Result<Vec<f64>> {
+        if !t.is_finite() {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "survival horizon must be finite, got {t}"
+            )));
+        }
+        let eta = self.predict_risk(x)?;
+        Ok(eta.iter().map(|&e| self.baseline.survival(t, e)).collect())
+    }
+
+    /// Harrell's concordance index of the model's risk scores on `ds`.
+    pub fn concordance(&self, ds: &SurvivalDataset) -> Result<f64> {
+        let eta = self.predict_risk(&ds.x)?;
+        Ok(concordance_index(&ds.time, &ds.event, &eta))
+    }
+
+    // ---------------------------------------------------- persistence
+
+    /// Serialize to the versioned JSON model format.
+    pub fn to_json(&self) -> String {
+        let d = &self.diagnostics;
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n  \"format_version\": ");
+        out.push_str(&FORMAT_VERSION.to_string());
+        out.push_str(",\n  \"feature_names\": ");
+        json::write_str_array(&mut out, &self.feature_names);
+        out.push_str(",\n  \"beta\": ");
+        json::write_f64_array(&mut out, &self.beta);
+        out.push_str(",\n  \"baseline\": {\"times\": ");
+        json::write_f64_array(&mut out, &self.baseline.times);
+        out.push_str(", \"cumhaz\": ");
+        json::write_f64_array(&mut out, &self.baseline.cumhaz);
+        out.push_str("},\n  \"diagnostics\": {");
+        out.push_str("\"optimizer\": ");
+        json::write_str(&mut out, &d.optimizer);
+        out.push_str(", \"engine\": ");
+        json::write_str(&mut out, &d.engine);
+        out.push_str(&format!(", \"iterations\": {}", d.iterations));
+        out.push_str(&format!(", \"converged\": {}", d.converged));
+        out.push_str(&format!(", \"budget_exhausted\": {}", d.budget_exhausted));
+        out.push_str(", \"objective_value\": ");
+        json::write_f64(&mut out, d.objective_value);
+        out.push_str(", \"l1\": ");
+        json::write_f64(&mut out, d.l1);
+        out.push_str(", \"l2\": ");
+        json::write_f64(&mut out, d.l2);
+        out.push_str(&format!(", \"n_train\": {}", d.n_train));
+        out.push_str(&format!(", \"n_events\": {}", d.n_events));
+        out.push_str(", \"wall_secs\": ");
+        json::write_f64(&mut out, d.wall_secs);
+        out.push_str("}\n}\n");
+        out
+    }
+
+    /// Rebuild a model from [`CoxModel::to_json`] output. The loss trace
+    /// is not persisted; `diagnostics.trace` comes back empty.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let version = doc.require("format_version")?.as_usize()?;
+        if version != FORMAT_VERSION {
+            return Err(FastSurvivalError::Persist(format!(
+                "unsupported model format_version {version} (this build reads {FORMAT_VERSION})"
+            )));
+        }
+        let feature_names = doc.require("feature_names")?.as_string_vec()?;
+        let beta = doc.require("beta")?.as_f64_vec()?;
+        if feature_names.len() != beta.len() {
+            return Err(FastSurvivalError::Persist(format!(
+                "corrupt model: {} feature names vs {} coefficients",
+                feature_names.len(),
+                beta.len()
+            )));
+        }
+        if beta.iter().any(|b| !b.is_finite()) {
+            return Err(FastSurvivalError::Persist(
+                "corrupt model: non-finite coefficient".into(),
+            ));
+        }
+        let bl = doc.require("baseline")?;
+        let baseline = BreslowBaseline::from_parts(
+            bl.require("times")?.as_f64_vec()?,
+            bl.require("cumhaz")?.as_f64_vec()?,
+        )?;
+        let d = doc.require("diagnostics")?;
+        let diagnostics = FitDiagnostics {
+            optimizer: d.require("optimizer")?.as_str()?.to_string(),
+            engine: d.require("engine")?.as_str()?.to_string(),
+            iterations: d.require("iterations")?.as_usize()?,
+            converged: d.require("converged")?.as_bool()?,
+            budget_exhausted: d.require("budget_exhausted")?.as_bool()?,
+            objective_value: d.require("objective_value")?.as_f64()?,
+            l1: d.require("l1")?.as_f64()?,
+            l2: d.require("l2")?.as_f64()?,
+            n_train: d.require("n_train")?.as_usize()?,
+            n_events: d.require("n_events")?.as_usize()?,
+            wall_secs: d.require("wall_secs")?.as_f64()?,
+            trace: Trace::default(),
+        };
+        Ok(CoxModel { feature_names, beta, baseline, diagnostics })
+    }
+
+    /// Save to a JSON file (parent directories are created).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| FastSurvivalError::io(format!("creating {parent:?}"), e))?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+            .map_err(|e| FastSurvivalError::io(format!("writing model to {path:?}"), e))
+    }
+
+    /// Load a model saved by [`CoxModel::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| FastSurvivalError::io(format!("reading model from {path:?}"), e))?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> CoxModel {
+        let baseline = BreslowBaseline::fit(
+            &[1.0, 2.0, 3.0, 4.0],
+            &[true, true, false, true],
+            &[0.2, -0.1, 0.4, 0.0],
+        );
+        CoxModel::from_parts(
+            vec!["age".into(), "x\"quoted\"".into()],
+            vec![0.75, -1.25e-3],
+            baseline,
+            FitDiagnostics {
+                optimizer: "cubic-surrogate".into(),
+                engine: "native".into(),
+                iterations: 17,
+                converged: true,
+                budget_exhausted: false,
+                objective_value: 3.5,
+                l1: 0.5,
+                l2: 0.1,
+                n_train: 4,
+                n_events: 3,
+                wall_secs: 0.01,
+                trace: Trace::default(),
+            },
+        )
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let m = toy_model();
+        let r = CoxModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(m.beta, r.beta);
+        assert_eq!(m.feature_names, r.feature_names);
+        assert_eq!(m.baseline.times, r.baseline.times);
+        assert_eq!(m.baseline.cumhaz, r.baseline.cumhaz);
+        let (d, e) = (m.diagnostics(), r.diagnostics());
+        assert_eq!(d.iterations, e.iterations);
+        assert_eq!(d.converged, e.converged);
+        assert_eq!(d.optimizer, e.optimizer);
+        assert_eq!(d.objective_value, e.objective_value);
+    }
+
+    #[test]
+    fn coefficients_keyed_by_index_and_name() {
+        let m = toy_model();
+        let cs = m.coefficients();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].index, 0);
+        assert_eq!(cs[0].name, "age");
+        assert_eq!(cs[0].value, 0.75);
+        let nz = m.nonzero_coefficients(0.01);
+        assert_eq!(nz.len(), 1, "tiny coefficient filtered");
+        assert_eq!(nz[0].name, "age");
+    }
+
+    #[test]
+    fn predict_rejects_wrong_width() {
+        let m = toy_model();
+        let x = Matrix::from_columns(&[vec![1.0, 2.0]]);
+        assert!(m.predict_risk(&x).is_err());
+        assert!(m.predict_survival(&x, 1.0).is_err());
+    }
+
+    #[test]
+    fn load_rejects_corrupt_documents() {
+        let m = toy_model();
+        let good = m.to_json();
+        assert!(CoxModel::from_json("{}").is_err());
+        assert!(CoxModel::from_json(&good.replace("\"format_version\": 1", "\"format_version\": 99"))
+            .is_err());
+        // Truncations are syntax errors.
+        assert!(CoxModel::from_json(&good[..good.len() / 2]).is_err());
+    }
+}

@@ -30,7 +30,7 @@ use crate::data::{datasets, SurvivalDataset};
 use crate::optim::{self, FitConfig, Objective, Optimizer};
 use crate::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
 use crate::util::table::{fnum, Table};
-use anyhow::{Context, Result};
+use crate::error::{FastSurvivalError, Result};
 use std::path::PathBuf;
 
 /// Harness configuration (CLI-settable).
@@ -74,7 +74,9 @@ impl ExperimentConfig {
 
     fn write(&self, file: &str, table: &Table) -> Result<()> {
         let path = self.out_dir.join(file);
-        table.write_csv(&path).with_context(|| format!("writing {path:?}"))?;
+        table
+            .write_csv(&path)
+            .map_err(|e| FastSurvivalError::io(format!("writing {path:?}"), e))?;
         println!("{}", table.render());
         println!("wrote {}", path.display());
         Ok(())
@@ -93,7 +95,11 @@ pub fn run(id: &str, cfg: &ExperimentConfig) -> Result<()> {
         "fig3" => cv_suite("employee_attrition", "fig3", true, false, cfg),
         "fig4" => cv_suite("dialysis", "fig4", false, true, cfg),
         id if id.starts_with("fig") => {
-            let num: usize = id[3..].parse().context("figure number")?;
+            let num: usize = id[3..].parse().map_err(|_| FastSurvivalError::Unknown {
+                kind: "experiment",
+                name: id.to_string(),
+                expected: "table1|fig1..fig35|all",
+            })?;
             match num {
                 5..=8 => grid_figure(num, 5, "flchain", cfg),
                 9..=12 => grid_figure(num, 9, "employee_attrition", cfg),
@@ -102,7 +108,13 @@ pub fn run(id: &str, cfg: &ExperimentConfig) -> Result<()> {
                 21..=25 => cv_suite("dialysis", id, true, true, cfg),
                 26..=30 => cv_suite("employee_attrition", id, true, true, cfg),
                 31..=35 => cv_suite("kickstarter1", id, true, true, cfg),
-                _ => anyhow::bail!("unknown figure id {id:?}"),
+                _ => {
+                    return Err(FastSurvivalError::Unknown {
+                        kind: "experiment",
+                        name: id.to_string(),
+                        expected: "table1|fig1..fig35|all",
+                    })
+                }
             }
         }
         "all" => {
@@ -120,7 +132,11 @@ pub fn run(id: &str, cfg: &ExperimentConfig) -> Result<()> {
             cv_suite("kickstarter1", "fig31-35", true, true, cfg)?;
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment id {other:?}"),
+        other => Err(FastSurvivalError::Unknown {
+            kind: "experiment",
+            name: other.to_string(),
+            expected: "table1|fig1..fig35|all",
+        }),
     }
 }
 
@@ -209,8 +225,8 @@ pub fn optim_figure(
         &["method", "final loss", "iters", "monotone", "diverged"],
     );
     for m in methods {
-        let opt = optim::by_name(m);
-        let res = opt.fit(&pr, &fit_cfg);
+        let opt = optim::by_name(m)?;
+        let res = opt.fit(&pr, &fit_cfg)?;
         for p in &res.trace.points {
             curve.row(vec![
                 opt.name().to_string(),

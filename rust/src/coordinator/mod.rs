@@ -1,10 +1,11 @@
-//! The Layer-3 coordinator: fit driver (engine-generic coordinate
-//! descent), k-fold cross-validation, and the experiment harness that
-//! regenerates every table and figure of the paper.
+//! The Layer-3 coordinator: k-fold cross-validation and the experiment
+//! harness that regenerates every table and figure of the paper.
+//!
+//! The old engine-specific fit driver is gone: engine selection now
+//! threads through [`crate::optim::Optimizer::fit_from`] and the
+//! [`crate::api::CoxFit`] builder, so there is exactly one fit path.
 
 pub mod cv;
-pub mod driver;
 pub mod experiments;
 
 pub use cv::{cv_selector, CvRow};
-pub use driver::{fit_with_engine, EngineFitConfig};

@@ -2,6 +2,7 @@
 //! groups, so risk sets are prefixes.
 
 use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
 use crate::linalg::Matrix;
 
 /// A tie group: positions `[start, end)` in sorted order share one time.
@@ -41,16 +42,42 @@ pub struct CoxProblem {
 }
 
 impl CoxProblem {
-    /// Build from a dataset (copies + sorts; O(n log n + np)).
+    /// Build from a dataset (copies + sorts; O(n log n + np)), panicking
+    /// on invalid input. Trusted internal callers only; fallible paths
+    /// (the `CoxFit` builder, the CLI) go through [`CoxProblem::try_new`].
     pub fn new(ds: &SurvivalDataset) -> Self {
+        Self::try_new(ds).unwrap_or_else(|e| panic!("CoxProblem::new: {e}"))
+    }
+
+    /// Build from a dataset, validating it first: a typed
+    /// [`FastSurvivalError::InvalidData`] replaces the old `assert!` /
+    /// `expect("NaN time")` panics.
+    pub fn try_new(ds: &SurvivalDataset) -> Result<Self> {
         let n = ds.n();
-        assert!(n > 0, "empty dataset");
+        if n == 0 {
+            return Err(FastSurvivalError::InvalidData("empty dataset (n = 0)".into()));
+        }
+        if let Some(i) = ds.time.iter().position(|t| !t.is_finite()) {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "non-finite observation time at sample {i}: {}",
+                ds.time[i]
+            )));
+        }
+        if let Some(k) = ds.x.data.iter().position(|v| !v.is_finite()) {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "non-finite feature value (column {}, row {})",
+                k / n.max(1),
+                k % n.max(1)
+            )));
+        }
         let mut order: Vec<usize> = (0..n).collect();
-        // Descending time; stable on ties by original index for determinism.
+        // Descending time; stable on ties by original index for
+        // determinism. Finiteness was validated above, so the comparison
+        // is total.
         order.sort_by(|&a, &b| {
             ds.time[b]
                 .partial_cmp(&ds.time[a])
-                .expect("NaN time")
+                .expect("times validated finite")
                 .then(a.cmp(&b))
         });
 
@@ -82,7 +109,7 @@ impl CoxProblem {
             .map(|c| x.col(c).iter().all(|&v| v == 0.0 || v == 1.0))
             .collect();
 
-        CoxProblem { x, time, delta, groups, group_of, xt_delta, order, n_events, col_binary }
+        Ok(CoxProblem { x, time, delta, groups, group_of, xt_delta, order, n_events, col_binary })
     }
 
     pub fn n(&self) -> usize {
@@ -98,13 +125,6 @@ impl CoxProblem {
     #[inline]
     pub fn risk_end(&self, i: usize) -> usize {
         self.groups[self.group_of[i]].end
-    }
-
-    /// Map a β in problem (feature) space back to the original dataset's
-    /// feature order — identical here (columns are not permuted), provided
-    /// for symmetry with `order` on samples.
-    pub fn beta_to_original(&self, beta: &[f64]) -> Vec<f64> {
-        beta.to_vec()
     }
 }
 
@@ -161,5 +181,30 @@ mod tests {
         let p = CoxProblem::new(&ds);
         // Tied at t=2.0: original indices 0 then 2.
         assert_eq!(&p.order[2..4], &[0, 2]);
+    }
+
+    #[test]
+    fn try_new_rejects_invalid_data_with_typed_errors() {
+        use crate::error::FastSurvivalError;
+        // Empty dataset.
+        let empty = SurvivalDataset::new(Matrix::zeros(0, 1), vec![], vec![], "empty");
+        assert!(matches!(
+            CoxProblem::try_new(&empty),
+            Err(FastSurvivalError::InvalidData(_))
+        ));
+        // NaN time.
+        let x = Matrix::from_columns(&[vec![1.0, 2.0]]);
+        let nan_t = SurvivalDataset::new(x, vec![1.0, f64::NAN], vec![true, true], "nan");
+        let err = CoxProblem::try_new(&nan_t).unwrap_err();
+        assert!(err.to_string().contains("sample 1"), "got: {err}");
+        // Non-finite feature.
+        let x = Matrix::from_columns(&[vec![1.0, f64::INFINITY]]);
+        let inf_x = SurvivalDataset::new(x, vec![2.0, 1.0], vec![true, true], "inf");
+        assert!(matches!(
+            CoxProblem::try_new(&inf_x),
+            Err(FastSurvivalError::InvalidData(_))
+        ));
+        // Valid data still passes.
+        assert!(CoxProblem::try_new(&ds_with_ties()).is_ok());
     }
 }

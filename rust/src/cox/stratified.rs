@@ -186,15 +186,17 @@ mod tests {
         let (beta_s, _) = sp.fit(Objective { l1: 0.0, l2: 0.1 }, 200, 1e-10);
         use crate::optim::{CubicSurrogate, FitConfig, Optimizer};
         let pr = CoxProblem::new(&ds);
-        let res = CubicSurrogate.fit(
-            &pr,
-            &FitConfig {
-                objective: Objective { l1: 0.0, l2: 0.1 },
-                max_iters: 200,
-                tol: 1e-10,
-                ..Default::default()
-            },
-        );
+        let res = CubicSurrogate
+            .fit(
+                &pr,
+                &FitConfig {
+                    objective: Objective { l1: 0.0, l2: 0.1 },
+                    max_iters: 200,
+                    tol: 1e-10,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
         let err_s = (beta_s[0] - 0.8).abs();
         let err_u = (res.beta[0] - 0.8).abs();
         assert!(err_s <= err_u + 0.05, "stratified {err_s} vs pooled {err_u}");
@@ -208,15 +210,17 @@ mod tests {
         let (beta_s, _) = sp.fit(Objective { l1: 0.0, l2: 1.0 }, 300, 1e-12);
         use crate::optim::{CubicSurrogate, FitConfig, Optimizer};
         let pr = CoxProblem::new(&ds);
-        let res = CubicSurrogate.fit(
-            &pr,
-            &FitConfig {
-                objective: Objective { l1: 0.0, l2: 1.0 },
-                max_iters: 300,
-                tol: 1e-12,
-                ..Default::default()
-            },
-        );
+        let res = CubicSurrogate
+            .fit(
+                &pr,
+                &FitConfig {
+                    objective: Objective { l1: 0.0, l2: 1.0 },
+                    max_iters: 300,
+                    tol: 1e-12,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
         assert!((beta_s[0] - res.beta[0]).abs() < 1e-6);
     }
 }

@@ -1,0 +1,117 @@
+//! The crate-wide typed error: every fallible public path — the `CoxFit`
+//! builder, the optimizer layer, the compute engines, persistence — returns
+//! [`FastSurvivalError`] instead of panicking, so callers can distinguish
+//! bad input data from bad configuration from runtime failures.
+
+use std::fmt;
+
+/// Typed error for every fallible FastSurvival operation.
+#[derive(Debug)]
+pub enum FastSurvivalError {
+    /// Input data failed validation (NaN time, empty dataset, shape
+    /// mismatch, all-censored training data, ...).
+    InvalidData(String),
+    /// A configuration was rejected before fitting (negative penalty,
+    /// zero iteration budget, ℓ1 with exact Newton, ...).
+    InvalidConfig(String),
+    /// A component was requested by a name that is not registered.
+    Unknown {
+        kind: &'static str,
+        name: String,
+        expected: &'static str,
+    },
+    /// The requested combination (optimizer × engine, disabled feature)
+    /// is not supported.
+    Unsupported(String),
+    /// A compute-engine failure: missing artifacts, PJRT compilation or
+    /// execution errors.
+    Engine(String),
+    /// The optimizer's loss blew up to a non-finite value. The classic
+    /// cause is a Newton-family method on binarized data under weak
+    /// regularization (the paper's Figure-1 phenomenon).
+    Diverged { optimizer: String, iterations: usize },
+    /// A filesystem operation failed.
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+    /// Model persistence (JSON encode/decode) failed.
+    Persist(String),
+}
+
+impl FastSurvivalError {
+    /// Shorthand for an [`FastSurvivalError::Io`] with context.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        FastSurvivalError::Io { context: context.into(), source }
+    }
+}
+
+impl fmt::Display for FastSurvivalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FastSurvivalError::InvalidData(m) => write!(f, "invalid data: {m}"),
+            FastSurvivalError::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            FastSurvivalError::Unknown { kind, name, expected } => {
+                write!(f, "unknown {kind} {name:?} (expected one of: {expected})")
+            }
+            FastSurvivalError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            FastSurvivalError::Engine(m) => write!(f, "engine error: {m}"),
+            FastSurvivalError::Diverged { optimizer, iterations } => write!(
+                f,
+                "optimizer {optimizer:?} diverged after {iterations} iterations \
+                 (consider stronger regularization or a surrogate method)"
+            ),
+            FastSurvivalError::Io { context, source } => write!(f, "{context}: {source}"),
+            FastSurvivalError::Persist(m) => write!(f, "model persistence error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FastSurvivalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FastSurvivalError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FastSurvivalError {
+    fn from(source: std::io::Error) -> Self {
+        FastSurvivalError::Io { context: "io error".into(), source }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, FastSurvivalError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_informative() {
+        let e = FastSurvivalError::InvalidData("NaN time at sample 3".into());
+        assert!(e.to_string().contains("NaN time at sample 3"));
+        let e = FastSurvivalError::Unknown {
+            kind: "optimizer",
+            name: "sgd".into(),
+            expected: "quadratic|cubic",
+        };
+        let s = e.to_string();
+        assert!(s.contains("optimizer") && s.contains("sgd") && s.contains("quadratic"));
+        let e = FastSurvivalError::Diverged { optimizer: "exact-newton".into(), iterations: 4 };
+        assert!(e.to_string().contains("exact-newton"));
+    }
+
+    #[test]
+    fn io_errors_carry_source() {
+        use std::error::Error;
+        let e = FastSurvivalError::io(
+            "reading model.json",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope"),
+        );
+        assert!(e.source().is_some());
+        assert!(e.to_string().starts_with("reading model.json"));
+    }
+}

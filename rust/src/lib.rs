@@ -8,17 +8,27 @@
 //!   moments, lowered to HLO via `python/compile/aot.py`.
 //! - Layer 2 (build time): JAX compute graphs (loss, per-coordinate and
 //!   all-coordinate derivatives), also lowered to HLO.
-//! - Layer 3 (this crate): the optimization coordinator — quadratic/cubic
-//!   surrogate coordinate descent, Newton-family baselines, beam-search
-//!   variable selection, metrics, datasets, and the experiment harness.
+//! - Layer 3 (this crate): the optimization coordinator. The public
+//!   entrypoint is [`api`] — a `CoxFit` builder that selects a problem,
+//!   an engine (native kernels or the AOT-XLA artifacts), and an
+//!   optimizer through one path, and returns a fitted `CoxModel` with
+//!   prediction, evaluation, and JSON persistence. Beneath it live the
+//!   quadratic/cubic surrogate coordinate descent and Newton-family
+//!   baselines ([`optim`]), beam-search variable selection ([`select`]),
+//!   metrics, datasets, and the experiment harness.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod cox;
 pub mod data;
+pub mod error;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
 pub mod select;
 pub mod util;
+
+pub use api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
+pub use error::{FastSurvivalError, Result};

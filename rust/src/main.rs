@@ -1,7 +1,7 @@
 //! FastSurvival CLI — the Layer-3 coordinator entrypoint.
 //!
 //! Subcommands:
-//!   fit         train a CPH model on a dataset
+//!   fit         train a CPH model on a dataset (CoxFit builder API)
 //!   select      cardinality-constrained variable selection
 //!   experiment  regenerate a paper table/figure (see DESIGN.md)
 //!   datasets    list datasets (Table 1 view)
@@ -9,20 +9,21 @@
 //! Examples:
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
 //!   fastsurvival fit --dataset synthetic --engine xla
+//!   fastsurvival fit --dataset synthetic --save results/model.json
 //!   fastsurvival select --dataset synthetic --method beam --k 15
 //!   fastsurvival experiment --id fig1 --scale 0.25
+//!
+//! Every failure path (bad names, invalid data, missing artifacts)
+//! surfaces as a typed `FastSurvivalError`, not a panic.
 
-use anyhow::{bail, Result};
+use fastsurvival::api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
 use fastsurvival::coordinator::experiments::{self, ExperimentConfig};
-use fastsurvival::coordinator::{fit_with_engine, EngineFitConfig};
 use fastsurvival::cox::CoxProblem;
 use fastsurvival::data::binarize::{binarize, BinarizeConfig};
 use fastsurvival::data::synthetic::{generate, SyntheticConfig};
 use fastsurvival::data::{datasets, SurvivalDataset};
-use fastsurvival::linalg::vecops::support_size;
+use fastsurvival::error::{FastSurvivalError, Result};
 use fastsurvival::metrics::concordance_index;
-use fastsurvival::optim::{self, FitConfig, Objective, Optimizer};
-use fastsurvival::runtime::engine::engine_by_name;
 use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
 use fastsurvival::util::args::Args;
 use std::path::Path;
@@ -58,82 +59,76 @@ fn load_dataset(args: &Args) -> SurvivalDataset {
     }
 }
 
+/// The `fit` subcommand: one `CoxFit` builder call regardless of
+/// optimizer or engine.
 fn cmd_fit(args: &Args) -> Result<()> {
     let ds = load_dataset(args);
-    let pr = CoxProblem::new(&ds);
-    let objective = Objective {
-        l1: args.get_or("l1", 0.0),
-        l2: args.get_or("l2", 0.0),
-    };
-    let engine_name = args.str_or("engine", "native");
+    let optimizer = OptimizerKind::from_name(&args.str_or("method", "cubic"))?;
+    let engine = EngineKind::from_name(&args.str_or("engine", "native"))?;
     println!(
-        "fit: dataset={} n={} p={} events={} engine={engine_name}",
+        "fit: dataset={} n={} p={} events={} optimizer={} engine={}",
         ds.name,
         ds.n(),
         ds.p(),
-        ds.n_events()
+        ds.n_events(),
+        optimizer.name(),
+        engine.name()
     );
 
-    let beta = if engine_name == "native" {
-        let method = args.str_or("method", "cubic");
-        let opt = optim::by_name(&method);
-        let cfg = FitConfig {
-            objective,
-            max_iters: args.get_or("iters", 200),
-            tol: args.get_or("tol", 1e-9),
-            budget_secs: args.get_or("budget-secs", 0.0),
-            record_trace: true,
-        };
-        let res = opt.fit(&pr, &cfg);
-        println!(
-            "{}: final objective {:.6} after {} iterations (monotone={}, diverged={})",
-            opt.name(),
-            res.objective_value,
-            res.iterations,
-            res.trace.monotone(1e-8),
-            res.trace.diverged
-        );
-        res.beta
-    } else {
-        // Engine-generic cubic CD (runs on the AOT XLA artifacts).
-        let engine =
-            engine_by_name(&engine_name, Path::new(&args.str_or("artifacts", "artifacts")))?;
-        let cfg = EngineFitConfig {
-            objective,
-            max_sweeps: args.get_or("iters", 100),
-            tol: args.get_or("tol", 1e-9),
-        };
-        let (beta, trace) = fit_with_engine(engine.as_ref(), &pr, &cfg)?;
-        println!(
-            "engine={} final loss {:.6} after {} sweeps",
-            engine.name(),
-            trace.final_loss(),
-            trace.points.len()
-        );
-        beta
-    };
+    let model = CoxFit::new()
+        .l1(args.get_or("l1", 0.0))
+        .l2(args.get_or("l2", 0.0))
+        .optimizer(optimizer)
+        .engine(engine)
+        .artifact_dir(args.str_or("artifacts", "artifacts"))
+        .max_iters(args.get_or("iters", 200))
+        .tol(args.get_or("tol", 1e-9))
+        .budget_secs(args.get_or("budget-secs", 0.0))
+        .fit(&ds)?;
 
-    let eta = ds.x.matvec(&beta);
-    let ci = concordance_index(&ds.time, &ds.event, &eta);
+    let d = model.diagnostics();
+    println!(
+        "{}: final objective {:.6} after {} iterations in {:.1} ms \
+         (converged={}, budget_exhausted={}, monotone={})",
+        d.optimizer,
+        d.objective_value,
+        d.iterations,
+        d.wall_secs * 1e3,
+        d.converged,
+        d.budget_exhausted,
+        d.trace.monotone(1e-8)
+    );
+    let ci = model.concordance(&ds)?;
+    let nonzero = model.nonzero_coefficients(1e-10);
     println!(
         "nonzero coefficients: {} / {}; train CIndex {:.4}",
-        support_size(&beta, 1e-10),
-        ds.p(),
+        nonzero.len(),
+        model.p(),
         ci
     );
     if args.flag("print-beta") {
-        for (j, b) in beta.iter().enumerate() {
-            if b.abs() > 1e-10 {
-                println!("  {} = {:+.6}", ds.feature_names[j], b);
-            }
+        for c in &nonzero {
+            println!("  {} = {:+.6}", c.name, c.value);
         }
+    }
+    if let Some(path) = args.get("save") {
+        let path = Path::new(path);
+        model.save(path)?;
+        // Round-trip sanity: the loaded model must predict identically.
+        // Cheap relative to the fit, and it catches a corrupt write at
+        // the moment it happens rather than at serving time.
+        let loaded = CoxModel::load(path)?;
+        let a = model.predict_risk(&ds.x)?;
+        let b = loaded.predict_risk(&ds.x)?;
+        assert_eq!(a, b, "model round-trip changed predictions");
+        println!("saved model to {} ({} features)", path.display(), loaded.p());
     }
     Ok(())
 }
 
 fn cmd_select(args: &Args) -> Result<()> {
     let ds = load_dataset(args);
-    let pr = CoxProblem::new(&ds);
+    let pr = CoxProblem::try_new(&ds)?;
     let k = args.get_or("k", 10);
     let method = args.str_or("method", "beam");
     let selector: Box<dyn VariableSelector> = match method.as_str() {
@@ -145,7 +140,13 @@ fn cmd_select(args: &Args) -> Result<()> {
         "abess" => Box::new(Abess::default()),
         "coxnet" => Box::new(CoxnetPath::default()),
         "alasso" => Box::new(AdaptiveLasso::default()),
-        other => bail!("unknown selector {other:?} (beam|abess|coxnet|alasso)"),
+        other => {
+            return Err(FastSurvivalError::Unknown {
+                kind: "selector",
+                name: other.to_string(),
+                expected: "beam|abess|coxnet|alasso",
+            })
+        }
     };
     println!(
         "select: dataset={} n={} p={} method={} k={k}",

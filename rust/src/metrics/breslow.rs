@@ -14,6 +14,39 @@ pub struct BreslowBaseline {
 }
 
 impl BreslowBaseline {
+    /// Rebuild from persisted `(times, cumhaz)` pairs, validating the
+    /// invariants a fitted estimator guarantees: equal lengths, strictly
+    /// ascending finite times, and non-negative, non-decreasing hazard.
+    /// Used by `CoxModel::load` so a corrupted model file fails loudly.
+    pub fn from_parts(times: Vec<f64>, cumhaz: Vec<f64>) -> crate::error::Result<Self> {
+        use crate::error::FastSurvivalError;
+        if times.len() != cumhaz.len() {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "baseline length mismatch: {} times vs {} hazard values",
+                times.len(),
+                cumhaz.len()
+            )));
+        }
+        if times.iter().any(|t| !t.is_finite()) || cumhaz.iter().any(|h| !h.is_finite()) {
+            return Err(FastSurvivalError::InvalidData(
+                "baseline contains non-finite values".into(),
+            ));
+        }
+        if times.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(FastSurvivalError::InvalidData(
+                "baseline event times must be strictly ascending".into(),
+            ));
+        }
+        if matches!(cumhaz.first(), Some(&h) if h < 0.0)
+            || cumhaz.windows(2).any(|w| w[1] < w[0])
+        {
+            return Err(FastSurvivalError::InvalidData(
+                "baseline cumulative hazard must be non-negative and non-decreasing".into(),
+            ));
+        }
+        Ok(BreslowBaseline { times, cumhaz })
+    }
+
     /// Fit from training observations and their linear predictors η.
     pub fn fit(time: &[f64], event: &[bool], eta: &[f64]) -> Self {
         let n = time.len();
@@ -109,6 +142,23 @@ mod tests {
             prev = s;
         }
         assert!(b.survival(2.0, 1.0) < b.survival(2.0, -1.0));
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_validates() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true, true, false, true];
+        let eta = vec![0.3, -0.1, 0.7, 0.0];
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        let r = BreslowBaseline::from_parts(b.times.clone(), b.cumhaz.clone()).unwrap();
+        for t in [0.5, 1.0, 2.5, 4.5] {
+            assert_eq!(b.cumulative_hazard(t), r.cumulative_hazard(t));
+        }
+        // Corrupted inputs are rejected.
+        assert!(BreslowBaseline::from_parts(vec![1.0], vec![]).is_err());
+        assert!(BreslowBaseline::from_parts(vec![2.0, 1.0], vec![0.1, 0.2]).is_err());
+        assert!(BreslowBaseline::from_parts(vec![1.0, 2.0], vec![0.2, 0.1]).is_err());
+        assert!(BreslowBaseline::from_parts(vec![1.0], vec![f64::NAN]).is_err());
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! analytic cubic-regularized Newton step with the explicit constant L3
 //! from Theorem 3.4. Monotone descent, no line search.
 
-use super::objective::{FitConfig, FitResult, Objective, Optimizer, Stopper};
+use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer, Stopper};
 use super::prox::{cubic_l1_step, cubic_step};
 use crate::cox::derivatives::coord_d1_d2;
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
+use crate::runtime::engine::CoxEngine;
 
 /// The paper's second-order surrogate method.
 #[derive(Clone, Copy, Debug, Default)]
@@ -72,10 +74,37 @@ impl Optimizer for CubicSurrogate {
         "cubic-surrogate"
     }
 
-    fn fit_from(&self, problem: &CoxProblem, state: CoxState, config: &FitConfig) -> FitResult {
-        let lip = all_lipschitz(problem);
-        let coords: Vec<usize> = (0..problem.p()).collect();
-        fit_support(problem, state, &coords, config, &lip)
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        if engine.is_native() {
+            // Fused in-process kernels — the paper's hot path.
+            let lip = all_lipschitz(problem);
+            let coords: Vec<usize> = (0..problem.p()).collect();
+            return Ok(fit_support(problem, state, &coords, config, &lip));
+        }
+        // Engine-served quantities: the identical sweep runs on the AOT
+        // XLA artifacts, proving the three layers compose on a real fit.
+        let obj = config.objective;
+        engine_cd_fit(problem, state, config, engine, |engine, problem, state, l, lip| {
+            let (d1, d2) = engine.coord_d1_d2(problem, state, l)?;
+            let a = d1 + 2.0 * obj.l2 * state.beta[l];
+            let b = (d2 + 2.0 * obj.l2).max(0.0);
+            if b <= 0.0 && lip.l3 <= 0.0 {
+                return Ok(());
+            }
+            let delta = if obj.l1 > 0.0 {
+                cubic_l1_step(a, b, lip.l3, state.beta[l], obj.l1)
+            } else {
+                cubic_step(a, b, lip.l3)
+            };
+            state.update_coord(problem, l, delta);
+            Ok(())
+        })
     }
 }
 
@@ -101,7 +130,7 @@ mod tests {
     fn monotone_decrease() {
         let pr = random_problem(60, 5, 21);
         let cfg = FitConfig { max_iters: 50, ..Default::default() };
-        let res = CubicSurrogate.fit(&pr, &cfg);
+        let res = CubicSurrogate.fit(&pr, &cfg).unwrap();
         assert!(res.trace.monotone(1e-10));
     }
 
@@ -116,8 +145,8 @@ mod tests {
             tol: 1e-13,
             ..Default::default()
         };
-        let rq = super::super::QuadraticSurrogate.fit(&pr, &cfg);
-        let rc = CubicSurrogate.fit(&pr, &cfg);
+        let rq = super::super::QuadraticSurrogate.fit(&pr, &cfg).unwrap();
+        let rc = CubicSurrogate.fit(&pr, &cfg).unwrap();
         assert!(
             (rq.objective_value - rc.objective_value).abs() < 1e-5,
             "quad {} vs cubic {}",
@@ -137,8 +166,8 @@ mod tests {
             tol: 0.0,
             ..Default::default()
         };
-        let rq = super::super::QuadraticSurrogate.fit(&pr, &cfg);
-        let rc = CubicSurrogate.fit(&pr, &cfg);
+        let rq = super::super::QuadraticSurrogate.fit(&pr, &cfg).unwrap();
+        let rc = CubicSurrogate.fit(&pr, &cfg).unwrap();
         assert!(
             rc.objective_value <= rq.objective_value + 1e-9,
             "cubic {} should be <= quad {} after 4 sweeps",
@@ -156,7 +185,7 @@ mod tests {
             tol: 1e-13,
             ..Default::default()
         };
-        let res = CubicSurrogate.fit(&pr, &cfg);
+        let res = CubicSurrogate.fit(&pr, &cfg).unwrap();
         let st = CoxState::from_beta(&pr, &res.beta);
         let g = beta_gradient(&pr, &st);
         for l in 0..pr.p() {
@@ -173,7 +202,7 @@ mod tests {
             max_iters: 100,
             ..Default::default()
         };
-        let res = CubicSurrogate.fit(&pr, &cfg);
+        let res = CubicSurrogate.fit(&pr, &cfg).unwrap();
         assert!(res.trace.monotone(1e-9));
         let nnz = res.beta.iter().filter(|b| b.abs() > 1e-10).count();
         assert!(nnz < pr.p(), "λ1 should zero out some coordinates");

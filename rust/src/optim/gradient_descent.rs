@@ -5,11 +5,13 @@
 //! Hessian, valid globally via Theorem 3.4). With λ1 > 0 the update is
 //! the proximal (ISTA) step.
 
-use super::objective::{FitConfig, FitResult, Optimizer, Stopper};
+use super::objective::{require_native, FitConfig, FitResult, Optimizer, Stopper};
 use crate::cox::derivatives::beta_gradient;
 use crate::cox::lipschitz::all_lipschitz;
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
 use crate::linalg::vecops::soft_threshold;
+use crate::runtime::engine::CoxEngine;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GradientDescent {
@@ -22,7 +24,14 @@ impl Optimizer for GradientDescent {
         "gradient-descent"
     }
 
-    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        mut state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        require_native(self.name(), engine)?;
         let obj = config.objective;
         let lr = if self.step_size > 0.0 {
             self.step_size
@@ -52,7 +61,7 @@ impl Optimizer for GradientDescent {
             }
         }
         let objective_value = obj.value(problem, &state);
-        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+        Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
     }
 }
 
@@ -82,7 +91,7 @@ mod tests {
             max_iters: 100,
             ..Default::default()
         };
-        let res = GradientDescent::default().fit(&pr, &cfg);
+        let res = GradientDescent::default().fit(&pr, &cfg).unwrap();
         assert!(res.trace.monotone(1e-9), "1/L descent must be monotone");
     }
 
@@ -97,8 +106,8 @@ mod tests {
             tol: 0.0,
             ..Default::default()
         };
-        let rg = GradientDescent::default().fit(&pr, &cfg);
-        let rq = QuadraticSurrogate.fit(&pr, &cfg);
+        let rg = GradientDescent::default().fit(&pr, &cfg).unwrap();
+        let rq = QuadraticSurrogate.fit(&pr, &cfg).unwrap();
         assert!(
             rq.objective_value < rg.objective_value - 1e-6,
             "cd {} should beat gd {}",
@@ -115,7 +124,7 @@ mod tests {
             max_iters: 500,
             ..Default::default()
         };
-        let res = GradientDescent::default().fit(&pr, &cfg);
+        let res = GradientDescent::default().fit(&pr, &cfg).unwrap();
         let nnz = res.beta.iter().filter(|b| b.abs() > 1e-10).count();
         assert!(nnz < pr.p());
     }

@@ -8,6 +8,9 @@
 //! All optimizers implement [`Optimizer::fit`] and record a [`Trace`] of
 //! (iteration, wall-clock, loss) so the Figure-1 experiments can plot
 //! loss vs. iterations and loss vs. time for every method uniformly.
+//! Engine selection (native kernels vs. the AOT-XLA artifacts) threads
+//! through [`Optimizer::fit_from`]; [`OptimizerKind`] is the typed
+//! registry of methods (re-exported by [`crate::api`]).
 
 pub mod cubic;
 pub mod gradient_descent;
@@ -27,18 +30,92 @@ pub use prox_newton::ProxNewton;
 pub use quadratic::QuadraticSurrogate;
 pub use quasi_newton::QuasiNewton;
 
-/// Construct an optimizer by name (CLI / experiment harness).
-pub fn by_name(name: &str) -> Box<dyn Optimizer> {
-    match name {
-        "quadratic" => Box::new(QuadraticSurrogate::default()),
-        "cubic" => Box::new(CubicSurrogate::default()),
-        "newton" => Box::new(ExactNewton::default()),
-        "newton-ls" => Box::new(ExactNewton { line_search: true }),
-        "quasi-newton" => Box::new(QuasiNewton::default()),
-        "prox-newton" => Box::new(ProxNewton::default()),
-        "gd" => Box::new(GradientDescent::default()),
-        other => panic!("unknown optimizer {other:?}"),
+use crate::error::{FastSurvivalError, Result};
+
+/// Typed enumeration of every optimizer — the one registry behind both
+/// [`by_name`] (CLI strings) and the `CoxFit` builder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Quadratic-surrogate coordinate descent (paper Eq. 15).
+    Quadratic,
+    /// Cubic-surrogate coordinate descent (paper Eq. 16) — the default.
+    Cubic,
+    /// Exact Newton (Section 2 baseline; no ℓ1, native engine only).
+    Newton,
+    /// Exact Newton with Armijo backtracking.
+    NewtonLineSearch,
+    /// glmnet-style quasi-Newton (Simon et al.).
+    QuasiNewton,
+    /// skglm-style proximal Newton with the diagonal bound.
+    ProxNewton,
+    /// (Proximal) gradient descent with the safe 1/L step.
+    GradientDescent,
+}
+
+impl OptimizerKind {
+    pub const ALL: [OptimizerKind; 7] = [
+        OptimizerKind::Quadratic,
+        OptimizerKind::Cubic,
+        OptimizerKind::Newton,
+        OptimizerKind::NewtonLineSearch,
+        OptimizerKind::QuasiNewton,
+        OptimizerKind::ProxNewton,
+        OptimizerKind::GradientDescent,
+    ];
+
+    /// CLI name (the same strings [`by_name`] always accepted).
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerKind::Quadratic => "quadratic",
+            OptimizerKind::Cubic => "cubic",
+            OptimizerKind::Newton => "newton",
+            OptimizerKind::NewtonLineSearch => "newton-ls",
+            OptimizerKind::QuasiNewton => "quasi-newton",
+            OptimizerKind::ProxNewton => "prox-newton",
+            OptimizerKind::GradientDescent => "gd",
+        }
     }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        OptimizerKind::ALL
+            .into_iter()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| FastSurvivalError::Unknown {
+                kind: "optimizer",
+                name: name.to_string(),
+                expected: "quadratic|cubic|newton|newton-ls|quasi-newton|prox-newton|gd",
+            })
+    }
+
+    /// Instantiate the optimizer.
+    pub fn build(self) -> Box<dyn Optimizer> {
+        match self {
+            OptimizerKind::Quadratic => Box::new(QuadraticSurrogate),
+            OptimizerKind::Cubic => Box::new(CubicSurrogate),
+            OptimizerKind::Newton => Box::new(ExactNewton::default()),
+            OptimizerKind::NewtonLineSearch => Box::new(ExactNewton { line_search: true }),
+            OptimizerKind::QuasiNewton => Box::new(QuasiNewton::default()),
+            OptimizerKind::ProxNewton => Box::new(ProxNewton::default()),
+            OptimizerKind::GradientDescent => Box::new(GradientDescent::default()),
+        }
+    }
+
+    /// The surrogate CD methods run on any engine; the Newton-family and
+    /// GD baselines need the native full-gradient/Hessian kernels.
+    pub fn engine_generic(self) -> bool {
+        matches!(self, OptimizerKind::Quadratic | OptimizerKind::Cubic)
+    }
+
+    /// Exact Newton has no ℓ1 (non-smooth) mode.
+    pub fn supports_l1(self) -> bool {
+        !matches!(self, OptimizerKind::Newton | OptimizerKind::NewtonLineSearch)
+    }
+}
+
+/// Construct an optimizer by name (CLI / experiment harness). Unknown
+/// names return a typed [`FastSurvivalError::Unknown`].
+pub fn by_name(name: &str) -> Result<Box<dyn Optimizer>> {
+    Ok(OptimizerKind::from_name(name)?.build())
 }
 
 /// Names usable with [`by_name`].

@@ -7,14 +7,17 @@
 //! enables backtracking (the ablation the paper says one wants to avoid
 //! paying for).
 
-use super::objective::{FitConfig, FitResult, Optimizer, Stopper};
+use super::objective::{require_native, FitConfig, FitResult, Optimizer, Stopper};
 use crate::cox::derivatives::{beta_gradient, beta_hessian};
 use crate::cox::loss::loss_for_eta;
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::{FastSurvivalError, Result};
 use crate::linalg::{Cholesky, Matrix};
+use crate::runtime::engine::CoxEngine;
 
 /// Exact Newton. ℓ1 is not supported (the paper: "the exact Newton method
-/// cannot be directly applied" to ℓ1 problems); `fit` panics if λ1 > 0.
+/// cannot be directly applied" to ℓ1 problems); `fit` returns a typed
+/// [`FastSurvivalError::InvalidConfig`] if λ1 > 0.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExactNewton {
     pub line_search: bool,
@@ -29,12 +32,20 @@ impl Optimizer for ExactNewton {
         }
     }
 
-    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        mut state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        require_native(self.name(), engine)?;
         let obj = config.objective;
-        assert!(
-            obj.l1 == 0.0,
-            "exact Newton does not handle ℓ1 (non-smooth) objectives"
-        );
+        if obj.l1 != 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(
+                "exact Newton does not handle ℓ1 (non-smooth) objectives".into(),
+            ));
+        }
         let p = problem.p();
         let mut stopper = Stopper::new();
         let mut iters = 0;
@@ -85,7 +96,7 @@ impl Optimizer for ExactNewton {
             }
         }
         let objective_value = obj.value(problem, &state);
-        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+        Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
     }
 }
 
@@ -122,11 +133,10 @@ mod tests {
             tol: 1e-12,
             ..Default::default()
         };
-        let rn = ExactNewton::default().fit(&pr, &cfg);
-        let rq = QuadraticSurrogate.fit(
-            &pr,
-            &FitConfig { max_iters: 2000, tol: 1e-13, ..cfg.clone() },
-        );
+        let rn = ExactNewton::default().fit(&pr, &cfg).unwrap();
+        let rq = QuadraticSurrogate
+            .fit(&pr, &FitConfig { max_iters: 2000, tol: 1e-13, ..cfg.clone() })
+            .unwrap();
         assert!(!rn.trace.diverged);
         assert!(
             (rn.objective_value - rq.objective_value).abs() < 1e-5,
@@ -154,7 +164,7 @@ mod tests {
             tol: 1e-14,
             ..Default::default()
         };
-        let res = ExactNewton::default().fit(&pr, &cfg);
+        let res = ExactNewton::default().fit(&pr, &cfg).unwrap();
         assert!(
             res.trace.ever_increased(1e-6) || res.trace.diverged,
             "expected plain Newton blow-up; losses {:?}",
@@ -162,10 +172,9 @@ mod tests {
         );
         // Our surrogate on the same problem stays monotone (the contrast
         // the paper draws in Figure 1).
-        let rc = crate::optim::CubicSurrogate.fit(
-            &pr,
-            &FitConfig { max_iters: 10, ..cfg.clone() },
-        );
+        let rc = crate::optim::CubicSurrogate
+            .fit(&pr, &FitConfig { max_iters: 10, ..cfg.clone() })
+            .unwrap();
         assert!(rc.trace.monotone(1e-9));
     }
 
@@ -178,18 +187,22 @@ mod tests {
             tol: 1e-14,
             ..Default::default()
         };
-        let ls = ExactNewton { line_search: true }.fit(&pr, &cfg);
+        let ls = ExactNewton { line_search: true }.fit(&pr, &cfg).unwrap();
         assert!(ls.trace.monotone(1e-8), "line-search Newton must be monotone");
     }
 
     #[test]
-    #[should_panic(expected = "exact Newton does not handle")]
-    fn rejects_l1() {
+    fn rejects_l1_with_typed_error() {
         let pr = random_problem(20, 2, 3, 0.2);
         let cfg = FitConfig {
             objective: Objective { l1: 1.0, l2: 0.0 },
             ..Default::default()
         };
-        ExactNewton::default().fit(&pr, &cfg);
+        let err = ExactNewton::default().fit(&pr, &cfg).unwrap_err();
+        assert!(
+            matches!(err, FastSurvivalError::InvalidConfig(_)),
+            "expected InvalidConfig, got {err}"
+        );
+        assert!(err.to_string().contains("exact Newton"));
     }
 }

@@ -8,10 +8,12 @@
 //! penalty's concavity (b > 1/γ for MCP, b > 1/(γ−1) for SCAD), which
 //! Theorem 3.4's explicit constants let us check up front.
 
-use super::objective::{FitConfig, FitResult, Optimizer, Stopper};
+use super::objective::{require_native, FitConfig, FitResult, Optimizer, Stopper};
 use crate::cox::derivatives::coord_d1;
 use crate::cox::lipschitz::all_lipschitz;
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
+use crate::runtime::engine::CoxEngine;
 use crate::linalg::vecops::soft_threshold;
 
 /// Penalty family for [`NonconvexSurrogate`].
@@ -116,7 +118,14 @@ impl Optimizer for NonconvexSurrogate {
         }
     }
 
-    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        mut state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        require_native(self.name(), engine)?;
         let lip = all_lipschitz(problem);
         let mut stopper = Stopper::new();
         let mut iters = 0;
@@ -156,7 +165,7 @@ impl Optimizer for NonconvexSurrogate {
         let objective_value = crate::cox::loss::loss(problem, &state)
             + config.objective.l2 * state.beta.iter().map(|b| b * b).sum::<f64>()
             + pen_total(&state.beta);
-        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+        Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
     }
 }
 
@@ -234,12 +243,13 @@ mod tests {
             ..Default::default()
         };
         let mcp = NonconvexSurrogate { penalty: Penalty::Mcp { lambda: lam, gamma: 3.0 } }
-            .fit(&pr, &cfg);
+            .fit(&pr, &cfg)
+            .unwrap();
         let lasso_cfg = FitConfig {
             objective: Objective { l1: lam, l2: 0.0 },
             ..cfg.clone()
         };
-        let lasso = QuadraticSurrogate.fit(&pr, &lasso_cfg);
+        let lasso = QuadraticSurrogate.fit(&pr, &lasso_cfg).unwrap();
         let nnz = |b: &[f64]| b.iter().filter(|v| v.abs() > 1e-8).count();
         assert!(nnz(&mcp.beta) <= pr.p());
         assert!(nnz(&mcp.beta) >= 3, "MCP should keep the true signals");
@@ -269,7 +279,7 @@ mod tests {
             Penalty::Scad { lambda: 1.0, gamma: 3.7 },
             Penalty::Mcp { lambda: 1.0, gamma: 2.5 },
         ] {
-            let res = NonconvexSurrogate { penalty: pen }.fit(&pr, &cfg);
+            let res = NonconvexSurrogate { penalty: pen }.fit(&pr, &cfg).unwrap();
             assert!(res.trace.monotone(1e-8), "{pen:?} must descend monotonically");
         }
     }

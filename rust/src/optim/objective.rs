@@ -1,7 +1,17 @@
 //! Shared optimizer interface: objective spec, fit config, trace, result.
+//!
+//! Since the unified-API redesign, [`Optimizer::fit_from`] threads a
+//! [`CoxEngine`] through every method: the same optimizer loop runs on
+//! the native Rust kernels or on the AOT-compiled XLA artifacts, and
+//! engine selection is a caller-side choice rather than a separate fit
+//! path. Optimizers are fallible ([`crate::error::Result`]) because
+//! engines are.
 
+use crate::cox::lipschitz::LipschitzPair;
 use crate::cox::loss::penalized_loss;
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::{FastSurvivalError, Result};
+use crate::runtime::engine::{CoxEngine, NativeEngine};
 use std::time::Instant;
 
 /// The regularized objective ℓ(β) + λ1‖β‖₁ + λ2‖β‖₂².
@@ -15,9 +25,18 @@ impl Objective {
     pub fn value(&self, problem: &CoxProblem, state: &CoxState) -> f64 {
         penalized_loss(problem, state, self.l1, self.l2)
     }
+
+    /// The penalty term λ1‖β‖₁ + λ2‖β‖₂² alone — added to an
+    /// engine-served unpenalized loss.
+    pub fn penalty(&self, beta: &[f64]) -> f64 {
+        self.l1 * beta.iter().map(|b| b.abs()).sum::<f64>()
+            + self.l2 * beta.iter().map(|b| b * b).sum::<f64>()
+    }
 }
 
-/// Stopping / recording configuration.
+/// Stopping / recording configuration — one config for every optimizer
+/// and every engine (the old engine-specific fit config folded into
+/// this).
 #[derive(Clone, Debug)]
 pub struct FitConfig {
     pub objective: Objective,
@@ -25,7 +44,8 @@ pub struct FitConfig {
     pub max_iters: usize,
     /// Relative loss-decrease tolerance.
     pub tol: f64,
-    /// Wall-clock budget in seconds (0 = unlimited).
+    /// Wall-clock budget in seconds (0 = unlimited). Exhaustion is
+    /// recorded on [`Trace::budget_exhausted`].
     pub budget_secs: f64,
     /// Record a loss-history trace (small overhead: one loss eval/iter).
     pub record_trace: bool,
@@ -57,6 +77,9 @@ pub struct Trace {
     pub points: Vec<TracePoint>,
     pub diverged: bool,
     pub converged: bool,
+    /// True when the fit stopped because `budget_secs` ran out, so
+    /// callers can distinguish a timeout from convergence.
+    pub budget_exhausted: bool,
 }
 
 impl Trace {
@@ -91,18 +114,90 @@ pub struct FitResult {
 }
 
 /// The optimizer interface shared by our methods and every baseline.
+///
+/// All Cox quantities flow through the [`CoxEngine`] passed to
+/// [`Optimizer::fit_from`]; [`Optimizer::fit`] is the β = 0,
+/// native-engine convenience used everywhere the paper initializes
+/// from zero.
 pub trait Optimizer {
     /// Human-readable name (figure legends).
     fn name(&self) -> &'static str;
 
-    /// Fit from β = 0 (the paper's initialization everywhere).
-    fn fit(&self, problem: &CoxProblem, config: &FitConfig) -> FitResult {
+    /// Fit from β = 0 (the paper's initialization everywhere) on the
+    /// in-process native engine.
+    fn fit(&self, problem: &CoxProblem, config: &FitConfig) -> Result<FitResult> {
         let state = CoxState::zeros(problem);
-        self.fit_from(problem, state, config)
+        self.fit_from(problem, state, config, &NativeEngine)
     }
 
-    /// Fit from a warm-started state.
-    fn fit_from(&self, problem: &CoxProblem, state: CoxState, config: &FitConfig) -> FitResult;
+    /// Fit from a warm-started state, with every Cox quantity (loss,
+    /// derivatives, Lipschitz constants) served by `engine`.
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult>;
+}
+
+/// Guard for baselines that need full-gradient/Hessian kernels not served
+/// through the engine abstraction: they run natively or not at all.
+pub(crate) fn require_native(optimizer: &str, engine: &dyn CoxEngine) -> Result<()> {
+    if engine.is_native() {
+        Ok(())
+    } else {
+        Err(FastSurvivalError::Unsupported(format!(
+            "optimizer {optimizer:?} needs full-gradient/Hessian kernels that only the \
+             native engine provides (got engine {:?}); use the quadratic or cubic \
+             surrogate for non-native engines",
+            engine.name()
+        )))
+    }
+}
+
+/// The engine-generic coordinate-descent outer loop shared by the
+/// quadratic and cubic surrogates: prefetch per-coordinate Lipschitz
+/// constants, sweep `step` over all coordinates, evaluate the penalized
+/// loss through the engine once per sweep, and stop via [`Stopper`].
+/// Exists once so the two surrogates cannot drift apart on stopping or
+/// penalty semantics.
+pub(crate) fn engine_cd_fit<F>(
+    problem: &CoxProblem,
+    mut state: CoxState,
+    config: &FitConfig,
+    engine: &dyn CoxEngine,
+    mut step: F,
+) -> Result<FitResult>
+where
+    F: FnMut(&dyn CoxEngine, &CoxProblem, &mut CoxState, usize, LipschitzPair) -> Result<()>,
+{
+    let obj = config.objective;
+    let p = problem.p();
+    let lip: Vec<LipschitzPair> =
+        (0..p).map(|l| engine.lipschitz(problem, l)).collect::<Result<_>>()?;
+    let mut stopper = Stopper::new();
+    let mut iters = 0;
+    // The last in-loop loss is exact for the final state, so the final
+    // objective needs no extra engine round-trip (each one is a full
+    // PJRT launch on the XLA engine).
+    let mut last_loss = None;
+    for it in 0..config.max_iters {
+        for l in 0..p {
+            step(engine, problem, &mut state, l, lip[l])?;
+        }
+        iters = it + 1;
+        let loss = engine.loss(problem, &state)? + obj.penalty(&state.beta);
+        last_loss = Some(loss);
+        if stopper.step(it, loss, config) {
+            break;
+        }
+    }
+    let objective_value = match last_loss {
+        Some(loss) => loss,
+        None => engine.loss(problem, &state)? + obj.penalty(&state.beta),
+    };
+    Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
 }
 
 /// Shared stopping logic for iterative fits.
@@ -135,6 +230,7 @@ impl Stopper {
             return true;
         }
         if config.budget_secs > 0.0 && self.start.elapsed().as_secs_f64() > config.budget_secs {
+            self.trace.budget_exhausted = true;
             return true;
         }
         false
@@ -166,6 +262,7 @@ mod tests {
         assert!(!s.step(1, 9.0, &cfg));
         assert!(s.step(2, 9.0 - 1e-9, &cfg));
         assert!(s.trace.converged);
+        assert!(!s.trace.budget_exhausted);
     }
 
     #[test]
@@ -175,5 +272,26 @@ mod tests {
         assert!(!s.step(0, 10.0, &cfg));
         assert!(s.step(1, f64::INFINITY, &cfg));
         assert!(s.trace.diverged);
+    }
+
+    #[test]
+    fn stopper_marks_budget_exhaustion() {
+        let mut s = Stopper::new();
+        // A still-improving loss sequence that runs out of wall clock:
+        // the stop must be attributed to the budget, not convergence.
+        let cfg = FitConfig { tol: 1e-12, budget_secs: 1e-9, ..Default::default() };
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(s.step(0, 10.0, &cfg), "expired budget must stop the fit");
+        assert!(s.trace.budget_exhausted);
+        assert!(!s.trace.converged);
+        assert!(!s.trace.diverged);
+    }
+
+    #[test]
+    fn objective_penalty_matches_value_decomposition() {
+        let obj = Objective { l1: 2.0, l2: 0.5 };
+        let beta = [1.0, -3.0, 0.0];
+        let expect = 2.0 * 4.0 + 0.5 * 10.0;
+        assert!((obj.penalty(&beta) - expect).abs() < 1e-12);
     }
 }

@@ -6,10 +6,12 @@
 //! subtracted `w_k²·B_k` term is dropped). The WLS subproblem is then
 //! solved by coordinate descent exactly as in quasi-Newton.
 
-use super::objective::{FitConfig, FitResult, Optimizer, Stopper};
+use super::objective::{require_native, FitConfig, FitResult, Optimizer, Stopper};
 use super::quasi_newton::wls_coordinate_descent;
 use crate::cox::derivatives::eta_gradient;
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
+use crate::runtime::engine::CoxEngine;
 
 /// skglm-style proximal Newton with the diagonal bound.
 #[derive(Clone, Copy, Debug)]
@@ -30,7 +32,14 @@ impl Optimizer for ProxNewton {
         "prox-newton"
     }
 
-    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        mut state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        require_native(self.name(), engine)?;
         let obj = config.objective;
         let mut stopper = Stopper::new();
         let mut iters = 0;
@@ -63,7 +72,7 @@ impl Optimizer for ProxNewton {
             }
         }
         let objective_value = obj.value(problem, &state);
-        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+        Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
     }
 }
 
@@ -109,11 +118,10 @@ mod tests {
             tol: 1e-12,
             ..Default::default()
         };
-        let rp = ProxNewton::default().fit(&pr, &cfg);
-        let rc = CubicSurrogate.fit(
-            &pr,
-            &FitConfig { max_iters: 3000, tol: 1e-13, ..cfg.clone() },
-        );
+        let rp = ProxNewton::default().fit(&pr, &cfg).unwrap();
+        let rc = CubicSurrogate
+            .fit(&pr, &FitConfig { max_iters: 3000, tol: 1e-13, ..cfg.clone() })
+            .unwrap();
         assert!(
             (rp.objective_value - rc.objective_value).abs() < 1e-4,
             "prox-newton {} vs cubic {}",
@@ -133,8 +141,8 @@ mod tests {
             tol: 0.0,
             ..Default::default()
         };
-        let rp = ProxNewton::default().fit(&pr, &cfg);
-        let rq = crate::optim::QuasiNewton::default().fit(&pr, &cfg);
+        let rp = ProxNewton::default().fit(&pr, &cfg).unwrap();
+        let rq = crate::optim::QuasiNewton::default().fit(&pr, &cfg).unwrap();
         assert!(
             rp.objective_value >= rq.objective_value - 1e-6,
             "prox {} vs quasi {}",

@@ -5,11 +5,13 @@
 //! constant L2_l from Theorem 3.4 — no line search, monotone descent,
 //! global convergence.
 
-use super::objective::{FitConfig, FitResult, Objective, Optimizer, Stopper};
+use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer, Stopper};
 use super::prox::{quad_l1_step, quad_step};
 use crate::cox::derivatives::coord_d1;
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
+use crate::runtime::engine::CoxEngine;
 
 /// The paper's first-order surrogate method.
 #[derive(Clone, Copy, Debug, Default)]
@@ -72,10 +74,36 @@ impl Optimizer for QuadraticSurrogate {
         "quadratic-surrogate"
     }
 
-    fn fit_from(&self, problem: &CoxProblem, state: CoxState, config: &FitConfig) -> FitResult {
-        let lip = all_lipschitz(problem);
-        let coords: Vec<usize> = (0..problem.p()).collect();
-        fit_support(problem, state, &coords, config, &lip)
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        if engine.is_native() {
+            // Fused in-process kernels — the paper's hot path.
+            let lip = all_lipschitz(problem);
+            let coords: Vec<usize> = (0..problem.p()).collect();
+            return Ok(fit_support(problem, state, &coords, config, &lip));
+        }
+        // Engine-served quantities: same sweep, every Cox term remote.
+        let obj = config.objective;
+        engine_cd_fit(problem, state, config, engine, |engine, problem, state, l, lip| {
+            let b = lip.l2 + 2.0 * obj.l2;
+            if b <= 0.0 {
+                return Ok(());
+            }
+            let d1 = engine.coord_d1(problem, state, l)?;
+            let a = d1 + 2.0 * obj.l2 * state.beta[l];
+            let delta = if obj.l1 > 0.0 {
+                quad_l1_step(a, b, state.beta[l], obj.l1)
+            } else {
+                quad_step(a, b)
+            };
+            state.update_coord(problem, l, delta);
+            Ok(())
+        })
     }
 }
 
@@ -100,7 +128,7 @@ mod tests {
     fn monotone_decrease_unregularized() {
         let pr = random_problem(60, 5, 1);
         let cfg = FitConfig { max_iters: 50, ..Default::default() };
-        let res = QuadraticSurrogate.fit(&pr, &cfg);
+        let res = QuadraticSurrogate.fit(&pr, &cfg).unwrap();
         assert!(res.trace.monotone(1e-10), "loss must never increase");
         assert!(res.trace.points.len() > 2);
     }
@@ -114,7 +142,7 @@ mod tests {
             tol: 1e-13,
             ..Default::default()
         };
-        let res = QuadraticSurrogate.fit(&pr, &cfg);
+        let res = QuadraticSurrogate.fit(&pr, &cfg).unwrap();
         // Stationarity: penalized gradient ≈ 0.
         let st = CoxState::from_beta(&pr, &res.beta);
         let g = beta_gradient(&pr, &st);
@@ -137,8 +165,8 @@ mod tests {
             max_iters: 200,
             ..Default::default()
         };
-        let rs = QuadraticSurrogate.fit(&pr, &strong);
-        let rw = QuadraticSurrogate.fit(&pr, &weak);
+        let rs = QuadraticSurrogate.fit(&pr, &strong).unwrap();
+        let rw = QuadraticSurrogate.fit(&pr, &weak).unwrap();
         let nnz_s = rs.beta.iter().filter(|b| b.abs() > 1e-10).count();
         let nnz_w = rw.beta.iter().filter(|b| b.abs() > 1e-10).count();
         assert!(nnz_s < nnz_w, "strong λ1 must be sparser: {nnz_s} vs {nnz_w}");
@@ -168,7 +196,7 @@ mod tests {
             tol: 1e-13,
             ..Default::default()
         };
-        let res = QuadraticSurrogate.fit(&pr, &cfg);
+        let res = QuadraticSurrogate.fit(&pr, &cfg).unwrap();
         let st = CoxState::from_beta(&pr, &res.beta);
         let g = beta_gradient(&pr, &st);
         for l in 0..pr.p() {

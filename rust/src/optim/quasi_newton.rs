@@ -7,9 +7,11 @@
 //! coordinate descent. β is replaced wholesale (no step-size control),
 //! which is exactly why the loss can increase early on (Figure 1).
 
-use super::objective::{FitConfig, FitResult, Objective, Optimizer, Stopper};
+use super::objective::{require_native, FitConfig, FitResult, Objective, Optimizer, Stopper};
 use crate::cox::derivatives::{eta_gradient, eta_hessian_diag};
 use crate::cox::{CoxProblem, CoxState};
+use crate::error::Result;
+use crate::runtime::engine::CoxEngine;
 use crate::linalg::vecops::soft_threshold;
 
 /// Penalized weighted least squares solved by coordinate descent:
@@ -168,7 +170,14 @@ impl Optimizer for QuasiNewton {
         "quasi-newton"
     }
 
-    fn fit_from(&self, problem: &CoxProblem, mut state: CoxState, config: &FitConfig) -> FitResult {
+    fn fit_from(
+        &self,
+        problem: &CoxProblem,
+        mut state: CoxState,
+        config: &FitConfig,
+        engine: &dyn CoxEngine,
+    ) -> Result<FitResult> {
+        require_native(self.name(), engine)?;
         let obj = config.objective;
         let mut stopper = Stopper::new();
         let mut iters = 0;
@@ -201,7 +210,7 @@ impl Optimizer for QuasiNewton {
             }
         }
         let objective_value = obj.value(problem, &state);
-        FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+        Ok(FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters })
     }
 }
 
@@ -265,11 +274,10 @@ mod tests {
             tol: 1e-12,
             ..Default::default()
         };
-        let rq = QuasiNewton::default().fit(&pr, &cfg);
-        let rc = CubicSurrogate.fit(
-            &pr,
-            &FitConfig { max_iters: 3000, tol: 1e-13, ..cfg.clone() },
-        );
+        let rq = QuasiNewton::default().fit(&pr, &cfg).unwrap();
+        let rc = CubicSurrogate
+            .fit(&pr, &FitConfig { max_iters: 3000, tol: 1e-13, ..cfg.clone() })
+            .unwrap();
         assert!(
             (rq.objective_value - rc.objective_value).abs() < 1e-4,
             "quasi-newton {} vs cubic {}",
@@ -289,8 +297,8 @@ mod tests {
             tol: 1e-11,
             ..Default::default()
         };
-        let rq = QuasiNewton::default().fit(&pr, &cfg);
-        let rcd = QuadraticSurrogate.fit(&pr, &cfg);
+        let rq = QuasiNewton::default().fit(&pr, &cfg).unwrap();
+        let rcd = QuadraticSurrogate.fit(&pr, &cfg).unwrap();
         assert!(rq.iterations < rcd.iterations, "{} vs {}", rq.iterations, rcd.iterations);
     }
 }

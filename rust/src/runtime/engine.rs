@@ -2,17 +2,28 @@
 //! by the native Rust kernels (sequential CD hot path) or by the AOT-
 //! compiled XLA artifacts (batched screening / parity proof that the
 //! three layers compose). Integration tests assert parity.
+//!
+//! Every [`crate::optim::Optimizer`] takes a `&dyn CoxEngine`, so engine
+//! selection threads through one fit path — there is no separate
+//! engine-specific driver.
 
 use super::client::{lit_f32, lit_f32_matrix, lit_i32, XlaRuntime};
 use crate::cox::derivatives::{self, CoordDerivs, Workspace};
 use crate::cox::lipschitz::{self, LipschitzPair};
 use crate::cox::{loss, CoxProblem, CoxState};
-use anyhow::{anyhow, Result};
+use crate::error::{FastSurvivalError, Result};
 use std::path::Path;
 
 /// Cox quantities every optimizer needs, engine-agnostic.
 pub trait CoxEngine {
     fn name(&self) -> &'static str;
+
+    /// True when quantities are computed by the in-process native
+    /// kernels. Baselines that need full-gradient/Hessian kernels
+    /// (Newton family, GD) require a native engine.
+    fn is_native(&self) -> bool {
+        false
+    }
 
     /// Unpenalized loss ℓ(β).
     fn loss(&self, problem: &CoxProblem, state: &CoxState) -> Result<f64>;
@@ -20,6 +31,17 @@ pub trait CoxEngine {
     /// (d1, d2, d3) at one coordinate.
     fn coord_derivs(&self, problem: &CoxProblem, state: &CoxState, l: usize)
         -> Result<CoordDerivs>;
+
+    /// First derivative at one coordinate (quadratic-surrogate hot path).
+    fn coord_d1(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> Result<f64> {
+        Ok(self.coord_derivs(problem, state, l)?.d1)
+    }
+
+    /// (d1, d2) at one coordinate (cubic-surrogate hot path).
+    fn coord_d1_d2(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> Result<(f64, f64)> {
+        let d = self.coord_derivs(problem, state, l)?;
+        Ok((d.d1, d.d2))
+    }
 
     /// Batched (d1\[p\], d2\[p\]) over all coordinates.
     fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)>;
@@ -37,6 +59,10 @@ impl CoxEngine for NativeEngine {
         "native"
     }
 
+    fn is_native(&self) -> bool {
+        true
+    }
+
     fn loss(&self, problem: &CoxProblem, state: &CoxState) -> Result<f64> {
         Ok(loss::loss(problem, state))
     }
@@ -48,6 +74,14 @@ impl CoxEngine for NativeEngine {
         l: usize,
     ) -> Result<CoordDerivs> {
         Ok(derivatives::coord_derivs(problem, state, l))
+    }
+
+    fn coord_d1(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> Result<f64> {
+        Ok(derivatives::coord_d1(problem, state, l))
+    }
+
+    fn coord_d1_d2(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> Result<(f64, f64)> {
+        Ok(derivatives::coord_d1_d2(problem, state, l))
     }
 
     fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)> {
@@ -97,6 +131,10 @@ impl XlaEngine {
     }
 }
 
+fn no_bucket(entry: &str, n: usize) -> FastSurvivalError {
+    FastSurvivalError::Engine(format!("no {entry} bucket for n={n}"))
+}
+
 impl CoxEngine for XlaEngine {
     fn name(&self) -> &'static str {
         "xla"
@@ -107,7 +145,7 @@ impl CoxEngine for XlaEngine {
             .rt
             .manifest
             .bucket_for_n("cox_loss", problem.n())
-            .ok_or_else(|| anyhow!("no cox_loss bucket for n={}", problem.n()))?;
+            .ok_or_else(|| no_bucket("cox_loss", problem.n()))?;
         let (w, v, delta, tie_end) = self.padded_base(problem, state, spec.n);
         let name = spec.name.clone();
         let out = self.rt.execute(
@@ -127,7 +165,7 @@ impl CoxEngine for XlaEngine {
             .rt
             .manifest
             .bucket_for_n("coord_derivs", problem.n())
-            .ok_or_else(|| anyhow!("no coord_derivs bucket for n={}", problem.n()))?;
+            .ok_or_else(|| no_bucket("coord_derivs", problem.n()))?;
         let bucket_n = spec.n;
         let name = spec.name.clone();
         let (w, _v, delta, tie_end) = self.padded_base(problem, state, bucket_n);
@@ -151,7 +189,9 @@ impl CoxEngine for XlaEngine {
             .rt
             .manifest
             .bucket_for_np("all_derivs", n, p)
-            .ok_or_else(|| anyhow!("no all_derivs bucket for n={n}, p={p}"))?;
+            .ok_or_else(|| {
+                FastSurvivalError::Engine(format!("no all_derivs bucket for n={n}, p={p}"))
+            })?;
         let (bn, bp) = (spec.n, spec.p);
         let name = spec.name.clone();
         let (w, _v, delta, tie_end) = self.padded_base(problem, state, bn);
@@ -179,7 +219,7 @@ impl CoxEngine for XlaEngine {
             .rt
             .manifest
             .bucket_for_n("lipschitz", problem.n())
-            .ok_or_else(|| anyhow!("no lipschitz bucket for n={}", problem.n()))?;
+            .ok_or_else(|| no_bucket("lipschitz", problem.n()))?;
         let bn = spec.n;
         let name = spec.name.clone();
         let n = problem.n();
@@ -203,13 +243,51 @@ impl CoxEngine for XlaEngine {
     }
 }
 
-/// Engine factory for the CLI.
-pub fn engine_by_name(name: &str, artifact_dir: &Path) -> Result<Box<dyn CoxEngine>> {
-    match name {
-        "native" => Ok(Box::new(NativeEngine)),
-        "xla" => Ok(Box::new(XlaEngine::new(artifact_dir)?)),
-        other => Err(anyhow!("unknown engine {other:?} (native|xla)")),
+/// Which compute engine serves the Cox quantities — the one registry
+/// behind both [`engine_by_name`] (CLI strings) and the `CoxFit` builder.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// In-process Rust kernels (default).
+    #[default]
+    Native,
+    /// AOT-compiled XLA artifacts on the PJRT CPU client (`make
+    /// artifacts`; needs the `xla` cargo feature).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+        }
     }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "native" => Ok(EngineKind::Native),
+            "xla" => Ok(EngineKind::Xla),
+            other => Err(FastSurvivalError::Unknown {
+                kind: "engine",
+                name: other.to_string(),
+                expected: "native|xla",
+            }),
+        }
+    }
+
+    /// Instantiate the engine (`artifact_dir` is only read for
+    /// [`EngineKind::Xla`]).
+    pub fn build(self, artifact_dir: &Path) -> Result<Box<dyn CoxEngine>> {
+        match self {
+            EngineKind::Native => Ok(Box::new(NativeEngine)),
+            EngineKind::Xla => Ok(Box::new(XlaEngine::new(artifact_dir)?)),
+        }
+    }
+}
+
+/// Engine factory for the CLI — a thin wrapper over [`EngineKind`].
+pub fn engine_by_name(name: &str, artifact_dir: &Path) -> Result<Box<dyn CoxEngine>> {
+    EngineKind::from_name(name)?.build(artifact_dir)
 }
 
 #[cfg(test)]
@@ -240,10 +318,28 @@ mod tests {
     fn xla() -> Option<XlaEngine> {
         let dir = Path::new("artifacts");
         if dir.join("manifest.tsv").exists() {
-            Some(XlaEngine::new(dir).expect("xla engine"))
+            // Errors (e.g. a build without the `xla` feature) downgrade
+            // to a skip rather than a panic.
+            XlaEngine::new(dir).ok()
         } else {
             None
         }
+    }
+
+    #[test]
+    fn native_default_coord_helpers_match_fused_kernels() {
+        let ne = NativeEngine;
+        let pr = random_problem(120, 3, 40, true);
+        let st = CoxState::from_beta(&pr, &[0.2, -0.4, 0.1]);
+        for l in 0..3 {
+            let d = ne.coord_derivs(&pr, &st, l).unwrap();
+            let d1 = ne.coord_d1(&pr, &st, l).unwrap();
+            let (e1, e2) = ne.coord_d1_d2(&pr, &st, l).unwrap();
+            assert!((d.d1 - d1).abs() < 1e-12);
+            assert!((d.d1 - e1).abs() < 1e-12);
+            assert!((d.d2 - e2).abs() < 1e-12);
+        }
+        assert!(ne.is_native());
     }
 
     #[test]

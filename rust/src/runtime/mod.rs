@@ -4,6 +4,12 @@
 //! Python runs once at build time (`make artifacts`); afterwards the
 //! binary is self-contained: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The PJRT client itself is gated behind the `xla` cargo feature (the
+//! bindings crate only exists in the accelerator image); the default
+//! build ships a stub whose constructor returns a typed error, so the
+//! [`engine::CoxEngine`] abstraction — and everything above it — is
+//! engine-complete in every build.
 
 pub mod artifacts;
 pub mod client;

@@ -81,7 +81,9 @@ impl AdaptiveLasso {
             record_trace: false,
             ..Default::default()
         };
-        let pilot = QuadraticSurrogate.fit(problem, &pilot_cfg);
+        let pilot = QuadraticSurrogate
+            .fit(problem, &pilot_cfg)
+            .expect("native pilot fit is infallible");
         // Stage 2: weighted ℓ1.
         let lam: Vec<f64> = pilot
             .beta

@@ -6,6 +6,7 @@ use super::{solution_from_beta, SparseSolution, VariableSelector};
 use crate::cox::derivatives::beta_gradient;
 use crate::cox::{CoxProblem, CoxState};
 use crate::optim::{FitConfig, Objective, Optimizer, QuasiNewton};
+use crate::runtime::engine::NativeEngine;
 
 /// Coxnet path configuration.
 #[derive(Clone, Debug)]
@@ -61,7 +62,9 @@ impl CoxnetPath {
                 record_trace: false,
                 ..Default::default()
             };
-            let res = QuasiNewton::default().fit_from(problem, warm.clone(), &cfg);
+            let res = QuasiNewton::default()
+                .fit_from(problem, warm.clone(), &cfg, &NativeEngine)
+                .expect("native quasi-newton fit is infallible");
             warm = CoxState::from_beta(problem, &res.beta);
             points.push(PathPoint { lambda, solution: solution_from_beta(problem, res.beta) });
         }

@@ -1,0 +1,180 @@
+//! Black-box tests for the unified estimator API: builder round-trips,
+//! survival-prediction semantics, and typed error paths.
+
+use fastsurvival::api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::error::FastSurvivalError;
+use fastsurvival::linalg::Matrix;
+use fastsurvival::metrics::BreslowBaseline;
+
+fn train() -> SurvivalDataset {
+    generate(&SyntheticConfig { n: 300, p: 12, rho: 0.5, k: 4, s: 0.1, seed: 42 })
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fs_api_{name}.json"))
+}
+
+#[test]
+fn fit_save_load_round_trip_predicts_identically() {
+    let ds = train();
+    let model = CoxFit::new().l1(0.3).l2(0.2).max_iters(300).tol(1e-11).fit(&ds).unwrap();
+    let path = tmp("round_trip");
+    model.save(&path).unwrap();
+    let loaded = CoxModel::load(&path).unwrap();
+
+    assert_eq!(model.beta(), loaded.beta(), "coefficients must round-trip exactly");
+    assert_eq!(model.feature_names(), loaded.feature_names());
+    let risk_a = model.predict_risk(&ds.x).unwrap();
+    let risk_b = loaded.predict_risk(&ds.x).unwrap();
+    assert_eq!(risk_a, risk_b);
+    for t in [0.1, 0.7, 2.0, 10.0] {
+        let sa = model.predict_survival(&ds.x, t).unwrap();
+        let sb = loaded.predict_survival(&ds.x, t).unwrap();
+        assert_eq!(sa, sb, "survival at t={t} must round-trip exactly");
+    }
+    // Scalar diagnostics persist too.
+    let (d, e) = (model.diagnostics(), loaded.diagnostics());
+    assert_eq!(d.optimizer, e.optimizer);
+    assert_eq!(d.iterations, e.iterations);
+    assert_eq!(d.l1, e.l1);
+    assert_eq!(d.objective_value, e.objective_value);
+}
+
+#[test]
+fn predict_survival_is_monotone_and_matches_breslow_directly() {
+    let ds = train();
+    let model = CoxFit::new().l2(0.5).fit(&ds).unwrap();
+
+    // Agreement with a BreslowBaseline fitted by hand on the same η.
+    let eta = ds.x.matvec(model.beta());
+    let direct = BreslowBaseline::fit(&ds.time, &ds.event, &eta);
+    for t in [0.0, 0.3, 1.0, 5.0] {
+        let s = model.predict_survival(&ds.x, t).unwrap();
+        for i in (0..ds.n()).step_by(37) {
+            let expect = direct.survival(t, eta[i]);
+            assert!(
+                (s[i] - expect).abs() < 1e-12,
+                "t={t} i={i}: {} vs direct {expect}",
+                s[i]
+            );
+        }
+    }
+
+    // Monotone non-increasing in t for every subject.
+    let grid = [0.0, 0.2, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let mut prev = vec![1.0; ds.n()];
+    for &t in &grid {
+        let s = model.predict_survival(&ds.x, t).unwrap();
+        for i in 0..ds.n() {
+            assert!(
+                s[i] <= prev[i] + 1e-12,
+                "S(t|x_{i}) increased: {} -> {} at t={t}",
+                prev[i],
+                s[i]
+            );
+            assert!((0.0..=1.0).contains(&s[i]));
+            prev[i] = s[i];
+        }
+    }
+}
+
+#[test]
+fn nan_time_is_a_typed_error_not_a_panic() {
+    let x = Matrix::from_columns(&[vec![1.0, -1.0, 0.5]]);
+    let mut time = vec![3.0, 2.0, 1.0];
+    time[1] = f64::NAN;
+    let ds = SurvivalDataset::new(x, time, vec![true, true, false], "nan");
+    let err = CoxFit::new().fit(&ds).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::InvalidData(_)), "got {err}");
+    assert!(err.to_string().contains("sample 1"), "got {err}");
+}
+
+#[test]
+fn empty_dataset_is_a_typed_error() {
+    let ds = SurvivalDataset::new(Matrix::zeros(0, 2), vec![], vec![], "empty");
+    let err = CoxFit::new().fit(&ds).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::InvalidData(_)), "got {err}");
+}
+
+#[test]
+fn all_censored_is_a_typed_error() {
+    let x = Matrix::from_columns(&[vec![0.1, 0.4, -0.3, 0.9]]);
+    let ds = SurvivalDataset::new(x, vec![4.0, 3.0, 2.0, 1.0], vec![false; 4], "cens");
+    let err = CoxFit::new().fit(&ds).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::InvalidData(_)), "got {err}");
+    assert!(err.to_string().contains("censored"), "got {err}");
+}
+
+#[test]
+fn xla_engine_unavailable_is_a_typed_error_or_matches_native() {
+    let ds = train();
+    let native = CoxFit::new().l2(1.0).max_iters(50).fit(&ds).unwrap();
+    match CoxFit::new().l2(1.0).max_iters(50).engine(EngineKind::Xla).fit(&ds) {
+        // No artifacts / no xla feature in this build: typed error.
+        Err(FastSurvivalError::Engine(_)) | Err(FastSurvivalError::Unsupported(_)) => {}
+        Err(other) => panic!("unexpected error kind: {other}"),
+        // Accelerator image with artifacts: parity with the native fit.
+        Ok(xla_model) => {
+            for (a, b) in native.beta().iter().zip(xla_model.beta()) {
+                assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn coefficients_replace_beta_to_original() {
+    let ds = train();
+    let model = CoxFit::new().l1(1.0).l2(0.1).fit(&ds).unwrap();
+    let cs = model.coefficients();
+    assert_eq!(cs.len(), ds.p());
+    for (j, c) in cs.iter().enumerate() {
+        assert_eq!(c.index, j, "coefficients are keyed by original feature index");
+        assert_eq!(c.name, ds.feature_names[j]);
+        assert_eq!(c.value, model.beta()[j]);
+    }
+    let nz = model.nonzero_coefficients(1e-10);
+    assert!(nz.len() < ds.p(), "ℓ1 fit should be sparse");
+    assert!(nz.windows(2).all(|w| w[0].value.abs() >= w[1].value.abs()));
+}
+
+#[test]
+fn optimizer_name_strings_reach_the_builder() {
+    // The CLI path: names → kinds → fits, all through one builder.
+    let ds = train();
+    for name in ["quadratic", "cubic", "quasi-newton"] {
+        let kind = OptimizerKind::from_name(name).unwrap();
+        let model = CoxFit::new().l2(1.0).optimizer(kind).max_iters(40).fit(&ds).unwrap();
+        assert!(model.concordance(&ds).unwrap() > 0.5);
+    }
+}
+
+#[test]
+fn load_rejects_tampered_files() {
+    let ds = train();
+    let model = CoxFit::new().l2(0.5).fit(&ds).unwrap();
+    let path = tmp("tampered");
+    model.save(&path).unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Remove a required field.
+    let bad = good.replace("\"beta\"", "\"beta_gone\"");
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        CoxModel::load(&path),
+        Err(FastSurvivalError::Persist(_))
+    ));
+
+    // Corrupt the baseline ordering.
+    let bad = good.replace("\"cumhaz\": [", "\"cumhaz\": [9999999,");
+    std::fs::write(&path, &bad).unwrap();
+    assert!(CoxModel::load(&path).is_err());
+
+    // Missing file.
+    assert!(matches!(
+        CoxModel::load(std::path::Path::new("/no/such/model.json")),
+        Err(FastSurvivalError::Io { .. })
+    ));
+}

@@ -21,7 +21,7 @@ fn all_censored_fit_is_noop() {
     let pr = CoxProblem::new(&d);
     let st = CoxState::zeros(&pr);
     assert_eq!(loss(&pr, &st), 0.0);
-    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default()).unwrap();
     assert!(res.beta.iter().all(|&b| b == 0.0), "no events → nothing to fit");
 }
 
@@ -35,7 +35,7 @@ fn single_sample_problem() {
     let der = coord_derivs(&pr, &st, 0);
     assert_eq!(der.d1, 0.0);
     assert_eq!(der.d2, 0.0);
-    let res = QuadraticSurrogate.fit(&pr, &FitConfig::default());
+    let res = QuadraticSurrogate.fit(&pr, &FitConfig::default()).unwrap();
     assert!(res.beta[0].abs() < 1e-12);
 }
 
@@ -53,10 +53,12 @@ fn all_times_tied() {
     let l = loss(&pr, &st);
     assert!((l - 3.0 * (4.0_f64).ln()).abs() < 1e-12);
     // Fit stays finite and monotone.
-    let res = CubicSurrogate.fit(
-        &pr,
-        &FitConfig { objective: Objective { l1: 0.0, l2: 0.1 }, ..Default::default() },
-    );
+    let res = CubicSurrogate
+        .fit(
+            &pr,
+            &FitConfig { objective: Objective { l1: 0.0, l2: 0.1 }, ..Default::default() },
+        )
+        .unwrap();
     assert!(res.trace.monotone(1e-10));
     assert!(res.beta[0].is_finite());
 }
@@ -70,7 +72,7 @@ fn constant_feature_is_ignored() {
     );
     let pr = CoxProblem::new(&d);
     assert_eq!(coord_lipschitz(&pr, 0).l2, 0.0);
-    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default()).unwrap();
     assert_eq!(res.beta[0], 0.0, "constant column gets no weight");
     assert!(res.beta[1].abs() > 0.0);
 }
@@ -85,10 +87,9 @@ fn perfectly_separated_feature_stays_finite() {
         vec![true; 6],
     );
     let pr = CoxProblem::new(&d);
-    let res = QuadraticSurrogate.fit(
-        &pr,
-        &FitConfig { max_iters: 200, ..Default::default() },
-    );
+    let res = QuadraticSurrogate
+        .fit(&pr, &FitConfig { max_iters: 200, ..Default::default() })
+        .unwrap();
     assert!(res.beta[0].is_finite());
     assert!(res.trace.monotone(1e-10));
     assert!(res.beta[0] > 1.0, "separation should drive a large coefficient");
@@ -102,10 +103,12 @@ fn huge_feature_scale_is_stable() {
         vec![true; 4],
     );
     let pr = CoxProblem::new(&d);
-    let res = CubicSurrogate.fit(
-        &pr,
-        &FitConfig { objective: Objective { l1: 0.0, l2: 1.0 }, ..Default::default() },
-    );
+    let res = CubicSurrogate
+        .fit(
+            &pr,
+            &FitConfig { objective: Objective { l1: 0.0, l2: 1.0 }, ..Default::default() },
+        )
+        .unwrap();
     assert!(res.beta[0].is_finite());
     assert!(res.trace.monotone(1e-8));
 }
@@ -159,10 +162,9 @@ fn cindex_degenerate_inputs() {
 fn zero_iteration_budget() {
     let d = ds(&[vec![1.0, -1.0, 0.5]], vec![3.0, 2.0, 1.0], vec![true; 3]);
     let pr = CoxProblem::new(&d);
-    let res = QuadraticSurrogate.fit(
-        &pr,
-        &FitConfig { max_iters: 0, ..Default::default() },
-    );
+    let res = QuadraticSurrogate
+        .fit(&pr, &FitConfig { max_iters: 0, ..Default::default() })
+        .unwrap();
     assert!(res.beta.iter().all(|&b| b == 0.0));
     assert_eq!(res.iterations, 0);
 }
@@ -177,6 +179,6 @@ fn negative_and_zero_times_are_valid() {
     );
     let pr = CoxProblem::new(&d);
     assert_eq!(pr.time, vec![2.0, 0.0, -1.0, -3.0]);
-    let res = CubicSurrogate.fit(&pr, &FitConfig::default());
+    let res = CubicSurrogate.fit(&pr, &FitConfig::default()).unwrap();
     assert!(res.trace.monotone(1e-10));
 }
