@@ -3,7 +3,10 @@
 //!
 //! Run with `cargo bench` (set FASTSURVIVAL_BENCH_QUICK=1 for CI).
 
-use fastsurvival::cox::derivatives::{all_coord_d1_d2, coord_d1, coord_d1_d2, coord_derivs, Workspace};
+use fastsurvival::cox::derivatives::{
+    all_coord_d1_d2, all_coord_d1_d2_seq, all_coord_d1_d2_with_threads, coord_d1, coord_d1_d2,
+    coord_derivs, Workspace,
+};
 use fastsurvival::cox::lipschitz::coord_lipschitz;
 use fastsurvival::cox::{CoxProblem, CoxState};
 use fastsurvival::data::SurvivalDataset;
@@ -46,10 +49,19 @@ fn main() {
     for &(n, p) in &[(1024usize, 128usize), (4096, 256)] {
         let pr = problem(n, p, 7);
         let st = CoxState::zeros(&pr);
+        b.bench(&format!("all_coord_seq       n={n} p={p}"), || {
+            black_box(all_coord_d1_d2_seq(&pr, &st));
+        });
         let mut ws = Workspace::default();
-        b.bench(&format!("all_coord_d1_d2     n={n} p={p}"), || {
+        b.bench(&format!("all_coord_blocked   n={n} p={p}"), || {
             black_box(all_coord_d1_d2(&pr, &st, &mut ws));
         });
+        for t in [1usize, 2, 4] {
+            let mut ws = Workspace::default();
+            b.bench(&format!("all_coord_blocked_t{t} n={n} p={p}"), || {
+                black_box(all_coord_d1_d2_with_threads(&pr, &st, &mut ws, t));
+            });
+        }
     }
 
     // Native vs AOT-XLA comparison (three-layer composition cost).

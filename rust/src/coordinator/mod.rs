@@ -7,5 +7,6 @@
 
 pub mod cv;
 pub mod experiments;
+pub mod perf;
 
 pub use cv::{cv_selector, CvRow};

@@ -1,0 +1,674 @@
+//! The `bench` CLI subcommand: reproducible hot-path benchmarks plus the
+//! CI perf gate.
+//!
+//! Workloads are fixed-seed synthetic Cox problems (continuous and tied
+//! times, multi-stratum, n up to 100k and p up to 1k under `--full`).
+//! Results land in `BENCH_optim.json` — the file that starts the repo's
+//! perf trajectory: the tracked kernel is the blocked parallel batched
+//! derivative pass, whose speedup over the seed's sequential pass at
+//! n=50k, p=500 with 4 worker threads is recorded in the `gate` object.
+//!
+//! `--check <baseline.json>` turns the run into a gate: it fails if any
+//! `gate: true` kernel in the committed baseline is now >`tolerance_pct`
+//! slower, or if the tracked parallel kernel falls clearly below its
+//! sequential reference (speedup < [`INVARIANT_MIN_SPEEDUP`] — a
+//! machine-independent invariant). A `bootstrap: true` baseline (no
+//! trustworthy timings recorded yet) downgrades every failure to
+//! advisory output.
+
+use crate::api::json;
+use crate::cox::derivatives::{all_coord_d1_d2_seq, all_coord_d1_d2_with_threads, Workspace};
+use crate::cox::stratified::StratifiedCoxProblem;
+use crate::cox::{CoxProblem, CoxState};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::linalg::Matrix;
+use crate::util::args::Args;
+use crate::util::bench::Bencher;
+use crate::util::parallel::num_threads;
+use crate::util::rng::Rng;
+use std::hint::black_box;
+use std::path::Path;
+
+/// The speedup the blocked kernel is expected to hold over the seed
+/// sequential pass on the tracked workload (acceptance criterion).
+const REQUIRED_SPEEDUP: f64 = 2.0;
+
+/// Default slow-down tolerance for `--check`, in percent.
+const DEFAULT_TOLERANCE_PCT: f64 = 25.0;
+
+/// Floor for the machine-independent invariant: the blocked parallel
+/// kernel must stay within this factor of the sequential reference.
+/// Below 1.0 to absorb scheduler noise on small smoke workloads and
+/// oversubscribed CI runners; a genuine regression (parallel kernel
+/// structurally slower) lands well under it.
+const INVARIANT_MIN_SPEEDUP: f64 = 0.8;
+
+/// One benchmark row of `BENCH_optim.json`.
+struct Entry {
+    name: String,
+    kernel: &'static str,
+    n: usize,
+    p: usize,
+    ties: bool,
+    strata: usize,
+    threads: usize,
+    seed: u64,
+    median_ns: f64,
+    min_ns: f64,
+    mean_ns: f64,
+    mad_ns: f64,
+    samples: usize,
+    iters_per_sample: u64,
+    speedup_vs_seq: Option<f64>,
+    gate: bool,
+}
+
+/// Workload sizes; `quick` keeps the CI smoke job under a few seconds,
+/// `full` stretches to the paper-scale extremes.
+struct Sizes {
+    n_main: usize,
+    p_main: usize,
+    n_ties: usize,
+    p_ties: usize,
+    n_strat: usize,
+    p_strat: usize,
+    strata: usize,
+    n_state: usize,
+}
+
+impl Sizes {
+    fn pick(quick: bool) -> Sizes {
+        if quick {
+            Sizes {
+                n_main: 4_000,
+                p_main: 64,
+                n_ties: 2_000,
+                p_ties: 48,
+                n_strat: 4_000,
+                p_strat: 32,
+                strata: 4,
+                n_state: 10_000,
+            }
+        } else {
+            Sizes {
+                n_main: 50_000,
+                p_main: 500,
+                n_ties: 20_000,
+                p_ties: 200,
+                n_strat: 40_000,
+                p_strat: 100,
+                strata: 4,
+                n_state: 100_000,
+            }
+        }
+    }
+}
+
+/// Fixed-seed synthetic problem (the dataset copy is dropped on return,
+/// so the steady-state footprint is one column-major matrix).
+fn synthetic_problem(n: usize, p: usize, seed: u64, ties: bool) -> CoxProblem {
+    let mut rng = Rng::new(seed);
+    let cols: Vec<Vec<f64>> = (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let time: Vec<f64> = (0..n)
+        .map(|_| {
+            let t = rng.uniform_range(0.5, 9.5);
+            if ties {
+                (t * 4.0).round() / 4.0
+            } else {
+                t
+            }
+        })
+        .collect();
+    let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+    CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "bench"))
+}
+
+/// Deterministic non-zero β so risk-set weights are nontrivial.
+fn bench_state(problem: &CoxProblem, seed: u64) -> CoxState {
+    let mut rng = Rng::new(seed);
+    let beta: Vec<f64> = (0..problem.p()).map(|_| rng.normal() * 0.1).collect();
+    CoxState::from_beta(problem, &beta)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_entry(
+    entries: &mut Vec<Entry>,
+    b: &Bencher,
+    name: String,
+    kernel: &'static str,
+    n: usize,
+    p: usize,
+    ties: bool,
+    strata: usize,
+    threads: usize,
+    seed: u64,
+) {
+    let s = b.results().last().expect("bench just ran");
+    entries.push(Entry {
+        name,
+        kernel,
+        n,
+        p,
+        ties,
+        strata,
+        threads,
+        seed,
+        median_ns: s.median_ns,
+        min_ns: s.min_ns,
+        mean_ns: s.mean_ns,
+        mad_ns: s.mad_ns,
+        samples: s.samples.len(),
+        iters_per_sample: s.iters_per_sample,
+        speedup_vs_seq: None,
+        gate: false,
+    });
+}
+
+/// Benchmark one (n, p, ties) workload: the seed sequential batched pass
+/// against the blocked parallel pass at explicit worker counts. Returns
+/// the entry indices of (sequential reference, t=4 blocked).
+fn bench_batched_pair(
+    entries: &mut Vec<Entry>,
+    b: &mut Bencher,
+    n: usize,
+    p: usize,
+    seed: u64,
+    ties: bool,
+    tag: &str,
+) -> (usize, usize) {
+    let pr = synthetic_problem(n, p, seed, ties);
+    let st = bench_state(&pr, seed ^ 0x5eed);
+    b.bench(&format!("batched_seq{tag}_n{n}_p{p}"), || {
+        black_box(all_coord_d1_d2_seq(&pr, &st));
+    });
+    push_entry(
+        entries,
+        b,
+        format!("batched_seq{tag}_n{n}_p{p}"),
+        "all_coord_d1_d2_seq",
+        n,
+        p,
+        ties,
+        1,
+        1,
+        seed,
+    );
+    let seq_idx = entries.len() - 1;
+    let seq_median = entries[seq_idx].median_ns;
+
+    let mut t4_idx = entries.len();
+    for &t in &[1usize, 2, 4] {
+        let mut ws = Workspace::default();
+        b.bench(&format!("batched_blocked{tag}_t{t}_n{n}_p{p}"), || {
+            black_box(all_coord_d1_d2_with_threads(&pr, &st, &mut ws, t));
+        });
+        push_entry(
+            entries,
+            b,
+            format!("batched_blocked{tag}_t{t}_n{n}_p{p}"),
+            "all_coord_d1_d2_blocked",
+            n,
+            p,
+            ties,
+            1,
+            t,
+            seed,
+        );
+        let e = entries.last_mut().expect("just pushed");
+        e.speedup_vs_seq = Some(seq_median / e.median_ns);
+        if t == 4 {
+            t4_idx = entries.len() - 1;
+        }
+    }
+    (seq_idx, t4_idx)
+}
+
+/// `fastsurvival bench [--quick] [--full] [--out F] [--check BASELINE]`.
+pub fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick")
+        || std::env::var("FASTSURVIVAL_BENCH_QUICK").as_deref() == Ok("1");
+    let full = args.flag("full");
+    let out_path = args.str_or("out", "BENCH_optim.json");
+    let sizes = Sizes::pick(quick);
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let mut entries: Vec<Entry> = Vec::new();
+
+    println!(
+        "== bench: blocked parallel derivative kernels (quick={quick}, full={full}, \
+         {} threads available) ==",
+        num_threads()
+    );
+
+    // --- The tracked workload: continuous times, n_main × p_main. -----
+    let (ref_idx, gate_idx) = bench_batched_pair(
+        &mut entries,
+        &mut b,
+        sizes.n_main,
+        sizes.p_main,
+        42,
+        false,
+        "",
+    );
+    entries[gate_idx].gate = true;
+    let gate_speedup = entries[gate_idx].speedup_vs_seq.expect("blocked entry has speedup");
+    let gate_tracked = entries[gate_idx].name.clone();
+    let gate_reference = entries[ref_idx].name.clone();
+
+    // --- Tied times. --------------------------------------------------
+    bench_batched_pair(&mut entries, &mut b, sizes.n_ties, sizes.p_ties, 43, true, "_ties");
+
+    // --- Paper-scale extremes (memory-heavy; opt-in). -----------------
+    if full {
+        bench_batched_pair(&mut entries, &mut b, 100_000, 500, 44, false, "");
+        bench_batched_pair(&mut entries, &mut b, 50_000, 1_000, 45, false, "");
+    }
+
+    // --- Stratified: per-coordinate loop vs batched-per-stratum. ------
+    {
+        let n = sizes.n_strat;
+        let p = sizes.p_strat;
+        let nstrata = sizes.strata;
+        let mut rng = Rng::new(46);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.5, 9.5)).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        let labels: Vec<usize> = (0..n).map(|i| i % nstrata).collect();
+        let ds = SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "bench-strat");
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        drop(ds);
+        let mut states = sp.zero_states();
+        for (pr, st) in sp.strata.iter().zip(states.iter_mut()) {
+            st.update_coord(pr, 0, 0.1);
+        }
+        b.bench(&format!("stratified_percoord_n{n}_p{p}_s{nstrata}"), || {
+            for l in 0..p {
+                black_box(sp.coord_d1_d2(&states, l));
+            }
+        });
+        push_entry(
+            &mut entries,
+            &b,
+            format!("stratified_percoord_n{n}_p{p}_s{nstrata}"),
+            "stratified_coord_d1_d2_loop",
+            n,
+            p,
+            false,
+            nstrata,
+            1,
+            46,
+        );
+        let ref_median = entries.last().expect("just pushed").median_ns;
+        let mut wss = sp.workspaces();
+        b.bench(&format!("stratified_batched_n{n}_p{p}_s{nstrata}"), || {
+            black_box(sp.all_coord_d1_d2(&states, &mut wss));
+        });
+        push_entry(
+            &mut entries,
+            &b,
+            format!("stratified_batched_n{n}_p{p}_s{nstrata}"),
+            "stratified_all_coord_d1_d2",
+            n,
+            p,
+            false,
+            nstrata,
+            num_threads(),
+            46,
+        );
+        let e = entries.last_mut().expect("just pushed");
+        e.speedup_vs_seq = Some(ref_median / e.median_ns);
+    }
+
+    // --- Incremental state maintenance vs full re-exponentiation. -----
+    {
+        let n = sizes.n_state;
+        let pr = synthetic_problem(n, 4, 47, false);
+        let mut st = bench_state(&pr, 48);
+        let mut sign = 1.0_f64;
+        b.bench(&format!("state_update_coord_n{n}"), || {
+            // Alternating ±Δ keeps η bounded across samples.
+            st.update_coord(&pr, 0, sign * 1e-3);
+            sign = -sign;
+            black_box(st.w[0]);
+        });
+        push_entry(
+            &mut entries,
+            &b,
+            format!("state_update_coord_n{n}"),
+            "state_update_coord",
+            n,
+            4,
+            false,
+            1,
+            1,
+            47,
+        );
+        let inc_median = entries.last().expect("just pushed").median_ns;
+        let beta = st.beta.clone();
+        b.bench(&format!("state_set_beta_n{n}"), || {
+            st.set_beta(&pr, &beta);
+            black_box(st.w[0]);
+        });
+        push_entry(
+            &mut entries,
+            &b,
+            format!("state_set_beta_n{n}"),
+            "state_set_beta_full",
+            n,
+            4,
+            false,
+            1,
+            1,
+            47,
+        );
+        let full_median = entries.last().expect("just pushed").median_ns;
+        // Attribute the speedup to the incremental entry.
+        let idx = entries.len() - 2;
+        entries[idx].speedup_vs_seq = Some(full_median / inc_median);
+    }
+
+    b.summary("bench");
+    println!(
+        "\ngate: {gate_tracked} vs {gate_reference}: speedup {:.2}x (required {:.1}x) — {}",
+        gate_speedup,
+        REQUIRED_SPEEDUP,
+        if gate_speedup >= REQUIRED_SPEEDUP { "OK" } else { "BELOW TARGET" }
+    );
+
+    let doc = render_json(
+        quick,
+        full,
+        &entries,
+        &gate_tracked,
+        &gate_reference,
+        gate_speedup,
+    );
+    std::fs::write(&out_path, &doc)
+        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
+    println!("wrote {out_path} ({} entries)", entries.len());
+
+    if let Some(baseline) = args.get("check") {
+        check_against_baseline(&entries, gate_speedup, Path::new(baseline))?;
+    }
+    Ok(())
+}
+
+fn render_json(
+    quick: bool,
+    full: bool,
+    entries: &[Entry],
+    gate_tracked: &str,
+    gate_reference: &str,
+    gate_speedup: f64,
+) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\n");
+    out.push_str("  \"schema_version\": 1,\n");
+    out.push_str("  \"suite\": \"fastsurvival-bench\",\n");
+    // Emitted so a run can be committed as ci/bench_baseline.json as-is:
+    // flip `bootstrap` to arm/disarm absolute comparisons; `--check`
+    // reads `tolerance_pct` from this top level.
+    out.push_str("  \"bootstrap\": false,\n");
+    out.push_str("  \"tolerance_pct\": ");
+    json::write_f64(&mut out, DEFAULT_TOLERANCE_PCT);
+    out.push_str(",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!("  \"full\": {full},\n"));
+    out.push_str(&format!("  \"threads_available\": {},\n", num_threads()));
+    out.push_str("  \"gate\": {\n");
+    out.push_str("    \"tracked\": ");
+    json::write_str(&mut out, gate_tracked);
+    out.push_str(",\n    \"reference\": ");
+    json::write_str(&mut out, gate_reference);
+    out.push_str(",\n    \"speedup_vs_seq\": ");
+    json::write_f64(&mut out, gate_speedup);
+    out.push_str(",\n    \"required_speedup\": ");
+    json::write_f64(&mut out, REQUIRED_SPEEDUP);
+    out.push_str(",\n    \"tolerance_pct\": ");
+    json::write_f64(&mut out, DEFAULT_TOLERANCE_PCT);
+    out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", gate_speedup >= REQUIRED_SPEEDUP));
+    out.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str("    {\"name\": ");
+        json::write_str(&mut out, &e.name);
+        out.push_str(", \"kernel\": ");
+        json::write_str(&mut out, e.kernel);
+        out.push_str(&format!(
+            ", \"n\": {}, \"p\": {}, \"ties\": {}, \"strata\": {}, \"threads\": {}, \
+             \"seed\": {}",
+            e.n, e.p, e.ties, e.strata, e.threads, e.seed
+        ));
+        out.push_str(", \"median_ns\": ");
+        json::write_f64(&mut out, e.median_ns);
+        out.push_str(", \"min_ns\": ");
+        json::write_f64(&mut out, e.min_ns);
+        out.push_str(", \"mean_ns\": ");
+        json::write_f64(&mut out, e.mean_ns);
+        out.push_str(", \"mad_ns\": ");
+        json::write_f64(&mut out, e.mad_ns);
+        out.push_str(&format!(
+            ", \"samples\": {}, \"iters_per_sample\": {}",
+            e.samples, e.iters_per_sample
+        ));
+        out.push_str(", \"ns_per_cell\": ");
+        json::write_f64(&mut out, e.median_ns / (e.n as f64 * e.p as f64));
+        out.push_str(", \"speedup_vs_seq\": ");
+        match e.speedup_vs_seq {
+            Some(s) => json::write_f64(&mut out, s),
+            None => out.push_str("null"),
+        }
+        out.push_str(&format!(", \"gate\": {}}}", e.gate));
+        out.push_str(if i + 1 < entries.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The CI perf gate: compare this run against a committed baseline.
+fn check_against_baseline(
+    entries: &[Entry],
+    gate_speedup: f64,
+    baseline_path: &Path,
+) -> Result<()> {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "perf gate: no baseline at {} — recording only (commit one with \
+                 `bench --quick --out {}`)",
+                baseline_path.display(),
+                baseline_path.display()
+            );
+            return Ok(());
+        }
+    };
+    let doc = json::parse(&text)?;
+    let bootstrap = doc
+        .get("bootstrap")
+        .map(|b| b.as_bool().unwrap_or(false))
+        .unwrap_or(false);
+    let tol_pct = doc
+        .get("tolerance_pct")
+        .map(|t| t.as_f64().unwrap_or(DEFAULT_TOLERANCE_PCT))
+        .unwrap_or(DEFAULT_TOLERANCE_PCT);
+    // Machine-independent invariant: the tracked blocked kernel must
+    // never clearly lose to the sequential reference it replaced (slack
+    // absorbs scheduler noise on smoke-size workloads; a bootstrap
+    // baseline downgrades the failure to advisory like everything else).
+    if gate_speedup < INVARIANT_MIN_SPEEDUP {
+        let msg = format!(
+            "blocked parallel batched pass is slower than the sequential reference \
+             (speedup {gate_speedup:.2}x < {INVARIANT_MIN_SPEEDUP}x)"
+        );
+        if bootstrap {
+            println!("perf gate: bootstrap baseline; advisory only: {msg}");
+        } else {
+            return Err(FastSurvivalError::PerfRegression(msg));
+        }
+    } else if gate_speedup < 1.0 {
+        println!(
+            "perf gate: warning — blocked pass barely trails the sequential \
+             reference ({gate_speedup:.2}x); within noise tolerance, not failing"
+        );
+    }
+    let baseline_entries = match doc.get("entries") {
+        Some(arr) => arr.as_array()?.to_vec(),
+        None => Vec::new(),
+    };
+    let mut failures: Vec<String> = Vec::new();
+    for be in &baseline_entries {
+        let gated = be.get("gate").map(|g| g.as_bool().unwrap_or(false)).unwrap_or(false);
+        if !gated {
+            continue;
+        }
+        let name = be.require("name")?.as_str()?.to_string();
+        let base_median = be.require("median_ns")?.as_f64()?;
+        let Some(cur) = entries.iter().find(|e| e.name == name) else {
+            failures.push(format!("tracked kernel {name:?} missing from this run"));
+            continue;
+        };
+        let ratio = cur.median_ns / base_median;
+        let verdict = if ratio > 1.0 + tol_pct / 100.0 { "REGRESSED" } else { "ok" };
+        println!(
+            "perf gate: {name}: {:.3} ms vs baseline {:.3} ms ({:.0}% — {verdict})",
+            cur.median_ns / 1e6,
+            base_median / 1e6,
+            ratio * 100.0
+        );
+        if ratio > 1.0 + tol_pct / 100.0 {
+            failures.push(format!(
+                "{name}: {ratio:.2}x the baseline median (tolerance {tol_pct:.0}%)"
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        if bootstrap {
+            println!(
+                "perf gate: baseline is marked bootstrap (timings not from gate \
+                 hardware); advisory only:\n  {}",
+                failures.join("\n  ")
+            );
+            return Ok(());
+        }
+        return Err(FastSurvivalError::PerfRegression(failures.join("; ")));
+    }
+    println!("perf gate: OK (speedup {gate_speedup:.2}x, {} gated kernels)", {
+        baseline_entries
+            .iter()
+            .filter(|be| be.get("gate").map(|g| g.as_bool().unwrap_or(false)).unwrap_or(false))
+            .count()
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_document_parses_and_round_trips_gate_fields() {
+        let entries = vec![Entry {
+            name: "batched_seq_n100_p8".into(),
+            kernel: "all_coord_d1_d2_seq",
+            n: 100,
+            p: 8,
+            ties: false,
+            strata: 1,
+            threads: 1,
+            seed: 42,
+            median_ns: 1234.5,
+            min_ns: 1200.0,
+            mean_ns: 1250.0,
+            mad_ns: 10.0,
+            samples: 5,
+            iters_per_sample: 3,
+            speedup_vs_seq: Some(2.5),
+            gate: true,
+        }];
+        let doc = render_json(true, false, &entries, "tracked", "ref", 2.5);
+        let parsed = json::parse(&doc).expect("self-emitted JSON must parse");
+        assert_eq!(parsed.require("schema_version").unwrap().as_usize().unwrap(), 1);
+        let gate = parsed.require("gate").unwrap();
+        assert_eq!(gate.require("tracked").unwrap().as_str().unwrap(), "tracked");
+        assert!(gate.require("passed").unwrap().as_bool().unwrap());
+        let arr = parsed.require("entries").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].require("n").unwrap().as_usize().unwrap(), 100);
+        assert!((arr[0].require("speedup_vs_seq").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert!(arr[0].require("gate").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn gate_rejects_parallel_clearly_slower_than_sequential() {
+        let dir = std::env::temp_dir().join("fs_perf_invariant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("armed_baseline.json");
+        std::fs::write(&path, "{\"bootstrap\": false, \"entries\": []}").unwrap();
+        let err = check_against_baseline(&[], 0.5, &path).unwrap_err();
+        assert!(
+            matches!(err, FastSurvivalError::PerfRegression(_)),
+            "expected PerfRegression, got {err}"
+        );
+        // Marginal shortfalls stay within the noise floor and pass.
+        check_against_baseline(&[], 0.9, &path).expect("within INVARIANT_MIN_SPEEDUP slack");
+        // A bootstrap baseline downgrades even a clear shortfall to advisory.
+        let boot = dir.join("bootstrap_baseline.json");
+        std::fs::write(&boot, "{\"bootstrap\": true, \"entries\": []}").unwrap();
+        check_against_baseline(&[], 0.5, &boot).expect("bootstrap invariant is advisory");
+    }
+
+    #[test]
+    fn gate_passes_without_baseline_file() {
+        // Recording-only mode: no baseline means nothing to compare, even
+        // the invariant (there is no armed gate to protect yet).
+        check_against_baseline(&[], 2.0, Path::new("/nonexistent/baseline.json"))
+            .expect("missing baseline must degrade to recording-only");
+        check_against_baseline(&[], 0.5, Path::new("/nonexistent/baseline.json"))
+            .expect("missing baseline skips the invariant too");
+    }
+
+    #[test]
+    fn gate_compares_against_committed_baseline() {
+        let dir = std::env::temp_dir().join("fs_perf_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        std::fs::write(
+            &path,
+            "{\"tolerance_pct\": 25, \"entries\": [\
+              {\"name\": \"k\", \"median_ns\": 1000.0, \"gate\": true}]}",
+        )
+        .unwrap();
+        let mk = |median_ns: f64| Entry {
+            name: "k".into(),
+            kernel: "all_coord_d1_d2_blocked",
+            n: 10,
+            p: 2,
+            ties: false,
+            strata: 1,
+            threads: 4,
+            seed: 1,
+            median_ns,
+            min_ns: median_ns,
+            mean_ns: median_ns,
+            mad_ns: 0.0,
+            samples: 5,
+            iters_per_sample: 1,
+            speedup_vs_seq: Some(2.0),
+            gate: true,
+        };
+        // Within tolerance: 20% slower passes.
+        check_against_baseline(&[mk(1200.0)], 2.0, &path).expect("within tolerance");
+        // Past tolerance: 50% slower fails.
+        let err = check_against_baseline(&[mk(1500.0)], 2.0, &path).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)));
+        // A bootstrap baseline downgrades the same failure to advisory.
+        std::fs::write(
+            &path,
+            "{\"bootstrap\": true, \"tolerance_pct\": 25, \"entries\": [\
+              {\"name\": \"k\", \"median_ns\": 1000.0, \"gate\": true}]}",
+        )
+        .unwrap();
+        check_against_baseline(&[mk(1500.0)], 2.0, &path).expect("bootstrap is advisory");
+    }
+}

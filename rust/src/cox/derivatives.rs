@@ -10,6 +10,7 @@
 use super::problem::CoxProblem;
 use super::state::CoxState;
 use crate::linalg::Matrix;
+use crate::util::parallel::{num_threads, par_map_indices, par_map_workers};
 
 /// First/second/third partial derivatives at one coordinate.
 #[derive(Clone, Copy, Debug, Default)]
@@ -19,14 +20,138 @@ pub struct CoordDerivs {
     pub d3: f64,
 }
 
-/// Reusable buffers for batched (all-coordinate) passes.
+/// Columns per parallel task in the blocked batched pass: big enough to
+/// amortize dispatch, small enough that p in the hundreds load-balances
+/// across a handful of workers.
+const COL_BLOCK: usize = 8;
+
+/// Memory cap (in f64 slots) for materializing the per-event-group
+/// prefix vectors of the blocked β-Hessian; past it the streaming
+/// sequential kernel runs instead.
+const HESSIAN_V_CAP: usize = 8_000_000;
+
+/// Minimum n·p before a batched pass is worth a scoped-thread spawn
+/// (below this the fork-join overhead dominates the numeric work).
+const PAR_MIN_WORK: usize = 1 << 15;
+
+/// Reusable buffers + the per-η-update risk-set weight cache shared by
+/// every batched pass.
+///
+/// The cache is keyed on [`CoxState::version`]: [`Workspace::prepare`]
+/// recomputes the per-group prefix weights only when the state actually
+/// changed, so any number of coordinate passes at one η share a single
+/// O(n) prefix accumulation — and the per-column loops run with zero
+/// divisions (1/S0 is hoisted here). A workspace may serve many states
+/// interchangeably (the beam-search pattern); version tags are globally
+/// unique so stale hits cannot happen.
 #[derive(Default, Debug)]
 pub struct Workspace {
-    /// Per-group event count ÷ S0 prefix (risk-set weights), reused by
-    /// the batched first/second-derivative pass.
+    /// Per-group 1/S0 (S0(g) = Σ_{k < end_g} w_k) — divisions hoisted
+    /// out of the per-column loops.
+    group_inv_s0: Vec<f64>,
+    /// Per-group risk-set weight n_events/S0 (Theorem 3.1).
     group_weight: Vec<f64>,
-    /// Per-group prefix S0.
-    group_s0: Vec<f64>,
+    /// Suffix sums A(g) = Σ_{g' ≥ g} n_events/S0 (η-gradient weights).
+    suffix_a: Vec<f64>,
+    /// Suffix sums B(g) = Σ_{g' ≥ g} n_events/S0² (η-Hessian weights).
+    suffix_b: Vec<f64>,
+    /// State version the caches above were built for.
+    cached: Option<u64>,
+    /// Last version seen by a `_ws` entry point; a second evaluation at
+    /// the same η promotes it to a full cache build.
+    last_seen: Option<u64>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when the cached weights were built for exactly this state.
+    #[inline]
+    fn is_fresh(&self, state: &CoxState) -> bool {
+        self.cached == Some(state.version())
+    }
+
+    /// (Re)build the per-group weights for `state` if stale: one O(n)
+    /// prefix pass plus one O(#groups) suffix pass on a miss, O(1) on a
+    /// hit.
+    pub fn prepare(&mut self, problem: &CoxProblem, state: &CoxState) {
+        if self.is_fresh(state) {
+            return;
+        }
+        let ngroups = problem.groups.len();
+        self.group_inv_s0.clear();
+        self.group_inv_s0.reserve(ngroups);
+        self.group_weight.clear();
+        self.group_weight.reserve(ngroups);
+        let mut s0 = 0.0_f64;
+        for g in &problem.groups {
+            for k in g.start..g.end {
+                s0 += state.w[k];
+            }
+            let inv = 1.0 / s0;
+            self.group_inv_s0.push(inv);
+            self.group_weight.push(g.n_events as f64 * inv);
+        }
+        self.suffix_a.clear();
+        self.suffix_a.resize(ngroups, 0.0);
+        self.suffix_b.clear();
+        self.suffix_b.resize(ngroups, 0.0);
+        let (mut sa, mut sb) = (0.0_f64, 0.0_f64);
+        for gi in (0..ngroups).rev() {
+            let ne = problem.groups[gi].n_events as f64;
+            let inv = self.group_inv_s0[gi];
+            sa += ne * inv;
+            sb += ne * inv * inv;
+            self.suffix_a[gi] = sa;
+            self.suffix_b[gi] = sb;
+        }
+        self.cached = Some(state.version());
+        self.last_seen = Some(state.version());
+    }
+
+    /// d1 at one coordinate from the cached suffix weights:
+    /// `d1 = Σ_k w_k x_kl A(g(k)) − (Xᵀδ)_l` — a single fused multiply
+    /// pass, no divisions, no per-group branching. Requires `prepare`.
+    fn coord_d1_from_cache(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
+        let col = problem.x.col(l);
+        let mut acc = 0.0_f64;
+        for ((&wk, &x), &g) in state.w.iter().zip(col).zip(problem.group_of.iter()) {
+            acc += wk * x * self.suffix_a[g];
+        }
+        acc - problem.xt_delta[l]
+    }
+
+    /// (d1, d2) at one coordinate with the cached 1/S0 weights — the
+    /// per-column kernel of the blocked batched pass. Requires `prepare`.
+    fn coord_d1_d2_from_cache(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        l: usize,
+    ) -> (f64, f64) {
+        let col = problem.x.col(l);
+        let w = &state.w;
+        let (mut s1, mut s2) = (0.0_f64, 0.0_f64);
+        let (mut a1, mut a2) = (0.0_f64, 0.0_f64);
+        for (gi, g) in problem.groups.iter().enumerate() {
+            for k in g.start..g.end {
+                let wx = w[k] * col[k];
+                s1 += wx;
+                s2 += wx * col[k];
+            }
+            let gw = self.group_weight[gi];
+            if gw > 0.0 {
+                // gw·s1 = ne·m1 and gw·s2 − (gw·s1)·m1 = ne·(m2 − m1²).
+                let m1 = s1 * self.group_inv_s0[gi];
+                let t1 = gw * s1;
+                a1 += t1;
+                a2 += gw * s2 - t1 * m1;
+            }
+        }
+        (a1 - problem.xt_delta[l], a2)
+    }
 }
 
 /// d1 only (Eq. 7). One fused pass; the cheapest quantity the quadratic
@@ -106,27 +231,120 @@ pub fn coord_derivs(problem: &CoxProblem, state: &CoxState, l: usize) -> CoordDe
     out
 }
 
-/// Batched (d1\[p\], d2\[p\]) over all coordinates — the beam-search screening
-/// hot path. Shares the per-group S0 prefix across all columns, so the
-/// total cost is O(np) with a single pass per column over contiguous
-/// column-major storage.
+/// d1 through a shared [`Workspace`]: the first evaluation at a new η
+/// runs the classic fused pass; from the second evaluation at the same η
+/// on, the per-group weights are built once and every further coordinate
+/// costs a single division-free pass. Never slower than [`coord_d1`] —
+/// the sweet spot is ℓ1-sparse CD sweeps and screening loops, where most
+/// steps leave η untouched.
+pub fn coord_d1_ws(problem: &CoxProblem, state: &CoxState, ws: &mut Workspace, l: usize) -> f64 {
+    let v = state.version();
+    if ws.cached == Some(v) {
+        return ws.coord_d1_from_cache(problem, state, l);
+    }
+    if ws.last_seen == Some(v) {
+        ws.prepare(problem, state);
+        return ws.coord_d1_from_cache(problem, state, l);
+    }
+    ws.last_seen = Some(v);
+    coord_d1(problem, state, l)
+}
+
+/// (d1, d2) through a shared [`Workspace`]; same caching discipline as
+/// [`coord_d1_ws`].
+pub fn coord_d1_d2_ws(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+    l: usize,
+) -> (f64, f64) {
+    let v = state.version();
+    if ws.cached == Some(v) {
+        return ws.coord_d1_d2_from_cache(problem, state, l);
+    }
+    if ws.last_seen == Some(v) {
+        ws.prepare(problem, state);
+        return ws.coord_d1_d2_from_cache(problem, state, l);
+    }
+    ws.last_seen = Some(v);
+    coord_d1_d2(problem, state, l)
+}
+
+/// Batched (d1\[p\], d2\[p\]) over all coordinates — the screening hot
+/// path. Cache-blocked and parallel: the per-group risk-set weights are
+/// computed once per η-update into the shared [`Workspace`], then the
+/// per-coordinate S1/S2 accumulation fans across feature blocks on
+/// `FASTSURVIVAL_THREADS` workers. Deterministic: each column's
+/// accumulation order is fixed, so results are bitwise identical for
+/// every thread count.
 pub fn all_coord_d1_d2(
     problem: &CoxProblem,
     state: &CoxState,
     ws: &mut Workspace,
 ) -> (Vec<f64>, Vec<f64>) {
+    // Tiny passes (beam search probes thousands of small candidates) are
+    // not worth a thread spawn; results are identical either way.
+    let threads = if problem.n().saturating_mul(problem.p()) < PAR_MIN_WORK {
+        1
+    } else {
+        num_threads()
+    };
+    all_coord_d1_d2_with_threads(problem, state, ws, threads)
+}
+
+/// [`all_coord_d1_d2`] with an explicit worker count (benchmarks and
+/// thread-count parity tests).
+pub fn all_coord_d1_d2_with_threads(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+    threads: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    ws.prepare(problem, state);
+    let p = problem.p();
+    let ws_ref: &Workspace = ws;
+    if threads <= 1 || p < 2 * COL_BLOCK {
+        let mut d1 = vec![0.0; p];
+        let mut d2 = vec![0.0; p];
+        for l in 0..p {
+            let (a, b) = ws_ref.coord_d1_d2_from_cache(problem, state, l);
+            d1[l] = a;
+            d2[l] = b;
+        }
+        return (d1, d2);
+    }
+    let nblocks = (p + COL_BLOCK - 1) / COL_BLOCK;
+    let blocks: Vec<usize> = (0..nblocks).collect();
+    let per_block = par_map_workers(&blocks, threads, |&b| {
+        let lo = b * COL_BLOCK;
+        let hi = (lo + COL_BLOCK).min(p);
+        (lo..hi)
+            .map(|l| ws_ref.coord_d1_d2_from_cache(problem, state, l))
+            .collect::<Vec<(f64, f64)>>()
+    });
+    let mut d1 = vec![0.0; p];
+    let mut d2 = vec![0.0; p];
+    for (b, vals) in per_block.into_iter().enumerate() {
+        for (j, (a, bb)) in vals.into_iter().enumerate() {
+            d1[b * COL_BLOCK + j] = a;
+            d2[b * COL_BLOCK + j] = bb;
+        }
+    }
+    (d1, d2)
+}
+
+/// The seed's sequential batched pass (shared S0 prefix, one division
+/// per group per column, no blocking). Kept verbatim as the reference
+/// kernel for `bench` speedup reporting and parity tests.
+pub fn all_coord_d1_d2_seq(problem: &CoxProblem, state: &CoxState) -> (Vec<f64>, Vec<f64>) {
     let ngroups = problem.groups.len();
-    ws.group_s0.clear();
-    ws.group_s0.reserve(ngroups);
-    ws.group_weight.clear();
-    ws.group_weight.reserve(ngroups);
+    let mut group_s0 = Vec::with_capacity(ngroups);
     let mut s0 = 0.0_f64;
     for g in &problem.groups {
         for k in g.start..g.end {
             s0 += state.w[k];
         }
-        ws.group_s0.push(s0);
-        ws.group_weight.push(g.n_events as f64 / s0);
+        group_s0.push(s0);
     }
 
     let p = problem.p();
@@ -144,7 +362,7 @@ pub fn all_coord_d1_d2(
             }
             if g.n_events > 0 {
                 let ne = g.n_events as f64;
-                let inv_s0 = 1.0 / ws.group_s0[gi];
+                let inv_s0 = 1.0 / group_s0[gi];
                 let m1 = s1 * inv_s0;
                 let m2 = s2 * inv_s0;
                 a1 += ne * m1;
@@ -161,27 +379,17 @@ pub fn all_coord_d1_d2(
 /// `u_k = w_k · Σ_{groups g ⪰ g(k)} (n_events(g) / S0(g)) − δ_k`,
 /// the suffix sum running over groups whose risk set contains k.
 pub fn eta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
+    eta_gradient_ws(problem, state, &mut Workspace::default())
+}
+
+/// [`eta_gradient`] through a shared [`Workspace`] (the suffix weights
+/// A(g) come straight from the cache when fresh).
+pub fn eta_gradient_ws(problem: &CoxProblem, state: &CoxState, ws: &mut Workspace) -> Vec<f64> {
+    ws.prepare(problem, state);
     let n = problem.n();
-    let ngroups = problem.groups.len();
-    // Prefix S0 per group.
-    let mut s0 = vec![0.0_f64; ngroups];
-    let mut acc = 0.0;
-    for (gi, g) in problem.groups.iter().enumerate() {
-        for k in g.start..g.end {
-            acc += state.w[k];
-        }
-        s0[gi] = acc;
-    }
-    // Suffix sums A(g) = Σ_{g' >= g} ne / S0.
-    let mut a = vec![0.0_f64; ngroups];
-    let mut suffix = 0.0;
-    for gi in (0..ngroups).rev() {
-        suffix += problem.groups[gi].n_events as f64 / s0[gi];
-        a[gi] = suffix;
-    }
     let mut u = vec![0.0; n];
     for k in 0..n {
-        u[k] = state.w[k] * a[problem.group_of[k]] - problem.delta[k];
+        u[k] = state.w[k] * ws.suffix_a[problem.group_of[k]] - problem.delta[k];
     }
     u
 }
@@ -189,37 +397,47 @@ pub fn eta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
 /// Diagonal of the η-space Hessian, O(n):
 /// `h_k = w_k·A(g(k)) − w_k²·B(g(k))` with `B(g) = Σ_{g'⪰g} ne/S0²`.
 pub fn eta_hessian_diag(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
+    eta_hessian_diag_ws(problem, state, &mut Workspace::default())
+}
+
+/// [`eta_hessian_diag`] through a shared [`Workspace`].
+pub fn eta_hessian_diag_ws(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+) -> Vec<f64> {
+    ws.prepare(problem, state);
     let n = problem.n();
-    let ngroups = problem.groups.len();
-    let mut s0 = vec![0.0_f64; ngroups];
-    let mut acc = 0.0;
-    for (gi, g) in problem.groups.iter().enumerate() {
-        for k in g.start..g.end {
-            acc += state.w[k];
-        }
-        s0[gi] = acc;
-    }
-    let (mut a, mut b) = (vec![0.0_f64; ngroups], vec![0.0_f64; ngroups]);
-    let (mut sa, mut sb) = (0.0, 0.0);
-    for gi in (0..ngroups).rev() {
-        let ne = problem.groups[gi].n_events as f64;
-        sa += ne / s0[gi];
-        sb += ne / (s0[gi] * s0[gi]);
-        a[gi] = sa;
-        b[gi] = sb;
-    }
     let mut h = vec![0.0; n];
     for k in 0..n {
         let g = problem.group_of[k];
-        h[k] = state.w[k] * a[g] - state.w[k] * state.w[k] * b[g];
+        let wk = state.w[k];
+        h[k] = wk * ws.suffix_a[g] - wk * wk * ws.suffix_b[g];
     }
     h
 }
 
 /// Full gradient ∇_β ℓ = X^T ∇_η ℓ, O(np).
 pub fn beta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
-    let u = eta_gradient(problem, state);
-    problem.x.tr_matvec(&u)
+    beta_gradient_ws(problem, state, &mut Workspace::default())
+}
+
+/// [`beta_gradient`] through a shared [`Workspace`], with the p column
+/// dot products fanned across feature blocks when p is large.
+pub fn beta_gradient_ws(problem: &CoxProblem, state: &CoxState, ws: &mut Workspace) -> Vec<f64> {
+    let u = eta_gradient_ws(problem, state, ws);
+    let p = problem.p();
+    // Branch on problem shape ONLY — never on the thread count — so the
+    // kernel (and its floating-point rounding) is identical for every
+    // FASTSURVIVAL_THREADS setting; with one worker the fan-out below
+    // degrades to a sequential loop over the same per-column dots.
+    if p < 2 * COL_BLOCK || problem.n().saturating_mul(p) < PAR_MIN_WORK {
+        return problem.x.tr_matvec(&u);
+    }
+    par_map_indices(p, |l| {
+        let col = problem.x.col(l);
+        col.iter().zip(u.iter()).map(|(&x, &uk)| x * uk).sum::<f64>()
+    })
 }
 
 /// Full β-space Hessian for exact Newton, O(n·p²):
@@ -227,6 +445,98 @@ pub fn beta_gradient(problem: &CoxProblem, state: &CoxState) -> Vec<f64> {
 /// where `M(R) = Σ_{k∈R} w_k x_k x_k^T` and `v(R) = Σ_{k∈R} w_k x_k` are
 /// prefix accumulations.
 pub fn beta_hessian(problem: &CoxProblem, state: &CoxState) -> Matrix {
+    beta_hessian_ws(problem, state, &mut Workspace::default())
+}
+
+/// [`beta_hessian`] through a shared [`Workspace`], parallel over rows
+/// of the upper triangle.
+///
+/// Uses the same suffix-weight identity as the blocked batched pass:
+/// `H = Σ_k w_k A(g(k)) x_k x_kᵀ − Σ_g (ne_g/S0_g²) v_g v_gᵀ`, so the
+/// first term is a weighted Gram matrix (independent per entry — ideal
+/// fan-out) and only the per-event-group prefix vectors v_g carry the
+/// sequential prefix structure, materialized once. Falls back to the
+/// seed's streaming kernel when the v_g buffer would exceed
+/// [`HESSIAN_V_CAP`] or when running single-threaded.
+pub fn beta_hessian_ws(problem: &CoxProblem, state: &CoxState, ws: &mut Workspace) -> Matrix {
+    let p = problem.p();
+    let n = problem.n();
+    // Event groups: only groups with n_events > 0 contribute to the
+    // rank-1 subtraction.
+    let ev: Vec<usize> = (0..problem.groups.len())
+        .filter(|&g| problem.groups[g].n_events > 0)
+        .collect();
+    let nev = ev.len();
+    // Formulation choice depends on problem shape ONLY (never the thread
+    // count): the same data yields bitwise-identical Hessians for every
+    // FASTSURVIVAL_THREADS setting — with one worker the fan-outs below
+    // run sequentially over the same per-entry dots.
+    if p < 2 || n.saturating_mul(p) < PAR_MIN_WORK || nev.saturating_mul(p) > HESSIAN_V_CAP {
+        return beta_hessian_streaming(problem, state);
+    }
+    ws.prepare(problem, state);
+    // First-term weights c_k = w_k · A(g(k)).
+    let mut c = Vec::with_capacity(n);
+    for (k, &wk) in state.w.iter().enumerate() {
+        c.push(wk * ws.suffix_a[problem.group_of[k]]);
+    }
+    // Second-term coefficients b_e = ne/S0² per event group.
+    let mut bcoef = Vec::with_capacity(nev);
+    for &g in &ev {
+        let inv = ws.group_inv_s0[g];
+        bcoef.push(problem.groups[g].n_events as f64 * inv * inv);
+    }
+    // v_g prefixes per column: V[j][e] = Σ_{k < end_{ev[e]}} w_k x_kj.
+    let v: Vec<Vec<f64>> = par_map_indices(p, |j| {
+        let col = problem.x.col(j);
+        let mut out = vec![0.0_f64; nev];
+        let mut acc = 0.0_f64;
+        let mut e = 0usize;
+        for (gi, g) in problem.groups.iter().enumerate() {
+            for k in g.start..g.end {
+                acc += state.w[k] * col[k];
+            }
+            if e < nev && ev[e] == gi {
+                out[e] = acc;
+                e += 1;
+            }
+        }
+        out
+    });
+    // Upper-triangle rows in parallel; each entry is two clean dots.
+    let rows: Vec<Vec<f64>> = par_map_indices(p, |j| {
+        let colj = problem.x.col(j);
+        let vj = &v[j];
+        let mut row = Vec::with_capacity(p - j);
+        for j2 in j..p {
+            let colj2 = problem.x.col(j2);
+            let mut acc = 0.0_f64;
+            for ((&ck, &xa), &xb) in c.iter().zip(colj).zip(colj2) {
+                acc += ck * xa * xb;
+            }
+            let vj2 = &v[j2];
+            let mut sub = 0.0_f64;
+            for ((&be, &va), &vb) in bcoef.iter().zip(vj).zip(vj2) {
+                sub += be * va * vb;
+            }
+            row.push(acc - sub);
+        }
+        row
+    });
+    let mut h = Matrix::zeros(p, p);
+    for (j, row) in rows.iter().enumerate() {
+        for (off, &val) in row.iter().enumerate() {
+            let j2 = j + off;
+            h.set(j, j2, val);
+            h.set(j2, j, val);
+        }
+    }
+    h
+}
+
+/// The seed's streaming sequential β-Hessian kernel (prefix M and v
+/// accumulated group by group).
+fn beta_hessian_streaming(problem: &CoxProblem, state: &CoxState) -> Matrix {
     let p = problem.p();
     let mut h = Matrix::zeros(p, p);
     let mut m = Matrix::zeros(p, p);
@@ -380,6 +690,96 @@ mod tests {
             let (d1, d2) = coord_d1_d2(&pr, &st, l);
             assert!((d1s[l] - d1).abs() < 1e-10);
             assert!((d2s[l] - d2).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_seq_across_thread_counts() {
+        for &ties in &[false, true] {
+            let pr = random_problem(120, 37, 29, ties);
+            let mut rng = Rng::new(91);
+            let beta: Vec<f64> = (0..37).map(|_| rng.normal() * 0.3).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            let (r1, r2) = all_coord_d1_d2_seq(&pr, &st);
+            for &threads in &[1usize, 2, 4] {
+                let mut ws = Workspace::default();
+                let (d1, d2) = all_coord_d1_d2_with_threads(&pr, &st, &mut ws, threads);
+                for l in 0..pr.p() {
+                    assert!(
+                        (d1[l] - r1[l]).abs() < 1e-10,
+                        "threads={threads} l={l}: {} vs {}",
+                        d1[l],
+                        r1[l]
+                    );
+                    assert!((d2[l] - r2[l]).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_coord_passes_match_classic() {
+        let pr = random_problem(80, 6, 57, true);
+        let mut st = CoxState::from_beta(&pr, &[0.1, -0.2, 0.3, 0.0, 0.2, -0.1]);
+        let mut ws = Workspace::default();
+        // First eval at this η: classic path. Second and later: cache
+        // built and used. After a state mutation: classic again.
+        for round in 0..3 {
+            for l in 0..pr.p() {
+                let want = coord_d1(&pr, &st, l);
+                let got = coord_d1_ws(&pr, &st, &mut ws, l);
+                assert!((got - want).abs() < 1e-10, "round {round} l={l}: {got} vs {want}");
+                let (w1, w2) = coord_d1_d2(&pr, &st, l);
+                let (g1, g2) = coord_d1_d2_ws(&pr, &st, &mut ws, l);
+                assert!((g1 - w1).abs() < 1e-10);
+                assert!((g2 - w2).abs() < 1e-10);
+            }
+            st.update_coord(&pr, round % pr.p(), 0.05);
+        }
+    }
+
+    #[test]
+    fn workspace_survives_interleaved_states() {
+        // A single workspace serving two states alternately must never
+        // return weights cached for the other state.
+        let pr = random_problem(60, 4, 61, false);
+        let sa = CoxState::from_beta(&pr, &[0.2, -0.1, 0.0, 0.3]);
+        let sb = CoxState::from_beta(&pr, &[-0.3, 0.4, 0.1, 0.0]);
+        let mut ws = Workspace::default();
+        for _ in 0..3 {
+            for st in [&sa, &sb] {
+                for l in 0..pr.p() {
+                    let want = coord_d1(&pr, st, l);
+                    let got = coord_d1_ws(&pr, st, &mut ws, l);
+                    assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beta_hessian_blocked_matches_streaming() {
+        // n·p must clear PAR_MIN_WORK or beta_hessian_ws falls back to
+        // streaming and the comparison is vacuous.
+        let (n, p) = (2048, 16);
+        assert!(n * p >= super::PAR_MIN_WORK);
+        let pr = random_problem(n, p, 63, true);
+        let mut rng = Rng::new(64);
+        let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 0.3).collect();
+        let st = CoxState::from_beta(&pr, &beta);
+        let hs = beta_hessian_streaming(&pr, &st);
+        let mut ws = Workspace::default();
+        let hb = beta_hessian_ws(&pr, &st, &mut ws);
+        for a in 0..p {
+            for b in 0..p {
+                let scale = hs.get(a, b).abs() + 1.0;
+                assert!(
+                    (hs.get(a, b) - hb.get(a, b)).abs() < 1e-7 * scale,
+                    "H[{a}{b}]: {} vs {}",
+                    hs.get(a, b),
+                    hb.get(a, b)
+                );
+            }
         }
     }
 

@@ -47,9 +47,15 @@ pub fn coord_lipschitz(problem: &CoxProblem, l: usize) -> LipschitzPair {
     out
 }
 
-/// All coordinates, O(np).
+/// All coordinates, O(np) — fanned across feature blocks for problems
+/// big enough to amortize the thread spawn (each coordinate is
+/// independent, so the output is identical either way).
 pub fn all_lipschitz(problem: &CoxProblem) -> Vec<LipschitzPair> {
-    (0..problem.p()).map(|l| coord_lipschitz(problem, l)).collect()
+    let p = problem.p();
+    if problem.n().saturating_mul(p) < (1 << 16) {
+        return (0..p).map(|l| coord_lipschitz(problem, l)).collect();
+    }
+    crate::util::parallel::par_map_indices(p, |l| coord_lipschitz(problem, l))
 }
 
 #[cfg(test)]

@@ -6,21 +6,38 @@
 //! Newton methods push η to ±hundreds (the paper's blow-up experiments).
 
 use super::problem::CoxProblem;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// How many incremental coordinate updates before a full recompute of w
 /// from η (bounds multiplicative drift).
 const REFRESH_EVERY: usize = 512;
 
+/// Process-global monotone counter behind [`CoxState::version`]. Every
+/// mutation of any state takes a fresh value, so version tags never
+/// collide across distinct states — a [`super::derivatives::Workspace`]
+/// cache keyed on the tag stays valid even when one workspace serves
+/// many states (the beam-search pattern).
+static STATE_VERSION: AtomicU64 = AtomicU64::new(1);
+
+fn next_version() -> u64 {
+    STATE_VERSION.fetch_add(1, Ordering::Relaxed)
+}
+
 #[derive(Clone, Debug)]
 pub struct CoxState {
     pub beta: Vec<f64>,
-    /// Linear predictor per sorted sample.
+    /// Linear predictor per sorted sample. If you mutate this directly
+    /// (instead of through [`CoxState::update_coord`] /
+    /// [`CoxState::set_beta`]), call [`CoxState::refresh_w`] afterwards
+    /// so w and the cache version stay consistent.
     pub eta: Vec<f64>,
     /// Stabilized hazard weights w = exp(η − shift).
     pub w: Vec<f64>,
     /// Current stabilization shift (max η at last refresh).
     pub shift: f64,
     updates_since_refresh: usize,
+    /// Cache tag; see [`CoxState::version`].
+    version: u64,
 }
 
 impl CoxState {
@@ -33,6 +50,7 @@ impl CoxState {
             w: vec![1.0; n],
             shift: 0.0,
             updates_since_refresh: 0,
+            version: next_version(),
         }
     }
 
@@ -46,9 +64,19 @@ impl CoxState {
             w: Vec::new(),
             shift: 0.0,
             updates_since_refresh: 0,
+            version: 0,
         };
         s.refresh_w();
         s
+    }
+
+    /// Monotone cache tag: changes whenever η/w change, never repeats
+    /// across states. [`super::derivatives::Workspace`] keys its
+    /// per-group risk-set weight cache on this, so any number of
+    /// derivative passes at one η share a single prefix accumulation.
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Recompute w = exp(η − max η) from scratch.
@@ -58,10 +86,14 @@ impl CoxState {
         self.shift = m;
         self.w = self.eta.iter().map(|&e| (e - m).exp()).collect();
         self.updates_since_refresh = 0;
+        self.version = next_version();
     }
 
     /// Apply a single-coordinate step β_l += Δ, updating η and w
-    /// incrementally. O(nnz(x_l)) when the column is sparse/binary.
+    /// incrementally: only nonzero entries of x_l are re-exponentiated
+    /// (a full recompute is n exp() calls; this is nnz(x_l) — or one,
+    /// for binary columns). The cheap compare-only scan keeps the exact
+    /// max η so both rebase guards fire exactly as on a full recompute.
     pub fn update_coord(&mut self, problem: &CoxProblem, l: usize, delta: f64) {
         if delta == 0.0 {
             return;
@@ -95,8 +127,10 @@ impl CoxState {
             }
         }
         self.updates_since_refresh += 1;
-        // Rebase if η drifted far from the shift (overflow guard) or after
-        // many incremental multiplies (precision guard).
+        self.version = next_version();
+        // Rebase if η drifted far from the shift (overflow guard upward,
+        // w-underflow guard downward) or after many incremental
+        // multiplies (precision guard).
         if max_eta - self.shift > 30.0
             || max_eta - self.shift < -30.0
             || self.updates_since_refresh >= REFRESH_EVERY
@@ -167,6 +201,29 @@ mod tests {
         }
         assert!(s.w.iter().all(|w| w.is_finite()));
         assert!(s.w.iter().cloned().fold(0.0f64, f64::max) <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn version_changes_on_every_mutation_and_never_collides() {
+        let p = problem();
+        let mut s = CoxState::zeros(&p);
+        let v0 = s.version();
+        s.update_coord(&p, 0, 0.0); // no-op step: w unchanged, tag stable
+        assert_eq!(s.version(), v0);
+        s.update_coord(&p, 0, 0.5);
+        let v1 = s.version();
+        assert_ne!(v1, v0);
+        s.refresh_w();
+        assert_ne!(s.version(), v1);
+        // Distinct states never share a tag (global counter).
+        let other = CoxState::zeros(&p);
+        assert_ne!(other.version(), s.version());
+        // A clone shares w bit-for-bit, so sharing the tag is correct —
+        // until either side mutates.
+        let mut c = s.clone();
+        assert_eq!(c.version(), s.version());
+        c.update_coord(&p, 1, 0.1);
+        assert_ne!(c.version(), s.version());
     }
 
     #[test]

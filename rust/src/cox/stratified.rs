@@ -8,7 +8,7 @@
 //! Lipschitz constants) is therefore the sum over strata, and the whole
 //! surrogate machinery applies unchanged.
 
-use super::derivatives::{coord_d1_d2, CoordDerivs};
+use super::derivatives::{self, coord_d1_d2, coord_d1_d2_ws, Workspace};
 use super::lipschitz::{coord_lipschitz, LipschitzPair};
 use super::loss::loss;
 use super::problem::CoxProblem;
@@ -16,7 +16,19 @@ use super::state::CoxState;
 use crate::data::SurvivalDataset;
 use crate::optim::prox::{cubic_l1_step, cubic_step};
 use crate::optim::{Objective, Trace};
+use crate::util::parallel::{num_threads, par_for_each_mut, par_map_indices};
 use std::time::Instant;
+
+/// Minimum total sample count before per-*sweep* work (loss, the
+/// Lipschitz precompute) fans out across threads — these spawn once per
+/// sweep, so a modest size already amortizes the fork-join.
+const PAR_MIN_N: usize = 16_384;
+
+/// Minimum total sample count before per-*coordinate* work (the (d1,d2)
+/// pass and the η/w update after a step) fans out. These spawn fresh
+/// scoped threads for every coordinate of every sweep, so the per-stratum
+/// pass must be well past the ~tens-of-µs spawn cost to win.
+const PAR_COORD_MIN_N: usize = 1 << 18;
 
 /// A stratified CPH problem: one [`CoxProblem`] per stratum, shared β.
 pub struct StratifiedCoxProblem {
@@ -43,9 +55,32 @@ impl StratifiedCoxProblem {
         StratifiedCoxProblem { strata, p }
     }
 
-    /// Combined loss Σ_s ℓ_s(β).
+    /// Total sample count across strata.
+    pub fn total_n(&self) -> usize {
+        self.strata.iter().map(|s| s.n()).sum()
+    }
+
+    /// Whether once-per-sweep fan-out pays for itself on this problem.
+    fn parallel(&self) -> bool {
+        self.strata.len() > 1 && self.total_n() >= PAR_MIN_N && num_threads() > 1
+    }
+
+    /// Whether once-per-coordinate fan-out pays for itself (much higher
+    /// bar: thread spawn cost recurs p times per sweep).
+    fn parallel_coord(&self) -> bool {
+        self.strata.len() > 1 && self.total_n() >= PAR_COORD_MIN_N && num_threads() > 1
+    }
+
+    /// Combined loss Σ_s ℓ_s(β) — per-stratum losses fanned across
+    /// threads when the problem is big enough.
     pub fn loss(&self, states: &[CoxState]) -> f64 {
-        self.strata.iter().zip(states).map(|(pr, st)| loss(pr, st)).sum()
+        if self.parallel() {
+            par_map_indices(self.strata.len(), |s| loss(&self.strata[s], &states[s]))
+                .iter()
+                .sum()
+        } else {
+            self.strata.iter().zip(states).map(|(pr, st)| loss(pr, st)).sum()
+        }
     }
 
     /// Combined (d1, d2) at a coordinate.
@@ -57,6 +92,78 @@ impl StratifiedCoxProblem {
             d.1 += d2;
         }
         d
+    }
+
+    /// Combined (d1, d2) through one cached [`Workspace`] per stratum,
+    /// fanned across strata when the problem is big enough. The
+    /// per-stratum sum order is fixed, so the result does not depend on
+    /// the thread count.
+    pub fn coord_d1_d2_ws(
+        &self,
+        states: &[CoxState],
+        wss: &mut [Workspace],
+        l: usize,
+    ) -> (f64, f64) {
+        self.coord_d1_d2_ws_with(states, wss, l, self.parallel_coord())
+    }
+
+    /// [`Self::coord_d1_d2_ws`] with the fan-out decision hoisted by the
+    /// caller (the fit loop evaluates it once, not per coordinate).
+    fn coord_d1_d2_ws_with(
+        &self,
+        states: &[CoxState],
+        wss: &mut [Workspace],
+        l: usize,
+        par_coord: bool,
+    ) -> (f64, f64) {
+        assert_eq!(wss.len(), self.strata.len());
+        if par_coord {
+            struct Cell<'a> {
+                ws: &'a mut Workspace,
+                out: (f64, f64),
+            }
+            let mut cells: Vec<Cell> =
+                wss.iter_mut().map(|ws| Cell { ws, out: (0.0, 0.0) }).collect();
+            par_for_each_mut(&mut cells, |s, cell| {
+                cell.out = coord_d1_d2_ws(&self.strata[s], &states[s], cell.ws, l);
+            });
+            cells.iter().fold((0.0, 0.0), |acc, c| (acc.0 + c.out.0, acc.1 + c.out.1))
+        } else {
+            let mut d = (0.0, 0.0);
+            for ((pr, st), ws) in self.strata.iter().zip(states).zip(wss.iter_mut()) {
+                let (d1, d2) = coord_d1_d2_ws(pr, st, ws, l);
+                d.0 += d1;
+                d.1 += d2;
+            }
+            d
+        }
+    }
+
+    /// Batched (d1\[p\], d2\[p\]) across all strata: one blocked parallel
+    /// pass per stratum (each fanned over feature blocks), summed
+    /// coordinate-wise.
+    pub fn all_coord_d1_d2(
+        &self,
+        states: &[CoxState],
+        wss: &mut [Workspace],
+    ) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(wss.len(), self.strata.len());
+        let mut d1 = vec![0.0; self.p];
+        let mut d2 = vec![0.0; self.p];
+        for ((pr, st), ws) in self.strata.iter().zip(states).zip(wss.iter_mut()) {
+            let (a, b) = derivatives::all_coord_d1_d2(pr, st, ws);
+            for l in 0..self.p {
+                d1[l] += a[l];
+                d2[l] += b[l];
+            }
+        }
+        (d1, d2)
+    }
+
+    /// One workspace per stratum (cache keys are per-state, so these can
+    /// be reused across any number of sweeps).
+    pub fn workspaces(&self) -> Vec<Workspace> {
+        self.strata.iter().map(|_| Workspace::default()).collect()
     }
 
     /// Combined third-derivative data is never needed directly; the
@@ -76,7 +183,11 @@ impl StratifiedCoxProblem {
         self.strata.iter().map(CoxState::zeros).collect()
     }
 
-    /// Fit by cubic-surrogate coordinate descent (shared β).
+    /// Fit by cubic-surrogate coordinate descent (shared β). Every
+    /// per-stratum quantity — Lipschitz constants, (d1, d2), the η/w
+    /// updates after a step, the loss — fans out across threads when the
+    /// problem is big enough, through one cached [`Workspace`] per
+    /// stratum.
     pub fn fit(
         &self,
         obj: Objective,
@@ -84,14 +195,22 @@ impl StratifiedCoxProblem {
         tol: f64,
     ) -> (Vec<f64>, Trace) {
         let mut states = self.zero_states();
+        let mut wss = self.workspaces();
         let mut beta = vec![0.0; self.p];
-        let lip: Vec<LipschitzPair> = (0..self.p).map(|l| self.lipschitz(l)).collect();
+        let lip: Vec<LipschitzPair> = if self.parallel() {
+            par_map_indices(self.p, |l| self.lipschitz(l))
+        } else {
+            (0..self.p).map(|l| self.lipschitz(l)).collect()
+        };
         let mut trace = Trace::default();
         let start = Instant::now();
         let mut prev = f64::INFINITY;
+        // Loop-invariant fan-out decisions, hoisted out of the hot
+        // coordinate loop (each re-reads FASTSURVIVAL_THREADS).
+        let par_coord = self.parallel_coord();
         for sweep in 0..max_sweeps {
             for l in 0..self.p {
-                let (d1, d2) = self.coord_d1_d2(&states, l);
+                let (d1, d2) = self.coord_d1_d2_ws_with(&states, &mut wss, l, par_coord);
                 let a = d1 + 2.0 * obj.l2 * beta[l];
                 let b = (d2 + 2.0 * obj.l2).max(0.0);
                 if b <= 0.0 && lip[l].l3 <= 0.0 {
@@ -104,10 +223,16 @@ impl StratifiedCoxProblem {
                 };
                 if delta != 0.0 {
                     beta[l] += delta;
-                    for (pr, st) in self.strata.iter().zip(states.iter_mut()) {
-                        st.update_coord(pr, l, delta);
-                        // update_coord also moves st.beta; keep it in sync
-                        // (harmless — states' beta is not read here).
+                    // update_coord also moves st.beta; keep it in sync
+                    // (harmless — states' beta is not read here).
+                    if par_coord {
+                        par_for_each_mut(&mut states, |s, st| {
+                            st.update_coord(&self.strata[s], l, delta);
+                        });
+                    } else {
+                        for (pr, st) in self.strata.iter().zip(states.iter_mut()) {
+                            st.update_coord(pr, l, delta);
+                        }
                     }
                 }
             }
@@ -162,6 +287,27 @@ mod tests {
         let sp = StratifiedCoxProblem::new(&ds, &labels);
         assert_eq!(sp.strata.len(), 2);
         assert_eq!(sp.strata[0].n() + sp.strata[1].n(), 60);
+    }
+
+    #[test]
+    fn batched_and_cached_passes_match_sequential() {
+        let (ds, labels) = stratified_ds(40, 9, 0.6);
+        let sp = StratifiedCoxProblem::new(&ds, &labels);
+        let mut states = sp.zero_states();
+        // Move off β = 0 so the risk-set weights are nontrivial.
+        for (pr, st) in sp.strata.iter().zip(states.iter_mut()) {
+            st.update_coord(pr, 0, 0.3);
+        }
+        let mut wss = sp.workspaces();
+        let (b1, b2) = sp.all_coord_d1_d2(&states, &mut wss);
+        for l in 0..sp.p {
+            let (d1, d2) = sp.coord_d1_d2(&states, l);
+            assert!((b1[l] - d1).abs() < 1e-10, "batched d1: {} vs {d1}", b1[l]);
+            assert!((b2[l] - d2).abs() < 1e-10, "batched d2: {} vs {d2}", b2[l]);
+            let (c1, c2) = sp.coord_d1_d2_ws(&states, &mut wss, l);
+            assert!((c1 - d1).abs() < 1e-10, "cached d1: {c1} vs {d1}");
+            assert!((c2 - d2).abs() < 1e-10, "cached d2: {c2} vs {d2}");
+        }
     }
 
     #[test]

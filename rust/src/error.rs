@@ -30,6 +30,9 @@ pub enum FastSurvivalError {
     /// cause is a Newton-family method on binarized data under weak
     /// regularization (the paper's Figure-1 phenomenon).
     Diverged { optimizer: String, iterations: usize },
+    /// The CI perf gate tripped: a tracked kernel regressed past the
+    /// committed baseline's tolerance (see `bench --check`).
+    PerfRegression(String),
     /// A filesystem operation failed.
     Io {
         context: String,
@@ -61,6 +64,7 @@ impl fmt::Display for FastSurvivalError {
                 "optimizer {optimizer:?} diverged after {iterations} iterations \
                  (consider stronger regularization or a surrogate method)"
             ),
+            FastSurvivalError::PerfRegression(m) => write!(f, "performance regression: {m}"),
             FastSurvivalError::Io { context, source } => write!(f, "{context}: {source}"),
             FastSurvivalError::Persist(m) => write!(f, "model persistence error: {m}"),
         }

@@ -5,6 +5,7 @@
 //!   select      cardinality-constrained variable selection
 //!   experiment  regenerate a paper table/figure (see DESIGN.md)
 //!   datasets    list datasets (Table 1 view)
+//!   bench       fixed-seed hot-path benchmarks → BENCH_optim.json
 //!
 //! Examples:
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
@@ -12,6 +13,7 @@
 //!   fastsurvival fit --dataset synthetic --save results/model.json
 //!   fastsurvival select --dataset synthetic --method beam --k 15
 //!   fastsurvival experiment --id fig1 --scale 0.25
+//!   fastsurvival bench --quick --check ci/bench_baseline.json
 //!
 //! Every failure path (bad names, invalid data, missing artifacts)
 //! surfaces as a typed `FastSurvivalError`, not a panic.
@@ -205,10 +207,11 @@ fn main() -> Result<()> {
         Some("select") => cmd_select(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("datasets") => cmd_datasets(&args),
+        Some("bench") => fastsurvival::coordinator::perf::run(&args),
         _ => {
             println!(
                 "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
-                 usage: fastsurvival <fit|select|experiment|datasets> [--options]\n\
+                 usage: fastsurvival <fit|select|experiment|datasets|bench> [--options]\n\
                  see README.md for details"
             );
             Ok(())

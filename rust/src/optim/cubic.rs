@@ -8,7 +8,7 @@
 
 use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer, Stopper};
 use super::prox::{cubic_l1_step, cubic_step};
-use crate::cox::derivatives::coord_d1_d2;
+use crate::cox::derivatives::{coord_d1_d2_ws, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::Result;
@@ -29,7 +29,22 @@ pub fn cubic_coord_step(
     lip: LipschitzPair,
     obj: Objective,
 ) -> f64 {
-    let (d1, d2) = coord_d1_d2(problem, state, l);
+    cubic_coord_step_ws(problem, state, &mut Workspace::default(), l, lip, obj)
+}
+
+/// [`cubic_coord_step`] through a shared [`Workspace`]: steps that leave
+/// η untouched reuse the cached risk-set weights (division-free fused
+/// pass) instead of re-accumulating the S0 prefix.
+#[inline]
+pub fn cubic_coord_step_ws(
+    problem: &CoxProblem,
+    state: &mut CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    lip: LipschitzPair,
+    obj: Objective,
+) -> f64 {
+    let (d1, d2) = coord_d1_d2_ws(problem, state, ws, l);
     let a = d1 + 2.0 * obj.l2 * state.beta[l];
     let b = d2 + 2.0 * obj.l2;
     if b <= 0.0 && lip.l3 <= 0.0 {
@@ -53,11 +68,12 @@ pub fn fit_support(
     lip: &[LipschitzPair],
 ) -> FitResult {
     let obj = config.objective;
+    let mut ws = Workspace::default();
     let mut stopper = Stopper::new();
     let mut iters = 0;
     for it in 0..config.max_iters {
         for &l in coords {
-            cubic_coord_step(problem, &mut state, l, lip[l], obj);
+            cubic_coord_step_ws(problem, &mut state, &mut ws, l, lip[l], obj);
         }
         iters = it + 1;
         let loss = obj.value(problem, &state);

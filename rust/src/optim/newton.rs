@@ -8,7 +8,7 @@
 //! paying for).
 
 use super::objective::{require_native, FitConfig, FitResult, Optimizer, Stopper};
-use crate::cox::derivatives::{beta_gradient, beta_hessian};
+use crate::cox::derivatives::{beta_gradient_ws, beta_hessian_ws, Workspace};
 use crate::cox::loss::loss_for_eta;
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::{FastSurvivalError, Result};
@@ -47,11 +47,15 @@ impl Optimizer for ExactNewton {
             ));
         }
         let p = problem.p();
+        // One workspace across iterations: the gradient's prefix-weight
+        // pass is shared with the Hessian's at each η (same version), and
+        // buffers are reused between Newton steps.
+        let mut ws = Workspace::default();
         let mut stopper = Stopper::new();
         let mut iters = 0;
         for it in 0..config.max_iters {
-            let mut g = beta_gradient(problem, &state);
-            let mut h: Matrix = beta_hessian(problem, &state);
+            let mut g = beta_gradient_ws(problem, &state, &mut ws);
+            let mut h: Matrix = beta_hessian_ws(problem, &state, &mut ws);
             for l in 0..p {
                 g[l] += 2.0 * obj.l2 * state.beta[l];
                 h.set(l, l, h.get(l, l) + 2.0 * obj.l2);

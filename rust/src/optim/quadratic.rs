@@ -7,7 +7,7 @@
 
 use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer, Stopper};
 use super::prox::{quad_l1_step, quad_step};
-use crate::cox::derivatives::coord_d1;
+use crate::cox::derivatives::{coord_d1_ws, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::Result;
@@ -29,11 +29,26 @@ pub fn quad_coord_step(
     lip: LipschitzPair,
     obj: Objective,
 ) -> f64 {
+    quad_coord_step_ws(problem, state, &mut Workspace::default(), l, lip, obj)
+}
+
+/// [`quad_coord_step`] through a shared [`Workspace`]: steps that leave
+/// η untouched (the common case deep into an ℓ1 fit) reuse the cached
+/// risk-set weights instead of re-accumulating the S0 prefix.
+#[inline]
+pub fn quad_coord_step_ws(
+    problem: &CoxProblem,
+    state: &mut CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    lip: LipschitzPair,
+    obj: Objective,
+) -> f64 {
     let b = lip.l2 + 2.0 * obj.l2;
     if b <= 0.0 {
         return 0.0;
     }
-    let d1 = coord_d1(problem, state, l);
+    let d1 = coord_d1_ws(problem, state, ws, l);
     let a = d1 + 2.0 * obj.l2 * state.beta[l];
     let delta = if obj.l1 > 0.0 {
         quad_l1_step(a, b, state.beta[l], obj.l1)
@@ -53,11 +68,12 @@ pub fn fit_support(
     lip: &[LipschitzPair],
 ) -> FitResult {
     let obj = config.objective;
+    let mut ws = Workspace::default();
     let mut stopper = Stopper::new();
     let mut iters = 0;
     for it in 0..config.max_iters {
         for &l in coords {
-            quad_coord_step(problem, &mut state, l, lip[l], obj);
+            quad_coord_step_ws(problem, &mut state, &mut ws, l, lip[l], obj);
         }
         iters = it + 1;
         let loss = obj.value(problem, &state);

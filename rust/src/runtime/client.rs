@@ -2,20 +2,23 @@
 //! AOT artifacts.
 //!
 //! The real client needs the `xla` bindings crate, which only exists in
-//! the accelerator build image; it is gated behind the `xla` cargo
-//! feature. The default (offline) build substitutes a stub with the same
-//! surface whose constructor returns a typed
-//! [`FastSurvivalError::Unsupported`], so engine selection stays a
-//! runtime decision and downstream code compiles unchanged.
+//! the accelerator build image; it is gated behind the `xla-bindings`
+//! cargo feature (which implies `xla`). Every other build — default,
+//! `--no-default-features`, and the CI `--features xla` stub build —
+//! substitutes a stub with the same surface whose constructor returns a
+//! typed [`FastSurvivalError::Unsupported`], so engine selection stays a
+//! runtime decision and downstream code compiles unchanged, entirely
+//! offline. Inside the image: uncomment the `xla` dependency in
+//! `rust/Cargo.toml` and build with `--features xla-bindings`.
 
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-bindings")]
 pub use pjrt::{lit_f32, lit_f32_matrix, lit_i32, Literal, XlaRuntime};
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-bindings"))]
 pub use stub::{lit_f32, lit_f32_matrix, lit_i32, Literal, XlaRuntime};
 
 /// Real PJRT-backed runtime (accelerator image only).
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-bindings")]
 mod pjrt {
     use crate::error::{FastSurvivalError, Result};
     use crate::runtime::artifacts::{ArtifactSpec, Manifest};
@@ -121,7 +124,7 @@ mod pjrt {
 /// Offline stand-in: the same surface, every entry point reports that the
 /// `xla` feature is off. Keeps engine-selection code paths compiling and
 /// lets tests degrade to a skip instead of a crash.
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-bindings"))]
 mod stub {
     use crate::error::{FastSurvivalError, Result};
     use crate::runtime::artifacts::Manifest;
@@ -129,8 +132,9 @@ mod stub {
 
     fn unavailable() -> FastSurvivalError {
         FastSurvivalError::Unsupported(
-            "XLA runtime not compiled in; rebuild with `--features xla` inside the \
-             accelerator image (the `xla` bindings crate is not available offline)"
+            "XLA runtime not compiled in; uncomment the `xla` dependency and rebuild \
+             with `--features xla-bindings` inside the accelerator image (the bindings \
+             crate is not available offline)"
                 .into(),
         )
     }
@@ -183,7 +187,7 @@ mod stub {
     }
 }
 
-#[cfg(all(test, feature = "xla"))]
+#[cfg(all(test, feature = "xla-bindings"))]
 mod tests {
     use super::*;
     use std::path::Path;
@@ -240,7 +244,7 @@ mod tests {
     }
 }
 
-#[cfg(all(test, not(feature = "xla")))]
+#[cfg(all(test, not(feature = "xla-bindings")))]
 mod stub_tests {
     use super::*;
     use std::path::Path;

@@ -46,6 +46,21 @@ pub trait CoxEngine {
     /// Batched (d1\[p\], d2\[p\]) over all coordinates.
     fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)>;
 
+    /// Batched (d1\[p\], d2\[p\]) reusing a caller-held [`Workspace`] so
+    /// repeated screening passes share the per-η risk-set weight cache.
+    /// Engines without native workspaces ignore `ws` — this keeps one
+    /// kernel contract across the native blocked-parallel path and the
+    /// AOT-XLA path.
+    fn all_d1_d2_ws(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let _ = ws;
+        self.all_d1_d2(problem, state)
+    }
+
     /// Lipschitz constants for one coordinate (Theorem 3.4).
     fn lipschitz(&self, problem: &CoxProblem, l: usize) -> Result<LipschitzPair>;
 }
@@ -86,7 +101,17 @@ impl CoxEngine for NativeEngine {
 
     fn all_d1_d2(&self, problem: &CoxProblem, state: &CoxState) -> Result<(Vec<f64>, Vec<f64>)> {
         let mut ws = Workspace::default();
-        Ok(derivatives::all_coord_d1_d2(problem, state, &mut ws))
+        self.all_d1_d2_ws(problem, state, &mut ws)
+    }
+
+    fn all_d1_d2_ws(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        // The blocked cache-aware kernel, parallel over feature blocks.
+        Ok(derivatives::all_coord_d1_d2(problem, state, ws))
     }
 
     fn lipschitz(&self, problem: &CoxProblem, l: usize) -> Result<LipschitzPair> {
@@ -340,6 +365,23 @@ mod tests {
             assert!((d.d2 - e2).abs() < 1e-12);
         }
         assert!(ne.is_native());
+    }
+
+    #[test]
+    fn native_all_d1_d2_ws_matches_plain_and_reuses_cache() {
+        let ne = NativeEngine;
+        let pr = random_problem(90, 20, 41, true);
+        let st = CoxState::from_beta(&pr, &[0.05; 20]);
+        let (a1, a2) = ne.all_d1_d2(&pr, &st).unwrap();
+        let mut ws = Workspace::default();
+        // Twice through the same workspace: second call hits the cache.
+        for _ in 0..2 {
+            let (b1, b2) = ne.all_d1_d2_ws(&pr, &st, &mut ws).unwrap();
+            for l in 0..20 {
+                assert!((a1[l] - b1[l]).abs() < 1e-12);
+                assert!((a2[l] - b2[l]).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -68,15 +68,20 @@ impl Bencher {
         Self::default()
     }
 
+    /// Small-budget bencher for smoke runs (CI, `bench --quick`).
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(250),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
     /// Quick-mode bencher (used under `FASTSURVIVAL_BENCH_QUICK=1`, e.g. CI).
     pub fn from_env() -> Self {
         if std::env::var("FASTSURVIVAL_BENCH_QUICK").as_deref() == Ok("1") {
-            Bencher {
-                warmup: Duration::from_millis(50),
-                measure: Duration::from_millis(250),
-                min_samples: 5,
-                results: Vec::new(),
-            }
+            Self::quick()
         } else {
             Self::default()
         }

@@ -25,11 +25,24 @@ pub fn num_threads() -> usize {
 /// index. `f` must be `Sync` (called concurrently) and items are accessed
 /// by shared reference.
 pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(items: &[T], f: F) -> Vec<R> {
+    par_map_workers(items, num_threads(), f)
+}
+
+/// [`par_map`] with an explicit worker count, for callers (benchmarks,
+/// parity tests) that must pin parallelism independently of
+/// `FASTSURVIVAL_THREADS`. Output order — and, because each item is
+/// processed in isolation, every result bit — is identical for every
+/// worker count.
+pub fn par_map_workers<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(
+    items: &[T],
+    workers: usize,
+    f: F,
+) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = num_threads().min(n);
+    let workers = workers.max(1).min(n);
     if workers <= 1 {
         return items.iter().map(&f).collect();
     }
@@ -57,6 +70,36 @@ pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(items: &[T], f: F) -> Ve
 pub fn par_map_indices<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec<R> {
     let idx: Vec<usize> = (0..n).collect();
     par_map(&idx, |&i| f(i))
+}
+
+/// Apply `f(index, &mut item)` to every item in parallel, mutating in
+/// place. Items are split into contiguous chunks, one worker per chunk,
+/// so each worker owns a disjoint `&mut` slice (no locking). Used by the
+/// stratified fit to advance every per-stratum state after a shared-β
+/// coordinate step.
+pub fn par_for_each_mut<T: Send, F: Fn(usize, &mut T) + Sync>(items: &mut [T], f: F) {
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = (n + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        for (ci, part) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in part.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -87,6 +130,28 @@ mod tests {
     fn indices_helper() {
         let out = par_map_indices(10, |i| i * i);
         assert_eq!(out[9], 81);
+    }
+
+    #[test]
+    fn explicit_worker_counts_agree() {
+        let items: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * 3 + 1).collect();
+        for workers in [1usize, 2, 4, 8] {
+            let out = par_map_workers(&items, workers, |&x| x * 3 + 1);
+            assert_eq!(out, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let mut items = vec![0usize; 100];
+        par_for_each_mut(&mut items, |i, v| *v = i + 1);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+        // Empty slice is a no-op, not a panic.
+        let mut empty: Vec<usize> = Vec::new();
+        par_for_each_mut(&mut empty, |_, _| unreachable!());
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Property-based tests over the paper's core mathematical claims,
 //! using the in-repo randomized-property harness (util::proptest).
 
-use fastsurvival::cox::derivatives::{coord_d1_d2, coord_derivs};
+use fastsurvival::cox::derivatives::{
+    all_coord_d1_d2, all_coord_d1_d2_seq, all_coord_d1_d2_with_threads, coord_d1,
+    coord_d1_d2, coord_d1_d2_ws, coord_d1_ws, coord_derivs, Workspace,
+};
+use fastsurvival::cox::stratified::StratifiedCoxProblem;
 use fastsurvival::cox::lipschitz::coord_lipschitz;
 use fastsurvival::cox::loss::{loss, penalized_loss};
 use fastsurvival::cox::{CoxProblem, CoxState};
@@ -177,6 +181,137 @@ fn prop_quadratic_majorizes() {
             } else {
                 Err(format!("g(Δ)={surrogate} < f(x+Δ)={f1} at Δ={delta}"))
             }
+        },
+    );
+}
+
+/// The parallel blocked batched pass matches the sequential
+/// per-coordinate kernels within 1e-10 — for every worker count in
+/// {1, 2, 4} (the counts `FASTSURVIVAL_THREADS` would set; pinned here
+/// via the explicit-workers entry point because mutating the
+/// environment from a parallel test harness races glibc's setenv),
+/// for tied and untied inputs (ties are randomized inside
+/// `random_problem`), and through the cached per-coordinate `_ws` paths.
+#[test]
+fn prop_blocked_parallel_matches_sequential_derivatives() {
+    check(
+        "blocked-parallel-parity",
+        131,
+        30,
+        |r| {
+            let p = 3 + r.below(18);
+            let (pr, beta) = random_problem(r, 80, p);
+            (pr, beta)
+        },
+        |(pr, beta)| {
+            let st = CoxState::from_beta(pr, beta);
+            let (r1, r2) = all_coord_d1_d2_seq(pr, &st);
+            for &threads in &[1usize, 2, 4] {
+                let mut ws = Workspace::default();
+                let (d1, d2) = all_coord_d1_d2_with_threads(pr, &st, &mut ws, threads);
+                for l in 0..pr.p() {
+                    let (e1, e2) = coord_d1_d2(pr, &st, l);
+                    if (d1[l] - e1).abs() > 1e-10 || (d1[l] - r1[l]).abs() > 1e-10 {
+                        return Err(format!(
+                            "threads={threads} l={l}: blocked d1 {} vs coord {} vs seq {}",
+                            d1[l], e1, r1[l]
+                        ));
+                    }
+                    if (d2[l] - e2).abs() > 1e-10 || (d2[l] - r2[l]).abs() > 1e-10 {
+                        return Err(format!(
+                            "threads={threads} l={l}: blocked d2 {} vs coord {} vs seq {}",
+                            d2[l], e2, r2[l]
+                        ));
+                    }
+                }
+            }
+            // Cached single-coordinate paths (evaluated twice at one η so
+            // both the classic and the cache-hit branches run).
+            let mut ws = Workspace::default();
+            for _ in 0..2 {
+                for l in 0..pr.p() {
+                    let got = coord_d1_ws(pr, &st, &mut ws, l);
+                    if (got - coord_d1(pr, &st, l)).abs() > 1e-10 {
+                        return Err(format!("cached d1 mismatch at {l}"));
+                    }
+                    let (g1, g2) = coord_d1_d2_ws(pr, &st, &mut ws, l);
+                    let (e1, e2) = coord_d1_d2(pr, &st, l);
+                    if (g1 - e1).abs() > 1e-10 || (g2 - e2).abs() > 1e-10 {
+                        return Err(format!("cached d1d2 mismatch at {l}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The public auto-threaded entry point (the one `FASTSURVIVAL_THREADS`
+/// steers at runtime) agrees with the sequential reference for whatever
+/// worker count this environment resolves to.
+#[test]
+fn prop_auto_threaded_batched_matches_sequential() {
+    let mut rng = Rng::new(977);
+    let (pr, beta) = random_problem(&mut rng, 60, 20);
+    let st = CoxState::from_beta(&pr, &beta);
+    let (r1, r2) = all_coord_d1_d2_seq(&pr, &st);
+    let mut ws = Workspace::default();
+    let (d1, d2) = all_coord_d1_d2(&pr, &st, &mut ws);
+    for l in 0..pr.p() {
+        assert!((d1[l] - r1[l]).abs() < 1e-10, "l={l}: {} vs {}", d1[l], r1[l]);
+        assert!((d2[l] - r2[l]).abs() < 1e-10);
+    }
+}
+
+/// Stratified inputs: the batched per-stratum blocked pass and the
+/// cached per-coordinate path both match the sequential per-coordinate
+/// sum within 1e-10.
+#[test]
+fn prop_stratified_blocked_matches_sequential() {
+    check(
+        "stratified-blocked-parity",
+        139,
+        20,
+        |r| {
+            let n = 30 + r.below(60);
+            let p = 2 + r.below(4);
+            let cols: Vec<Vec<f64>> =
+                (0..p).map(|_| (0..n).map(|_| r.normal()).collect()).collect();
+            let time = gen::times(r, n, r.bernoulli(0.5));
+            let event = gen::events(r, n, 0.7);
+            let labels: Vec<usize> = (0..n).map(|_| r.below(3)).collect();
+            let beta: Vec<f64> = (0..p).map(|_| r.normal() * 0.5).collect();
+            (cols, time, event, labels, beta)
+        },
+        |(cols, time, event, labels, beta)| {
+            let ds = SurvivalDataset::new(
+                Matrix::from_columns(cols),
+                time.clone(),
+                event.clone(),
+                "strat-prop",
+            );
+            let sp = StratifiedCoxProblem::new(&ds, labels);
+            let states: Vec<CoxState> = sp
+                .strata
+                .iter()
+                .map(|pr| CoxState::from_beta(pr, beta))
+                .collect();
+            let mut wss = sp.workspaces();
+            let (b1, b2) = sp.all_coord_d1_d2(&states, &mut wss);
+            for l in 0..sp.p {
+                let (d1, d2) = sp.coord_d1_d2(&states, l);
+                if (b1[l] - d1).abs() > 1e-10 || (b2[l] - d2).abs() > 1e-10 {
+                    return Err(format!(
+                        "stratified batched mismatch at {l}: ({}, {}) vs ({d1}, {d2})",
+                        b1[l], b2[l]
+                    ));
+                }
+                let (c1, c2) = sp.coord_d1_d2_ws(&states, &mut wss, l);
+                if (c1 - d1).abs() > 1e-10 || (c2 - d2).abs() > 1e-10 {
+                    return Err(format!("stratified cached mismatch at {l}"));
+                }
+            }
+            Ok(())
         },
     );
 }
