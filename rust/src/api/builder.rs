@@ -17,12 +17,15 @@
 //! ```
 
 use super::model::{CoxModel, FitDiagnostics};
+use super::path::{CoxPath, CoxPathPoint, PathKind};
 use crate::cox::{CoxProblem, CoxState};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
 use crate::metrics::BreslowBaseline;
-use crate::optim::{FitConfig, Objective, Optimizer};
+use crate::optim::{FitConfig, Objective, Optimizer, SurrogateKind};
+use crate::path::{CardinalityPath, CardinalitySolver, PathSolver};
 use crate::runtime::engine::CoxEngine;
+use crate::select::BeamSearch;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -46,6 +49,10 @@ pub struct CoxFit {
     tol: f64,
     budget_secs: f64,
     record_trace: bool,
+    // λ-path configuration (CoxFit::l1_path).
+    n_lambdas: usize,
+    lambda_min_ratio: f64,
+    l1_ratio: f64,
 }
 
 impl Default for CoxFit {
@@ -60,6 +67,9 @@ impl Default for CoxFit {
             tol: 1e-9,
             budget_secs: 0.0,
             record_trace: true,
+            n_lambdas: 50,
+            lambda_min_ratio: 0.01,
+            l1_ratio: 1.0,
         }
     }
 }
@@ -120,6 +130,25 @@ impl CoxFit {
     /// Record the per-iteration loss trace (on by default).
     pub fn record_trace(mut self, record: bool) -> Self {
         self.record_trace = record;
+        self
+    }
+
+    /// Number of λ grid points for [`CoxFit::l1_path`] (default 50).
+    pub fn n_lambdas(mut self, n: usize) -> Self {
+        self.n_lambdas = n;
+        self
+    }
+
+    /// λ_min / λ_max ratio of the path grid (default 0.01).
+    pub fn lambda_min_ratio(mut self, r: f64) -> Self {
+        self.lambda_min_ratio = r;
+        self
+    }
+
+    /// ElasticNet mixing for [`CoxFit::l1_path`]: the per-point penalty
+    /// is λ·(l1_ratio·‖β‖₁ + (1−l1_ratio)·‖β‖₂²). Default 1.0 (lasso).
+    pub fn l1_ratio(mut self, r: f64) -> Self {
+        self.l1_ratio = r;
         self
     }
 
@@ -221,6 +250,156 @@ impl CoxFit {
             diagnostics,
         ))
     }
+
+    // ---------------------------------------------------- path fitting
+
+    /// Common validation for path fits: paths run the surrogate CD hot
+    /// path on the native engine only, and derive their penalties from
+    /// the λ grid — explicit `.l1()`/`.l2()` settings would be silently
+    /// discarded, so they are rejected instead.
+    fn validate_path(&self, ds: &SurvivalDataset) -> Result<SurrogateKind> {
+        self.validate(ds)?;
+        if self.l1 != 0.0 || self.l2 != 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "path fitting derives penalties from the λ grid; explicit .l1({})/.l2({}) \
+                 settings do not apply (use .l1_ratio()/.lambda_min_ratio()/.n_lambdas() \
+                 to shape the grid, or .fit() for a single penalized model)",
+                self.l1, self.l2
+            )));
+        }
+        if self.engine != EngineKind::Native {
+            return Err(FastSurvivalError::Unsupported(
+                "path fitting runs on the native engine only (the screened \
+                 active-set loop is an in-process hot path)"
+                    .into(),
+            ));
+        }
+        match self.optimizer {
+            OptimizerKind::Quadratic => Ok(SurrogateKind::Quadratic),
+            OptimizerKind::Cubic => Ok(SurrogateKind::Cubic),
+            other => Err(FastSurvivalError::InvalidConfig(format!(
+                "path fitting needs a surrogate CD optimizer (quadratic|cubic), got {:?}",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Fit the whole ℓ1(+ℓ2) regularization path: a log-spaced λ grid
+    /// from the data-derived λ_max, warm starts between grid points,
+    /// sequential strong-rule screening, and a full KKT check per point.
+    /// Penalties come from the grid — `.l1()`/`.l2()` must stay unset
+    /// (rejected otherwise), and `.tol()`/`.budget_secs()` do not apply
+    /// (the path's inner stopping is KKT-residual-based).
+    /// Returns a [`CoxPath`] whose every point materializes as a
+    /// [`CoxModel`].
+    pub fn l1_path(&self, ds: &SurvivalDataset) -> Result<CoxPath> {
+        let surrogate = self.validate_path(ds)?;
+        let problem = CoxProblem::try_new(ds)?;
+        // Note: `tol` (the loss-change tolerance of single fits) does not
+        // apply here — the path's inner stopping is KKT-residual-based
+        // (PathSolver::stop_rel), which is what certifies warm/cold parity.
+        let solver = PathSolver {
+            n_lambdas: self.n_lambdas,
+            min_ratio: self.lambda_min_ratio,
+            l1_ratio: self.l1_ratio,
+            surrogate,
+            max_sweeps: self.max_iters,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let path = solver.run(&problem)?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let points = path
+            .points
+            .into_iter()
+            .map(|pt| {
+                let eta = ds.x.matvec(&pt.beta);
+                let baseline = BreslowBaseline::fit(&ds.time, &ds.event, &eta);
+                CoxPathPoint {
+                    lambda: Some(pt.lambda),
+                    k: pt.support.len(),
+                    l1: pt.l1,
+                    l2: pt.l2,
+                    beta: pt.beta,
+                    train_loss: pt.train_loss,
+                    iterations: pt.sweeps,
+                    baseline,
+                }
+            })
+            .collect();
+        Ok(CoxPath::from_parts(
+            PathKind::L1,
+            ds.feature_names.clone(),
+            points,
+            surrogate.name().to_string(),
+            ds.n(),
+            ds.n_events(),
+            wall_secs,
+        ))
+    }
+
+    /// Fit the cardinality path k = 1..=`max_k` with the paper's beam
+    /// search (each level warm-extends the previous one). Returns a
+    /// [`CoxPath`] queryable per support size.
+    pub fn cardinality_path(&self, ds: &SurvivalDataset, max_k: usize) -> Result<CoxPath> {
+        self.cardinality_path_with(
+            ds,
+            max_k,
+            &CardinalitySolver::Beam(BeamSearch::default()),
+        )
+    }
+
+    /// [`CoxFit::cardinality_path`] with an explicit k-path engine (beam
+    /// search or warm-chained ABESS).
+    pub fn cardinality_path_with(
+        &self,
+        ds: &SurvivalDataset,
+        max_k: usize,
+        solver: &CardinalitySolver,
+    ) -> Result<CoxPath> {
+        self.validate_path(ds)?;
+        if max_k == 0 {
+            return Err(FastSurvivalError::InvalidConfig(
+                "cardinality path needs max_k >= 1".into(),
+            ));
+        }
+        let problem = CoxProblem::try_new(ds)?;
+        let t0 = Instant::now();
+        let path: CardinalityPath = solver.run(&problem, max_k);
+        let wall_secs = t0.elapsed().as_secs_f64();
+        if path.is_empty() {
+            return Err(FastSurvivalError::InvalidData(
+                "cardinality path came back empty (no support size was reachable)".into(),
+            ));
+        }
+        let points = path
+            .points
+            .into_iter()
+            .map(|pt| {
+                let eta = ds.x.matvec(&pt.beta);
+                let baseline = BreslowBaseline::fit(&ds.time, &ds.event, &eta);
+                CoxPathPoint {
+                    lambda: None,
+                    k: pt.k,
+                    l1: 0.0,
+                    l2: 0.0,
+                    beta: pt.beta,
+                    train_loss: pt.train_loss,
+                    iterations: 0,
+                    baseline,
+                }
+            })
+            .collect();
+        Ok(CoxPath::from_parts(
+            PathKind::Cardinality,
+            ds.feature_names.clone(),
+            points,
+            solver.name().to_string(),
+            ds.n(),
+            ds.n_events(),
+            wall_secs,
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +485,56 @@ mod tests {
             CoxFit::new().fit(&d),
             Err(FastSurvivalError::InvalidData(_))
         ));
+    }
+
+    #[test]
+    fn l1_path_through_the_builder() {
+        let ds = ds();
+        let path = CoxFit::new().n_lambdas(12).l1_path(&ds).unwrap();
+        assert_eq!(path.len(), 12);
+        assert_eq!(path.kind(), crate::api::PathKind::L1);
+        // λ_max endpoint is the empty model; λ_min is not.
+        assert_eq!(path.points()[0].k, 0);
+        assert!(path.points().last().unwrap().k > 0);
+        // Every point materializes as a predicting model.
+        let m = path.model_at(path.len() - 1).unwrap();
+        assert!(m.concordance(&ds).unwrap() > 0.55);
+        // Closest-λ lookup hits the endpoint for λ → 0.
+        let end = path.model_for_lambda(0.0).unwrap();
+        assert_eq!(end.beta(), m.beta());
+    }
+
+    #[test]
+    fn cardinality_path_through_the_builder() {
+        let ds = ds();
+        let path = CoxFit::new().cardinality_path(&ds, 4).unwrap();
+        assert_eq!(path.kind(), crate::api::PathKind::Cardinality);
+        assert!(!path.is_empty());
+        let m = path.model_for_k(3).unwrap();
+        assert_eq!(m.beta().iter().filter(|b| b.abs() > 1e-10).count(), 3);
+    }
+
+    #[test]
+    fn path_rejects_non_surrogate_or_non_native_configs() {
+        let ds = ds();
+        assert!(matches!(
+            CoxFit::new().optimizer(OptimizerKind::Newton).l1_path(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        // Explicit penalties would be silently discarded by a path fit.
+        assert!(matches!(
+            CoxFit::new().l1(0.5).l1_path(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().l2(0.1).cardinality_path(&ds, 3),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            CoxFit::new().engine(EngineKind::Xla).l1_path(&ds),
+            Err(FastSurvivalError::Unsupported(_))
+        ));
+        assert!(CoxFit::new().cardinality_path(&ds, 0).is_err());
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! [`crate::data::SurvivalDataset`], and get a [`CoxModel`] that owns
 //! the coefficients, the fitted Breslow baseline, and fit diagnostics,
 //! with `predict_risk` / `predict_survival` / `concordance` and JSON
-//! `save` / `load`.
+//! `save` / `load`. Whole model families come from the same builder:
+//! [`CoxFit::l1_path`] (warm-started screened λ-path) and
+//! [`CoxFit::cardinality_path`] (k = 1..K) return a [`CoxPath`] whose
+//! every point materializes as a `CoxModel`.
 //!
 //! Everything underneath — problem preprocessing, engines, optimizers,
 //! metrics — stays public for power users, but fallible paths route
@@ -16,6 +19,8 @@
 pub mod builder;
 pub mod json;
 pub mod model;
+pub mod path;
 
 pub use builder::{CoxFit, EngineKind, OptimizerKind};
 pub use model::{Coefficient, CoxModel, FitDiagnostics};
+pub use path::{CoxPath, CoxPathPoint, PathKind};

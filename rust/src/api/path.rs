@@ -1,0 +1,411 @@
+//! `CoxPath`: the fitted whole-family estimator returned by
+//! [`crate::api::CoxFit::l1_path`] and
+//! [`crate::api::CoxFit::cardinality_path`].
+//!
+//! A path holds one entry per grid point — λ for regularization paths,
+//! support size k for cardinality paths — each with its coefficient
+//! vector, training loss, and a fitted Breslow baseline, so any point
+//! can be materialized as a full [`CoxModel`] (prediction, evaluation,
+//! JSON persistence) without refitting. The path itself round-trips
+//! through the same in-repo JSON layer as single models.
+
+use super::json;
+use super::model::{CoxModel, FitDiagnostics};
+use crate::error::{FastSurvivalError, Result};
+use crate::metrics::BreslowBaseline;
+use crate::optim::Trace;
+use std::path::Path;
+
+/// Version tag written into saved path files.
+const PATH_FORMAT_VERSION: usize = 1;
+
+/// What family a [`CoxPath`] holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathKind {
+    /// λ-path: ℓ1(+ℓ2) penalized solutions on a descending λ grid.
+    L1,
+    /// k-path: cardinality-constrained solutions for k = 1..K.
+    Cardinality,
+}
+
+impl PathKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PathKind::L1 => "l1",
+            PathKind::Cardinality => "cardinality",
+        }
+    }
+
+    fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "l1" => Ok(PathKind::L1),
+            "cardinality" => Ok(PathKind::Cardinality),
+            other => Err(FastSurvivalError::Persist(format!(
+                "unknown path kind {other:?} (expected l1|cardinality)"
+            ))),
+        }
+    }
+}
+
+/// One fitted point on a path.
+#[derive(Clone, Debug)]
+pub struct CoxPathPoint {
+    /// Grid λ (None on cardinality paths).
+    pub lambda: Option<f64>,
+    /// Support size (nonzero coefficients).
+    pub k: usize,
+    /// Effective penalties the point was fitted with (0 on k-paths).
+    pub l1: f64,
+    pub l2: f64,
+    /// Dense coefficient vector.
+    pub beta: Vec<f64>,
+    /// Unpenalized CPH training loss.
+    pub train_loss: f64,
+    /// CD sweeps spent on this point (0 where the solver does not track it).
+    pub iterations: usize,
+    pub(crate) baseline: BreslowBaseline,
+}
+
+/// A fitted family of Cox models: per-λ or per-k solutions, each
+/// materializable as a [`CoxModel`].
+#[derive(Clone, Debug)]
+pub struct CoxPath {
+    kind: PathKind,
+    feature_names: Vec<String>,
+    points: Vec<CoxPathPoint>,
+    optimizer: String,
+    n_train: usize,
+    n_events: usize,
+    wall_secs: f64,
+}
+
+impl CoxPath {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        kind: PathKind,
+        feature_names: Vec<String>,
+        points: Vec<CoxPathPoint>,
+        optimizer: String,
+        n_train: usize,
+        n_events: usize,
+        wall_secs: f64,
+    ) -> Self {
+        CoxPath { kind, feature_names, points, optimizer, n_train, n_events, wall_secs }
+    }
+
+    pub fn kind(&self) -> PathKind {
+        self.kind
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[CoxPathPoint] {
+        &self.points
+    }
+
+    pub fn feature_names(&self) -> &[String] {
+        &self.feature_names
+    }
+
+    /// Wall-clock seconds spent fitting the whole path.
+    pub fn wall_secs(&self) -> f64 {
+        self.wall_secs
+    }
+
+    /// The λ grid (empty on cardinality paths).
+    pub fn lambdas(&self) -> Vec<f64> {
+        self.points.iter().filter_map(|p| p.lambda).collect()
+    }
+
+    /// Support size per point, in path order.
+    pub fn support_sizes(&self) -> Vec<usize> {
+        self.points.iter().map(|p| p.k).collect()
+    }
+
+    fn diagnostics_for(&self, pt: &CoxPathPoint) -> FitDiagnostics {
+        FitDiagnostics {
+            optimizer: self.optimizer.clone(),
+            engine: "native".to_string(),
+            iterations: pt.iterations,
+            converged: true,
+            budget_exhausted: false,
+            objective_value: pt.train_loss,
+            l1: pt.l1,
+            l2: pt.l2,
+            n_train: self.n_train,
+            n_events: self.n_events,
+            wall_secs: self.wall_secs,
+            trace: Trace::default(),
+        }
+    }
+
+    /// Materialize the `i`-th point as a full [`CoxModel`].
+    pub fn model_at(&self, i: usize) -> Result<CoxModel> {
+        let pt = self.points.get(i).ok_or_else(|| {
+            FastSurvivalError::InvalidConfig(format!(
+                "path index {i} out of range (path has {} points)",
+                self.points.len()
+            ))
+        })?;
+        Ok(CoxModel::from_parts(
+            self.feature_names.clone(),
+            pt.beta.clone(),
+            pt.baseline.clone(),
+            self.diagnostics_for(pt),
+        ))
+    }
+
+    /// The model at the grid point whose λ is closest to `lambda`
+    /// (λ-paths only).
+    pub fn model_for_lambda(&self, lambda: f64) -> Result<CoxModel> {
+        if self.kind != PathKind::L1 {
+            return Err(FastSurvivalError::InvalidConfig(
+                "model_for_lambda on a cardinality path; use model_for_k".into(),
+            ));
+        }
+        let (i, _) = self
+            .points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.lambda.is_some())
+            .min_by(|a, b| {
+                let da = (a.1.lambda.unwrap_or(f64::INFINITY) - lambda).abs();
+                let db = (b.1.lambda.unwrap_or(f64::INFINITY) - lambda).abs();
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .ok_or_else(|| FastSurvivalError::InvalidConfig("empty path".into()))?;
+        self.model_at(i)
+    }
+
+    /// The model with exactly `k` nonzero coefficients; on λ-paths, the
+    /// best-loss point among those that hit `k` exactly.
+    pub fn model_for_k(&self, k: usize) -> Result<CoxModel> {
+        let (i, _) = self
+            .points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.k == k)
+            .min_by(|a, b| {
+                a.1.train_loss
+                    .partial_cmp(&b.1.train_loss)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .ok_or_else(|| {
+                FastSurvivalError::InvalidConfig(format!(
+                    "no path point has support size {k}"
+                ))
+            })?;
+        self.model_at(i)
+    }
+
+    // ---------------------------------------------------- persistence
+
+    /// Serialize to the versioned JSON path format.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(8192);
+        out.push_str("{\n  \"path_format_version\": ");
+        out.push_str(&PATH_FORMAT_VERSION.to_string());
+        out.push_str(",\n  \"kind\": ");
+        json::write_str(&mut out, self.kind.name());
+        out.push_str(",\n  \"optimizer\": ");
+        json::write_str(&mut out, &self.optimizer);
+        out.push_str(&format!(",\n  \"n_train\": {}", self.n_train));
+        out.push_str(&format!(",\n  \"n_events\": {}", self.n_events));
+        out.push_str(",\n  \"wall_secs\": ");
+        json::write_f64(&mut out, self.wall_secs);
+        out.push_str(",\n  \"feature_names\": ");
+        json::write_str_array(&mut out, &self.feature_names);
+        out.push_str(",\n  \"points\": [\n");
+        for (i, pt) in self.points.iter().enumerate() {
+            out.push_str("    {\"lambda\": ");
+            match pt.lambda {
+                Some(l) => json::write_f64(&mut out, l),
+                None => out.push_str("null"),
+            }
+            out.push_str(&format!(", \"k\": {}", pt.k));
+            out.push_str(", \"l1\": ");
+            json::write_f64(&mut out, pt.l1);
+            out.push_str(", \"l2\": ");
+            json::write_f64(&mut out, pt.l2);
+            out.push_str(", \"train_loss\": ");
+            json::write_f64(&mut out, pt.train_loss);
+            out.push_str(&format!(", \"iterations\": {}", pt.iterations));
+            out.push_str(", \"beta\": ");
+            json::write_f64_array(&mut out, &pt.beta);
+            out.push_str(", \"baseline\": {\"times\": ");
+            json::write_f64_array(&mut out, &pt.baseline.times);
+            out.push_str(", \"cumhaz\": ");
+            json::write_f64_array(&mut out, &pt.baseline.cumhaz);
+            out.push_str("}}");
+            out.push_str(if i + 1 < self.points.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Rebuild a path from [`CoxPath::to_json`] output.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let version = doc.require("path_format_version")?.as_usize()?;
+        if version != PATH_FORMAT_VERSION {
+            return Err(FastSurvivalError::Persist(format!(
+                "unsupported path_format_version {version} (this build reads {PATH_FORMAT_VERSION})"
+            )));
+        }
+        let kind = PathKind::from_name(doc.require("kind")?.as_str()?)?;
+        let feature_names = doc.require("feature_names")?.as_string_vec()?;
+        let optimizer = doc.require("optimizer")?.as_str()?.to_string();
+        let n_train = doc.require("n_train")?.as_usize()?;
+        let n_events = doc.require("n_events")?.as_usize()?;
+        let wall_secs = doc.require("wall_secs")?.as_f64()?;
+        let mut points = Vec::new();
+        for p in doc.require("points")?.as_array()? {
+            let lambda = match p.require("lambda")? {
+                json::Json::Null => None,
+                v => Some(v.as_f64()?),
+            };
+            let beta = p.require("beta")?.as_f64_vec()?;
+            if beta.len() != feature_names.len() {
+                return Err(FastSurvivalError::Persist(format!(
+                    "corrupt path: {} coefficients vs {} feature names",
+                    beta.len(),
+                    feature_names.len()
+                )));
+            }
+            if beta.iter().any(|b| !b.is_finite()) {
+                return Err(FastSurvivalError::Persist(
+                    "corrupt path: non-finite coefficient".into(),
+                ));
+            }
+            let bl = p.require("baseline")?;
+            let baseline = BreslowBaseline::from_parts(
+                bl.require("times")?.as_f64_vec()?,
+                bl.require("cumhaz")?.as_f64_vec()?,
+            )?;
+            points.push(CoxPathPoint {
+                lambda,
+                k: p.require("k")?.as_usize()?,
+                l1: p.require("l1")?.as_f64()?,
+                l2: p.require("l2")?.as_f64()?,
+                beta,
+                train_loss: p.require("train_loss")?.as_f64()?,
+                iterations: p.require("iterations")?.as_usize()?,
+                baseline,
+            });
+        }
+        Ok(CoxPath { kind, feature_names, points, optimizer, n_train, n_events, wall_secs })
+    }
+
+    /// Save to a JSON file (parent directories are created).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| FastSurvivalError::io(format!("creating {parent:?}"), e))?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+            .map_err(|e| FastSurvivalError::io(format!("writing path to {path:?}"), e))
+    }
+
+    /// Load a path saved by [`CoxPath::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| FastSurvivalError::io(format!("reading path from {path:?}"), e))?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_path() -> CoxPath {
+        let baseline = BreslowBaseline::fit(
+            &[1.0, 2.0, 3.0, 4.0],
+            &[true, true, false, true],
+            &[0.2, -0.1, 0.4, 0.0],
+        );
+        let points = vec![
+            CoxPathPoint {
+                lambda: Some(1.0),
+                k: 0,
+                l1: 1.0,
+                l2: 0.0,
+                beta: vec![0.0, 0.0],
+                train_loss: 5.0,
+                iterations: 1,
+                baseline: baseline.clone(),
+            },
+            CoxPathPoint {
+                lambda: Some(0.1),
+                k: 2,
+                l1: 0.1,
+                l2: 0.0,
+                beta: vec![0.75, -0.25],
+                train_loss: 3.5,
+                iterations: 7,
+                baseline,
+            },
+        ];
+        CoxPath::from_parts(
+            PathKind::L1,
+            vec!["age".into(), "bp".into()],
+            points,
+            "cubic-surrogate".into(),
+            4,
+            3,
+            0.02,
+        )
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let p = toy_path();
+        let r = CoxPath::from_json(&p.to_json()).unwrap();
+        assert_eq!(r.kind(), PathKind::L1);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.feature_names(), p.feature_names());
+        for (a, b) in p.points().iter().zip(r.points().iter()) {
+            assert_eq!(a.lambda, b.lambda);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.beta, b.beta);
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.baseline.times, b.baseline.times);
+            assert_eq!(a.baseline.cumhaz, b.baseline.cumhaz);
+        }
+    }
+
+    #[test]
+    fn models_materialize_with_point_penalties() {
+        let p = toy_path();
+        let m = p.model_at(1).unwrap();
+        assert_eq!(m.beta(), &[0.75, -0.25]);
+        assert_eq!(m.diagnostics().l1, 0.1);
+        let closest = p.model_for_lambda(0.12).unwrap();
+        assert_eq!(closest.beta(), &[0.75, -0.25]);
+        let by_k = p.model_for_k(2).unwrap();
+        assert_eq!(by_k.beta(), &[0.75, -0.25]);
+        assert!(p.model_at(9).is_err());
+        assert!(p.model_for_k(5).is_err());
+    }
+
+    #[test]
+    fn load_rejects_corrupt_documents() {
+        let p = toy_path();
+        let good = p.to_json();
+        assert!(CoxPath::from_json("{}").is_err());
+        assert!(CoxPath::from_json(
+            &good.replace("\"path_format_version\": 1", "\"path_format_version\": 9")
+        )
+        .is_err());
+        assert!(CoxPath::from_json(&good.replace("\"kind\": \"l1\"", "\"kind\": \"l7\"")).is_err());
+        assert!(CoxPath::from_json(&good[..good.len() / 2]).is_err());
+    }
+}

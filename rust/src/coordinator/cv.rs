@@ -1,18 +1,26 @@
-//! 5-fold cross-validation driver (Appendix C.3).
+//! Cross-validation drivers (Appendix C.3), path-based since the
+//! warm-started path refactor.
 //!
-//! Runs a variable selector (or a non-Cox model class) on each train
-//! fold, evaluates CPH loss / CIndex / IBS (and F1 when the ground truth
-//! is known) on both train and test folds, and aggregates mean ± std per
-//! support size — the data behind Figures 2–4 and 21–35.
+//! The primary entry points fit **one whole path per training fold** —
+//! [`cv_l1_path`] (λ grid shared across folds so scores align) and
+//! [`cv_cardinality_path`] (k = 1..K warm-chained) — fan the folds across
+//! threads via [`crate::util::parallel`], and pick λ/k by out-of-fold
+//! partial-likelihood deviance or C-index. Fold assignment is
+//! deterministic and thread-count-independent
+//! ([`SurvivalDataset::kfold_seeded`]).
+//!
+//! The legacy per-selector / per-model-class drivers ([`cv_selector`],
+//! [`cv_model`]) remain for the paper's figure harness.
 
 use crate::baselines::SurvivalModel;
 use crate::cox::{loss::loss_for_eta, CoxProblem};
 use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
 use crate::metrics::brier::{default_grid, integrated_brier_score};
 use crate::metrics::{concordance_index, support_f1, BreslowBaseline, KaplanMeier};
+use crate::path::{CardinalitySolver, PathSolver};
 use crate::select::VariableSelector;
 use crate::util::parallel::par_map;
-use crate::util::rng::Rng;
 
 /// One (method, support size, fold) evaluation record.
 #[derive(Clone, Debug)]
@@ -69,8 +77,7 @@ pub fn cv_selector(
     folds: usize,
     seed: u64,
 ) -> Vec<CvRow> {
-    let mut rng = Rng::new(seed);
-    let splits = ds.kfold_indices(folds, &mut rng);
+    let splits = ds.kfold_seeded(folds, seed);
     let fold_inputs: Vec<(usize, Vec<usize>, Vec<usize>)> = splits
         .into_iter()
         .enumerate()
@@ -119,8 +126,7 @@ pub fn cv_model<F>(
 where
     F: Fn(&SurvivalDataset) -> Box<dyn SurvivalModel> + Sync,
 {
-    let mut rng = Rng::new(seed);
-    let splits = ds.kfold_indices(folds, &mut rng);
+    let splits = ds.kfold_seeded(folds, seed);
     let fold_inputs: Vec<(usize, Vec<usize>, Vec<usize>)> = splits
         .into_iter()
         .enumerate()
@@ -145,6 +151,239 @@ where
         }
     });
     rows
+}
+
+// ---------------------------------------------------------------------
+// Path-based cross-validation: one path per fold, folds in parallel.
+
+/// How path-based CV picks its winner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionCriterion {
+    /// Minimize mean out-of-fold partial-likelihood deviance
+    /// `2·(ℓ_test(β) − ℓ_test(0))` (negative = better than the null model).
+    Deviance,
+    /// Maximize mean out-of-fold concordance.
+    CIndex,
+}
+
+impl SelectionCriterion {
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectionCriterion::Deviance => "deviance",
+            SelectionCriterion::CIndex => "cindex",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "deviance" => Ok(SelectionCriterion::Deviance),
+            "cindex" => Ok(SelectionCriterion::CIndex),
+            other => Err(FastSurvivalError::Unknown {
+                kind: "cv criterion",
+                name: other.to_string(),
+                expected: "deviance|cindex",
+            }),
+        }
+    }
+}
+
+/// One grid point's aggregate over folds.
+#[derive(Clone, Debug)]
+pub struct PathCvPoint {
+    /// Grid identity: λ for λ-paths, the support size k for k-paths.
+    pub grid_value: f64,
+    /// Mean support size of the per-fold solutions at this point.
+    pub mean_support: f64,
+    pub mean_test_deviance: f64,
+    pub std_test_deviance: f64,
+    pub mean_test_cindex: f64,
+    pub std_test_cindex: f64,
+}
+
+/// Aggregated path CV: per-point scores plus the selected index.
+#[derive(Clone, Debug)]
+pub struct PathCvResult {
+    pub points: Vec<PathCvPoint>,
+    /// Index into `points` of the criterion winner.
+    pub best_index: usize,
+    pub criterion: SelectionCriterion,
+    pub folds: usize,
+    pub seed: u64,
+}
+
+impl PathCvResult {
+    pub fn best(&self) -> &PathCvPoint {
+        &self.points[self.best_index]
+    }
+}
+
+/// (deviance, cindex, support) of one fitted β on one test fold.
+fn fold_point_scores(
+    beta: &[f64],
+    test: &SurvivalDataset,
+    pr_test: &CoxProblem,
+    null_loss: f64,
+) -> (f64, f64, usize) {
+    let eta = test.x.matvec(beta);
+    let eta_sorted: Vec<f64> = pr_test.order.iter().map(|&i| eta[i]).collect();
+    let dev = 2.0 * (loss_for_eta(pr_test, &eta_sorted) - null_loss);
+    let ci = concordance_index(&test.time, &test.event, &eta);
+    let support = beta.iter().filter(|b| b.abs() > 1e-10).count();
+    (dev, ci, support)
+}
+
+/// Aggregate per-fold per-point (deviance, cindex, support) rows into a
+/// [`PathCvResult`]. Every fold must supply the same number of points.
+fn aggregate_path_cv(
+    grid: &[f64],
+    per_fold: Vec<Vec<(f64, f64, usize)>>,
+    criterion: SelectionCriterion,
+    folds: usize,
+    seed: u64,
+) -> Result<PathCvResult> {
+    let npoints = grid.len();
+    if per_fold.iter().any(|f| f.len() != npoints) {
+        return Err(FastSurvivalError::InvalidData(
+            "path CV folds disagree on the grid".into(),
+        ));
+    }
+    let nf = per_fold.len() as f64;
+    let mut points = Vec::with_capacity(npoints);
+    for (i, &grid_value) in grid.iter().enumerate() {
+        let devs: Vec<f64> = per_fold.iter().map(|f| f[i].0).collect();
+        let cis: Vec<f64> = per_fold.iter().map(|f| f[i].1).collect();
+        let mean_support =
+            per_fold.iter().map(|f| f[i].2 as f64).sum::<f64>() / nf;
+        let mean_dev = devs.iter().sum::<f64>() / nf;
+        let mean_ci = cis.iter().sum::<f64>() / nf;
+        let var_dev =
+            devs.iter().map(|d| (d - mean_dev) * (d - mean_dev)).sum::<f64>() / nf;
+        let var_ci = cis.iter().map(|c| (c - mean_ci) * (c - mean_ci)).sum::<f64>() / nf;
+        points.push(PathCvPoint {
+            grid_value,
+            mean_support,
+            mean_test_deviance: mean_dev,
+            std_test_deviance: var_dev.sqrt(),
+            mean_test_cindex: mean_ci,
+            std_test_cindex: var_ci.sqrt(),
+        });
+    }
+    let best_index = match criterion {
+        SelectionCriterion::Deviance => points
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1.mean_test_deviance
+                    .partial_cmp(&b.1.mean_test_deviance)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+        SelectionCriterion::CIndex => points
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.mean_test_cindex
+                    .partial_cmp(&b.1.mean_test_cindex)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+    };
+    Ok(PathCvResult { points, best_index, criterion, folds, seed })
+}
+
+/// Path-based λ cross-validation: derive one λ grid from the full data,
+/// fit one warm-started screened path per training fold (folds in
+/// parallel), score every grid point out of fold, and select λ by
+/// `criterion`.
+pub fn cv_l1_path(
+    ds: &SurvivalDataset,
+    solver: &PathSolver,
+    folds: usize,
+    seed: u64,
+    criterion: SelectionCriterion,
+) -> Result<PathCvResult> {
+    let full = CoxProblem::try_new(ds)?;
+    // One grid for every fold so per-point scores are comparable.
+    let grid = solver.lambda_grid(&full)?;
+    let splits = ds.kfold_seeded(folds, seed);
+    let per_fold_results: Vec<Result<Vec<(f64, f64, usize)>>> =
+        par_map(&splits, |(tr_idx, te_idx)| {
+            let train = ds.subset(tr_idx);
+            let test = ds.subset(te_idx);
+            let pr_train = CoxProblem::try_new(&train)?;
+            let pr_test = CoxProblem::try_new(&test)?;
+            let null_loss = loss_for_eta(&pr_test, &vec![0.0; test.n()]);
+            let path = solver.run_grid(&pr_train, &grid)?;
+            Ok(path
+                .points
+                .iter()
+                .map(|pt| fold_point_scores(&pt.beta, &test, &pr_test, null_loss))
+                .collect())
+        });
+    let mut per_fold = Vec::with_capacity(per_fold_results.len());
+    for r in per_fold_results {
+        per_fold.push(r?);
+    }
+    aggregate_path_cv(&grid, per_fold, criterion, folds, seed)
+}
+
+/// Path-based k cross-validation: one warm-chained cardinality path per
+/// training fold (folds in parallel), scored out of fold per k. Only
+/// sizes every fold reached are aggregated (beam search can skip a size
+/// on a degenerate fold).
+pub fn cv_cardinality_path(
+    ds: &SurvivalDataset,
+    solver: &CardinalitySolver,
+    max_k: usize,
+    folds: usize,
+    seed: u64,
+    criterion: SelectionCriterion,
+) -> Result<PathCvResult> {
+    if max_k == 0 {
+        return Err(FastSurvivalError::InvalidConfig(
+            "cardinality CV needs max_k >= 1".into(),
+        ));
+    }
+    let splits = ds.kfold_seeded(folds, seed);
+    let per_fold_results: Vec<Result<Vec<Option<(f64, f64, usize)>>>> =
+        par_map(&splits, |(tr_idx, te_idx)| {
+            let train = ds.subset(tr_idx);
+            let test = ds.subset(te_idx);
+            let pr_train = CoxProblem::try_new(&train)?;
+            let pr_test = CoxProblem::try_new(&test)?;
+            let null_loss = loss_for_eta(&pr_test, &vec![0.0; test.n()]);
+            let path = solver.run(&pr_train, max_k);
+            Ok((1..=max_k)
+                .map(|k| {
+                    path.point_for_k(k).map(|pt| {
+                        fold_point_scores(&pt.beta, &test, &pr_test, null_loss)
+                    })
+                })
+                .collect())
+        });
+    let mut raw = Vec::with_capacity(per_fold_results.len());
+    for r in per_fold_results {
+        raw.push(r?);
+    }
+    // Keep only the sizes every fold reached.
+    let mut grid = Vec::new();
+    let mut per_fold: Vec<Vec<(f64, f64, usize)>> = vec![Vec::new(); raw.len()];
+    for ki in 0..max_k {
+        if raw.iter().all(|f| f[ki].is_some()) {
+            grid.push((ki + 1) as f64);
+            for (fi, f) in raw.iter().enumerate() {
+                per_fold[fi].push(f[ki].expect("checked above"));
+            }
+        }
+    }
+    if grid.is_empty() {
+        return Err(FastSurvivalError::InvalidData(
+            "no support size was reached by every CV fold".into(),
+        ));
+    }
+    aggregate_path_cv(&grid, per_fold, criterion, folds, seed)
 }
 
 #[cfg(test)]
@@ -174,6 +413,53 @@ mod tests {
         let mean_ci: f64 =
             rows.iter().map(|r| r.test_cindex).sum::<f64>() / rows.len() as f64;
         assert!(mean_ci > 0.6, "mean test cindex {mean_ci}");
+    }
+
+    #[test]
+    fn l1_path_cv_selects_a_point_and_is_deterministic() {
+        let ds = generate(&SyntheticConfig { n: 160, p: 12, rho: 0.3, k: 3, s: 0.1, seed: 34 });
+        let solver = PathSolver { n_lambdas: 10, ..Default::default() };
+        let a = cv_l1_path(&ds, &solver, 3, 7, SelectionCriterion::Deviance).unwrap();
+        assert_eq!(a.points.len(), 10);
+        assert!(a.best_index < a.points.len());
+        // An informative λ beats the null model out of fold.
+        assert!(
+            a.best().mean_test_deviance < 0.0,
+            "best deviance {}",
+            a.best().mean_test_deviance
+        );
+        // Bitwise-deterministic: same seed, same result.
+        let b = cv_l1_path(&ds, &solver, 3, 7, SelectionCriterion::Deviance).unwrap();
+        assert_eq!(a.best_index, b.best_index);
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.mean_test_deviance, y.mean_test_deviance);
+            assert_eq!(x.mean_test_cindex, y.mean_test_cindex);
+        }
+    }
+
+    #[test]
+    fn cardinality_path_cv_scores_every_reached_size() {
+        let ds = generate(&SyntheticConfig { n: 150, p: 10, rho: 0.3, k: 2, s: 0.1, seed: 35 });
+        let solver = CardinalitySolver::Beam(BeamSearch {
+            width: 2,
+            screen: 5,
+            ..Default::default()
+        });
+        let r =
+            cv_cardinality_path(&ds, &solver, 4, 3, 1, SelectionCriterion::CIndex).unwrap();
+        assert!(!r.points.is_empty());
+        assert!(r.best().mean_test_cindex > 0.5, "cindex {}", r.best().mean_test_cindex);
+        for w in r.points.windows(2) {
+            assert!(w[1].grid_value > w[0].grid_value, "k grid must ascend");
+        }
+    }
+
+    #[test]
+    fn criterion_names_round_trip() {
+        for c in [SelectionCriterion::Deviance, SelectionCriterion::CIndex] {
+            assert_eq!(SelectionCriterion::from_name(c.name()).unwrap(), c);
+        }
+        assert!(SelectionCriterion::from_name("aic").is_err());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! The Layer-3 coordinator: k-fold cross-validation and the experiment
-//! harness that regenerates every table and figure of the paper.
+//! The Layer-3 coordinator: cross-validation (path-based since the
+//! warm-started path refactor) and the experiment harness that
+//! regenerates every table and figure of the paper.
 //!
 //! The old engine-specific fit driver is gone: engine selection now
 //! threads through [`crate::optim::Optimizer::fit_from`] and the
@@ -9,4 +10,6 @@ pub mod cv;
 pub mod experiments;
 pub mod perf;
 
-pub use cv::{cv_selector, CvRow};
+pub use cv::{
+    cv_cardinality_path, cv_l1_path, cv_selector, CvRow, PathCvResult, SelectionCriterion,
+};

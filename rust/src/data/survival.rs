@@ -76,6 +76,16 @@ impl SurvivalDataset {
         }
     }
 
+    /// Deterministic shuffled k-fold split: the same `(k, seed)` always
+    /// yields the same assignment, independent of thread count, call
+    /// order, or any other process state — the split is derived entirely
+    /// from a fresh seeded [`Rng`] on the calling thread. Every CV driver
+    /// routes through this.
+    pub fn kfold_seeded(&self, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let mut rng = Rng::new(seed);
+        self.kfold_indices(k, &mut rng)
+    }
+
     /// Shuffled k-fold split: returns (train, test) index pairs.
     pub fn kfold_indices(&self, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
         assert!(k >= 2 && k <= self.n());

@@ -12,10 +12,12 @@
 //!   entrypoint is [`api`] — a `CoxFit` builder that selects a problem,
 //!   an engine (native kernels or the AOT-XLA artifacts), and an
 //!   optimizer through one path, and returns a fitted `CoxModel` with
-//!   prediction, evaluation, and JSON persistence. Beneath it live the
-//!   quadratic/cubic surrogate coordinate descent and Newton-family
-//!   baselines ([`optim`]), beam-search variable selection ([`select`]),
-//!   metrics, datasets, and the experiment harness.
+//!   prediction, evaluation, and JSON persistence — or a whole `CoxPath`
+//!   (λ-path / k-path) through the warm-started screened active-set
+//!   engine in [`path`]. Beneath them live the quadratic/cubic surrogate
+//!   coordinate descent and Newton-family baselines ([`optim`]),
+//!   beam-search variable selection ([`select`]), metrics, datasets,
+//!   path-based cross-validation, and the experiment harness.
 
 pub mod api;
 pub mod baselines;
@@ -26,9 +28,10 @@ pub mod error;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;
+pub mod path;
 pub mod runtime;
 pub mod select;
 pub mod util;
 
-pub use api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
+pub use api::{CoxFit, CoxModel, CoxPath, EngineKind, OptimizerKind};
 pub use error::{FastSurvivalError, Result};

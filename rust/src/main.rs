@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   fit         train a CPH model on a dataset (CoxFit builder API)
+//!   path        whole solution paths: λ grid or cardinality k = 1..K
 //!   select      cardinality-constrained variable selection
 //!   experiment  regenerate a paper table/figure (see DESIGN.md)
 //!   datasets    list datasets (Table 1 view)
@@ -11,6 +12,8 @@
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
 //!   fastsurvival fit --dataset synthetic --engine xla
 //!   fastsurvival fit --dataset synthetic --save results/model.json
+//!   fastsurvival path --dataset synthetic --lambdas 50 --save results/path.json
+//!   fastsurvival path --kind cardinality --k 10 --cv 5 --criterion cindex
 //!   fastsurvival select --dataset synthetic --method beam --k 15
 //!   fastsurvival experiment --id fig1 --scale 0.25
 //!   fastsurvival bench --quick --check ci/bench_baseline.json
@@ -18,9 +21,12 @@
 //! Every failure path (bad names, invalid data, missing artifacts)
 //! surfaces as a typed `FastSurvivalError`, not a panic.
 
-use fastsurvival::api::{CoxFit, CoxModel, EngineKind, OptimizerKind};
+use fastsurvival::api::{CoxFit, CoxModel, CoxPath, EngineKind, OptimizerKind, PathKind};
+use fastsurvival::coordinator::cv::{cv_cardinality_path, cv_l1_path, SelectionCriterion};
 use fastsurvival::coordinator::experiments::{self, ExperimentConfig};
 use fastsurvival::cox::CoxProblem;
+use fastsurvival::optim::SurrogateKind;
+use fastsurvival::path::{CardinalitySolver, PathSolver};
 use fastsurvival::data::binarize::{binarize, BinarizeConfig};
 use fastsurvival::data::synthetic::{generate, SyntheticConfig};
 use fastsurvival::data::{datasets, SurvivalDataset};
@@ -128,6 +134,131 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `path` subcommand: whole solution families through the
+/// warm-started screened path engine, with optional path-based CV.
+fn cmd_path(args: &Args) -> Result<()> {
+    let ds = load_dataset(args);
+    let kind = args.str_or("kind", "l1");
+    let optimizer = OptimizerKind::from_name(&args.str_or("method", "cubic"))?;
+    let builder = CoxFit::new()
+        .optimizer(optimizer)
+        .n_lambdas(args.get_or("lambdas", 50))
+        .lambda_min_ratio(args.get_or("min-ratio", 0.01))
+        .l1_ratio(args.get_or("l1-ratio", 1.0))
+        .max_iters(args.get_or("iters", 1000))
+        .tol(args.get_or("tol", 1e-9));
+    let max_k = args.get_or("k", 10);
+    println!(
+        "path: dataset={} n={} p={} events={} kind={kind} optimizer={}",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        ds.n_events(),
+        optimizer.name()
+    );
+
+    // One selector serves both the printed path and the CV below, so the
+    // two can never disagree on the estimator.
+    let card_solver = match args.str_or("selector", "beam").as_str() {
+        "beam" => CardinalitySolver::Beam(BeamSearch {
+            width: args.get_or("width", 10),
+            screen: args.get_or("screen", 20),
+            ..Default::default()
+        }),
+        "abess" => CardinalitySolver::Abess(Abess::default()),
+        other => {
+            return Err(FastSurvivalError::Unknown {
+                kind: "cardinality selector",
+                name: other.to_string(),
+                expected: "beam|abess",
+            })
+        }
+    };
+    let path: CoxPath = match kind.as_str() {
+        "l1" => builder.l1_path(&ds)?,
+        "cardinality" | "card" => builder.cardinality_path_with(&ds, max_k, &card_solver)?,
+        other => {
+            return Err(FastSurvivalError::Unknown {
+                kind: "path kind",
+                name: other.to_string(),
+                expected: "l1|cardinality",
+            })
+        }
+    };
+
+    println!(
+        "{} path: {} points in {:.1} ms",
+        path.kind().name(),
+        path.len(),
+        path.wall_secs() * 1e3
+    );
+    for (i, pt) in path.points().iter().enumerate() {
+        match pt.lambda {
+            Some(l) => println!(
+                "  [{i:>3}] lambda={l:<12.6} k={:<4} loss={:<12.4} sweeps={}",
+                pt.k, pt.train_loss, pt.iterations
+            ),
+            None => println!("  [{i:>3}] k={:<4} loss={:<12.4}", pt.k, pt.train_loss),
+        }
+    }
+
+    if args.flag("cv") {
+        let folds = args.get_or("cv", 5);
+        let criterion = SelectionCriterion::from_name(&args.str_or("criterion", "deviance"))?;
+        let cvres = match path.kind() {
+            PathKind::L1 => {
+                // Mirror the printed path's configuration, including the
+                // surrogate (--method): the CV winner must belong to the
+                // same estimator the user just saw.
+                let surrogate = match optimizer {
+                    OptimizerKind::Quadratic => SurrogateKind::Quadratic,
+                    _ => SurrogateKind::Cubic,
+                };
+                let solver = PathSolver {
+                    n_lambdas: args.get_or("lambdas", 50),
+                    min_ratio: args.get_or("min-ratio", 0.01),
+                    l1_ratio: args.get_or("l1-ratio", 1.0),
+                    surrogate,
+                    max_sweeps: args.get_or("iters", 1000),
+                    stop_rel: args.get_or("stop-rel", 1e-6),
+                    ..Default::default()
+                };
+                cv_l1_path(&ds, &solver, folds, args.get_or("seed", 0), criterion)?
+            }
+            PathKind::Cardinality => cv_cardinality_path(
+                &ds,
+                &card_solver,
+                max_k,
+                folds,
+                args.get_or("seed", 0),
+                criterion,
+            )?,
+        };
+        let best = cvres.best();
+        println!(
+            "cv ({} folds, criterion={}): best grid value {:.6} — mean deviance {:.4} ± {:.4}, \
+             mean cindex {:.4}, mean support {:.1}",
+            cvres.folds,
+            cvres.criterion.name(),
+            best.grid_value,
+            best.mean_test_deviance,
+            best.std_test_deviance,
+            best.mean_test_cindex,
+            best.mean_support
+        );
+    }
+
+    if let Some(out) = args.get("save") {
+        let out = Path::new(out);
+        path.save(out)?;
+        // Round-trip sanity, mirroring `fit --save`.
+        let loaded = CoxPath::load(out)?;
+        assert_eq!(loaded.len(), path.len(), "path round-trip changed length");
+        println!("saved path to {} ({} points)", out.display(), loaded.len());
+    }
+    Ok(())
+}
+
 fn cmd_select(args: &Args) -> Result<()> {
     let ds = load_dataset(args);
     let pr = CoxProblem::try_new(&ds)?;
@@ -204,6 +335,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("fit") => cmd_fit(&args),
+        Some("path") => cmd_path(&args),
         Some("select") => cmd_select(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("datasets") => cmd_datasets(&args),
@@ -211,7 +343,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
-                 usage: fastsurvival <fit|select|experiment|datasets|bench> [--options]\n\
+                 usage: fastsurvival <fit|path|select|experiment|datasets|bench> [--options]\n\
                  see README.md for details"
             );
             Ok(())

@@ -1,0 +1,319 @@
+//! The one support-restricted coordinate-descent routine behind both
+//! surrogates.
+//!
+//! `quadratic::fit_support` and `cubic::fit_support` used to carry
+//! near-identical sweep loops; they now both delegate here, parameterized
+//! by [`SurrogateKind`] — the per-coordinate step is the only thing that
+//! differs between the paper's first- and second-order methods. The
+//! warm-capable entry point ([`fit_support_warm`]) mutates a caller-owned
+//! [`CoxState`] and reuses a caller-owned [`Workspace`], which is what
+//! the path solver and ABESS splicing need: a fit that starts where the
+//! previous one ended instead of re-deriving everything from zeros.
+
+use super::cubic::cubic_coord_step_ws;
+use super::objective::{FitConfig, FitResult, Stopper};
+use super::prox::{cubic_l1_step, cubic_step, quad_l1_step, quad_step};
+use super::quadratic::quad_coord_step_ws;
+use super::Objective;
+use crate::cox::derivatives::{coord_d1_d2_ws, coord_d1_ws, Workspace};
+use crate::cox::lipschitz::LipschitzPair;
+use crate::cox::{CoxProblem, CoxState};
+
+/// Steps whose magnitude is below `STEP_SNAP · (1 + |β_l|)` are treated
+/// as exact no-ops by [`SurrogateKind::step_residual`]: a converged
+/// coordinate then leaves η (and the version-tagged risk-set cache)
+/// untouched instead of paying a full exp-update for a numerically
+/// meaningless move. Far below any stopping tolerance in use.
+const STEP_SNAP: f64 = 1e-12;
+
+/// Which surrogate supplies the per-coordinate analytic step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SurrogateKind {
+    /// Quadratic surrogate (Eq. 15/17/20): explicit Lipschitz constant L2.
+    Quadratic,
+    /// Cubic surrogate (Eq. 16/18/22): exact d2 plus L3 — the default.
+    Cubic,
+}
+
+impl SurrogateKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SurrogateKind::Quadratic => "quadratic-surrogate",
+            SurrogateKind::Cubic => "cubic-surrogate",
+        }
+    }
+
+    /// One surrogate coordinate step through a shared workspace; returns
+    /// the applied Δ.
+    #[inline]
+    pub fn step(
+        self,
+        problem: &CoxProblem,
+        state: &mut CoxState,
+        ws: &mut Workspace,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+    ) -> f64 {
+        match self {
+            SurrogateKind::Quadratic => quad_coord_step_ws(problem, state, ws, l, lip, obj),
+            SurrogateKind::Cubic => cubic_coord_step_ws(problem, state, ws, l, lip, obj),
+        }
+    }
+
+    /// One surrogate coordinate step that also reports the coordinate's
+    /// KKT residual, measured *before* the step from the same derivative
+    /// pass (no extra work):
+    /// `|∇_l + λ1·sign(β_l)|` for active coordinates,
+    /// `max(|∇_l| − λ1, 0)` for zero ones, with the ℓ2 term folded into
+    /// ∇_l. A coordinate whose residual is already ≤ `skip_below` is
+    /// left untouched — it is converged to the caller's tolerance, so
+    /// stepping it is pure polish that would dirty the risk-set cache.
+    /// Negligible steps (below [`STEP_SNAP`]) are likewise snapped to
+    /// exact no-ops. Returns `(applied Δ, residual)`. The path solver's
+    /// inner loop stops on `max residual ≤ ε`, which bounds the loss
+    /// suboptimality quadratically — the basis of the warm-vs-cold
+    /// endpoint guarantee.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_residual(
+        self,
+        problem: &CoxProblem,
+        state: &mut CoxState,
+        ws: &mut Workspace,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+    ) -> (f64, f64) {
+        let beta_l = state.beta[l];
+        let (a, b) = match self {
+            SurrogateKind::Quadratic => {
+                let b = lip.l2 + 2.0 * obj.l2;
+                if b <= 0.0 {
+                    // Flat (constant) coordinate: no information, no move.
+                    return (0.0, 0.0);
+                }
+                let d1 = coord_d1_ws(problem, state, ws, l);
+                (d1 + 2.0 * obj.l2 * beta_l, b)
+            }
+            SurrogateKind::Cubic => {
+                let (d1, d2) = coord_d1_d2_ws(problem, state, ws, l);
+                (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2)
+            }
+        };
+        let residual = if beta_l != 0.0 {
+            (a + obj.l1 * beta_l.signum()).abs()
+        } else {
+            (a.abs() - obj.l1).max(0.0)
+        };
+        if residual <= skip_below {
+            return (0.0, residual);
+        }
+        let delta = match self {
+            SurrogateKind::Quadratic => {
+                if obj.l1 > 0.0 {
+                    quad_l1_step(a, b, beta_l, obj.l1)
+                } else {
+                    quad_step(a, b)
+                }
+            }
+            SurrogateKind::Cubic => {
+                if b <= 0.0 && lip.l3 <= 0.0 {
+                    0.0
+                } else if obj.l1 > 0.0 {
+                    cubic_l1_step(a, b, lip.l3, beta_l, obj.l1)
+                } else {
+                    cubic_step(a, b, lip.l3)
+                }
+            }
+        };
+        let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
+        state.update_coord(problem, l, delta);
+        (delta, residual)
+    }
+}
+
+/// Run surrogate CD sweeps over `coords` until `config` stops, mutating
+/// `state` in place (warm start in, warm state out) and reusing `ws`
+/// across sweeps — and, through the version-tagged cache, across calls.
+/// Returns the fit bookkeeping; `state` holds the final coefficients.
+pub fn fit_support_warm(
+    problem: &CoxProblem,
+    state: &mut CoxState,
+    coords: &[usize],
+    config: &FitConfig,
+    lip: &[LipschitzPair],
+    kind: SurrogateKind,
+    ws: &mut Workspace,
+) -> FitResult {
+    let obj = config.objective;
+    let mut stopper = Stopper::new();
+    let mut iters = 0;
+    for it in 0..config.max_iters {
+        for &l in coords {
+            kind.step(problem, state, ws, l, lip[l], obj);
+        }
+        iters = it + 1;
+        let loss = obj.value(problem, state);
+        if stopper.step(it, loss, config) {
+            break;
+        }
+    }
+    let objective_value = obj.value(problem, state);
+    FitResult {
+        beta: state.beta.clone(),
+        trace: stopper.trace,
+        objective_value,
+        iterations: iters,
+    }
+}
+
+/// [`fit_support_warm`] for callers that hand over the state and only
+/// want the result — the shape `quadratic::fit_support` and
+/// `cubic::fit_support` have always had.
+pub fn fit_support_with(
+    problem: &CoxProblem,
+    mut state: CoxState,
+    coords: &[usize],
+    config: &FitConfig,
+    lip: &[LipschitzPair],
+    kind: SurrogateKind,
+) -> FitResult {
+    let mut ws = Workspace::default();
+    let mut res = fit_support_warm(problem, &mut state, coords, config, lip, kind, &mut ws);
+    // The caller owns neither state nor workspace: move β out instead of
+    // cloning it a second time.
+    res.beta = state.beta;
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cox::lipschitz::all_lipschitz;
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_problem(n: usize, p: usize, seed: u64) -> CoxProblem {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let time: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.5, 9.5)).collect();
+        let event: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.7)).collect();
+        CoxProblem::new(&SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "r"))
+    }
+
+    #[test]
+    fn both_surrogates_agree_on_the_strictly_convex_optimum() {
+        let pr = random_problem(80, 5, 71);
+        let lip = all_lipschitz(&pr);
+        let coords: Vec<usize> = (0..pr.p()).collect();
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 1.0 },
+            max_iters: 2000,
+            tol: 1e-13,
+            ..Default::default()
+        };
+        let rq = fit_support_with(
+            &pr,
+            CoxState::zeros(&pr),
+            &coords,
+            &cfg,
+            &lip,
+            SurrogateKind::Quadratic,
+        );
+        let rc = fit_support_with(
+            &pr,
+            CoxState::zeros(&pr),
+            &coords,
+            &cfg,
+            &lip,
+            SurrogateKind::Cubic,
+        );
+        assert!(
+            (rq.objective_value - rc.objective_value).abs() < 1e-6,
+            "quad {} vs cubic {}",
+            rq.objective_value,
+            rc.objective_value
+        );
+    }
+
+    #[test]
+    fn warm_start_resumes_instead_of_restarting() {
+        let pr = random_problem(100, 6, 72);
+        let lip = all_lipschitz(&pr);
+        let coords: Vec<usize> = (0..pr.p()).collect();
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: 0.5 },
+            max_iters: 400,
+            tol: 1e-13,
+            ..Default::default()
+        };
+        let mut ws = Workspace::default();
+        let mut state = CoxState::zeros(&pr);
+        let first =
+            fit_support_warm(&pr, &mut state, &coords, &cfg, &lip, SurrogateKind::Cubic, &mut ws);
+        // Resuming at the optimum must converge immediately (a couple of
+        // no-op sweeps) and not move the objective.
+        let resumed =
+            fit_support_warm(&pr, &mut state, &coords, &cfg, &lip, SurrogateKind::Cubic, &mut ws);
+        assert!(resumed.iterations <= 3, "warm resume took {} sweeps", resumed.iterations);
+        assert!((resumed.objective_value - first.objective_value).abs() < 1e-8);
+    }
+
+    #[test]
+    fn residual_vanishes_at_the_optimum_and_matches_kkt() {
+        let pr = random_problem(90, 5, 74);
+        let lip = all_lipschitz(&pr);
+        let coords: Vec<usize> = (0..pr.p()).collect();
+        let obj = Objective { l1: 1.5, l2: 0.2 };
+        let cfg = FitConfig { objective: obj, max_iters: 3000, tol: 1e-14, ..Default::default() };
+        let mut ws = Workspace::default();
+        let mut state = CoxState::zeros(&pr);
+        fit_support_warm(&pr, &mut state, &coords, &cfg, &lip, SurrogateKind::Cubic, &mut ws);
+        // At the converged point every coordinate's reported residual is
+        // tiny and no step moves anything materially.
+        for &l in &coords {
+            let (delta, res) = SurrogateKind::Cubic
+                .step_residual(&pr, &mut state, &mut ws, l, lip[l], obj, 0.0);
+            assert!(res < 1e-3, "coord {l}: residual {res}");
+            assert!(delta.abs() < 1e-3, "coord {l}: step {delta}");
+        }
+        // A large skip threshold turns every step into a reported no-op.
+        let before = state.beta.clone();
+        for &l in &coords {
+            let (delta, _) = SurrogateKind::Cubic
+                .step_residual(&pr, &mut state, &mut ws, l, lip[l], obj, f64::INFINITY);
+            assert_eq!(delta, 0.0);
+        }
+        assert_eq!(state.beta, before, "skip_below must leave the state untouched");
+        // Away from the optimum the residual is large for some coordinate.
+        let mut fresh = CoxState::zeros(&pr);
+        let mut ws2 = Workspace::default();
+        let max_res = (0..pr.p())
+            .map(|l| {
+                SurrogateKind::Cubic
+                    .step_residual(&pr, &mut fresh, &mut ws2, l, lip[l], obj, 0.0)
+                    .1
+            })
+            .fold(0.0_f64, f64::max);
+        assert!(max_res > 1e-1, "zero state should violate KKT: {max_res}");
+    }
+
+    #[test]
+    fn restricted_support_stays_restricted() {
+        let pr = random_problem(60, 6, 73);
+        let lip = all_lipschitz(&pr);
+        let cfg = FitConfig { max_iters: 30, ..Default::default() };
+        for kind in [SurrogateKind::Quadratic, SurrogateKind::Cubic] {
+            let res =
+                fit_support_with(&pr, CoxState::zeros(&pr), &[0, 3], &cfg, &lip, kind);
+            for (l, b) in res.beta.iter().enumerate() {
+                if l != 0 && l != 3 {
+                    assert_eq!(*b, 0.0, "{kind:?} moved off-support coord {l}");
+                }
+            }
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //! through [`Optimizer::fit_from`]; [`OptimizerKind`] is the typed
 //! registry of methods (re-exported by [`crate::api`]).
 
+pub mod cd;
 pub mod cubic;
 pub mod gradient_descent;
 pub mod newton;
@@ -22,6 +23,7 @@ pub mod prox_newton;
 pub mod quadratic;
 pub mod quasi_newton;
 
+pub use cd::{fit_support_warm, fit_support_with, SurrogateKind};
 pub use cubic::CubicSurrogate;
 pub use gradient_descent::GradientDescent;
 pub use newton::ExactNewton;

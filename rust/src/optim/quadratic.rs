@@ -5,7 +5,8 @@
 //! constant L2_l from Theorem 3.4 — no line search, monotone descent,
 //! global convergence.
 
-use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer, Stopper};
+use super::cd::{fit_support_with, SurrogateKind};
+use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer};
 use super::prox::{quad_l1_step, quad_step};
 use crate::cox::derivatives::{coord_d1_ws, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
@@ -60,29 +61,16 @@ pub fn quad_coord_step_ws(
 }
 
 /// Run quadratic-surrogate CD sweeps over `coords` until `config` stops.
+/// Thin wrapper over the shared support-restricted routine in
+/// [`super::cd`] — the sweep loop lives there once for both surrogates.
 pub fn fit_support(
     problem: &CoxProblem,
-    mut state: CoxState,
+    state: CoxState,
     coords: &[usize],
     config: &FitConfig,
     lip: &[LipschitzPair],
 ) -> FitResult {
-    let obj = config.objective;
-    let mut ws = Workspace::default();
-    let mut stopper = Stopper::new();
-    let mut iters = 0;
-    for it in 0..config.max_iters {
-        for &l in coords {
-            quad_coord_step_ws(problem, &mut state, &mut ws, l, lip[l], obj);
-        }
-        iters = it + 1;
-        let loss = obj.value(problem, &state);
-        if stopper.step(it, loss, config) {
-            break;
-        }
-    }
-    let objective_value = obj.value(problem, &state);
-    FitResult { beta: state.beta, trace: stopper.trace, objective_value, iterations: iters }
+    fit_support_with(problem, state, coords, config, lip, SurrogateKind::Quadratic)
 }
 
 impl Optimizer for QuadraticSurrogate {

@@ -1,0 +1,150 @@
+//! The k-path: cardinality-constrained solutions for k = 1..K through
+//! the same warm-started discipline as the λ-path.
+//!
+//! Beam search is path-native (each level extends the previous level's
+//! states), so its whole run *is* the k-path. ABESS is chained: the k
+//! solve warm-starts from the k−1 solution's state, with one Lipschitz
+//! table and one risk-set workspace shared across the whole path.
+
+use crate::cox::derivatives::Workspace;
+use crate::cox::lipschitz::all_lipschitz;
+use crate::cox::{CoxProblem, CoxState};
+use crate::select::{Abess, BeamSearch, SparseSolution};
+
+/// One support size on the k-path.
+#[derive(Clone, Debug)]
+pub struct CardinalityPoint {
+    /// Support size (number of nonzero coefficients).
+    pub k: usize,
+    /// Indices of nonzero coefficients, ascending.
+    pub support: Vec<usize>,
+    /// Dense coefficient vector.
+    pub beta: Vec<f64>,
+    /// Unpenalized CPH training loss at `beta`.
+    pub train_loss: f64,
+}
+
+impl From<SparseSolution> for CardinalityPoint {
+    fn from(s: SparseSolution) -> Self {
+        CardinalityPoint { k: s.k, support: s.support, beta: s.beta, train_loss: s.train_loss }
+    }
+}
+
+/// A whole solved k-path (ascending k).
+#[derive(Clone, Debug)]
+pub struct CardinalityPath {
+    pub points: Vec<CardinalityPoint>,
+}
+
+impl CardinalityPath {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The point at exactly size `k`, if the solver reached it.
+    pub fn point_for_k(&self, k: usize) -> Option<&CardinalityPoint> {
+        self.points.iter().find(|p| p.k == k)
+    }
+
+    fn from_solutions(mut sols: Vec<SparseSolution>) -> Self {
+        sols.sort_by_key(|s| s.k);
+        CardinalityPath { points: sols.into_iter().map(CardinalityPoint::from).collect() }
+    }
+
+    /// k-path via beam search (the paper's ℓ0 method): one expansion run
+    /// yields every size 1..=max_k.
+    pub fn run_beam(problem: &CoxProblem, max_k: usize, beam: &BeamSearch) -> Self {
+        Self::from_solutions(beam.run(problem, max_k))
+    }
+
+    /// k-path via ABESS splicing, warm-started k−1 → k with a shared
+    /// Lipschitz table and workspace.
+    pub fn run_abess(problem: &CoxProblem, max_k: usize, abess: &Abess) -> Self {
+        let max_k = max_k.min(problem.p());
+        let lip = all_lipschitz(problem);
+        let mut ws = Workspace::default();
+        let mut warm: Option<CoxState> = None;
+        let mut sols = Vec::with_capacity(max_k);
+        for k in 1..=max_k {
+            let (sol, state) = abess.run_k_from(problem, k, warm.as_ref(), &lip, &mut ws);
+            sols.push(sol);
+            warm = Some(state);
+        }
+        Self::from_solutions(sols)
+    }
+}
+
+/// Which k-path engine to run — the typed registry behind the CLI's
+/// `--method` flag and cardinality cross-validation.
+#[derive(Clone, Debug)]
+pub enum CardinalitySolver {
+    Beam(BeamSearch),
+    Abess(Abess),
+}
+
+impl CardinalitySolver {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CardinalitySolver::Beam(_) => "fastsurvival-beam",
+            CardinalitySolver::Abess(_) => "abess",
+        }
+    }
+
+    /// Solve the k-path for sizes 1..=max_k.
+    pub fn run(&self, problem: &CoxProblem, max_k: usize) -> CardinalityPath {
+        match self {
+            CardinalitySolver::Beam(b) => CardinalityPath::run_beam(problem, max_k, b),
+            CardinalitySolver::Abess(a) => CardinalityPath::run_abess(problem, max_k, a),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn problem(seed: u64) -> CoxProblem {
+        let ds = generate(&SyntheticConfig { n: 220, p: 15, rho: 0.3, k: 3, s: 0.1, seed });
+        CoxProblem::new(&ds)
+    }
+
+    #[test]
+    fn beam_path_covers_sizes_and_improves() {
+        let pr = problem(91);
+        let path = CardinalityPath::run_beam(
+            &pr,
+            5,
+            &BeamSearch { width: 3, screen: 8, ..Default::default() },
+        );
+        assert!(path.len() >= 4, "beam path too short: {}", path.len());
+        for w in path.points.windows(2) {
+            assert!(w[1].k > w[0].k);
+            assert!(w[1].train_loss <= w[0].train_loss + 1e-9);
+        }
+        assert!(path.point_for_k(3).is_some());
+    }
+
+    #[test]
+    fn abess_path_is_warm_chained_and_monotone() {
+        let pr = problem(92);
+        let path = CardinalityPath::run_abess(&pr, 5, &Abess::default());
+        assert_eq!(path.len(), 5);
+        for (i, pt) in path.points.iter().enumerate() {
+            assert_eq!(pt.k, i + 1);
+            assert_eq!(pt.support.len(), pt.k);
+        }
+        for w in path.points.windows(2) {
+            assert!(
+                w[1].train_loss <= w[0].train_loss + 1e-6,
+                "k-path loss increased: {} -> {}",
+                w[0].train_loss,
+                w[1].train_loss
+            );
+        }
+    }
+}

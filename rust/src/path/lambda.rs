@@ -1,0 +1,59 @@
+//! λ-grid construction for the regularization path.
+//!
+//! `λ_max` is the smallest penalty at which β = 0 is optimal: the KKT
+//! condition at zero is `|∇_l ℓ(0)| ≤ λ1` for every l, so
+//! `λ_max = max_l |∇_l ℓ(0)| / l1_ratio`. The grid is log-spaced from
+//! λ_max down to `min_ratio · λ_max` — the glmnet/Coxnet convention the
+//! paper's baselines use.
+
+use crate::cox::derivatives::{beta_gradient_ws, Workspace};
+use crate::cox::{CoxProblem, CoxState};
+
+/// `max_l |∇_l ℓ(0)|` — λ_max in ℓ1-penalty units (divide by the
+/// elastic-net `l1_ratio` for the λ of a mixed penalty).
+pub fn lambda_max_l1(problem: &CoxProblem) -> f64 {
+    let state = CoxState::zeros(problem);
+    let g = beta_gradient_ws(problem, &state, &mut Workspace::default());
+    g.iter().fold(0.0_f64, |m, &v| m.max(v.abs()))
+}
+
+/// Log-spaced grid of `n` values from `lmax` down to `lmax · min_ratio`
+/// (descending; `n = 1` yields just `lmax`).
+pub fn log_grid(lmax: f64, min_ratio: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 1 && lmax > 0.0 && min_ratio > 0.0 && min_ratio <= 1.0);
+    let denom = (n - 1).max(1) as f64;
+    (0..n).map(|i| lmax * min_ratio.powf(i as f64 / denom)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    #[test]
+    fn grid_is_descending_and_hits_both_ends() {
+        let g = log_grid(10.0, 0.01, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 10.0).abs() < 1e-12);
+        assert!((g[4] - 0.1).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0], "grid must descend: {w:?}");
+        }
+        assert_eq!(log_grid(3.0, 0.5, 1), vec![3.0]);
+    }
+
+    #[test]
+    fn lambda_max_zeroes_the_model() {
+        // At λ = λ_max every coordinate satisfies the zero-KKT condition,
+        // so |∇_l ℓ(0)| ≤ λ_max for all l with equality at the argmax.
+        let ds = generate(&SyntheticConfig { n: 120, p: 8, rho: 0.3, k: 2, s: 0.1, seed: 5 });
+        let pr = CoxProblem::new(&ds);
+        let lmax = lambda_max_l1(&pr);
+        assert!(lmax > 0.0);
+        let g = crate::cox::derivatives::beta_gradient(&pr, &CoxState::zeros(&pr));
+        for v in &g {
+            assert!(v.abs() <= lmax + 1e-12);
+        }
+        assert!(g.iter().any(|v| (v.abs() - lmax).abs() < 1e-12));
+    }
+}

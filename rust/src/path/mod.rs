@@ -1,0 +1,26 @@
+//! Whole-path solvers: λ-paths and k-paths over one screened,
+//! warm-started active-set engine.
+//!
+//! The paper's headline application is families of sparse CPH models —
+//! every support size k and every penalty strength λ — not a single fit.
+//! This module makes paths first-class:
+//!
+//! - [`lambda`] derives the log-spaced λ grid from the data's λ_max;
+//! - [`solver::PathSolver`] walks the grid with warm starts, sequential
+//!   strong-rule screening, and a full KKT check per accepted point, all
+//!   through one shared [`crate::cox::derivatives::Workspace`] and one
+//!   Lipschitz table;
+//! - [`cardinality::CardinalityPath`] produces k = 1..K solutions with
+//!   each size warm-started from the previous one (beam search or ABESS).
+//!
+//! The public `CoxFit::l1_path` / `CoxFit::cardinality_path` builders and
+//! the CLI `path` subcommand sit on top; path-based cross-validation
+//! lives in [`crate::coordinator::cv`].
+
+pub mod cardinality;
+pub mod lambda;
+pub mod solver;
+
+pub use cardinality::{CardinalityPath, CardinalityPoint, CardinalitySolver};
+pub use lambda::{lambda_max_l1, log_grid};
+pub use solver::{LambdaPath, PathPoint, PathSolver};

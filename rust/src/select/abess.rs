@@ -7,14 +7,20 @@
 //! refitted loss improves. The sacrifice scores follow the abess paper:
 //! backward (active) ζ_j = ½ d2_j β_j², forward (inactive)
 //! ξ_j = ½ d1_j² / d2_j.
+//!
+//! Path-native since the warm-start refactor: [`Abess::run_k_from`]
+//! accepts the k−1 solution's state, the Lipschitz table and risk-set
+//! workspace are caller-owned (computed once per problem, not once per
+//! k), and every refit resumes from the current state through the shared
+//! support-restricted CD routine instead of restarting at zeros.
 
 use super::{solution_from_beta, SparseSolution, VariableSelector};
 use crate::cox::derivatives::{all_coord_d1_d2, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::loss::loss;
 use crate::cox::{CoxProblem, CoxState};
-use crate::optim::cubic::cubic_coord_step;
-use crate::optim::Objective;
+use crate::optim::cd::{fit_support_warm, SurrogateKind};
+use crate::optim::{FitConfig, Objective};
 
 /// ABESS splicing configuration (mirrors the defaults the paper used:
 /// `primary_model_fit_max_iter = 20`, exact Newton refits replaced by our
@@ -38,55 +44,120 @@ impl Default for Abess {
 }
 
 impl Abess {
-    /// Fit coefficients restricted to `support`; returns (state, loss).
-    fn refit(
+    /// Fit coefficients restricted to `support` (sorted ascending),
+    /// warm-started from `init` when given (coefficients outside the
+    /// target support are zeroed first so the restricted fit starts
+    /// feasible). Returns (state, unpenalized loss).
+    fn refit_from(
         &self,
         problem: &CoxProblem,
+        init: Option<&CoxState>,
         support: &[usize],
         lip: &[LipschitzPair],
+        ws: &mut Workspace,
     ) -> (CoxState, f64) {
-        let mut st = CoxState::zeros(problem);
-        let obj = Objective { l1: 0.0, l2: self.l2 };
-        let mut prev = f64::INFINITY;
-        for _ in 0..self.fit_sweeps {
-            for &l in support {
-                cubic_coord_step(problem, &mut st, l, lip[l], obj);
+        let mut st = match init {
+            Some(s) => {
+                let mut st = s.clone();
+                for l in 0..problem.p() {
+                    if st.beta[l] != 0.0 && support.binary_search(&l).is_err() {
+                        let d = -st.beta[l];
+                        st.update_coord(problem, l, d);
+                    }
+                }
+                st
             }
-            let cur = loss(problem, &st);
-            if (prev - cur).abs() < 1e-8 * (prev.abs() + 1.0) {
-                prev = cur;
-                break;
-            }
-            prev = cur;
-        }
-        let final_loss = prev.min(loss(problem, &st));
+            None => CoxState::zeros(problem),
+        };
+        let cfg = FitConfig {
+            objective: Objective { l1: 0.0, l2: self.l2 },
+            max_iters: self.fit_sweeps,
+            tol: 1e-8,
+            budget_secs: 0.0,
+            record_trace: false,
+        };
+        fit_support_warm(problem, &mut st, support, &cfg, lip, SurrogateKind::Cubic, ws);
+        let final_loss = loss(problem, &st);
         (st, final_loss)
     }
 
-    /// Solve for one target size k.
+    /// Solve for one target size k (cold: screens at β = 0 and computes
+    /// its own Lipschitz table — use [`Abess::run_k_from`] to amortize
+    /// both across a path).
     pub fn run_k(&self, problem: &CoxProblem, k: usize) -> SparseSolution {
-        let p = problem.p();
-        let k = k.min(p);
         let lip = all_lipschitz(problem);
         let mut ws = Workspace::default();
+        self.run_k_from(problem, k, None, &lip, &mut ws).0
+    }
 
-        // Initial screening at β = 0.
-        let st0 = CoxState::zeros(problem);
-        let (d1s, d2s) = all_coord_d1_d2(problem, &st0, &mut ws);
-        let mut scored: Vec<(f64, usize)> = (0..p)
-            .map(|l| {
-                let d2 = d2s[l].max(1e-12);
-                (0.5 * d1s[l] * d1s[l] / d2, l)
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut active: Vec<usize> = scored.iter().take(k).map(|&(_, l)| l).collect();
+    /// Solve for one target size k from an optional warm state (typically
+    /// the k−1 solution on a cardinality path). Returns the solution plus
+    /// the fitted state so callers can chain warm starts. `lip` and `ws`
+    /// are caller-owned: the Lipschitz pairs depend only on the data, so
+    /// one table serves every k, and the version-tagged risk-set cache
+    /// carries across refits.
+    pub fn run_k_from(
+        &self,
+        problem: &CoxProblem,
+        k: usize,
+        warm: Option<&CoxState>,
+        lip: &[LipschitzPair],
+        ws: &mut Workspace,
+    ) -> (SparseSolution, CoxState) {
+        let p = problem.p();
+        let k = k.min(p);
+
+        // Initial active set. Warm: keep the warm support's strongest
+        // coordinates (backward sacrifice) and top up to k with the best
+        // inactive screening scores at the warm state. Cold: screen at
+        // β = 0 exactly as before.
+        let screen_state = match warm {
+            Some(s) => s.clone(),
+            None => CoxState::zeros(problem),
+        };
+        let (d1s, d2s) = all_coord_d1_d2(problem, &screen_state, ws);
+        let mut active: Vec<usize> = match warm {
+            Some(s) => {
+                let mut sup: Vec<(f64, usize)> = (0..p)
+                    .filter(|&l| s.beta[l] != 0.0)
+                    .map(|l| (0.5 * d2s[l].max(0.0) * s.beta[l] * s.beta[l], l))
+                    .collect();
+                sup.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                sup.truncate(k);
+                let mut act: Vec<usize> = sup.into_iter().map(|(_, l)| l).collect();
+                if act.len() < k {
+                    let mut fwd: Vec<(f64, usize)> = (0..p)
+                        .filter(|l| !act.contains(l))
+                        .map(|l| {
+                            let d2 = d2s[l].max(1e-12);
+                            (0.5 * d1s[l] * d1s[l] / d2, l)
+                        })
+                        .collect();
+                    fwd.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    let need = k - act.len();
+                    for &(_, l) in fwd.iter().take(need) {
+                        act.push(l);
+                    }
+                }
+                act
+            }
+            None => {
+                let mut scored: Vec<(f64, usize)> = (0..p)
+                    .map(|l| {
+                        let d2 = d2s[l].max(1e-12);
+                        (0.5 * d1s[l] * d1s[l] / d2, l)
+                    })
+                    .collect();
+                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                scored.into_iter().take(k).map(|(_, l)| l).collect()
+            }
+        };
         active.sort_unstable();
 
-        let (mut state, mut best_loss) = self.refit(problem, &active, &lip);
+        let (mut state, mut best_loss) = self.refit_from(problem, warm, &active, lip, ws);
 
         for _round in 0..self.max_rounds {
-            let (d1s, d2s) = all_coord_d1_d2(problem, &state, &mut ws);
+            let (d1s, d2s) = all_coord_d1_d2(problem, &state, ws);
             // Backward sacrifice for active, forward for inactive.
             let mut backward: Vec<(f64, usize)> = active
                 .iter()
@@ -111,7 +182,8 @@ impl Abess {
                     .collect();
                 cand.extend(forward[..s].iter().map(|&(_, f)| f));
                 cand.sort_unstable();
-                let (new_state, new_loss) = self.refit(problem, &cand, &lip);
+                let (new_state, new_loss) =
+                    self.refit_from(problem, Some(&state), &cand, lip, ws);
                 if new_loss < best_loss - 1e-10 {
                     active = cand;
                     state = new_state;
@@ -124,7 +196,7 @@ impl Abess {
                 break;
             }
         }
-        solution_from_beta(problem, state.beta)
+        (solution_from_beta(problem, state.beta.clone()), state)
     }
 }
 
@@ -133,8 +205,20 @@ impl VariableSelector for Abess {
         "abess"
     }
 
+    /// One warm-started sweep over the requested sizes: the Lipschitz
+    /// table and workspace are built once, and each k resumes from the
+    /// previous solution's state.
     fn select(&self, problem: &CoxProblem, ks: &[usize]) -> Vec<SparseSolution> {
-        ks.iter().map(|&k| self.run_k(problem, k)).collect()
+        let lip = all_lipschitz(problem);
+        let mut ws = Workspace::default();
+        let mut warm: Option<CoxState> = None;
+        let mut out = Vec::with_capacity(ks.len());
+        for &k in ks {
+            let (sol, state) = self.run_k_from(problem, k, warm.as_ref(), &lip, &mut ws);
+            out.push(sol);
+            warm = Some(state);
+        }
+        out
     }
 }
 
@@ -178,5 +262,29 @@ mod tests {
         let no_splice = Abess { max_rounds: 0, ..Default::default() }.run_k(&pr, 4);
         let spliced = Abess::default().run_k(&pr, 4);
         assert!(spliced.train_loss <= no_splice.train_loss + 1e-9);
+    }
+
+    #[test]
+    fn warm_start_matches_requested_sizes_and_does_not_hurt() {
+        let ds = generate(&SyntheticConfig { n: 250, p: 18, rho: 0.4, k: 3, s: 0.1, seed: 10 });
+        let pr = CoxProblem::new(&ds);
+        let ab = Abess::default();
+        let ks: Vec<usize> = (1..=6).collect();
+        let warm_sols = ab.select(&pr, &ks);
+        assert_eq!(warm_sols.len(), ks.len());
+        for (sol, &k) in warm_sols.iter().zip(ks.iter()) {
+            assert_eq!(sol.k, k);
+        }
+        // Warm chaining grows the active set from the k−1 state, and both
+        // the restricted CD and splicing are monotone from that warm
+        // init, so the loss can only improve along the k-path.
+        for w in warm_sols.windows(2) {
+            assert!(
+                w[1].train_loss <= w[0].train_loss + 1e-6,
+                "k-path loss increased: {} -> {}",
+                w[0].train_loss,
+                w[1].train_loss
+            );
+        }
     }
 }

@@ -195,20 +195,52 @@ impl BeamSearch {
     /// Run beam search up to support size `max_k`; returns the best
     /// solution found at every size 1..=max_k.
     pub fn run(&self, problem: &CoxProblem, max_k: usize) -> Vec<SparseSolution> {
+        self.run_from(problem, max_k, None)
+    }
+
+    /// [`BeamSearch::run`] from an optional warm state: its nonzero
+    /// coefficients seed the root support, so expansion continues from a
+    /// previous path solve instead of rebuilding every level from the
+    /// empty model. Sizes at or below the warm support are not revisited.
+    pub fn run_from(
+        &self,
+        problem: &CoxProblem,
+        max_k: usize,
+        warm: Option<CoxState>,
+    ) -> Vec<SparseSolution> {
         let p = problem.p();
         let max_k = max_k.min(p);
         let lip = all_lipschitz(problem);
         let mut ws = Workspace::default();
 
-        let root = {
-            let state = CoxState::zeros(problem);
-            let l0 = loss(problem, &state);
-            BeamState { state, support: BTreeSet::new(), loss: l0 }
+        let root = match warm {
+            Some(state) => {
+                let support: BTreeSet<usize> = state
+                    .beta
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| **b != 0.0)
+                    .map(|(l, _)| l)
+                    .collect();
+                let l0 = loss(problem, &state);
+                BeamState { state, support, loss: l0 }
+            }
+            None => {
+                let state = CoxState::zeros(problem);
+                let l0 = loss(problem, &state);
+                BeamState { state, support: BTreeSet::new(), loss: l0 }
+            }
         };
         let mut beam = vec![root];
         let mut best_per_k: Vec<Option<SparseSolution>> = vec![None; max_k + 1];
+        // A warm root is itself a solution at its own size.
+        let warm_k = beam[0].support.len();
+        if warm_k >= 1 && warm_k <= max_k {
+            best_per_k[warm_k] =
+                Some(solution_from_beta(problem, beam[0].state.beta.clone()));
+        }
 
-        for _k in 1..=max_k {
+        for _k in (warm_k + 1)..=max_k {
             let mut children: Vec<BeamState> = Vec::new();
             let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
             for parent in &beam {
@@ -371,6 +403,28 @@ mod tests {
                 gains[l]
             );
         }
+    }
+
+    #[test]
+    fn warm_root_continues_a_previous_run() {
+        let pr = small_synthetic(200, 15, 3, 0.3, 6);
+        let bs = BeamSearch { width: 3, screen: 8, ..Default::default() };
+        // Cold path up to k=2, then continue from its best k=2 state.
+        let head = bs.run(&pr, 2);
+        let k2 = head.iter().find(|s| s.k == 2).expect("k=2 solution");
+        let warm = CoxState::from_beta(&pr, &k2.beta);
+        let tail = bs.run_from(&pr, 4, Some(warm));
+        // The warm root is reported at its own size, and expansion only
+        // covers the remaining sizes.
+        let sizes: Vec<usize> = tail.iter().map(|s| s.k).collect();
+        assert!(sizes.contains(&2) && sizes.contains(&3) && sizes.contains(&4), "{sizes:?}");
+        assert!(sizes.iter().all(|&k| k >= 2));
+        for w in tail.windows(2) {
+            assert!(w[1].train_loss <= w[0].train_loss + 1e-9, "warm path must improve");
+        }
+        // Continuing cannot be worse at k=2 than the state it started from.
+        let warm_k2 = tail.iter().find(|s| s.k == 2).unwrap();
+        assert!((warm_k2.train_loss - k2.train_loss).abs() < 1e-9);
     }
 
     #[test]
