@@ -90,6 +90,49 @@ impl Json {
             .map(|v| v.as_str().map(str::to_string))
             .collect()
     }
+
+    /// Serialize this value back to compact JSON text, appending to
+    /// `out`. Field order is preserved (objects keep insertion order),
+    /// numbers use the same shortest-round-trip formatting as
+    /// [`write_f64`], so `parse` → `write_to` → `parse` is lossless. The
+    /// scoring server uses this to build response documents.
+    pub fn write_to(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => write_f64(out, *v),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_to(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write_to(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// [`Json::write_to`] into a fresh `String`.
+    pub fn to_json_string(&self) -> String {
+        let mut out = String::new();
+        self.write_to(&mut out);
+        out
+    }
 }
 
 // ---------------------------------------------------------------- writer
@@ -150,9 +193,16 @@ pub fn write_str_array(out: &mut String, vs: &[String]) {
 
 // ---------------------------------------------------------------- parser
 
-/// Parse a complete JSON document (rejects trailing non-whitespace).
+/// Maximum container nesting. The parser recurses per level, so without
+/// a cap a small all-`[` document could overflow the thread stack —
+/// fatal, not catchable — once untrusted bodies arrive over HTTP. 128
+/// levels is far beyond any model artifact or scoring request.
+const MAX_DEPTH: usize = 128;
+
+/// Parse a complete JSON document (rejects trailing non-whitespace and
+/// nesting deeper than [`MAX_DEPTH`]).
 pub fn parse(text: &str) -> Result<Json> {
-    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
     let v = p.value()?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
@@ -164,6 +214,7 @@ pub fn parse(text: &str) -> Result<Json> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl Parser<'_> {
@@ -220,12 +271,25 @@ impl Parser<'_> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(err(format!(
+                "document nests deeper than {MAX_DEPTH} levels at byte {}",
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(fields));
         }
         loop {
@@ -240,6 +304,7 @@ impl Parser<'_> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(fields));
                 }
                 _ => return Err(err(format!("expected ',' or '}}' at byte {}", self.pos))),
@@ -249,10 +314,12 @@ impl Parser<'_> {
 
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -262,6 +329,7 @@ impl Parser<'_> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(err(format!("expected ',' or ']' at byte {}", self.pos))),
@@ -482,6 +550,29 @@ mod tests {
         ] {
             assert!(parse(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn nesting_depth_is_capped() {
+        // Within the cap: parses fine.
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&ok).is_ok());
+        // A small hostile all-'[' body must be a typed error, not a
+        // recursion-driven stack overflow.
+        let deep = "[".repeat(100_000);
+        assert!(parse(&deep).is_err());
+        let mixed = "{\"a\":".repeat(1_000) + "1" + &"}".repeat(1_000);
+        assert!(parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn value_serializer_round_trips() {
+        let doc = r#"{"a":[1,2.5,-300],"b":{"c":true,"d":null},"e":"x\"y\"","f":[[],{}]}"#;
+        let v = parse(doc).unwrap();
+        let text = v.to_json_string();
+        assert_eq!(parse(&text).unwrap(), v, "write_to must be parse-invertible");
+        // Compact output with preserved field order is byte-stable.
+        assert_eq!(text, parse(&text).unwrap().to_json_string());
     }
 
     #[test]

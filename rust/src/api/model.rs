@@ -139,6 +139,9 @@ impl CoxModel {
     }
 
     /// Individual survival probabilities S(t | x_i) = exp(−H₀(t)·e^{η_i}).
+    ///
+    /// The baseline step table is consulted once for the whole batch
+    /// (one binary search), not once per row.
     pub fn predict_survival(&self, x: &Matrix, t: f64) -> Result<Vec<f64>> {
         if !t.is_finite() {
             return Err(FastSurvivalError::InvalidData(format!(
@@ -146,7 +149,34 @@ impl CoxModel {
             )));
         }
         let eta = self.predict_risk(x)?;
-        Ok(eta.iter().map(|&e| self.baseline.survival(t, e)).collect())
+        let h = self.baseline.cumulative_hazard(t);
+        Ok(eta.iter().map(|&e| (-h * e.exp()).exp()).collect())
+    }
+
+    /// Full survival curves: S(h | x_i) for every row at every horizon,
+    /// returned as one `Vec<f64>` per row (in `horizons` order).
+    ///
+    /// η = Xβ is computed once, and H₀ is evaluated at all horizons in
+    /// a single merged scan over the baseline step table
+    /// ([`BreslowBaseline::cumulative_hazard_many`]) — callers no longer
+    /// re-run `predict_risk` per horizon. Horizons may be unsorted;
+    /// duplicates are fine.
+    pub fn predict_survival_curve(&self, x: &Matrix, horizons: &[f64]) -> Result<Vec<Vec<f64>>> {
+        if let Some(bad) = horizons.iter().find(|h| !h.is_finite()) {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "survival horizon must be finite, got {bad}"
+            )));
+        }
+        let eta = self.predict_risk(x)?;
+        // One merged scan over the step table, caller's horizon order.
+        let h0 = self.baseline.cumulative_hazard_unsorted(horizons);
+        Ok(eta
+            .iter()
+            .map(|&e| {
+                let ez = e.exp();
+                h0.iter().map(|&h| (-h * ez).exp()).collect()
+            })
+            .collect())
     }
 
     /// Harrell's concordance index of the model's risk scores on `ds`.
@@ -325,6 +355,32 @@ mod tests {
         let x = Matrix::from_columns(&[vec![1.0, 2.0]]);
         assert!(m.predict_risk(&x).is_err());
         assert!(m.predict_survival(&x, 1.0).is_err());
+        assert!(m.predict_survival_curve(&x, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn survival_curve_matches_per_horizon_predictions() {
+        let m = toy_model();
+        let x = Matrix::from_columns(&[vec![1.0, 0.2, -0.5], vec![0.0, 1.0, 2.0]]);
+        // Unsorted horizons with a duplicate and an off-grid point.
+        let horizons = [2.5, 0.5, 4.0, 2.5, 100.0];
+        let curves = m.predict_survival_curve(&x, &horizons).unwrap();
+        assert_eq!(curves.len(), 3);
+        for (j, &t) in horizons.iter().enumerate() {
+            let single = m.predict_survival(&x, t).unwrap();
+            for i in 0..3 {
+                assert_eq!(
+                    curves[i][j].to_bits(),
+                    single[i].to_bits(),
+                    "row {i} horizon {t}"
+                );
+            }
+        }
+        // Non-finite horizons are rejected like predict_survival's.
+        assert!(m.predict_survival_curve(&x, &[1.0, f64::NAN]).is_err());
+        assert!(m.predict_survival(&x, f64::INFINITY).is_err());
+        // Empty horizon grid → empty curves, not an error.
+        assert_eq!(m.predict_survival_curve(&x, &[]).unwrap()[0].len(), 0);
     }
 
     #[test]

@@ -8,8 +8,10 @@ use super::survival::SurvivalDataset;
 use crate::linalg::Matrix;
 use std::path::Path;
 
-/// Split one CSV line honoring double quotes.
-fn split_csv_line(line: &str) -> Vec<String> {
+/// Split one CSV line honoring double quotes. Public because the
+/// serving subsystem's streaming CSV scorer reuses the exact same
+/// cell-splitting rules as this loader.
+pub fn split_csv_line(line: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut cur = String::new();
     let mut in_quotes = false;

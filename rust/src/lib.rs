@@ -18,6 +18,9 @@
 //!   coordinate descent and Newton-family baselines ([`optim`]),
 //!   beam-search variable selection ([`select`]), metrics, datasets,
 //!   path-based cross-validation, and the experiment harness.
+//!   Prediction-time workloads go through [`serve`]: a hot-swappable
+//!   model registry, a batched scoring engine with micro-batching, and
+//!   a zero-dependency multi-threaded HTTP scoring server.
 
 pub mod api;
 pub mod baselines;
@@ -31,6 +34,7 @@ pub mod optim;
 pub mod path;
 pub mod runtime;
 pub mod select;
+pub mod serve;
 pub mod util;
 
 pub use api::{CoxFit, CoxModel, CoxPath, EngineKind, OptimizerKind};

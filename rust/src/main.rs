@@ -1,25 +1,32 @@
 //! FastSurvival CLI — the Layer-3 coordinator entrypoint.
 //!
 //! Subcommands:
-//!   fit         train a CPH model on a dataset (CoxFit builder API)
-//!   path        whole solution paths: λ grid or cardinality k = 1..K
-//!   select      cardinality-constrained variable selection
-//!   experiment  regenerate a paper table/figure (see DESIGN.md)
-//!   datasets    list datasets (Table 1 view)
-//!   bench       fixed-seed hot-path benchmarks → BENCH_optim.json
+//!   fit          train a CPH model on a dataset (CoxFit builder API)
+//!   path         whole solution paths: λ grid or cardinality k = 1..K
+//!   select       cardinality-constrained variable selection
+//!   experiment   regenerate a paper table/figure (see DESIGN.md)
+//!   datasets     list datasets (Table 1 view)
+//!   bench        fixed-seed hot-path benchmarks → BENCH_optim.json
+//!   serve        HTTP scoring server over a model-artifact directory
+//!   score        offline batch scoring: CSV in → CSV out, streamed
+//!   serve-smoke  end-to-end serving burst + gate → BENCH_serve.json
 //!
 //! Examples:
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
 //!   fastsurvival fit --dataset synthetic --engine xla
-//!   fastsurvival fit --dataset synthetic --save results/model.json
+//!   fastsurvival fit --dataset synthetic --save artifacts/serving/churn@1.json
 //!   fastsurvival path --dataset synthetic --lambdas 50 --save results/path.json
 //!   fastsurvival path --kind cardinality --k 10 --cv 5 --criterion cindex
 //!   fastsurvival select --dataset synthetic --method beam --k 15
 //!   fastsurvival experiment --id fig1 --scale 0.25
 //!   fastsurvival bench --quick --check ci/bench_baseline.json
+//!   fastsurvival serve --models artifacts/serving --addr 127.0.0.1:7878
+//!   fastsurvival score --model churn@1.json --input data.csv --output scores.csv
+//!   fastsurvival serve-smoke --out BENCH_serve.json
 //!
-//! Every failure path (bad names, invalid data, missing artifacts)
-//! surfaces as a typed `FastSurvivalError`, not a panic.
+//! Every failure path (bad names, invalid data, missing artifacts,
+//! unknown subcommands) surfaces as a typed `FastSurvivalError`, not a
+//! panic or a silent fallthrough.
 
 use fastsurvival::api::{CoxFit, CoxModel, CoxPath, EngineKind, OptimizerKind, PathKind};
 use fastsurvival::coordinator::cv::{cv_cardinality_path, cv_l1_path, SelectionCriterion};
@@ -33,8 +40,13 @@ use fastsurvival::data::{datasets, SurvivalDataset};
 use fastsurvival::error::{FastSurvivalError, Result};
 use fastsurvival::metrics::concordance_index;
 use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
+use fastsurvival::serve::registry::ModelRegistry;
+use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
+use fastsurvival::serve::{serve, smoke, ServeConfig};
 use fastsurvival::util::args::Args;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn load_dataset(args: &Args) -> SurvivalDataset {
     let name = args.str_or("dataset", "synthetic");
@@ -331,6 +343,103 @@ fn cmd_datasets(args: &Args) -> Result<()> {
     experiments::run("table1", &cfg)
 }
 
+/// The `serve` subcommand: load a model-artifact directory and run the
+/// HTTP scoring server until `--max-secs` elapses (0 = forever).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.str_or("models", "artifacts/serving");
+    let registry = Arc::new(ModelRegistry::open(Path::new(&dir))?);
+    let state = registry.snapshot();
+    println!("serve: loaded {} artifact(s) from {dir}", state.n_artifacts());
+    for m in state.list() {
+        println!("  {} ({} features, {} nonzero)", m.spec(), m.p(), m.support_len());
+    }
+    if state.n_artifacts() == 0 {
+        println!("  (empty — drop <name>@<version>.json artifacts in and POST /v1/reload)");
+    }
+    let cfg = ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:7878"),
+        workers: args.get_or("workers", ServeConfig::default_workers()),
+        max_body_bytes: args.get_or("max-body-kb", 8192usize).saturating_mul(1024),
+        batch: BatchConfig {
+            max_batch_rows: args.get_or("batch-rows", 4096),
+            max_wait_us: args.get_or("batch-wait-us", 150),
+        },
+    };
+    let handle = serve(registry, &cfg)?;
+    println!("serve: listening on http://{}", handle.local_addr());
+    println!(
+        "serve: POST /v1/score · GET /v1/models · POST /v1/reload · GET /healthz · \
+         GET /metrics"
+    );
+    let max_secs = args.get_or("max-secs", 0.0_f64);
+    if max_secs > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(max_secs));
+        println!("serve: --max-secs elapsed, draining in-flight requests");
+        handle.shutdown();
+        Ok(())
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+}
+
+/// The `score` subcommand: stream a CSV through a saved model in
+/// bounded chunks (`n ≫ RAM` inputs work), writing `risk[,surv@h…]`
+/// per row to `--output` (or stdout).
+fn cmd_score(args: &Args) -> Result<()> {
+    let model_path = args.get("model").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("score requires --model <model.json>".into())
+    })?;
+    let input_path = args.get("input").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("score requires --input <data.csv>".into())
+    })?;
+    let model = CoxModel::load(Path::new(model_path))?;
+    let compiled = CompiledModel::compile(&model, "cli", 1);
+    let horizons = args.list_or::<f64>("horizons", &[]);
+    let chunk = args.get_or("chunk", 4096usize);
+    let file = std::fs::File::open(input_path)
+        .map_err(|e| FastSurvivalError::io(format!("opening {input_path}"), e))?;
+    let mut reader = std::io::BufReader::new(file);
+    let summary = match args.get("output") {
+        Some(output_path) => {
+            let out = std::fs::File::create(output_path)
+                .map_err(|e| FastSurvivalError::io(format!("creating {output_path}"), e))?;
+            let mut writer = std::io::BufWriter::new(out);
+            score_csv(&compiled, &mut reader, &mut writer, &horizons, chunk)?
+        }
+        None => {
+            let stdout = std::io::stdout();
+            let mut writer = stdout.lock();
+            score_csv(&compiled, &mut reader, &mut writer, &horizons, chunk)?
+        }
+    };
+    // Summary on stderr so piped stdout stays pure CSV.
+    eprintln!(
+        "score: {} rows in {} chunk(s) of ≤{chunk} ({} features, {} nonzero, {} horizons)",
+        summary.rows,
+        summary.chunks,
+        compiled.p(),
+        compiled.support_len(),
+        horizons.len()
+    );
+    Ok(())
+}
+
+const USAGE: &str = "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
+usage: fastsurvival <subcommand> [--options]\n\n\
+subcommands:\n\
+  fit          train a CPH model (--dataset --method --engine --l1 --l2 --save)\n\
+  path         solution paths: λ grid or k = 1..K (--kind --lambdas --k --cv)\n\
+  select       cardinality-constrained variable selection (--method --k)\n\
+  experiment   regenerate a paper table/figure (--id --scale)\n\
+  datasets     list datasets (Table 1 view)\n\
+  bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check)\n\
+  serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
+  score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
+  serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\n\
+see README.md for endpoint schemas and examples";
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
@@ -340,13 +449,19 @@ fn main() -> Result<()> {
         Some("experiment") => cmd_experiment(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("bench") => fastsurvival::coordinator::perf::run(&args),
-        _ => {
-            println!(
-                "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
-                 usage: fastsurvival <fit|path|select|experiment|datasets|bench> [--options]\n\
-                 see README.md for details"
-            );
+        Some("serve") => cmd_serve(&args),
+        Some("score") => cmd_score(&args),
+        Some("serve-smoke") => smoke::run(&args),
+        // `--help` never lands in positional (Args routes "--" tokens
+        // to flags), so bare invocation or the flag both reach None.
+        Some("help") | None => {
+            println!("{USAGE}");
             Ok(())
         }
+        Some(other) => Err(FastSurvivalError::Unknown {
+            kind: "subcommand",
+            name: other.to_string(),
+            expected: "fit|path|select|experiment|datasets|bench|serve|score|serve-smoke",
+        }),
     }
 }

@@ -93,12 +93,59 @@ impl BreslowBaseline {
         BreslowBaseline { times, cumhaz }
     }
 
-    /// H₀(t), right-continuous.
+    /// H₀(t), right-continuous. A single binary search over the step
+    /// table (`partition_point`), O(log m) per lookup.
     pub fn cumulative_hazard(&self, t: f64) -> f64 {
         match self.times.partition_point(|&x| x <= t) {
             0 => 0.0,
             k => self.cumhaz[k - 1],
         }
+    }
+
+    /// H₀ evaluated at many query times in one merged scan: O(m + k)
+    /// for k queries against m event times, versus O(k log m) for
+    /// repeated [`BreslowBaseline::cumulative_hazard`] calls. This is
+    /// the serving hot path — survival curves at a horizon grid walk
+    /// the step table exactly once.
+    ///
+    /// `ts_sorted` must be ascending (and therefore NaN-free); the
+    /// precondition is asserted because a silent violation would return
+    /// stale hazards for out-of-order entries.
+    pub fn cumulative_hazard_many(&self, ts_sorted: &[f64]) -> Vec<f64> {
+        assert!(
+            ts_sorted.windows(2).all(|w| w[0] <= w[1]),
+            "cumulative_hazard_many requires ascending query times"
+        );
+        let mut out = Vec::with_capacity(ts_sorted.len());
+        let mut k = 0usize;
+        let mut h = 0.0f64;
+        for &t in ts_sorted {
+            while k < self.times.len() && self.times[k] <= t {
+                h = self.cumhaz[k];
+                k += 1;
+            }
+            out.push(h);
+        }
+        out
+    }
+
+    /// H₀ at arbitrary (possibly unsorted, possibly duplicated) query
+    /// times: sorts a copy, runs the merged scan, and undoes the
+    /// permutation. This is the one implementation shared by
+    /// `CoxModel::predict_survival_curve` and the serving scorer's
+    /// horizon-grid cache, so the two paths stay bit-identical by
+    /// construction. Query times must be NaN-free (callers validate
+    /// finiteness; NaN panics in the sort comparator).
+    pub fn cumulative_hazard_unsorted(&self, ts: &[f64]) -> Vec<f64> {
+        let mut order: Vec<usize> = (0..ts.len()).collect();
+        order.sort_by(|&a, &b| ts[a].partial_cmp(&ts[b]).unwrap());
+        let sorted: Vec<f64> = order.iter().map(|&i| ts[i]).collect();
+        let h_sorted = self.cumulative_hazard_many(&sorted);
+        let mut out = vec![0.0; ts.len()];
+        for (s, &original) in order.iter().enumerate() {
+            out[original] = h_sorted[s];
+        }
+        out
     }
 
     /// Predicted survival S(t | η) = exp(−H₀(t) e^η).
@@ -159,6 +206,49 @@ mod tests {
         assert!(BreslowBaseline::from_parts(vec![2.0, 1.0], vec![0.1, 0.2]).is_err());
         assert!(BreslowBaseline::from_parts(vec![1.0, 2.0], vec![0.2, 0.1]).is_err());
         assert!(BreslowBaseline::from_parts(vec![1.0], vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn many_scan_matches_single_lookups() {
+        let time = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let event = vec![true, true, false, true, true, false];
+        let eta = vec![0.3, -0.1, 0.7, 0.0, -0.4, 0.2];
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        // Queries straddling every step boundary, plus before-first and
+        // after-last, with repeats and exact-tie hits.
+        let ts = [0.0, 0.5, 1.0, 1.0, 1.5, 2.0, 3.5, 4.0, 4.0, 9.0];
+        let many = b.cumulative_hazard_many(&ts);
+        for (i, &t) in ts.iter().enumerate() {
+            assert_eq!(
+                many[i].to_bits(),
+                b.cumulative_hazard(t).to_bits(),
+                "t={t}"
+            );
+        }
+        // Empty query list and empty baseline are both fine.
+        assert!(b.cumulative_hazard_many(&[]).is_empty());
+        let empty = BreslowBaseline { times: vec![], cumhaz: vec![] };
+        assert_eq!(empty.cumulative_hazard_many(&[1.0, 2.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn unsorted_queries_match_single_lookups_in_caller_order() {
+        let time = vec![1.0, 2.0, 3.0, 4.0];
+        let event = vec![true, true, false, true];
+        let eta = vec![0.3, -0.1, 0.7, 0.0];
+        let b = BreslowBaseline::fit(&time, &event, &eta);
+        let ts = [2.5, 0.5, 4.0, 2.5, 100.0]; // unsorted, with a duplicate
+        let h = b.cumulative_hazard_unsorted(&ts);
+        for (i, &t) in ts.iter().enumerate() {
+            assert_eq!(h[i].to_bits(), b.cumulative_hazard(t).to_bits(), "t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn many_scan_rejects_unsorted_queries() {
+        let b = BreslowBaseline { times: vec![1.0], cumhaz: vec![0.5] };
+        b.cumulative_hazard_many(&[2.0, 1.0]);
     }
 
     #[test]

@@ -1,0 +1,773 @@
+//! A minimal hand-rolled HTTP/1.1 scoring server over
+//! `std::net::TcpListener` — no external dependencies, request bodies
+//! parsed with the in-repo JSON parser ([`crate::api::json`]).
+//!
+//! Protocol support is deliberately small but correct: content-length
+//! framing (chunked bodies are rejected with 400), keep-alive with
+//! pipelining (leftover bytes after one request's body start the next),
+//! `Expect: 100-continue`, an oversized-body guard (413 before the body
+//! is read), and graceful shutdown — the accept loop is woken by a
+//! self-connect (the TCP flavor of the classic self-pipe trick), worker
+//! threads finish their in-flight request, and queued connections drain
+//! before the pool joins.
+//!
+//! Endpoints:
+//!
+//! | route            | body                                     | reply |
+//! |------------------|------------------------------------------|-------|
+//! | `POST /v1/score` | `{"model": "name@ver"?, "rows": [[f64…]…], "horizons": [f64…]?}` | `{"model", "n", "risk": […], "survival": [[…]…]?}` |
+//! | `GET /v1/models` | —                                        | `{"models": [{name, version, features, nonzero, latest}…]}` |
+//! | `POST /v1/reload`| —                                        | `{"reloaded", "artifacts", "names"}` |
+//! | `GET /healthz`   | —                                        | `{"status": "ok", "artifacts"}` |
+//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles |
+
+use super::registry::{parse_spec, ModelRegistry};
+use super::scorer::{BatchConfig, MicroBatcher};
+use super::stats::ServeMetrics;
+use crate::api::json::{self, Json};
+use crate::error::{FastSurvivalError, Result};
+use crate::util::parallel::{num_threads, WorkerPool};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Cap on request-head size (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Keep-alive idle window before a connection is closed.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Requests served on one keep-alive connection before the server
+/// answers `Connection: close`. A connection parks a worker for its
+/// whole lifetime, so this cap (together with [`IDLE_TIMEOUT`] and the
+/// over-provisioned default worker count) bounds how long persistent
+/// clients can monopolize the pool while new connections queue.
+const MAX_REQUESTS_PER_CONN: usize = 256;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; use port 0 for an OS-assigned port.
+    pub addr: String,
+    /// Connection-handling worker threads. These spend their lives in
+    /// blocking socket I/O (each parks on one connection at a time;
+    /// scoring parallelism comes from the micro-batcher's own data-
+    /// parallel sweep), so the default deliberately over-provisions
+    /// relative to cores — see [`ServeConfig::default_workers`].
+    pub workers: usize,
+    /// Request bodies above this size are refused with 413.
+    pub max_body_bytes: usize,
+    /// Micro-batching knobs for the scoring queue.
+    pub batch: BatchConfig,
+}
+
+impl ServeConfig {
+    /// Default connection-worker count: 4× the compute threads, at
+    /// least 16 — I/O-bound workers are cheap, and a pool much larger
+    /// than the expected persistent-connection count is what keeps
+    /// fresh connections (health checks included) from queueing behind
+    /// keep-alive clients.
+    pub fn default_workers() -> usize {
+        (num_threads() * 4).max(16)
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            workers: ServeConfig::default_workers(),
+            max_body_bytes: 8 << 20,
+            batch: BatchConfig::default(),
+        }
+    }
+}
+
+/// Everything a connection handler needs, all cheaply cloneable.
+#[derive(Clone)]
+struct Ctx {
+    registry: Arc<ModelRegistry>,
+    batcher: Arc<MicroBatcher>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+    max_body: usize,
+}
+
+/// A running server. Dropping the handle shuts it down gracefully.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    registry: Arc<ModelRegistry>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the OS-assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests
+    /// finish, drain queued connections, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(accept) = self.accept.take() {
+            self.shutdown.store(true, Ordering::Release);
+            // Self-connect to wake the blocking accept() — the TCP
+            // analogue of writing to a self-pipe. An unspecified bind
+            // address (0.0.0.0 / ::) is not connectable everywhere, so
+            // aim the wake at the same family's loopback on the bound
+            // port (a v6-only listener never accepts 127.0.0.1).
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                let loopback: std::net::IpAddr = match wake.ip() {
+                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                };
+                wake.set_ip(loopback);
+            }
+            let _ = TcpStream::connect(wake);
+            let _ = accept.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Bind and start the scoring server.
+pub fn serve(registry: Arc<ModelRegistry>, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| FastSurvivalError::io(format!("binding {}", cfg.addr), e))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| FastSurvivalError::io("resolving bound address".to_string(), e))?;
+    let metrics = Arc::new(ServeMetrics::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let ctx = Ctx {
+        registry: Arc::clone(&registry),
+        batcher: Arc::new(MicroBatcher::new(cfg.batch.clone())),
+        metrics: Arc::clone(&metrics),
+        shutdown: Arc::clone(&shutdown),
+        max_body: cfg.max_body_bytes,
+    };
+    let workers = cfg.workers.max(1);
+    let accept = std::thread::Builder::new()
+        .name("fs-accept".into())
+        .spawn(move || {
+            // The pool lives (and joins) inside the accept thread, so a
+            // single join on this thread tears the whole server down.
+            let pool = WorkerPool::new(workers, "fs-http");
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if ctx.shutdown.load(Ordering::Acquire) {
+                            break; // the self-connect wake, or late client
+                        }
+                        let ctx = ctx.clone();
+                        pool.execute(move || handle_connection(stream, &ctx));
+                    }
+                    Err(_) => {
+                        if ctx.shutdown.load(Ordering::Acquire) {
+                            break;
+                        }
+                        // Transient accept error (EMFILE, aborted
+                        // handshake); keep serving.
+                    }
+                }
+            }
+            // pool drops here: queued connections drain, workers join.
+        })
+        .map_err(|e| FastSurvivalError::io("spawning accept thread".to_string(), e))?;
+    Ok(ServerHandle { addr, shutdown, accept: Some(accept), metrics, registry })
+}
+
+// -------------------------------------------------------- wire plumbing
+
+/// Growable read buffer that preserves bytes beyond the current request
+/// (pipelining support).
+struct ByteBuf {
+    data: Vec<u8>,
+}
+
+impl ByteBuf {
+    fn new() -> Self {
+        ByteBuf { data: Vec::with_capacity(8 * 1024) }
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn fill(&mut self, stream: &mut TcpStream) -> std::io::Result<usize> {
+        let mut tmp = [0u8; 8 * 1024];
+        let n = stream.read(&mut tmp)?;
+        self.data.extend_from_slice(&tmp[..n]);
+        Ok(n)
+    }
+
+    fn find_double_crlf(&self) -> Option<usize> {
+        self.data.windows(4).position(|w| w == b"\r\n\r\n")
+    }
+
+    /// Remove and return the first `n` bytes.
+    fn take(&mut self, n: usize) -> Vec<u8> {
+        let rest = self.data.split_off(n);
+        std::mem::replace(&mut self.data, rest)
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+enum ReadErr {
+    /// Declared body exceeds the configured cap → 413.
+    TooLarge,
+    /// Unparseable request → 400, then close.
+    Malformed(String),
+    /// Socket error / timeout / peer mid-request hangup → just close.
+    Io,
+}
+
+impl From<std::io::Error> for ReadErr {
+    fn from(_: std::io::Error) -> Self {
+        ReadErr::Io
+    }
+}
+
+/// Read one framed request. `Ok(None)` means the peer closed cleanly
+/// between requests.
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut ByteBuf,
+    max_body: usize,
+) -> std::result::Result<Option<Request>, ReadErr> {
+    let head_end = loop {
+        if let Some(pos) = buf.find_double_crlf() {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(ReadErr::Malformed("request head too large".into()));
+        }
+        let n = buf.fill(stream)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(ReadErr::Malformed("connection closed mid-request".into()));
+        }
+    };
+    let head = buf.take(head_end + 4);
+    let head = std::str::from_utf8(&head)
+        .map_err(|_| ReadErr::Malformed("request head is not UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines
+        .next()
+        .ok_or_else(|| ReadErr::Malformed("empty request".into()))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadErr::Malformed("missing method".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| ReadErr::Malformed("missing request target".into()))?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut expect_continue = false;
+    for line in lines {
+        if line.is_empty() {
+            continue; // the terminator splits into trailing empties
+        }
+        let (key, value) = line
+            .split_once(':')
+            .ok_or_else(|| ReadErr::Malformed(format!("malformed header line {line:?}")))?;
+        let key = key.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match key.as_str() {
+            "content-length" => {
+                content_length = value.parse::<usize>().map_err(|_| {
+                    ReadErr::Malformed(format!("bad content-length {value:?}"))
+                })?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(ReadErr::Malformed(
+                    "chunked transfer encoding is not supported; send content-length"
+                        .into(),
+                ));
+            }
+            "expect" => {
+                expect_continue = value.eq_ignore_ascii_case("100-continue");
+            }
+            _ => {}
+        }
+    }
+    if content_length > max_body {
+        return Err(ReadErr::TooLarge);
+    }
+    if expect_continue && content_length > 0 {
+        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    }
+    while buf.len() < content_length {
+        if buf.fill(stream)? == 0 {
+            return Err(ReadErr::Malformed("connection closed mid-body".into()));
+        }
+    }
+    let body = buf.take(content_length);
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn error_body(message: &str) -> String {
+    let mut out = String::from("{\"error\": ");
+    json::write_str(&mut out, message);
+    out.push('}');
+    out
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let mut buf = ByteBuf::new();
+    let mut served = 0usize;
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let request = match read_request(&mut stream, &mut buf, ctx.max_body) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(ReadErr::TooLarge) => {
+                let body = error_body("request body exceeds the configured limit");
+                let _ = write_response(&mut stream, 413, &body, false);
+                break;
+            }
+            Err(ReadErr::Malformed(msg)) => {
+                let _ = write_response(&mut stream, 400, &error_body(&msg), false);
+                break;
+            }
+            Err(ReadErr::Io) => break, // includes keep-alive idle timeout
+        };
+        served += 1;
+        let keep_alive = request.keep_alive
+            && served < MAX_REQUESTS_PER_CONN
+            && !ctx.shutdown.load(Ordering::Acquire);
+        let started = Instant::now();
+        let (status, body, endpoint, rows) = route(ctx, &request);
+        let us = started.elapsed().as_micros() as u64;
+        ctx.metrics.endpoint(endpoint).record(status < 400, rows, us);
+        if write_response(&mut stream, status, &body, keep_alive).is_err() {
+            break;
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+/// Dispatch one request → `(status, body, metrics key, rows scored)`.
+fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
+    let method = request.method.as_str();
+    match request.path.as_str() {
+        "/healthz" => match method {
+            "GET" => {
+                let mut body = String::from("{\"status\": \"ok\", \"artifacts\": ");
+                body.push_str(&ctx.registry.snapshot().n_artifacts().to_string());
+                body.push('}');
+                (200, body, "healthz", 0)
+            }
+            _ => (405, error_body("healthz is GET-only"), "healthz", 0),
+        },
+        "/v1/models" => match method {
+            "GET" => (200, models_body(ctx), "models", 0),
+            _ => (405, error_body("models is GET-only"), "models", 0),
+        },
+        "/v1/reload" => match method {
+            "POST" => match ctx.registry.reload() {
+                Ok(report) => {
+                    let names: Vec<Json> =
+                        report.names.iter().map(|n| Json::Str(n.clone())).collect();
+                    let doc = Json::Obj(vec![
+                        ("reloaded".into(), Json::Bool(true)),
+                        ("artifacts".into(), Json::Num(report.artifacts as f64)),
+                        ("names".into(), Json::Arr(names)),
+                    ]);
+                    (200, doc.to_json_string(), "reload", 0)
+                }
+                // The previous state is still serving (atomic swap), so
+                // a failed reload is an error reply, not an outage.
+                Err(e) => (500, error_body(&e.to_string()), "reload", 0),
+            },
+            _ => (405, error_body("reload is POST-only"), "reload", 0),
+        },
+        "/v1/score" => match method {
+            "POST" => {
+                let (status, body, rows) = handle_score(ctx, &request.body);
+                (status, body, "score", rows)
+            }
+            _ => (405, error_body("score is POST-only"), "score", 0),
+        },
+        "/metrics" => match method {
+            "GET" => (200, ctx.metrics.to_json(), "metrics", 0),
+            _ => (405, error_body("metrics is GET-only"), "metrics", 0),
+        },
+        other => (
+            404,
+            error_body(&format!("no such endpoint {other:?}")),
+            "other",
+            0,
+        ),
+    }
+}
+
+fn models_body(ctx: &Ctx) -> String {
+    let state = ctx.registry.snapshot();
+    let items: Vec<Json> = state
+        .list()
+        .iter()
+        .map(|m| {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(m.name().to_string())),
+                ("version".into(), Json::Num(m.version() as f64)),
+                ("features".into(), Json::Num(m.p() as f64)),
+                ("nonzero".into(), Json::Num(m.support_len() as f64)),
+                (
+                    "latest".into(),
+                    Json::Bool(state.latest_version(m.name()) == Some(m.version())),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![("models".into(), Json::Arr(items))]).to_json_string()
+}
+
+fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, error_body("request body is not UTF-8"), 0),
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return (400, error_body(&format!("malformed JSON body: {e}")), 0),
+    };
+    let spec = match doc.get("model") {
+        None => "",
+        Some(v) => match v.as_str() {
+            Ok(s) => s,
+            Err(_) => return (400, error_body("\"model\" must be a string"), 0),
+        },
+    };
+    // A syntactically bad spec is the client's error (400); only a
+    // well-formed spec that names nothing deserves 404.
+    if let Err(e) = parse_spec(spec) {
+        return (400, error_body(&e.to_string()), 0);
+    }
+    let model = match ctx.registry.resolve(spec) {
+        Ok(m) => m,
+        Err(e) => return (404, error_body(&e.to_string()), 0),
+    };
+    let rows_json = match doc.get("rows") {
+        Some(r) => r,
+        None => return (400, error_body("missing \"rows\""), 0),
+    };
+    let row_values = match rows_json.as_array() {
+        Ok(a) => a,
+        Err(_) => return (400, error_body("\"rows\" must be an array of arrays"), 0),
+    };
+    let p = model.p();
+    let n_rows = row_values.len();
+    // Capacity is a hint from *unvalidated* input: cap it by the body
+    // length (every JSON number costs ≥ 1 byte) so a hostile row count
+    // can't force a huge up-front allocation before the per-row width
+    // checks below reject it.
+    let mut flat: Vec<f64> = Vec::with_capacity(n_rows.saturating_mul(p).min(text.len()));
+    for (i, row) in row_values.iter().enumerate() {
+        let values = match row.as_f64_vec() {
+            Ok(v) => v,
+            Err(_) => {
+                return (400, error_body(&format!("row {i} is not a numeric array")), 0)
+            }
+        };
+        // Overflowing literals (1e999 → inf) and nulls (→ NaN) would
+        // turn the response's risk array into nulls, breaking the
+        // documented numeric schema — reject them like bad horizons.
+        if values.iter().any(|v| !v.is_finite()) {
+            return (
+                400,
+                error_body(&format!("row {i} contains a non-finite value")),
+                0,
+            );
+        }
+        if values.len() != p {
+            return (
+                400,
+                error_body(&format!(
+                    "row {i} has {} features, model {} expects {p}",
+                    values.len(),
+                    model.spec()
+                )),
+                0,
+            );
+        }
+        flat.extend_from_slice(&values);
+    }
+    let horizons = match doc.get("horizons") {
+        None => None,
+        Some(h) => match h.as_f64_vec() {
+            Ok(v) => {
+                if let Some(bad) = v.iter().find(|x| !x.is_finite()) {
+                    return (
+                        400,
+                        error_body(&format!("horizons must be finite, got {bad}")),
+                        0,
+                    );
+                }
+                Some(v)
+            }
+            Err(_) => return (400, error_body("\"horizons\" must be a numeric array"), 0),
+        },
+    };
+    let echo_horizons = horizons.clone();
+    let receiver = ctx.batcher.submit(Arc::clone(&model), flat, n_rows, horizons);
+    let output = match receiver.recv() {
+        Ok(Ok(o)) => o,
+        Ok(Err(e)) => return (400, error_body(&e.to_string()), 0),
+        Err(_) => return (500, error_body("scoring queue dropped the request"), 0),
+    };
+    let mut body = String::with_capacity(64 + output.risk.len() * 20);
+    body.push_str("{\"model\": ");
+    json::write_str(&mut body, &model.spec());
+    body.push_str(", \"n\": ");
+    body.push_str(&n_rows.to_string());
+    body.push_str(", \"risk\": ");
+    json::write_f64_array(&mut body, &output.risk);
+    if let (Some(h), Some(curves)) = (echo_horizons, &output.survival) {
+        body.push_str(", \"horizons\": ");
+        json::write_f64_array(&mut body, &h);
+        body.push_str(", \"survival\": [");
+        for (i, curve) in curves.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            json::write_f64_array(&mut body, curve);
+        }
+        body.push(']');
+    }
+    body.push('}');
+    (200, body, n_rows as u64)
+}
+
+// ------------------------------------------------------------ tiny client
+
+/// A minimal buffered HTTP/1.1 client over one keep-alive connection —
+/// enough for the smoke harness, the integration tests, and scripted
+/// health checks, with the same framing rules as the server.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: ByteBuf,
+}
+
+/// A parsed client-side response.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: String,
+    /// The server answered `Connection: close` (e.g. after an error or
+    /// the per-connection request cap) — reconnect before the next
+    /// request instead of writing into a dying socket.
+    pub close: bool,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient { stream, buf: ByteBuf::new() })
+    }
+
+    /// Send one request and read its response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<ClientResponse> {
+        let mut req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: fastsurvival\r\nConnection: keep-alive\r\n"
+        );
+        if let Some(b) = body {
+            req.push_str(&format!(
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                b.len()
+            ));
+        }
+        req.push_str("\r\n");
+        if let Some(b) = body {
+            req.push_str(b);
+        }
+        self.send_raw(req.as_bytes())?;
+        self.read_response()
+    }
+
+    pub fn get(&mut self, path: &str) -> std::io::Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> std::io::Result<ClientResponse> {
+        self.request("POST", path, Some(body))
+    }
+
+    /// Write raw bytes (e.g. several pipelined requests at once); pair
+    /// with one [`HttpClient::read_response`] per request sent.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Read exactly one content-length-framed response.
+    pub fn read_response(&mut self) -> std::io::Result<ClientResponse> {
+        let malformed =
+            |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        let head_end = loop {
+            if let Some(pos) = self.buf.find_double_crlf() {
+                break pos;
+            }
+            if self.buf.fill(&mut self.stream)? == 0 {
+                return Err(malformed("connection closed before response head"));
+            }
+        };
+        let head = self.buf.take(head_end + 4);
+        let head =
+            std::str::from_utf8(&head).map_err(|_| malformed("non-UTF-8 response head"))?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().ok_or_else(|| malformed("empty response"))?;
+        let status = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| malformed("bad status line"))?;
+        let mut content_length = 0usize;
+        let mut close = false;
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                let k = k.trim();
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| malformed("bad content-length"))?;
+                } else if k.eq_ignore_ascii_case("connection") {
+                    close = v.trim().to_ascii_lowercase().contains("close");
+                }
+            }
+        }
+        while self.buf.len() < content_length {
+            if self.buf.fill(&mut self.stream)? == 0 {
+                return Err(malformed("connection closed mid-body"));
+            }
+        }
+        let body = self.buf.take(content_length);
+        let body =
+            String::from_utf8(body).map_err(|_| malformed("non-UTF-8 response body"))?;
+        Ok(ClientResponse { status, body, close })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_buf_take_preserves_pipelined_remainder() {
+        let mut buf = ByteBuf::new();
+        buf.data.extend_from_slice(b"HEAD\r\n\r\nBODYNEXT");
+        assert_eq!(buf.find_double_crlf(), Some(4));
+        assert_eq!(buf.take(8), b"HEAD\r\n\r\n");
+        assert_eq!(buf.take(4), b"BODY");
+        assert_eq!(buf.data, b"NEXT");
+        assert_eq!(buf.len(), 4);
+        assert!(!buf.is_empty());
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_codes() {
+        for status in [200u16, 400, 404, 405, 413, 500] {
+            assert_ne!(reason_phrase(status), "Unknown");
+        }
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let body = error_body("quote \" and \\ backslash");
+        let doc = json::parse(&body).unwrap();
+        assert_eq!(
+            doc.require("error").unwrap().as_str().unwrap(),
+            "quote \" and \\ backslash"
+        );
+    }
+}

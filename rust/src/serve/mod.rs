@@ -1,0 +1,40 @@
+//! The model-serving subsystem: prediction-time infrastructure for
+//! fitted Cox models, zero external dependencies (std only, workers
+//! from [`crate::util::parallel`]).
+//!
+//! Three layers, composable on their own or through the CLI:
+//!
+//! * [`registry`] — a hot-swappable [`registry::ModelRegistry`] that
+//!   loads versioned `CoxModel` JSON artifacts from a directory and
+//!   serves them by `name@version` behind an atomic-swap `Arc` handle;
+//!   a reload never disturbs in-flight scoring.
+//! * [`scorer`] — [`scorer::CompiledModel`] (β pruned to its nonzero
+//!   support, Breslow baseline as a binary-searchable step table, LRU
+//!   cache of H₀ at registered horizon grids) plus the
+//!   [`scorer::MicroBatcher`] that merges many small concurrent
+//!   requests into one parallel sweep, and a streaming CSV scorer for
+//!   offline `n ≫ RAM` batches.
+//! * [`http`] — a hand-rolled multi-threaded HTTP/1.1 server
+//!   (keep-alive, pipelining, content-length framing, graceful
+//!   shutdown) exposing `/v1/score`, `/v1/models`, `/v1/reload`,
+//!   `/healthz`, and `/metrics` (per-endpoint latency/throughput
+//!   counters from [`stats`]).
+//!
+//! [`smoke`] drives all of it end to end for CI: concurrent burst,
+//! mid-burst hot reload, bitwise parity with the in-process API, and
+//! `BENCH_serve.json` throughput/latency numbers.
+//!
+//! The training-side counterpart is [`crate::api`]; serving reuses its
+//! JSON parser and the exact same arithmetic (scores are bit-for-bit
+//! equal to `CoxModel::predict_risk` / `predict_survival_curve`).
+
+pub mod http;
+pub mod registry;
+pub mod scorer;
+pub mod smoke;
+pub mod stats;
+
+pub use http::{serve, HttpClient, ServeConfig, ServerHandle};
+pub use registry::{ModelRegistry, RegistryState, ReloadReport};
+pub use scorer::{score_csv, BatchConfig, CompiledModel, MicroBatcher, ScoreOutput};
+pub use stats::ServeMetrics;

@@ -1,0 +1,379 @@
+//! The hot-swappable model registry: versioned `CoxModel` JSON
+//! artifacts loaded from a directory and served by `name@version`
+//! behind an `Arc` read-mostly handle.
+//!
+//! Artifact directory layout (both forms may coexist):
+//!
+//! ```text
+//! models/
+//! ├── churn@1.json          # flat:   <name>@<version>.json
+//! ├── churn@2.json
+//! └── relapse/              # nested: <name>/<version>.json
+//!     ├── 1.json
+//!     └── 3.json
+//! ```
+//!
+//! Lookups clone an `Arc<CompiledModel>` out of the current snapshot, so
+//! scoring threads never hold a lock while working and a reload can
+//! never corrupt an in-flight request: [`ModelRegistry::reload`] scans
+//! the directory into a *fresh* state and atomically swaps the shared
+//! handle only if the entire scan succeeded. A reload that hits a
+//! schema-mismatched or malformed artifact returns a typed error
+//! ([`crate::error::FastSurvivalError::Serve`]) and leaves the previous
+//! state serving.
+
+use super::scorer::CompiledModel;
+use crate::api::CoxModel;
+use crate::error::{FastSurvivalError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+fn serve_err(msg: impl Into<String>) -> FastSurvivalError {
+    FastSurvivalError::Serve(msg.into())
+}
+
+/// One immutable snapshot of every loaded model.
+pub struct RegistryState {
+    /// `name → version → compiled model`, both levels sorted.
+    models: BTreeMap<String, BTreeMap<u64, Arc<CompiledModel>>>,
+}
+
+impl RegistryState {
+    /// Total number of loaded artifacts (across all names/versions).
+    pub fn n_artifacts(&self) -> usize {
+        self.models.values().map(|v| v.len()).sum()
+    }
+
+    /// Distinct model names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Every loaded model, sorted by name then version.
+    pub fn list(&self) -> Vec<&Arc<CompiledModel>> {
+        self.models.values().flat_map(|v| v.values()).collect()
+    }
+
+    /// Highest loaded version of `name`.
+    pub fn latest_version(&self, name: &str) -> Option<u64> {
+        self.models.get(name)?.keys().next_back().copied()
+    }
+
+    /// Look up `name` at `version` (or its latest version).
+    pub fn get(&self, name: &str, version: Option<u64>) -> Option<&Arc<CompiledModel>> {
+        let versions = self.models.get(name)?;
+        match version {
+            Some(v) => versions.get(&v),
+            None => versions.values().next_back(),
+        }
+    }
+}
+
+/// What a successful [`ModelRegistry::reload`] found.
+#[derive(Clone, Debug)]
+pub struct ReloadReport {
+    pub artifacts: usize,
+    pub names: Vec<String>,
+}
+
+/// Directory-backed registry of compiled models with atomic hot reload.
+pub struct ModelRegistry {
+    root: PathBuf,
+    state: RwLock<Arc<RegistryState>>,
+}
+
+impl ModelRegistry {
+    /// Scan `root` and load every artifact. Fails fast on the first
+    /// malformed, schema-mismatched, or mis-named artifact — a server
+    /// should refuse to start on a bad directory rather than silently
+    /// serve a subset. An empty (or all-ignored) directory is fine: the
+    /// server can start first and receive artifacts + `/v1/reload` later.
+    pub fn open(root: impl AsRef<Path>) -> Result<ModelRegistry> {
+        let root = root.as_ref().to_path_buf();
+        let state = Arc::new(scan(&root)?);
+        Ok(ModelRegistry { root, state: RwLock::new(state) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The current immutable snapshot. Callers score against the
+    /// snapshot (or models cloned out of it) without holding any lock.
+    pub fn snapshot(&self) -> Arc<RegistryState> {
+        self.state.read().unwrap().clone()
+    }
+
+    /// Re-scan the artifact directory and atomically swap in the fresh
+    /// state. All-or-nothing: any scan error leaves the previous state
+    /// untouched (and still serving), and in-flight requests holding
+    /// `Arc<CompiledModel>` handles from the old state are unaffected
+    /// either way.
+    pub fn reload(&self) -> Result<ReloadReport> {
+        let fresh = Arc::new(scan(&self.root)?);
+        let report = ReloadReport {
+            artifacts: fresh.n_artifacts(),
+            names: fresh.names().iter().map(|s| s.to_string()).collect(),
+        };
+        *self.state.write().unwrap() = fresh;
+        Ok(report)
+    }
+
+    /// Resolve a client spec: `"name@version"`, `"name"` (latest
+    /// version), or `""` (the unique loaded model, if exactly one name
+    /// is loaded).
+    pub fn resolve(&self, spec: &str) -> Result<Arc<CompiledModel>> {
+        let state = self.snapshot();
+        let (name, version) = parse_spec(spec)?;
+        let name = match name {
+            Some(n) => n,
+            None => match state.models.len() {
+                0 => return Err(serve_err("no models loaded")),
+                1 => state.models.keys().next().unwrap().clone(),
+                _ => {
+                    return Err(serve_err(format!(
+                        "multiple models loaded ({}); address one as \"name\" or \
+                         \"name@version\"",
+                        state.names().join(", ")
+                    )))
+                }
+            },
+        };
+        if let Some(model) = state.get(&name, version) {
+            return Ok(model.clone());
+        }
+        match (version, state.latest_version(&name)) {
+            (Some(v), Some(latest)) => Err(serve_err(format!(
+                "model {name:?} has no version {v} (latest loaded: {latest})"
+            ))),
+            _ => Err(FastSurvivalError::Unknown {
+                kind: "model",
+                name,
+                expected: "a loaded model name (see GET /v1/models)",
+            }),
+        }
+    }
+}
+
+/// Parse `""` / `"name"` / `"name@version"`. Public so the HTTP layer
+/// can distinguish a syntactically bad spec (client error, 400) from a
+/// well-formed spec that names nothing (404).
+pub fn parse_spec(spec: &str) -> Result<(Option<String>, Option<u64>)> {
+    let s = spec.trim();
+    if s.is_empty() {
+        return Ok((None, None));
+    }
+    match s.rsplit_once('@') {
+        None => Ok((Some(s.to_string()), None)),
+        Some((name, v)) => {
+            if name.is_empty() {
+                return Err(serve_err(format!("bad model spec {s:?}: empty name")));
+            }
+            let version = v.parse::<u64>().map_err(|_| {
+                serve_err(format!(
+                    "bad model spec {s:?}: version must be an unsigned integer"
+                ))
+            })?;
+            Ok((Some(name.to_string()), Some(version)))
+        }
+    }
+}
+
+fn is_json(path: &Path) -> bool {
+    path.extension().and_then(|e| e.to_str()) == Some("json")
+}
+
+fn utf8_stem(path: &Path) -> Result<&str> {
+    path.file_stem()
+        .and_then(|s| s.to_str())
+        .ok_or_else(|| serve_err(format!("artifact {path:?}: non-UTF-8 file name")))
+}
+
+fn sorted_entries(dir: &Path) -> Result<Vec<PathBuf>> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| FastSurvivalError::io(format!("scanning model directory {dir:?}"), e))?;
+    let mut paths = Vec::new();
+    for entry in rd {
+        let entry = entry
+            .map_err(|e| FastSurvivalError::io(format!("scanning model directory {dir:?}"), e))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    Ok(paths)
+}
+
+fn load_artifact(path: &Path, name: &str, version: u64) -> Result<Arc<CompiledModel>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| FastSurvivalError::io(format!("reading artifact {path:?}"), e))?;
+    // A schema-mismatched or corrupt artifact surfaces as a typed
+    // rejection naming the offending file, not a panic or a skip.
+    let model = CoxModel::from_json(&text)
+        .map_err(|e| serve_err(format!("artifact {path:?} rejected: {e}")))?;
+    Ok(Arc::new(CompiledModel::compile(&model, name, version)))
+}
+
+fn insert(
+    models: &mut BTreeMap<String, BTreeMap<u64, Arc<CompiledModel>>>,
+    path: &Path,
+    name: &str,
+    version: u64,
+) -> Result<()> {
+    let slot = models.entry(name.to_string()).or_default();
+    if slot.contains_key(&version) {
+        return Err(serve_err(format!(
+            "duplicate artifact for {name}@{version} (second copy at {path:?}; flat and \
+             nested layouts may not both define the same version)"
+        )));
+    }
+    slot.insert(version, load_artifact(path, name, version)?);
+    Ok(())
+}
+
+fn scan(root: &Path) -> Result<RegistryState> {
+    let mut models: BTreeMap<String, BTreeMap<u64, Arc<CompiledModel>>> = BTreeMap::new();
+    for path in sorted_entries(root)? {
+        if path.is_dir() {
+            let name = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| serve_err(format!("non-UTF-8 model directory {path:?}")))?
+                .to_string();
+            for file in sorted_entries(&path)? {
+                if !is_json(&file) {
+                    continue; // READMEs, temp files, hidden files
+                }
+                let stem = utf8_stem(&file)?;
+                let version = stem.parse::<u64>().map_err(|_| {
+                    serve_err(format!(
+                        "artifact {file:?}: nested artifacts must be named \
+                         <version>.json with an unsigned-integer version"
+                    ))
+                })?;
+                insert(&mut models, &file, &name, version)?;
+            }
+        } else if is_json(&path) {
+            let stem = utf8_stem(&path)?;
+            let (name, vstr) = stem.rsplit_once('@').ok_or_else(|| {
+                serve_err(format!(
+                    "artifact {path:?}: flat artifacts must be named \
+                     <name>@<version>.json (or use a <name>/<version>.json directory)"
+                ))
+            })?;
+            if name.is_empty() {
+                return Err(serve_err(format!("artifact {path:?}: empty model name")));
+            }
+            let version = vstr.parse::<u64>().map_err(|_| {
+                serve_err(format!(
+                    "artifact {path:?}: version {vstr:?} must be an unsigned integer"
+                ))
+            })?;
+            insert(&mut models, &path, name, version)?;
+        }
+        // Anything else (non-json files) is ignored.
+    }
+    Ok(RegistryState { models })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::CoxFit;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fs_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn toy_model(l2: f64) -> CoxModel {
+        let ds = generate(&SyntheticConfig { n: 120, p: 6, rho: 0.4, k: 2, s: 0.1, seed: 3 });
+        CoxFit::new().l2(l2).max_iters(60).tol(1e-8).fit(&ds).unwrap()
+    }
+
+    #[test]
+    fn open_loads_flat_and_nested_layouts() {
+        let dir = unique_dir("layouts");
+        let model = toy_model(1.0);
+        model.save(&dir.join("churn@1.json")).unwrap();
+        model.save(&dir.join("churn@2.json")).unwrap();
+        model.save(&dir.join("relapse").join("7.json")).unwrap();
+        std::fs::write(dir.join("README.txt"), "not an artifact").unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        let st = reg.snapshot();
+        assert_eq!(st.n_artifacts(), 3);
+        assert_eq!(st.names(), vec!["churn", "relapse"]);
+        assert_eq!(st.latest_version("churn"), Some(2));
+        assert_eq!(reg.resolve("churn").unwrap().version(), 2);
+        assert_eq!(reg.resolve("churn@1").unwrap().version(), 1);
+        assert_eq!(reg.resolve("relapse").unwrap().spec(), "relapse@7");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resolve_specs_and_errors() {
+        let dir = unique_dir("specs");
+        toy_model(1.0).save(&dir.join("only@1.json")).unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        // Empty spec works when exactly one name is loaded.
+        assert_eq!(reg.resolve("").unwrap().name(), "only");
+        assert_eq!(reg.resolve("  only@1 ").unwrap().version(), 1);
+        assert!(reg.resolve("missing").is_err());
+        assert!(reg.resolve("only@9").is_err());
+        assert!(reg.resolve("only@x").is_err());
+        assert!(reg.resolve("@3").is_err());
+        // A second name makes the empty spec ambiguous.
+        toy_model(2.0).save(&dir.join("other@1.json")).unwrap();
+        reg.reload().unwrap();
+        assert!(reg.resolve("").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_artifacts_are_rejected_with_typed_errors() {
+        let dir = unique_dir("bad");
+        std::fs::write(dir.join("broken@1.json"), "{ not json").unwrap();
+        assert!(matches!(
+            ModelRegistry::open(&dir),
+            Err(FastSurvivalError::Serve(_))
+        ));
+        // Schema mismatch (wrong format_version) is also a typed reject.
+        let good = toy_model(1.0).to_json();
+        std::fs::write(
+            dir.join("broken@1.json"),
+            good.replace("\"format_version\": 1", "\"format_version\": 99"),
+        )
+        .unwrap();
+        assert!(matches!(
+            ModelRegistry::open(&dir),
+            Err(FastSurvivalError::Serve(_))
+        ));
+        // Bad names are layout errors.
+        std::fs::remove_file(dir.join("broken@1.json")).unwrap();
+        std::fs::write(dir.join("noversion.json"), &good).unwrap();
+        assert!(ModelRegistry::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_reload_keeps_previous_state() {
+        let dir = unique_dir("atomic");
+        toy_model(1.0).save(&dir.join("m@1.json")).unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        let before = reg.resolve("m@1").unwrap();
+        // Drop a corrupt artifact; reload must fail and keep serving v1.
+        std::fs::write(dir.join("m@2.json"), "garbage").unwrap();
+        assert!(reg.reload().is_err());
+        let after = reg.resolve("m").unwrap();
+        assert!(Arc::ptr_eq(&before, &after), "old state must keep serving");
+        // Fix it; reload now swaps in both versions.
+        toy_model(3.0).save(&dir.join("m@2.json")).unwrap();
+        let report = reg.reload().unwrap();
+        assert_eq!(report.artifacts, 2);
+        assert_eq!(reg.resolve("m").unwrap().version(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

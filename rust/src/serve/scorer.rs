@@ -1,0 +1,768 @@
+//! The batched scoring engine: a [`CompiledModel`] is a `CoxModel`
+//! recompiled into its scoring-optimized form, and a [`MicroBatcher`]
+//! merges many small concurrent requests into one parallel sweep.
+//!
+//! Compilation does three things the training-side representation does
+//! not:
+//! * prunes the dense β to its nonzero support (a sparse `(index,
+//!   value)` list plus the feature-name map), so a k-sparse model pays
+//!   O(k) per row instead of O(p) — the paper's cardinality-constrained
+//!   solutions make k ≪ p the common case;
+//! * keeps the Breslow baseline as a sorted step table scored by binary
+//!   search (single horizon) or one merged scan (horizon grids, via
+//!   [`crate::metrics::BreslowBaseline::cumulative_hazard_many`]);
+//! * memoizes H₀ at registered horizon grids in a small per-model LRU
+//!   cache, so repeated requests against the same grid never re-walk
+//!   the step table.
+//!
+//! Bitwise parity with the training-side API is a hard invariant: the
+//! support dot product accumulates in ascending feature order, exactly
+//! like `Matrix::matvec` (which also skips zero coefficients), and the
+//! survival transform applies the identical `exp(−H₀·e^η)` expression —
+//! so `CompiledModel` scores are bit-for-bit equal to
+//! `CoxModel::predict_risk` / `predict_survival_curve`.
+
+use crate::api::CoxModel;
+use crate::data::csv::split_csv_line;
+use crate::error::{FastSurvivalError, Result};
+use crate::metrics::BreslowBaseline;
+use crate::util::parallel::par_map_indices;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// How many horizon grids each model memoizes H₀ for.
+const HORIZON_CACHE_CAP: usize = 32;
+
+/// LRU of `horizon-grid → H₀ values`, most recent first.
+struct HorizonCache {
+    entries: Vec<(Vec<u64>, Arc<Vec<f64>>)>,
+}
+
+/// A `CoxModel` compiled for scoring. Cheap to share (`Arc`), safe to
+/// score from many threads concurrently.
+pub struct CompiledModel {
+    name: String,
+    version: u64,
+    p: usize,
+    feature_names: Vec<String>,
+    /// Nonzero coefficients as `(feature index, value)`, ascending index.
+    support: Vec<(usize, f64)>,
+    baseline: BreslowBaseline,
+    horizon_cache: Mutex<HorizonCache>,
+}
+
+/// The result of scoring one row batch.
+#[derive(Clone, Debug)]
+pub struct ScoreOutput {
+    /// Linear risk η per row.
+    pub risk: Vec<f64>,
+    /// Survival probabilities per row at each requested horizon (in the
+    /// request's horizon order); `None` when no horizons were asked for.
+    pub survival: Option<Vec<Vec<f64>>>,
+}
+
+impl CompiledModel {
+    /// Compile a fitted model under a registry identity.
+    pub fn compile(model: &CoxModel, name: &str, version: u64) -> CompiledModel {
+        let beta = model.beta();
+        let support: Vec<(usize, f64)> = beta
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(j, &b)| (j, b))
+            .collect();
+        CompiledModel {
+            name: name.to_string(),
+            version,
+            p: beta.len(),
+            feature_names: model.feature_names().to_vec(),
+            support,
+            baseline: model.baseline().clone(),
+            horizon_cache: Mutex::new(HorizonCache { entries: Vec::new() }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// `name@version`, the spec string clients use to address this model.
+    pub fn spec(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+
+    /// Feature count the model expects per row.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Number of nonzero coefficients.
+    pub fn support_len(&self) -> usize {
+        self.support.len()
+    }
+
+    pub fn support(&self) -> &[(usize, f64)] {
+        &self.support
+    }
+
+    pub fn feature_names(&self) -> &[String] {
+        &self.feature_names
+    }
+
+    /// η for one dense row. Accumulates over the nonzero support in
+    /// ascending feature order — bitwise identical to
+    /// `Matrix::matvec(β)`, which also skips zero coefficients.
+    #[inline]
+    pub fn eta_row(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.p);
+        let mut s = 0.0;
+        for &(j, b) in &self.support {
+            s += row[j] * b;
+        }
+        s
+    }
+
+    /// H₀ at a horizon grid, LRU-cached per distinct grid (keyed on the
+    /// exact f64 bit patterns). Horizons may arrive unsorted; the step
+    /// table is walked once on a sorted copy and the permutation undone.
+    pub fn hazards_at(&self, horizons: &[f64]) -> Result<Arc<Vec<f64>>> {
+        if let Some(bad) = horizons.iter().find(|h| !h.is_finite()) {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "survival horizon must be finite, got {bad}"
+            )));
+        }
+        let key: Vec<u64> = horizons.iter().map(|h| h.to_bits()).collect();
+        {
+            let mut cache = self.horizon_cache.lock().unwrap();
+            if let Some(pos) = cache.entries.iter().position(|(k, _)| *k == key) {
+                let entry = cache.entries.remove(pos);
+                let hit = entry.1.clone();
+                cache.entries.insert(0, entry);
+                return Ok(hit);
+            }
+        }
+        // Miss: compute outside the lock (scans are cheap, but never
+        // serialize concurrent scorers behind one). Same shared
+        // implementation as `predict_survival_curve`, so the two paths
+        // are bit-identical by construction.
+        let computed = Arc::new(self.baseline.cumulative_hazard_unsorted(horizons));
+        let mut cache = self.horizon_cache.lock().unwrap();
+        cache.entries.insert(0, (key, computed.clone()));
+        if cache.entries.len() > HORIZON_CACHE_CAP {
+            cache.entries.pop();
+        }
+        Ok(computed)
+    }
+
+    /// Score `n_rows` dense row-major rows (`rows.len() == n_rows * p`)
+    /// in one parallel sweep. This is the direct path used by the
+    /// offline CSV scorer; the HTTP server routes through the
+    /// [`MicroBatcher`], which produces bit-identical results.
+    pub fn score_rows(
+        &self,
+        rows: &[f64],
+        n_rows: usize,
+        horizons: Option<&[f64]>,
+    ) -> Result<ScoreOutput> {
+        if rows.len() != n_rows * self.p {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "row buffer has {} values, expected {} ({} rows × {} features)",
+                rows.len(),
+                n_rows * self.p,
+                n_rows,
+                self.p
+            )));
+        }
+        let h0 = match horizons {
+            None => None,
+            Some(h) => Some(self.hazards_at(h)?),
+        };
+        let per_row: Vec<(f64, Option<Vec<f64>>)> = par_map_indices(n_rows, |i| {
+            let row = &rows[i * self.p..(i + 1) * self.p];
+            let eta = self.eta_row(row);
+            let surv = h0.as_ref().map(|h| {
+                let ez = eta.exp();
+                h.iter().map(|&hh| (-hh * ez).exp()).collect()
+            });
+            (eta, surv)
+        });
+        let risk: Vec<f64> = per_row.iter().map(|r| r.0).collect();
+        let survival = if h0.is_some() {
+            Some(per_row.into_iter().map(|r| r.1.unwrap_or_default()).collect())
+        } else {
+            None
+        };
+        Ok(ScoreOutput { risk, survival })
+    }
+}
+
+// ------------------------------------------------------- micro-batching
+
+/// Micro-batching knobs.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Row budget per merged sweep; requests beyond it wait for the next.
+    pub max_batch_rows: usize,
+    /// How long the batcher lingers after the first request arrives,
+    /// letting concurrent small requests pile into the same sweep.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch_rows: 4096, max_wait_us: 150 }
+    }
+}
+
+/// One enqueued scoring request.
+struct Pending {
+    model: Arc<CompiledModel>,
+    rows: Vec<f64>,
+    n_rows: usize,
+    horizons: Option<Vec<f64>>,
+    tx: mpsc::Sender<Result<ScoreOutput>>,
+}
+
+struct BatchShared {
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The micro-batching queue: many small concurrent requests amortize
+/// into one parallel sweep. A dedicated batcher thread drains the queue
+/// (after a short linger window), flattens every pending request's rows
+/// into one job list, scores them with one data-parallel map, and
+/// routes each request's slice back through its response channel.
+///
+/// Dropping the batcher drains any queued requests before joining.
+pub struct MicroBatcher {
+    shared: Arc<BatchShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: BatchConfig) -> MicroBatcher {
+        let shared = Arc::new(BatchShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let loop_shared = Arc::clone(&shared);
+        let thread = std::thread::Builder::new()
+            .name("fs-batcher".into())
+            .spawn(move || batcher_loop(&loop_shared, &cfg))
+            .expect("failed to spawn micro-batcher thread");
+        MicroBatcher { shared, thread: Some(thread) }
+    }
+
+    /// Enqueue a scoring request; the returned channel yields exactly
+    /// one result. `rows` is dense row-major with `n_rows * model.p()`
+    /// values.
+    pub fn submit(
+        &self,
+        model: Arc<CompiledModel>,
+        rows: Vec<f64>,
+        n_rows: usize,
+        horizons: Option<Vec<f64>>,
+    ) -> mpsc::Receiver<Result<ScoreOutput>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Pending { model, rows, n_rows, horizons, tx });
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batcher_loop(shared: &BatchShared, cfg: &BatchConfig) {
+    let max_rows = cfg.max_batch_rows.max(1);
+    loop {
+        // Wait for the first request (or shutdown with an empty queue).
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(25))
+                    .unwrap();
+                q = guard;
+            }
+        }
+        // Linger briefly so concurrent callers land in this sweep.
+        if cfg.max_wait_us > 0 && !shared.shutdown.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_micros(cfg.max_wait_us));
+        }
+        // Claim up to max_rows worth of requests.
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            let mut rows = 0usize;
+            loop {
+                let take = match q.front() {
+                    Some(p) => batch.is_empty() || rows + p.n_rows.max(1) <= max_rows,
+                    None => false,
+                };
+                if !take {
+                    break;
+                }
+                let p = q.pop_front().unwrap();
+                rows += p.n_rows.max(1);
+                batch.push(p);
+            }
+        }
+        if !batch.is_empty() {
+            process_batch(batch);
+        }
+    }
+}
+
+/// Everything a scoring job needs, separated from the response channel
+/// (`mpsc::Sender` is not `Sync`, so it must stay out of the parallel
+/// sweep's captures).
+struct Work {
+    model: Arc<CompiledModel>,
+    rows: Vec<f64>,
+    n_rows: usize,
+    h0: Option<Arc<Vec<f64>>>,
+}
+
+fn process_batch(batch: Vec<Pending>) {
+    // Resolve hazard grids and validate shapes up front; failures are
+    // answered immediately and excluded from the sweep.
+    let mut works: Vec<Work> = Vec::with_capacity(batch.len());
+    let mut txs: Vec<mpsc::Sender<Result<ScoreOutput>>> = Vec::with_capacity(batch.len());
+    for pending in batch {
+        let Pending { model, rows, n_rows, horizons, tx } = pending;
+        if rows.len() != n_rows * model.p() {
+            let _ = tx.send(Err(FastSurvivalError::InvalidData(format!(
+                "row buffer has {} values, expected {} ({} rows × {} features)",
+                rows.len(),
+                n_rows * model.p(),
+                n_rows,
+                model.p()
+            ))));
+            continue;
+        }
+        let h0 = match &horizons {
+            None => None,
+            Some(h) => match model.hazards_at(h) {
+                Ok(h0) => Some(h0),
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    continue;
+                }
+            },
+        };
+        works.push(Work { model, rows, n_rows, h0 });
+        txs.push(tx);
+    }
+    // One flattened parallel sweep over every row of every request.
+    let mut jobs: Vec<(usize, usize)> = Vec::new();
+    for (w, work) in works.iter().enumerate() {
+        for r in 0..work.n_rows {
+            jobs.push((w, r));
+        }
+    }
+    let per_row: Vec<(f64, Option<Vec<f64>>)> = par_map_indices(jobs.len(), |j| {
+        let (w, r) = jobs[j];
+        let work = &works[w];
+        let p = work.model.p();
+        let row = &work.rows[r * p..(r + 1) * p];
+        let eta = work.model.eta_row(row);
+        let surv = work.h0.as_ref().map(|h| {
+            let ez = eta.exp();
+            h.iter().map(|&hh| (-hh * ez).exp()).collect()
+        });
+        (eta, surv)
+    });
+    // Hand results back per request, moving each survival curve out of
+    // the sweep's output (no per-row clones on the hot path).
+    let mut results = per_row.into_iter();
+    for (work, tx) in works.iter().zip(&txs) {
+        let mut risk = Vec::with_capacity(work.n_rows);
+        let mut curves = Vec::with_capacity(if work.h0.is_some() { work.n_rows } else { 0 });
+        for _ in 0..work.n_rows {
+            let (eta, surv) = results.next().expect("one sweep result per row");
+            risk.push(eta);
+            if work.h0.is_some() {
+                curves.push(surv.unwrap_or_default());
+            }
+        }
+        let survival = if work.h0.is_some() { Some(curves) } else { None };
+        let _ = tx.send(Ok(ScoreOutput { risk, survival }));
+    }
+}
+
+// --------------------------------------------------- offline CSV scoring
+
+/// Summary of one [`score_csv`] run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsvScoreSummary {
+    pub rows: usize,
+    pub chunks: usize,
+}
+
+/// How CSV columns feed model features.
+enum ColMap {
+    /// `(csv column, feature index)` for every support feature — used
+    /// when all support feature names appear in the header. Non-support
+    /// features contribute nothing to η, so their columns are ignored.
+    Named(Vec<(usize, usize)>),
+    /// CSV column per feature `0..p` — used when names don't match but
+    /// the non-time/event column count equals p exactly.
+    Positional(Vec<usize>),
+}
+
+/// Stream a survival CSV through the scorer in bounded chunks, writing
+/// one output line per input row (`risk[,surv@h…]`). Only `chunk_rows`
+/// rows are resident at a time, so `n ≫ RAM` inputs work.
+///
+/// Column mapping: if every support feature name appears in the header,
+/// columns are matched by name (extra columns, including `time`/`event`,
+/// are ignored). Otherwise all columns except a recognized time/event
+/// column are taken positionally and must number exactly `p`.
+pub fn score_csv<R: BufRead, W: Write>(
+    model: &CompiledModel,
+    input: &mut R,
+    output: &mut W,
+    horizons: &[f64],
+    chunk_rows: usize,
+) -> Result<CsvScoreSummary> {
+    let chunk_rows = chunk_rows.max(1);
+    let p = model.p();
+    let mut line = String::new();
+    let read_err = |e| FastSurvivalError::io("reading CSV input".to_string(), e);
+    let write_err = |e| FastSurvivalError::io("writing scored CSV".to_string(), e);
+
+    if input.read_line(&mut line).map_err(read_err)? == 0 {
+        return Err(FastSurvivalError::InvalidData("empty CSV: missing header".into()));
+    }
+    let header: Vec<String> = split_csv_line(line.trim_end())
+        .iter()
+        .map(|h| h.trim().to_string())
+        .collect();
+    let lower: Vec<String> = header.iter().map(|h| h.to_ascii_lowercase()).collect();
+    let meta_cols: Vec<usize> = (0..header.len())
+        .filter(|&c| {
+            matches!(
+                lower[c].as_str(),
+                "time" | "t" | "event" | "status" | "delta" | "censor"
+            )
+        })
+        .collect();
+
+    let mut named: Vec<(usize, usize)> = Vec::new();
+    let mut all_named = true;
+    for &(j, _) in model.support() {
+        match header.iter().position(|h| *h == model.feature_names()[j]) {
+            Some(c) => named.push((c, j)),
+            None => {
+                all_named = false;
+                break;
+            }
+        }
+    }
+    let map = if all_named {
+        ColMap::Named(named)
+    } else {
+        let feat_cols: Vec<usize> =
+            (0..header.len()).filter(|c| !meta_cols.contains(c)).collect();
+        if feat_cols.len() != p {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "CSV does not match the model: not every support feature name is in the \
+                 header, and {} non-time/event columns != p={p} for positional mapping",
+                feat_cols.len()
+            )));
+        }
+        ColMap::Positional(feat_cols)
+    };
+
+    let mut out_header = String::from("risk");
+    for h in horizons {
+        out_header.push_str(&format!(",surv@{h}"));
+    }
+    writeln!(output, "{out_header}").map_err(write_err)?;
+
+    let hz = if horizons.is_empty() { None } else { Some(horizons) };
+    let mut rows_total = 0usize;
+    let mut chunks = 0usize;
+    let mut lineno = 1usize;
+    let mut rec = String::new(); // reused output-line buffer
+    loop {
+        let mut flat: Vec<f64> = Vec::with_capacity(chunk_rows * p);
+        let mut n = 0usize;
+        while n < chunk_rows {
+            line.clear();
+            if input.read_line(&mut line).map_err(read_err)? == 0 {
+                break;
+            }
+            lineno += 1;
+            let trimmed = line.trim_end();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let cells = split_csv_line(trimmed);
+            if cells.len() != header.len() {
+                return Err(FastSurvivalError::InvalidData(format!(
+                    "row {lineno} has {} cells, expected {}",
+                    cells.len(),
+                    header.len()
+                )));
+            }
+            let base = flat.len();
+            flat.resize(base + p, 0.0);
+            match &map {
+                ColMap::Named(pairs) => {
+                    for &(c, j) in pairs {
+                        flat[base + j] = parse_cell(&cells[c], lineno, &header[c])?;
+                    }
+                }
+                ColMap::Positional(cols) => {
+                    for (j, &c) in cols.iter().enumerate() {
+                        flat[base + j] = parse_cell(&cells[c], lineno, &header[c])?;
+                    }
+                }
+            }
+            n += 1;
+        }
+        if n == 0 {
+            break;
+        }
+        let scored = model.score_rows(&flat, n, hz)?;
+        for i in 0..n {
+            // Format into the reused buffer — no per-cell allocations
+            // in the streaming hot loop (String's fmt::Write is
+            // infallible, hence the discarded results).
+            rec.clear();
+            let _ = write!(rec, "{}", scored.risk[i]);
+            if let Some(surv) = &scored.survival {
+                for &s in &surv[i] {
+                    let _ = write!(rec, ",{s}");
+                }
+            }
+            writeln!(output, "{rec}").map_err(write_err)?;
+        }
+        rows_total += n;
+        chunks += 1;
+        if n < chunk_rows {
+            break; // the inner loop only stops short at EOF
+        }
+    }
+    output.flush().map_err(write_err)?;
+    Ok(CsvScoreSummary { rows: rows_total, chunks })
+}
+
+fn parse_cell(cell: &str, lineno: usize, col: &str) -> Result<f64> {
+    cell.trim().parse::<f64>().map_err(|_| {
+        FastSurvivalError::InvalidData(format!(
+            "bad value {cell:?} in column {col:?} at row {lineno}"
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::CoxFit;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::linalg::Matrix;
+
+    fn fitted() -> (crate::data::SurvivalDataset, CoxModel) {
+        let ds = generate(&SyntheticConfig { n: 160, p: 10, rho: 0.5, k: 3, s: 0.1, seed: 11 });
+        let model = CoxFit::new().l1(0.2).l2(0.1).max_iters(200).tol(1e-10).fit(&ds).unwrap();
+        (ds, model)
+    }
+
+    fn row_major(x: &Matrix, rows: &[usize]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(rows.len() * x.cols);
+        for &r in rows {
+            for c in 0..x.cols {
+                out.push(x.get(r, c));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn compiled_scores_match_model_bitwise() {
+        let (ds, model) = fitted();
+        let compiled = CompiledModel::compile(&model, "m", 1);
+        assert_eq!(compiled.p(), 10);
+        assert_eq!(
+            compiled.support_len(),
+            model.beta().iter().filter(|&&b| b != 0.0).count()
+        );
+        let idx: Vec<usize> = (0..ds.n()).collect();
+        let rows = row_major(&ds.x, &idx);
+        let horizons = [0.5, 2.0, 0.1];
+        let out = compiled.score_rows(&rows, ds.n(), Some(&horizons)).unwrap();
+        let expect_risk = model.predict_risk(&ds.x).unwrap();
+        let expect_curves = model.predict_survival_curve(&ds.x, &horizons).unwrap();
+        for i in 0..ds.n() {
+            assert_eq!(out.risk[i].to_bits(), expect_risk[i].to_bits(), "row {i}");
+            let surv = &out.survival.as_ref().unwrap()[i];
+            for j in 0..horizons.len() {
+                assert_eq!(surv[j].to_bits(), expect_curves[i][j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn hazard_grids_are_cached_and_validated() {
+        let (_, model) = fitted();
+        let compiled = CompiledModel::compile(&model, "m", 1);
+        let a = compiled.hazards_at(&[1.0, 0.25, 3.0]).unwrap();
+        let b = compiled.hazards_at(&[1.0, 0.25, 3.0]).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "identical grids must hit the LRU cache");
+        let c = compiled.hazards_at(&[0.25, 1.0, 3.0]).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different order is a different grid key");
+        // Values agree with the single-lookup path regardless of order.
+        for (grid, h0) in [(&[1.0, 0.25, 3.0], &a), (&[0.25, 1.0, 3.0], &c)] {
+            for (j, &t) in grid.iter().enumerate() {
+                assert_eq!(h0[j].to_bits(), model.baseline().cumulative_hazard(t).to_bits());
+            }
+        }
+        assert!(compiled.hazards_at(&[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn score_rows_rejects_bad_buffer_shapes() {
+        let (_, model) = fitted();
+        let compiled = CompiledModel::compile(&model, "m", 1);
+        assert!(compiled.score_rows(&[1.0; 9], 1, None).is_err());
+        let empty = compiled.score_rows(&[], 0, Some(&[1.0])).unwrap();
+        assert!(empty.risk.is_empty());
+        assert_eq!(empty.survival, Some(vec![]));
+    }
+
+    #[test]
+    fn micro_batcher_matches_direct_scoring_under_concurrency() {
+        let (ds, model) = fitted();
+        let compiled = Arc::new(CompiledModel::compile(&model, "m", 1));
+        let batcher = MicroBatcher::new(BatchConfig { max_batch_rows: 64, max_wait_us: 200 });
+        let expect = model.predict_risk(&ds.x).unwrap();
+        let curves = model.predict_survival_curve(&ds.x, &[0.5, 1.5]).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..6usize {
+                let compiled = &compiled;
+                let batcher = &batcher;
+                let ds = &ds;
+                let expect = &expect;
+                let curves = &curves;
+                scope.spawn(move || {
+                    for iter in 0..20usize {
+                        let r = (t * 17 + iter * 3) % ds.n();
+                        let rows = row_major(&ds.x, &[r]);
+                        let horizons =
+                            if iter % 2 == 0 { Some(vec![0.5, 1.5]) } else { None };
+                        let rx = batcher.submit(
+                            Arc::clone(compiled),
+                            rows,
+                            1,
+                            horizons.clone(),
+                        );
+                        let out = rx.recv().unwrap().unwrap();
+                        assert_eq!(out.risk[0].to_bits(), expect[r].to_bits());
+                        match (horizons, &out.survival) {
+                            (Some(_), Some(s)) => {
+                                assert_eq!(s[0][0].to_bits(), curves[r][0].to_bits());
+                                assert_eq!(s[0][1].to_bits(), curves[r][1].to_bits());
+                            }
+                            (None, None) => {}
+                            other => panic!("survival mismatch: {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        // Bad shapes are answered per-request, not dropped.
+        let rx = batcher.submit(Arc::clone(&compiled), vec![1.0; 3], 1, None);
+        assert!(rx.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn csv_scoring_streams_in_chunks_with_parity() {
+        let (ds, model) = fitted();
+        let compiled = CompiledModel::compile(&model, "m", 1);
+        // Build a CSV by name (time/event first, then features).
+        let mut csv = String::from("time,event");
+        for name in &ds.feature_names {
+            csv.push_str(&format!(",{name}"));
+        }
+        csv.push('\n');
+        for i in 0..ds.n() {
+            csv.push_str(&format!("{},{}", ds.time[i], u8::from(ds.event[i])));
+            for c in 0..ds.p() {
+                csv.push_str(&format!(",{}", ds.x.get(i, c)));
+            }
+            csv.push('\n');
+        }
+        let horizons = [0.5, 2.0];
+        let mut out: Vec<u8> = Vec::new();
+        let summary = score_csv(
+            &compiled,
+            &mut csv.as_bytes(),
+            &mut out,
+            &horizons,
+            7, // force many chunks
+        )
+        .unwrap();
+        assert_eq!(summary.rows, ds.n());
+        assert!(summary.chunks >= ds.n() / 7, "chunking must actually engage");
+        let text = String::from_utf8(out).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "risk,surv@0.5,surv@2");
+        let expect_risk = model.predict_risk(&ds.x).unwrap();
+        let expect_curves = model.predict_survival_curve(&ds.x, &horizons).unwrap();
+        for i in 0..ds.n() {
+            let cells: Vec<f64> = lines
+                .next()
+                .unwrap()
+                .split(',')
+                .map(|c| c.parse().unwrap())
+                .collect();
+            assert!((cells[0] - expect_risk[i]).abs() <= 1e-12, "row {i} risk");
+            assert!((cells[1] - expect_curves[i][0]).abs() <= 1e-12);
+            assert!((cells[2] - expect_curves[i][1]).abs() <= 1e-12);
+        }
+        assert!(lines.next().is_none());
+    }
+
+    #[test]
+    fn csv_scoring_rejects_unmappable_headers() {
+        let (_, model) = fitted();
+        let compiled = CompiledModel::compile(&model, "m", 1);
+        // Unknown names AND wrong positional width.
+        let csv = "time,event,a,b\n1.0,1,0.5,0.5\n";
+        let mut out: Vec<u8> = Vec::new();
+        assert!(score_csv(&compiled, &mut csv.as_bytes(), &mut out, &[], 8).is_err());
+        let mut empty: &[u8] = b"";
+        assert!(score_csv(&compiled, &mut empty, &mut out, &[], 8).is_err());
+    }
+}

@@ -1,0 +1,339 @@
+//! The `serve-smoke` CLI subcommand: an end-to-end serving benchmark
+//! and correctness gate, CI's proof that the scoring server holds up
+//! under concurrent load.
+//!
+//! One run: fit a p-feature model on synthetic data, publish it to a
+//! temp artifact directory, start the HTTP server on an OS-assigned
+//! port, fire a concurrent multi-client scoring burst (keep-alive
+//! connections, fixed-size row batches), POST `/v1/reload` several
+//! times mid-burst, and assert that every response is a 200 whose risk
+//! vector is **bitwise** equal to in-process `CoxModel::predict_risk`
+//! on the same rows. Throughput (rows/sec) and exact client-side
+//! p50/p99 latencies land in `BENCH_serve.json`; any HTTP error,
+//! parity mismatch, or failed reload makes the run exit nonzero, so CI
+//! can gate on it directly.
+
+use super::http::{serve, HttpClient, ServeConfig};
+use super::registry::ModelRegistry;
+use super::scorer::BatchConfig;
+use crate::api::json;
+use crate::api::CoxFit;
+use crate::data::synthetic::{generate, SyntheticConfig};
+use crate::error::{FastSurvivalError, Result};
+use crate::util::args::Args;
+use crate::util::parallel::num_threads;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-client burst outcome.
+struct ClientOutcome {
+    latencies_ms: Vec<f64>,
+    non_200: usize,
+    parity_failures: usize,
+    io_errors: usize,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let p = args.get_or("p", 500usize);
+    let batch_rows = args.get_or("batch-rows", 64usize);
+    let clients = args.get_or("clients", 6usize).max(1);
+    let requests = args.get_or("requests", 25usize).max(1);
+    let reloads = args.get_or("reloads", 4usize);
+    let seed = args.get_or("seed", 7u64);
+    let out_path = args.str_or("out", "BENCH_serve.json");
+
+    // 1. Train a model at the tracked workload shape. Accuracy is
+    // irrelevant here — the burst measures the serving path — so a few
+    // ridge sweeps suffice and keep the smoke fast.
+    let n_train = (2 * batch_rows.max(32)).max(400);
+    let ds = generate(&SyntheticConfig { n: n_train, p, rho: 0.5, k: 10, s: 0.1, seed });
+    let model = CoxFit::new().l2(1.0).max_iters(6).tol(1e-4).fit(&ds)?;
+    println!(
+        "serve-smoke: model p={p} nonzero={} · {clients} clients × {requests} requests \
+         × {batch_rows} rows · {reloads} mid-burst reloads",
+        model.nonzero_coefficients(0.0).len()
+    );
+
+    // 2. Publish to a temp artifact directory and start the server.
+    let dir = std::env::temp_dir().join(format!("fs_serve_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| FastSurvivalError::io(format!("creating {dir:?}"), e))?;
+    model.save(&dir.join("risk@1.json"))?;
+    let registry = Arc::new(ModelRegistry::open(&dir)?);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        // One worker per client connection plus slack for the reloader,
+        // so burst latency measures scoring, not connection queueing.
+        workers: args.get_or("workers", clients + 2).max(num_threads()),
+        max_body_bytes: 32 << 20,
+        batch: BatchConfig::default(),
+    };
+    let handle = serve(Arc::clone(&registry), &cfg)?;
+    let addr = handle.local_addr();
+    println!("serve-smoke: listening on http://{addr}");
+
+    // 3. Distinct row batch + expected (bitwise) risks per client.
+    let mut bodies: Vec<String> = Vec::with_capacity(clients);
+    let mut expected: Vec<Vec<f64>> = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let offset = (c * batch_rows) % (ds.n().saturating_sub(batch_rows).max(1));
+        let idx: Vec<usize> = (offset..offset + batch_rows).map(|i| i % ds.n()).collect();
+        let sub = ds.x.select_rows(&idx);
+        expected.push(model.predict_risk(&sub)?);
+        let mut body = String::from("{\"model\": \"risk@1\", \"rows\": [");
+        for (i, &r) in idx.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            let row: Vec<f64> = (0..p).map(|j| ds.x.get(r, j)).collect();
+            json::write_f64_array(&mut body, &row);
+        }
+        body.push_str("]}");
+        bodies.push(body);
+    }
+
+    // 4. The burst: every client hammers its batch over one keep-alive
+    // connection while the reloader hot-swaps the registry mid-flight.
+    let wall_start = Instant::now();
+    let mut outcomes: Vec<ClientOutcome> = Vec::with_capacity(clients);
+    let mut reload_failures = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let body = &bodies[c];
+            let expect = &expected[c];
+            handles.push(scope.spawn(move || client_burst(addr, body, expect, requests)));
+        }
+        let reloader = scope.spawn(move || {
+            let mut failures = 0usize;
+            for _ in 0..reloads {
+                std::thread::sleep(Duration::from_millis(20));
+                let ok = HttpClient::connect(addr)
+                    .and_then(|mut cl| cl.post("/v1/reload", "{}"))
+                    .map(|resp| resp.status == 200)
+                    .unwrap_or(false);
+                if !ok {
+                    failures += 1;
+                }
+            }
+            failures
+        });
+        for h in handles {
+            outcomes.push(h.join().expect("client thread panicked"));
+        }
+        reload_failures = reloader.join().expect("reloader thread panicked");
+    });
+    let wall_secs = wall_start.elapsed().as_secs_f64();
+
+    // 5. Aggregate.
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut non_200 = 0usize;
+    let mut parity_failures = 0usize;
+    let mut io_errors = 0usize;
+    for o in &outcomes {
+        latencies.extend_from_slice(&o.latencies_ms);
+        non_200 += o.non_200;
+        parity_failures += o.parity_failures;
+        io_errors += o.io_errors;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quantile = |q: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let i = ((q * latencies.len() as f64).ceil() as usize).clamp(1, latencies.len());
+        latencies[i - 1]
+    };
+    let ok_requests = latencies.len() - non_200.min(latencies.len());
+    let rows_per_sec = if wall_secs > 0.0 {
+        (ok_requests * batch_rows) as f64 / wall_secs
+    } else {
+        0.0
+    };
+    let all_200 = non_200 == 0 && io_errors == 0;
+    let parity_ok = parity_failures == 0;
+    let reloads_ok = reload_failures == 0;
+
+    println!(
+        "serve-smoke: {} requests in {wall_secs:.2}s · {rows_per_sec:.0} rows/s · \
+         p50 {:.2} ms · p99 {:.2} ms · non-200 {non_200} · io errors {io_errors} · \
+         parity failures {parity_failures} · reload failures {reload_failures}",
+        latencies.len(),
+        quantile(0.50),
+        quantile(0.99),
+    );
+
+    // 6. Server-side metrics snapshot rides along for diagnosis.
+    let server_metrics = HttpClient::connect(addr)
+        .and_then(|mut cl| cl.get("/metrics"))
+        .map(|r| r.body)
+        .unwrap_or_else(|_| "null".into());
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // 7. Emit BENCH_serve.json.
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\n  \"schema_version\": 1,\n  \"bench\": \"serve\",\n  \"workload\": {");
+    out.push_str(&format!(
+        "\"p\": {p}, \"batch_rows\": {batch_rows}, \"clients\": {clients}, \
+         \"requests_per_client\": {requests}, \"reloads\": {reloads}, \"seed\": {seed}, \
+         \"threads\": {}",
+        num_threads()
+    ));
+    out.push_str("},\n  \"results\": {\"rows_per_sec\": ");
+    json::write_f64(&mut out, rows_per_sec);
+    out.push_str(", \"p50_ms\": ");
+    json::write_f64(&mut out, quantile(0.50));
+    out.push_str(", \"p99_ms\": ");
+    json::write_f64(&mut out, quantile(0.99));
+    out.push_str(", \"wall_secs\": ");
+    json::write_f64(&mut out, wall_secs);
+    out.push_str(&format!(
+        ", \"requests\": {}, \"non_200\": {non_200}, \"io_errors\": {io_errors}, \
+         \"parity_failures\": {parity_failures}, \"reload_failures\": {reload_failures}",
+        latencies.len()
+    ));
+    out.push_str("},\n  \"gate\": {");
+    out.push_str(&format!(
+        "\"all_200\": {all_200}, \"bitwise_parity\": {parity_ok}, \
+         \"reloads_ok\": {reloads_ok}"
+    ));
+    out.push_str("},\n  \"server_metrics\": ");
+    out.push_str(&server_metrics);
+    out.push_str("\n}\n");
+    std::fs::write(Path::new(&out_path), &out)
+        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
+    println!("serve-smoke: wrote {out_path}");
+
+    if !(all_200 && parity_ok && reloads_ok) {
+        return Err(FastSurvivalError::Serve(format!(
+            "smoke gate failed: non_200={non_200} io_errors={io_errors} \
+             parity_failures={parity_failures} reload_failures={reload_failures}"
+        )));
+    }
+    Ok(())
+}
+
+/// One client's share of the burst: sequential keep-alive requests,
+/// bitwise parity check per response.
+fn client_burst(
+    addr: std::net::SocketAddr,
+    body: &str,
+    expect: &[f64],
+    requests: usize,
+) -> ClientOutcome {
+    let mut outcome = ClientOutcome {
+        latencies_ms: Vec::with_capacity(requests),
+        non_200: 0,
+        parity_failures: 0,
+        io_errors: 0,
+    };
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            outcome.io_errors = requests;
+            return outcome;
+        }
+    };
+    for _ in 0..requests {
+        let started = Instant::now();
+        let response = match client.post("/v1/score", body) {
+            Ok(r) => r,
+            Err(_) => {
+                outcome.io_errors += 1;
+                // The server may have closed the connection; reconnect
+                // once rather than failing the whole client.
+                match HttpClient::connect(addr) {
+                    Ok(c) => {
+                        client = c;
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+        };
+        outcome.latencies_ms.push(started.elapsed().as_secs_f64() * 1e3);
+        if response.status != 200 {
+            outcome.non_200 += 1;
+        } else {
+            let risk = json::parse(&response.body)
+                .ok()
+                .and_then(|doc| doc.get("risk").cloned())
+                .and_then(|r| r.as_f64_vec().ok());
+            match risk {
+                Some(risk) if risk.len() == expect.len() => {
+                    let bitwise = risk
+                        .iter()
+                        .zip(expect)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !bitwise {
+                        outcome.parity_failures += 1;
+                    }
+                }
+                _ => outcome.parity_failures += 1,
+            }
+        }
+        // An announced close (per-connection request cap, error paths)
+        // is normal keep-alive lifecycle, not a failure: reconnect
+        // before the next request instead of writing into a dead socket.
+        if response.close {
+            match HttpClient::connect(addr) {
+                Ok(c) => client = c,
+                Err(_) => {
+                    outcome.io_errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_smoke_end_to_end() {
+        // A scaled-down run of the real harness: tiny model, few
+        // clients, but the full server + burst + reload + gate path.
+        let out = std::env::temp_dir()
+            .join(format!("BENCH_serve_test_{}.json", std::process::id()));
+        let args = Args::parse(
+            [
+                "serve-smoke".to_string(),
+                "--p".into(),
+                "12".into(),
+                "--batch-rows".into(),
+                "8".into(),
+                "--clients".into(),
+                "2".into(),
+                "--requests".into(),
+                "4".into(),
+                "--reloads".into(),
+                "1".into(),
+                "--out".into(),
+                out.to_str().unwrap().to_string(),
+            ]
+            .into_iter(),
+        );
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = json::parse(&text).unwrap();
+        let gate = doc.require("gate").unwrap();
+        assert!(gate.require("all_200").unwrap().as_bool().unwrap());
+        assert!(gate.require("bitwise_parity").unwrap().as_bool().unwrap());
+        assert!(
+            doc.require("results")
+                .unwrap()
+                .require("rows_per_sec")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                > 0.0
+        );
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -1,0 +1,269 @@
+//! Lock-free serving metrics: per-endpoint request/error/row counters
+//! and log₂-bucketed latency histograms, surfaced as the JSON document
+//! behind `GET /metrics`.
+//!
+//! Everything is atomic — recording a request is a handful of relaxed
+//! fetch-adds on the hot path, and readers (the `/metrics` handler)
+//! observe a consistent-enough snapshot without ever blocking scorers.
+//! Quantiles come from the histogram buckets, so p50/p99 are upper
+//! bounds within a factor of 2 (the bucket width) of the true value.
+
+use crate::api::json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Number of log₂ latency buckets: bucket `i` covers `[2^(i−1), 2^i)`
+/// microseconds; the open-ended top bucket absorbs everything from
+/// 2³⁸ µs (~3.2 days) up.
+const N_BUCKETS: usize = 40;
+
+/// Log₂-bucketed latency histogram over microseconds.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(N_BUCKETS - 1)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Quantile estimate in microseconds: the upper bound of the bucket
+    /// containing the q-th sample (0 when empty). `q` in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << (N_BUCKETS - 1)) as f64
+    }
+}
+
+/// Counters for one endpoint.
+pub struct EndpointStats {
+    pub name: &'static str,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    rows: AtomicU64,
+    hist: LatencyHistogram,
+}
+
+impl EndpointStats {
+    fn new(name: &'static str) -> Self {
+        EndpointStats {
+            name,
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            hist: LatencyHistogram::default(),
+        }
+    }
+
+    /// Record one handled request: success flag, rows scored (0 for
+    /// non-scoring endpoints), wall latency in microseconds.
+    pub fn record(&self, ok: bool, rows: u64, us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if rows > 0 {
+            self.rows.fetch_add(rows, Ordering::Relaxed);
+        }
+        self.hist.record(us);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    fn write_json(&self, out: &mut String) {
+        out.push_str("{\"requests\": ");
+        out.push_str(&self.requests().to_string());
+        out.push_str(", \"errors\": ");
+        out.push_str(&self.errors().to_string());
+        out.push_str(", \"rows\": ");
+        out.push_str(&self.rows().to_string());
+        out.push_str(", \"mean_ms\": ");
+        json::write_f64(out, self.hist.mean_us() / 1e3);
+        out.push_str(", \"p50_ms\": ");
+        json::write_f64(out, self.hist.quantile_us(0.50) / 1e3);
+        out.push_str(", \"p99_ms\": ");
+        json::write_f64(out, self.hist.quantile_us(0.99) / 1e3);
+        out.push('}');
+    }
+}
+
+/// All serving metrics, one instance per server.
+pub struct ServeMetrics {
+    started: Instant,
+    pub score: EndpointStats,
+    pub models: EndpointStats,
+    pub reload: EndpointStats,
+    pub healthz: EndpointStats,
+    pub metrics_ep: EndpointStats,
+    pub other: EndpointStats,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            started: Instant::now(),
+            score: EndpointStats::new("score"),
+            models: EndpointStats::new("models"),
+            reload: EndpointStats::new("reload"),
+            healthz: EndpointStats::new("healthz"),
+            metrics_ep: EndpointStats::new("metrics"),
+            other: EndpointStats::new("other"),
+        }
+    }
+}
+
+impl ServeMetrics {
+    /// Stats slot for a routing key (unknown keys land in `other`).
+    pub fn endpoint(&self, key: &str) -> &EndpointStats {
+        match key {
+            "score" => &self.score,
+            "models" => &self.models,
+            "reload" => &self.reload,
+            "healthz" => &self.healthz,
+            "metrics" => &self.metrics_ep,
+            _ => &self.other,
+        }
+    }
+
+    fn endpoints(&self) -> [&EndpointStats; 6] {
+        [
+            &self.score,
+            &self.models,
+            &self.reload,
+            &self.healthz,
+            &self.metrics_ep,
+            &self.other,
+        ]
+    }
+
+    /// The `GET /metrics` response document.
+    pub fn to_json(&self) -> String {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let rows: u64 = self.score.rows();
+        let mut out = String::with_capacity(1024);
+        out.push_str("{\"uptime_secs\": ");
+        json::write_f64(&mut out, uptime);
+        out.push_str(", \"rows_scored\": ");
+        out.push_str(&rows.to_string());
+        out.push_str(", \"rows_per_sec\": ");
+        json::write_f64(&mut out, if uptime > 0.0 { rows as f64 / uptime } else { 0.0 });
+        out.push_str(", \"endpoints\": {");
+        for (i, ep) in self.endpoints().iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            json::write_str(&mut out, ep.name);
+            out.push_str(": ");
+            ep.write_json(&mut out);
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_upper_bounds() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram");
+        for us in [10u64, 20, 40, 80, 160, 1000, 5000] {
+            h.record(us);
+        }
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 40.0, "p50 bucket must cover the median sample");
+        assert!(p99 >= 5000.0, "p99 bucket must cover the max sample");
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn metrics_document_is_valid_json() {
+        let m = ServeMetrics::default();
+        m.score.record(true, 64, 1200);
+        m.score.record(false, 0, 300);
+        m.healthz.record(true, 0, 15);
+        let doc = json::parse(&m.to_json()).unwrap();
+        let eps = doc.require("endpoints").unwrap();
+        let score = eps.require("score").unwrap();
+        assert_eq!(score.require("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(score.require("errors").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(score.require("rows").unwrap().as_usize().unwrap(), 64);
+        assert!(doc.require("rows_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+        // Unknown routing keys fall back to "other".
+        assert_eq!(m.endpoint("nope").name, "other");
+    }
+}

@@ -5,7 +5,7 @@
 //! fork-join with deterministic output ordering.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Number of worker threads to use (respects `FASTSURVIVAL_THREADS`).
 pub fn num_threads() -> usize {
@@ -102,6 +102,65 @@ pub fn par_for_each_mut<T: Send, F: Fn(usize, &mut T) + Sync>(items: &mut [T], f
     });
 }
 
+/// A long-lived pool of named worker threads consuming boxed jobs from a
+/// shared queue. Unlike the fork-join helpers above (which spawn scoped
+/// threads per call), the pool amortizes thread startup across many
+/// irregular tasks — the scoring server hands it one job per accepted
+/// connection. Dropping the pool closes the queue, lets every queued job
+/// finish, and joins the workers (graceful drain, nothing is abandoned).
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Box<dyn FnOnce() + Send + 'static>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads named `{name}-{i}`.
+    pub fn new(workers: usize, name: &str) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Box<dyn FnOnce() + Send + 'static>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    // Hold the lock only for the dequeue, not the job.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // queue closed: pool is dropping
+                    }
+                })
+                .expect("failed to spawn worker thread");
+            handles.push(handle);
+        }
+        WorkerPool { tx: Some(tx), handles }
+    }
+
+    /// Enqueue a job. Jobs run in FIFO order as workers free up; after
+    /// the pool has been dropped this is a silent no-op.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(job));
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; workers exit once it drains
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +211,24 @@ mod tests {
         // Empty slice is a no-op, not a panic.
         let mut empty: Vec<usize> = Vec::new();
         par_for_each_mut(&mut empty, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn worker_pool_runs_every_job_and_drains_on_drop() {
+        use std::sync::atomic::AtomicUsize;
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(3, "test-pool");
+            assert_eq!(pool.workers(), 3);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins after the queue drains.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Black-box tests for the model-serving subsystem: registry hot-reload
+//! atomicity under concurrent scoring, HTTP request-framing edge cases
+//! (pipelining, oversized bodies, malformed JSON), bitwise parity
+//! between HTTP-scored and in-process-scored results under a concurrent
+//! burst with mid-burst reloads, and offline CSV round-trip parity.
+
+use fastsurvival::api::json;
+use fastsurvival::api::{CoxFit, CoxModel};
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::linalg::Matrix;
+use fastsurvival::serve::http::{serve, HttpClient, ServeConfig};
+use fastsurvival::serve::registry::ModelRegistry;
+use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn dataset(seed: u64) -> SurvivalDataset {
+    generate(&SyntheticConfig { n: 180, p: 9, rho: 0.5, k: 3, s: 0.1, seed })
+}
+
+fn train(ds: &SurvivalDataset, l2: f64) -> CoxModel {
+    CoxFit::new().l2(l2).max_iters(80).tol(1e-9).fit(ds).unwrap()
+}
+
+fn unique_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fs_serve_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn row_major(x: &Matrix, rows: &[usize]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(rows.len() * x.cols);
+    for &r in rows {
+        for c in 0..x.cols {
+            out.push(x.get(r, c));
+        }
+    }
+    out
+}
+
+fn rows_json(x: &Matrix, rows: &[usize]) -> String {
+    let mut out = String::from("[");
+    for (i, &r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let row: Vec<f64> = (0..x.cols).map(|c| x.get(r, c)).collect();
+        json::write_f64_array(&mut out, &row);
+    }
+    out.push(']');
+    out
+}
+
+// ------------------------------------------------------------- registry
+
+#[test]
+fn hot_reload_is_atomic_under_concurrent_scoring() {
+    let ds = dataset(21);
+    let m1 = train(&ds, 0.5);
+    let m2 = train(&ds, 5.0);
+    let dir = unique_dir("atomic");
+    let sub = dir.join("m");
+    std::fs::create_dir_all(&sub).unwrap();
+    m1.save(&sub.join("1.json")).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&dir).unwrap());
+
+    let probe = row_major(&ds.x, &[0]);
+    let e1 = m1.predict_risk(&ds.x).unwrap()[0];
+    let e2 = m2.predict_risk(&ds.x).unwrap()[0];
+    assert_ne!(e1.to_bits(), e2.to_bits(), "the two versions must differ");
+
+    std::thread::scope(|scope| {
+        // Scorers hammer the latest version while the main thread flips
+        // v2 in and out with atomic renames + reloads. Every observed
+        // score must be exactly one of the two valid models' outputs —
+        // never a torn or partially-loaded state.
+        for _ in 0..4 {
+            let registry = &registry;
+            let probe = &probe;
+            scope.spawn(move || {
+                for _ in 0..400 {
+                    let model = registry.resolve("m").unwrap();
+                    let out = model.score_rows(probe, 1, None).unwrap();
+                    let bits = out.risk[0].to_bits();
+                    assert!(
+                        bits == e1.to_bits() || bits == e2.to_bits(),
+                        "scored value must come from a fully-loaded model"
+                    );
+                }
+            });
+        }
+        let v2 = sub.join("2.json");
+        let tmp = dir.join("staging.tmp");
+        for round in 0..30 {
+            if round % 2 == 0 {
+                // Atomic publish: write outside the scanned namespace
+                // (no .json extension), then rename into place.
+                std::fs::write(&tmp, m2.to_json()).unwrap();
+                std::fs::rename(&tmp, &v2).unwrap();
+            } else {
+                std::fs::remove_file(&v2).unwrap();
+            }
+            registry.reload().unwrap();
+        }
+    });
+
+    // Final state: v2 present and latest.
+    std::fs::write(sub.join("2.json"), m2.to_json()).unwrap();
+    registry.reload().unwrap();
+    assert_eq!(registry.resolve("m").unwrap().version(), 2);
+    assert_eq!(registry.resolve("m@1").unwrap().version(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- http framing
+
+struct TestServer {
+    handle: fastsurvival::serve::http::ServerHandle,
+    dir: PathBuf,
+    ds: SurvivalDataset,
+    model: CoxModel,
+}
+
+fn start_server(tag: &str, max_body: usize, workers: usize) -> TestServer {
+    let ds = dataset(33);
+    let model = train(&ds, 1.0);
+    let dir = unique_dir(tag);
+    model.save(&dir.join("m@1.json")).unwrap();
+    let registry = Arc::new(ModelRegistry::open(&dir).unwrap());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        max_body_bytes: max_body,
+        batch: BatchConfig::default(),
+    };
+    let handle = serve(registry, &cfg).unwrap();
+    TestServer { handle, dir, ds, model }
+}
+
+#[test]
+fn http_framing_edge_cases() {
+    // Enough workers that every connection this test holds open gets
+    // its own, so nothing serializes behind the keep-alive idle window.
+    let server = start_server("framing", 4096, 8);
+    let addr = server.handle.local_addr();
+
+    // Pipelined requests: two GETs written in one burst, two framed
+    // responses read back in order.
+    let mut client = HttpClient::connect(addr).unwrap();
+    client
+        .send_raw(b"GET /healthz HTTP/1.1\r\n\r\nGET /v1/models HTTP/1.1\r\n\r\n")
+        .unwrap();
+    let r1 = client.read_response().unwrap();
+    let r2 = client.read_response().unwrap();
+    assert_eq!(r1.status, 200);
+    assert_eq!(r2.status, 200);
+    assert!(r1.body.contains("\"status\""));
+    assert!(r2.body.contains("\"models\""));
+
+    // A request with a body, pipelined with a follow-up: leftover bytes
+    // after the body must frame the next request correctly.
+    let score = format!(
+        "{{\"model\": \"m@1\", \"rows\": {}}}",
+        rows_json(&server.ds.x, &[0, 1])
+    );
+    let pipelined = format!(
+        "POST /v1/score HTTP/1.1\r\nContent-Length: {}\r\n\r\n{score}GET /healthz HTTP/1.1\r\n\r\n",
+        score.len()
+    );
+    client.send_raw(pipelined.as_bytes()).unwrap();
+    let r3 = client.read_response().unwrap();
+    let r4 = client.read_response().unwrap();
+    assert_eq!(r3.status, 200);
+    assert!(r3.body.contains("\"risk\""));
+    assert_eq!(r4.status, 200);
+
+    // Oversized body → 413 before the body is read, connection closed.
+    let mut big = HttpClient::connect(addr).unwrap();
+    big.send_raw(b"POST /v1/score HTTP/1.1\r\nContent-Length: 100000\r\n\r\n")
+        .unwrap();
+    let r = big.read_response().unwrap();
+    assert_eq!(r.status, 413);
+
+    // Malformed JSON → 400.
+    let mut bad = HttpClient::connect(addr).unwrap();
+    let r = bad.post("/v1/score", "this is not json").unwrap();
+    assert_eq!(r.status, 400);
+
+    // Wrong row width → 400 with a diagnostic.
+    let mut narrow = HttpClient::connect(addr).unwrap();
+    let r = narrow
+        .post("/v1/score", "{\"model\": \"m@1\", \"rows\": [[1.0, 2.0]]}")
+        .unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("expects"));
+
+    // Unknown model → 404; unknown path → 404; wrong method → 405;
+    // missing rows → 400; chunked encoding → 400.
+    let mut misc = HttpClient::connect(addr).unwrap();
+    assert_eq!(misc.post("/v1/score", "{\"model\": \"nope\", \"rows\": []}").unwrap().status, 404);
+    // Syntactically bad spec → 400 (client error), not 404.
+    assert_eq!(misc.post("/v1/score", "{\"model\": \"m@x\", \"rows\": []}").unwrap().status, 400);
+    // Non-finite row values (overflowing literal → inf) → 400, keeping
+    // the response's risk array numeric.
+    assert_eq!(misc.post("/v1/score", "{\"model\": \"m@1\", \"rows\": [[1e999]]}").unwrap().status, 400);
+    assert_eq!(misc.get("/v1/nothing").unwrap().status, 404);
+    assert_eq!(misc.post("/healthz", "{}").unwrap().status, 405);
+    assert_eq!(misc.post("/v1/score", "{\"model\": \"m@1\"}").unwrap().status, 400);
+    let mut chunked = HttpClient::connect(addr).unwrap();
+    chunked
+        .send_raw(b"POST /v1/score HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+        .unwrap();
+    assert_eq!(chunked.read_response().unwrap().status, 400);
+
+    let _ = std::fs::remove_dir_all(&server.dir);
+}
+
+// ------------------------------------- burst + mid-burst reload parity
+
+#[test]
+fn concurrent_burst_with_midburst_reload_keeps_bitwise_parity() {
+    let server = start_server("burst", 8 << 20, 6);
+    let addr = server.handle.local_addr();
+    let rows: Vec<usize> = (0..16).collect();
+    let body = format!(
+        "{{\"model\": \"m@1\", \"horizons\": [0.5, 2.0], \"rows\": {}}}",
+        rows_json(&server.ds.x, &rows)
+    );
+    let sub = server.ds.x.select_rows(&rows);
+    let expect_risk = server.model.predict_risk(&sub).unwrap();
+    let expect_curves = server.model.predict_survival_curve(&sub, &[0.5, 2.0]).unwrap();
+
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let body = &body;
+            let expect_risk = &expect_risk;
+            let expect_curves = &expect_curves;
+            scope.spawn(move || {
+                let mut client = HttpClient::connect(addr).unwrap();
+                for _ in 0..20 {
+                    let resp = client.post("/v1/score", body).unwrap();
+                    assert_eq!(resp.status, 200, "body: {}", resp.body);
+                    let doc = json::parse(&resp.body).unwrap();
+                    let risk = doc.require("risk").unwrap().as_f64_vec().unwrap();
+                    assert_eq!(risk.len(), 16);
+                    for (a, b) in risk.iter().zip(expect_risk) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "HTTP risk must be bitwise");
+                    }
+                    let survival = doc.require("survival").unwrap();
+                    let curves = survival.as_array().unwrap();
+                    for (i, curve) in curves.iter().enumerate() {
+                        let vals = curve.as_f64_vec().unwrap();
+                        for (j, v) in vals.iter().enumerate() {
+                            assert_eq!(v.to_bits(), expect_curves[i][j].to_bits());
+                        }
+                    }
+                }
+            });
+        }
+        // Mid-burst hot reloads: same artifact directory, so parity
+        // must hold across the swap and no in-flight request may drop.
+        scope.spawn(move || {
+            let mut client = HttpClient::connect(addr).unwrap();
+            for _ in 0..5 {
+                std::thread::sleep(Duration::from_millis(10));
+                let resp = client.post("/v1/reload", "{}").unwrap();
+                assert_eq!(resp.status, 200, "body: {}", resp.body);
+            }
+        });
+    });
+
+    // The metrics endpoint saw all of it.
+    let mut client = HttpClient::connect(addr).unwrap();
+    let metrics = client.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    let doc = json::parse(&metrics.body).unwrap();
+    let endpoints = doc.require("endpoints").unwrap();
+    let score = endpoints.require("score").unwrap();
+    assert_eq!(score.require("requests").unwrap().as_usize().unwrap(), 80);
+    assert_eq!(score.require("errors").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(score.require("rows").unwrap().as_usize().unwrap(), 80 * 16);
+    let reload = endpoints.require("reload").unwrap();
+    assert_eq!(reload.require("requests").unwrap().as_usize().unwrap(), 5);
+    drop(client); // close the last connection so shutdown joins immediately
+
+    // Graceful shutdown completes (joins every thread) without hanging.
+    let dir = server.dir.clone();
+    server.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------- CSV round trip
+
+#[test]
+fn score_csv_round_trips_with_in_process_parity() {
+    let ds = dataset(55);
+    let model = CoxFit::new().l1(0.15).l2(0.05).max_iters(200).tol(1e-10).fit(&ds).unwrap();
+    let compiled = CompiledModel::compile(&model, "m", 1);
+
+    // Positional layout: time/event named, feature names unknown to the
+    // model, so mapping falls back to column order.
+    let mut csv = String::from("time,event");
+    for j in 0..ds.p() {
+        csv.push_str(&format!(",col{j}"));
+    }
+    csv.push('\n');
+    for i in 0..ds.n() {
+        csv.push_str(&format!("{},{}", ds.time[i], u8::from(ds.event[i])));
+        for c in 0..ds.p() {
+            csv.push_str(&format!(",{}", ds.x.get(i, c)));
+        }
+        csv.push('\n');
+    }
+    let horizons = [0.25, 1.0, 3.0];
+    let mut out: Vec<u8> = Vec::new();
+    let summary =
+        score_csv(&compiled, &mut csv.as_bytes(), &mut out, &horizons, 32).unwrap();
+    assert_eq!(summary.rows, ds.n());
+    assert!(summary.chunks > 1, "must stream in multiple chunks");
+
+    let expect_risk = model.predict_risk(&ds.x).unwrap();
+    let expect_curves = model.predict_survival_curve(&ds.x, &horizons).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert_eq!(header, "risk,surv@0.25,surv@1,surv@3");
+    for i in 0..ds.n() {
+        let cells: Vec<f64> = lines
+            .next()
+            .unwrap()
+            .split(',')
+            .map(|c| c.parse().unwrap())
+            .collect();
+        assert!(
+            (cells[0] - expect_risk[i]).abs() <= 1e-12,
+            "row {i}: {} vs {}",
+            cells[0],
+            expect_risk[i]
+        );
+        for j in 0..horizons.len() {
+            assert!((cells[1 + j] - expect_curves[i][j]).abs() <= 1e-12);
+        }
+    }
+    assert!(lines.next().is_none());
+}
