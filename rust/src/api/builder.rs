@@ -26,7 +26,8 @@ use crate::optim::{FitConfig, Objective, Optimizer, SurrogateKind};
 use crate::path::{CardinalityPath, CardinalitySolver, PathSolver};
 use crate::runtime::engine::CoxEngine;
 use crate::select::BeamSearch;
-use std::path::PathBuf;
+use crate::store::{ChunkedDataset, CoxData, StreamingFit};
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 // The typed registries live with the layers they enumerate; the api
@@ -47,6 +48,7 @@ pub struct CoxFit {
     artifact_dir: PathBuf,
     max_iters: usize,
     tol: f64,
+    stop_kkt: f64,
     budget_secs: f64,
     record_trace: bool,
     // λ-path configuration (CoxFit::l1_path).
@@ -65,6 +67,7 @@ impl Default for CoxFit {
             artifact_dir: PathBuf::from("artifacts"),
             max_iters: 200,
             tol: 1e-9,
+            stop_kkt: 0.0,
             budget_secs: 0.0,
             record_trace: true,
             n_lambdas: 50,
@@ -117,6 +120,18 @@ impl CoxFit {
     /// Relative loss-decrease convergence tolerance.
     pub fn tol(mut self, tol: f64) -> Self {
         self.tol = tol;
+        self
+    }
+
+    /// KKT-residual stopping for [`CoxFit::fit_store`] (0 = off,
+    /// the default): stop the exact chunked phase once every
+    /// coordinate's pre-step KKT residual is ≤ `eps`. Residual stopping
+    /// bounds the distance to the optimum directly, which is what
+    /// certifies ≤1e-8 agreement with an independently-run in-memory
+    /// fit — the relative loss tolerance (`tol`) cannot. Ignored by the
+    /// in-memory [`CoxFit::fit`].
+    pub fn stop_kkt(mut self, eps: f64) -> Self {
+        self.stop_kkt = eps;
         self
     }
 
@@ -245,6 +260,97 @@ impl CoxFit {
         };
         Ok(CoxModel::from_parts(
             ds.feature_names.clone(),
+            res.beta,
+            baseline,
+            diagnostics,
+        ))
+    }
+
+    // --------------------------------------------- out-of-core fitting
+
+    /// Fit from an on-disk `.fsds` columnar store (see [`crate::store`])
+    /// without ever materializing the design matrix: sampled-block
+    /// surrogate warmup, then exact chunked surrogate coordinate descent
+    /// streaming one column per step. Builder knobs carry over where
+    /// they apply (`l1`/`l2`, `max_iters` as full-data sweeps, `tol`,
+    /// `stop_kkt`, `budget_secs`); the optimizer must be a surrogate
+    /// (quadratic|cubic) and the engine native. Chunked and in-memory
+    /// runs of the same streamed algorithm match bit for bit; with
+    /// [`CoxFit::stop_kkt`] armed (e.g. 1e-9) the result also matches
+    /// an independently-run [`CoxFit::fit`]-style in-memory solve to
+    /// ≤1e-8 — the default loss tolerance alone does not certify that
+    /// bound, only coarse agreement.
+    pub fn fit_store(&self, store_path: impl AsRef<Path>) -> Result<CoxModel> {
+        let surrogate = match self.optimizer {
+            OptimizerKind::Quadratic => SurrogateKind::Quadratic,
+            OptimizerKind::Cubic => SurrogateKind::Cubic,
+            other => {
+                return Err(FastSurvivalError::InvalidConfig(format!(
+                    "out-of-core fitting needs a surrogate CD optimizer (quadratic|cubic), \
+                     got {:?}",
+                    other.name()
+                )))
+            }
+        };
+        if self.engine != EngineKind::Native {
+            return Err(FastSurvivalError::Unsupported(
+                "out-of-core fitting runs on the native engine only (the chunked column \
+                 sweep is an in-process hot path)"
+                    .into(),
+            ));
+        }
+        if !self.tol.is_finite() || self.tol < 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "tol must be finite and non-negative (got {})",
+                self.tol
+            )));
+        }
+        if !self.stop_kkt.is_finite() || self.stop_kkt < 0.0 {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "stop_kkt must be finite and non-negative (got {})",
+                self.stop_kkt
+            )));
+        }
+        let mut data = ChunkedDataset::open(store_path.as_ref())?;
+        let fitter = StreamingFit {
+            objective: Objective { l1: self.l1, l2: self.l2 },
+            surrogate,
+            max_sweeps: self.max_iters,
+            tol: self.tol,
+            stop_kkt: self.stop_kkt,
+            budget_secs: self.budget_secs,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let res = fitter.fit(&mut data)?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        if res.trace.diverged {
+            return Err(FastSurvivalError::Diverged {
+                optimizer: format!("streaming-{}", surrogate.name()),
+                iterations: res.sweeps,
+            });
+        }
+        let meta = data.meta();
+        // Baseline from the sorted training order — BreslowBaseline::fit
+        // is order-agnostic, and the streamed fit hands back η aligned
+        // with the store's sorted time/event columns.
+        let baseline = BreslowBaseline::fit(&meta.time, &meta.event, &res.eta);
+        let diagnostics = FitDiagnostics {
+            optimizer: format!("streaming-{}", surrogate.name()),
+            engine: "chunked-store".to_string(),
+            iterations: res.sweeps,
+            converged: res.trace.converged,
+            budget_exhausted: res.trace.budget_exhausted,
+            objective_value: res.objective_value,
+            l1: self.l1,
+            l2: self.l2,
+            n_train: meta.n,
+            n_events: meta.n_events,
+            wall_secs,
+            trace: res.trace,
+        };
+        Ok(CoxModel::from_parts(
+            meta.feature_names.clone(),
             res.beta,
             baseline,
             diagnostics,

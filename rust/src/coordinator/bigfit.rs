@@ -1,0 +1,372 @@
+//! The `bigfit` CLI subcommand: the tracked out-of-core workload →
+//! `BENCH_bigfit.json`, with two machine-independent gates.
+//!
+//! The workload streams an n=1,000,000 × p=100 Appendix-C.2 synthetic
+//! dataset into a `.fsds` store (never materializing the matrix), runs
+//! the two-phase [`StreamingFit`], and records:
+//!
+//! - **memory gate** — the process peak RSS must stay below *half* the
+//!   dataset's in-memory footprint (n·p·8 bytes). The store pipeline's
+//!   resident state is O(n + chunk·p), so on the tracked shape it sits
+//!   far below the bound; holding the matrix even once would trip it.
+//! - **parity gate** — on small data, the same streamed algorithm run
+//!   over the on-disk store and over the in-memory reference source must
+//!   agree bit for bit, and the streamed optimum must match the classic
+//!   in-memory surrogate CD fit to ≤1e-8.
+//!
+//! `--quick` scales n down for the CI `bigfit-smoke` job; both gates are
+//! enforced at every scale (nonzero exit on violation, JSON always
+//! written first — it is the diagnostic).
+
+use crate::api::json;
+use crate::cox::CoxProblem;
+use crate::data::synthetic::{generate, SyntheticConfig};
+use crate::error::{FastSurvivalError, Result};
+use crate::optim::{Objective, SurrogateKind};
+use crate::store::{
+    convert_synthetic, reference_fit_kkt, write_store, ChunkedDataset, CoxData, DatasetRows,
+    MemoryCoxData, StreamingFit, DEFAULT_CHUNK_ROWS,
+};
+use crate::util::args::Args;
+use crate::util::mem::peak_rss_bytes;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Parity tolerance of the streamed optimum vs the classic in-memory fit
+/// (the acceptance criterion's ≤1e-8).
+const PARITY_TOL: f64 = 1e-8;
+/// Cross-source (disk vs memory) tolerance. The two sources execute the
+/// same instructions on the same bits, so the expected gap is exactly 0;
+/// the gate leaves three orders of magnitude of headroom under the
+/// classic-parity tolerance.
+const CROSS_SOURCE_TOL: f64 = 1e-12;
+
+struct ParityReport {
+    n: usize,
+    p: usize,
+    chunked_vs_memory_max_abs: f64,
+    bitwise_identical: bool,
+    vs_classic_max_abs: f64,
+}
+
+impl ParityReport {
+    fn ok(&self) -> bool {
+        self.chunked_vs_memory_max_abs <= CROSS_SOURCE_TOL
+            && self.vs_classic_max_abs <= PARITY_TOL
+    }
+}
+
+/// Small-data parity: the streamed fit over the on-disk store vs over
+/// the in-memory reference source (bitwise expectation), and vs the
+/// engine's classic in-memory CD — all three stopped on a KKT residual
+/// of 1e-9, which pins each within √p·ε/μ ≈ 3e-9 of the unique optimum
+/// of the λ₂=1 objective and so certifies the ≤1e-8 agreement (loss-
+/// change stopping could not).
+fn parity_gate(dir: &Path) -> Result<ParityReport> {
+    let (n, p, chunk_rows) = (2000, 40, 256);
+    let obj = Objective { l1: 0.0, l2: 1.0 };
+    let ds = generate(&SyntheticConfig { n, p, rho: 0.4, k: 5, s: 0.1, seed: 7 });
+    let store_path = dir.join("bigfit_parity.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store_path, chunk_rows, "parity")?;
+
+    let fitter = StreamingFit {
+        objective: obj,
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt: 1e-9,
+        ..Default::default()
+    };
+    let mut chunked = ChunkedDataset::open(&store_path)?;
+    let from_store = fitter.fit(&mut chunked)?;
+    let mut mem = MemoryCoxData::from_dataset(&ds, chunk_rows)?;
+    let from_mem = fitter.fit(&mut mem)?;
+
+    let mut cross = 0.0_f64;
+    let mut bitwise = true;
+    for (a, b) in from_store.beta.iter().zip(from_mem.beta.iter()) {
+        cross = cross.max((a - b).abs());
+        if a.to_bits() != b.to_bits() {
+            bitwise = false;
+        }
+    }
+
+    let pr = CoxProblem::try_new(&ds)?;
+    let classic = reference_fit_kkt(&pr, obj, SurrogateKind::Quadratic, 1e-9, 10_000);
+    let mut vs_classic = 0.0_f64;
+    for (a, b) in from_store.beta.iter().zip(classic.iter()) {
+        vs_classic = vs_classic.max((a - b).abs());
+    }
+
+    let _ = std::fs::remove_file(&store_path);
+    Ok(ParityReport {
+        n,
+        p,
+        chunked_vs_memory_max_abs: cross,
+        bitwise_identical: bitwise,
+        vs_classic_max_abs: vs_classic,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render_json(
+    quick: bool,
+    cfg: &SyntheticConfig,
+    chunk_rows: usize,
+    store_bytes: u64,
+    dataset_bytes: u64,
+    rss_bound: u64,
+    peak_rss: Option<u64>,
+    rss_ok: bool,
+    convert_secs: f64,
+    fit_secs: f64,
+    sweeps: usize,
+    sgd_steps: usize,
+    converged: bool,
+    objective_value: f64,
+    parity: &ParityReport,
+    passed: bool,
+) -> String {
+    let mut out = String::with_capacity(2048);
+    out.push_str("{\n");
+    out.push_str("  \"schema_version\": 1,\n");
+    out.push_str("  \"suite\": \"fastsurvival-bigfit\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!(
+        "  \"workload\": {{\"n\": {}, \"p\": {}, \"chunk_rows\": {chunk_rows}, \
+         \"rho\": {}, \"true_k\": {}, \"seed\": {}}},\n",
+        cfg.n, cfg.p, cfg.rho, cfg.k, cfg.seed
+    ));
+    out.push_str(&format!("  \"dataset_bytes_in_memory\": {dataset_bytes},\n"));
+    out.push_str(&format!("  \"store_bytes\": {store_bytes},\n"));
+    out.push_str("  \"memory_gate\": {\n");
+    out.push_str(&format!("    \"bound_bytes\": {rss_bound},\n"));
+    match peak_rss {
+        Some(b) => out.push_str(&format!("    \"peak_rss_bytes\": {b},\n")),
+        None => out.push_str("    \"peak_rss_bytes\": null,\n"),
+    }
+    out.push_str(&format!("    \"measured\": {},\n", peak_rss.is_some()));
+    out.push_str(&format!("    \"passed\": {rss_ok}\n  }},\n"));
+    out.push_str("  \"timings\": {\"convert_secs\": ");
+    json::write_f64(&mut out, convert_secs);
+    out.push_str(", \"fit_secs\": ");
+    json::write_f64(&mut out, fit_secs);
+    out.push_str("},\n");
+    out.push_str(&format!(
+        "  \"fit\": {{\"sweeps\": {sweeps}, \"sgd_steps\": {sgd_steps}, \
+         \"converged\": {converged}, \"objective_value\": "
+    ));
+    json::write_f64(&mut out, objective_value);
+    out.push_str("},\n");
+    out.push_str("  \"parity_gate\": {\n");
+    out.push_str(&format!(
+        "    \"n\": {}, \"p\": {},\n",
+        parity.n, parity.p
+    ));
+    out.push_str("    \"chunked_vs_memory_max_abs\": ");
+    json::write_f64(&mut out, parity.chunked_vs_memory_max_abs);
+    out.push_str(&format!(
+        ",\n    \"bitwise_identical\": {},\n",
+        parity.bitwise_identical
+    ));
+    out.push_str("    \"cross_source_tol\": ");
+    json::write_f64(&mut out, CROSS_SOURCE_TOL);
+    out.push_str(",\n    \"vs_classic_max_abs\": ");
+    json::write_f64(&mut out, parity.vs_classic_max_abs);
+    out.push_str(",\n    \"tol\": ");
+    json::write_f64(&mut out, PARITY_TOL);
+    out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", parity.ok()));
+    out.push_str(&format!("  \"passed\": {passed}\n}}\n"));
+    out
+}
+
+/// Entry point for the `bigfit` subcommand.
+pub fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let n = args.get_or("n", if quick { 250_000 } else { 1_000_000 });
+    let p = args.get_or("p", 100);
+    // Smaller chunks at smoke scale: the gate budget (half the dataset)
+    // shrinks with n while the chunk buffers would not.
+    let chunk_rows =
+        args.get_or("chunk-rows", if quick { 4096 } else { DEFAULT_CHUNK_ROWS });
+    let out_path = args.str_or("out", "BENCH_bigfit.json");
+    let keep = args.flag("keep");
+    let dir = match args.get("dir") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join("fastsurvival_bigfit"),
+    };
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| FastSurvivalError::io(format!("creating {}", dir.display()), e))?;
+
+    // Parity gate first: cheap, and a broken kernel should fail fast.
+    println!("bigfit: parity gate (n=2000, p=40, chunked vs memory vs classic)...");
+    let parity = parity_gate(&dir)?;
+    println!(
+        "bigfit: parity chunked-vs-memory max|Δβ| = {:.3e} (bitwise: {}), \
+         vs classic = {:.3e}",
+        parity.chunked_vs_memory_max_abs, parity.bitwise_identical, parity.vs_classic_max_abs
+    );
+
+    // Streamed conversion: the matrix exists only as chunks on disk.
+    let cfg = SyntheticConfig { n, p, rho: 0.2, k: 10.min(p), s: 0.1, seed: 42 };
+    let store_path = dir.join(format!("bigfit_n{n}_p{p}.fsds"));
+    let t0 = Instant::now();
+    let summary = convert_synthetic(&cfg, &store_path, chunk_rows)?;
+    let convert_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "bigfit: streamed {}x{} store ({} chunks, {:.1} MB) in {:.1}s",
+        summary.n,
+        summary.p,
+        summary.n_chunks,
+        summary.bytes as f64 / 1e6,
+        convert_secs
+    );
+
+    // Streamed fit.
+    let mut store = ChunkedDataset::open(&store_path)?;
+    let fitter = StreamingFit {
+        objective: Objective { l1: 0.0, l2: args.get_or("l2", 1.0) },
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: args.get_or("sweeps", 6),
+        tol: args.get_or("tol", 1e-7),
+        ..Default::default()
+    };
+    let t1 = Instant::now();
+    let res = fitter.fit(&mut store)?;
+    let fit_secs = t1.elapsed().as_secs_f64();
+    let dataset_bytes = store.meta().matrix_bytes();
+    println!(
+        "bigfit: fit in {:.1}s ({} warmup blocks, {} exact sweeps, objective {:.4}, \
+         converged={})",
+        fit_secs, res.sgd_steps, res.sweeps, res.objective_value, res.trace.converged
+    );
+
+    // Memory gate.
+    let rss_bound = dataset_bytes / 2;
+    let peak_rss = peak_rss_bytes();
+    let rss_ok = peak_rss.map_or(true, |b| b < rss_bound);
+    match peak_rss {
+        Some(b) => println!(
+            "bigfit: peak RSS {:.1} MB vs bound {:.1} MB (dataset would be {:.1} MB in \
+             memory) — {}",
+            b as f64 / 1e6,
+            rss_bound as f64 / 1e6,
+            dataset_bytes as f64 / 1e6,
+            if rss_ok { "OK" } else { "EXCEEDED" }
+        ),
+        None => println!("bigfit: peak RSS unavailable on this platform — memory gate skipped"),
+    }
+
+    let passed = rss_ok && parity.ok();
+    let doc = render_json(
+        quick,
+        &cfg,
+        chunk_rows,
+        summary.bytes,
+        dataset_bytes,
+        rss_bound,
+        peak_rss,
+        rss_ok,
+        convert_secs,
+        fit_secs,
+        res.sweeps,
+        res.sgd_steps,
+        res.trace.converged,
+        res.objective_value,
+        &parity,
+        passed,
+    );
+    std::fs::write(&out_path, &doc)
+        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
+    println!("bigfit: wrote {out_path}");
+
+    if !keep {
+        let _ = std::fs::remove_file(&store_path);
+    } else {
+        println!("bigfit: kept store at {}", store_path.display());
+    }
+
+    if !passed {
+        let mut why = Vec::new();
+        if !rss_ok {
+            why.push(format!(
+                "peak RSS {} exceeded bound {} (half the in-memory dataset)",
+                peak_rss.unwrap_or(0),
+                rss_bound
+            ));
+        }
+        if parity.chunked_vs_memory_max_abs > CROSS_SOURCE_TOL {
+            why.push(format!(
+                "chunked vs in-memory streamed fits diverged: max|Δβ| = {:.3e}",
+                parity.chunked_vs_memory_max_abs
+            ));
+        }
+        if parity.vs_classic_max_abs > PARITY_TOL {
+            why.push(format!(
+                "streamed fit off the classic optimum: max|Δβ| = {:.3e} > {PARITY_TOL:.0e}",
+                parity.vs_classic_max_abs
+            ));
+        }
+        return Err(FastSurvivalError::PerfRegression(format!(
+            "bigfit gate failed: {}",
+            why.join("; ")
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_document_parses_and_carries_gates() {
+        let parity = ParityReport {
+            n: 2000,
+            p: 40,
+            chunked_vs_memory_max_abs: 0.0,
+            bitwise_identical: true,
+            vs_classic_max_abs: 3.2e-10,
+        };
+        assert!(parity.ok());
+        let cfg = SyntheticConfig { n: 1000, p: 10, rho: 0.2, k: 3, s: 0.1, seed: 42 };
+        let doc = render_json(
+            true, &cfg, 128, 80_000, 80_000, 40_000, Some(30_000), true, 1.5, 2.5, 6, 8,
+            true, 123.4, &parity, true,
+        );
+        let parsed = json::parse(&doc).unwrap();
+        assert!(parsed.get("passed").unwrap().as_bool().unwrap());
+        let mem = parsed.get("memory_gate").unwrap();
+        assert_eq!(mem.get("bound_bytes").unwrap().as_usize().unwrap(), 40_000);
+        assert!(mem.get("passed").unwrap().as_bool().unwrap());
+        let pg = parsed.get("parity_gate").unwrap();
+        assert!(pg.get("bitwise_identical").unwrap().as_bool().unwrap());
+        assert!(pg.get("passed").unwrap().as_bool().unwrap());
+        // An exceeded bound flips both gate and top-level verdicts.
+        let doc = render_json(
+            true, &cfg, 128, 80_000, 80_000, 40_000, Some(50_000), false, 1.5, 2.5, 6, 8,
+            true, 123.4, &parity, false,
+        );
+        let parsed = json::parse(&doc).unwrap();
+        assert!(!parsed.get("passed").unwrap().as_bool().unwrap());
+        assert!(!parsed.get("memory_gate").unwrap().get("passed").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn parity_report_gates_each_axis() {
+        let mut r = ParityReport {
+            n: 1,
+            p: 1,
+            chunked_vs_memory_max_abs: 0.0,
+            bitwise_identical: true,
+            vs_classic_max_abs: 0.0,
+        };
+        assert!(r.ok());
+        r.vs_classic_max_abs = 1e-6;
+        assert!(!r.ok());
+        r.vs_classic_max_abs = 0.0;
+        r.chunked_vs_memory_max_abs = 1e-9;
+        assert!(!r.ok());
+    }
+}

@@ -6,6 +6,7 @@
 //! threads through [`crate::optim::Optimizer::fit_from`] and the
 //! [`crate::api::CoxFit`] builder, so there is exactly one fit path.
 
+pub mod bigfit;
 pub mod cv;
 pub mod experiments;
 pub mod perf;

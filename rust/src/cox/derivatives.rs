@@ -7,7 +7,7 @@
 //! All events within a tie group share one risk set, so each group
 //! contributes its moment expression once, scaled by its event count.
 
-use super::problem::CoxProblem;
+use super::problem::{CoxProblem, TieGroup};
 use super::state::CoxState;
 use crate::linalg::Matrix;
 use crate::util::parallel::{num_threads, par_map_indices, par_map_workers};
@@ -157,11 +157,18 @@ impl Workspace {
 /// d1 only (Eq. 7). One fused pass; the cheapest quantity the quadratic
 /// surrogate needs per coordinate update.
 pub fn coord_d1(problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
-    let col = problem.x.col(l);
-    let w = &state.w;
+    coord_d1_col(&problem.groups, &state.w, problem.x.col(l), problem.xt_delta[l])
+}
+
+/// [`coord_d1`] from explicit risk-set parts (tie groups, stabilized
+/// weights, a column slice, and that column's Xᵀδ entry) instead of a
+/// [`CoxProblem`]. The out-of-core driver streams columns from disk and
+/// calls this with the identical accumulation order, so chunked and
+/// in-memory derivative passes are bit-for-bit the same computation.
+pub fn coord_d1_col(groups: &[TieGroup], w: &[f64], col: &[f64], xt_delta_l: f64) -> f64 {
     let (mut s0, mut s1) = (0.0_f64, 0.0_f64);
     let mut d1 = 0.0_f64;
-    for g in &problem.groups {
+    for g in groups {
         for k in g.start..g.end {
             let wk = w[k];
             s0 += wk;
@@ -171,16 +178,24 @@ pub fn coord_d1(problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
             d1 += g.n_events as f64 * (s1 / s0);
         }
     }
-    d1 - problem.xt_delta[l]
+    d1 - xt_delta_l
 }
 
 /// d1 and d2 (Eqs. 7–8). Used by the cubic surrogate and by screening.
 pub fn coord_d1_d2(problem: &CoxProblem, state: &CoxState, l: usize) -> (f64, f64) {
-    let col = problem.x.col(l);
-    let w = &state.w;
+    coord_d1_d2_col(&problem.groups, &state.w, problem.x.col(l), problem.xt_delta[l])
+}
+
+/// [`coord_d1_d2`] from explicit risk-set parts; see [`coord_d1_col`].
+pub fn coord_d1_d2_col(
+    groups: &[TieGroup],
+    w: &[f64],
+    col: &[f64],
+    xt_delta_l: f64,
+) -> (f64, f64) {
     let (mut s0, mut s1, mut s2) = (0.0_f64, 0.0_f64, 0.0_f64);
     let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
-    for g in &problem.groups {
+    for g in groups {
         for k in g.start..g.end {
             let wk = w[k];
             let x = col[k];
@@ -196,7 +211,7 @@ pub fn coord_d1_d2(problem: &CoxProblem, state: &CoxState, l: usize) -> (f64, f6
             d2 += ne * (m2 - m1 * m1);
         }
     }
-    (d1 - problem.xt_delta[l], d2)
+    (d1 - xt_delta_l, d2)
 }
 
 /// Full first/second/third derivatives (Eqs. 7–9) in one O(n) pass.

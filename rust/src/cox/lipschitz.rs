@@ -21,6 +21,19 @@ pub struct LipschitzPair {
 
 const INV_6_SQRT3: f64 = 0.09622504486493764; // 1 / (6 √3)
 
+impl LipschitzPair {
+    /// Fold in one event group's contribution: `ne` events whose risk-set
+    /// range of the coordinate is `range`. The one place the Theorem-3.4
+    /// formulas live — [`coord_lipschitz`] and the chunked store's
+    /// streaming column-stats pass both accumulate through here, in the
+    /// same group order, so their constants agree bit for bit.
+    #[inline]
+    pub fn add_group(&mut self, ne: f64, range: f64) {
+        self.l2 += ne * 0.25 * range * range;
+        self.l3 += ne * INV_6_SQRT3 * range * range * range;
+    }
+}
+
 /// Lipschitz constants for one coordinate, O(n).
 pub fn coord_lipschitz(problem: &CoxProblem, l: usize) -> LipschitzPair {
     let col = problem.x.col(l);
@@ -38,10 +51,7 @@ pub fn coord_lipschitz(problem: &CoxProblem, l: usize) -> LipschitzPair {
             }
         }
         if g.n_events > 0 {
-            let range = hi - lo;
-            let ne = g.n_events as f64;
-            out.l2 += ne * 0.25 * range * range;
-            out.l3 += ne * INV_6_SQRT3 * range * range * range;
+            out.add_group(g.n_events as f64, hi - lo);
         }
     }
     out

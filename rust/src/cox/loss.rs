@@ -1,6 +1,6 @@
 //! Negative log partial likelihood (Eq. 4), Breslow convention for ties.
 
-use super::problem::CoxProblem;
+use super::problem::{CoxProblem, TieGroup};
 use super::state::CoxState;
 
 /// ℓ(β) = Σ_{i: δ_i=1} [ log Σ_{j∈R_i} e^{η_j} − η_i ].
@@ -15,9 +15,23 @@ pub fn loss(problem: &CoxProblem, state: &CoxState) -> f64 {
 /// Loss from explicit (η, w = exp(η − shift), shift) arrays — used by
 /// line searches evaluating trial points without committing state.
 pub fn loss_for(problem: &CoxProblem, eta: &[f64], w: &[f64], shift: f64) -> f64 {
+    loss_for_parts(&problem.groups, &problem.delta, eta, w, shift)
+}
+
+/// [`loss_for`] from explicit risk-set parts (tie groups and the sorted
+/// event indicators) instead of a [`CoxProblem`] — shared with the
+/// out-of-core chunked driver, which holds groups/δ/η/w in memory but
+/// never materializes the feature matrix.
+pub fn loss_for_parts(
+    groups: &[TieGroup],
+    delta: &[f64],
+    eta: &[f64],
+    w: &[f64],
+    shift: f64,
+) -> f64 {
     let mut s0 = 0.0_f64;
     let mut total = 0.0_f64;
-    for g in &problem.groups {
+    for g in groups {
         for k in g.start..g.end {
             s0 += w[k];
         }
@@ -27,7 +41,7 @@ pub fn loss_for(problem: &CoxProblem, eta: &[f64], w: &[f64], shift: f64) -> f64
         let log_denom = s0.ln() + shift;
         total += g.n_events as f64 * log_denom;
         for i in g.start..g.end {
-            if problem.delta[i] == 1.0 {
+            if delta[i] == 1.0 {
                 total -= eta[i];
             }
         }

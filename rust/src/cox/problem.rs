@@ -41,6 +41,50 @@ pub struct CoxProblem {
     pub col_binary: Vec<bool>,
 }
 
+/// The canonical sample order for Cox fitting: descending observation
+/// time, stable on ties by original index. Both [`CoxProblem::try_new`]
+/// and the out-of-core store writer sort through this one function, so a
+/// pre-sorted `.fsds` store and an in-memory problem built from the same
+/// data agree row for row.
+///
+/// Precondition: every time is finite (validated by both callers before
+/// sorting, which makes the comparison total).
+pub fn descending_time_order(time: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..time.len()).collect();
+    order.sort_by(|&a, &b| {
+        time[b]
+            .partial_cmp(&time[a])
+            .expect("times validated finite")
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Tie groups over descending-sorted times (`delta` in the same order,
+/// 1.0 = event). Returns `(groups, group_of)`. Shared by
+/// [`CoxProblem::try_new`] and the chunked store reader so both derive
+/// the identical risk-set structure from identical sorted times.
+pub fn build_tie_groups(time: &[f64], delta: &[f64]) -> (Vec<TieGroup>, Vec<usize>) {
+    let n = time.len();
+    let mut groups = Vec::new();
+    let mut group_of = vec![0usize; n];
+    let mut start = 0;
+    while start < n {
+        let mut end = start + 1;
+        while end < n && time[end] == time[start] {
+            end += 1;
+        }
+        let n_events = delta[start..end].iter().map(|&d| d as usize).sum();
+        let g = groups.len();
+        for item in group_of.iter_mut().take(end).skip(start) {
+            *item = g;
+        }
+        groups.push(TieGroup { start, end, n_events });
+        start = end;
+    }
+    (groups, group_of)
+}
+
 impl CoxProblem {
     /// Build from a dataset (copies + sorts; O(n log n + np)), panicking
     /// on invalid input. Trusted internal callers only; fallible paths
@@ -70,38 +114,17 @@ impl CoxProblem {
                 k % n.max(1)
             )));
         }
-        let mut order: Vec<usize> = (0..n).collect();
         // Descending time; stable on ties by original index for
         // determinism. Finiteness was validated above, so the comparison
         // is total.
-        order.sort_by(|&a, &b| {
-            ds.time[b]
-                .partial_cmp(&ds.time[a])
-                .expect("times validated finite")
-                .then(a.cmp(&b))
-        });
+        let order = descending_time_order(&ds.time);
 
         let x = ds.x.select_rows(&order);
         let time: Vec<f64> = order.iter().map(|&i| ds.time[i]).collect();
         let delta: Vec<f64> = order.iter().map(|&i| if ds.event[i] { 1.0 } else { 0.0 }).collect();
 
         // Tie groups over equal times.
-        let mut groups = Vec::new();
-        let mut group_of = vec![0usize; n];
-        let mut start = 0;
-        while start < n {
-            let mut end = start + 1;
-            while end < n && time[end] == time[start] {
-                end += 1;
-            }
-            let n_events = delta[start..end].iter().map(|&d| d as usize).sum();
-            let g = groups.len();
-            for item in group_of.iter_mut().take(end).skip(start) {
-                *item = g;
-            }
-            groups.push(TieGroup { start, end, n_events });
-            start = end;
-        }
+        let (groups, group_of) = build_tie_groups(&time, &delta);
 
         let xt_delta = x.tr_matvec(&delta);
         let n_events = delta.iter().map(|&d| d as usize).sum();

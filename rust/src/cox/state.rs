@@ -54,6 +54,37 @@ impl CoxState {
         }
     }
 
+    /// State at β = 0 for an explicit problem shape — the out-of-core
+    /// driver has no [`CoxProblem`], only a chunked store with the same
+    /// sorted-sample geometry.
+    pub fn zeros_sized(n: usize, p: usize) -> Self {
+        CoxState {
+            beta: vec![0.0; p],
+            eta: vec![0.0; n],
+            w: vec![1.0; n],
+            shift: 0.0,
+            updates_since_refresh: 0,
+            version: next_version(),
+        }
+    }
+
+    /// State from an explicit (β, η = Xβ) pair computed elsewhere — the
+    /// chunked store driver accumulates η with one pass over on-disk
+    /// feature chunks and hands it over here. `refresh_w` derives w and
+    /// the stabilization shift exactly as [`CoxState::from_beta`] does.
+    pub fn from_eta(beta: Vec<f64>, eta: Vec<f64>) -> Self {
+        let mut s = CoxState {
+            beta,
+            eta,
+            w: Vec::new(),
+            shift: 0.0,
+            updates_since_refresh: 0,
+            version: 0,
+        };
+        s.refresh_w();
+        s
+    }
+
     /// State at a given β (recomputes η = Xβ).
     pub fn from_beta(problem: &CoxProblem, beta: &[f64]) -> Self {
         assert_eq!(beta.len(), problem.p());
@@ -101,13 +132,22 @@ impl CoxState {
     /// numerically indistinguishable while skipping the transcendental.
     /// Warm-started path solves spend most of their steps here.
     pub fn update_coord(&mut self, problem: &CoxProblem, l: usize, delta: f64) {
+        self.update_coord_col(problem.x.col(l), problem.col_binary[l], l, delta)
+    }
+
+    /// [`CoxState::update_coord`] from an explicit column slice (and its
+    /// all-binary flag) instead of a [`CoxProblem`] — the out-of-core
+    /// driver streams columns from disk and applies the identical
+    /// incremental update, so chunked and in-memory fits share every
+    /// floating-point operation on this hot path.
+    pub fn update_coord_col(&mut self, col: &[f64], binary: bool, l: usize, delta: f64) {
+        debug_assert_eq!(col.len(), self.eta.len());
         if delta == 0.0 {
             return;
         }
         self.beta[l] += delta;
-        let col = problem.x.col(l);
         let mut max_eta = f64::NEG_INFINITY;
-        if problem.col_binary[l] {
+        if binary {
             // Binary column (the Sec-4.2 binarized regime): every nonzero
             // entry shares one multiplicative factor exp(Δ) — one exp()
             // for the whole update instead of one per sample.
@@ -235,6 +275,32 @@ mod tests {
         assert_eq!(c.version(), s.version());
         c.update_coord(&p, 1, 0.1);
         assert_ne!(c.version(), s.version());
+    }
+
+    #[test]
+    fn column_slice_update_matches_problem_update() {
+        let p = problem();
+        let mut a = CoxState::zeros(&p);
+        let mut b = CoxState::zeros_sized(p.n(), p.p());
+        for (l, d) in [(0usize, 0.7), (1, -0.3), (0, 0.1)] {
+            a.update_coord(&p, l, d);
+            b.update_coord_col(p.x.col(l), p.col_binary[l], l, d);
+        }
+        assert_eq!(a.eta, b.eta);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.shift, b.shift);
+    }
+
+    #[test]
+    fn from_eta_matches_from_beta() {
+        let p = problem();
+        let beta = vec![0.3, -0.2];
+        let want = CoxState::from_beta(&p, &beta);
+        let got = CoxState::from_eta(beta.clone(), p.x.matvec(&beta));
+        assert_eq!(got.eta, want.eta);
+        assert_eq!(got.w, want.w);
+        assert_eq!(got.shift, want.shift);
     }
 
     #[test]

@@ -1,11 +1,20 @@
-//! Minimal CSV reader for survival data (no external crates offline).
+//! Streaming CSV reader for survival data (no external crates offline).
 //!
 //! Expected layout: a header row, a `time` column, an `event` column
-//! (0/1 or true/false), and numeric feature columns. Used when a real
-//! dataset CSV is dropped into `data/` to replace a stand-in.
+//! (0/1 or true/false), and numeric feature columns. The reader goes
+//! through any `BufRead` one line at a time, so the out-of-core store
+//! converter can turn a CSV of any size into a `.fsds` store without
+//! ever holding the file — let alone the parsed matrix — in memory.
+//! [`load_survival_csv`] is the materializing convenience on top.
+//!
+//! Every parse error carries the 1-based physical line number of the
+//! offending row.
 
 use super::survival::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
 use crate::linalg::Matrix;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 
 /// Split one CSV line honoring double quotes. Public because the
@@ -33,7 +42,7 @@ pub fn split_csv_line(line: &str) -> Vec<String> {
     out
 }
 
-fn parse_event(s: &str) -> Result<bool, String> {
+fn parse_event(s: &str) -> std::result::Result<bool, String> {
     match s.trim().to_ascii_lowercase().as_str() {
         "1" | "true" | "yes" | "dead" | "event" => Ok(true),
         "0" | "false" | "no" | "censored" => Ok(false),
@@ -44,63 +53,176 @@ fn parse_event(s: &str) -> Result<bool, String> {
     }
 }
 
-/// Load a survival CSV. Column named `time` (or first column) is the
-/// observation time; column named `event`/`status`/`delta` (or second)
-/// is the indicator; everything else is a numeric feature.
-pub fn load_survival_csv(path: &Path, name: &str) -> Result<SurvivalDataset, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-    let header: Vec<String> = split_csv_line(lines.next().ok_or("empty file")?)
-        .into_iter()
-        .map(|h| h.trim().to_string())
-        .collect();
+/// Which columns of the header play which role.
+#[derive(Clone, Debug)]
+pub struct CsvColumns {
+    /// Header cells as written.
+    pub header: Vec<String>,
+    /// Index of the observation-time column.
+    pub time_col: usize,
+    /// Index of the event-indicator column.
+    pub event_col: usize,
+    /// Indices of the feature columns, in header order.
+    pub feat_cols: Vec<usize>,
+}
 
-    let lower: Vec<String> = header.iter().map(|h| h.to_ascii_lowercase()).collect();
-    let time_col = lower.iter().position(|h| h == "time" || h == "t").unwrap_or(0);
-    let event_col = lower
-        .iter()
-        .position(|h| h == "event" || h == "status" || h == "delta" || h == "censor")
-        .unwrap_or(1);
-    if time_col == event_col {
-        return Err("time and event columns coincide".into());
-    }
-
-    let feat_cols: Vec<usize> =
-        (0..header.len()).filter(|&i| i != time_col && i != event_col).collect();
-
-    let mut time = Vec::new();
-    let mut event = Vec::new();
-    let mut feats: Vec<Vec<f64>> = vec![Vec::new(); feat_cols.len()];
-    for (lineno, line) in lines.enumerate() {
-        let cells = split_csv_line(line);
-        if cells.len() != header.len() {
-            return Err(format!(
-                "row {} has {} cells, expected {}",
-                lineno + 2,
-                cells.len(),
-                header.len()
+impl CsvColumns {
+    /// Resolve roles from a header: column named `time`/`t` (or the
+    /// first) is the observation time; `event`/`status`/`delta`/`censor`
+    /// (or the second) is the indicator; everything else is a feature.
+    fn resolve(header: Vec<String>) -> Result<CsvColumns> {
+        let lower: Vec<String> = header.iter().map(|h| h.to_ascii_lowercase()).collect();
+        let time_col = lower.iter().position(|h| h == "time" || h == "t").unwrap_or(0);
+        let event_col = lower
+            .iter()
+            .position(|h| h == "event" || h == "status" || h == "delta" || h == "censor")
+            .unwrap_or(1);
+        if header.len() < 2 || time_col == event_col {
+            return Err(FastSurvivalError::InvalidData(
+                "CSV needs distinct time and event columns".into(),
             ));
         }
-        time.push(
-            cells[time_col]
-                .trim()
-                .parse::<f64>()
-                .map_err(|_| format!("bad time at row {}", lineno + 2))?,
-        );
-        event.push(parse_event(&cells[event_col])?);
-        for (k, &c) in feat_cols.iter().enumerate() {
-            feats[k].push(
-                cells[c]
-                    .trim()
-                    .parse::<f64>()
-                    .map_err(|_| format!("bad feature {:?} at row {}", header[c], lineno + 2))?,
-            );
-        }
+        let feat_cols: Vec<usize> =
+            (0..header.len()).filter(|&i| i != time_col && i != event_col).collect();
+        Ok(CsvColumns { header, time_col, event_col, feat_cols })
     }
 
+    /// Feature names in feature order.
+    pub fn feature_names(&self) -> Vec<String> {
+        self.feat_cols.iter().map(|&c| self.header[c].clone()).collect()
+    }
+}
+
+/// A streaming survival-CSV reader: header parsed up front, then one
+/// data row per [`SurvivalCsvReader::next_row`] call, reusing the
+/// caller's feature buffer. Blank lines are skipped; line numbers in
+/// errors are 1-based physical lines of the underlying reader.
+pub struct SurvivalCsvReader<R: BufRead> {
+    reader: R,
+    /// Resolved column roles (public: converters report schemas).
+    pub columns: CsvColumns,
+    line: String,
+    lineno: usize,
+}
+
+/// Open `path` and parse the CSV header, with typed I/O errors naming
+/// the path (a missing file is an error message, not a panic).
+pub fn open_survival_csv(path: &Path) -> Result<SurvivalCsvReader<BufReader<File>>> {
+    let file = File::open(path)
+        .map_err(|e| FastSurvivalError::io(format!("opening {}", path.display()), e))?;
+    SurvivalCsvReader::new(BufReader::new(file))
+}
+
+impl<R: BufRead> SurvivalCsvReader<R> {
+    /// Parse the header (first non-blank line) and resolve column roles.
+    pub fn new(reader: R) -> Result<Self> {
+        let mut r = SurvivalCsvReader {
+            reader,
+            columns: CsvColumns {
+                header: Vec::new(),
+                time_col: 0,
+                event_col: 1,
+                feat_cols: Vec::new(),
+            },
+            line: String::new(),
+            lineno: 0,
+        };
+        let header = match r.next_nonblank_line()? {
+            Some(line) => split_csv_line(line).into_iter().map(|h| h.trim().to_string()).collect(),
+            None => return Err(FastSurvivalError::InvalidData("empty CSV file".into())),
+        };
+        r.columns = CsvColumns::resolve(header)?;
+        Ok(r)
+    }
+
+    /// Number of feature columns.
+    pub fn p(&self) -> usize {
+        self.columns.feat_cols.len()
+    }
+
+    /// Advance to the next non-blank line; `Ok(None)` at EOF. The
+    /// returned slice borrows the internal line buffer.
+    fn next_nonblank_line(&mut self) -> Result<Option<&str>> {
+        loop {
+            self.line.clear();
+            let read = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| FastSurvivalError::io("reading CSV", e))?;
+            if read == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            if !self.line.trim().is_empty() {
+                // Borrow through self.line (NLL: reborrow after the loop).
+                break;
+            }
+        }
+        Ok(Some(self.line.trim_end_matches(&['\n', '\r'][..])))
+    }
+
+    /// Parse the next data row: clears and fills `feats` (feature order)
+    /// and returns `(time, event)`; `Ok(None)` at end of file. Every
+    /// error message names the 1-based line number.
+    pub fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        let lineno;
+        let cells = {
+            let line = match self.next_nonblank_line()? {
+                Some(l) => l,
+                None => return Ok(None),
+            };
+            let cells = split_csv_line(line);
+            lineno = self.lineno;
+            cells
+        };
+        let cols = &self.columns;
+        if cells.len() != cols.header.len() {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "line {lineno}: {} cells, expected {}",
+                cells.len(),
+                cols.header.len()
+            )));
+        }
+        let time = cells[cols.time_col].trim().parse::<f64>().map_err(|_| {
+            FastSurvivalError::InvalidData(format!(
+                "line {lineno}: bad time value {:?}",
+                cells[cols.time_col]
+            ))
+        })?;
+        let event = parse_event(&cells[cols.event_col])
+            .map_err(|m| FastSurvivalError::InvalidData(format!("line {lineno}: {m}")))?;
+        feats.clear();
+        for &c in &cols.feat_cols {
+            feats.push(cells[c].trim().parse::<f64>().map_err(|_| {
+                FastSurvivalError::InvalidData(format!(
+                    "line {lineno}: bad feature {:?} value {:?}",
+                    cols.header[c], cells[c]
+                ))
+            })?);
+        }
+        Ok(Some((time, event)))
+    }
+}
+
+/// Load a survival CSV into memory by streaming it row by row (the file
+/// itself is never held whole). Column roles as in [`CsvColumns`].
+pub fn load_survival_csv(path: &Path, name: &str) -> Result<SurvivalDataset> {
+    let mut reader = open_survival_csv(path)?;
+    let feature_names = reader.columns.feature_names();
+    let mut feats: Vec<Vec<f64>> = vec![Vec::new(); reader.p()];
+    let mut time = Vec::new();
+    let mut event = Vec::new();
+    let mut row = Vec::with_capacity(reader.p());
+    while let Some((t, e)) = reader.next_row(&mut row)? {
+        time.push(t);
+        event.push(e);
+        for (col, &v) in feats.iter_mut().zip(row.iter()) {
+            col.push(v);
+        }
+    }
     let x = Matrix::from_columns(&feats);
     let mut ds = SurvivalDataset::new(x, time, event, name);
-    ds.feature_names = feat_cols.iter().map(|&c| header[c].clone()).collect();
+    ds.feature_names = feature_names;
     Ok(ds)
 }
 
@@ -142,14 +264,53 @@ mod tests {
     }
 
     #[test]
-    fn errors_on_ragged_rows() {
-        let p = write_temp("time,event,a\n1.0,1\n");
-        assert!(load_survival_csv(&p, "t").is_err());
+    fn errors_carry_line_numbers() {
+        // Ragged row on physical line 3 (line 1 header, line 2 fine).
+        let p = write_temp("time,event,a\n1.0,1,2\n1.0,1\n");
+        let err = load_survival_csv(&p, "t").unwrap_err();
+        assert!(err.to_string().contains("line 3"), "got: {err}");
+        // Bad event value on line 2.
+        let p = write_temp("time,event,a\n1.0,maybe,2\n");
+        let err = load_survival_csv(&p, "t").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "got: {err}");
+        assert!(err.to_string().contains("maybe"), "got: {err}");
+        // Bad time on line 4 with a blank line in between: physical
+        // line numbers count blanks.
+        let p = write_temp("time,event,a\n1.0,1,2\n\nbadtime,0,3\n");
+        let err = load_survival_csv(&p, "t").unwrap_err();
+        assert!(err.to_string().contains("line 4"), "got: {err}");
+        // Bad feature value names the column.
+        let p = write_temp("time,event,age\n1.0,1,young\n");
+        let err = load_survival_csv(&p, "t").unwrap_err();
+        assert!(err.to_string().contains("age") && err.to_string().contains("line 2"));
     }
 
     #[test]
-    fn errors_on_bad_event() {
-        let p = write_temp("time,event,a\n1.0,maybe,2\n");
-        assert!(load_survival_csv(&p, "t").is_err());
+    fn missing_file_is_a_typed_io_error() {
+        let err = load_survival_csv(Path::new("/nonexistent/nope.csv"), "t").unwrap_err();
+        assert!(matches!(err, FastSurvivalError::Io { .. }), "got: {err}");
+        assert!(err.to_string().contains("nope.csv"));
+    }
+
+    #[test]
+    fn streaming_reader_yields_rows_in_order() {
+        let p = write_temp("time,event,a,b\n5.0,1,1,2\n\n3.0,0,3,4\n");
+        let mut r = open_survival_csv(&p).unwrap();
+        assert_eq!(r.p(), 2);
+        assert_eq!(r.columns.feature_names(), vec!["a", "b"]);
+        let mut row = Vec::new();
+        assert_eq!(r.next_row(&mut row).unwrap(), Some((5.0, true)));
+        assert_eq!(row, vec![1.0, 2.0]);
+        assert_eq!(r.next_row(&mut row).unwrap(), Some((3.0, false)));
+        assert_eq!(row, vec![3.0, 4.0]);
+        assert_eq!(r.next_row(&mut row).unwrap(), None);
+    }
+
+    #[test]
+    fn crlf_line_endings_parse() {
+        let p = write_temp("time,event,a\r\n2.0,1,7\r\n");
+        let ds = load_survival_csv(&p, "t").unwrap();
+        assert_eq!(ds.time, vec![2.0]);
+        assert_eq!(ds.x.get(0, 0), 7.0);
     }
 }

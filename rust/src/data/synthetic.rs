@@ -61,6 +61,24 @@ pub fn true_beta(p: usize, k: usize) -> Vec<f64> {
     beta
 }
 
+/// One observation from the Eq. (28)–(31) process given the linear
+/// predictor η and two uniforms: `v ∈ (0, 1]` drives the death time,
+/// `censor ∈ [0, 1)` the censoring time. Shared by the materializing
+/// [`generate`] and the streaming [`SyntheticStream`] so both apply the
+/// identical observation model (see the event-convention note below).
+#[inline]
+fn observe(eta: f64, s: f64, v: f64, censor: f64) -> (f64, bool) {
+    let death = (-(v.ln()) / eta.exp()).powf(s);
+    // Event convention: the paper's Eq. (30) literally reads
+    // δ = 1{t_i > C_i}, but taken literally the observed "events"
+    // happen at censoring times C ~ U(0,1) independent of x, which
+    // destroys support recovery entirely (we verified: F1 = 0).
+    // We therefore use the conventional δ = 1{death <= censor}
+    // (failure observed), matching the abess generator [71] the
+    // paper builds on. See DESIGN.md "Substitutions".
+    (death.min(censor), death <= censor)
+}
+
 /// Generate a dataset per Appendix C.2.
 pub fn generate(cfg: &SyntheticConfig) -> SurvivalDataset {
     let mut rng = Rng::new(cfg.seed);
@@ -85,17 +103,9 @@ pub fn generate(cfg: &SyntheticConfig) -> SurvivalDataset {
     for &e in &eta {
         // Death time: (-log V / exp(η))^s, V ~ U(0,1).
         let v = 1.0 - rng.uniform(); // (0, 1]
-        let death = (-(v.ln()) / e.exp()).powf(cfg.s);
         let censor = rng.uniform();
-        // Event convention: the paper's Eq. (30) literally reads
-        // δ = 1{t_i > C_i}, but taken literally the observed "events"
-        // happen at censoring times C ~ U(0,1) independent of x, which
-        // destroys support recovery entirely (we verified: F1 = 0).
-        // We therefore use the conventional δ = 1{death <= censor}
-        // (failure observed), matching the abess generator [71] the
-        // paper builds on. See DESIGN.md "Substitutions".
-        let observed_event = death <= censor;
-        time.push(death.min(censor));
+        let (t, observed_event) = observe(e, cfg.s, v, censor);
+        time.push(t);
         event.push(observed_event);
     }
 
@@ -103,6 +113,100 @@ pub fn generate(cfg: &SyntheticConfig) -> SurvivalDataset {
     ds.name = format!("synthetic_n{}_p{}_rho{}", cfg.n, cfg.p, cfg.rho);
     ds.true_beta = Some(beta);
     ds
+}
+
+/// Chunk-at-a-time Appendix-C.2 generator: yields rows in fixed order
+/// with O(chunk · p) working memory, so a benchmark dataset of any n can
+/// be streamed straight into a `.fsds` store without the O(n·p)
+/// allocation [`generate`] makes.
+///
+/// Determinism: row i's draws depend only on the seed and on i (features
+/// and survival times come from two independent sequential streams), so
+/// the produced data is identical for every chunking of the same n —
+/// asking for chunks of 7 or of 4096 yields the same dataset. The
+/// sequence intentionally differs from [`generate`]'s (which draws all
+/// features before any survival time and cannot be streamed).
+#[derive(Clone, Debug)]
+pub struct SyntheticStream {
+    cfg: SyntheticConfig,
+    beta: Vec<f64>,
+    feat_rng: Rng,
+    time_rng: Rng,
+    produced: usize,
+}
+
+impl SyntheticStream {
+    pub fn new(cfg: &SyntheticConfig) -> Self {
+        SyntheticStream {
+            cfg: cfg.clone(),
+            beta: true_beta(cfg.p, cfg.k),
+            feat_rng: Rng::new(cfg.seed),
+            // An independent stream for the survival times: xoshiro
+            // seeded through SplitMix64, so any two seeds give
+            // uncorrelated sequences.
+            time_rng: Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15),
+            produced: 0,
+        }
+    }
+
+    /// The planted k-sparse ground truth.
+    pub fn true_beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Rows not yet produced.
+    pub fn remaining(&self) -> usize {
+        self.cfg.n - self.produced
+    }
+
+    /// Produce the next `min(max_rows, remaining)` rows, appending
+    /// row-major features to `x` and per-row observations to
+    /// `time`/`event`. Returns the number of rows appended (0 at end).
+    pub fn next_chunk(
+        &mut self,
+        max_rows: usize,
+        x: &mut Vec<f64>,
+        time: &mut Vec<f64>,
+        event: &mut Vec<bool>,
+    ) -> usize {
+        let rows = max_rows.min(self.remaining());
+        for _ in 0..rows {
+            let row = ar1_row(self.cfg.p, self.cfg.rho, &mut self.feat_rng);
+            let mut eta = 0.0;
+            for (j, &v) in row.iter().enumerate() {
+                if self.beta[j] != 0.0 {
+                    eta += self.beta[j] * v;
+                }
+            }
+            x.extend_from_slice(&row);
+            let v = 1.0 - self.time_rng.uniform(); // (0, 1]
+            let censor = self.time_rng.uniform();
+            let (t, e) = observe(eta, self.cfg.s, v, censor);
+            time.push(t);
+            event.push(e);
+        }
+        self.produced += rows;
+        rows
+    }
+
+    /// Materialize the whole stream (tests and small conversions).
+    pub fn materialize(mut self) -> SurvivalDataset {
+        let cfg = self.cfg.clone();
+        let mut x = Vec::with_capacity(cfg.n * cfg.p);
+        let mut time = Vec::with_capacity(cfg.n);
+        let mut event = Vec::with_capacity(cfg.n);
+        while self.next_chunk(4096, &mut x, &mut time, &mut event) > 0 {}
+        let mut m = Matrix::zeros(cfg.n, cfg.p);
+        for i in 0..cfg.n {
+            for j in 0..cfg.p {
+                m.set(i, j, x[i * cfg.p + j]);
+            }
+        }
+        let mut ds = SurvivalDataset::new(m, time, event, "synthetic");
+        ds.name = format!("synthetic_stream_n{}_p{}_rho{}", cfg.n, cfg.p, cfg.rho);
+        ds.true_beta = Some(self.beta);
+        ds
+    }
 }
 
 /// The three Fig-2 / Table-1 configurations (SyntheticHighCorrHighDim1–3).
@@ -162,6 +266,35 @@ mod tests {
         assert!(d.time.iter().all(|&t| t > 0.0 && t.is_finite()));
         let ev = d.n_events();
         assert!(ev > 0 && ev < d.n(), "events={ev}");
+    }
+
+    #[test]
+    fn stream_is_chunk_size_invariant_and_deterministic() {
+        let cfg = SyntheticConfig { n: 137, p: 11, rho: 0.6, k: 3, s: 0.1, seed: 5 };
+        // Two different chunkings must produce identical data.
+        let mut a = SyntheticStream::new(&cfg);
+        let (mut xa, mut ta, mut ea) = (Vec::new(), Vec::new(), Vec::new());
+        while a.next_chunk(7, &mut xa, &mut ta, &mut ea) > 0 {}
+        let mut b = SyntheticStream::new(&cfg);
+        let (mut xb, mut tb, mut eb) = (Vec::new(), Vec::new(), Vec::new());
+        while b.next_chunk(64, &mut xb, &mut tb, &mut eb) > 0 {}
+        assert_eq!(xa.len(), 137 * 11);
+        assert_eq!(xa, xb);
+        assert_eq!(ta, tb);
+        assert_eq!(ea, eb);
+        // Materialize agrees with the raw chunks.
+        let ds = SyntheticStream::new(&cfg).materialize();
+        assert_eq!(ds.n(), 137);
+        assert_eq!(ds.p(), 11);
+        assert_eq!(ds.time, ta);
+        for i in 0..5 {
+            for j in 0..11 {
+                assert_eq!(ds.x.get(i, j), xa[i * 11 + j]);
+            }
+        }
+        assert!(ds.time.iter().all(|&t| t > 0.0 && t.is_finite()));
+        let ev = ds.n_events();
+        assert!(ev > 0 && ev < ds.n(), "events={ev}");
     }
 
     #[test]

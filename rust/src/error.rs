@@ -40,6 +40,10 @@ pub enum FastSurvivalError {
     },
     /// Model persistence (JSON encode/decode) failed.
     Persist(String),
+    /// The on-disk columnar dataset store (`.fsds`) is malformed:
+    /// wrong magic/version, corrupt or truncated header, payload size
+    /// mismatch, or unsorted times.
+    Store(String),
     /// The model-serving subsystem failed: artifact-directory layout
     /// violations, bad `name@version` specs, registry reload problems,
     /// or scoring-request validation.
@@ -71,6 +75,7 @@ impl fmt::Display for FastSurvivalError {
             FastSurvivalError::PerfRegression(m) => write!(f, "performance regression: {m}"),
             FastSurvivalError::Io { context, source } => write!(f, "{context}: {source}"),
             FastSurvivalError::Persist(m) => write!(f, "model persistence error: {m}"),
+            FastSurvivalError::Store(m) => write!(f, "dataset store error: {m}"),
             FastSurvivalError::Serve(m) => write!(f, "serving error: {m}"),
         }
     }

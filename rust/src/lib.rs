@@ -20,7 +20,11 @@
 //!   path-based cross-validation, and the experiment harness.
 //!   Prediction-time workloads go through [`serve`]: a hot-swappable
 //!   model registry, a batched scoring engine with micro-batching, and
-//!   a zero-dependency multi-threaded HTTP scoring server.
+//!   a zero-dependency multi-threaded HTTP scoring server. Datasets too
+//!   big for RAM go through [`store`]: a sorted columnar on-disk format
+//!   (`.fsds`) with streaming ingestion and a chunked two-phase trainer
+//!   (sampled-block warmup + exact out-of-core surrogate CD) that
+//!   matches the in-memory fit bit for bit.
 
 pub mod api;
 pub mod baselines;
@@ -35,6 +39,7 @@ pub mod path;
 pub mod runtime;
 pub mod select;
 pub mod serve;
+pub mod store;
 pub mod util;
 
 pub use api::{CoxFit, CoxModel, CoxPath, EngineKind, OptimizerKind};

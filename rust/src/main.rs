@@ -6,6 +6,8 @@
 //!   select       cardinality-constrained variable selection
 //!   experiment   regenerate a paper table/figure (see DESIGN.md)
 //!   datasets     list datasets (Table 1 view)
+//!   convert      stream a CSV or the synthetic generator into a .fsds store
+//!   bigfit       tracked out-of-core workload + gates → BENCH_bigfit.json
 //!   bench        fixed-seed hot-path benchmarks → BENCH_optim.json
 //!   serve        HTTP scoring server over a model-artifact directory
 //!   score        offline batch scoring: CSV in → CSV out, streamed
@@ -14,7 +16,12 @@
 //! Examples:
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
 //!   fastsurvival fit --dataset synthetic --engine xla
+//!   fastsurvival fit --csv data/mydata.csv --l2 0.5
+//!   fastsurvival fit --store data/big.fsds --method quadratic --l2 1
 //!   fastsurvival fit --dataset synthetic --save artifacts/serving/churn@1.json
+//!   fastsurvival convert --input data/mydata.csv --out data/mydata.fsds
+//!   fastsurvival convert --synthetic --n 1000000 --p 100 --out data/big.fsds
+//!   fastsurvival bigfit --quick --out BENCH_bigfit.json
 //!   fastsurvival path --dataset synthetic --lambdas 50 --save results/path.json
 //!   fastsurvival path --kind cardinality --k 10 --cv 5 --criterion cindex
 //!   fastsurvival select --dataset synthetic --method beam --k 15
@@ -43,12 +50,25 @@ use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, Variabl
 use fastsurvival::serve::registry::ModelRegistry;
 use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
 use fastsurvival::serve::{serve, smoke, ServeConfig};
+use fastsurvival::store::{convert_csv, convert_synthetic};
 use fastsurvival::util::args::Args;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-fn load_dataset(args: &Args) -> SurvivalDataset {
+/// Load the dataset a subcommand asked for: `--csv <file>` streams a
+/// real CSV (missing/garbled files are typed errors, not panics),
+/// otherwise `--dataset` picks the synthetic generator or a Table-1
+/// stand-in.
+fn load_dataset(args: &Args) -> Result<SurvivalDataset> {
+    if let Some(csv) = args.get("csv") {
+        let path = Path::new(csv);
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv".to_string());
+        return fastsurvival::data::csv::load_survival_csv(path, &name);
+    }
     let name = args.str_or("dataset", "synthetic");
     let seed = args.get_or::<u64>("seed", 0);
     if name == "synthetic" {
@@ -60,13 +80,13 @@ fn load_dataset(args: &Args) -> SurvivalDataset {
             s: 0.1,
             seed,
         };
-        return generate(&cfg);
+        return Ok(generate(&cfg));
     }
     let scale = args.get_or::<f64>("scale", 0.25);
     let mut spec = datasets::spec(&name);
     spec.n = ((spec.n as f64 * scale) as usize).max(200);
     let raw = datasets::generate_stand_in(&spec, seed);
-    if args.flag("raw") {
+    Ok(if args.flag("raw") {
         raw
     } else {
         binarize(
@@ -76,13 +96,18 @@ fn load_dataset(args: &Args) -> SurvivalDataset {
                 ..Default::default()
             },
         )
-    }
+    })
 }
 
 /// The `fit` subcommand: one `CoxFit` builder call regardless of
-/// optimizer or engine.
+/// optimizer or engine; `--store <file.fsds>` routes to the out-of-core
+/// chunked fit instead of loading a dataset.
 fn cmd_fit(args: &Args) -> Result<()> {
-    let ds = load_dataset(args);
+    if let Some(store) = args.get("store") {
+        let store = store.to_string();
+        return cmd_fit_store(args, &store);
+    }
+    let ds = load_dataset(args)?;
     let optimizer = OptimizerKind::from_name(&args.str_or("method", "cubic"))?;
     let engine = EngineKind::from_name(&args.str_or("engine", "native"))?;
     println!(
@@ -146,10 +171,113 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Out-of-core fit: `fit --store big.fsds`.
+fn cmd_fit_store(args: &Args, store: &str) -> Result<()> {
+    let optimizer = OptimizerKind::from_name(&args.str_or("method", "quadratic"))?;
+    // Plumb --engine through so a non-native request is the builder's
+    // typed Unsupported error rather than a silently native run.
+    let engine = EngineKind::from_name(&args.str_or("engine", "native"))?;
+    println!(
+        "fit: store={store} optimizer={} engine={} (out-of-core)",
+        optimizer.name(),
+        engine.name()
+    );
+    let model = CoxFit::new()
+        .l1(args.get_or("l1", 0.0))
+        .l2(args.get_or("l2", 0.0))
+        .optimizer(optimizer)
+        .engine(engine)
+        .max_iters(args.get_or("iters", 200))
+        .tol(args.get_or("tol", 1e-9))
+        .stop_kkt(args.get_or("stop-kkt", 0.0))
+        .budget_secs(args.get_or("budget-secs", 0.0))
+        .fit_store(Path::new(store))?;
+    let d = model.diagnostics();
+    println!(
+        "{}: final objective {:.6} after {} sweeps over n={} in {:.1} ms \
+         (converged={}, budget_exhausted={})",
+        d.optimizer,
+        d.objective_value,
+        d.iterations,
+        d.n_train,
+        d.wall_secs * 1e3,
+        d.converged,
+        d.budget_exhausted,
+    );
+    if let Some(peak) = fastsurvival::util::mem::peak_rss_bytes() {
+        println!("peak RSS {:.1} MB", peak as f64 / 1e6);
+    }
+    let nonzero = model.nonzero_coefficients(1e-10);
+    println!("nonzero coefficients: {} / {}", nonzero.len(), model.p());
+    if args.flag("print-beta") {
+        for c in &nonzero {
+            println!("  {} = {:+.6}", c.name, c.value);
+        }
+    }
+    if let Some(path) = args.get("save") {
+        let path = Path::new(path);
+        model.save(path)?;
+        let loaded = CoxModel::load(path)?;
+        println!("saved model to {} ({} features)", path.display(), loaded.p());
+    }
+    Ok(())
+}
+
+/// The `convert` subcommand: stream rows into a `.fsds` columnar store —
+/// `--input <csv>` or `--synthetic`, never materializing the matrix.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let out = args.get("out").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("convert requires --out <file.fsds>".into())
+    })?;
+    let out_path = Path::new(out);
+    let chunk_rows = args.get_or("chunk-rows", 0usize); // 0 = format default
+    let t0 = Instant::now();
+    let summary = if args.flag("synthetic") {
+        let cfg = SyntheticConfig {
+            n: args.get_or("n", 100_000),
+            p: args.get_or("p", 100),
+            rho: args.get_or("rho", 0.2),
+            k: args.get_or("true-k", 10),
+            s: 0.1,
+            seed: args.get_or("seed", 0),
+        };
+        println!("convert: streaming synthetic n={} p={} -> {out}", cfg.n, cfg.p);
+        convert_synthetic(&cfg, out_path, chunk_rows)?
+    } else if let Some(input) = args.get("input") {
+        let input_path = Path::new(input);
+        let name = args.str_or(
+            "name",
+            &input_path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "csv".to_string()),
+        );
+        println!("convert: streaming {input} -> {out}");
+        convert_csv(input_path, out_path, chunk_rows, &name)?
+    } else {
+        return Err(FastSurvivalError::InvalidConfig(
+            "convert requires --input <data.csv> or --synthetic".into(),
+        ));
+    };
+    println!(
+        "convert: wrote {} — n={} p={} events={} ({} chunks of <={} rows, {:.1} MB) \
+         in {:.1}s",
+        out,
+        summary.n,
+        summary.p,
+        summary.n_events,
+        summary.n_chunks,
+        summary.chunk_rows,
+        summary.bytes as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 /// The `path` subcommand: whole solution families through the
 /// warm-started screened path engine, with optional path-based CV.
 fn cmd_path(args: &Args) -> Result<()> {
-    let ds = load_dataset(args);
+    let ds = load_dataset(args)?;
     let kind = args.str_or("kind", "l1");
     let optimizer = OptimizerKind::from_name(&args.str_or("method", "cubic"))?;
     let builder = CoxFit::new()
@@ -272,7 +400,7 @@ fn cmd_path(args: &Args) -> Result<()> {
 }
 
 fn cmd_select(args: &Args) -> Result<()> {
-    let ds = load_dataset(args);
+    let ds = load_dataset(args)?;
     let pr = CoxProblem::try_new(&ds)?;
     let k = args.get_or("k", 10);
     let method = args.str_or("method", "beam");
@@ -429,11 +557,13 @@ fn cmd_score(args: &Args) -> Result<()> {
 const USAGE: &str = "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
 usage: fastsurvival <subcommand> [--options]\n\n\
 subcommands:\n\
-  fit          train a CPH model (--dataset --method --engine --l1 --l2 --save)\n\
+  fit          train a CPH model (--dataset|--csv|--store --method --engine --l1 --l2 --save)\n\
   path         solution paths: λ grid or k = 1..K (--kind --lambdas --k --cv)\n\
   select       cardinality-constrained variable selection (--method --k)\n\
   experiment   regenerate a paper table/figure (--id --scale)\n\
   datasets     list datasets (Table 1 view)\n\
+  convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --chunk-rows)\n\
+  bigfit       out-of-core workload + RSS/parity gates → BENCH_bigfit.json (--quick)\n\
   bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check)\n\
   serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
@@ -448,6 +578,8 @@ fn main() -> Result<()> {
         Some("select") => cmd_select(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("datasets") => cmd_datasets(&args),
+        Some("convert") => cmd_convert(&args),
+        Some("bigfit") => fastsurvival::coordinator::bigfit::run(&args),
         Some("bench") => fastsurvival::coordinator::perf::run(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
@@ -461,7 +593,8 @@ fn main() -> Result<()> {
         Some(other) => Err(FastSurvivalError::Unknown {
             kind: "subcommand",
             name: other.to_string(),
-            expected: "fit|path|select|experiment|datasets|bench|serve|score|serve-smoke",
+            expected:
+                "fit|path|select|experiment|datasets|convert|bigfit|bench|serve|score|serve-smoke",
         }),
     }
 }

@@ -15,8 +15,9 @@ use super::objective::{FitConfig, FitResult, Stopper};
 use super::prox::{cubic_l1_step, cubic_step, quad_l1_step, quad_step};
 use super::quadratic::quad_coord_step_ws;
 use super::Objective;
-use crate::cox::derivatives::{coord_d1_d2_ws, coord_d1_ws, Workspace};
+use crate::cox::derivatives::{coord_d1_col, coord_d1_d2_col, coord_d1_d2_ws, coord_d1_ws, Workspace};
 use crate::cox::lipschitz::LipschitzPair;
+use crate::cox::problem::TieGroup;
 use crate::cox::{CoxProblem, CoxState};
 
 /// Steps whose magnitude is below `STEP_SNAP · (1 + |β_l|)` are treated
@@ -129,6 +130,77 @@ impl SurrogateKind {
         };
         let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
         state.update_coord(problem, l, delta);
+        (delta, residual)
+    }
+
+    /// Parts-level sibling of [`SurrogateKind::step_residual`]: the same
+    /// derivative assembly, KKT-residual formula, prox dispatch, and
+    /// [`STEP_SNAP`] no-op snapping, fed from an explicit column slice
+    /// plus risk-set parts instead of a [`CoxProblem`]/[`Workspace`] —
+    /// the out-of-core driver's per-coordinate step. Living here (and
+    /// delegating to the same prox and parts-kernels) keeps one source
+    /// of truth: an edit to the engine's step semantics cannot silently
+    /// diverge the chunked fit. Derivatives always take the classic
+    /// fused pass (there is no η-version cache without a workspace),
+    /// which is bit-identical to a fresh-workspace
+    /// [`SurrogateKind::step_residual`] call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_residual_col(
+        self,
+        groups: &[TieGroup],
+        xt_delta_l: f64,
+        state: &mut CoxState,
+        col: &[f64],
+        binary: bool,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+    ) -> (f64, f64) {
+        let beta_l = state.beta[l];
+        let (a, b) = match self {
+            SurrogateKind::Quadratic => {
+                let b = lip.l2 + 2.0 * obj.l2;
+                if b <= 0.0 {
+                    // Flat (constant) coordinate: no information, no move.
+                    return (0.0, 0.0);
+                }
+                let d1 = coord_d1_col(groups, &state.w, col, xt_delta_l);
+                (d1 + 2.0 * obj.l2 * beta_l, b)
+            }
+            SurrogateKind::Cubic => {
+                let (d1, d2) = coord_d1_d2_col(groups, &state.w, col, xt_delta_l);
+                (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2)
+            }
+        };
+        let residual = if beta_l != 0.0 {
+            (a + obj.l1 * beta_l.signum()).abs()
+        } else {
+            (a.abs() - obj.l1).max(0.0)
+        };
+        if residual <= skip_below {
+            return (0.0, residual);
+        }
+        let delta = match self {
+            SurrogateKind::Quadratic => {
+                if obj.l1 > 0.0 {
+                    quad_l1_step(a, b, beta_l, obj.l1)
+                } else {
+                    quad_step(a, b)
+                }
+            }
+            SurrogateKind::Cubic => {
+                if b <= 0.0 && lip.l3 <= 0.0 {
+                    0.0
+                } else if obj.l1 > 0.0 {
+                    cubic_l1_step(a, b, lip.l3, beta_l, obj.l1)
+                } else {
+                    cubic_step(a, b, lip.l3)
+                }
+            }
+        };
+        let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
+        state.update_coord_col(col, binary, l, delta);
         (delta, residual)
     }
 }
@@ -299,6 +371,48 @@ mod tests {
             })
             .fold(0.0_f64, f64::max);
         assert!(max_res > 1e-1, "zero state should violate KKT: {max_res}");
+    }
+
+    #[test]
+    fn parts_level_step_matches_problem_level_step_bitwise() {
+        // The out-of-core driver steps through step_residual_col; a
+        // fresh-workspace step_residual takes the identical classic
+        // derivative pass, so whole sweeps must agree bit for bit.
+        let pr = random_problem(60, 5, 99);
+        let lip = all_lipschitz(&pr);
+        let obj = Objective { l1: 0.7, l2: 0.3 };
+        for kind in [SurrogateKind::Quadratic, SurrogateKind::Cubic] {
+            let mut sa = CoxState::zeros(&pr);
+            let mut sb = CoxState::zeros(&pr);
+            for _sweep in 0..4 {
+                for l in 0..pr.p() {
+                    let (da, ra) = kind.step_residual(
+                        &pr,
+                        &mut sa,
+                        &mut Workspace::default(),
+                        l,
+                        lip[l],
+                        obj,
+                        0.0,
+                    );
+                    let (db, rb) = kind.step_residual_col(
+                        &pr.groups,
+                        pr.xt_delta[l],
+                        &mut sb,
+                        pr.x.col(l),
+                        pr.col_binary[l],
+                        l,
+                        lip[l],
+                        obj,
+                        0.0,
+                    );
+                    assert_eq!(da.to_bits(), db.to_bits(), "{kind:?} l={l}: Δ {da} vs {db}");
+                    assert_eq!(ra.to_bits(), rb.to_bits(), "{kind:?} l={l}: r {ra} vs {rb}");
+                }
+            }
+            assert_eq!(sa.beta, sb.beta);
+            assert_eq!(sa.eta, sb.eta);
+        }
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Bounded-memory reader over a `.fsds` store.
+//!
+//! [`ChunkedDataset::open`] reads the header and the O(n) payload
+//! columns (time, event), rebuilds the risk-set structure with the same
+//! [`build_tie_groups`] the in-memory [`crate::cox::CoxProblem`] uses,
+//! then makes a
+//! single streaming pass over the feature chunks to derive the O(p)
+//! per-column constants (Xᵀδ, Theorem-3.4 Lipschitz pairs, binary
+//! flags) — accumulating per column in ascending row order, i.e. the
+//! exact floating-point sequence the in-memory kernels produce. After
+//! `open`, memory holds O(n + p) bookkeeping plus one reusable I/O
+//! buffer; the n×p matrix stays on disk.
+
+use super::format::{self, StoreHeader, HEADER_LEN};
+use super::source::{CoxData, StoreMeta};
+use crate::cox::lipschitz::LipschitzPair;
+use crate::cox::problem::{build_tie_groups, TieGroup};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::linalg::Matrix;
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Guard for [`ChunkedDataset::to_dataset`]: materializing is meant for
+/// tests and spot checks, not for the workloads the store exists for.
+const MATERIALIZE_CAP: u64 = 1 << 28; // 256M doubles = 2 GiB
+
+/// An open `.fsds` store: O(n) metadata in memory, features on disk.
+/// Metadata is held behind an [`Arc`] so the fit driver can keep a
+/// handle across its mutable chunk/column reads without copying the
+/// O(n) vectors.
+pub struct ChunkedDataset {
+    file: File,
+    path: PathBuf,
+    header: StoreHeader,
+    meta: Arc<StoreMeta>,
+    /// Reusable byte buffer for chunk/column reads.
+    bytebuf: Vec<u8>,
+}
+
+impl ChunkedDataset {
+    /// Open and validate a store. Header corruption, truncation, and
+    /// unsorted payloads all surface as typed
+    /// [`FastSurvivalError::Store`] errors; a missing file is a typed
+    /// I/O error naming the path.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = File::open(path)
+            .map_err(|e| FastSurvivalError::io(format!("opening {}", path.display()), e))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| FastSurvivalError::io(format!("stat {}", path.display()), e))?
+            .len();
+        let mut head = [0u8; HEADER_LEN];
+        format::read_exact(&mut file, &mut head, "header")?;
+        let header = StoreHeader::decode(&head)?;
+        if file_len != header.expected_file_len() {
+            return Err(FastSurvivalError::Store(format!(
+                "{} is {} bytes but the header implies {} — truncated or corrupt",
+                path.display(),
+                file_len,
+                header.expected_file_len()
+            )));
+        }
+        let (n, p) = (header.n, header.p);
+
+        // Meta block, then the O(n) payload columns, read buffered.
+        let mut r = BufReader::new(&mut file);
+        let name = format::read_string(&mut r, "dataset name")?;
+        let n_names = format::read_u32(&mut r, "feature-name count")? as usize;
+        if n_names != p {
+            return Err(FastSurvivalError::Store(format!(
+                "meta block names {n_names} features, header says {p}"
+            )));
+        }
+        let mut feature_names = Vec::with_capacity(p);
+        for _ in 0..p {
+            feature_names.push(format::read_string(&mut r, "feature name")?);
+        }
+        let means = format::read_f64_vec(&mut r, p, "standardization means")?;
+        let stds = format::read_f64_vec(&mut r, p, "standardization stds")?;
+        // The payload is read sequentially from here, so the meta block
+        // must end exactly where the header says the payload starts — a
+        // corrupt length field would silently misalign every read below.
+        let consumed = HEADER_LEN as u64
+            + 8
+            + name.len() as u64
+            + feature_names.iter().map(|f| 4 + f.len() as u64).sum::<u64>()
+            + 16 * p as u64;
+        if consumed != header.payload_offset {
+            return Err(FastSurvivalError::Store(format!(
+                "meta block ends at {consumed} but payload starts at {} — corrupt meta",
+                header.payload_offset
+            )));
+        }
+
+        let time = format::read_f64_vec(&mut r, n, "time column")?;
+        for (k, &t) in time.iter().enumerate() {
+            if !t.is_finite() {
+                return Err(FastSurvivalError::Store(format!(
+                    "non-finite time {t} at sorted row {k}"
+                )));
+            }
+            if k > 0 && t > time[k - 1] {
+                return Err(FastSurvivalError::Store(format!(
+                    "times not sorted descending at row {k} ({} then {t})",
+                    time[k - 1]
+                )));
+            }
+        }
+        let mut event_bytes = vec![0u8; n];
+        format::read_exact(&mut r, &mut event_bytes, "event column")?;
+        drop(r);
+        let mut event = Vec::with_capacity(n);
+        for (k, &b) in event_bytes.iter().enumerate() {
+            match b {
+                0 => event.push(false),
+                1 => event.push(true),
+                other => {
+                    return Err(FastSurvivalError::Store(format!(
+                        "invalid event byte {other} at sorted row {k}"
+                    )))
+                }
+            }
+        }
+        let delta: Vec<f64> = event.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+        // The per-row group_of map is discarded: the chunked kernels
+        // only walk `groups`, and O(n) indices would sit against the
+        // peak-RSS budget unused.
+        let (groups, _group_of) = build_tie_groups(&time, &delta);
+        let n_events = event.iter().filter(|&&e| e).count();
+
+        // Streaming stats pass over the feature chunks, before the meta
+        // is frozen behind its Arc.
+        let mut bytebuf = Vec::new();
+        let (xt_delta, lipschitz, col_binary) =
+            derive_column_stats(&mut file, &mut bytebuf, &header, &delta, &groups)?;
+
+        let meta = StoreMeta {
+            n,
+            p,
+            chunk_rows: header.chunk_rows,
+            n_chunks: header.n_chunks(),
+            name,
+            feature_names,
+            means,
+            stds,
+            time,
+            delta,
+            event,
+            groups,
+            n_events,
+            xt_delta,
+            lipschitz,
+            col_binary,
+        };
+        Ok(ChunkedDataset {
+            file,
+            path: path.to_path_buf(),
+            header,
+            meta: Arc::new(meta),
+            bytebuf,
+        })
+    }
+
+    /// The path this store was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Materialize the whole store as an in-memory [`SurvivalDataset`]
+    /// in sorted (descending-time) order — tests and spot checks only;
+    /// refuses stores past a size cap.
+    pub fn to_dataset(&mut self) -> Result<SurvivalDataset> {
+        if self.meta.n as u64 * self.meta.p as u64 > MATERIALIZE_CAP {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "refusing to materialize {}×{} store into RAM (use the chunked fit path)",
+                self.meta.n, self.meta.p
+            )));
+        }
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(self.meta.p);
+        let mut col = Vec::new();
+        for l in 0..self.meta.p {
+            self.load_col(l, &mut col)?;
+            cols.push(col.clone());
+        }
+        let x = Matrix::from_columns(&cols);
+        let mut ds =
+            SurvivalDataset::new(x, self.meta.time.clone(), self.meta.event.clone(), "store");
+        ds.name = self.meta.name.clone();
+        ds.feature_names = self.meta.feature_names.clone();
+        Ok(ds)
+    }
+}
+
+impl CoxData for ChunkedDataset {
+    fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    fn meta_arc(&self) -> Arc<StoreMeta> {
+        Arc::clone(&self.meta)
+    }
+
+    fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize> {
+        let rows = self.header.rows_in_chunk(c);
+        let doubles = rows * self.header.p;
+        buf.clear();
+        read_doubles_append(
+            &mut self.file,
+            &mut self.bytebuf,
+            self.header.col_segment_offset(c, 0),
+            doubles,
+            buf,
+        )?;
+        Ok(rows)
+    }
+
+    fn load_col(&mut self, l: usize, buf: &mut Vec<f64>) -> Result<()> {
+        // The per-coordinate hot path of the streamed fit: decode each
+        // chunk's column segment straight into the caller's buffer — no
+        // intermediate vector, no second copy.
+        buf.clear();
+        buf.reserve(self.header.n);
+        for c in 0..self.header.n_chunks() {
+            let rows = self.header.rows_in_chunk(c);
+            read_doubles_append(
+                &mut self.file,
+                &mut self.bytebuf,
+                self.header.col_segment_offset(c, l),
+                rows,
+                buf,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Seek + read `count` doubles at `offset`, decoding them onto the end
+/// of `out` (the byte buffer is caller-owned and reused across reads).
+fn read_doubles_append(
+    file: &mut File,
+    bytebuf: &mut Vec<u8>,
+    offset: u64,
+    count: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    bytebuf.clear();
+    bytebuf.resize(count * 8, 0);
+    file.seek(SeekFrom::Start(offset))
+        .map_err(|e| FastSurvivalError::io("seeking store", e))?;
+    file.read_exact(bytebuf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FastSurvivalError::Store("truncated store while reading feature data".into())
+        } else {
+            FastSurvivalError::io("reading store feature data", e)
+        }
+    })?;
+    out.reserve(count);
+    for chunk in bytebuf.chunks_exact(8) {
+        out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(())
+}
+
+/// One streaming pass over every chunk deriving Xᵀδ, the Lipschitz
+/// pairs, and the binary flags, with per-column carry state so each
+/// column accumulates in ascending row order — bit-identical to the
+/// in-memory `tr_matvec` / `coord_lipschitz` passes. Runs before the
+/// metadata is frozen behind its Arc.
+fn derive_column_stats(
+    file: &mut File,
+    bytebuf: &mut Vec<u8>,
+    header: &StoreHeader,
+    delta: &[f64],
+    groups: &[TieGroup],
+) -> Result<(Vec<f64>, Vec<LipschitzPair>, Vec<bool>)> {
+    let (n, p) = (header.n, header.p);
+    // ne of the group ending at each row (0.0 = not a group end, or
+    // an event-free group — both add nothing, matching the in-memory
+    // `if g.n_events > 0` skip).
+    let mut group_end_ne = vec![0.0_f64; n];
+    for g in groups {
+        if g.n_events > 0 {
+            group_end_ne[g.end - 1] = g.n_events as f64;
+        }
+    }
+    let mut xt_delta = vec![0.0_f64; p];
+    let mut lipschitz = vec![LipschitzPair::default(); p];
+    let mut col_binary = vec![true; p];
+    let mut hi = vec![f64::NEG_INFINITY; p];
+    let mut lo = vec![f64::INFINITY; p];
+    let mut chunk: Vec<f64> = Vec::new();
+    for c in 0..header.n_chunks() {
+        let rows = header.rows_in_chunk(c);
+        chunk.clear();
+        read_doubles_append(file, bytebuf, header.col_segment_offset(c, 0), rows * p, &mut chunk)?;
+        let r0 = c * header.chunk_rows;
+        for j in 0..p {
+            let col = &chunk[j * rows..(j + 1) * rows];
+            let (mut xtd, mut h, mut l) = (xt_delta[j], hi[j], lo[j]);
+            let mut lip = lipschitz[j];
+            let mut binary = col_binary[j];
+            for (k, &x) in col.iter().enumerate() {
+                let global = r0 + k;
+                xtd += x * delta[global];
+                if x > h {
+                    h = x;
+                }
+                if x < l {
+                    l = x;
+                }
+                if x != 0.0 && x != 1.0 {
+                    binary = false;
+                }
+                let ne = group_end_ne[global];
+                if ne > 0.0 {
+                    lip.add_group(ne, h - l);
+                }
+            }
+            xt_delta[j] = xtd;
+            hi[j] = h;
+            lo[j] = l;
+            lipschitz[j] = lip;
+            col_binary[j] = binary;
+        }
+    }
+    Ok((xt_delta, lipschitz, col_binary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cox::CoxProblem;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::store::writer::{write_store, DatasetRows};
+    use std::path::PathBuf;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fs_store_dataset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.fsds"))
+    }
+
+    fn small_store(tag: &str, n: usize, p: usize, seed: u64) -> (SurvivalDataset, PathBuf) {
+        let ds = generate(&SyntheticConfig { n, p, rho: 0.3, k: 2.min(p), s: 0.1, seed });
+        let out = temp_path(tag);
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &out, 16, "t").unwrap();
+        (ds, out)
+    }
+
+    #[test]
+    fn derived_stats_match_in_memory_problem_bitwise() {
+        let (ds, path) = small_store("stats", 77, 5, 11);
+        let pr = CoxProblem::new(&ds);
+        let store = ChunkedDataset::open(&path).unwrap();
+        let m = store.meta();
+        assert_eq!(m.n, 77);
+        assert_eq!(m.p, 5);
+        assert_eq!(m.time, pr.time);
+        assert_eq!(m.delta, pr.delta);
+        assert_eq!(m.groups, pr.groups);
+        assert_eq!(m.n_events, pr.n_events);
+        assert_eq!(m.xt_delta, pr.xt_delta, "Xᵀδ must be bitwise identical");
+        assert_eq!(m.col_binary, pr.col_binary);
+        let lip = crate::cox::lipschitz::all_lipschitz(&pr);
+        assert_eq!(m.lipschitz, lip, "Lipschitz constants must be bitwise identical");
+    }
+
+    #[test]
+    fn chunk_and_column_reads_match_materialized_matrix() {
+        let (ds, path) = small_store("reads", 53, 4, 7);
+        let pr = CoxProblem::new(&ds);
+        let mut store = ChunkedDataset::open(&path).unwrap();
+        let mut col = Vec::new();
+        for l in 0..4 {
+            store.load_col(l, &mut col).unwrap();
+            assert_eq!(col, pr.x.col(l), "column {l}");
+        }
+        let mut chunk = Vec::new();
+        let rows = store.load_chunk(3, &mut chunk).unwrap();
+        assert_eq!(rows, 53 - 48);
+        for j in 0..4 {
+            assert_eq!(&chunk[j * rows..(j + 1) * rows], &pr.x.col(j)[48..53]);
+        }
+        // Materialization equals the sorted problem bitwise.
+        let back = store.to_dataset().unwrap();
+        assert_eq!(back.x.data, pr.x.data);
+        assert_eq!(back.time, pr.time);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_stores_are_typed_errors() {
+        let (_, path) = small_store("corrupt", 30, 3, 3);
+        let bytes = std::fs::read(&path).unwrap();
+
+        // Truncated payload.
+        let cut = temp_path("cut");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(matches!(
+            ChunkedDataset::open(&cut),
+            Err(FastSurvivalError::Store(_))
+        ));
+
+        // Flipped header bit (checksum).
+        let mut corrupt = bytes.clone();
+        corrupt[10] ^= 0x10;
+        let cpath = temp_path("flip");
+        std::fs::write(&cpath, &corrupt).unwrap();
+        let err = ChunkedDataset::open(&cpath).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::Store(_)));
+
+        // Not a store at all.
+        let junk = temp_path("junk");
+        std::fs::write(&junk, b"time,event\n1,0\n").unwrap();
+        assert!(matches!(
+            ChunkedDataset::open(&junk),
+            Err(FastSurvivalError::Store(_))
+        ));
+
+        // Missing file: typed Io error naming the path.
+        let missing = temp_path("missing-never-written");
+        let err = ChunkedDataset::open(&missing).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::Io { .. }));
+        assert!(err.to_string().contains("missing-never-written"));
+    }
+}

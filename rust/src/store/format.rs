@@ -1,0 +1,346 @@
+//! The `.fsds` on-disk columnar dataset format.
+//!
+//! Layout (all integers and floats little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"FSDS"
+//! 4       4     format version (u32) = 1
+//! 8       8     n   — number of samples (u64)
+//! 16      8     p   — number of feature columns (u64)
+//! 24      8     chunk_rows — rows per feature chunk (u64)
+//! 32      8     payload_offset — absolute offset of time[] (u64)
+//! 40      8     FNV-1a checksum of bytes 0..40 (u64)
+//! 48      ..    meta block: dataset name (u32 len + utf8),
+//!               feature names (u32 count, then u32 len + utf8 each),
+//!               one-pass standardization stats: means[p], stds[p]
+//! payload_offset:
+//!               time[n]  f64, sorted descending (CoxProblem order)
+//!               event[n] u8 (1 = failure observed, 0 = censored)
+//!               feature chunks: for chunk c covering sorted rows
+//!               [c·chunk_rows, min(n, (c+1)·chunk_rows)), each column's
+//!               segment stored contiguously (column-major within the
+//!               chunk) — so one column of one chunk is a single
+//!               contiguous read, and a full-column scan over all chunks
+//!               costs exactly n·8 bytes of I/O.
+//! ```
+//!
+//! Rows are pre-sorted by the writer with the engine's canonical
+//! [`crate::cox::problem::descending_time_order`], so risk sets are
+//! prefixes of the on-disk order and the chunked reader can run the
+//! exact risk-set recurrences without ever materializing the matrix.
+//!
+//! Every malformed-file condition (bad magic, unsupported version,
+//! checksum mismatch, truncation, unsorted times) is a typed
+//! [`FastSurvivalError::Store`].
+
+use crate::error::{FastSurvivalError, Result};
+use std::io::Read;
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"FSDS";
+/// Current format version.
+pub const FORMAT_VERSION: u32 = 1;
+/// Fixed header length in bytes (before the meta block).
+pub const HEADER_LEN: usize = 48;
+/// Default rows per feature chunk: 8192 × p doubles per chunk keeps the
+/// working buffer in the low megabytes for p in the hundreds while
+/// amortizing per-chunk seek overhead.
+pub const DEFAULT_CHUNK_ROWS: usize = 8192;
+/// Cap on any length field read from a header (names, counts) so a
+/// corrupt file cannot request a multi-gigabyte allocation.
+const MAX_META_LEN: u64 = 1 << 24;
+
+/// FNV-1a 64-bit hash — the header self-check.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The decoded fixed header: store geometry plus payload location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StoreHeader {
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    /// Absolute offset where `time[]` starts (end of the meta block).
+    pub payload_offset: u64,
+}
+
+impl StoreHeader {
+    /// Number of feature chunks.
+    pub fn n_chunks(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            (self.n + self.chunk_rows - 1) / self.chunk_rows
+        }
+    }
+
+    /// Rows in chunk `c` (only the last chunk may be short).
+    pub fn rows_in_chunk(&self, c: usize) -> usize {
+        let start = c * self.chunk_rows;
+        self.chunk_rows.min(self.n.saturating_sub(start))
+    }
+
+    /// Absolute offset where the feature chunks start.
+    pub fn chunk_base(&self) -> u64 {
+        // time[n] f64 + event[n] u8.
+        self.payload_offset + self.n as u64 * 8 + self.n as u64
+    }
+
+    /// Absolute offset of column `j`'s segment within chunk `c`. All
+    /// chunks before `c` are full (`chunk_rows` rows), so the prefix is
+    /// exactly `c · chunk_rows · p` doubles.
+    pub fn col_segment_offset(&self, c: usize, j: usize) -> u64 {
+        debug_assert!(c < self.n_chunks() && j < self.p);
+        let prefix = (c as u64) * (self.chunk_rows as u64) * (self.p as u64);
+        let within = (j as u64) * (self.rows_in_chunk(c) as u64);
+        self.chunk_base() + 8 * (prefix + within)
+    }
+
+    /// Total file length this header implies.
+    pub fn expected_file_len(&self) -> u64 {
+        self.chunk_base() + 8 * (self.n as u64) * (self.p as u64)
+    }
+
+    /// Encode the fixed header (checksum included).
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut buf = [0u8; HEADER_LEN];
+        buf[0..4].copy_from_slice(&MAGIC);
+        buf[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf[8..16].copy_from_slice(&(self.n as u64).to_le_bytes());
+        buf[16..24].copy_from_slice(&(self.p as u64).to_le_bytes());
+        buf[24..32].copy_from_slice(&(self.chunk_rows as u64).to_le_bytes());
+        buf[32..40].copy_from_slice(&self.payload_offset.to_le_bytes());
+        let crc = fnv1a(&buf[0..40]);
+        buf[40..48].copy_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Decode and validate a fixed header.
+    pub fn decode(buf: &[u8]) -> Result<StoreHeader> {
+        if buf.len() < HEADER_LEN {
+            return Err(FastSurvivalError::Store(format!(
+                "truncated header: {} bytes, need {HEADER_LEN}",
+                buf.len()
+            )));
+        }
+        if buf[0..4] != MAGIC {
+            return Err(FastSurvivalError::Store(format!(
+                "bad magic {:?} (not an .fsds store)",
+                &buf[0..4]
+            )));
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(FastSurvivalError::Store(format!(
+                "unsupported store format version {version} (this build reads {FORMAT_VERSION})"
+            )));
+        }
+        let crc_stored = u64::from_le_bytes(buf[40..48].try_into().unwrap());
+        let crc = fnv1a(&buf[0..40]);
+        if crc != crc_stored {
+            return Err(FastSurvivalError::Store(format!(
+                "header checksum mismatch (stored {crc_stored:#018x}, computed {crc:#018x}) — \
+                 corrupt file"
+            )));
+        }
+        let n = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let p = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let chunk_rows = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        let payload_offset = u64::from_le_bytes(buf[32..40].try_into().unwrap());
+        if n == 0 || p == 0 || chunk_rows == 0 {
+            return Err(FastSurvivalError::Store(format!(
+                "degenerate store geometry (n={n}, p={p}, chunk_rows={chunk_rows})"
+            )));
+        }
+        if payload_offset < HEADER_LEN as u64 {
+            return Err(FastSurvivalError::Store(format!(
+                "payload offset {payload_offset} overlaps the header"
+            )));
+        }
+        // Hostile-geometry guard: the FNV self-check is trivially
+        // recomputable, so a crafted header can carry any n/p/chunk_rows.
+        // Cap each dimension and the cell count so every downstream
+        // offset/length computation (chunk_base, col_segment_offset,
+        // expected_file_len, `vec![0u8; n*8]` reads) is provably far from
+        // u64/usize overflow — a bad header must stay a typed Store
+        // error, never a wrapped multiplication or an absurd allocation.
+        const MAX_DIM: u64 = 1 << 48;
+        const MAX_CELLS: u64 = 1 << 53;
+        if n > MAX_DIM || p > MAX_DIM || chunk_rows > MAX_DIM || payload_offset > MAX_DIM {
+            return Err(FastSurvivalError::Store(format!(
+                "implausible store geometry (n={n}, p={p}, chunk_rows={chunk_rows}, \
+                 payload_offset={payload_offset}) — corrupt header"
+            )));
+        }
+        match n.checked_mul(p) {
+            Some(cells) if cells <= MAX_CELLS => {}
+            _ => {
+                return Err(FastSurvivalError::Store(format!(
+                    "implausible store size n×p = {n}×{p} — corrupt header"
+                )))
+            }
+        }
+        Ok(StoreHeader {
+            n: n as usize,
+            p: p as usize,
+            chunk_rows: chunk_rows as usize,
+            payload_offset,
+        })
+    }
+}
+
+// ------------------------------------------------------- read helpers
+
+pub(crate) fn read_exact(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FastSurvivalError::Store(format!("truncated store while reading {what}"))
+        } else {
+            FastSurvivalError::io(format!("reading store {what}"), e)
+        }
+    })
+}
+
+pub(crate) fn read_u32(r: &mut impl Read, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn read_f64_vec(r: &mut impl Read, len: usize, what: &str) -> Result<Vec<f64>> {
+    let mut bytes = vec![0u8; len * 8];
+    read_exact(r, &mut bytes, what)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub(crate) fn read_string(r: &mut impl Read, what: &str) -> Result<String> {
+    let len = read_u32(r, what)? as u64;
+    if len > MAX_META_LEN {
+        return Err(FastSurvivalError::Store(format!(
+            "implausible {what} length {len} — corrupt meta block"
+        )));
+    }
+    let mut bytes = vec![0u8; len as usize];
+    read_exact(r, &mut bytes, what)?;
+    String::from_utf8(bytes)
+        .map_err(|_| FastSurvivalError::Store(format!("{what} is not valid UTF-8")))
+}
+
+// ------------------------------------------------------ write helpers
+
+pub(crate) fn push_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn push_f64_slice(out: &mut Vec<u8>, vs: &[f64]) {
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode the meta block: dataset name, feature names, streaming
+/// standardization stats. Its length fixes `payload_offset`.
+pub(crate) fn encode_meta(
+    name: &str,
+    feature_names: &[String],
+    means: &[f64],
+    stds: &[f64],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_string(&mut out, name);
+    out.extend_from_slice(&(feature_names.len() as u32).to_le_bytes());
+    for fname in feature_names {
+        push_string(&mut out, fname);
+    }
+    push_f64_slice(&mut out, means);
+    push_f64_slice(&mut out, stds);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trips() {
+        let h = StoreHeader { n: 1_000_003, p: 117, chunk_rows: 8192, payload_offset: 321 };
+        let enc = h.encode();
+        assert_eq!(StoreHeader::decode(&enc).unwrap(), h);
+    }
+
+    #[test]
+    fn geometry_arithmetic() {
+        let h = StoreHeader { n: 20, p: 3, chunk_rows: 8, payload_offset: 100 };
+        assert_eq!(h.n_chunks(), 3);
+        assert_eq!(h.rows_in_chunk(0), 8);
+        assert_eq!(h.rows_in_chunk(2), 4);
+        assert_eq!(h.chunk_base(), 100 + 20 * 8 + 20);
+        // Chunk 1, column 2: one full chunk before (8·3 doubles), then
+        // two 8-row columns within.
+        assert_eq!(h.col_segment_offset(1, 2), h.chunk_base() + 8 * (8 * 3 + 2 * 8));
+        // Last chunk's columns are 4 rows wide.
+        assert_eq!(h.col_segment_offset(2, 1), h.chunk_base() + 8 * (16 * 3 + 4));
+        assert_eq!(h.expected_file_len(), h.chunk_base() + 8 * 60);
+    }
+
+    #[test]
+    fn corrupt_headers_are_typed_errors() {
+        use crate::error::FastSurvivalError;
+        let h = StoreHeader { n: 5, p: 2, chunk_rows: 4, payload_offset: 64 };
+        let good = h.encode();
+        // Wrong magic.
+        let mut bad = good;
+        bad[0] = b'X';
+        assert!(matches!(StoreHeader::decode(&bad), Err(FastSurvivalError::Store(_))));
+        // Future version.
+        let mut bad = good;
+        bad[4] = 99;
+        assert!(matches!(StoreHeader::decode(&bad), Err(FastSurvivalError::Store(_))));
+        // Flipped bit in n: checksum catches it.
+        let mut bad = good;
+        bad[9] ^= 0x40;
+        let err = StoreHeader::decode(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got: {err}");
+        // Truncated.
+        assert!(matches!(
+            StoreHeader::decode(&good[..20]),
+            Err(FastSurvivalError::Store(_))
+        ));
+    }
+
+    #[test]
+    fn hostile_geometry_is_a_typed_error_not_an_overflow() {
+        use crate::error::FastSurvivalError;
+        // A crafted header can always carry a valid FNV self-check; the
+        // geometry caps must still reject it before any offset math.
+        for h in [
+            StoreHeader { n: 1 << 60, p: 2, chunk_rows: 8, payload_offset: 64 },
+            StoreHeader { n: 1 << 30, p: 1 << 30, chunk_rows: 8, payload_offset: 64 },
+            StoreHeader { n: 8, p: 2, chunk_rows: 1 << 60, payload_offset: 64 },
+        ] {
+            let enc = h.encode();
+            assert!(
+                matches!(StoreHeader::decode(&enc), Err(FastSurvivalError::Store(_))),
+                "geometry {h:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn meta_block_encoding_is_length_stable() {
+        let m = encode_meta("ds", &["a".into(), "bb".into()], &[0.0, 1.0], &[1.0, 2.0]);
+        // name(4+2) + count(4) + names(4+1 + 4+2) + 2·2·8 doubles.
+        assert_eq!(m.len(), 6 + 4 + 5 + 6 + 32);
+    }
+}

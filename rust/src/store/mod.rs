@@ -1,0 +1,44 @@
+//! Out-of-core data subsystem: larger-than-RAM Cox training.
+//!
+//! The paper's surrogate methods make each training pass O(n·p); this
+//! module removes the remaining constraint that the n×p design matrix
+//! be resident in RAM. Three pieces:
+//!
+//! - [`format`]/[`writer`] — the `.fsds` binary columnar store: rows
+//!   pre-sorted by descending observation time (the engine's canonical
+//!   order, so risk sets are prefixes of the on-disk layout), features
+//!   in fixed-width column-major chunks, O(n) time/event columns, and
+//!   one-pass standardization stats. Writers stream from any
+//!   [`writer::RowSource`] — a CSV of any size, the Appendix-C.2
+//!   synthetic generator, or an in-memory dataset — through an
+//!   external-sort spill file, never holding the matrix.
+//! - [`dataset`] — [`ChunkedDataset`], the bounded-memory reader: O(n)
+//!   risk-set metadata plus one streaming pass deriving the per-column
+//!   constants (Xᵀδ, Lipschitz pairs) bit-identically to the in-memory
+//!   kernels; after that, chunk and single-column reads on demand.
+//! - [`streaming`] — [`StreamingFit`], the two-phase trainer:
+//!   BigSurvSGD-style sampled-block surrogate warmup for fast early
+//!   progress, then exact chunked quadratic/cubic-surrogate coordinate
+//!   descent (monotone, globally convergent per the paper) streaming
+//!   one column per step. Runs over [`CoxData`] — implemented by both
+//!   the on-disk store and the in-memory [`MemoryCoxData`] reference,
+//!   which share every floating-point operation, so chunked and
+//!   in-memory fits agree bit for bit.
+//!
+//! Entry points: `CoxFit::fit_store` in the public API, `convert` /
+//! `fit --store` / `bigfit` in the CLI.
+
+pub mod dataset;
+pub mod format;
+pub mod source;
+pub mod streaming;
+pub mod writer;
+
+pub use dataset::ChunkedDataset;
+pub use format::DEFAULT_CHUNK_ROWS;
+pub use source::{CoxData, MemoryCoxData, StoreMeta};
+pub use streaming::{reference_fit_kkt, StreamingFit, StreamingFitResult};
+pub use writer::{
+    convert_csv, convert_synthetic, write_store, DatasetRows, RowSource, StoreSummary,
+    SyntheticRows,
+};

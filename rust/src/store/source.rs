@@ -1,0 +1,244 @@
+//! The data-access surface the chunked trainer runs on.
+//!
+//! [`CoxData`] is the minimal contract the out-of-core driver needs:
+//! O(n) risk-set metadata held in memory ([`StoreMeta`]) plus two bulk
+//! reads — a column-major row chunk and a full feature column. Two
+//! implementations exist: the on-disk [`super::ChunkedDataset`] and the
+//! in-memory [`MemoryCoxData`] reference. Both feed the *same* driver
+//! code and the same parts-level Cox kernels
+//! ([`crate::cox::derivatives::coord_d1_col`] and friends), so a chunked
+//! fit and an in-memory fit perform identical floating-point operations
+//! in identical order — the parity tests assert their coefficients match
+//! bit for bit.
+
+use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
+use crate::cox::problem::TieGroup;
+use crate::cox::CoxProblem;
+use crate::data::SurvivalDataset;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use std::sync::Arc;
+
+/// Everything the trainer holds in memory about a dataset: O(n) risk-set
+/// structure and O(p) per-column constants — but never the n×p matrix.
+#[derive(Clone, Debug)]
+pub struct StoreMeta {
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub n_chunks: usize,
+    pub name: String,
+    pub feature_names: Vec<String>,
+    /// One-pass standardization stats recorded by the writer (metadata;
+    /// features are stored raw).
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+    /// Observation times, sorted descending (CoxProblem order).
+    pub time: Vec<f64>,
+    /// Event indicators in sorted order, 1.0/0.0.
+    pub delta: Vec<f64>,
+    /// Event indicators in sorted order, as booleans.
+    pub event: Vec<bool>,
+    /// Tie groups over the sorted times; risk sets are prefixes. (No
+    /// per-row `group_of` map here: the chunked kernels only walk
+    /// groups, and an O(n) vector of indices would count against the
+    /// peak-RSS budget for nothing — derive it from `groups` if ever
+    /// needed.)
+    pub groups: Vec<TieGroup>,
+    pub n_events: usize,
+    /// `(Xᵀδ)_l` per column — the β-independent gradient term.
+    pub xt_delta: Vec<f64>,
+    /// Theorem-3.4 surrogate constants per column.
+    pub lipschitz: Vec<LipschitzPair>,
+    /// Per-column all-values-in-{0,1} flag (binary fast path).
+    pub col_binary: Vec<bool>,
+}
+
+impl StoreMeta {
+    /// The dataset's in-memory footprint if it were materialized
+    /// (n·p doubles) — the yardstick the peak-RSS gate measures against.
+    pub fn matrix_bytes(&self) -> u64 {
+        self.n as u64 * self.p as u64 * 8
+    }
+}
+
+/// Streaming per-column mean/std accumulator — Welford's one-pass
+/// algorithm, which stays accurate where the raw-moment
+/// `Σx²/n − mean²` formula catastrophically cancels (e.g. a
+/// timestamp-scale column with mean ~1e9 and spread ~1 would record
+/// σ = 1.0 under raw moments because both terms round to the same
+/// ~1e18). The one place the store's stats convention lives: the
+/// writer's row-streaming pass and the in-memory reference source both
+/// go through it, so they cannot drift apart. σ floor as in
+/// `Matrix::standardize_columns`: (near-)constant columns keep σ = 1
+/// instead of going to 0/NaN; variance is population (÷n), matching it
+/// too.
+pub(crate) struct RunningStats {
+    count: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl RunningStats {
+    pub(crate) fn new(p: usize) -> Self {
+        RunningStats { count: 0.0, mean: vec![0.0; p], m2: vec![0.0; p] }
+    }
+
+    pub(crate) fn push_row(&mut self, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.mean.len());
+        self.count += 1.0;
+        for (j, &x) in row.iter().enumerate() {
+            let d = x - self.mean[j];
+            self.mean[j] += d / self.count;
+            self.m2[j] += d * (x - self.mean[j]);
+        }
+    }
+
+    /// `(means, stds)` with the σ floor applied.
+    pub(crate) fn finish(self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.count.max(1.0);
+        let stds = self
+            .m2
+            .iter()
+            .map(|&m2| {
+                let var = (m2 / n).max(0.0);
+                if var > 1e-24 {
+                    var.sqrt()
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        (self.mean, stds)
+    }
+}
+
+/// Chunk/column access over a Cox dataset in canonical sorted order.
+///
+/// `load_chunk` fills `buf` column-major for the chunk's rows (column
+/// `j` of chunk `c` is `buf[j·rows .. (j+1)·rows]`) and returns `rows`;
+/// `load_col` fills `buf` with one full column over all n sorted rows.
+/// Methods take `&mut self` because the on-disk implementation seeks.
+pub trait CoxData {
+    fn meta(&self) -> &StoreMeta;
+    /// The same metadata as an owned handle. The fit driver holds this
+    /// across its mutable `load_chunk`/`load_col` calls — a pointer
+    /// clone, not a copy of the O(n) vectors (the out-of-core peak-RSS
+    /// budget pays for every resident byte).
+    fn meta_arc(&self) -> Arc<StoreMeta>;
+    fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize>;
+    fn load_col(&mut self, l: usize, buf: &mut Vec<f64>) -> Result<()>;
+}
+
+/// In-memory [`CoxData`]: the whole sorted matrix resident, served
+/// through the same chunk/column surface as the on-disk store. This is
+/// the parity reference for the chunked trainer and the zero-I/O path
+/// for datasets that comfortably fit in RAM.
+pub struct MemoryCoxData {
+    x: Matrix,
+    meta: Arc<StoreMeta>,
+}
+
+impl MemoryCoxData {
+    /// Build from a dataset (validates + sorts through
+    /// [`CoxProblem::try_new`], so the row order, tie groups, Xᵀδ, and
+    /// Lipschitz constants are the engine's own).
+    pub fn from_dataset(ds: &SurvivalDataset, chunk_rows: usize) -> Result<Self> {
+        let pr = CoxProblem::try_new(ds)?;
+        let lipschitz = all_lipschitz(&pr);
+        let chunk_rows = chunk_rows.max(1);
+        let n = pr.n();
+        let p = pr.p();
+        let n_chunks = (n + chunk_rows - 1) / chunk_rows;
+        // Standardization stats over the sorted columns (metadata only),
+        // through the shared streaming accumulator.
+        let mut means = Vec::with_capacity(p);
+        let mut stds = Vec::with_capacity(p);
+        for j in 0..p {
+            let mut st = RunningStats::new(1);
+            for v in pr.x.col(j) {
+                st.push_row(std::slice::from_ref(v));
+            }
+            let (m, s) = st.finish();
+            means.push(m[0]);
+            stds.push(s[0]);
+        }
+        let event: Vec<bool> = pr.delta.iter().map(|&d| d == 1.0).collect();
+        let meta = StoreMeta {
+            n,
+            p,
+            chunk_rows,
+            n_chunks,
+            name: ds.name.clone(),
+            feature_names: ds.feature_names.clone(),
+            means,
+            stds,
+            time: pr.time.clone(),
+            delta: pr.delta.clone(),
+            event,
+            groups: pr.groups.clone(),
+            n_events: pr.n_events,
+            xt_delta: pr.xt_delta.clone(),
+            lipschitz,
+            col_binary: pr.col_binary.clone(),
+        };
+        Ok(MemoryCoxData { x: pr.x, meta: Arc::new(meta) })
+    }
+}
+
+impl CoxData for MemoryCoxData {
+    fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    fn meta_arc(&self) -> Arc<StoreMeta> {
+        Arc::clone(&self.meta)
+    }
+
+    fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize> {
+        let r0 = c * self.meta.chunk_rows;
+        let rows = self.meta.chunk_rows.min(self.meta.n - r0);
+        buf.clear();
+        buf.reserve(rows * self.meta.p);
+        for j in 0..self.meta.p {
+            buf.extend_from_slice(&self.x.col(j)[r0..r0 + rows]);
+        }
+        Ok(rows)
+    }
+
+    fn load_col(&mut self, l: usize, buf: &mut Vec<f64>) -> Result<()> {
+        buf.clear();
+        buf.extend_from_slice(self.x.col(l));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    #[test]
+    fn memory_source_serves_sorted_chunks_and_columns() {
+        let ds = generate(&SyntheticConfig { n: 53, p: 4, rho: 0.3, k: 2, s: 0.1, seed: 3 });
+        let pr = CoxProblem::new(&ds);
+        let mut src = MemoryCoxData::from_dataset(&ds, 16).unwrap();
+        let meta = src.meta().clone();
+        assert_eq!(meta.n, 53);
+        assert_eq!(meta.n_chunks, 4);
+        assert_eq!(meta.time, pr.time);
+        assert_eq!(meta.xt_delta, pr.xt_delta);
+        assert_eq!(meta.matrix_bytes(), 53 * 4 * 8);
+        // Column read matches the problem's column.
+        let mut col = Vec::new();
+        src.load_col(2, &mut col).unwrap();
+        assert_eq!(col, pr.x.col(2));
+        // Chunk read is column-major over the chunk's rows.
+        let mut chunk = Vec::new();
+        let rows = src.load_chunk(3, &mut chunk).unwrap();
+        assert_eq!(rows, 53 - 3 * 16);
+        for j in 0..4 {
+            assert_eq!(&chunk[j * rows..(j + 1) * rows], &pr.x.col(j)[48..53]);
+        }
+    }
+}

@@ -1,0 +1,395 @@
+//! Streaming `.fsds` writer: rows in, sorted columnar chunks out, never
+//! more than O(n + chunk·p) in memory.
+//!
+//! Two passes:
+//! 1. Drain the [`RowSource`] once, spilling raw rows to a temporary
+//!    row-major file next to the output while collecting the O(n)
+//!    columns (time, event) and one-pass standardization stats.
+//! 2. Sort the collected times with the engine's canonical
+//!    [`descending_time_order`], then gather rows from the spill file in
+//!    sorted order, assembling one column-major chunk at a time.
+//!
+//! The spill file is the external-sort workspace: disk holds the n×p
+//! payload twice transiently, RAM never holds it at all.
+
+use super::format::{self, StoreHeader, DEFAULT_CHUNK_ROWS, HEADER_LEN};
+use super::source::RunningStats;
+use crate::cox::problem::descending_time_order;
+use crate::data::csv::SurvivalCsvReader;
+use crate::data::synthetic::{SyntheticConfig, SyntheticStream};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use std::fs::File;
+use std::io::{BufRead, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// A forward-only stream of survival rows — the writer's input contract.
+pub trait RowSource {
+    /// Number of feature columns every row carries.
+    fn n_features(&self) -> usize;
+    /// Feature names, in row order.
+    fn feature_names(&self) -> Vec<String>;
+    /// Fill `feats` with the next row's features and return its
+    /// `(time, event)`; `Ok(None)` at end of stream.
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>>;
+}
+
+/// Any streaming survival CSV is a row source.
+impl<R: BufRead> RowSource for SurvivalCsvReader<R> {
+    fn n_features(&self) -> usize {
+        self.p()
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        self.columns.feature_names()
+    }
+
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        SurvivalCsvReader::next_row(self, feats)
+    }
+}
+
+/// The Appendix-C.2 generator as a row source: datasets of any n stream
+/// straight to disk without an O(n·p) allocation.
+pub struct SyntheticRows {
+    stream: SyntheticStream,
+    p: usize,
+    x: Vec<f64>,
+    time: Vec<f64>,
+    event: Vec<bool>,
+    pos: usize,
+}
+
+/// Rows the synthetic source buffers per refill.
+const SYNTH_BUF_ROWS: usize = 1024;
+
+impl SyntheticRows {
+    pub fn new(cfg: &SyntheticConfig) -> Self {
+        SyntheticRows {
+            stream: SyntheticStream::new(cfg),
+            p: cfg.p,
+            x: Vec::new(),
+            time: Vec::new(),
+            event: Vec::new(),
+            pos: 0,
+        }
+    }
+}
+
+impl RowSource for SyntheticRows {
+    fn n_features(&self) -> usize {
+        self.p
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        (0..self.p).map(|j| format!("f{j}")).collect()
+    }
+
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        if self.pos == self.time.len() {
+            self.x.clear();
+            self.time.clear();
+            self.event.clear();
+            self.pos = 0;
+            if self.stream.next_chunk(SYNTH_BUF_ROWS, &mut self.x, &mut self.time, &mut self.event)
+                == 0
+            {
+                return Ok(None);
+            }
+        }
+        let i = self.pos;
+        feats.clear();
+        feats.extend_from_slice(&self.x[i * self.p..(i + 1) * self.p]);
+        self.pos += 1;
+        Ok(Some((self.time[i], self.event[i])))
+    }
+}
+
+/// An in-memory dataset as a row source (tests; small conversions).
+pub struct DatasetRows<'a> {
+    ds: &'a SurvivalDataset,
+    i: usize,
+}
+
+impl<'a> DatasetRows<'a> {
+    pub fn new(ds: &'a SurvivalDataset) -> Self {
+        DatasetRows { ds, i: 0 }
+    }
+}
+
+impl RowSource for DatasetRows<'_> {
+    fn n_features(&self) -> usize {
+        self.ds.p()
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        self.ds.feature_names.clone()
+    }
+
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        if self.i >= self.ds.n() {
+            return Ok(None);
+        }
+        feats.clear();
+        for j in 0..self.ds.p() {
+            feats.push(self.ds.x.get(self.i, j));
+        }
+        let out = (self.ds.time[self.i], self.ds.event[self.i]);
+        self.i += 1;
+        Ok(Some(out))
+    }
+}
+
+/// What a completed write looked like.
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub n_chunks: usize,
+    pub n_events: usize,
+    /// Final store size in bytes.
+    pub bytes: u64,
+}
+
+/// Stream `source` into a sorted columnar store at `out`. `chunk_rows`
+/// of 0 selects [`DEFAULT_CHUNK_ROWS`].
+///
+/// The store is assembled at `{out}.partial.tmp` and renamed into place
+/// only on success, so an interrupted or failed conversion never leaves
+/// a truncated file at the destination path — `out` either holds the
+/// previous content or a complete store.
+pub fn write_store(
+    source: &mut dyn RowSource,
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+) -> Result<StoreSummary> {
+    let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+    let spill_path = PathBuf::from(format!("{}.rows.tmp", out.display()));
+    let partial_path = PathBuf::from(format!("{}.partial.tmp", out.display()));
+    let result = write_store_inner(source, &partial_path, &spill_path, chunk_rows, name);
+    // The spill file is workspace either way; best-effort cleanup.
+    let _ = std::fs::remove_file(&spill_path);
+    match result {
+        Ok(summary) => {
+            std::fs::rename(&partial_path, out).map_err(|e| {
+                FastSurvivalError::io(
+                    format!("publishing {} -> {}", partial_path.display(), out.display()),
+                    e,
+                )
+            })?;
+            Ok(summary)
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&partial_path);
+            Err(e)
+        }
+    }
+}
+
+fn write_store_inner(
+    source: &mut dyn RowSource,
+    out: &Path,
+    spill_path: &Path,
+    chunk_rows: usize,
+    name: &str,
+) -> Result<StoreSummary> {
+    let p = source.n_features();
+    if p == 0 {
+        return Err(FastSurvivalError::InvalidData(
+            "row source has no feature columns".into(),
+        ));
+    }
+    let feature_names = source.feature_names();
+
+    // ---- Pass 1: spill raw rows, collect O(n) columns + stats.
+    let spill = File::create(spill_path)
+        .map_err(|e| FastSurvivalError::io(format!("creating {}", spill_path.display()), e))?;
+    let mut spill_w = BufWriter::new(spill);
+    let mut time: Vec<f64> = Vec::new();
+    let mut event: Vec<bool> = Vec::new();
+    let mut stats = RunningStats::new(p);
+    let mut feats: Vec<f64> = Vec::with_capacity(p);
+    while let Some((t, e)) = source.next_row(&mut feats)? {
+        let row_idx = time.len();
+        if !t.is_finite() {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "non-finite observation time {t} at data row {row_idx}"
+            )));
+        }
+        if feats.len() != p {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "data row {row_idx} has {} features, expected {p}",
+                feats.len()
+            )));
+        }
+        for (j, &v) in feats.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(FastSurvivalError::InvalidData(format!(
+                    "non-finite feature value (column {j}, data row {row_idx})"
+                )));
+            }
+            spill_w
+                .write_all(&v.to_le_bytes())
+                .map_err(|e| FastSurvivalError::io("writing row spill", e))?;
+        }
+        stats.push_row(&feats);
+        time.push(t);
+        event.push(e);
+    }
+    spill_w.flush().map_err(|e| FastSurvivalError::io("flushing row spill", e))?;
+    drop(spill_w);
+    let n = time.len();
+    if n == 0 {
+        return Err(FastSurvivalError::InvalidData("row source produced no rows".into()));
+    }
+
+    // One-pass standardization stats (shared Welford convention: see
+    // `source::RunningStats`).
+    let (means, stds) = stats.finish();
+
+    // ---- Sort: the engine's canonical descending-time order.
+    let order = descending_time_order(&time);
+    let n_events = event.iter().filter(|&&e| e).count();
+
+    // ---- Pass 2: header + meta + sorted O(n) columns + gathered chunks.
+    let meta = format::encode_meta(name, &feature_names, &means, &stds);
+    let header = StoreHeader {
+        n,
+        p,
+        chunk_rows,
+        payload_offset: (HEADER_LEN + meta.len()) as u64,
+    };
+    let out_file = File::create(out)
+        .map_err(|e| FastSurvivalError::io(format!("creating {}", out.display()), e))?;
+    let mut w = BufWriter::new(out_file);
+    let werr = |e| FastSurvivalError::io(format!("writing {}", out.display()), e);
+    w.write_all(&header.encode()).map_err(werr)?;
+    w.write_all(&meta).map_err(werr)?;
+    for &i in &order {
+        w.write_all(&time[i].to_le_bytes()).map_err(werr)?;
+    }
+    for &i in &order {
+        w.write_all(&[event[i] as u8]).map_err(werr)?;
+    }
+
+    // Gather rows from the spill in sorted order, one chunk at a time.
+    let mut spill_r = File::open(spill_path)
+        .map_err(|e| FastSurvivalError::io(format!("reopening {}", spill_path.display()), e))?;
+    let row_bytes = p * 8;
+    let mut rowbuf = vec![0u8; row_bytes];
+    let mut chunk: Vec<f64> = Vec::with_capacity(chunk_rows * p);
+    for c in 0..header.n_chunks() {
+        let r0 = c * chunk_rows;
+        let rows = header.rows_in_chunk(c);
+        chunk.clear();
+        chunk.resize(rows * p, 0.0);
+        // Visit source rows in ascending spill offset (the sorted order
+        // is arbitrary relative to arrival order, so iterating by k
+        // would seek randomly): a forward scan the OS can read ahead
+        // of, with the scatter index k keeping the output byte-for-byte
+        // identical to the naive gather.
+        let mut gather: Vec<(usize, usize)> = (0..rows).map(|k| (order[r0 + k], k)).collect();
+        gather.sort_unstable();
+        for (src_row, k) in gather {
+            spill_r
+                .seek(SeekFrom::Start((src_row * row_bytes) as u64))
+                .map_err(|e| FastSurvivalError::io("seeking row spill", e))?;
+            spill_r
+                .read_exact(&mut rowbuf)
+                .map_err(|e| FastSurvivalError::io("reading row spill", e))?;
+            for j in 0..p {
+                let v = f64::from_le_bytes(rowbuf[j * 8..j * 8 + 8].try_into().unwrap());
+                chunk[j * rows + k] = v;
+            }
+        }
+        for &v in &chunk {
+            w.write_all(&v.to_le_bytes()).map_err(werr)?;
+        }
+    }
+    w.flush().map_err(werr)?;
+
+    Ok(StoreSummary {
+        n,
+        p,
+        chunk_rows,
+        n_chunks: header.n_chunks(),
+        n_events,
+        bytes: header.expected_file_len(),
+    })
+}
+
+/// Convenience: stream a CSV file into a store.
+pub fn convert_csv(input: &Path, out: &Path, chunk_rows: usize, name: &str) -> Result<StoreSummary> {
+    let mut reader = crate::data::csv::open_survival_csv(input)?;
+    write_store(&mut reader, out, chunk_rows, name)
+}
+
+/// Convenience: stream the Appendix-C.2 generator into a store.
+pub fn convert_synthetic(
+    cfg: &SyntheticConfig,
+    out: &Path,
+    chunk_rows: usize,
+) -> Result<StoreSummary> {
+    let mut rows = SyntheticRows::new(cfg);
+    let name = format!("synthetic_stream_n{}_p{}_rho{}", cfg.n, cfg.p, cfg.rho);
+    write_store(&mut rows, out, chunk_rows, &name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn temp_store(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fs_store_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.fsds"))
+    }
+
+    #[test]
+    fn writes_and_sizes_a_small_store() {
+        let ds = generate(&SyntheticConfig { n: 41, p: 3, rho: 0.2, k: 2, s: 0.1, seed: 9 });
+        let out = temp_store("small");
+        let mut rows = DatasetRows::new(&ds);
+        let s = write_store(&mut rows, &out, 16, "small").unwrap();
+        assert_eq!((s.n, s.p, s.chunk_rows, s.n_chunks), (41, 3, 16, 3));
+        assert_eq!(s.n_events, ds.n_events());
+        assert_eq!(std::fs::metadata(&out).unwrap().len(), s.bytes);
+        // Spill workspace is gone.
+        assert!(!PathBuf::from(format!("{}.rows.tmp", out.display())).exists());
+    }
+
+    #[test]
+    fn synthetic_source_streams_every_row() {
+        let cfg = SyntheticConfig { n: 130, p: 5, rho: 0.4, k: 2, s: 0.1, seed: 4 };
+        let mut src = SyntheticRows::new(&cfg);
+        let mut feats = Vec::new();
+        let mut count = 0;
+        while src.next_row(&mut feats).unwrap().is_some() {
+            assert_eq!(feats.len(), 5);
+            count += 1;
+        }
+        assert_eq!(count, 130);
+        // And the rows match the stream's own chunked output.
+        let ds = crate::data::synthetic::SyntheticStream::new(&cfg).materialize();
+        let mut src = SyntheticRows::new(&cfg);
+        src.next_row(&mut feats).unwrap().unwrap();
+        assert_eq!(feats, (0..5).map(|j| ds.x.get(0, j)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_source_is_a_typed_error() {
+        let ds = generate(&SyntheticConfig { n: 10, p: 2, rho: 0.2, k: 1, s: 0.1, seed: 1 });
+        let mut rows = DatasetRows::new(&ds);
+        // Drain it first.
+        let mut feats = Vec::new();
+        while rows.next_row(&mut feats).unwrap().is_some() {}
+        let out = temp_store("empty");
+        assert!(matches!(
+            write_store(&mut rows, &out, 8, "empty"),
+            Err(FastSurvivalError::InvalidData(_))
+        ));
+    }
+}

@@ -1,0 +1,298 @@
+//! End-to-end out-of-core store properties:
+//!
+//! 1. CSV → `.fsds` → dataset equals the direct CSV load bitwise (in
+//!    the engine's canonical sorted order).
+//! 2. Truncated / corrupt store files surface as typed
+//!    `FastSurvivalError::Store`; a missing path is a typed I/O error.
+//! 3. The streamed fit agrees between the on-disk store and the
+//!    in-memory reference source bit for bit, matches the classic
+//!    in-memory surrogate CD optimum to ≤1e-8, and is bitwise identical
+//!    across FASTSURVIVAL_THREADS ∈ {1, 2, 4}.
+
+use fastsurvival::api::CoxFit;
+use fastsurvival::cox::CoxProblem;
+use fastsurvival::data::csv::load_survival_csv;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::error::FastSurvivalError;
+use fastsurvival::optim::{Objective, OptimizerKind, SurrogateKind};
+use fastsurvival::store::{
+    convert_csv, reference_fit_kkt, write_store, ChunkedDataset, CoxData, DatasetRows,
+    MemoryCoxData, StreamingFit,
+};
+use std::path::PathBuf;
+
+fn temp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("fs_store_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_ds(seed: u64) -> SurvivalDataset {
+    generate(&SyntheticConfig { n: 260, p: 9, rho: 0.4, k: 3, s: 0.1, seed })
+}
+
+#[test]
+fn csv_to_store_to_dataset_is_bitwise_round_trip() {
+    // A CSV with awkward values: ties, negatives, long fractions.
+    let mut csv = String::from("time,event,age,score\n");
+    let rows = [
+        (5.25, 1, 61.0, 0.123456789012345),
+        (3.0, 0, 50.5, -2.75),
+        (5.25, 1, 47.25, 1e-3),
+        (0.5, 0, 39.0, 123456.789),
+        (9.125, 1, 72.5, -0.0625),
+    ];
+    for (t, e, a, s) in rows {
+        csv.push_str(&format!("{t},{e},{a},{s}\n"));
+    }
+    let dir = temp_dir();
+    let csv_path = dir.join("roundtrip.csv");
+    std::fs::write(&csv_path, &csv).unwrap();
+    let store_path = dir.join("roundtrip.fsds");
+
+    let direct = load_survival_csv(&csv_path, "roundtrip").unwrap();
+    let summary = convert_csv(&csv_path, &store_path, 2, "roundtrip").unwrap();
+    assert_eq!(summary.n, 5);
+    assert_eq!(summary.p, 2);
+
+    // The store is sorted; compare against the direct load run through
+    // the same canonical sort (CoxProblem).
+    let pr = CoxProblem::new(&direct);
+    let mut store = ChunkedDataset::open(&store_path).unwrap();
+    let back = store.to_dataset().unwrap();
+    assert_eq!(back.x.data, pr.x.data, "feature bits must round-trip");
+    assert_eq!(back.time, pr.time);
+    let delta: Vec<f64> = back.event.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+    assert_eq!(delta, pr.delta);
+    assert_eq!(back.feature_names, direct.feature_names);
+    // Derived per-column constants agree bitwise with the in-memory
+    // problem's own.
+    assert_eq!(store.meta().xt_delta, pr.xt_delta);
+    assert_eq!(store.meta().col_binary, pr.col_binary);
+}
+
+#[test]
+fn corrupt_store_files_yield_typed_errors() {
+    let dir = temp_dir();
+    let ds = small_ds(17);
+    let store_path = dir.join("victim.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store_path, 64, "victim").unwrap();
+    let bytes = std::fs::read(&store_path).unwrap();
+
+    // Truncation at several depths: header, meta, payload.
+    for cut in [10, 40, bytes.len() / 2, bytes.len() - 3] {
+        let path = dir.join(format!("cut{cut}.fsds"));
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = ChunkedDataset::open(&path).unwrap_err();
+        assert!(
+            matches!(err, FastSurvivalError::Store(_)),
+            "cut at {cut}: expected Store error, got {err}"
+        );
+    }
+    // Corrupt header field → checksum mismatch.
+    let mut bad = bytes.clone();
+    bad[17] ^= 0x02;
+    let path = dir.join("badheader.fsds");
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        ChunkedDataset::open(&path),
+        Err(FastSurvivalError::Store(_))
+    ));
+    // Missing file: typed Io error, message names the path.
+    let missing = dir.join("no-such-store.fsds");
+    let err = ChunkedDataset::open(&missing).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::Io { .. }));
+    assert!(err.to_string().contains("no-such-store"));
+    // fit --store's builder path reports the same typed error.
+    let err = CoxFit::new().fit_store(&missing).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::Io { .. }));
+}
+
+/// The parity satellite. All FASTSURVIVAL_THREADS mutation for this test
+/// binary lives in this one test (libtest runs tests concurrently;
+/// results everywhere are thread-count independent by design, but the
+/// env writes themselves must not race each other).
+#[test]
+fn chunked_vs_in_memory_fit_parity_across_thread_counts() {
+    let dir = temp_dir();
+    let ds = small_ds(29);
+    let store_path = dir.join("parity.fsds");
+    let chunk_rows = 48;
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store_path, chunk_rows, "parity").unwrap();
+
+    let obj = Objective { l1: 0.0, l2: 1.0 };
+    let fitter = StreamingFit {
+        objective: obj,
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt: 1e-9,
+        ..Default::default()
+    };
+
+    let saved = std::env::var("FASTSURVIVAL_THREADS").ok();
+    let mut snapshots: Vec<Vec<f64>> = Vec::new();
+    for threads in ["1", "2", "4"] {
+        std::env::set_var("FASTSURVIVAL_THREADS", threads);
+        let mut store = ChunkedDataset::open(&store_path).unwrap();
+        let from_store = fitter.fit(&mut store).unwrap();
+        let mut mem = MemoryCoxData::from_dataset(&ds, chunk_rows).unwrap();
+        let from_mem = fitter.fit(&mut mem).unwrap();
+        for (a, b) in from_store.beta.iter().zip(from_mem.beta.iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads}: store-backed and memory-backed streamed fits \
+                 must be bitwise identical ({a} vs {b})"
+            );
+        }
+        snapshots.push(from_store.beta);
+    }
+    match saved {
+        Some(v) => std::env::set_var("FASTSURVIVAL_THREADS", v),
+        None => std::env::remove_var("FASTSURVIVAL_THREADS"),
+    }
+    for snap in &snapshots[1..] {
+        for (a, b) in snapshots[0].iter().zip(snap.iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "streamed fit changed with FASTSURVIVAL_THREADS"
+            );
+        }
+    }
+
+    // And the streamed optimum matches the engine's classic in-memory
+    // CD, driven to the same KKT residual, to ≤1e-8: both are within
+    // √p·ε/μ ≈ 1.5e-9 of the λ₂=1 objective's unique optimum.
+    let pr = CoxProblem::new(&ds);
+    let classic = reference_fit_kkt(&pr, obj, SurrogateKind::Quadratic, 1e-9, 10_000);
+    for (a, b) in snapshots[0].iter().zip(classic.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-8,
+            "streamed {a} vs classic {b} (|Δ| = {:.3e})",
+            (a - b).abs()
+        );
+    }
+}
+
+#[test]
+fn fit_store_through_the_builder_end_to_end() {
+    let dir = temp_dir();
+    let ds = small_ds(41);
+    let store_path = dir.join("builder.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store_path, 64, "builder").unwrap();
+
+    let model = CoxFit::new()
+        .l2(0.5)
+        .optimizer(OptimizerKind::Quadratic)
+        .max_iters(3000)
+        .tol(1e-12)
+        .fit_store(&store_path)
+        .unwrap();
+    let d = model.diagnostics();
+    assert_eq!(d.engine, "chunked-store");
+    assert_eq!(d.optimizer, "streaming-quadratic-surrogate");
+    assert!(d.converged);
+    assert_eq!(d.n_train, ds.n());
+    assert_eq!(d.n_events, ds.n_events());
+
+    // The builder is pure plumbing over StreamingFit: a hand-built
+    // fitter with the mirrored configuration over the in-memory source
+    // must reproduce the builder's coefficients bit for bit.
+    let mirrored = StreamingFit {
+        objective: Objective { l1: 0.0, l2: 0.5 },
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 3000,
+        tol: 1e-12,
+        ..Default::default()
+    };
+    let mut mem = MemoryCoxData::from_dataset(&ds, 64).unwrap();
+    let manual = mirrored.fit(&mut mem).unwrap();
+    for (a, b) in model.beta().iter().zip(manual.beta.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "builder plumbing changed the fit: {a} vs {b}");
+    }
+    // Sanity against the classic builder fit on the materialized data
+    // (loss-tol stopping on both sides — coarse agreement only; the
+    // ≤1e-8 gate lives with the KKT-stopped comparisons).
+    let classic = CoxFit::new()
+        .l2(0.5)
+        .optimizer(OptimizerKind::Quadratic)
+        .max_iters(3000)
+        .tol(1e-12)
+        .fit(&ds)
+        .unwrap();
+    for (a, b) in model.beta().iter().zip(classic.beta().iter()) {
+        assert!((a - b).abs() <= 1e-3, "{a} vs {b}");
+    }
+    // The model predicts: informative concordance on the training data.
+    let ci = model.concordance(&ds).unwrap();
+    assert!(ci > 0.55, "cindex {ci}");
+
+    // Arming the stop_kkt knob certifies ≤1e-8 against the KKT-stopped
+    // classic in-memory CD (the loss-tol default only gives the coarse
+    // agreement asserted above).
+    let kkt_model = CoxFit::new()
+        .l2(1.0)
+        .optimizer(OptimizerKind::Quadratic)
+        .max_iters(10_000)
+        .tol(0.0)
+        .stop_kkt(1e-9)
+        .fit_store(&store_path)
+        .unwrap();
+    let pr = CoxProblem::new(&ds);
+    let reference = reference_fit_kkt(
+        &pr,
+        Objective { l1: 0.0, l2: 1.0 },
+        SurrogateKind::Quadratic,
+        1e-9,
+        10_000,
+    );
+    for (a, b) in kkt_model.beta().iter().zip(reference.iter()) {
+        assert!((a - b).abs() <= 1e-8, "{a} vs {b}");
+    }
+
+    // Non-surrogate optimizers and non-native engines are rejected.
+    assert!(matches!(
+        CoxFit::new().optimizer(OptimizerKind::Newton).fit_store(&store_path),
+        Err(FastSurvivalError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        CoxFit::new()
+            .engine(fastsurvival::api::EngineKind::Xla)
+            .fit_store(&store_path),
+        Err(FastSurvivalError::Unsupported(_))
+    ));
+}
+
+#[test]
+fn cubic_streamed_fit_matches_cubic_classic() {
+    // The cubic surrogate streams too: KKT-stopped chunked fit over a
+    // store vs the engine's KKT-stopped in-memory cubic CD, ≤1e-8.
+    let dir = temp_dir();
+    let ds = small_ds(53);
+    let store_path = dir.join("cubic.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store_path, 32, "cubic").unwrap();
+    let obj = Objective { l1: 0.0, l2: 1.0 };
+    let fitter = StreamingFit {
+        objective: obj,
+        surrogate: SurrogateKind::Cubic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt: 1e-9,
+        ..Default::default()
+    };
+    let mut store = ChunkedDataset::open(&store_path).unwrap();
+    let streamed = fitter.fit(&mut store).unwrap();
+    assert!(streamed.trace.converged);
+    let pr = CoxProblem::new(&ds);
+    let classic = reference_fit_kkt(&pr, obj, SurrogateKind::Cubic, 1e-9, 10_000);
+    for (a, b) in streamed.beta.iter().zip(classic.iter()) {
+        assert!((a - b).abs() <= 1e-8, "{a} vs {b}");
+    }
+}
