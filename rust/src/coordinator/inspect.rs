@@ -1,0 +1,360 @@
+//! `fastsurvival inspect` — dump and verify a `.fsds` store: header
+//! fields, checksum, meta block, chunk geometry, the live-append
+//! segment manifest, and any stray files a crash left behind. The
+//! read-only companion to `convert`/`append`: it never modifies the
+//! store, it only reports what a reader would (and would not) see.
+
+use crate::error::{FastSurvivalError, Result};
+use crate::live::manifest::{header_checksum, manifest_path, segment_path, Manifest};
+use crate::store::{ChunkedDataset, CoxData};
+use crate::util::args::Args;
+use std::path::{Path, PathBuf};
+
+/// One segment's inspection row.
+#[derive(Clone, Debug)]
+pub struct SegmentReport {
+    pub seq: u64,
+    pub path: PathBuf,
+    pub n: usize,
+    pub n_events: usize,
+    /// The segment file opened and validated cleanly.
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+/// Everything `inspect` establishes about a store.
+#[derive(Clone, Debug)]
+pub struct InspectReport {
+    pub path: PathBuf,
+    pub file_bytes: u64,
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub n_chunks: usize,
+    pub n_events: usize,
+    pub name: String,
+    pub feature_names: Vec<String>,
+    pub checksum_stored: u64,
+    pub checksum_computed: u64,
+    /// Base store opened with full validation (sort order, tie groups,
+    /// column stats).
+    pub base_ok: bool,
+    pub base_error: Option<String>,
+    /// `None` = no manifest file; `Some(false)` = a manifest exists but
+    /// its base signature no longer matches (stale — e.g. after a
+    /// compaction crash window or a base rewrite).
+    pub manifest_valid: Option<bool>,
+    pub segments: Vec<SegmentReport>,
+    /// Files next to the store that no reader will ever load: leftover
+    /// temp files and segment files the manifest does not commit.
+    pub stray_files: Vec<PathBuf>,
+}
+
+impl InspectReport {
+    /// Total rows a merged reader serves (base + committed segments).
+    pub fn total_rows(&self) -> usize {
+        self.n + self.segments.iter().map(|s| s.n).sum::<usize>()
+    }
+
+    /// Everything verified: checksum, base, manifest, every segment.
+    pub fn healthy(&self) -> bool {
+        self.base_ok
+            && self.checksum_stored == self.checksum_computed
+            && self.manifest_valid != Some(false)
+            && self.segments.iter().all(|s| s.ok)
+    }
+}
+
+/// Inspect a store without modifying anything on disk.
+pub fn inspect(store: &Path) -> Result<InspectReport> {
+    let file_bytes = std::fs::metadata(store)
+        .map_err(|e| FastSurvivalError::io(format!("stat {store:?}"), e))?
+        .len();
+    let (checksum_stored, checksum_computed) = header_checksum(store)?;
+
+    // Full-validation open: worth its one O(n·p) pass — this is the
+    // command you run when you *suspect* a store.
+    let (base_ok, base_error, meta) = match ChunkedDataset::open(store) {
+        Ok(ds) => (true, None, Some(ds.meta_arc())),
+        Err(e) => (false, Some(e.to_string()), None),
+    };
+
+    // Header-level fallback so a corrupt payload still gets its header
+    // dumped (that is the interesting part when the open failed).
+    let header = crate::live::manifest::read_header(store)?;
+    let (n, p, chunk_rows, n_chunks, n_events, name, feature_names) = match &meta {
+        Some(m) => (
+            m.n,
+            m.p,
+            m.chunk_rows,
+            m.n_chunks,
+            m.n_events,
+            m.name.clone(),
+            m.feature_names.clone(),
+        ),
+        None => {
+            let (name, features) = crate::live::manifest::read_name_and_features(store)
+                .unwrap_or_else(|_| (String::from("<unreadable meta>"), Vec::new()));
+            (header.n, header.p, header.chunk_rows, header.n_chunks(), 0, name, features)
+        }
+    };
+
+    let manifest = Manifest::load(store)?;
+    let valid = match &manifest {
+        None => None,
+        Some(_) => Some(Manifest::load_valid(store)?.is_some()),
+    };
+    let committed: Vec<u64> = match (&manifest, valid) {
+        (Some(m), Some(true)) => m.segments.iter().map(|s| s.seq).collect(),
+        _ => Vec::new(),
+    };
+    let mut segments = Vec::new();
+    if let (Some(m), Some(true)) = (&manifest, valid) {
+        for entry in &m.segments {
+            let sp = segment_path(store, entry.seq);
+            let (ok, error) = match ChunkedDataset::open(&sp) {
+                Ok(seg) => {
+                    if seg.meta().n == entry.n && seg.meta().n_events == entry.n_events {
+                        (true, None)
+                    } else {
+                        (
+                            false,
+                            Some(format!(
+                                "manifest says n={} events={}, file holds n={} events={}",
+                                entry.n,
+                                entry.n_events,
+                                seg.meta().n,
+                                seg.meta().n_events
+                            )),
+                        )
+                    }
+                }
+                Err(e) => (false, Some(e.to_string())),
+            };
+            segments.push(SegmentReport {
+                seq: entry.seq,
+                path: sp,
+                n: entry.n,
+                n_events: entry.n_events,
+                ok,
+                error,
+            });
+        }
+    }
+
+    let stray_files = find_stray_files(store, &committed)?;
+    Ok(InspectReport {
+        path: store.to_path_buf(),
+        file_bytes,
+        n,
+        p,
+        chunk_rows,
+        n_chunks,
+        n_events,
+        name,
+        feature_names,
+        checksum_stored,
+        checksum_computed,
+        base_ok,
+        base_error,
+        manifest_valid: valid,
+        segments,
+        stray_files,
+    })
+}
+
+/// List (without touching) files prefixed by the store's name that no
+/// reader loads: temp leftovers and uncommitted segments.
+fn find_stray_files(store: &Path, committed: &[u64]) -> Result<Vec<PathBuf>> {
+    let parent = store.parent().unwrap_or_else(|| Path::new("."));
+    let stem = store
+        .file_name()
+        .and_then(|s| s.to_str())
+        .ok_or_else(|| FastSurvivalError::Store(format!("non-UTF-8 store path {store:?}")))?;
+    let rd = std::fs::read_dir(parent)
+        .map_err(|e| FastSurvivalError::io(format!("scanning {parent:?}"), e))?;
+    let mut stray = Vec::new();
+    for entry in rd {
+        let entry =
+            entry.map_err(|e| FastSurvivalError::io(format!("scanning {parent:?}"), e))?;
+        let path = entry.path();
+        let fname = match path.file_name().and_then(|s| s.to_str()) {
+            Some(f) => f,
+            None => continue,
+        };
+        if fname == stem || !fname.starts_with(stem) {
+            continue;
+        }
+        let suffix = &fname[stem.len()..];
+        let is_temp = suffix.ends_with(".partial.tmp")
+            || suffix.ends_with(".rows.tmp")
+            || suffix.ends_with(".compact.tmp");
+        let is_orphan_segment = suffix.starts_with(".seg")
+            && suffix.ends_with(".fsds")
+            && !committed.iter().any(|&seq| fname
+                == segment_path(store, seq)
+                    .file_name()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or_default());
+        if is_temp || is_orphan_segment {
+            stray.push(path);
+        }
+    }
+    stray.sort();
+    Ok(stray)
+}
+
+/// The `inspect` CLI subcommand.
+pub fn run(args: &Args) -> Result<()> {
+    let store = args.get("store").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("inspect requires --store <file.fsds>".into())
+    })?;
+    let report = inspect(Path::new(store))?;
+    println!("store: {} ({:.1} MB)", report.path.display(), report.file_bytes as f64 / 1e6);
+    println!(
+        "header: n={} p={} chunk_rows={} ({} chunks) name={:?}",
+        report.n, report.p, report.chunk_rows, report.n_chunks, report.name
+    );
+    let check =
+        if report.checksum_stored == report.checksum_computed { "OK" } else { "MISMATCH" };
+    println!(
+        "checksum: stored {:#018x} computed {:#018x} [{check}]",
+        report.checksum_stored, report.checksum_computed
+    );
+    match (&report.base_ok, &report.base_error) {
+        (true, _) => println!("base: opens cleanly, {} events", report.n_events),
+        (false, Some(e)) => println!("base: FAILED validation — {e}"),
+        (false, None) => println!("base: FAILED validation"),
+    }
+    if report.p <= 12 {
+        println!("features: {}", report.feature_names.join(", "));
+    } else {
+        println!(
+            "features: {} … ({} total)",
+            report.feature_names.iter().take(8).cloned().collect::<Vec<_>>().join(", "),
+            report.p
+        );
+    }
+    match report.manifest_valid {
+        None => println!("manifest: none (no live appends)"),
+        Some(false) => println!(
+            "manifest: STALE — {} does not match the base header (readers ignore it)",
+            manifest_path(&report.path).display()
+        ),
+        Some(true) => {
+            println!("manifest: {} committed segment(s)", report.segments.len());
+            for s in &report.segments {
+                match (&s.ok, &s.error) {
+                    (true, _) => println!(
+                        "  seg{:06}: n={} events={} [OK] {}",
+                        s.seq,
+                        s.n,
+                        s.n_events,
+                        s.path.display()
+                    ),
+                    (false, e) => println!(
+                        "  seg{:06}: n={} events={} [FAILED: {}]",
+                        s.seq,
+                        s.n,
+                        s.n_events,
+                        e.as_deref().unwrap_or("unknown")
+                    ),
+                }
+            }
+            println!("merged view: {} rows total", report.total_rows());
+        }
+    }
+    if report.stray_files.is_empty() {
+        println!("stray files: none");
+    } else {
+        println!(
+            "stray files: {} (ignored by readers, cleaned at next append)",
+            report.stray_files.len()
+        );
+        for f in &report.stray_files {
+            println!("  {}", f.display());
+        }
+    }
+    println!("verdict: {}", if report.healthy() { "HEALTHY" } else { "UNHEALTHY" });
+    if !report.healthy() {
+        return Err(FastSurvivalError::Store(format!(
+            "store {} failed inspection",
+            report.path.display()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::live::append::append_rows;
+    use crate::store::writer::{write_store, DatasetRows};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fs_inspect_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn seed_store(dir: &Path) -> PathBuf {
+        let base = dir.join("s.fsds");
+        let ds = generate(&SyntheticConfig { n: 80, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 5 });
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &base, 32, "s").unwrap();
+        base
+    }
+
+    #[test]
+    fn healthy_store_with_segments_passes() {
+        let dir = temp_dir("ok");
+        let base = seed_store(&dir);
+        let extra = generate(&SyntheticConfig { n: 9, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 6 });
+        let mut rows = DatasetRows::new(&extra);
+        append_rows(&base, &mut rows, 32).unwrap();
+        let r = inspect(&base).unwrap();
+        assert!(r.healthy(), "{r:?}");
+        assert_eq!(r.checksum_stored, r.checksum_computed);
+        assert_eq!(r.manifest_valid, Some(true));
+        assert_eq!(r.segments.len(), 1);
+        assert_eq!(r.total_rows(), 89);
+        assert!(r.stray_files.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn orphan_segment_and_temp_files_are_reported_stray() {
+        let dir = temp_dir("stray");
+        let base = seed_store(&dir);
+        // A crash between segment write and manifest commit: segment
+        // file exists, manifest doesn't mention it.
+        let extra = generate(&SyntheticConfig { n: 7, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 7 });
+        let mut rows = DatasetRows::new(&extra);
+        write_store(&mut rows, &segment_path(&base, 1), 32, "orphan").unwrap();
+        std::fs::write(base.with_extension("fsds.partial.tmp"), b"junk").unwrap();
+        let r = inspect(&base).unwrap();
+        assert!(r.healthy(), "orphans don't make the store unhealthy: {r:?}");
+        assert_eq!(r.manifest_valid, None);
+        assert_eq!(r.stray_files.len(), 2, "{:?}", r.stray_files);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_header_checksum_is_unhealthy() {
+        let dir = temp_dir("bad");
+        let base = seed_store(&dir);
+        let mut bytes = std::fs::read(&base).unwrap();
+        bytes[9] ^= 0xFF; // flip a bit inside the checksummed header area
+        std::fs::write(&base, &bytes).unwrap();
+        match inspect(&base) {
+            // Depending on how decode guards, either inspect() itself
+            // errors or the report is unhealthy; both are correct.
+            Ok(r) => assert!(!r.healthy()),
+            Err(_) => {}
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

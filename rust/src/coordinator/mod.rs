@@ -9,6 +9,7 @@
 pub mod bigfit;
 pub mod cv;
 pub mod experiments;
+pub mod inspect;
 pub mod perf;
 
 pub use cv::{

@@ -5,6 +5,7 @@
 pub mod binarize;
 pub mod csv;
 pub mod datasets;
+pub mod split;
 pub mod survival;
 pub mod synthetic;
 

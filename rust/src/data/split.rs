@@ -1,0 +1,134 @@
+//! Shared deterministic index splits.
+//!
+//! Every consumer of a random split in the crate — the CV drivers'
+//! seeded k-folds and the online-learning watcher's holdout tail —
+//! routes through this module. The determinism contract is the one CV
+//! has always promised: the split is a pure function of `(n, k/frac,
+//! seed)`, derived entirely from a fresh seeded [`Rng`] on the calling
+//! thread, so it is independent of thread count, call order, and any
+//! other process state. The watcher relies on this to validate a
+//! candidate refit against the *same* holdout rows the previous publish
+//! was validated on, even across process restarts.
+
+use crate::util::rng::Rng;
+
+/// A seeded permutation of `0..n` — the primitive every split here is
+/// built from.
+pub fn seeded_permutation(n: usize, seed: u64) -> Vec<usize> {
+    Rng::new(seed).permutation(n)
+}
+
+/// Shuffled k-fold split over `0..n`: returns `(train, test)` index
+/// pairs. Fold membership is round-robin over the permutation
+/// (`folds[i % k]`), which keeps fold sizes within one of each other.
+///
+/// This is the exact assignment `SurvivalDataset::kfold_indices` has
+/// always produced; that method now delegates here, so existing seeded
+/// CV folds are bitwise unchanged.
+pub fn kfold_indices(n: usize, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n);
+    let perm = rng.permutation(n);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &s) in perm.iter().enumerate() {
+        folds[i % k].push(s);
+    }
+    (0..k)
+        .map(|f| {
+            let test = folds[f].clone();
+            let train: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| folds[g].iter().copied())
+                .collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Seeded k-fold split (fresh [`Rng`] from `seed`).
+pub fn kfold_seeded(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let mut rng = Rng::new(seed);
+    kfold_indices(n, k, &mut rng)
+}
+
+/// Deterministic holdout split: `(train, holdout)` index pairs where the
+/// holdout set is the *tail* of the seeded permutation — `⌈frac·n⌉`
+/// rows, at least 1 and at most n−1 so both sides stay non-empty.
+///
+/// Callers that need a stable holdout as the dataset grows should keep
+/// `seed` fixed; rows keep their identity (indices into the caller's
+/// ordering), so two datasets that share a prefix share most of the
+/// holdout by construction of the Fisher–Yates permutation only when n
+/// is unchanged — the watcher therefore always splits the *merged*
+/// store and compares candidate vs incumbent on the identical index
+/// set, never holdouts from two different n.
+pub fn holdout_tail(n: usize, seed: u64, frac: f64) -> (Vec<usize>, Vec<usize>) {
+    assert!(n >= 2, "holdout_tail needs at least 2 rows, got {n}");
+    assert!(
+        frac > 0.0 && frac < 1.0,
+        "holdout fraction must be in (0, 1), got {frac}"
+    );
+    let h = ((frac * n as f64).ceil() as usize).clamp(1, n - 1);
+    let perm = seeded_permutation(n, seed);
+    let cut = n - h;
+    (perm[..cut].to_vec(), perm[cut..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_deterministic_and_complete() {
+        let a = seeded_permutation(100, 7);
+        let b = seeded_permutation(100, 7);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(a, seeded_permutation(100, 8));
+    }
+
+    #[test]
+    fn kfold_partitions_and_is_seed_deterministic() {
+        let folds = kfold_seeded(23, 4, 11);
+        assert_eq!(folds.len(), 4);
+        for (train, test) in &folds {
+            let mut all: Vec<usize> = train.iter().chain(test.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..23).collect::<Vec<_>>());
+        }
+        assert_eq!(folds, kfold_seeded(23, 4, 11));
+        // Fold sizes within one of each other.
+        for (_, test) in &folds {
+            assert!(test.len() == 5 || test.len() == 6);
+        }
+    }
+
+    #[test]
+    fn holdout_tail_partitions_deterministically() {
+        let (train, hold) = holdout_tail(200, 5, 0.1);
+        assert_eq!(hold.len(), 20);
+        assert_eq!(train.len(), 180);
+        let mut all: Vec<usize> = train.iter().chain(hold.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+        assert_eq!(holdout_tail(200, 5, 0.1), (train, hold));
+        assert_ne!(holdout_tail(200, 6, 0.1).1, holdout_tail(200, 5, 0.1).1);
+    }
+
+    #[test]
+    fn holdout_tail_clamps_to_nonempty_sides() {
+        let (train, hold) = holdout_tail(2, 1, 0.01);
+        assert_eq!(hold.len(), 1);
+        assert_eq!(train.len(), 1);
+        let (train, hold) = holdout_tail(5, 1, 0.99);
+        assert_eq!(hold.len(), 4);
+        assert_eq!(train.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "holdout fraction")]
+    fn holdout_tail_rejects_bad_frac() {
+        holdout_tail(10, 1, 1.5);
+    }
+}

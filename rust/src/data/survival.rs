@@ -87,23 +87,12 @@ impl SurvivalDataset {
     }
 
     /// Shuffled k-fold split: returns (train, test) index pairs.
+    /// Delegates to the shared [`crate::data::split`] helper so CV and
+    /// the online-learning validator agree on one split convention;
+    /// the assignment is bitwise identical to what this method always
+    /// produced.
     pub fn kfold_indices(&self, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
-        assert!(k >= 2 && k <= self.n());
-        let perm = rng.permutation(self.n());
-        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
-        for (i, &s) in perm.iter().enumerate() {
-            folds[i % k].push(s);
-        }
-        (0..k)
-            .map(|f| {
-                let test = folds[f].clone();
-                let train: Vec<usize> = (0..k)
-                    .filter(|&g| g != f)
-                    .flat_map(|g| folds[g].iter().copied())
-                    .collect();
-                (train, test)
-            })
-            .collect()
+        crate::data::split::kfold_indices(self.n(), k, rng)
     }
 }
 

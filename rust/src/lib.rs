@@ -24,7 +24,10 @@
 //!   big for RAM go through [`store`]: a sorted columnar on-disk format
 //!   (`.fsds`) with streaming ingestion and a chunked two-phase trainer
 //!   (sampled-block warmup + exact out-of-core surrogate CD) that
-//!   matches the in-memory fit bit for bit.
+//!   matches the in-memory fit bit for bit. Data that keeps arriving
+//!   goes through [`live`]: crash-safe segment appends over a base
+//!   store, incremental warm refits carrying a KKT parity certificate,
+//!   and a watch → validate → publish loop into the serving registry.
 
 pub mod api;
 pub mod baselines;
@@ -33,6 +36,7 @@ pub mod cox;
 pub mod data;
 pub mod error;
 pub mod linalg;
+pub mod live;
 pub mod metrics;
 pub mod optim;
 pub mod path;

@@ -1,0 +1,347 @@
+//! Append and compaction over a base `.fsds` store.
+//!
+//! [`append_rows`] drains a [`RowSource`] into a fresh merge-sorted
+//! segment store next to the base (the ordinary writer builds it:
+//! header + checksum + canonical descending-time sort + atomic
+//! `.partial.tmp` publish), then commits it by atomically rewriting the
+//! manifest. [`compact`] streams base + segments back through the
+//! writer into a single store and retires the manifest — after which
+//! the merged view and a cold-written store are the same file.
+//!
+//! Crash protocol (every step leaves an openable store):
+//! 1. segment written, manifest not yet updated → orphan segment,
+//!    ignored by readers, deleted by the next append/compact;
+//! 2. compacted store renamed over the base, manifest not yet deleted →
+//!    the manifest's base signature no longer matches, so readers treat
+//!    the (new) base as authoritative and the next append cleans up;
+//! 3. manifest deleted, segment files not yet deleted → orphans, as (1).
+
+use super::manifest::{
+    self, base_signature, clean_stray_files, read_name_and_features, segment_path, Manifest,
+    SegmentEntry,
+};
+use crate::error::{FastSurvivalError, Result};
+use crate::store::{write_store, ChunkedDataset, CoxData, RowSource, StoreSummary};
+use std::path::{Path, PathBuf};
+
+/// What a committed append looked like.
+#[derive(Clone, Debug)]
+pub struct AppendSummary {
+    /// Sequence number of the new segment.
+    pub seq: u64,
+    /// Path of the committed segment file.
+    pub segment: PathBuf,
+    /// Rows / events in the new segment.
+    pub n: usize,
+    pub n_events: usize,
+    /// Total rows in the merged view (base + all committed segments).
+    pub total_rows: usize,
+    /// Committed segments after this append.
+    pub segments: usize,
+}
+
+/// Append `source`'s rows to the store at `base` as a new sorted
+/// segment. `chunk_rows` of 0 reuses the base store's chunk size. The
+/// source's feature schema must match the base store's.
+pub fn append_rows(
+    base: &Path,
+    source: &mut dyn RowSource,
+    chunk_rows: usize,
+) -> Result<AppendSummary> {
+    let header = manifest::read_header(base)?;
+    let (base_name, base_features) = read_name_and_features(base)?;
+    if source.n_features() != header.p {
+        return Err(FastSurvivalError::InvalidData(format!(
+            "appended rows have {} features, store has {}",
+            source.n_features(),
+            header.p
+        )));
+    }
+    let names = source.feature_names();
+    if names != base_features {
+        return Err(FastSurvivalError::InvalidData(format!(
+            "appended feature names {names:?} do not match the store's {base_features:?}"
+        )));
+    }
+    // Resume from a valid manifest or start fresh; either way, sweep
+    // the crash leftovers (orphan segments, stale-manifest segments,
+    // writer temp files) before writing anything new.
+    let mut m = match Manifest::load_valid(base)? {
+        Some(m) => m,
+        None => Manifest::fresh(base)?,
+    };
+    clean_stray_files(base, Some(&m))?;
+
+    let seq = m.next_seq();
+    let seg_path = segment_path(base, seq);
+    let chunk_rows = if chunk_rows == 0 { header.chunk_rows } else { chunk_rows };
+    let seg_name = format!("{base_name}.seg{seq:06}");
+    let summary = write_store(source, &seg_path, chunk_rows, &seg_name)?;
+
+    // Commit: the manifest rewrite is the only mutation readers see.
+    m.segments.push(SegmentEntry { seq, n: summary.n, n_events: summary.n_events });
+    if let Err(e) = m.save(base) {
+        // Failed commit: the segment is an orphan; remove it eagerly so
+        // the failed append leaves no trace at all.
+        let _ = std::fs::remove_file(&seg_path);
+        return Err(e);
+    }
+    Ok(AppendSummary {
+        seq,
+        segment: seg_path,
+        n: summary.n,
+        n_events: summary.n_events,
+        total_rows: m.base.n + m.appended_rows(),
+        segments: m.segments.len(),
+    })
+}
+
+/// A validated `.fsds` store replayed as a forward [`RowSource`] (rows
+/// come out in the store's sorted order, one buffered chunk at a time).
+pub struct StoreRows {
+    store: ChunkedDataset,
+    chunk: Vec<f64>,
+    chunk_idx: usize,
+    rows_in_chunk: usize,
+    row: usize,
+}
+
+impl StoreRows {
+    pub fn new(store: ChunkedDataset) -> Self {
+        StoreRows { store, chunk: Vec::new(), chunk_idx: 0, rows_in_chunk: 0, row: 0 }
+    }
+}
+
+impl RowSource for StoreRows {
+    fn n_features(&self) -> usize {
+        self.store.meta().p
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        self.store.meta().feature_names.clone()
+    }
+
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        let meta = self.store.meta_arc();
+        if self.row >= self.rows_in_chunk {
+            if self.chunk_idx >= meta.n_chunks {
+                return Ok(None);
+            }
+            self.rows_in_chunk = self.store.load_chunk(self.chunk_idx, &mut self.chunk)?;
+            self.chunk_idx += 1;
+            self.row = 0;
+        }
+        let (k, rows) = (self.row, self.rows_in_chunk);
+        feats.clear();
+        for j in 0..meta.p {
+            feats.push(self.chunk[j * rows + k]);
+        }
+        let global = (self.chunk_idx - 1) * meta.chunk_rows + k;
+        self.row += 1;
+        Ok(Some((meta.time[global], meta.event[global])))
+    }
+}
+
+/// Several row sources replayed back to back — the compaction arrival
+/// order (base rows in base order, then each segment's rows in segment
+/// order). The live merged reader computes its statistics in this same
+/// order, which is why its metadata matches a compacted store bit for
+/// bit.
+pub struct ChainRows {
+    sources: Vec<StoreRows>,
+    current: usize,
+}
+
+impl ChainRows {
+    pub fn new(sources: Vec<StoreRows>) -> Self {
+        ChainRows { sources, current: 0 }
+    }
+}
+
+impl RowSource for ChainRows {
+    fn n_features(&self) -> usize {
+        self.sources[0].n_features()
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        self.sources[0].feature_names()
+    }
+
+    fn next_row(&mut self, feats: &mut Vec<f64>) -> Result<Option<(f64, bool)>> {
+        while self.current < self.sources.len() {
+            if let Some(out) = self.sources[self.current].next_row(feats)? {
+                return Ok(Some(out));
+            }
+            self.current += 1;
+        }
+        Ok(None)
+    }
+}
+
+/// Merge all committed segments back into the base store. Streams base
+/// + segments through the ordinary writer to `{base}.compact.tmp`, then
+/// (the commit point) renames it over the base, retires the manifest,
+/// and deletes the segment files. A store with no committed segments is
+/// returned unchanged. `chunk_rows` of 0 keeps the base chunk size.
+pub fn compact(base: &Path, chunk_rows: usize) -> Result<StoreSummary> {
+    let header = manifest::read_header(base)?;
+    let (base_name, _) = read_name_and_features(base)?;
+    let chunk_rows = if chunk_rows == 0 { header.chunk_rows } else { chunk_rows };
+    let m_opt = Manifest::load_valid(base)?;
+    if m_opt.as_ref().is_none_or(|m| m.segments.is_empty()) {
+        // Nothing to merge; still sweep crash leftovers.
+        clean_stray_files(base, m_opt.as_ref())?;
+        let store = ChunkedDataset::open(base)?;
+        let meta = store.meta();
+        return Ok(StoreSummary {
+            n: meta.n,
+            p: meta.p,
+            chunk_rows: meta.chunk_rows,
+            n_chunks: meta.n_chunks,
+            n_events: meta.n_events,
+            bytes: header.expected_file_len(),
+        });
+    }
+    let m = m_opt.unwrap();
+    clean_stray_files(base, Some(&m))?;
+
+    let mut sources = vec![StoreRows::new(ChunkedDataset::open(base)?)];
+    for seg in &m.segments {
+        sources.push(StoreRows::new(ChunkedDataset::open(&segment_path(base, seg.seq))?));
+    }
+    let mut chain = ChainRows::new(sources);
+    let merged_tmp = PathBuf::from(format!("{}.compact.tmp", base.display()));
+    let summary = write_store(&mut chain, &merged_tmp, chunk_rows, &base_name)?;
+    drop(chain); // release the base store's read handle before replacing it
+
+    // Commit: the new base lands atomically; from here the old manifest
+    // is stale by signature, so any crash below only leaves cleanable
+    // leftovers.
+    std::fs::rename(&merged_tmp, base).map_err(|e| {
+        FastSurvivalError::io(
+            format!("publishing {} -> {}", merged_tmp.display(), base.display()),
+            e,
+        )
+    })?;
+    let _ = std::fs::remove_file(manifest::manifest_path(base));
+    for seg in &m.segments {
+        let _ = std::fs::remove_file(segment_path(base, seg.seq));
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::data::SurvivalDataset;
+    use crate::store::writer::DatasetRows;
+
+    fn temp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_live_append_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn gen(n: usize, seed: u64) -> SurvivalDataset {
+        generate(&SyntheticConfig { n, p: 4, rho: 0.3, k: 2, s: 0.1, seed })
+    }
+
+    fn base_store(tag: &str, n: usize, seed: u64) -> PathBuf {
+        let out = temp_dir().join(format!("{tag}.fsds"));
+        let ds = gen(n, seed);
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &out, 16, tag).unwrap();
+        out
+    }
+
+    #[test]
+    fn append_commits_a_segment_and_compact_retires_it() {
+        let base = base_store("appends", 60, 1);
+        let extra = gen(13, 2);
+        let mut rows = DatasetRows::new(&extra);
+        let s1 = append_rows(&base, &mut rows, 0).unwrap();
+        assert_eq!((s1.seq, s1.n, s1.total_rows, s1.segments), (1, 13, 73, 1));
+        assert!(s1.segment.exists());
+        // Segments are complete stores in their own right.
+        let seg = ChunkedDataset::open(&s1.segment).unwrap();
+        assert_eq!(seg.meta().n, 13);
+        assert_eq!(seg.meta().n_events, extra.n_events());
+
+        let extra2 = gen(7, 3);
+        let mut rows = DatasetRows::new(&extra2);
+        let s2 = append_rows(&base, &mut rows, 0).unwrap();
+        assert_eq!((s2.seq, s2.total_rows, s2.segments), (2, 80, 2));
+
+        let merged = compact(&base, 0).unwrap();
+        assert_eq!(merged.n, 80);
+        assert_eq!(merged.n_events, gen(60, 1).n_events() + extra.n_events() + extra2.n_events());
+        assert!(Manifest::load(&base).unwrap().is_none(), "manifest retired");
+        assert!(!s1.segment.exists() && !segment_path(&base, 2).exists());
+        // The compacted store opens and validates (sorted, checksummed).
+        let store = ChunkedDataset::open(&base).unwrap();
+        assert_eq!(store.meta().n, 80);
+        // Compacting again is a no-op.
+        let again = compact(&base, 0).unwrap();
+        assert_eq!(again.n, 80);
+    }
+
+    #[test]
+    fn schema_mismatches_are_typed_errors() {
+        let base = base_store("schema", 40, 5);
+        // Wrong width.
+        let wrong = generate(&SyntheticConfig { n: 5, p: 3, rho: 0.3, k: 2, s: 0.1, seed: 7 });
+        let mut rows = DatasetRows::new(&wrong);
+        assert!(matches!(
+            append_rows(&base, &mut rows, 0),
+            Err(FastSurvivalError::InvalidData(_))
+        ));
+        // Right width, wrong names.
+        let mut renamed = gen(5, 7);
+        renamed.feature_names[2] = "sneaky".into();
+        let mut rows = DatasetRows::new(&renamed);
+        let err = append_rows(&base, &mut rows, 0).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::InvalidData(_)));
+        assert!(err.to_string().contains("sneaky"));
+    }
+
+    #[test]
+    fn store_rows_replays_the_sorted_order() {
+        let base = base_store("replay", 45, 9);
+        let mut store = ChunkedDataset::open(&base).unwrap();
+        let ds = store.to_dataset().unwrap();
+        let mut src = StoreRows::new(ChunkedDataset::open(&base).unwrap());
+        let mut feats = Vec::new();
+        for i in 0..45 {
+            let (t, e) = src.next_row(&mut feats).unwrap().unwrap();
+            assert_eq!(t, ds.time[i], "row {i}");
+            assert_eq!(e, ds.event[i]);
+            for j in 0..4 {
+                assert_eq!(feats[j], ds.x.get(i, j), "row {i} col {j}");
+            }
+        }
+        assert!(src.next_row(&mut feats).unwrap().is_none());
+    }
+
+    #[test]
+    fn orphan_segments_are_swept_by_the_next_append() {
+        let base = base_store("orphans", 30, 11);
+        // Simulate a crash between segment write and manifest commit:
+        // a fully written segment with no manifest entry.
+        let extra = gen(6, 12);
+        let mut rows = DatasetRows::new(&extra);
+        let orphan = segment_path(&base, 1);
+        write_store(&mut rows, &orphan, 8, "orphan").unwrap();
+        assert!(orphan.exists());
+        assert!(Manifest::load(&base).unwrap().is_none());
+        // Next append sweeps the orphan and commits seq 1 itself.
+        let extra2 = gen(4, 13);
+        let mut rows = DatasetRows::new(&extra2);
+        let s = append_rows(&base, &mut rows, 0).unwrap();
+        assert_eq!(s.seq, 1);
+        assert_eq!(s.n, 4, "the orphan's rows must not leak into the commit");
+        let m = Manifest::load_valid(&base).unwrap().unwrap();
+        assert_eq!(m.segments.len(), 1);
+        assert_eq!(m.segments[0].n, 4);
+    }
+}

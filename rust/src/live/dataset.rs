@@ -1,0 +1,575 @@
+//! [`LiveDataset`]: base store + committed append segments, read as one
+//! merged [`CoxData`] in global descending-time order — without
+//! rewriting a byte.
+//!
+//! The merge is defined by the engine's own canonical comparator:
+//! concatenate the sources' rows in *arrival order* (base rows in base
+//! order, then each segment's rows in segment order — exactly the
+//! stream a compaction feeds the writer) and stable-sort by
+//! [`descending_time_order`]. Because each source is already sorted,
+//! the result is a k-way merge; because it is the *same* stable sort
+//! the writer runs at compaction, the merged view's row order, Welford
+//! statistics, and per-column constants are all bitwise identical to
+//! what [`super::append::compact`] will produce — reading live and
+//! reading after compaction are indistinguishable to the trainer.
+//!
+//! Reads stay chunk-granular: within any global row range, each
+//! source's contribution is a run of consecutive within-source rows
+//! (merging preserves per-source order), so a merged chunk costs one
+//! contiguous range read per source per column.
+
+use super::manifest::{segment_path, Manifest, SegmentEntry};
+use crate::cox::lipschitz::LipschitzPair;
+use crate::cox::problem::{build_tie_groups, descending_time_order};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::linalg::Matrix;
+use crate::store::dataset::read_doubles_append;
+use crate::store::format::StoreHeader;
+use crate::store::source::RunningStats;
+use crate::store::{ChunkedDataset, CoxData, StoreMeta};
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+/// One underlying validated store (base or segment).
+struct Source {
+    file: File,
+    header: StoreHeader,
+    meta: Arc<StoreMeta>,
+}
+
+/// The merged live view over base + segments.
+pub struct LiveDataset {
+    sources: Vec<Source>,
+    /// Global sorted row g → index into the arrival-order concatenation
+    /// of all sources' rows. The identity when there are no segments.
+    order: Vec<usize>,
+    /// Row-count prefix sums over sources (len = sources + 1).
+    offsets: Vec<usize>,
+    meta: Arc<StoreMeta>,
+    /// Reusable buffers: raw bytes, per-source gather, concatenation.
+    bytebuf: Vec<u8>,
+    srcbufs: Vec<Vec<f64>>,
+    concatbuf: Vec<f64>,
+}
+
+impl LiveDataset {
+    /// Open the base store plus every segment its (valid) manifest
+    /// lists. A missing or stale manifest means the base alone is
+    /// served — orphan segment files on disk are ignored, exactly as
+    /// the crash protocol requires.
+    pub fn open(path: &Path) -> Result<LiveDataset> {
+        let manifest = Manifest::load_valid(path)?;
+        let mut stores = vec![ChunkedDataset::open(path)?];
+        if let Some(m) = &manifest {
+            for seg in &m.segments {
+                let sp = segment_path(path, seg.seq);
+                let store = ChunkedDataset::open(&sp)?;
+                check_entry(seg, store.meta(), &sp)?;
+                stores.push(store);
+            }
+        }
+        LiveDataset::from_stores(stores)
+    }
+
+    /// Build the merged view over already-validated stores (index 0 is
+    /// the base).
+    pub fn from_stores(stores: Vec<ChunkedDataset>) -> Result<LiveDataset> {
+        assert!(!stores.is_empty());
+        let base_meta = stores[0].meta_arc();
+        let (p, chunk_rows) = (base_meta.p, base_meta.chunk_rows);
+        for s in &stores[1..] {
+            if s.meta().p != p || s.meta().feature_names != base_meta.feature_names {
+                return Err(FastSurvivalError::Store(format!(
+                    "segment {} does not share the base store's feature schema",
+                    s.path().display()
+                )));
+            }
+        }
+        let sources: Vec<Source> = stores
+            .into_iter()
+            .map(|s| {
+                let (file, header, meta) = s.into_parts();
+                Source { file, header, meta }
+            })
+            .collect();
+
+        let mut offsets = vec![0usize];
+        for s in &sources {
+            offsets.push(offsets.last().unwrap() + s.meta.n);
+        }
+        let n = *offsets.last().unwrap();
+
+        if sources.len() == 1 {
+            // No segments: the base is the merged view verbatim.
+            let meta = Arc::clone(&sources[0].meta);
+            return Ok(LiveDataset {
+                sources,
+                order: (0..n).collect(),
+                offsets,
+                meta,
+                bytebuf: Vec::new(),
+                srcbufs: vec![Vec::new()],
+                concatbuf: Vec::new(),
+            });
+        }
+
+        // Arrival-order concatenation of the O(n) columns, then the
+        // writer's own stable sort — the merge.
+        let mut concat_time = Vec::with_capacity(n);
+        let mut concat_event = Vec::with_capacity(n);
+        for s in &sources {
+            concat_time.extend_from_slice(&s.meta.time);
+            concat_event.extend_from_slice(&s.meta.event);
+        }
+        let order = descending_time_order(&concat_time);
+        let time: Vec<f64> = order.iter().map(|&i| concat_time[i]).collect();
+        let event: Vec<bool> = order.iter().map(|&i| concat_event[i]).collect();
+        let delta: Vec<f64> = event.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+        let (groups, _group_of) = build_tie_groups(&time, &delta);
+        let n_events = event.iter().filter(|&&e| e).count();
+
+        // One streaming pass per column: Welford stats in arrival order
+        // (the writer's convention — per-column accumulators are
+        // independent, so per-column replay is bit-identical to the
+        // writer's per-row push), then Xᵀδ / Lipschitz / binary flags in
+        // merged ascending row order (the reader's convention).
+        let mut group_end_ne = vec![0.0_f64; n];
+        for g in &groups {
+            if g.n_events > 0 {
+                group_end_ne[g.end - 1] = g.n_events as f64;
+            }
+        }
+        let mut sources = sources;
+        let mut bytebuf = Vec::new();
+        let mut concat_col: Vec<f64> = Vec::with_capacity(n);
+        let mut means = Vec::with_capacity(p);
+        let mut stds = Vec::with_capacity(p);
+        let mut xt_delta = Vec::with_capacity(p);
+        let mut lipschitz = Vec::with_capacity(p);
+        let mut col_binary = Vec::with_capacity(p);
+        for j in 0..p {
+            concat_col.clear();
+            for s in sources.iter_mut() {
+                let rows = s.meta.n;
+                read_col_range(&mut s.file, &s.header, &mut bytebuf, j, 0, rows, &mut concat_col)?;
+            }
+            let mut st = RunningStats::new(1);
+            for v in &concat_col {
+                st.push_row(std::slice::from_ref(v));
+            }
+            let (m, s) = st.finish();
+            means.push(m[0]);
+            stds.push(s[0]);
+
+            let (mut xtd, mut h, mut l) = (0.0_f64, f64::NEG_INFINITY, f64::INFINITY);
+            let mut lip = LipschitzPair::default();
+            let mut binary = true;
+            for g in 0..n {
+                let x = concat_col[order[g]];
+                xtd += x * delta[g];
+                if x > h {
+                    h = x;
+                }
+                if x < l {
+                    l = x;
+                }
+                if x != 0.0 && x != 1.0 {
+                    binary = false;
+                }
+                let ne = group_end_ne[g];
+                if ne > 0.0 {
+                    lip.add_group(ne, h - l);
+                }
+            }
+            xt_delta.push(xtd);
+            lipschitz.push(lip);
+            col_binary.push(binary);
+        }
+
+        let meta = StoreMeta {
+            n,
+            p,
+            chunk_rows,
+            n_chunks: n.div_ceil(chunk_rows),
+            name: base_meta.name.clone(),
+            feature_names: base_meta.feature_names.clone(),
+            means,
+            stds,
+            time,
+            delta,
+            event,
+            groups,
+            n_events,
+            xt_delta,
+            lipschitz,
+            col_binary,
+        };
+        let srcbufs = sources.iter().map(|_| Vec::new()).collect();
+        Ok(LiveDataset {
+            sources,
+            order,
+            offsets,
+            meta: Arc::new(meta),
+            bytebuf,
+            srcbufs,
+            concatbuf: Vec::new(),
+        })
+    }
+
+    /// Number of committed append segments in this view.
+    pub fn n_segments(&self) -> usize {
+        self.sources.len() - 1
+    }
+
+    /// Rows contributed by segments (the "new" rows a warm refit's
+    /// warmup should concentrate on).
+    pub fn appended_rows(&self) -> usize {
+        self.meta.n - self.sources[0].meta.n
+    }
+
+    /// Every time-contiguous block the segments contribute, as
+    /// `(source index ≥ 1, chunk index within that source)` — the
+    /// sampling pool for the incremental warmup.
+    pub fn segment_blocks(&self) -> Vec<(usize, usize)> {
+        let mut blocks = Vec::new();
+        for (s, src) in self.sources.iter().enumerate().skip(1) {
+            for c in 0..src.meta.n_chunks {
+                blocks.push((s, c));
+            }
+        }
+        blocks
+    }
+
+    /// A segment source's own metadata (sorted times/events for block
+    /// subproblems).
+    pub fn source_meta(&self, s: usize) -> &StoreMeta {
+        &self.sources[s].meta
+    }
+
+    /// Load one column-major chunk of a single source (`rows`, plus the
+    /// chunk's starting row within that source).
+    pub fn load_source_chunk(
+        &mut self,
+        s: usize,
+        c: usize,
+        buf: &mut Vec<f64>,
+    ) -> Result<(usize, usize)> {
+        let src = &mut self.sources[s];
+        let rows = src.header.rows_in_chunk(c);
+        buf.clear();
+        read_doubles_append(
+            &mut src.file,
+            &mut self.bytebuf,
+            src.header.col_segment_offset(c, 0),
+            rows * src.header.p,
+            buf,
+        )
+        .map(|()| (rows, c * src.header.chunk_rows))
+    }
+
+    /// Which source the arrival-concatenation index `ci` falls in.
+    fn source_of(&self, ci: usize) -> usize {
+        let mut s = 0;
+        while self.offsets[s + 1] <= ci {
+            s += 1;
+        }
+        s
+    }
+
+    /// Materialize a subset of merged rows (by global sorted index) as
+    /// an in-memory dataset — the watcher's holdout extraction. Costs
+    /// one full-column scan per feature; intended for holdout-sized
+    /// subsets, not the whole store.
+    pub fn subset_rows(&mut self, idx: &[usize]) -> Result<SurvivalDataset> {
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(self.meta.p);
+        let mut col = Vec::new();
+        for j in 0..self.meta.p {
+            self.load_col(j, &mut col)?;
+            cols.push(idx.iter().map(|&i| col[i]).collect());
+        }
+        let x = Matrix::from_columns(&cols);
+        let time: Vec<f64> = idx.iter().map(|&i| self.meta.time[i]).collect();
+        let event: Vec<bool> = idx.iter().map(|&i| self.meta.event[i]).collect();
+        let mut ds = SurvivalDataset::new(x, time, event, "holdout");
+        ds.feature_names = self.meta.feature_names.clone();
+        Ok(ds)
+    }
+}
+
+/// A committed manifest entry must describe the segment file it points
+/// to — a mismatch means the store directory was tampered with.
+fn check_entry(entry: &SegmentEntry, meta: &StoreMeta, path: &Path) -> Result<()> {
+    if entry.n != meta.n || entry.n_events != meta.n_events {
+        return Err(FastSurvivalError::Store(format!(
+            "manifest lists segment {} as n={} events={} but the file holds n={} events={}",
+            path.display(),
+            entry.n,
+            entry.n_events,
+            meta.n,
+            meta.n_events
+        )));
+    }
+    Ok(())
+}
+
+impl CoxData for LiveDataset {
+    fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    fn meta_arc(&self) -> Arc<StoreMeta> {
+        Arc::clone(&self.meta)
+    }
+
+    fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize> {
+        let r0 = c * self.meta.chunk_rows;
+        let rows = self.meta.chunk_rows.min(self.meta.n - r0);
+        let n_src = self.sources.len();
+        // Per-source run of within-source rows this global range needs.
+        let mut lo = vec![usize::MAX; n_src];
+        let mut hi = vec![0usize; n_src];
+        for g in r0..r0 + rows {
+            let ci = self.order[g];
+            let s = self.source_of(ci);
+            let pos = ci - self.offsets[s];
+            lo[s] = lo[s].min(pos);
+            hi[s] = hi[s].max(pos + 1);
+        }
+        buf.clear();
+        buf.reserve(rows * self.meta.p);
+        for j in 0..self.meta.p {
+            for s in 0..n_src {
+                if lo[s] < hi[s] {
+                    let src = &mut self.sources[s];
+                    self.srcbufs[s].clear();
+                    read_col_range(
+                        &mut src.file,
+                        &src.header,
+                        &mut self.bytebuf,
+                        j,
+                        lo[s],
+                        hi[s] - lo[s],
+                        &mut self.srcbufs[s],
+                    )?;
+                }
+            }
+            for k in 0..rows {
+                let ci = self.order[r0 + k];
+                let s = self.source_of(ci);
+                let pos = ci - self.offsets[s];
+                buf.push(self.srcbufs[s][pos - lo[s]]);
+            }
+        }
+        Ok(rows)
+    }
+
+    fn load_col(&mut self, l: usize, buf: &mut Vec<f64>) -> Result<()> {
+        // Arrival-order concatenation (one contiguous full-column read
+        // per source — n·8 bytes total, same I/O as a single store),
+        // then the merge permutation.
+        let mut concat = std::mem::take(&mut self.concatbuf);
+        concat.clear();
+        for s in self.sources.iter_mut() {
+            read_col_range(&mut s.file, &s.header, &mut self.bytebuf, l, 0, s.meta.n, &mut concat)?;
+        }
+        buf.clear();
+        buf.reserve(self.meta.n);
+        for &ci in &self.order {
+            buf.push(concat[ci]);
+        }
+        self.concatbuf = concat;
+        Ok(())
+    }
+}
+
+/// Read rows `[start, start+len)` of column `l` from one store,
+/// spanning its chunk boundaries with one contiguous read per chunk
+/// touched.
+fn read_col_range(
+    file: &mut File,
+    header: &StoreHeader,
+    bytebuf: &mut Vec<u8>,
+    l: usize,
+    start: usize,
+    len: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    let mut row = start;
+    let end = start + len;
+    while row < end {
+        let c = row / header.chunk_rows;
+        let within = row - c * header.chunk_rows;
+        let crows = header.rows_in_chunk(c);
+        let take = (crows - within).min(end - row);
+        read_doubles_append(
+            file,
+            bytebuf,
+            header.col_segment_offset(c, l) + 8 * within as u64,
+            take,
+            out,
+        )?;
+        row += take;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::live::append::append_rows;
+    use crate::store::writer::{write_store, DatasetRows};
+    use std::path::PathBuf;
+
+    fn temp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_live_dataset_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn gen(n: usize, seed: u64) -> SurvivalDataset {
+        generate(&SyntheticConfig { n, p: 5, rho: 0.3, k: 2, s: 0.1, seed })
+    }
+
+    fn store_with_segments(tag: &str) -> (PathBuf, usize) {
+        let base = temp_dir().join(format!("{tag}.fsds"));
+        let ds = gen(90, 21);
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &base, 16, tag).unwrap();
+        let mut total = 90;
+        for (n, seed) in [(17, 22), (11, 23)] {
+            let extra = gen(n, seed);
+            let mut rows = DatasetRows::new(&extra);
+            append_rows(&base, &mut rows, 8).unwrap();
+            total += n;
+        }
+        (base, total)
+    }
+
+    #[test]
+    fn merged_view_matches_compacted_store_bitwise() {
+        let (base, total) = store_with_segments("parity");
+        let mut live = LiveDataset::open(&base).unwrap();
+        assert_eq!(live.n_segments(), 2);
+        assert_eq!(live.appended_rows(), 28);
+        assert_eq!(live.meta().n, total);
+        let live_meta = live.meta_arc();
+        let mut live_cols: Vec<Vec<f64>> = Vec::new();
+        let mut col = Vec::new();
+        for j in 0..5 {
+            live.load_col(j, &mut col).unwrap();
+            live_cols.push(col.clone());
+        }
+
+        // Compact into a single store; every derived quantity and every
+        // byte of column data must agree bitwise.
+        super::super::append::compact(&base, 0).unwrap();
+        let mut flat = ChunkedDataset::open(&base).unwrap();
+        let fm = flat.meta_arc();
+        assert_eq!(fm.n, total);
+        assert_eq!(fm.time, live_meta.time);
+        assert_eq!(fm.event, live_meta.event);
+        assert_eq!(fm.groups, live_meta.groups);
+        assert_eq!(fm.means, live_meta.means, "Welford order must match the writer");
+        assert_eq!(fm.stds, live_meta.stds);
+        assert_eq!(fm.xt_delta, live_meta.xt_delta);
+        assert_eq!(fm.lipschitz, live_meta.lipschitz);
+        assert_eq!(fm.col_binary, live_meta.col_binary);
+        for j in 0..5 {
+            flat.load_col(j, &mut col).unwrap();
+            assert_eq!(col, live_cols[j], "column {j}");
+        }
+    }
+
+    #[test]
+    fn chunk_reads_match_column_reads() {
+        let (base, total) = store_with_segments("chunks");
+        let mut live = LiveDataset::open(&base).unwrap();
+        let meta = live.meta_arc();
+        let mut cols: Vec<Vec<f64>> = Vec::new();
+        let mut col = Vec::new();
+        for j in 0..meta.p {
+            live.load_col(j, &mut col).unwrap();
+            assert_eq!(col.len(), total);
+            cols.push(col.clone());
+        }
+        let mut chunk = Vec::new();
+        for c in 0..meta.n_chunks {
+            let rows = live.load_chunk(c, &mut chunk).unwrap();
+            let r0 = c * meta.chunk_rows;
+            for j in 0..meta.p {
+                assert_eq!(
+                    &chunk[j * rows..(j + 1) * rows],
+                    &cols[j][r0..r0 + rows],
+                    "chunk {c} column {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_manifest_serves_the_base_alone() {
+        let dir = temp_dir();
+        let base = dir.join("plain.fsds");
+        let ds = gen(40, 31);
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &base, 16, "plain").unwrap();
+        // An orphan segment on disk (crash before manifest commit) is
+        // invisible to the reader.
+        let orphan = segment_path(&base, 1);
+        let extra = gen(9, 32);
+        let mut rows = DatasetRows::new(&extra);
+        write_store(&mut rows, &orphan, 8, "orphan").unwrap();
+
+        let mut live = LiveDataset::open(&base).unwrap();
+        assert_eq!(live.n_segments(), 0);
+        assert_eq!(live.meta().n, 40);
+        // And it is bitwise the plain store.
+        let mut flat = ChunkedDataset::open(&base).unwrap();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for j in 0..5 {
+            live.load_col(j, &mut a).unwrap();
+            flat.load_col(j, &mut b).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn segment_blocks_cover_all_appended_rows() {
+        let (base, _) = store_with_segments("blocks");
+        let mut live = LiveDataset::open(&base).unwrap();
+        let blocks = live.segment_blocks();
+        assert!(!blocks.is_empty());
+        let mut seen = 0;
+        let mut buf = Vec::new();
+        for (s, c) in blocks {
+            let (rows, r0) = live.load_source_chunk(s, c, &mut buf).unwrap();
+            assert_eq!(buf.len(), rows * 5);
+            assert!(r0 + rows <= live.source_meta(s).n);
+            seen += rows;
+        }
+        assert_eq!(seen, live.appended_rows());
+    }
+
+    #[test]
+    fn subset_rows_extracts_the_requested_rows() {
+        let (base, total) = store_with_segments("subset");
+        let mut live = LiveDataset::open(&base).unwrap();
+        let idx = [0usize, 5, total - 1];
+        let sub = live.subset_rows(&idx).unwrap();
+        assert_eq!(sub.n(), 3);
+        let meta = live.meta_arc();
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(sub.time[k], meta.time[i]);
+            assert_eq!(sub.event[k], meta.event[i]);
+        }
+        let mut col = Vec::new();
+        live.load_col(2, &mut col).unwrap();
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(sub.x.get(k, 2), col[i]);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! The segment manifest: which append segments belong to a base store.
+//!
+//! An append never touches the base `.fsds`. It writes a small,
+//! fully-formed segment store next to it (`{store}.seg{NNNNNN}.fsds`,
+//! complete with header, checksum, and canonical descending-time sort —
+//! the ordinary writer produces it, atomic `.partial.tmp` publish and
+//! all), then atomically rewrites `{store}.manifest` to list the new
+//! segment. The manifest is the *only* commit point:
+//!
+//! - a segment file with no manifest entry is an orphan from a crash
+//!   between the two steps — readers ignore it, the next append or
+//!   compaction deletes it;
+//! - a manifest whose recorded base signature (n + header checksum) no
+//!   longer matches the base file is stale — a compaction renamed a new
+//!   base into place and crashed before deleting the manifest. Readers
+//!   fall back to the base alone; the next append starts a fresh
+//!   manifest and cleans the leftovers.
+//!
+//! Either way, every crash point leaves a store that opens cleanly.
+
+use crate::api::json::{self, Json};
+use crate::error::{FastSurvivalError, Result};
+use crate::store::format::{self, StoreHeader, HEADER_LEN};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// Manifest schema version.
+pub const MANIFEST_VERSION: usize = 1;
+
+/// The base store a manifest binds to: enough to detect that the base
+/// file was replaced (compaction, reconversion) out from under it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BaseSignature {
+    pub n: usize,
+    /// The base header's stored FNV-1a self-check — covers n, p,
+    /// chunk_rows, and payload_offset, so any rewrite that changes the
+    /// geometry changes the signature.
+    pub checksum: u64,
+}
+
+/// One committed append segment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentEntry {
+    /// Monotonic sequence number (also embedded in the file name).
+    pub seq: u64,
+    pub n: usize,
+    pub n_events: usize,
+}
+
+/// The parsed `{store}.manifest`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub base: BaseSignature,
+    pub segments: Vec<SegmentEntry>,
+}
+
+/// `{store}.manifest`.
+pub fn manifest_path(store: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.manifest", store.display()))
+}
+
+/// `{store}.seg{seq:06}.fsds`.
+pub fn segment_path(store: &Path, seq: u64) -> PathBuf {
+    PathBuf::from(format!("{}.seg{seq:06}.fsds", store.display()))
+}
+
+/// Read just the fixed header of a store (48 bytes — no payload I/O).
+pub fn read_header(store: &Path) -> Result<StoreHeader> {
+    let mut file = std::fs::File::open(store)
+        .map_err(|e| FastSurvivalError::io(format!("opening {}", store.display()), e))?;
+    let mut head = [0u8; HEADER_LEN];
+    format::read_exact(&mut file, &mut head, "header")?;
+    StoreHeader::decode(&head)
+}
+
+/// The base signature the manifest must match: row count plus the
+/// header's own FNV self-check.
+pub fn base_signature(store: &Path) -> Result<BaseSignature> {
+    let header = read_header(store)?;
+    let checksum = format::fnv1a(&header.encode()[0..40]);
+    Ok(BaseSignature { n: header.n, checksum })
+}
+
+/// Read a store's name and feature names without the O(n·p) stats pass
+/// a full open makes — appends use this to reject rows whose schema
+/// does not match the base.
+pub fn read_name_and_features(store: &Path) -> Result<(String, Vec<String>)> {
+    let mut file = std::fs::File::open(store)
+        .map_err(|e| FastSurvivalError::io(format!("opening {}", store.display()), e))?;
+    let mut head = [0u8; HEADER_LEN];
+    format::read_exact(&mut file, &mut head, "header")?;
+    let header = StoreHeader::decode(&head)?;
+    let mut r = std::io::BufReader::new(&mut file);
+    let name = format::read_string(&mut r, "dataset name")?;
+    let n_names = format::read_u32(&mut r, "feature-name count")? as usize;
+    if n_names != header.p {
+        return Err(FastSurvivalError::Store(format!(
+            "meta block names {n_names} features, header says {}",
+            header.p
+        )));
+    }
+    let mut feature_names = Vec::with_capacity(header.p);
+    for _ in 0..header.p {
+        feature_names.push(format::read_string(&mut r, "feature name")?);
+    }
+    Ok((name, feature_names))
+}
+
+impl Manifest {
+    /// A fresh, empty manifest bound to the base store as it is now.
+    pub fn fresh(store: &Path) -> Result<Manifest> {
+        Ok(Manifest { base: base_signature(store)?, segments: Vec::new() })
+    }
+
+    /// The next segment sequence number.
+    pub fn next_seq(&self) -> u64 {
+        self.segments.iter().map(|s| s.seq).max().unwrap_or(0) + 1
+    }
+
+    /// Total appended rows across all committed segments.
+    pub fn appended_rows(&self) -> usize {
+        self.segments.iter().map(|s| s.n).sum()
+    }
+
+    /// Total appended events across all committed segments.
+    pub fn appended_events(&self) -> usize {
+        self.segments.iter().map(|s| s.n_events).sum()
+    }
+
+    /// Load `{store}.manifest` if present. `Ok(None)` when no manifest
+    /// file exists; a malformed manifest is a typed Store error (it is
+    /// our own atomic write, so corruption means something is wrong).
+    pub fn load(store: &Path) -> Result<Option<Manifest>> {
+        let path = manifest_path(store);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(FastSurvivalError::io(format!("reading {}", path.display()), e))
+            }
+        };
+        let doc = json::parse(&text).map_err(|e| {
+            FastSurvivalError::Store(format!("malformed manifest {}: {e}", path.display()))
+        })?;
+        let version = doc.require("manifest_version")?.as_usize()?;
+        if version != MANIFEST_VERSION {
+            return Err(FastSurvivalError::Store(format!(
+                "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let base = doc.require("base")?;
+        let n = base.require("n")?.as_usize()?;
+        let checksum_hex = base.require("checksum")?.as_str()?;
+        let checksum = u64::from_str_radix(
+            checksum_hex.trim_start_matches("0x"),
+            16,
+        )
+        .map_err(|_| {
+            FastSurvivalError::Store(format!("bad base checksum {checksum_hex:?} in manifest"))
+        })?;
+        let mut segments = Vec::new();
+        for seg in doc.require("segments")?.as_array()? {
+            segments.push(SegmentEntry {
+                seq: seg.require("seq")?.as_usize()? as u64,
+                n: seg.require("n")?.as_usize()?,
+                n_events: seg.require("n_events")?.as_usize()?,
+            });
+        }
+        Ok(Some(Manifest { base: BaseSignature { n, checksum }, segments }))
+    }
+
+    /// Load the manifest *if* it is bound to the base store as it
+    /// currently is. A missing or stale manifest (base replaced by a
+    /// compaction that crashed before cleanup) returns `Ok(None)` — the
+    /// base alone is authoritative then.
+    pub fn load_valid(store: &Path) -> Result<Option<Manifest>> {
+        let Some(m) = Manifest::load(store)? else { return Ok(None) };
+        if m.base == base_signature(store)? {
+            Ok(Some(m))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Atomically write `{store}.manifest` (temp file + rename) — the
+    /// commit point of every append.
+    pub fn save(&self, store: &Path) -> Result<()> {
+        let segments: Vec<Json> = self
+            .segments
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("seq".into(), Json::Num(s.seq as f64)),
+                    ("n".into(), Json::Num(s.n as f64)),
+                    ("n_events".into(), Json::Num(s.n_events as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("manifest_version".into(), Json::Num(MANIFEST_VERSION as f64)),
+            (
+                "base".into(),
+                Json::Obj(vec![
+                    ("n".into(), Json::Num(self.base.n as f64)),
+                    ("checksum".into(), Json::Str(format!("{:#018x}", self.base.checksum))),
+                ]),
+            ),
+            ("segments".into(), Json::Arr(segments)),
+        ]);
+        let path = manifest_path(store);
+        let tmp = PathBuf::from(format!("{}.partial.tmp", path.display()));
+        std::fs::write(&tmp, doc.to_json_string())
+            .map_err(|e| FastSurvivalError::io(format!("writing {}", tmp.display()), e))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            FastSurvivalError::io(
+                format!("publishing {} -> {}", tmp.display(), path.display()),
+                e,
+            )
+        })
+    }
+}
+
+/// Delete files the crash protocol leaves behind: segment files not
+/// listed in `keep` (orphans from a crash between segment write and
+/// manifest commit, or from a stale manifest), and any `.partial.tmp`/
+/// `.rows.tmp` writer workspace next to the store. Returns the paths it
+/// removed. Only files prefixed with the store's own file name are ever
+/// touched.
+pub fn clean_stray_files(store: &Path, keep: Option<&Manifest>) -> Result<Vec<PathBuf>> {
+    let dir = store.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+    let stem = match store.file_name().and_then(|s| s.to_str()) {
+        Some(s) => s.to_string(),
+        None => return Ok(Vec::new()),
+    };
+    let kept: Vec<PathBuf> = keep
+        .map(|m| m.segments.iter().map(|s| segment_path(store, s.seq)).collect())
+        .unwrap_or_default();
+    let mut removed = Vec::new();
+    let entries = std::fs::read_dir(&dir)
+        .map_err(|e| FastSurvivalError::io(format!("listing {}", dir.display()), e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| FastSurvivalError::io("listing store directory", e))?;
+        let name = match entry.file_name().into_string() {
+            Ok(n) => n,
+            Err(_) => continue,
+        };
+        if name == stem || !name.starts_with(&stem) {
+            continue;
+        }
+        let suffix = &name[stem.len()..];
+        let is_tmp = suffix.ends_with(".partial.tmp")
+            || suffix.ends_with(".rows.tmp")
+            || suffix.ends_with(".compact.tmp");
+        let is_segment = suffix.starts_with(".seg") && suffix.ends_with(".fsds");
+        if !is_tmp && !is_segment {
+            continue;
+        }
+        let path = entry.path();
+        if is_segment && kept.contains(&path) {
+            continue;
+        }
+        std::fs::remove_file(&path)
+            .map_err(|e| FastSurvivalError::io(format!("removing {}", path.display()), e))?;
+        removed.push(path);
+    }
+    Ok(removed)
+}
+
+/// Verify a header's stored checksum against the raw bytes on disk
+/// (used by `inspect`; [`StoreHeader::decode`] enforces it too, this
+/// surfaces the stored vs computed pair for display).
+pub fn header_checksum(store: &Path) -> Result<(u64, u64)> {
+    let mut file = std::fs::File::open(store)
+        .map_err(|e| FastSurvivalError::io(format!("opening {}", store.display()), e))?;
+    let mut head = [0u8; HEADER_LEN];
+    file.read_exact(&mut head)
+        .map_err(|e| FastSurvivalError::io(format!("reading {} header", store.display()), e))?;
+    let stored = u64::from_le_bytes(head[40..48].try_into().unwrap());
+    let computed = format::fnv1a(&head[0..40]);
+    Ok((stored, computed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::store::writer::{write_store, DatasetRows};
+
+    fn temp_store(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_live_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join(format!("{tag}.fsds"));
+        let ds = generate(&SyntheticConfig { n: 40, p: 3, rho: 0.2, k: 2, s: 0.1, seed: 5 });
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &out, 16, tag).unwrap();
+        out
+    }
+
+    #[test]
+    fn manifest_round_trips_and_binds_to_base() {
+        let store = temp_store("roundtrip");
+        let mut m = Manifest::fresh(&store).unwrap();
+        assert_eq!(m.next_seq(), 1);
+        m.segments.push(SegmentEntry { seq: 1, n: 7, n_events: 3 });
+        m.segments.push(SegmentEntry { seq: 2, n: 5, n_events: 2 });
+        m.save(&store).unwrap();
+        let back = Manifest::load(&store).unwrap().unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.next_seq(), 3);
+        assert_eq!(back.appended_rows(), 12);
+        assert_eq!(back.appended_events(), 5);
+        // Bound to the current base: load_valid sees it.
+        assert!(Manifest::load_valid(&store).unwrap().is_some());
+        // Rewrite the base (different n) → the manifest is stale.
+        let ds = generate(&SyntheticConfig { n: 31, p: 3, rho: 0.2, k: 2, s: 0.1, seed: 6 });
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &store, 16, "rewritten").unwrap();
+        assert!(Manifest::load_valid(&store).unwrap().is_none());
+        assert!(Manifest::load(&store).unwrap().is_some(), "file still exists");
+    }
+
+    #[test]
+    fn missing_manifest_is_none_and_garbage_is_typed() {
+        let store = temp_store("missing");
+        assert!(Manifest::load(&store).unwrap().is_none());
+        std::fs::write(manifest_path(&store), "not json").unwrap();
+        assert!(matches!(
+            Manifest::load(&store),
+            Err(FastSurvivalError::Store(_))
+        ));
+    }
+
+    #[test]
+    fn clean_stray_files_spares_committed_segments() {
+        let store = temp_store("clean");
+        // Committed segment (listed), orphan segment (not listed),
+        // leftover writer workspace, and an unrelated neighbor file.
+        let mut m = Manifest::fresh(&store).unwrap();
+        m.segments.push(SegmentEntry { seq: 1, n: 1, n_events: 1 });
+        m.save(&store).unwrap();
+        std::fs::write(segment_path(&store, 1), b"committed").unwrap();
+        std::fs::write(segment_path(&store, 2), b"orphan").unwrap();
+        let tmp = PathBuf::from(format!("{}.seg000003.fsds.partial.tmp", store.display()));
+        std::fs::write(&tmp, b"partial").unwrap();
+        let neighbor = store.with_file_name("unrelated.fsds");
+        std::fs::write(&neighbor, b"keep me").unwrap();
+
+        let removed = clean_stray_files(&store, Some(&m)).unwrap();
+        assert_eq!(removed.len(), 2, "orphan + partial: {removed:?}");
+        assert!(segment_path(&store, 1).exists());
+        assert!(!segment_path(&store, 2).exists());
+        assert!(!tmp.exists());
+        assert!(neighbor.exists());
+        std::fs::remove_file(&neighbor).unwrap();
+    }
+
+    #[test]
+    fn signature_tracks_header_and_checksums_agree() {
+        let store = temp_store("sig");
+        let sig = base_signature(&store).unwrap();
+        assert_eq!(sig.n, 40);
+        let (stored, computed) = header_checksum(&store).unwrap();
+        assert_eq!(stored, computed);
+        assert_eq!(stored, sig.checksum);
+        let (name, features) = read_name_and_features(&store).unwrap();
+        assert_eq!(name, "sig");
+        assert_eq!(features.len(), 3);
+    }
+}

@@ -1,0 +1,43 @@
+//! The online learning loop: append survival rows to an on-disk store,
+//! warm-refit the Cox model incrementally, and auto-publish into the
+//! serving registry only when a held-out validation tail improves.
+//!
+//! Three pieces, each usable on its own:
+//!
+//! * [`append`] / [`manifest`] — rows land as merge-sorted **segment**
+//!   stores next to the base `.fsds` (each a complete store: header,
+//!   checksum, canonical descending-time sort, atomic temp-file
+//!   publish), committed by an atomic manifest rewrite. Every crash
+//!   point leaves a store that opens cleanly; [`append::compact`]
+//!   folds segments back into one base.
+//! * [`dataset`] / [`refit`] — [`dataset::LiveDataset`] serves base +
+//!   committed segments as one merged view in global descending-time
+//!   order, with metadata that matches a compacted store **bit for
+//!   bit**; [`refit::IncrementalRefit`] warm-starts from the served β,
+//!   warms up on only the appended blocks, then polishes with the exact
+//!   chunked CD engine until the KKT residual certifies ≤1e-8 parity
+//!   with a cold fit.
+//! * [`watch`] — the control plane: fingerprint the store, refit on
+//!   growth, score candidate vs incumbent on a deterministic holdout
+//!   tail ([`crate::data::split::holdout_tail`], shared with CV), and
+//!   publish into the [`crate::serve::ModelRegistry`] artifact dir only
+//!   on strict improvement, drift-reference sidecar included.
+//!
+//! [`smoke`] runs the whole loop for CI and emits `BENCH_live.json`
+//! with the ≥3× warm-vs-cold speedup and ≤1e-8 parity gates.
+
+pub mod append;
+pub mod dataset;
+pub mod manifest;
+pub mod refit;
+pub mod smoke;
+pub mod watch;
+
+pub use append::{append_rows, compact, AppendSummary};
+pub use dataset::LiveDataset;
+pub use manifest::Manifest;
+pub use refit::{IncrementalRefit, RefitResult};
+pub use watch::{
+    evaluate_holdout, fingerprint, improves, CycleReport, HoldoutMetrics, StoreFingerprint,
+    Watcher,
+};

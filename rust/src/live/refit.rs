@@ -1,0 +1,294 @@
+//! Incremental warm refit: pick up a previously-fit β, warm it up
+//! against only the *newly appended* rows, then polish with the exact
+//! chunked CD engine until the KKT residual certifies optimality.
+//!
+//! The computational story mirrors the cold two-phase
+//! [`StreamingFit`](crate::store::StreamingFit), with one inversion:
+//! a cold fit's sampled-block warmup must survey the whole store to
+//! climb from β = 0, while a warm refit already sits within a small
+//! append's perturbation of the new optimum — so its warmup samples
+//! only the segment blocks (the rows the old β has never seen) and the
+//! exact phase needs a handful of sweeps instead of dozens. Both runs
+//! finish inside [`exact_chunked_cd`] with the same residual threshold
+//! ε, and a μ-strongly-convex objective pins each within √p·ε/μ of the
+//! unique optimum — the ≤1e-8 parity certificate costs nothing beyond
+//! the derivative pass every sweep makes anyway.
+
+use super::dataset::LiveDataset;
+use crate::cox::derivatives::Workspace;
+use crate::cox::lipschitz::all_lipschitz;
+use crate::cox::{CoxProblem, CoxState};
+use crate::data::SurvivalDataset;
+use crate::error::{FastSurvivalError, Result};
+use crate::linalg::Matrix;
+use crate::optim::cd::SurrogateKind;
+use crate::optim::{Objective, Trace};
+use crate::store::streaming::exact_chunked_cd;
+use crate::store::CoxData;
+use crate::util::rng::Rng;
+
+/// Same annealing constant as the cold warmup: block t blends with
+/// weight `BLEND / (BLEND + t)`.
+const BLEND: f64 = 4.0;
+
+/// Warm refit configuration. `stop_kkt` is mandatory (> 0): the KKT
+/// certificate is the whole point — without it a warm start could stop
+/// on a flat loss while still far from the cold fit's answer.
+#[derive(Clone, Debug)]
+pub struct IncrementalRefit {
+    pub objective: Objective,
+    pub surrogate: SurrogateKind,
+    /// Maximum exact-phase sweeps.
+    pub max_sweeps: usize,
+    /// KKT residual threshold certifying the exact phase (must be > 0).
+    pub stop_kkt: f64,
+    /// Warmup passes over the segment blocks (0 = skip straight to the
+    /// exact phase; 1 samples each appended block once in expectation).
+    pub warmup_passes: usize,
+    /// Block-sampler seed (fixed seed = fixed refit).
+    pub seed: u64,
+}
+
+impl Default for IncrementalRefit {
+    fn default() -> Self {
+        IncrementalRefit {
+            objective: Objective::default(),
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 10_000,
+            stop_kkt: 1e-9,
+            warmup_passes: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// What a warm refit produced; field-compatible with the cold
+/// [`StreamingFitResult`](crate::store::StreamingFitResult) consumers.
+#[derive(Clone, Debug)]
+pub struct RefitResult {
+    pub beta: Vec<f64>,
+    /// Linear predictor per merged sorted sample at the final β.
+    pub eta: Vec<f64>,
+    pub objective_value: f64,
+    /// Exact-phase sweeps run — the number a warm start keeps small.
+    pub sweeps: usize,
+    /// Segment warmup blocks consumed.
+    pub warmup_blocks: usize,
+    pub trace: Trace,
+}
+
+impl IncrementalRefit {
+    /// Refit over the merged live view, starting from `warm_beta` (the
+    /// currently-served model's coefficients).
+    pub fn refit(&self, live: &mut LiveDataset, warm_beta: &[f64]) -> Result<RefitResult> {
+        let meta = live.meta_arc();
+        let p = meta.p;
+        if warm_beta.len() != p {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "warm start has {} coefficients but the store has {} features",
+                warm_beta.len(),
+                p
+            )));
+        }
+        if meta.n_events == 0 {
+            return Err(FastSurvivalError::InvalidData(
+                "all samples are censored: the Cox partial likelihood has no events to fit"
+                    .into(),
+            ));
+        }
+        if self.stop_kkt <= 0.0 || !self.stop_kkt.is_finite() {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "incremental refit requires a positive KKT threshold (got {}): \
+                 the residual certificate is what guarantees parity with a cold fit",
+                self.stop_kkt
+            )));
+        }
+        if !self.objective.l1.is_finite()
+            || self.objective.l1 < 0.0
+            || !self.objective.l2.is_finite()
+            || self.objective.l2 < 0.0
+        {
+            return Err(FastSurvivalError::InvalidConfig(format!(
+                "penalties must be finite and non-negative (got l1={}, l2={})",
+                self.objective.l1, self.objective.l2
+            )));
+        }
+        if self.max_sweeps == 0 {
+            return Err(FastSurvivalError::InvalidConfig(
+                "max_sweeps must be at least 1".into(),
+            ));
+        }
+        let obj = self.objective;
+        let mut beta = warm_beta.to_vec();
+
+        // ---------------- Phase A: segment-block warmup. Only the
+        // appended rows — the data the warm β has never conditioned on.
+        // Each block is a time-contiguous run of one segment's sorted
+        // order, so its partial likelihood is well-formed as-is.
+        let blocks = live.segment_blocks();
+        let mut warmup_blocks = 0usize;
+        if self.warmup_passes > 0 && !blocks.is_empty() {
+            let mut rng = Rng::new(self.seed);
+            let mut chunkbuf: Vec<f64> = Vec::new();
+            let total = self.warmup_passes * blocks.len();
+            for t in 0..total {
+                let (s, c) = blocks[rng.below(blocks.len())];
+                let (rows, r0) = live.load_source_chunk(s, c, &mut chunkbuf)?;
+                let smeta = live.source_meta(s);
+                let block_events =
+                    smeta.event[r0..r0 + rows].iter().filter(|&&e| e).count();
+                if block_events == 0 {
+                    continue;
+                }
+                let x = Matrix { rows, cols: p, data: chunkbuf[..rows * p].to_vec() };
+                let block = SurvivalDataset::new(
+                    x,
+                    smeta.time[r0..r0 + rows].to_vec(),
+                    smeta.event[r0..r0 + rows].to_vec(),
+                    "segment-block",
+                );
+                let bpr = CoxProblem::try_new(&block)?;
+                // Penalties scaled by the block's share of the *merged*
+                // event count, as the cold warmup scales by its share of
+                // the full store.
+                let frac = block_events as f64 / meta.n_events as f64;
+                let bobj = Objective { l1: obj.l1 * frac, l2: obj.l2 * frac };
+                let blip = all_lipschitz(&bpr);
+                let mut bst = CoxState::from_beta(&bpr, &beta);
+                let mut ws = Workspace::new();
+                for l in 0..p {
+                    self.surrogate.step(&bpr, &mut bst, &mut ws, l, blip[l], bobj);
+                }
+                let alpha = BLEND / (BLEND + t as f64);
+                for (bj, sj) in beta.iter_mut().zip(bst.beta.iter()) {
+                    *bj += alpha * (sj - *bj);
+                }
+                warmup_blocks += 1;
+            }
+        }
+
+        // ---------------- Phase B: exact chunked CD over the merged
+        // view, loss stopping disabled (tol = 0) — only the KKT
+        // residual may declare convergence.
+        let outcome = exact_chunked_cd(
+            live,
+            &meta,
+            beta,
+            self.surrogate,
+            obj,
+            self.max_sweeps,
+            0.0,
+            self.stop_kkt,
+            0.0,
+        )?;
+        let mut state = outcome.state;
+        let beta = std::mem::take(&mut state.beta);
+        let eta = std::mem::take(&mut state.eta);
+        Ok(RefitResult {
+            beta,
+            eta,
+            objective_value: outcome.objective_value,
+            sweeps: outcome.sweeps,
+            warmup_blocks,
+            trace: outcome.trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::live::append::append_rows;
+    use crate::store::writer::{write_store, DatasetRows};
+    use crate::store::StreamingFit;
+    use std::path::PathBuf;
+
+    fn temp_store(tag: &str, n: usize, appended: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_live_refit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join(format!("{tag}.fsds"));
+        let ds = generate(&SyntheticConfig { n, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 7 });
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &base, 64, tag).unwrap();
+        if appended > 0 {
+            let extra =
+                generate(&SyntheticConfig { n: appended, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 8 });
+            let mut rows = DatasetRows::new(&extra);
+            append_rows(&base, &mut rows, 64).unwrap();
+        }
+        base
+    }
+
+    #[test]
+    fn warm_refit_matches_cold_fit_to_1e8() {
+        let base = temp_store("parity", 400, 24);
+        let obj = Objective { l1: 0.0, l2: 1.0 };
+
+        // The "previously served" β: a cold fit of the base alone.
+        let mut base_only = crate::store::ChunkedDataset::open(&base).unwrap();
+        let served = StreamingFit {
+            objective: obj,
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 10_000,
+            tol: 0.0,
+            stop_kkt: 1e-9,
+            ..Default::default()
+        }
+        .fit(&mut base_only)
+        .unwrap();
+
+        let mut live = LiveDataset::open(&base).unwrap();
+        let warm = IncrementalRefit {
+            objective: obj,
+            stop_kkt: 1e-9,
+            ..Default::default()
+        }
+        .refit(&mut live, &served.beta)
+        .unwrap();
+        assert!(warm.trace.converged, "warm refit must KKT-converge");
+        assert!(warm.warmup_blocks > 0, "appended segments must warm up");
+
+        let mut live2 = LiveDataset::open(&base).unwrap();
+        let cold = StreamingFit {
+            objective: obj,
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 10_000,
+            tol: 0.0,
+            stop_kkt: 1e-9,
+            ..Default::default()
+        }
+        .fit(&mut live2)
+        .unwrap();
+        for (a, b) in warm.beta.iter().zip(cold.beta.iter()) {
+            assert!((a - b).abs() <= 1e-8, "warm {a} vs cold {b}");
+        }
+        assert!(
+            warm.sweeps <= cold.sweeps,
+            "a warm start must not polish longer than a cold one ({} vs {})",
+            warm.sweeps,
+            cold.sweeps
+        );
+    }
+
+    #[test]
+    fn bad_configs_are_typed_errors() {
+        let base = temp_store("cfg", 120, 10);
+        let mut live = LiveDataset::open(&base).unwrap();
+        let p = live.meta().p;
+        let r = IncrementalRefit { stop_kkt: 0.0, ..Default::default() }
+            .refit(&mut live, &vec![0.0; p]);
+        assert!(matches!(r, Err(FastSurvivalError::InvalidConfig(_))));
+        let r = IncrementalRefit::default().refit(&mut live, &vec![0.0; p + 1]);
+        assert!(matches!(r, Err(FastSurvivalError::InvalidData(_))));
+        let r = IncrementalRefit { max_sweeps: 0, ..Default::default() }
+            .refit(&mut live, &vec![0.0; p]);
+        assert!(matches!(r, Err(FastSurvivalError::InvalidConfig(_))));
+        let r = IncrementalRefit {
+            objective: Objective { l1: -1.0, l2: 0.0 },
+            ..Default::default()
+        }
+        .refit(&mut live, &vec![0.0; p]);
+        assert!(matches!(r, Err(FastSurvivalError::InvalidConfig(_))));
+    }
+}

@@ -1,0 +1,249 @@
+//! The `live-smoke` CLI subcommand: the online-learning loop end to
+//! end, with the paper-claim gates CI holds it to.
+//!
+//! One run: synthesize a base store, publish a first model through a
+//! watch cycle, append ~5% fresh rows as a live segment, then race the
+//! two refits on the *same* merged view — a warm [`IncrementalRefit`]
+//! from the served β against a cold [`StreamingFit`] from zeros — and
+//! gate on both halves of the claim: the warm refit must be at least
+//! `--min-speedup`× faster AND land within 1e-8 of the cold optimum
+//! per coefficient (both runs carry the same KKT residual certificate,
+//! so this is parity of certified optima, not of trajectories). A
+//! second watch cycle exercises the validation gate on the grown store,
+//! and a short-lived scoring server checks that `/healthz` reports the
+//! published model + registry generation and `/metrics` exposes the
+//! drift block. Numbers land in `BENCH_live.json` (written before any
+//! gate failure exits, so CI always gets the artifact).
+
+use super::append::append_rows;
+use super::dataset::LiveDataset;
+use super::refit::IncrementalRefit;
+use super::watch::Watcher;
+use crate::api::json;
+use crate::data::synthetic::{generate, SyntheticConfig};
+use crate::error::{FastSurvivalError, Result};
+use crate::optim::cd::SurrogateKind;
+use crate::optim::Objective;
+use crate::serve::{serve, BatchConfig, HttpClient, ModelRegistry, ServeConfig};
+use crate::store::writer::DatasetRows;
+use crate::store::{write_store, StreamingFit};
+use crate::util::args::Args;
+use crate::util::parallel::num_threads;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_or("n", 12_000usize);
+    let p = args.get_or("p", 40usize);
+    let chunk_rows = args.get_or("chunk-rows", 1024usize);
+    let append_frac = args.get_or("append-frac", 0.05f64);
+    let l2 = args.get_or("l2", 1.0f64);
+    let min_speedup = args.get_or("min-speedup", 3.0f64);
+    let stop_kkt = args.get_or("stop-kkt", 1e-9f64);
+    let seed = args.get_or("seed", 21u64);
+    let out_path = args.str_or("out", "BENCH_live.json");
+    let parity_tol = 1e-8f64;
+
+    let dir = std::env::temp_dir().join(format!("fs_live_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| FastSurvivalError::io(format!("creating {dir:?}"), e))?;
+    let store = dir.join("events.fsds");
+    let artifacts = dir.join("models");
+    let obj = Objective { l1: 0.0, l2 };
+
+    // 1. Base store + first published model (watch cycle 1: no
+    // incumbent, so the gate always publishes v1).
+    let ds = generate(&SyntheticConfig { n, p, rho: 0.4, k: 8, s: 0.1, seed });
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &store, chunk_rows, "events")?;
+    let mut watcher = Watcher::new(&store, &artifacts, "events");
+    watcher.objective = obj;
+    watcher.stop_kkt = stop_kkt;
+    let first = watcher.run_cycle()?;
+    let published_version = first.published;
+    println!("live-smoke: cycle 1 — {}", first.reason);
+
+    // 2. Append ~append_frac·n fresh rows as a committed segment.
+    let n_append = ((append_frac * n as f64).round() as usize).max(1);
+    let extra =
+        generate(&SyntheticConfig { n: n_append, p, rho: 0.4, k: 8, s: 0.1, seed: seed + 1 });
+    let mut rows = DatasetRows::new(&extra);
+    let appended = append_rows(&store, &mut rows, 0)?;
+    println!(
+        "live-smoke: appended {} rows ({} events) as segment {} — merged view {} rows",
+        appended.n, appended.n_events, appended.seq, appended.total_rows
+    );
+
+    // 3. The race. Same merged view, same objective, same certificate.
+    let served_beta = crate::api::model::CoxModel::load(&artifacts.join(format!(
+        "events@{}.json",
+        published_version.unwrap_or(1)
+    )))?
+    .beta()
+    .to_vec();
+
+    let mut live_warm = LiveDataset::open(&store)?;
+    let t0 = Instant::now();
+    let warm = IncrementalRefit { objective: obj, stop_kkt, ..Default::default() }
+        .refit(&mut live_warm, &served_beta)?;
+    let warm_secs = t0.elapsed().as_secs_f64();
+
+    let mut live_cold = LiveDataset::open(&store)?;
+    let t0 = Instant::now();
+    let cold = StreamingFit {
+        objective: obj,
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt,
+        ..Default::default()
+    }
+    .fit(&mut live_cold)?;
+    let cold_secs = t0.elapsed().as_secs_f64();
+
+    let max_coef_delta = warm
+        .beta
+        .iter()
+        .zip(cold.beta.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let speedup = if warm_secs > 0.0 { cold_secs / warm_secs } else { f64::INFINITY };
+    println!(
+        "live-smoke: warm {warm_secs:.3}s ({} sweeps, {} warmup blocks) vs cold \
+         {cold_secs:.3}s ({} sweeps) — {speedup:.1}× · max |Δβ| = {max_coef_delta:.2e}",
+        warm.sweeps, warm.warmup_blocks, cold.sweeps
+    );
+
+    // 4. Cycle 2: the validation gate decides on the grown store.
+    let second = watcher.run_cycle()?;
+    println!("live-smoke: cycle 2 — {}", second.reason);
+
+    // 5. Serve the artifact dir briefly: /healthz must name the model
+    // and carry the generation counter, /metrics must expose drift.
+    let registry = Arc::new(ModelRegistry::open(&artifacts)?);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_body_bytes: 4 << 20,
+        batch: BatchConfig::default(),
+    };
+    let handle = serve(Arc::clone(&registry), &cfg)?;
+    let addr = handle.local_addr();
+    let mut serve_ok = false;
+    let mut healthz_generation = 0u64;
+    if let Ok(mut client) = HttpClient::connect(addr) {
+        let healthz = client.get("/healthz").map(|r| r.body).unwrap_or_default();
+        let metrics = client.get("/metrics").map(|r| r.body).unwrap_or_default();
+        if let Ok(doc) = json::parse(&healthz) {
+            healthz_generation = doc
+                .require("generation")
+                .and_then(|g| g.as_usize())
+                .unwrap_or(0) as u64;
+            let names_ok = healthz.contains("\"events\"");
+            serve_ok = names_ok && healthz_generation >= 1 && metrics.contains("\"drift\"");
+        }
+    }
+    handle.shutdown();
+    println!(
+        "live-smoke: serve check {} (generation {healthz_generation})",
+        if serve_ok { "OK" } else { "FAILED" }
+    );
+
+    let speedup_ok = speedup >= min_speedup;
+    let parity_ok = max_coef_delta <= parity_tol && warm.trace.converged && cold.trace.converged;
+    let publish_ok = published_version == Some(1);
+
+    // 6. BENCH_live.json — written before any gate verdict exits.
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\n  \"schema_version\": 1,\n  \"bench\": \"live\",\n  \"workload\": {");
+    out.push_str(&format!(
+        "\"n\": {n}, \"p\": {p}, \"chunk_rows\": {chunk_rows}, \"appended_rows\": {}, \
+         \"l2\": {l2}, \"stop_kkt\": {stop_kkt}, \"seed\": {seed}, \"threads\": {}",
+        appended.n,
+        num_threads()
+    ));
+    out.push_str("},\n  \"results\": {\"cold_secs\": ");
+    json::write_f64(&mut out, cold_secs);
+    out.push_str(", \"warm_secs\": ");
+    json::write_f64(&mut out, warm_secs);
+    out.push_str(", \"speedup\": ");
+    json::write_f64(&mut out, speedup);
+    out.push_str(", \"max_coef_delta\": ");
+    json::write_f64(&mut out, max_coef_delta);
+    out.push_str(&format!(
+        ", \"warm_sweeps\": {}, \"cold_sweeps\": {}, \"warmup_blocks\": {}, \
+         \"published_version\": {}, \"cycle2_published\": {}, \"healthz_generation\": \
+         {healthz_generation}",
+        warm.sweeps,
+        cold.sweeps,
+        warm.warmup_blocks,
+        published_version.map_or("null".into(), |v| v.to_string()),
+        second.published.map_or("null".into(), |v| v.to_string()),
+    ));
+    out.push_str(", \"candidate_cindex\": ");
+    json::write_f64(&mut out, second.candidate.cindex);
+    out.push_str(", \"candidate_deviance\": ");
+    json::write_f64(&mut out, second.candidate.deviance);
+    out.push_str("},\n  \"gate\": {");
+    out.push_str(&format!(
+        "\"min_speedup\": {min_speedup}, \"speedup_ok\": {speedup_ok}, \
+         \"parity_tol\": {parity_tol}, \"parity_ok\": {parity_ok}, \
+         \"publish_ok\": {publish_ok}, \"serve_ok\": {serve_ok}"
+    ));
+    out.push_str("}\n}\n");
+    std::fs::write(Path::new(&out_path), &out)
+        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
+    println!("live-smoke: wrote {out_path}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if !(speedup_ok && parity_ok && publish_ok && serve_ok) {
+        return Err(FastSurvivalError::PerfRegression(format!(
+            "live-smoke gate failed: speedup {speedup:.2}× (need ≥ {min_speedup}), \
+             max |Δβ| {max_coef_delta:.2e} (need ≤ {parity_tol:.0e}), \
+             publish_ok={publish_ok}, serve_ok={serve_ok}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_smoke_end_to_end() {
+        // Scaled way down, and with the speedup gate disabled: at toy
+        // sizes both fits finish in microseconds and the ratio is noise.
+        // Parity, publish, and serve gates still run at full strength.
+        let out = std::env::temp_dir()
+            .join(format!("BENCH_live_test_{}.json", std::process::id()));
+        let args = Args::parse(
+            [
+                "live-smoke".to_string(),
+                "--n".into(),
+                "600".into(),
+                "--p".into(),
+                "8".into(),
+                "--chunk-rows".into(),
+                "128".into(),
+                "--min-speedup".into(),
+                "0.0".into(),
+                "--out".into(),
+                out.to_str().unwrap().to_string(),
+            ]
+            .into_iter(),
+        );
+        run(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = json::parse(&text).unwrap();
+        let gate = doc.require("gate").unwrap();
+        assert!(gate.require("parity_ok").unwrap().as_bool().unwrap());
+        assert!(gate.require("publish_ok").unwrap().as_bool().unwrap());
+        assert!(gate.require("serve_ok").unwrap().as_bool().unwrap());
+        let results = doc.require("results").unwrap();
+        assert!(results.require("speedup").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -1,0 +1,430 @@
+//! The online learning loop's control plane: detect appends, warm-refit,
+//! validate on a deterministic holdout tail, and publish into the model
+//! registry **only on improvement**.
+//!
+//! The publish gate is deliberately conservative — a candidate must be
+//! at least as good as the incumbent on *both* holdout metrics
+//! (C-index up, partial-likelihood deviance down) and better by more
+//! than a noise margin on at least one. Ties do not publish: refitting
+//! on identical data lands within the KKT certificate's radius of the
+//! incumbent, so its metrics agree to far below [`GATE_MARGIN`], and
+//! republishing an equivalent model would churn versions for nothing.
+//! A rejected candidate leaves the artifact directory byte-for-byte
+//! untouched.
+//!
+//! The holdout is [`crate::data::split::holdout_tail`] over the merged
+//! sorted rows — the same seeded, thread-count-independent permutation
+//! the CV drivers use, so "validation tail" means the same thing in
+//! `fastsurvival watch` and in `cv_l1_path`. Every published version
+//! gets a `<name>@<version>.drift` sidecar holding the training-score
+//! histogram the server's drift tracker compares live traffic against.
+
+use super::dataset::LiveDataset;
+use super::manifest::{base_signature, BaseSignature, Manifest};
+use super::refit::{IncrementalRefit, RefitResult};
+use crate::api::model::{CoxModel, FitDiagnostics};
+use crate::cox::loss::loss_for_eta;
+use crate::cox::CoxProblem;
+use crate::data::split::holdout_tail;
+use crate::error::{FastSurvivalError, Result};
+use crate::metrics::{concordance_index, BreslowBaseline};
+use crate::optim::cd::SurrogateKind;
+use crate::optim::Objective;
+use crate::serve::drift::{DriftReference, DriftRegistry};
+use crate::serve::ModelRegistry;
+use crate::store::CoxData;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// What the watcher compares across cycles to decide "the store grew".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreFingerprint {
+    pub base: BaseSignature,
+    /// Committed segment sequence numbers, in manifest order.
+    pub segments: Vec<u64>,
+}
+
+/// Read the current fingerprint of a store (base header signature +
+/// committed segments).
+pub fn fingerprint(store: &Path) -> Result<StoreFingerprint> {
+    let base = base_signature(store)?;
+    let segments = match Manifest::load_valid(store)? {
+        Some(m) => m.segments.iter().map(|s| s.seq).collect(),
+        None => Vec::new(),
+    };
+    Ok(StoreFingerprint { base, segments })
+}
+
+/// Holdout-tail validation metrics for one coefficient vector.
+#[derive(Clone, Copy, Debug)]
+pub struct HoldoutMetrics {
+    pub cindex: f64,
+    /// Partial-likelihood deviance vs the null model on the holdout,
+    /// `2·(ℓ(β) − ℓ(0))` in negated-log-likelihood form — lower is
+    /// better, 0 means "no better than no model".
+    pub deviance: f64,
+    pub n: usize,
+    pub n_events: usize,
+}
+
+/// Relative noise margin for the publish gate. A refit on identical
+/// data lands within the KKT certificate's radius of the incumbent, so
+/// its holdout metrics differ from the incumbent's by optimizer noise
+/// far below this margin — sub-margin "improvements" must not churn
+/// versions.
+pub const GATE_MARGIN: f64 = 1e-6;
+
+/// The strict-improvement publish gate: no worse on either holdout
+/// metric (within [`GATE_MARGIN`]) and better than the margin on at
+/// least one.
+pub fn improves(candidate: &HoldoutMetrics, incumbent: &HoldoutMetrics) -> bool {
+    let ci_margin = GATE_MARGIN;
+    let dev_margin = GATE_MARGIN * incumbent.deviance.abs().max(1.0);
+    let ci_no_worse = candidate.cindex >= incumbent.cindex - ci_margin;
+    let dev_no_worse = candidate.deviance <= incumbent.deviance + dev_margin;
+    let ci_better = candidate.cindex > incumbent.cindex + ci_margin;
+    let dev_better = candidate.deviance < incumbent.deviance - dev_margin;
+    ci_no_worse && dev_no_worse && (ci_better || dev_better)
+}
+
+/// What one watch cycle did.
+#[derive(Clone, Debug)]
+pub struct CycleReport {
+    pub refit_secs: f64,
+    /// Exact-phase sweeps the warm refit ran.
+    pub sweeps: usize,
+    pub candidate: HoldoutMetrics,
+    /// `None` when no incumbent version exists yet.
+    pub incumbent: Option<HoldoutMetrics>,
+    /// The version published this cycle (`None` = gate rejected).
+    pub published: Option<u64>,
+    /// Human-readable gate decision.
+    pub reason: String,
+}
+
+/// Configuration for the watch/refit/publish loop.
+#[derive(Clone, Debug)]
+pub struct Watcher {
+    /// The `.fsds` store being appended to.
+    pub store: PathBuf,
+    /// The registry artifact directory published into.
+    pub artifacts: PathBuf,
+    /// Model name; versions are `<name>@1`, `<name>@2`, …
+    pub name: String,
+    pub objective: Objective,
+    pub surrogate: SurrogateKind,
+    pub max_sweeps: usize,
+    pub stop_kkt: f64,
+    pub warmup_passes: usize,
+    pub seed: u64,
+    /// Fraction of merged rows held out for validation.
+    pub holdout_frac: f64,
+    /// Seed for the holdout permutation — fixed per deployment so the
+    /// incumbent and every future candidate are judged on the same tail.
+    pub holdout_seed: u64,
+}
+
+impl Watcher {
+    pub fn new(store: impl Into<PathBuf>, artifacts: impl Into<PathBuf>, name: &str) -> Watcher {
+        Watcher {
+            store: store.into(),
+            artifacts: artifacts.into(),
+            name: name.to_string(),
+            objective: Objective { l1: 0.0, l2: 1.0 },
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 10_000,
+            stop_kkt: 1e-9,
+            warmup_passes: 1,
+            seed: 0,
+            holdout_frac: 0.1,
+            holdout_seed: 17,
+        }
+    }
+
+    /// Run one full cycle: open the live view, warm-refit from the
+    /// incumbent (zeros when none), validate both on the holdout tail,
+    /// and publish the candidate iff the gate passes.
+    pub fn run_cycle(&self) -> Result<CycleReport> {
+        std::fs::create_dir_all(&self.artifacts).map_err(|e| {
+            FastSurvivalError::io(format!("creating artifact dir {:?}", self.artifacts), e)
+        })?;
+        let mut live = LiveDataset::open(&self.store)?;
+        let meta = live.meta_arc();
+
+        let registry = ModelRegistry::open(&self.artifacts)?;
+        let latest = registry.snapshot().latest_version(&self.name);
+        let incumbent_model = match latest {
+            Some(v) => Some(load_artifact_model(&self.artifacts, &self.name, v)?),
+            None => None,
+        };
+        let warm_beta = match &incumbent_model {
+            Some(m) if m.feature_names() == meta.feature_names => m.beta().to_vec(),
+            // Schema drifted (or first cycle): cold-start the refit.
+            _ => vec![0.0; meta.p],
+        };
+
+        let t0 = Instant::now();
+        let refit = IncrementalRefit {
+            objective: self.objective,
+            surrogate: self.surrogate,
+            max_sweeps: self.max_sweeps,
+            stop_kkt: self.stop_kkt,
+            warmup_passes: self.warmup_passes,
+            seed: self.seed,
+        }
+        .refit(&mut live, &warm_beta)?;
+        let refit_secs = t0.elapsed().as_secs_f64();
+        if refit.trace.diverged {
+            return Err(FastSurvivalError::Diverged {
+                optimizer: format!("incremental-{}", self.surrogate.name()),
+                iterations: refit.sweeps,
+            });
+        }
+
+        let candidate =
+            evaluate_holdout(&mut live, &refit.beta, self.holdout_frac, self.holdout_seed)?;
+        let incumbent = match &incumbent_model {
+            Some(m) if m.feature_names() == meta.feature_names => Some(evaluate_holdout(
+                &mut live,
+                m.beta(),
+                self.holdout_frac,
+                self.holdout_seed,
+            )?),
+            _ => None,
+        };
+
+        let publish = match &incumbent {
+            None => true,
+            Some(inc) => improves(&candidate, inc),
+        };
+        let (published, reason) = if publish {
+            let version = latest.map_or(1, |v| v + 1);
+            self.publish(&meta.feature_names, &meta.time, &meta.event, &refit, version, refit_secs)?;
+            let reason = match &incumbent {
+                None => format!("no incumbent {} — published v{version}", self.name),
+                Some(inc) => format!(
+                    "improved holdout (C-index {:.6} ≥ {:.6}, deviance {:.6} ≤ {:.6}) — \
+                     published v{version}",
+                    candidate.cindex, inc.cindex, candidate.deviance, inc.deviance
+                ),
+            };
+            (Some(version), reason)
+        } else {
+            let inc = incumbent.as_ref().unwrap();
+            (
+                None,
+                format!(
+                    "rejected: candidate (C-index {:.6}, deviance {:.6}) does not strictly \
+                     improve on incumbent v{} (C-index {:.6}, deviance {:.6})",
+                    candidate.cindex,
+                    candidate.deviance,
+                    latest.unwrap(),
+                    inc.cindex,
+                    inc.deviance
+                ),
+            )
+        };
+        Ok(CycleReport {
+            refit_secs,
+            sweeps: refit.sweeps,
+            candidate,
+            incumbent,
+            published,
+            reason,
+        })
+    }
+
+    /// Atomically publish a refit as `<name>@<version>.json` plus its
+    /// drift sidecar. The temp file carries a non-`.json` extension so
+    /// a crash mid-publish leaves nothing the registry would load.
+    fn publish(
+        &self,
+        feature_names: &[String],
+        time: &[f64],
+        event: &[bool],
+        refit: &RefitResult,
+        version: u64,
+        wall_secs: f64,
+    ) -> Result<()> {
+        let baseline = BreslowBaseline::fit(time, event, &refit.eta);
+        let n_events = event.iter().filter(|&&e| e).count();
+        let diagnostics = FitDiagnostics {
+            optimizer: format!("incremental-{}", self.surrogate.name()),
+            engine: "live-store".to_string(),
+            iterations: refit.sweeps,
+            converged: refit.trace.converged,
+            budget_exhausted: refit.trace.budget_exhausted,
+            objective_value: refit.objective_value,
+            l1: self.objective.l1,
+            l2: self.objective.l2,
+            n_train: time.len(),
+            n_events,
+            wall_secs,
+            trace: refit.trace.clone(),
+        };
+        let model = CoxModel::from_parts(
+            feature_names.to_vec(),
+            refit.beta.clone(),
+            baseline,
+            diagnostics,
+        );
+        let spec = format!("{}@{version}", self.name);
+        let final_path = self.artifacts.join(format!("{spec}.json"));
+        let tmp = self.artifacts.join(format!("{spec}.json.partial.tmp"));
+        model.save(&tmp)?;
+        std::fs::rename(&tmp, &final_path)
+            .map_err(|e| FastSurvivalError::io(format!("publishing artifact {final_path:?}"), e))?;
+        // The drift reference: the training-score (η) histogram live
+        // traffic will be compared against.
+        DriftReference::from_scores(&refit.eta)
+            .save(&DriftRegistry::sidecar_path(&self.artifacts, &spec))
+    }
+}
+
+/// Score one β on the deterministic holdout tail of the merged view.
+pub fn evaluate_holdout(
+    live: &mut LiveDataset,
+    beta: &[f64],
+    frac: f64,
+    seed: u64,
+) -> Result<HoldoutMetrics> {
+    let n = live.meta().n;
+    let (_train, hold) = holdout_tail(n, seed, frac);
+    let ds = live.subset_rows(&hold)?;
+    let n_events = ds.event.iter().filter(|&&e| e).count();
+    if n_events == 0 {
+        return Err(FastSurvivalError::InvalidData(format!(
+            "holdout tail ({} rows) has no events; raise holdout_frac",
+            hold.len()
+        )));
+    }
+    let eta = ds.x.matvec(beta);
+    let cindex = concordance_index(&ds.time, &ds.event, &eta);
+    let pr = CoxProblem::try_new(&ds)?;
+    let eta_sorted: Vec<f64> = pr.order.iter().map(|&i| eta[i]).collect();
+    let null_loss = loss_for_eta(&pr, &vec![0.0; ds.n()]);
+    let deviance = 2.0 * (loss_for_eta(&pr, &eta_sorted) - null_loss);
+    Ok(HoldoutMetrics { cindex, deviance, n: hold.len(), n_events })
+}
+
+/// Load the raw `CoxModel` behind a registry artifact, trying the flat
+/// layout first, then the nested one.
+fn load_artifact_model(artifacts: &Path, name: &str, version: u64) -> Result<CoxModel> {
+    let flat = artifacts.join(format!("{name}@{version}.json"));
+    if flat.is_file() {
+        return CoxModel::load(&flat);
+    }
+    CoxModel::load(&artifacts.join(name).join(format!("{version}.json")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::live::append::append_rows;
+    use crate::store::writer::{write_store, DatasetRows};
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fs_watch_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn seed_store(dir: &Path, n: usize) -> PathBuf {
+        let base = dir.join("events.fsds");
+        let ds = generate(&SyntheticConfig { n, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 11 });
+        let mut rows = DatasetRows::new(&ds);
+        write_store(&mut rows, &base, 64, "events").unwrap();
+        base
+    }
+
+    #[test]
+    fn fingerprint_tracks_appends() {
+        let dir = temp_dir("fp");
+        let base = seed_store(&dir, 150);
+        let f0 = fingerprint(&base).unwrap();
+        assert!(f0.segments.is_empty());
+        let extra = generate(&SyntheticConfig { n: 12, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 12 });
+        let mut rows = DatasetRows::new(&extra);
+        append_rows(&base, &mut rows, 64).unwrap();
+        let f1 = fingerprint(&base).unwrap();
+        assert_ne!(f0, f1);
+        assert_eq!(f1.segments, vec![1]);
+        assert_eq!(f0.base, f1.base, "appends leave the base untouched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gate_requires_strict_improvement() {
+        let a = HoldoutMetrics { cindex: 0.70, deviance: -10.0, n: 50, n_events: 20 };
+        let same = a;
+        assert!(!improves(&same, &a), "ties must not publish");
+        let better_ci = HoldoutMetrics { cindex: 0.71, ..a };
+        assert!(improves(&better_ci, &a));
+        let better_dev = HoldoutMetrics { deviance: -11.0, ..a };
+        assert!(improves(&better_dev, &a));
+        let mixed = HoldoutMetrics { cindex: 0.72, deviance: -9.0, ..a };
+        assert!(!improves(&mixed, &a), "a regression on either metric rejects");
+        let noise = HoldoutMetrics { cindex: 0.70, deviance: -10.0 - 1e-9, ..a };
+        assert!(!improves(&noise, &a), "sub-margin optimizer noise must not publish");
+    }
+
+    #[test]
+    fn first_cycle_publishes_and_identical_refit_is_rejected() {
+        let dir = temp_dir("cycle");
+        let base = seed_store(&dir, 260);
+        let artifacts = dir.join("models");
+        let watcher = Watcher::new(&base, &artifacts, "events");
+
+        let first = watcher.run_cycle().unwrap();
+        assert_eq!(first.published, Some(1), "{}", first.reason);
+        assert!(first.incumbent.is_none());
+        assert!(artifacts.join("events@1.json").is_file());
+        assert!(artifacts.join("events@1.drift").is_file(), "sidecar published");
+
+        // No new data: the deterministic refit reproduces the incumbent,
+        // ties on both metrics, and must NOT publish.
+        let before = std::fs::read(artifacts.join("events@1.json")).unwrap();
+        let second = watcher.run_cycle().unwrap();
+        assert_eq!(second.published, None, "{}", second.reason);
+        assert!(!artifacts.join("events@2.json").exists());
+        assert_eq!(
+            std::fs::read(artifacts.join("events@1.json")).unwrap(),
+            before,
+            "rejected cycle must leave the incumbent byte-identical"
+        );
+
+        // Append fresh rows; the refit now sees more data and the gate
+        // decides on real metrics (publish or not, the report is sound).
+        let extra =
+            generate(&SyntheticConfig { n: 40, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 13 });
+        let mut rows = DatasetRows::new(&extra);
+        append_rows(&base, &mut rows, 64).unwrap();
+        let third = watcher.run_cycle().unwrap();
+        assert!(third.incumbent.is_some());
+        if let Some(v) = third.published {
+            assert_eq!(v, 2);
+            assert!(artifacts.join("events@2.json").is_file());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn holdout_metrics_are_thread_count_independent_inputs() {
+        // holdout_tail is a pure function of (n, seed, frac); two
+        // evaluations of the same β must agree bitwise.
+        let dir = temp_dir("holdout");
+        let base = seed_store(&dir, 200);
+        let mut live = LiveDataset::open(&base).unwrap();
+        let beta = vec![0.1, -0.2, 0.0, 0.3, 0.0, 0.05];
+        let a = evaluate_holdout(&mut live, &beta, 0.15, 9).unwrap();
+        let b = evaluate_holdout(&mut live, &beta, 0.15, 9).unwrap();
+        assert_eq!(a.cindex.to_bits(), b.cindex.to_bits());
+        assert_eq!(a.deviance.to_bits(), b.deviance.to_bits());
+        assert!(a.n >= 2 && a.n_events > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

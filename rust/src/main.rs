@@ -12,6 +12,10 @@
 //!   serve        HTTP scoring server over a model-artifact directory
 //!   score        offline batch scoring: CSV in → CSV out, streamed
 //!   serve-smoke  end-to-end serving burst + gate → BENCH_serve.json
+//!   append       append rows to a .fsds store as a committed live segment
+//!   inspect      dump + verify a .fsds store (header, meta, segments)
+//!   watch        online loop: detect appends, warm-refit, gated publish
+//!   live-smoke   append → warm refit → gated publish + gates → BENCH_live.json
 //!
 //! Examples:
 //!   fastsurvival fit --dataset flchain --method cubic --l2 1
@@ -30,6 +34,10 @@
 //!   fastsurvival serve --models artifacts/serving --addr 127.0.0.1:7878
 //!   fastsurvival score --model churn@1.json --input data.csv --output scores.csv
 //!   fastsurvival serve-smoke --out BENCH_serve.json
+//!   fastsurvival append --store data/big.fsds --input data/new_rows.csv
+//!   fastsurvival inspect --store data/big.fsds
+//!   fastsurvival watch --store data/big.fsds --models artifacts/serving --name churn
+//!   fastsurvival live-smoke --out BENCH_live.json
 //!
 //! Every failure path (bad names, invalid data, missing artifacts,
 //! unknown subcommands) surfaces as a typed `FastSurvivalError`, not a
@@ -45,12 +53,14 @@ use fastsurvival::data::binarize::{binarize, BinarizeConfig};
 use fastsurvival::data::synthetic::{generate, SyntheticConfig};
 use fastsurvival::data::{datasets, SurvivalDataset};
 use fastsurvival::error::{FastSurvivalError, Result};
+use fastsurvival::live::{self, Watcher};
 use fastsurvival::metrics::concordance_index;
+use fastsurvival::optim::Objective;
 use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, VariableSelector};
 use fastsurvival::serve::registry::ModelRegistry;
 use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
-use fastsurvival::serve::{serve, smoke, ServeConfig};
-use fastsurvival::store::{convert_csv, convert_synthetic};
+use fastsurvival::serve::{serve, smoke, HttpClient, ServeConfig};
+use fastsurvival::store::{convert_csv, convert_synthetic, SyntheticRows};
 use fastsurvival::util::args::Args;
 use std::path::Path;
 use std::sync::Arc;
@@ -554,6 +564,135 @@ fn cmd_score(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `append` subcommand: stream rows (CSV or synthetic) into a
+/// committed segment next to an existing `.fsds` store. `--compact`
+/// folds all committed segments back into one base afterwards.
+fn cmd_append(args: &Args) -> Result<()> {
+    let store = args.get("store").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("append requires --store <file.fsds>".into())
+    })?;
+    let store = Path::new(store);
+    let chunk_rows = args.get_or("chunk-rows", 0usize); // 0 = base chunk size
+    let summary = if args.flag("synthetic") {
+        let cfg = SyntheticConfig {
+            n: args.get_or("n", 1000),
+            p: args.get_or("p", 100),
+            rho: args.get_or("rho", 0.2),
+            k: args.get_or("true-k", 10),
+            s: 0.1,
+            seed: args.get_or("seed", 0),
+        };
+        println!("append: streaming synthetic n={} -> {}", cfg.n, store.display());
+        let mut rows = SyntheticRows::new(&cfg);
+        live::append_rows(store, &mut rows, chunk_rows)?
+    } else if let Some(input) = args.get("input") {
+        println!("append: streaming {input} -> {}", store.display());
+        let mut reader = fastsurvival::data::csv::open_survival_csv(Path::new(input))?;
+        live::append_rows(store, &mut reader, chunk_rows)?
+    } else {
+        return Err(FastSurvivalError::InvalidConfig(
+            "append requires --input <data.csv> or --synthetic".into(),
+        ));
+    };
+    println!(
+        "append: committed segment {} — {} rows ({} events); merged view now {} rows \
+         across {} segment(s)",
+        summary.seq, summary.n, summary.n_events, summary.total_rows, summary.segments
+    );
+    if args.flag("compact") {
+        let merged = live::compact(store, 0)?;
+        println!(
+            "compact: merged into one store — n={} ({} chunks, {:.1} MB)",
+            merged.n,
+            merged.n_chunks,
+            merged.bytes as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+/// The `watch` subcommand: poll the store fingerprint and, on growth
+/// (or immediately with `--once`), warm-refit + validate + publish
+/// through the gated [`Watcher`] cycle. `--reload <addr>` POSTs
+/// `/v1/reload` to a running scoring server after each publish.
+fn cmd_watch(args: &Args) -> Result<()> {
+    let store = args.get("store").ok_or_else(|| {
+        FastSurvivalError::InvalidConfig("watch requires --store <file.fsds>".into())
+    })?;
+    let default_name = Path::new(store)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "model".to_string());
+    let name = args.str_or("name", &default_name);
+    let mut watcher = Watcher::new(store, args.str_or("models", "artifacts/serving"), &name);
+    watcher.objective = Objective {
+        l1: args.get_or("l1", 0.0),
+        l2: args.get_or("l2", 1.0),
+    };
+    watcher.surrogate = match args.str_or("method", "quadratic").as_str() {
+        "quadratic" => SurrogateKind::Quadratic,
+        "cubic" => SurrogateKind::Cubic,
+        other => {
+            return Err(FastSurvivalError::Unknown {
+                kind: "surrogate",
+                name: other.to_string(),
+                expected: "quadratic|cubic",
+            })
+        }
+    };
+    watcher.stop_kkt = args.get_or("stop-kkt", 1e-9);
+    watcher.holdout_frac = args.get_or("holdout-frac", 0.1);
+    watcher.holdout_seed = args.get_or("holdout-seed", 17);
+    watcher.seed = args.get_or("seed", 0);
+    let poll = Duration::from_secs_f64(args.get_or("poll-secs", 2.0).max(0.01));
+    let max_cycles = args.get_or("max-cycles", 0usize); // 0 = forever
+    let reload_addr = args.get("reload").map(|a| a.to_string());
+    println!(
+        "watch: {} -> {} as {name} (holdout {:.0}%, poll {:.1}s)",
+        store,
+        watcher.artifacts.display(),
+        watcher.holdout_frac * 100.0,
+        poll.as_secs_f64()
+    );
+
+    let mut last: Option<live::StoreFingerprint> = None;
+    let mut cycles = 0usize;
+    loop {
+        let fp = live::fingerprint(Path::new(store))?;
+        if last.as_ref() != Some(&fp) {
+            let report = watcher.run_cycle()?;
+            println!(
+                "watch: cycle {} — {} ({} sweeps in {:.2}s; holdout C-index {:.4})",
+                cycles + 1,
+                report.reason,
+                report.sweeps,
+                report.refit_secs,
+                report.candidate.cindex
+            );
+            if report.published.is_some() {
+                if let Some(addr) = &reload_addr {
+                    let ok = addr
+                        .parse()
+                        .ok()
+                        .and_then(|a| HttpClient::connect(a).ok())
+                        .and_then(|mut c| c.post("/v1/reload", "{}").ok())
+                        .map(|r| r.status == 200)
+                        .unwrap_or(false);
+                    println!("watch: reload {addr} {}", if ok { "OK" } else { "FAILED" });
+                }
+            }
+            last = Some(fp);
+            cycles += 1;
+            if args.flag("once") || (max_cycles > 0 && cycles >= max_cycles) {
+                return Ok(());
+            }
+        } else if args.flag("once") {
+            return Ok(());
+        }
+        std::thread::sleep(poll);
+    }
+}
+
 const USAGE: &str = "fastsurvival — FastSurvival (NeurIPS 2024) reproduction\n\n\
 usage: fastsurvival <subcommand> [--options]\n\n\
 subcommands:\n\
@@ -567,7 +706,11 @@ subcommands:\n\
   bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check)\n\
   serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
-  serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\n\
+  serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\
+  append       rows → committed live segment (--store --input|--synthetic --compact)\n\
+  inspect      dump + verify a store (--store): header, checksums, segments\n\
+  watch        online loop (--store --models --name --once --poll-secs --reload)\n\
+  live-smoke   online-loop gates: ≥3× warm refit, ≤1e-8 parity → BENCH_live.json\n\n\
 see README.md for endpoint schemas and examples";
 
 fn main() -> Result<()> {
@@ -584,6 +727,10 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
         Some("serve-smoke") => smoke::run(&args),
+        Some("append") => cmd_append(&args),
+        Some("inspect") => fastsurvival::coordinator::inspect::run(&args),
+        Some("watch") => cmd_watch(&args),
+        Some("live-smoke") => live::smoke::run(&args),
         // `--help` never lands in positional (Args routes "--" tokens
         // to flags), so bare invocation or the flag both reach None.
         Some("help") | None => {
@@ -593,8 +740,8 @@ fn main() -> Result<()> {
         Some(other) => Err(FastSurvivalError::Unknown {
             kind: "subcommand",
             name: other.to_string(),
-            expected:
-                "fit|path|select|experiment|datasets|convert|bigfit|bench|serve|score|serve-smoke",
+            expected: "fit|path|select|experiment|datasets|convert|bigfit|bench|serve|score|\
+                       serve-smoke|append|inspect|watch|live-smoke",
         }),
     }
 }

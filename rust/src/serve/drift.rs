@@ -1,0 +1,357 @@
+//! Score-distribution drift counters: each served model's online risk
+//! scores are bucketed into a signed-log₂ histogram and compared
+//! against a stored *training reference* (the score distribution the
+//! model saw at fit time, published as a `<name>@<version>.drift`
+//! sidecar next to the artifact — a non-`.json` extension, so the
+//! registry scan never mistakes it for a model).
+//!
+//! Two summary numbers are exported through `GET /metrics`:
+//!
+//! * **total-variation distance** `½·Σ|p̂ᵢ − q̂ᵢ|` between the online
+//!   and reference bucket frequencies — 0 for identical distributions,
+//!   1 for disjoint support; and
+//! * **online concordance** `P(online > ref) + ½·P(same bucket)` — a
+//!   bucket-level Mann–Whitney statistic; 0.5 means no shift, above
+//!   0.5 the live population scores *higher* than training, below it
+//!   lower. Direction is what TVD can't tell you.
+//!
+//! The hot path is one `fetch_add` per scored row; summaries are
+//! derived at `/metrics` render time from the bucket counts.
+
+use crate::api::json;
+use crate::error::{FastSurvivalError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Histogram width: 32 magnitude buckets per sign, log₂|v| clamped to
+/// [−16, 16). Bucket index is monotone in the score value.
+pub const N_DRIFT_BUCKETS: usize = 64;
+
+/// Sidecar schema version.
+const DRIFT_VERSION: u64 = 1;
+
+/// Map a score to its bucket. Risk scores are positive finite in
+/// practice; zeros, negatives, and non-finite values still land in
+/// well-defined buckets so hostile inputs can't panic the tracker.
+pub fn bucket_of_score(v: f64) -> usize {
+    if v.is_nan() || v == 0.0 {
+        return N_DRIFT_BUCKETS / 2;
+    }
+    if v == f64::INFINITY {
+        return N_DRIFT_BUCKETS - 1;
+    }
+    if v == f64::NEG_INFINITY {
+        return 0;
+    }
+    let mag = (v.abs().log2().floor() as i64 + 16).clamp(0, 31) as usize;
+    if v > 0.0 {
+        32 + mag
+    } else {
+        31 - mag
+    }
+}
+
+/// A stored training-score histogram — the drift comparison baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReference {
+    pub counts: Vec<u64>,
+}
+
+impl DriftReference {
+    /// Histogram a batch of training scores.
+    pub fn from_scores(scores: &[f64]) -> DriftReference {
+        let mut counts = vec![0u64; N_DRIFT_BUCKETS];
+        for &s in scores {
+            counts[bucket_of_score(s)] += 1;
+        }
+        DriftReference { counts }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str("{\"drift_version\": ");
+        out.push_str(&DRIFT_VERSION.to_string());
+        out.push_str(", \"buckets\": ");
+        out.push_str(&N_DRIFT_BUCKETS.to_string());
+        out.push_str(", \"counts\": [");
+        for (i, c) in self.counts.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&c.to_string());
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Atomic write (temp file + rename) of the sidecar.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("drift.partial.tmp");
+        std::fs::write(&tmp, self.to_json())
+            .map_err(|e| FastSurvivalError::io(format!("writing drift sidecar {tmp:?}"), e))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| FastSurvivalError::io(format!("publishing drift sidecar {path:?}"), e))
+    }
+
+    pub fn load(path: &Path) -> Result<DriftReference> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| FastSurvivalError::io(format!("reading drift sidecar {path:?}"), e))?;
+        let doc = json::parse(&text)?;
+        let version = doc.require("drift_version")?.as_usize()?;
+        if version as u64 != DRIFT_VERSION {
+            return Err(FastSurvivalError::Serve(format!(
+                "drift sidecar {path:?}: unsupported drift_version {version}"
+            )));
+        }
+        let buckets = doc.require("buckets")?.as_usize()?;
+        if buckets != N_DRIFT_BUCKETS {
+            return Err(FastSurvivalError::Serve(format!(
+                "drift sidecar {path:?}: {buckets} buckets, expected {N_DRIFT_BUCKETS}"
+            )));
+        }
+        let raw = doc.require("counts")?.as_array()?;
+        if raw.len() != N_DRIFT_BUCKETS {
+            return Err(FastSurvivalError::Serve(format!(
+                "drift sidecar {path:?}: counts has {} entries, expected {N_DRIFT_BUCKETS}",
+                raw.len()
+            )));
+        }
+        let mut counts = Vec::with_capacity(N_DRIFT_BUCKETS);
+        for v in raw {
+            counts.push(v.as_usize()? as u64);
+        }
+        Ok(DriftReference { counts })
+    }
+}
+
+/// Per-model online histogram plus its (optional) training reference.
+pub struct DriftTracker {
+    online: Vec<AtomicU64>,
+    total: AtomicU64,
+    reference: Option<DriftReference>,
+}
+
+impl DriftTracker {
+    pub fn new(reference: Option<DriftReference>) -> DriftTracker {
+        DriftTracker {
+            online: (0..N_DRIFT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            reference,
+        }
+    }
+
+    pub fn has_reference(&self) -> bool {
+        self.reference.is_some()
+    }
+
+    pub fn record_all(&self, scores: &[f64]) {
+        for &s in scores {
+            self.online[bucket_of_score(s)].fetch_add(1, Ordering::Relaxed);
+        }
+        self.total.fetch_add(scores.len() as u64, Ordering::Relaxed);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    fn online_counts(&self) -> Vec<u64> {
+        self.online.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total-variation distance between online and reference bucket
+    /// frequencies (`None` without a reference or without samples).
+    pub fn tvd(&self) -> Option<f64> {
+        let reference = self.reference.as_ref()?;
+        let online = self.online_counts();
+        let (on, rn) = (online.iter().sum::<u64>(), reference.counts.iter().sum::<u64>());
+        if on == 0 || rn == 0 {
+            return None;
+        }
+        let mut tvd = 0.0;
+        for (o, r) in online.iter().zip(reference.counts.iter()) {
+            tvd += (*o as f64 / on as f64 - *r as f64 / rn as f64).abs();
+        }
+        Some(0.5 * tvd)
+    }
+
+    /// Bucket-level online concordance `P(online > ref) + ½·P(tie)` —
+    /// 0.5 means the live score distribution sits where training did.
+    pub fn concordance(&self) -> Option<f64> {
+        let reference = self.reference.as_ref()?;
+        let online = self.online_counts();
+        let (on, rn) = (online.iter().sum::<u64>(), reference.counts.iter().sum::<u64>());
+        if on == 0 || rn == 0 {
+            return None;
+        }
+        // Prefix sums over the reference: buckets are monotone in value,
+        // so "online sample beats reference sample" is "lower ref bucket".
+        let mut below = 0.0_f64; // ref mass strictly below bucket i
+        let mut conc = 0.0_f64;
+        for (i, &o) in online.iter().enumerate() {
+            let tie = reference.counts[i] as f64;
+            conc += o as f64 * (below + 0.5 * tie);
+            below += tie;
+        }
+        Some(conc / (on as f64 * rn as f64))
+    }
+
+    /// One model's drift block in the `/metrics` document.
+    fn write_json(&self, out: &mut String) {
+        out.push_str("{\"samples\": ");
+        out.push_str(&self.samples().to_string());
+        out.push_str(", \"reference\": ");
+        out.push_str(if self.has_reference() { "true" } else { "false" });
+        out.push_str(", \"tvd\": ");
+        match self.tvd() {
+            Some(v) => json::write_f64(out, v),
+            None => out.push_str("null"),
+        }
+        out.push_str(", \"concordance\": ");
+        match self.concordance() {
+            Some(v) => json::write_f64(out, v),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+    }
+}
+
+/// All drift trackers for one server, keyed by `name@version`. Lives on
+/// the server handle — *not* inside the hot-swapped registry state —
+/// so counters survive `/v1/reload`.
+pub struct DriftRegistry {
+    root: PathBuf,
+    trackers: Mutex<BTreeMap<String, Arc<DriftTracker>>>,
+}
+
+impl DriftRegistry {
+    /// `root` is the artifact directory; sidecars are looked up as
+    /// `<root>/<name>@<version>.drift`.
+    pub fn new(root: impl AsRef<Path>) -> DriftRegistry {
+        DriftRegistry {
+            root: root.as_ref().to_path_buf(),
+            trackers: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Sidecar path for a model spec.
+    pub fn sidecar_path(root: &Path, spec: &str) -> PathBuf {
+        root.join(format!("{spec}.drift"))
+    }
+
+    /// The tracker for `spec`, created on first use (loading the
+    /// sidecar if one exists; a corrupt sidecar just means no
+    /// reference — scoring must never fail on metrics plumbing).
+    pub fn tracker(&self, spec: &str) -> Arc<DriftTracker> {
+        let mut map = self.trackers.lock().unwrap();
+        if let Some(t) = map.get(spec) {
+            return Arc::clone(t);
+        }
+        let side = DriftRegistry::sidecar_path(&self.root, spec);
+        let reference = if side.is_file() { DriftReference::load(&side).ok() } else { None };
+        let t = Arc::new(DriftTracker::new(reference));
+        map.insert(spec.to_string(), Arc::clone(&t));
+        t
+    }
+
+    /// The `"drift"` object for the `/metrics` document.
+    pub fn write_json(&self, out: &mut String) {
+        let map = self.trackers.lock().unwrap();
+        out.push('{');
+        for (i, (spec, t)) in map.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            json::write_str(out, spec);
+            out.push_str(": ");
+            t.write_json(out);
+        }
+        out.push('}');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_in_value() {
+        let values = [
+            f64::NEG_INFINITY,
+            -1e9,
+            -2.0,
+            -0.004,
+            0.0,
+            3e-4,
+            0.5,
+            1.0,
+            7.0,
+            1e8,
+            f64::INFINITY,
+        ];
+        let buckets: Vec<usize> = values.iter().map(|&v| bucket_of_score(v)).collect();
+        for w in buckets.windows(2) {
+            assert!(w[0] <= w[1], "buckets must be monotone: {buckets:?}");
+        }
+        assert!(bucket_of_score(f64::NAN) < N_DRIFT_BUCKETS);
+    }
+
+    #[test]
+    fn reference_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("fs_drift_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m@1.drift");
+        let r = DriftReference::from_scores(&[0.1, 0.5, 1.0, 2.0, 2.0, 8.0]);
+        r.save(&path).unwrap();
+        assert_eq!(DriftReference::load(&path).unwrap(), r);
+        // Corruption is a typed error, not a panic.
+        std::fs::write(&path, "{\"drift_version\": 99}").unwrap();
+        assert!(DriftReference::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identical_distributions_read_as_no_drift() {
+        let scores: Vec<f64> = (1..200).map(|i| 0.05 * i as f64).collect();
+        let t = DriftTracker::new(Some(DriftReference::from_scores(&scores)));
+        assert_eq!(t.tvd(), None, "no online samples yet");
+        t.record_all(&scores);
+        assert_eq!(t.samples(), scores.len() as u64);
+        assert!(t.tvd().unwrap() < 1e-12);
+        assert!((t.concordance().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shifted_scores_move_both_statistics() {
+        let train: Vec<f64> = (1..500).map(|i| 0.01 * i as f64).collect();
+        let t = DriftTracker::new(Some(DriftReference::from_scores(&train)));
+        // Live scores 32× larger: 5 buckets to the right.
+        let live: Vec<f64> = train.iter().map(|v| v * 32.0).collect();
+        t.record_all(&live);
+        assert!(t.tvd().unwrap() > 0.5, "tvd {:?}", t.tvd());
+        assert!(t.concordance().unwrap() > 0.9, "conc {:?}", t.concordance());
+    }
+
+    #[test]
+    fn registry_is_lazy_and_survives_missing_sidecars() {
+        let dir = std::env::temp_dir().join(format!("fs_driftreg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        DriftReference::from_scores(&[1.0, 2.0])
+            .save(&DriftRegistry::sidecar_path(&dir, "m@1"))
+            .unwrap();
+        let reg = DriftRegistry::new(&dir);
+        assert!(reg.tracker("m@1").has_reference());
+        assert!(!reg.tracker("m@2").has_reference(), "no sidecar → no reference");
+        // Same Arc on repeat lookups.
+        let a = reg.tracker("m@1");
+        a.record_all(&[1.0]);
+        assert_eq!(reg.tracker("m@1").samples(), 1);
+        let mut out = String::new();
+        reg.write_json(&mut out);
+        let doc = json::parse(&out).unwrap();
+        assert!(doc.require("m@1").is_ok() && doc.require("m@2").is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

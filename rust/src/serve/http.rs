@@ -18,9 +18,10 @@
 //! | `POST /v1/score` | `{"model": "name@ver"?, "rows": [[f64…]…], "horizons": [f64…]?}` | `{"model", "n", "risk": […], "survival": [[…]…]?}` |
 //! | `GET /v1/models` | —                                        | `{"models": [{name, version, features, nonzero, latest}…]}` |
 //! | `POST /v1/reload`| —                                        | `{"reloaded", "artifacts", "names"}` |
-//! | `GET /healthz`   | —                                        | `{"status": "ok", "artifacts"}` |
-//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles |
+//! | `GET /healthz`   | —                                        | `{"status": "ok", "artifacts", "generation", "models": […]}` |
+//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles + per-model drift |
 
+use super::drift::DriftRegistry;
 use super::registry::{parse_spec, ModelRegistry};
 use super::scorer::{BatchConfig, MicroBatcher};
 use super::stats::ServeMetrics;
@@ -91,6 +92,9 @@ struct Ctx {
     registry: Arc<ModelRegistry>,
     batcher: Arc<MicroBatcher>,
     metrics: Arc<ServeMetrics>,
+    /// Drift counters live here, beside the registry handle rather than
+    /// inside the hot-swapped state, so a `/v1/reload` never resets them.
+    drift: Arc<DriftRegistry>,
     shutdown: Arc<AtomicBool>,
     max_body: usize,
 }
@@ -102,6 +106,7 @@ pub struct ServerHandle {
     accept: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
     registry: Arc<ModelRegistry>,
+    drift: Arc<DriftRegistry>,
 }
 
 impl ServerHandle {
@@ -116,6 +121,10 @@ impl ServerHandle {
 
     pub fn registry(&self) -> &Arc<ModelRegistry> {
         &self.registry
+    }
+
+    pub fn drift(&self) -> &Arc<DriftRegistry> {
+        &self.drift
     }
 
     /// Graceful shutdown: stop accepting, let in-flight requests
@@ -160,11 +169,13 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: &ServeConfig) -> Result<ServerHa
         .local_addr()
         .map_err(|e| FastSurvivalError::io("resolving bound address".to_string(), e))?;
     let metrics = Arc::new(ServeMetrics::default());
+    let drift = Arc::new(DriftRegistry::new(registry.root()));
     let shutdown = Arc::new(AtomicBool::new(false));
     let ctx = Ctx {
         registry: Arc::clone(&registry),
         batcher: Arc::new(MicroBatcher::new(cfg.batch.clone())),
         metrics: Arc::clone(&metrics),
+        drift: Arc::clone(&drift),
         shutdown: Arc::clone(&shutdown),
         max_body: cfg.max_body_bytes,
     };
@@ -196,7 +207,7 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: &ServeConfig) -> Result<ServerHa
             // pool drops here: queued connections drain, workers join.
         })
         .map_err(|e| FastSurvivalError::io("spawning accept thread".to_string(), e))?;
-    Ok(ServerHandle { addr, shutdown, accept: Some(accept), metrics, registry })
+    Ok(ServerHandle { addr, shutdown, accept: Some(accept), metrics, registry, drift })
 }
 
 // -------------------------------------------------------- wire plumbing
@@ -434,12 +445,7 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
     let method = request.method.as_str();
     match request.path.as_str() {
         "/healthz" => match method {
-            "GET" => {
-                let mut body = String::from("{\"status\": \"ok\", \"artifacts\": ");
-                body.push_str(&ctx.registry.snapshot().n_artifacts().to_string());
-                body.push('}');
-                (200, body, "healthz", 0)
-            }
+            "GET" => (200, healthz_body(ctx), "healthz", 0),
             _ => (405, error_body("healthz is GET-only"), "healthz", 0),
         },
         "/v1/models" => match method {
@@ -472,7 +478,7 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
             _ => (405, error_body("score is POST-only"), "score", 0),
         },
         "/metrics" => match method {
-            "GET" => (200, ctx.metrics.to_json(), "metrics", 0),
+            "GET" => (200, metrics_body(ctx), "metrics", 0),
             _ => (405, error_body("metrics is GET-only"), "metrics", 0),
         },
         other => (
@@ -482,6 +488,42 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
             0,
         ),
     }
+}
+
+/// `/healthz`: liveness plus what is actually being served — every
+/// loaded `name@version` and the monotonic registry generation, so a
+/// publisher can confirm its reload landed without scoring anything.
+fn healthz_body(ctx: &Ctx) -> String {
+    let state = ctx.registry.snapshot();
+    let items: Vec<Json> = state
+        .list()
+        .iter()
+        .map(|m| {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(m.name().to_string())),
+                ("version".into(), Json::Num(m.version() as f64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("status".into(), Json::Str("ok".into())),
+        ("artifacts".into(), Json::Num(state.n_artifacts() as f64)),
+        ("generation".into(), Json::Num(ctx.registry.generation() as f64)),
+        ("models".into(), Json::Arr(items)),
+    ])
+    .to_json_string()
+}
+
+/// `/metrics`: the endpoint counters document with the per-model drift
+/// block appended.
+fn metrics_body(ctx: &Ctx) -> String {
+    let mut body = ctx.metrics.to_json();
+    debug_assert!(body.ends_with('}'));
+    body.pop();
+    body.push_str(", \"drift\": ");
+    ctx.drift.write_json(&mut body);
+    body.push('}');
+    body
 }
 
 fn models_body(ctx: &Ctx) -> String {
@@ -598,6 +640,7 @@ fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
         Ok(Err(e)) => return (400, error_body(&e.to_string()), 0),
         Err(_) => return (500, error_body("scoring queue dropped the request"), 0),
     };
+    ctx.drift.tracker(&model.spec()).record_all(&output.risk);
     let mut body = String::with_capacity(64 + output.risk.len() * 20);
     body.push_str("{\"model\": ");
     json::write_str(&mut body, &model.spec());

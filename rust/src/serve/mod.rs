@@ -28,12 +28,14 @@
 //! JSON parser and the exact same arithmetic (scores are bit-for-bit
 //! equal to `CoxModel::predict_risk` / `predict_survival_curve`).
 
+pub mod drift;
 pub mod http;
 pub mod registry;
 pub mod scorer;
 pub mod smoke;
 pub mod stats;
 
+pub use drift::{DriftReference, DriftRegistry, DriftTracker};
 pub use http::{serve, HttpClient, ServeConfig, ServerHandle};
 pub use registry::{ModelRegistry, RegistryState, ReloadReport};
 pub use scorer::{score_csv, BatchConfig, CompiledModel, MicroBatcher, ScoreOutput};

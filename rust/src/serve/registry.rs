@@ -27,6 +27,7 @@ use crate::api::CoxModel;
 use crate::error::{FastSurvivalError, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 fn serve_err(msg: impl Into<String>) -> FastSurvivalError {
@@ -81,6 +82,12 @@ pub struct ReloadReport {
 pub struct ModelRegistry {
     root: PathBuf,
     state: RwLock<Arc<RegistryState>>,
+    /// Monotonic state-swap counter: 1 after [`ModelRegistry::open`],
+    /// +1 on every *successful* [`ModelRegistry::reload`]. Lets a
+    /// publisher (or `/healthz` poller) verify that a reload actually
+    /// took — a failed reload leaves both the state and this counter
+    /// untouched.
+    generation: AtomicU64,
 }
 
 impl ModelRegistry {
@@ -92,11 +99,20 @@ impl ModelRegistry {
     pub fn open(root: impl AsRef<Path>) -> Result<ModelRegistry> {
         let root = root.as_ref().to_path_buf();
         let state = Arc::new(scan(&root)?);
-        Ok(ModelRegistry { root, state: RwLock::new(state) })
+        Ok(ModelRegistry {
+            root,
+            state: RwLock::new(state),
+            generation: AtomicU64::new(1),
+        })
     }
 
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// Current registry generation (see the field docs).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
     }
 
     /// The current immutable snapshot. Callers score against the
@@ -117,6 +133,7 @@ impl ModelRegistry {
             names: fresh.names().iter().map(|s| s.to_string()).collect(),
         };
         *self.state.write().unwrap() = fresh;
+        self.generation.fetch_add(1, Ordering::AcqRel);
         Ok(report)
     }
 
@@ -363,16 +380,19 @@ mod tests {
         let dir = unique_dir("atomic");
         toy_model(1.0).save(&dir.join("m@1.json")).unwrap();
         let reg = ModelRegistry::open(&dir).unwrap();
+        assert_eq!(reg.generation(), 1);
         let before = reg.resolve("m@1").unwrap();
         // Drop a corrupt artifact; reload must fail and keep serving v1.
         std::fs::write(dir.join("m@2.json"), "garbage").unwrap();
         assert!(reg.reload().is_err());
+        assert_eq!(reg.generation(), 1, "failed reload must not bump the generation");
         let after = reg.resolve("m").unwrap();
         assert!(Arc::ptr_eq(&before, &after), "old state must keep serving");
-        // Fix it; reload now swaps in both versions.
+        // Fix it; reload now swaps in both versions and bumps the counter.
         toy_model(3.0).save(&dir.join("m@2.json")).unwrap();
         let report = reg.reload().unwrap();
         assert_eq!(report.artifacts, 2);
+        assert_eq!(reg.generation(), 2);
         assert_eq!(reg.resolve("m").unwrap().version(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -169,6 +169,18 @@ impl ChunkedDataset {
         &self.path
     }
 
+    /// The decoded fixed header (geometry + payload location).
+    pub fn header(&self) -> &StoreHeader {
+        &self.header
+    }
+
+    /// Decompose into the raw read handle + geometry + metadata. The
+    /// live merged reader wraps several validated stores and drives its
+    /// own per-source range reads over their chunk geometry.
+    pub(crate) fn into_parts(self) -> (File, StoreHeader, Arc<StoreMeta>) {
+        (self.file, self.header, self.meta)
+    }
+
     /// Materialize the whole store as an in-memory [`SurvivalDataset`]
     /// in sorted (descending-time) order — tests and spot checks only;
     /// refuses stores past a size cap.
@@ -239,7 +251,9 @@ impl CoxData for ChunkedDataset {
 
 /// Seek + read `count` doubles at `offset`, decoding them onto the end
 /// of `out` (the byte buffer is caller-owned and reused across reads).
-fn read_doubles_append(
+/// Shared with the live merged reader, which does per-source range
+/// reads over the same chunk geometry.
+pub(crate) fn read_doubles_append(
     file: &mut File,
     bytebuf: &mut Vec<u8>,
     offset: u64,

@@ -77,7 +77,7 @@ impl StoreHeader {
         if self.n == 0 {
             0
         } else {
-            (self.n + self.chunk_rows - 1) / self.chunk_rows
+            self.n.div_ceil(self.chunk_rows)
         }
     }
 

@@ -149,7 +149,7 @@ impl MemoryCoxData {
         let chunk_rows = chunk_rows.max(1);
         let n = pr.n();
         let p = pr.p();
-        let n_chunks = (n + chunk_rows - 1) / chunk_rows;
+        let n_chunks = n.div_ceil(chunk_rows);
         // Standardization stats over the sorted columns (metadata only),
         // through the shared streaming accumulator.
         let mut means = Vec::with_capacity(p);

@@ -19,7 +19,7 @@
 //! Per-sweep I/O is exactly n·p·8 bytes of column reads; resident memory
 //! stays O(n + chunk·p).
 
-use super::source::CoxData;
+use super::source::{CoxData, StoreMeta};
 use crate::cox::derivatives::Workspace;
 use crate::cox::lipschitz::all_lipschitz;
 use crate::cox::loss::loss_for_parts;
@@ -110,7 +110,7 @@ impl StreamingFit {
         // resident byte): `data` stays mutably borrowable for the
         // chunk/column reads below.
         let meta = data.meta_arc();
-        let (n, p) = (meta.n, meta.p);
+        let p = meta.p;
         if p == 0 {
             return Err(FastSurvivalError::InvalidData(
                 "store has no feature columns".into(),
@@ -194,94 +194,139 @@ impl StreamingFit {
         }
 
         // ---------------- Phase 2: exact chunked surrogate CD.
-        // η = Xβ accumulated chunk by chunk.
-        let mut eta = vec![0.0_f64; n];
-        {
-            let mut chunkbuf: Vec<f64> = Vec::new();
-            for c in 0..meta.n_chunks {
-                let rows = data.load_chunk(c, &mut chunkbuf)?;
-                let r0 = c * meta.chunk_rows;
-                for (j, &bj) in beta.iter().enumerate() {
-                    if bj == 0.0 {
-                        continue;
-                    }
-                    let col = &chunkbuf[j * rows..(j + 1) * rows];
-                    for (k, &x) in col.iter().enumerate() {
-                        eta[r0 + k] += x * bj;
-                    }
-                }
-            }
-        }
-        let mut state = CoxState::from_eta(beta, eta);
-        let config = FitConfig {
-            objective: obj,
-            max_iters: self.max_sweeps,
-            tol: self.tol,
-            // The exact phase gets whatever the warmup left of the
-            // budget; a fully-spent budget still runs one sweep before
-            // the stopper fires and reports budget_exhausted — the same
-            // post-iteration check the in-memory fit makes.
-            budget_secs: if self.budget_secs > 0.0 {
-                (self.budget_secs - fit_start.elapsed().as_secs_f64()).max(1e-9)
-            } else {
-                0.0
-            },
-            record_trace: true,
+        // The exact phase gets whatever the warmup left of the budget; a
+        // fully-spent budget still runs one sweep before the stopper
+        // fires and reports budget_exhausted — the same post-iteration
+        // check the in-memory fit makes.
+        let remaining = if self.budget_secs > 0.0 {
+            (self.budget_secs - fit_start.elapsed().as_secs_f64()).max(1e-9)
+        } else {
+            0.0
         };
-        let mut stopper = Stopper::new();
-        let mut sweeps = 0usize;
-        let mut colbuf: Vec<f64> = Vec::new();
-        for it in 0..self.max_sweeps {
-            // Largest pre-step KKT residual seen this sweep, reported by
-            // the engine's own parts-level step
-            // ([`SurrogateKind::step_residual_col`] — one source of
-            // truth with the in-memory `step_residual`, STEP_SNAP
-            // no-op snapping included).
-            let mut max_res = 0.0_f64;
-            for l in 0..p {
-                data.load_col(l, &mut colbuf)?;
-                let (_delta, residual) = self.surrogate.step_residual_col(
-                    &meta.groups,
-                    meta.xt_delta[l],
-                    &mut state,
-                    &colbuf,
-                    meta.col_binary[l],
-                    l,
-                    meta.lipschitz[l],
-                    obj,
-                    0.0,
-                );
-                if residual > max_res {
-                    max_res = residual;
-                }
-            }
-            sweeps = it + 1;
-            let loss =
-                loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
-                    + obj.penalty(&state.beta);
-            let stop_loss = stopper.step(it, loss, &config);
-            let stop_kkt = self.stop_kkt > 0.0 && max_res <= self.stop_kkt;
-            if stop_kkt {
-                stopper.trace.converged = true;
-            }
-            if stop_loss || stop_kkt {
-                break;
-            }
-        }
-        let objective_value =
-            loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
-                + obj.penalty(&state.beta);
+        let outcome = exact_chunked_cd(
+            data,
+            &meta,
+            beta,
+            self.surrogate,
+            obj,
+            self.max_sweeps,
+            self.tol,
+            self.stop_kkt,
+            remaining,
+        )?;
+        let mut state = outcome.state;
         let beta = std::mem::take(&mut state.beta);
         let eta = std::mem::take(&mut state.eta);
         Ok(StreamingFitResult {
             beta,
             eta,
-            objective_value,
-            sweeps,
+            objective_value: outcome.objective_value,
+            sweeps: outcome.sweeps,
             sgd_steps,
-            trace: stopper.trace,
+            trace: outcome.trace,
         })
     }
+}
+
+/// What the exact chunked-CD phase left behind.
+pub(crate) struct ExactPhaseOutcome {
+    pub state: CoxState,
+    pub objective_value: f64,
+    pub sweeps: usize,
+    pub trace: Trace,
+}
+
+/// The exact chunked surrogate-CD phase, shared between
+/// [`StreamingFit::fit`] (entered from the warmup's β) and the online
+/// incremental refit driver (entered from a previously-published
+/// model's β): rebuild η = Xβ chunk by chunk, then sweep columns with
+/// the engine's parts-level residual step until loss tolerance, KKT
+/// residual, or the wall-clock budget stops it. Keeping one body means
+/// a warm refit and a cold streamed fit run the identical
+/// floating-point sequence per sweep — the ≤1e-8 parity certificate
+/// compares two runs of *this* code differing only in their starting β.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exact_chunked_cd<S: CoxData>(
+    data: &mut S,
+    meta: &StoreMeta,
+    beta: Vec<f64>,
+    surrogate: SurrogateKind,
+    obj: Objective,
+    max_sweeps: usize,
+    tol: f64,
+    stop_kkt: f64,
+    budget_secs: f64,
+) -> Result<ExactPhaseOutcome> {
+    let (n, p) = (meta.n, meta.p);
+    // η = Xβ accumulated chunk by chunk.
+    let mut eta = vec![0.0_f64; n];
+    {
+        let mut chunkbuf: Vec<f64> = Vec::new();
+        for c in 0..meta.n_chunks {
+            let rows = data.load_chunk(c, &mut chunkbuf)?;
+            let r0 = c * meta.chunk_rows;
+            for (j, &bj) in beta.iter().enumerate() {
+                if bj == 0.0 {
+                    continue;
+                }
+                let col = &chunkbuf[j * rows..(j + 1) * rows];
+                for (k, &x) in col.iter().enumerate() {
+                    eta[r0 + k] += x * bj;
+                }
+            }
+        }
+    }
+    let mut state = CoxState::from_eta(beta, eta);
+    let config = FitConfig {
+        objective: obj,
+        max_iters: max_sweeps,
+        tol,
+        budget_secs,
+        record_trace: true,
+    };
+    let mut stopper = Stopper::new();
+    let mut sweeps = 0usize;
+    let mut colbuf: Vec<f64> = Vec::new();
+    for it in 0..max_sweeps {
+        // Largest pre-step KKT residual seen this sweep, reported by
+        // the engine's own parts-level step
+        // ([`SurrogateKind::step_residual_col`] — one source of
+        // truth with the in-memory `step_residual`, STEP_SNAP
+        // no-op snapping included).
+        let mut max_res = 0.0_f64;
+        for l in 0..p {
+            data.load_col(l, &mut colbuf)?;
+            let (_delta, residual) = surrogate.step_residual_col(
+                &meta.groups,
+                meta.xt_delta[l],
+                &mut state,
+                &colbuf,
+                meta.col_binary[l],
+                l,
+                meta.lipschitz[l],
+                obj,
+                0.0,
+            );
+            if residual > max_res {
+                max_res = residual;
+            }
+        }
+        sweeps = it + 1;
+        let loss = loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
+            + obj.penalty(&state.beta);
+        let stop_loss = stopper.step(it, loss, &config);
+        let stopped_kkt = stop_kkt > 0.0 && max_res <= stop_kkt;
+        if stopped_kkt {
+            stopper.trace.converged = true;
+        }
+        if stop_loss || stopped_kkt {
+            break;
+        }
+    }
+    let objective_value =
+        loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
+            + obj.penalty(&state.beta);
+    Ok(ExactPhaseOutcome { state, objective_value, sweeps, trace: stopper.trace })
 }
 
 /// Classic in-memory surrogate CD driven to a KKT residual — the

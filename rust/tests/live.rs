@@ -1,0 +1,256 @@
+//! End-to-end online-learning loop properties:
+//!
+//! 1. Crash-interrupted appends (killed between segment write and
+//!    manifest commit, leftover `.partial.tmp` workspace, stale
+//!    manifest after a base rewrite) always leave a store that opens
+//!    cleanly, and the next append sweeps the debris.
+//! 2. Append → warm refit is bitwise identical across
+//!    FASTSURVIVAL_THREADS ∈ {1, 2, 4} and matches a cold fit of the
+//!    merged view to ≤1e-8 per coefficient (KKT certificate on both).
+//! 3. A refit that fails holdout validation leaves the served model
+//!    untouched — scored through the registry before and after, bitwise.
+//! 4. `/healthz` names the served models and carries a registry
+//!    generation counter that bumps on every successful reload.
+
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::live::manifest::{manifest_path, segment_path, Manifest};
+use fastsurvival::live::{append_rows, fingerprint, IncrementalRefit, LiveDataset, Watcher};
+use fastsurvival::optim::{Objective, SurrogateKind};
+use fastsurvival::serve::scorer::BatchConfig;
+use fastsurvival::serve::{serve, HttpClient, ModelRegistry, ServeConfig};
+use fastsurvival::store::{write_store, ChunkedDataset, CoxData, DatasetRows, StreamingFit};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fs_live_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn gen(n: usize, seed: u64) -> SurvivalDataset {
+    generate(&SyntheticConfig { n, p: 5, rho: 0.3, k: 3, s: 0.1, seed })
+}
+
+fn seed_store(dir: &Path, n: usize, seed: u64) -> PathBuf {
+    let base = dir.join("events.fsds");
+    let ds = gen(n, seed);
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &base, 48, "events").unwrap();
+    base
+}
+
+#[test]
+fn crash_interrupted_appends_leave_an_openable_store() {
+    let dir = temp_dir("crash");
+    let base = seed_store(&dir, 90, 1);
+    let extra = gen(11, 2);
+    let mut rows = DatasetRows::new(&extra);
+    append_rows(&base, &mut rows, 0).unwrap();
+
+    // Crash point 1: a segment fully written but never committed (kill
+    // between segment write and manifest update). Readers must serve
+    // exactly the committed view.
+    let orphan = gen(7, 3);
+    let mut rows = DatasetRows::new(&orphan);
+    write_store(&mut rows, &segment_path(&base, 2), 48, "events.seg000002").unwrap();
+    // Crash point 2: leftover writer workspace.
+    let tmp = PathBuf::from(format!("{}.partial.tmp", base.display()));
+    std::fs::write(&tmp, b"half-written junk").unwrap();
+
+    let mut live = LiveDataset::open(&base).unwrap();
+    assert_eq!(live.meta().n, 90 + 11, "orphan rows must not be served");
+    let mut buf = Vec::new();
+    let rows0 = live.load_chunk(0, &mut buf).unwrap();
+    assert!(rows0 > 0, "the merged view must actually read");
+
+    // The next append sweeps both leftovers and commits cleanly.
+    let more = gen(5, 4);
+    let mut rows = DatasetRows::new(&more);
+    let s = append_rows(&base, &mut rows, 0).unwrap();
+    assert_eq!(s.seq, 2, "the orphan's sequence number is reclaimed");
+    assert_eq!(s.total_rows, 90 + 11 + 5);
+    assert!(!tmp.exists(), ".partial.tmp must be cleaned");
+    let m = Manifest::load_valid(&base).unwrap().unwrap();
+    assert_eq!(m.segments.len(), 2);
+    assert_eq!(m.segments[1].n, 5, "the commit holds the new rows, not the orphan's");
+
+    // Crash point 3: compaction renamed a new base into place but died
+    // before retiring the manifest — simulate by rewriting the base.
+    let rebuilt = gen(40, 5);
+    let mut rows = DatasetRows::new(&rebuilt);
+    write_store(&mut rows, &base, 48, "events").unwrap();
+    assert!(manifest_path(&base).exists(), "stale manifest still on disk");
+    let live = LiveDataset::open(&base).unwrap();
+    assert_eq!(live.meta().n, 40, "stale manifest ignored; base alone is served");
+    let fp = fingerprint(&base).unwrap();
+    assert!(fp.segments.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The thread-parity satellite. All FASTSURVIVAL_THREADS mutation for
+/// this test binary lives in this one test (libtest runs tests
+/// concurrently; results everywhere are thread-count independent by
+/// design, but the env writes themselves must not race each other).
+#[test]
+fn append_then_warm_refit_parity_across_thread_counts() {
+    let dir = temp_dir("parity");
+    let base = seed_store(&dir, 240, 6);
+    let obj = Objective { l1: 0.0, l2: 1.0 };
+
+    // The "served" β: a cold KKT-certified fit of the base alone.
+    let fitter = StreamingFit {
+        objective: obj,
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt: 1e-9,
+        ..Default::default()
+    };
+    let mut base_store = ChunkedDataset::open(&base).unwrap();
+    let served = fitter.fit(&mut base_store).unwrap();
+
+    // ~5% append.
+    let extra = gen(13, 7);
+    let mut rows = DatasetRows::new(&extra);
+    append_rows(&base, &mut rows, 0).unwrap();
+
+    let refit = IncrementalRefit { objective: obj, stop_kkt: 1e-9, ..Default::default() };
+    let saved = std::env::var("FASTSURVIVAL_THREADS").ok();
+    let mut snapshots: Vec<Vec<f64>> = Vec::new();
+    let mut warm_sweeps = 0usize;
+    for threads in ["1", "2", "4"] {
+        std::env::set_var("FASTSURVIVAL_THREADS", threads);
+        let mut live = LiveDataset::open(&base).unwrap();
+        let warm = refit.refit(&mut live, &served.beta).unwrap();
+        assert!(warm.trace.converged, "threads={threads}: warm refit must KKT-converge");
+        warm_sweeps = warm.sweeps;
+        snapshots.push(warm.beta);
+    }
+    match saved {
+        Some(v) => std::env::set_var("FASTSURVIVAL_THREADS", v),
+        None => std::env::remove_var("FASTSURVIVAL_THREADS"),
+    }
+    for snap in &snapshots[1..] {
+        for (a, b) in snapshots[0].iter().zip(snap.iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "warm refit changed with FASTSURVIVAL_THREADS"
+            );
+        }
+    }
+
+    // Warm vs cold on the same merged view: ≤1e-8 per coefficient (both
+    // certified to KKT residual 1e-9 of the same strongly-convex
+    // objective) and no more exact-phase work than the cold run.
+    let mut live = LiveDataset::open(&base).unwrap();
+    let cold = fitter.fit(&mut live).unwrap();
+    assert!(cold.trace.converged);
+    for (a, b) in snapshots[0].iter().zip(cold.beta.iter()) {
+        assert!(
+            (a - b).abs() <= 1e-8,
+            "warm {a} vs cold {b}: outside the KKT parity certificate"
+        );
+    }
+    assert!(
+        warm_sweeps <= cold.sweeps,
+        "warm refit must not sweep more than a cold fit ({warm_sweeps} vs {})",
+        cold.sweeps
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rejected_publish_leaves_the_served_model_untouched() {
+    let dir = temp_dir("reject");
+    let base = seed_store(&dir, 260, 8);
+    let artifacts = dir.join("models");
+    let watcher = Watcher::new(&base, &artifacts, "events");
+
+    // Cycle 1: no incumbent → v1 publishes.
+    let first = watcher.run_cycle().unwrap();
+    assert_eq!(first.published, Some(1), "{}", first.reason);
+
+    // Score a probe row through the registry, exactly as the server
+    // would.
+    let registry = ModelRegistry::open(&artifacts).unwrap();
+    let model_before = registry.resolve("events@1").unwrap();
+    let probe: Vec<f64> = (0..model_before.p()).map(|j| 0.1 * (j as f64 + 1.0)).collect();
+    let eta_before = model_before.eta_row(&probe);
+    let bytes_before = std::fs::read(artifacts.join("events@1.json")).unwrap();
+
+    // Cycle 2 on unchanged data: the deterministic refit ties the
+    // incumbent on both holdout metrics → the gate must reject.
+    let second = watcher.run_cycle().unwrap();
+    assert_eq!(second.published, None, "{}", second.reason);
+
+    // The served model is untouched: same artifact bytes, same version
+    // list after a reload, bitwise-identical scores.
+    registry.reload().unwrap();
+    let state = registry.snapshot();
+    assert_eq!(state.latest_version("events"), Some(1));
+    let model_after = registry.resolve("events@1").unwrap();
+    assert_eq!(
+        model_after.eta_row(&probe).to_bits(),
+        eta_before.to_bits(),
+        "a rejected publish must not change served scores"
+    );
+    assert_eq!(
+        std::fs::read(artifacts.join("events@1.json")).unwrap(),
+        bytes_before,
+        "a rejected publish must leave the artifact byte-identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn healthz_names_models_and_generation_bumps_on_reload() {
+    let dir = temp_dir("healthz");
+    let base = seed_store(&dir, 220, 9);
+    let artifacts = dir.join("models");
+    let watcher = Watcher::new(&base, &artifacts, "events");
+    watcher.run_cycle().unwrap();
+
+    let registry = Arc::new(ModelRegistry::open(&artifacts).unwrap());
+    assert_eq!(registry.generation(), 1);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_body_bytes: 1 << 20,
+        batch: BatchConfig::default(),
+    };
+    let handle = serve(Arc::clone(&registry), &cfg).unwrap();
+    let addr = handle.local_addr();
+    let mut client = HttpClient::connect(addr).unwrap();
+
+    let healthz = client.get("/healthz").unwrap();
+    assert_eq!(healthz.status, 200);
+    assert!(healthz.body.contains("\"events\""), "healthz must name the model: {}", healthz.body);
+    assert!(healthz.body.contains("\"version\": 1") || healthz.body.contains("\"version\":1"));
+    assert!(healthz.body.contains("\"generation\": 1") || healthz.body.contains("\"generation\":1"));
+
+    // Grow the store so the next cycle publishes v2, then hot-reload.
+    let extra = gen(30, 10);
+    let mut rows = DatasetRows::new(&extra);
+    append_rows(&base, &mut rows, 0).unwrap();
+    let report = watcher.run_cycle().unwrap();
+    let reload = client.post("/v1/reload", "{}").unwrap();
+    assert_eq!(reload.status, 200);
+    let healthz2 = client.get("/healthz").unwrap();
+    assert!(
+        healthz2.body.contains("\"generation\": 2") || healthz2.body.contains("\"generation\":2"),
+        "generation must bump on reload (published={:?}): {}",
+        report.published,
+        healthz2.body
+    );
+    // /metrics carries the drift block the watcher's sidecars feed.
+    let metrics = client.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(metrics.body.contains("\"drift\""), "{}", metrics.body);
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
