@@ -27,6 +27,8 @@ use crate::path::{CardinalityPath, CardinalitySolver, PathSolver};
 use crate::runtime::engine::CoxEngine;
 use crate::select::BeamSearch;
 use crate::store::{ChunkedDataset, CoxData, StreamingFit};
+use crate::util::compute::{Compute, Precision};
+use std::borrow::Cow;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -51,6 +53,7 @@ pub struct CoxFit {
     stop_kkt: f64,
     budget_secs: f64,
     record_trace: bool,
+    compute: Compute,
     // λ-path configuration (CoxFit::l1_path).
     n_lambdas: usize,
     lambda_min_ratio: f64,
@@ -70,6 +73,7 @@ impl Default for CoxFit {
             stop_kkt: 0.0,
             budget_secs: 0.0,
             record_trace: true,
+            compute: Compute::default(),
             n_lambdas: 50,
             lambda_min_ratio: 0.01,
             l1_ratio: 1.0,
@@ -148,6 +152,19 @@ impl CoxFit {
         self
     }
 
+    /// Kernel backend / thread-count / storage-precision request (see
+    /// [`Compute`]). Resolved exactly once when the fit starts; an
+    /// unknown backend or an invalid thread count surfaces as a typed
+    /// error from that resolution, never a silent fallback. Under
+    /// [`Precision::F32Storage`] every feature cell is rounded through
+    /// f32 before the problem is built (f64 accumulation throughout),
+    /// matching what a v2 `.fsds` store serves — coefficients agree
+    /// with the f64 fit to ≤1e-6.
+    pub fn compute(mut self, compute: Compute) -> Self {
+        self.compute = compute;
+        self
+    }
+
     /// Number of λ grid points for [`CoxFit::l1_path`] (default 50).
     pub fn n_lambdas(mut self, n: usize) -> Self {
         self.n_lambdas = n;
@@ -218,6 +235,9 @@ impl CoxFit {
     /// all surface as typed errors instead of panics.
     pub fn fit(&self, ds: &SurvivalDataset) -> Result<CoxModel> {
         self.validate(ds)?;
+        let rc = self.compute.resolve()?;
+        let ds = dataset_for(ds, rc.precision);
+        let ds = ds.as_ref();
         let problem = CoxProblem::try_new(ds)?;
         let engine: Box<dyn CoxEngine> = self.engine.build(&self.artifact_dir)?;
         let optimizer: Box<dyn Optimizer> = self.optimizer.build();
@@ -227,6 +247,7 @@ impl CoxFit {
             tol: self.tol,
             budget_secs: self.budget_secs,
             record_trace: self.record_trace,
+            compute: rc,
         };
 
         let t0 = Instant::now();
@@ -312,6 +333,9 @@ impl CoxFit {
             )));
         }
         let mut data = ChunkedDataset::open(store_path.as_ref())?;
+        // Note: the *storage* precision of a `.fsds` fit is fixed by the
+        // store's header (set at conversion time); `compute.precision`
+        // only affects in-memory fits. Backend and threads apply here.
         let fitter = StreamingFit {
             objective: Objective { l1: self.l1, l2: self.l2 },
             surrogate,
@@ -319,6 +343,7 @@ impl CoxFit {
             tol: self.tol,
             stop_kkt: self.stop_kkt,
             budget_secs: self.budget_secs,
+            compute: self.compute,
             ..Default::default()
         };
         let t0 = Instant::now();
@@ -400,6 +425,9 @@ impl CoxFit {
     /// [`CoxModel`].
     pub fn l1_path(&self, ds: &SurvivalDataset) -> Result<CoxPath> {
         let surrogate = self.validate_path(ds)?;
+        let rc = self.compute.resolve()?;
+        let ds = dataset_for(ds, rc.precision);
+        let ds = ds.as_ref();
         let problem = CoxProblem::try_new(ds)?;
         // Note: `tol` (the loss-change tolerance of single fits) does not
         // apply here — the path's inner stopping is KKT-residual-based
@@ -410,6 +438,7 @@ impl CoxFit {
             l1_ratio: self.l1_ratio,
             surrogate,
             max_sweeps: self.max_iters,
+            backend: rc.backend,
             ..Default::default()
         };
         let t0 = Instant::now();
@@ -469,6 +498,9 @@ impl CoxFit {
                 "cardinality path needs max_k >= 1".into(),
             ));
         }
+        let rc = self.compute.resolve()?;
+        let ds = dataset_for(ds, rc.precision);
+        let ds = ds.as_ref();
         let problem = CoxProblem::try_new(ds)?;
         let t0 = Instant::now();
         let path: CardinalityPath = solver.run(&problem, max_k);
@@ -508,11 +540,27 @@ impl CoxFit {
     }
 }
 
+/// The dataset a fit actually runs on: under [`Precision::F32Storage`]
+/// every feature cell is rounded through f32 first, so the in-memory
+/// engines compute on exactly the values a v2 `.fsds` store of the same
+/// data would serve. Times and events stay f64/bool untouched.
+fn dataset_for(ds: &SurvivalDataset, precision: Precision) -> Cow<'_, SurvivalDataset> {
+    match precision {
+        Precision::F64 => Cow::Borrowed(ds),
+        Precision::F32Storage => {
+            let mut q = ds.clone();
+            q.x.quantize_f32();
+            Cow::Owned(q)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, SyntheticConfig};
     use crate::linalg::Matrix;
+    use crate::util::compute::Backend;
 
     fn ds() -> SurvivalDataset {
         generate(&SyntheticConfig { n: 200, p: 10, rho: 0.4, k: 3, s: 0.1, seed: 11 })
@@ -581,6 +629,45 @@ mod tests {
             CoxFit::new().optimizer(OptimizerKind::Newton).engine(EngineKind::Xla).fit(&ds),
             Err(FastSurvivalError::Unsupported(_))
         ));
+    }
+
+    #[test]
+    fn compute_request_is_resolved_once_with_typed_errors() {
+        let ds = ds();
+        // Invalid thread count is a typed config error, not a panic.
+        assert!(matches!(
+            CoxFit::new().l2(0.1).compute(Compute::default().threads(0)).fit(&ds),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        // Explicit scalar and SIMD requests both fit and agree closely
+        // (the fit-level tolerance absorbs reassociated reductions).
+        let scalar = CoxFit::new()
+            .l2(0.1)
+            .compute(Compute::default().backend(Backend::Scalar))
+            .fit(&ds)
+            .unwrap();
+        let simd = CoxFit::new()
+            .l2(0.1)
+            .compute(Compute::default().backend(Backend::Simd))
+            .fit(&ds)
+            .unwrap();
+        for (a, b) in scalar.beta().iter().zip(simd.beta().iter()) {
+            assert!((a - b).abs() <= 1e-8, "scalar {a} vs simd {b}");
+        }
+    }
+
+    #[test]
+    fn f32_storage_fit_matches_f64_to_1e6() {
+        let ds = ds();
+        let full = CoxFit::new().l2(0.5).fit(&ds).unwrap();
+        let mixed = CoxFit::new()
+            .l2(0.5)
+            .compute(Compute::default().precision(Precision::F32Storage))
+            .fit(&ds)
+            .unwrap();
+        for (a, b) in full.beta().iter().zip(mixed.beta().iter()) {
+            assert!((a - b).abs() <= 1e-6, "f64 {a} vs f32-storage {b}");
+        }
     }
 
     #[test]

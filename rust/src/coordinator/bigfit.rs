@@ -24,10 +24,11 @@ use crate::data::synthetic::{generate, SyntheticConfig};
 use crate::error::{FastSurvivalError, Result};
 use crate::optim::{Objective, SurrogateKind};
 use crate::store::{
-    convert_synthetic, reference_fit_kkt, write_store, ChunkedDataset, CoxData, DatasetRows,
-    MemoryCoxData, StreamingFit, DEFAULT_CHUNK_ROWS,
+    convert_synthetic_with, reference_fit_kkt, write_store_with, ChunkedDataset, CoxData,
+    DatasetRows, MemoryCoxData, StreamingFit, DEFAULT_CHUNK_ROWS,
 };
 use crate::util::args::Args;
+use crate::util::compute::{Compute, Precision};
 use crate::util::mem::peak_rss_bytes;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -62,13 +63,20 @@ impl ParityReport {
 /// of 1e-9, which pins each within √p·ε/μ ≈ 3e-9 of the unique optimum
 /// of the λ₂=1 objective and so certifies the ≤1e-8 agreement (loss-
 /// change stopping could not).
-fn parity_gate(dir: &Path) -> Result<ParityReport> {
+fn parity_gate(dir: &Path, compute: Compute) -> Result<ParityReport> {
     let (n, p, chunk_rows) = (2000, 40, 256);
     let obj = Objective { l1: 0.0, l2: 1.0 };
-    let ds = generate(&SyntheticConfig { n, p, rho: 0.4, k: 5, s: 0.1, seed: 7 });
+    let mut ds = generate(&SyntheticConfig { n, p, rho: 0.4, k: 5, s: 0.1, seed: 7 });
+    // Under --precision f32 every source (store cells, memory source,
+    // classic reference) must see the same f32-rounded values, so the
+    // bitwise and 1e-8 gates keep measuring the pipeline, not the
+    // quantization step.
+    if compute.precision == Precision::F32Storage {
+        ds.x.quantize_f32();
+    }
     let store_path = dir.join("bigfit_parity.fsds");
     let mut rows = DatasetRows::new(&ds);
-    write_store(&mut rows, &store_path, chunk_rows, "parity")?;
+    write_store_with(&mut rows, &store_path, chunk_rows, "parity", compute.precision)?;
 
     let fitter = StreamingFit {
         objective: obj,
@@ -76,6 +84,7 @@ fn parity_gate(dir: &Path) -> Result<ParityReport> {
         max_sweeps: 10_000,
         tol: 0.0,
         stop_kkt: 1e-9,
+        compute,
         ..Default::default()
     };
     let mut chunked = ChunkedDataset::open(&store_path)?;
@@ -192,6 +201,10 @@ pub fn run(args: &Args) -> Result<()> {
         args.get_or("chunk-rows", if quick { 4096 } else { DEFAULT_CHUNK_ROWS });
     let out_path = args.str_or("out", "BENCH_bigfit.json");
     let keep = args.flag("keep");
+    // One compute request (--backend/--threads/--precision/--block-rows)
+    // shared by the parity gate and the tracked workload; resolved by
+    // each StreamingFit exactly once.
+    let compute = Compute::from_args(args)?;
     let dir = match args.get("dir") {
         Some(d) => PathBuf::from(d),
         None => std::env::temp_dir().join("fastsurvival_bigfit"),
@@ -201,7 +214,7 @@ pub fn run(args: &Args) -> Result<()> {
 
     // Parity gate first: cheap, and a broken kernel should fail fast.
     println!("bigfit: parity gate (n=2000, p=40, chunked vs memory vs classic)...");
-    let parity = parity_gate(&dir)?;
+    let parity = parity_gate(&dir, compute)?;
     println!(
         "bigfit: parity chunked-vs-memory max|Δβ| = {:.3e} (bitwise: {}), \
          vs classic = {:.3e}",
@@ -212,7 +225,7 @@ pub fn run(args: &Args) -> Result<()> {
     let cfg = SyntheticConfig { n, p, rho: 0.2, k: 10.min(p), s: 0.1, seed: 42 };
     let store_path = dir.join(format!("bigfit_n{n}_p{p}.fsds"));
     let t0 = Instant::now();
-    let summary = convert_synthetic(&cfg, &store_path, chunk_rows)?;
+    let summary = convert_synthetic_with(&cfg, &store_path, chunk_rows, compute.precision)?;
     let convert_secs = t0.elapsed().as_secs_f64();
     println!(
         "bigfit: streamed {}x{} store ({} chunks, {:.1} MB) in {:.1}s",
@@ -230,6 +243,7 @@ pub fn run(args: &Args) -> Result<()> {
         surrogate: SurrogateKind::Quadratic,
         max_sweeps: args.get_or("sweeps", 6),
         tol: args.get_or("tol", 1e-7),
+        compute,
         ..Default::default()
     };
     let t1 = Instant::now();

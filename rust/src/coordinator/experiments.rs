@@ -214,6 +214,7 @@ pub fn optim_figure(
         tol: 1e-12,
         budget_secs: 60.0,
         record_trace: true,
+        ..Default::default()
     };
 
     let mut curve = Table::new(

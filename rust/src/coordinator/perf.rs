@@ -17,7 +17,9 @@
 //! advisory output.
 
 use crate::api::json;
-use crate::cox::derivatives::{all_coord_d1_d2_seq, all_coord_d1_d2_with_threads, Workspace};
+use crate::cox::derivatives::{
+    all_coord_d1_d2_opts, all_coord_d1_d2_seq, all_coord_d1_d2_with_threads, Workspace,
+};
 use crate::cox::stratified::StratifiedCoxProblem;
 use crate::cox::{CoxProblem, CoxState};
 use crate::data::SurvivalDataset;
@@ -26,6 +28,7 @@ use crate::linalg::Matrix;
 use crate::path::PathSolver;
 use crate::util::args::Args;
 use crate::util::bench::{time_once, Bencher};
+use crate::util::compute::{auto_block_rows, Backend, KernelBackend};
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
 use std::hint::black_box;
@@ -44,6 +47,12 @@ const REQUIRED_PATH_SPEEDUP: f64 = 3.0;
 /// Maximum normalized per-grid-point loss gap |warm − cold| / (1 + |cold|)
 /// between the warm-started screened path and the cold reference.
 const PATH_ENDPOINT_TOL: f64 = 1e-8;
+
+/// The speedup the SIMD lane kernels must hold over the scalar backend
+/// on the tracked batched workload at the same thread count. Like the
+/// path gate, the ratio compares two timings from one run on one
+/// machine, so it is machine-independent.
+const REQUIRED_SIMD_SPEEDUP: f64 = 1.3;
 
 /// Default slow-down tolerance for `--check`, in percent.
 const DEFAULT_TOLERANCE_PCT: f64 = 25.0;
@@ -251,6 +260,69 @@ fn bench_batched_pair(
     (seq_idx, t4_idx)
 }
 
+/// Everything the SIMD-vs-scalar backend gate tracks for one run.
+struct SimdGateInfo {
+    tracked: String,
+    reference: String,
+    threads: usize,
+    /// scalar median / simd median on the tracked workload.
+    speedup: f64,
+}
+
+impl SimdGateInfo {
+    fn passed(&self) -> bool {
+        self.speedup >= REQUIRED_SIMD_SPEEDUP
+    }
+}
+
+/// Benchmark the batched derivative pass per kernel backend on one
+/// workload at a fixed worker count — the `--backend` sweep. Emits one
+/// entry per backend; when both backends ran, returns the gate ratio
+/// (scalar median / simd median, same run, same machine).
+fn bench_backend_sweep(
+    entries: &mut Vec<Entry>,
+    b: &mut Bencher,
+    n: usize,
+    p: usize,
+    seed: u64,
+    threads: usize,
+    backends: &[KernelBackend],
+) -> Option<SimdGateInfo> {
+    let pr = synthetic_problem(n, p, seed, false);
+    let st = bench_state(&pr, seed ^ 0x5eed);
+    let block_rows = auto_block_rows(n);
+    let mut medians: Vec<(KernelBackend, String, f64)> = Vec::new();
+    for &backend in backends {
+        // One workspace per backend: the risk-set cache is backend-keyed,
+        // so reuse inside the timing loop measures the hot path, not a
+        // re-preparation per call.
+        let mut ws = Workspace::default();
+        let name = format!("batched_{}_t{threads}_n{n}_p{p}", backend.name());
+        let kernel = match backend {
+            KernelBackend::Scalar => "all_coord_d1_d2_scalar",
+            KernelBackend::Simd => "all_coord_d1_d2_simd",
+        };
+        b.bench(&name, || {
+            black_box(all_coord_d1_d2_opts(&pr, &st, &mut ws, threads, backend, block_rows));
+        });
+        push_entry(entries, b, name.clone(), kernel, n, p, false, 1, threads, seed);
+        let median = entries.last().expect("just pushed").median_ns;
+        medians.push((backend, name, median));
+    }
+    let scalar = medians.iter().find(|(bk, _, _)| *bk == KernelBackend::Scalar)?;
+    let simd = medians.iter().find(|(bk, _, _)| *bk == KernelBackend::Simd)?;
+    // Attribute the ratio to the SIMD row so BENCH readers see it inline.
+    if let Some(e) = entries.iter_mut().find(|e| e.name == simd.1) {
+        e.speedup_vs_seq = Some(scalar.2 / simd.2);
+    }
+    Some(SimdGateInfo {
+        tracked: simd.1.clone(),
+        reference: scalar.1.clone(),
+        threads,
+        speedup: scalar.2 / simd.2,
+    })
+}
+
 /// Everything the path gate tracks for one run.
 struct PathGateInfo {
     tracked: String,
@@ -365,12 +437,26 @@ fn bench_path(entries: &mut Vec<Entry>, n: usize, p: usize, k: usize, seed: u64)
     }
 }
 
-/// `fastsurvival bench [--quick] [--full] [--out F] [--check BASELINE]`.
+/// `fastsurvival bench [--quick] [--full] [--out F] [--check BASELINE]
+/// [--backend scalar|simd|auto] [--threads N]`.
 pub fn run(args: &Args) -> Result<()> {
     let quick = args.flag("quick")
         || std::env::var("FASTSURVIVAL_BENCH_QUICK").as_deref() == Ok("1");
     let full = args.flag("full");
     let out_path = args.str_or("out", "BENCH_optim.json");
+    // The backend sweep: both backends by default (the simd gate needs
+    // the scalar reference); `--backend scalar` profiles scalar alone
+    // and skips the ratio gate.
+    let sweep_backends: Vec<KernelBackend> = match args.get("backend") {
+        None => vec![KernelBackend::Scalar, KernelBackend::Simd],
+        Some(name) => match Backend::from_name(name)? {
+            Backend::Scalar => vec![KernelBackend::Scalar],
+            Backend::Simd | Backend::Auto => {
+                vec![KernelBackend::Scalar, KernelBackend::Simd]
+            }
+        },
+    };
+    let sweep_threads = args.get_or("threads", 4usize).max(1);
     let sizes = Sizes::pick(quick);
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
     let mut entries: Vec<Entry> = Vec::new();
@@ -395,6 +481,18 @@ pub fn run(args: &Args) -> Result<()> {
     let gate_speedup = entries[gate_idx].speedup_vs_seq.expect("blocked entry has speedup");
     let gate_tracked = entries[gate_idx].name.clone();
     let gate_reference = entries[ref_idx].name.clone();
+
+    // --- Backend sweep on the tracked workload: scalar vs SIMD lanes
+    // at the same worker count (the simd_gate ratio). ------------------
+    let simd_gate = bench_backend_sweep(
+        &mut entries,
+        &mut b,
+        sizes.n_main,
+        sizes.p_main,
+        42,
+        sweep_threads,
+        &sweep_backends,
+    );
 
     // --- Tied times. --------------------------------------------------
     bench_batched_pair(&mut entries, &mut b, sizes.n_ties, sizes.p_ties, 43, true, "_ties");
@@ -529,6 +627,17 @@ pub fn run(args: &Args) -> Result<()> {
         path_gate.endpoint_max_gap,
         if path_gate.passed() { "OK" } else { "BELOW TARGET" }
     );
+    match &simd_gate {
+        Some(sg) => println!(
+            "simd gate: {} vs {}: speedup {:.2}x (required {:.1}x) — {}",
+            sg.tracked,
+            sg.reference,
+            sg.speedup,
+            REQUIRED_SIMD_SPEEDUP,
+            if sg.passed() { "OK" } else { "BELOW TARGET" }
+        ),
+        None => println!("simd gate: skipped (--backend restricted the sweep to one backend)"),
+    }
 
     let doc = render_json(
         quick,
@@ -538,13 +647,20 @@ pub fn run(args: &Args) -> Result<()> {
         &gate_reference,
         gate_speedup,
         &path_gate,
+        simd_gate.as_ref(),
     );
     std::fs::write(&out_path, &doc)
         .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
     println!("wrote {out_path} ({} entries)", entries.len());
 
     if let Some(baseline) = args.get("check") {
-        check_against_baseline(&entries, gate_speedup, &path_gate, Path::new(baseline))?;
+        check_against_baseline(
+            &entries,
+            gate_speedup,
+            &path_gate,
+            simd_gate.as_ref(),
+            Path::new(baseline),
+        )?;
     }
     Ok(())
 }
@@ -558,6 +674,7 @@ fn render_json(
     gate_reference: &str,
     gate_speedup: f64,
     path_gate: &PathGateInfo,
+    simd_gate: Option<&SimdGateInfo>,
 ) -> String {
     let mut out = String::with_capacity(4096);
     out.push_str("{\n");
@@ -600,6 +717,19 @@ fn render_json(
     out.push_str(",\n    \"endpoint_tol\": ");
     json::write_f64(&mut out, PATH_ENDPOINT_TOL);
     out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", path_gate.passed()));
+    if let Some(sg) = simd_gate {
+        out.push_str("  \"simd_gate\": {\n");
+        out.push_str("    \"tracked\": ");
+        json::write_str(&mut out, &sg.tracked);
+        out.push_str(",\n    \"reference\": ");
+        json::write_str(&mut out, &sg.reference);
+        out.push_str(&format!(",\n    \"threads\": {}", sg.threads));
+        out.push_str(",\n    \"speedup_simd_vs_scalar\": ");
+        json::write_f64(&mut out, sg.speedup);
+        out.push_str(",\n    \"required_speedup\": ");
+        json::write_f64(&mut out, REQUIRED_SIMD_SPEEDUP);
+        out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", sg.passed()));
+    }
     out.push_str("  \"entries\": [\n");
     for (i, e) in entries.iter().enumerate() {
         out.push_str("    {\"name\": ");
@@ -642,6 +772,7 @@ fn check_against_baseline(
     entries: &[Entry],
     gate_speedup: f64,
     path_gate: &PathGateInfo,
+    simd_gate: Option<&SimdGateInfo>,
     baseline_path: &Path,
 ) -> Result<()> {
     let text = match std::fs::read_to_string(baseline_path) {
@@ -725,6 +856,45 @@ fn check_against_baseline(
             println!("perf gate: path gate advisory (enforce=false):\n  {}", problems.join("\n  "));
         }
     }
+    // The SIMD-vs-scalar gate: same-machine same-run ratio, armed by the
+    // baseline's `simd_gate.enforce` like the path gate above.
+    if let Some(sg_base) = doc.get("simd_gate") {
+        let enforce =
+            sg_base.get("enforce").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false);
+        let required = sg_base
+            .get("required_speedup")
+            .map(|v| v.as_f64().unwrap_or(REQUIRED_SIMD_SPEEDUP))
+            .unwrap_or(REQUIRED_SIMD_SPEEDUP);
+        match simd_gate {
+            None => {
+                let msg = "baseline enforces the simd gate but this run skipped the \
+                           backend sweep (drop --backend to run both backends)"
+                    .to_string();
+                if enforce {
+                    return Err(FastSurvivalError::PerfRegression(msg));
+                }
+                println!("perf gate: simd gate advisory (enforce=false): {msg}");
+            }
+            Some(sg) => {
+                if sg.speedup.is_nan() || sg.speedup < required {
+                    let msg = format!(
+                        "SIMD lane kernels are only {:.2}x the scalar backend on the \
+                         tracked workload (required {required:.1}x)",
+                        sg.speedup
+                    );
+                    if enforce {
+                        return Err(FastSurvivalError::PerfRegression(msg));
+                    }
+                    println!("perf gate: simd gate advisory (enforce=false): {msg}");
+                } else {
+                    println!(
+                        "perf gate: simd-vs-scalar {:.2}x (required {required:.1}x) — ok",
+                        sg.speedup
+                    );
+                }
+            }
+        }
+    }
     let baseline_entries = match doc.get("entries") {
         Some(arr) => arr.as_array()?.to_vec(),
         None => Vec::new(),
@@ -789,6 +959,15 @@ mod tests {
         }
     }
 
+    fn sg(speedup: f64) -> SimdGateInfo {
+        SimdGateInfo {
+            tracked: "batched_simd_t4_n2000_p24".into(),
+            reference: "batched_scalar_t4_n2000_p24".into(),
+            threads: 4,
+            speedup,
+        }
+    }
+
     #[test]
     fn path_gate_enforced_only_when_baseline_opts_in() {
         let dir = std::env::temp_dir().join("fs_perf_path_gate_test");
@@ -802,15 +981,19 @@ mod tests {
         )
         .unwrap();
         // Healthy run passes (bootstrap does not disarm the ratio gate).
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), &armed).expect("healthy path gate");
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &armed)
+            .expect("healthy path gate");
         // Too-slow warm path fails.
-        let err = check_against_baseline(&[], 2.0, &pg(1.5, 1e-12), &armed).unwrap_err();
+        let err = check_against_baseline(&[], 2.0, &pg(1.5, 1e-12), Some(&sg(2.0)), &armed)
+            .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // Endpoint drift fails.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-3), &armed).unwrap_err();
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-3), Some(&sg(2.0)), &armed)
+            .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // NaN drift (corrupt losses) fails rather than passing silently.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, f64::NAN), &armed).unwrap_err();
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, f64::NAN), Some(&sg(2.0)), &armed)
+            .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // Without enforce, the same shortfall is advisory.
         let advisory = dir.join("advisory.json");
@@ -819,12 +1002,56 @@ mod tests {
             "{\"bootstrap\": true, \"entries\": [], \"path_gate\": {\"enforce\": false}}",
         )
         .unwrap();
-        check_against_baseline(&[], 2.0, &pg(1.5, 1e-3), &advisory)
+        check_against_baseline(&[], 2.0, &pg(1.5, 1e-3), Some(&sg(2.0)), &advisory)
             .expect("advisory path gate must not fail");
         // A baseline with no path_gate object skips the check entirely.
         let silent = dir.join("silent.json");
         std::fs::write(&silent, "{\"bootstrap\": true, \"entries\": []}").unwrap();
-        check_against_baseline(&[], 2.0, &pg(0.5, 1.0), &silent).expect("no path gate");
+        check_against_baseline(&[], 2.0, &pg(0.5, 1.0), Some(&sg(2.0)), &silent)
+            .expect("no path gate");
+    }
+
+    #[test]
+    fn simd_gate_enforced_only_when_baseline_opts_in() {
+        let dir = std::env::temp_dir().join("fs_perf_simd_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let armed = dir.join("armed.json");
+        std::fs::write(
+            &armed,
+            "{\"bootstrap\": true, \"entries\": [], \
+              \"simd_gate\": {\"enforce\": true, \"required_speedup\": 1.3}}",
+        )
+        .unwrap();
+        // Healthy SIMD speedup passes.
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.5)), &armed)
+            .expect("healthy simd gate");
+        // Too-slow SIMD kernels fail.
+        let err =
+            check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &armed).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
+        // NaN ratio (degenerate timings) fails rather than passing silently.
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(f64::NAN)), &armed)
+            .unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
+        // A run that skipped the sweep (--backend restricted it) fails an armed gate.
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &armed).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
+        // Without enforce, the same shortfall is advisory.
+        let advisory = dir.join("advisory.json");
+        std::fs::write(
+            &advisory,
+            "{\"bootstrap\": true, \"entries\": [], \"simd_gate\": {\"enforce\": false}}",
+        )
+        .unwrap();
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &advisory)
+            .expect("advisory simd gate must not fail");
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &advisory)
+            .expect("advisory simd gate tolerates a skipped sweep");
+        // A baseline with no simd_gate object skips the check entirely.
+        let silent = dir.join("silent.json");
+        std::fs::write(&silent, "{\"bootstrap\": true, \"entries\": []}").unwrap();
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(0.2)), &silent)
+            .expect("no simd gate");
     }
 
     #[test]
@@ -847,7 +1074,16 @@ mod tests {
             speedup_vs_seq: Some(2.5),
             gate: true,
         }];
-        let doc = render_json(true, false, &entries, "tracked", "ref", 2.5, &pg(6.5, 2e-12));
+        let doc = render_json(
+            true,
+            false,
+            &entries,
+            "tracked",
+            "ref",
+            2.5,
+            &pg(6.5, 2e-12),
+            Some(&sg(1.8)),
+        );
         let parsed = json::parse(&doc).expect("self-emitted JSON must parse");
         assert_eq!(parsed.require("schema_version").unwrap().as_usize().unwrap(), 1);
         let gate = parsed.require("gate").unwrap();
@@ -860,6 +1096,13 @@ mod tests {
         );
         assert_eq!(pgate.require("n_lambdas").unwrap().as_usize().unwrap(), 50);
         assert!(pgate.require("passed").unwrap().as_bool().unwrap());
+        let sgate = parsed.require("simd_gate").unwrap();
+        assert!(
+            (sgate.require("speedup_simd_vs_scalar").unwrap().as_f64().unwrap() - 1.8).abs()
+                < 1e-12
+        );
+        assert_eq!(sgate.require("threads").unwrap().as_usize().unwrap(), 4);
+        assert!(sgate.require("passed").unwrap().as_bool().unwrap());
         let arr = parsed.require("entries").unwrap().as_array().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].require("n").unwrap().as_usize().unwrap(), 100);
@@ -873,18 +1116,19 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("armed_baseline.json");
         std::fs::write(&path, "{\"bootstrap\": false, \"entries\": []}").unwrap();
-        let err = check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), &path).unwrap_err();
+        let err = check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+            .unwrap_err();
         assert!(
             matches!(err, FastSurvivalError::PerfRegression(_)),
             "expected PerfRegression, got {err}"
         );
         // Marginal shortfalls stay within the noise floor and pass.
-        check_against_baseline(&[], 0.9, &pg(8.0, 1e-12), &path)
+        check_against_baseline(&[], 0.9, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
             .expect("within INVARIANT_MIN_SPEEDUP slack");
         // A bootstrap baseline downgrades even a clear shortfall to advisory.
         let boot = dir.join("bootstrap_baseline.json");
         std::fs::write(&boot, "{\"bootstrap\": true, \"entries\": []}").unwrap();
-        check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), &boot)
+        check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &boot)
             .expect("bootstrap invariant is advisory");
     }
 
@@ -892,9 +1136,10 @@ mod tests {
     fn gate_passes_without_baseline_file() {
         // Recording-only mode: no baseline means nothing to compare, even
         // the invariant (there is no armed gate to protect yet).
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Path::new("/nonexistent/baseline.json"))
+        let missing = Path::new("/nonexistent/baseline.json");
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), missing)
             .expect("missing baseline must degrade to recording-only");
-        check_against_baseline(&[], 0.5, &pg(0.5, 1.0), Path::new("/nonexistent/baseline.json"))
+        check_against_baseline(&[], 0.5, &pg(0.5, 1.0), Some(&sg(0.8)), missing)
             .expect("missing baseline skips the invariant too");
     }
 
@@ -928,10 +1173,12 @@ mod tests {
             gate: true,
         };
         // Within tolerance: 20% slower passes.
-        check_against_baseline(&[mk(1200.0)], 2.0, &pg(8.0, 1e-12), &path)
+        check_against_baseline(&[mk(1200.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
             .expect("within tolerance");
         // Past tolerance: 50% slower fails.
-        let err = check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), &path).unwrap_err();
+        let err =
+            check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+                .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)));
         // A bootstrap baseline downgrades the same failure to advisory.
         std::fs::write(
@@ -940,7 +1187,7 @@ mod tests {
               {\"name\": \"k\", \"median_ns\": 1000.0, \"gate\": true}]}",
         )
         .unwrap();
-        check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), &path)
+        check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
             .expect("bootstrap is advisory");
     }
 }

@@ -7,9 +7,11 @@
 //! All events within a tie group share one risk set, so each group
 //! contributes its moment expression once, scaled by its event count.
 
+use super::kernels;
 use super::problem::{CoxProblem, TieGroup};
 use super::state::CoxState;
 use crate::linalg::Matrix;
+use crate::util::compute::{auto_block_rows, default_backend, KernelBackend};
 use crate::util::parallel::{num_threads, par_map_indices, par_map_workers};
 
 /// First/second/third partial derivatives at one coordinate.
@@ -57,6 +59,10 @@ pub struct Workspace {
     suffix_b: Vec<f64>,
     /// State version the caches above were built for.
     cached: Option<u64>,
+    /// Kernel backend the caches above were built with (the lane-summed
+    /// prefix differs ≤1e-12 from the scalar one under heavy ties, so a
+    /// backend switch at the same η must rebuild).
+    cached_backend: Option<KernelBackend>,
     /// Last version seen by a `_ws` entry point; a second evaluation at
     /// the same η promotes it to a full cache build.
     last_seen: Option<u64>,
@@ -67,17 +73,26 @@ impl Workspace {
         Self::default()
     }
 
-    /// True when the cached weights were built for exactly this state.
+    /// True when the cached weights were built for exactly this state
+    /// and kernel backend.
     #[inline]
-    fn is_fresh(&self, state: &CoxState) -> bool {
-        self.cached == Some(state.version())
+    fn is_fresh_b(&self, state: &CoxState, backend: KernelBackend) -> bool {
+        self.cached == Some(state.version()) && self.cached_backend == Some(backend)
     }
 
     /// (Re)build the per-group weights for `state` if stale: one O(n)
     /// prefix pass plus one O(#groups) suffix pass on a miss, O(1) on a
-    /// hit.
+    /// hit. Uses the crate default backend; see [`Workspace::prepare_b`].
     pub fn prepare(&mut self, problem: &CoxProblem, state: &CoxState) {
-        if self.is_fresh(state) {
+        self.prepare_b(problem, state, default_backend())
+    }
+
+    /// [`Workspace::prepare`] with an explicit kernel backend: the SIMD
+    /// arm lane-sums the within-group weight partials for tie groups of
+    /// ≥8 samples (reassociation ≤1e-12); singleton groups — all of them
+    /// on continuous data — take the scalar path bit for bit.
+    pub fn prepare_b(&mut self, problem: &CoxProblem, state: &CoxState, backend: KernelBackend) {
+        if self.is_fresh_b(state, backend) {
             return;
         }
         let ngroups = problem.groups.len();
@@ -87,8 +102,12 @@ impl Workspace {
         self.group_weight.reserve(ngroups);
         let mut s0 = 0.0_f64;
         for g in &problem.groups {
-            for k in g.start..g.end {
-                s0 += state.w[k];
+            if backend == KernelBackend::Simd && g.end - g.start >= kernels::LANE_MIN {
+                s0 += kernels::sum1(&state.w[g.start..g.end]);
+            } else {
+                for k in g.start..g.end {
+                    s0 += state.w[k];
+                }
             }
             let inv = 1.0 / s0;
             self.group_inv_s0.push(inv);
@@ -108,49 +127,66 @@ impl Workspace {
             self.suffix_b[gi] = sb;
         }
         self.cached = Some(state.version());
+        self.cached_backend = Some(backend);
         self.last_seen = Some(state.version());
+    }
+
+    /// The cached per-group weights as slices `(1/S0, ne/S0)` — handed to
+    /// the batched lane kernel, which runs outside `self` so column
+    /// blocks can fan out while the cache is shared immutably.
+    pub(crate) fn cache_parts(&self) -> (&[f64], &[f64]) {
+        (&self.group_inv_s0, &self.group_weight)
     }
 
     /// d1 at one coordinate from the cached suffix weights:
     /// `d1 = Σ_k w_k x_kl A(g(k)) − (Xᵀδ)_l` — a single fused multiply
     /// pass, no divisions, no per-group branching. Requires `prepare`.
-    fn coord_d1_from_cache(&self, problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
+    /// The SIMD backend runs the same reduction on four independent
+    /// accumulator chains (reassociated ≤1e-12 — this pass has no
+    /// per-group emissions to respect).
+    fn coord_d1_from_cache(
+        &self,
+        problem: &CoxProblem,
+        state: &CoxState,
+        l: usize,
+        backend: KernelBackend,
+    ) -> f64 {
         let col = problem.x.col(l);
-        let mut acc = 0.0_f64;
-        for ((&wk, &x), &g) in state.w.iter().zip(col).zip(problem.group_of.iter()) {
-            acc += wk * x * self.suffix_a[g];
+        match backend {
+            KernelBackend::Simd => {
+                kernels::weighted_suffix_dot(&state.w, col, &problem.group_of, &self.suffix_a)
+                    - problem.xt_delta[l]
+            }
+            KernelBackend::Scalar => {
+                let mut acc = 0.0_f64;
+                for ((&wk, &x), &g) in state.w.iter().zip(col).zip(problem.group_of.iter()) {
+                    acc += wk * x * self.suffix_a[g];
+                }
+                acc - problem.xt_delta[l]
+            }
         }
-        acc - problem.xt_delta[l]
     }
 
     /// (d1, d2) at one coordinate with the cached 1/S0 weights — the
-    /// per-column kernel of the blocked batched pass. Requires `prepare`.
+    /// per-column kernel of the blocked batched pass (both backends: the
+    /// running prefix emits at every event group, so there is nothing to
+    /// reassociate; the SIMD batched pass instead interleaves columns in
+    /// [`kernels::batched_d1_d2_block`], bitwise-equal per column to
+    /// this). Requires `prepare`.
     fn coord_d1_d2_from_cache(
         &self,
         problem: &CoxProblem,
         state: &CoxState,
         l: usize,
     ) -> (f64, f64) {
-        let col = problem.x.col(l);
-        let w = &state.w;
-        let (mut s1, mut s2) = (0.0_f64, 0.0_f64);
-        let (mut a1, mut a2) = (0.0_f64, 0.0_f64);
-        for (gi, g) in problem.groups.iter().enumerate() {
-            for k in g.start..g.end {
-                let wx = w[k] * col[k];
-                s1 += wx;
-                s2 += wx * col[k];
-            }
-            let gw = self.group_weight[gi];
-            if gw > 0.0 {
-                // gw·s1 = ne·m1 and gw·s2 − (gw·s1)·m1 = ne·(m2 − m1²).
-                let m1 = s1 * self.group_inv_s0[gi];
-                let t1 = gw * s1;
-                a1 += t1;
-                a2 += gw * s2 - t1 * m1;
-            }
-        }
-        (a1 - problem.xt_delta[l], a2)
+        kernels::cached_col_d1_d2(
+            &problem.groups,
+            &state.w,
+            problem.x.col(l),
+            problem.xt_delta[l],
+            &self.group_inv_s0,
+            &self.group_weight,
+        )
     }
 }
 
@@ -166,13 +202,34 @@ pub fn coord_d1(problem: &CoxProblem, state: &CoxState, l: usize) -> f64 {
 /// calls this with the identical accumulation order, so chunked and
 /// in-memory derivative passes are bit-for-bit the same computation.
 pub fn coord_d1_col(groups: &[TieGroup], w: &[f64], col: &[f64], xt_delta_l: f64) -> f64 {
+    coord_d1_col_b(default_backend(), groups, w, col, xt_delta_l)
+}
+
+/// [`coord_d1_col`] with an explicit kernel backend. The SIMD arm
+/// lane-sums within tie groups of ≥8 samples only (the running prefix
+/// emits at every event group, so cross-group unrolling would change
+/// results); on continuous data both backends are bitwise equal, under
+/// heavy ties they agree to ≤1e-12.
+pub fn coord_d1_col_b(
+    backend: KernelBackend,
+    groups: &[TieGroup],
+    w: &[f64],
+    col: &[f64],
+    xt_delta_l: f64,
+) -> f64 {
     let (mut s0, mut s1) = (0.0_f64, 0.0_f64);
     let mut d1 = 0.0_f64;
     for g in groups {
-        for k in g.start..g.end {
-            let wk = w[k];
-            s0 += wk;
-            s1 += wk * col[k];
+        if backend == KernelBackend::Simd && g.end - g.start >= kernels::LANE_MIN {
+            let (gs0, gs1) = kernels::sum2(&w[g.start..g.end], &col[g.start..g.end]);
+            s0 += gs0;
+            s1 += gs1;
+        } else {
+            for k in g.start..g.end {
+                let wk = w[k];
+                s0 += wk;
+                s1 += wk * col[k];
+            }
         }
         if g.n_events > 0 {
             d1 += g.n_events as f64 * (s1 / s0);
@@ -193,15 +250,34 @@ pub fn coord_d1_d2_col(
     col: &[f64],
     xt_delta_l: f64,
 ) -> (f64, f64) {
+    coord_d1_d2_col_b(default_backend(), groups, w, col, xt_delta_l)
+}
+
+/// [`coord_d1_d2_col`] with an explicit kernel backend; same tolerance
+/// contract as [`coord_d1_col_b`].
+pub fn coord_d1_d2_col_b(
+    backend: KernelBackend,
+    groups: &[TieGroup],
+    w: &[f64],
+    col: &[f64],
+    xt_delta_l: f64,
+) -> (f64, f64) {
     let (mut s0, mut s1, mut s2) = (0.0_f64, 0.0_f64, 0.0_f64);
     let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
     for g in groups {
-        for k in g.start..g.end {
-            let wk = w[k];
-            let x = col[k];
-            s0 += wk;
-            s1 += wk * x;
-            s2 += wk * x * x;
+        if backend == KernelBackend::Simd && g.end - g.start >= kernels::LANE_MIN {
+            let (gs0, gs1, gs2) = kernels::sum3(&w[g.start..g.end], &col[g.start..g.end]);
+            s0 += gs0;
+            s1 += gs1;
+            s2 += gs2;
+        } else {
+            for k in g.start..g.end {
+                let wk = w[k];
+                let x = col[k];
+                s0 += wk;
+                s1 += wk * x;
+                s2 += wk * x * x;
+            }
         }
         if g.n_events > 0 {
             let ne = g.n_events as f64;
@@ -216,19 +292,39 @@ pub fn coord_d1_d2_col(
 
 /// Full first/second/third derivatives (Eqs. 7–9) in one O(n) pass.
 pub fn coord_derivs(problem: &CoxProblem, state: &CoxState, l: usize) -> CoordDerivs {
+    coord_derivs_b(problem, state, l, default_backend())
+}
+
+/// [`coord_derivs`] with an explicit kernel backend; same tolerance
+/// contract as [`coord_d1_col_b`].
+pub fn coord_derivs_b(
+    problem: &CoxProblem,
+    state: &CoxState,
+    l: usize,
+    backend: KernelBackend,
+) -> CoordDerivs {
     let col = problem.x.col(l);
     let w = &state.w;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
     let mut out = CoordDerivs::default();
     for g in &problem.groups {
-        for k in g.start..g.end {
-            let wk = w[k];
-            let x = col[k];
-            let wx = wk * x;
-            s0 += wk;
-            s1 += wx;
-            s2 += wx * x;
-            s3 += wx * x * x;
+        if backend == KernelBackend::Simd && g.end - g.start >= kernels::LANE_MIN {
+            let (gs0, gs1, gs2, gs3) =
+                kernels::sum4(&w[g.start..g.end], &col[g.start..g.end]);
+            s0 += gs0;
+            s1 += gs1;
+            s2 += gs2;
+            s3 += gs3;
+        } else {
+            for k in g.start..g.end {
+                let wk = w[k];
+                let x = col[k];
+                let wx = wk * x;
+                s0 += wk;
+                s1 += wx;
+                s2 += wx * x;
+                s3 += wx * x * x;
+            }
         }
         if g.n_events > 0 {
             let ne = g.n_events as f64;
@@ -253,16 +349,28 @@ pub fn coord_derivs(problem: &CoxProblem, state: &CoxState, l: usize) -> CoordDe
 /// the sweet spot is ℓ1-sparse CD sweeps and screening loops, where most
 /// steps leave η untouched.
 pub fn coord_d1_ws(problem: &CoxProblem, state: &CoxState, ws: &mut Workspace, l: usize) -> f64 {
+    coord_d1_ws_b(problem, state, ws, l, default_backend())
+}
+
+/// [`coord_d1_ws`] with an explicit kernel backend threading through both
+/// the cache build and the per-coordinate passes.
+pub fn coord_d1_ws_b(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    backend: KernelBackend,
+) -> f64 {
     let v = state.version();
-    if ws.cached == Some(v) {
-        return ws.coord_d1_from_cache(problem, state, l);
+    if ws.is_fresh_b(state, backend) {
+        return ws.coord_d1_from_cache(problem, state, l, backend);
     }
     if ws.last_seen == Some(v) {
-        ws.prepare(problem, state);
-        return ws.coord_d1_from_cache(problem, state, l);
+        ws.prepare_b(problem, state, backend);
+        return ws.coord_d1_from_cache(problem, state, l, backend);
     }
     ws.last_seen = Some(v);
-    coord_d1(problem, state, l)
+    coord_d1_col_b(backend, &problem.groups, &state.w, problem.x.col(l), problem.xt_delta[l])
 }
 
 /// (d1, d2) through a shared [`Workspace`]; same caching discipline as
@@ -273,16 +381,27 @@ pub fn coord_d1_d2_ws(
     ws: &mut Workspace,
     l: usize,
 ) -> (f64, f64) {
+    coord_d1_d2_ws_b(problem, state, ws, l, default_backend())
+}
+
+/// [`coord_d1_d2_ws`] with an explicit kernel backend.
+pub fn coord_d1_d2_ws_b(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    backend: KernelBackend,
+) -> (f64, f64) {
     let v = state.version();
-    if ws.cached == Some(v) {
+    if ws.is_fresh_b(state, backend) {
         return ws.coord_d1_d2_from_cache(problem, state, l);
     }
     if ws.last_seen == Some(v) {
-        ws.prepare(problem, state);
+        ws.prepare_b(problem, state, backend);
         return ws.coord_d1_d2_from_cache(problem, state, l);
     }
     ws.last_seen = Some(v);
-    coord_d1_d2(problem, state, l)
+    coord_d1_d2_col_b(backend, &problem.groups, &state.w, problem.x.col(l), problem.xt_delta[l])
 }
 
 /// Batched (d1\[p\], d2\[p\]) over all coordinates — the screening hot
@@ -308,44 +427,132 @@ pub fn all_coord_d1_d2(
 }
 
 /// [`all_coord_d1_d2`] with an explicit worker count (benchmarks and
-/// thread-count parity tests).
+/// thread-count parity tests). Crate default backend, autotuned row
+/// blocking.
 pub fn all_coord_d1_d2_with_threads(
     problem: &CoxProblem,
     state: &CoxState,
     ws: &mut Workspace,
     threads: usize,
 ) -> (Vec<f64>, Vec<f64>) {
-    ws.prepare(problem, state);
+    all_coord_d1_d2_opts(
+        problem,
+        state,
+        ws,
+        threads,
+        default_backend(),
+        auto_block_rows(problem.n()),
+    )
+}
+
+/// The fully explicit batched pass: worker count, kernel backend, and
+/// row-tile size all chosen by the caller (the resolved `Compute`).
+///
+/// Scalar backend: one cached per-column pass per coordinate, columns
+/// fanned across [`COL_BLOCK`]-sized blocks. SIMD backend: the
+/// multi-column interleaved lane kernel ([`kernels::batched_d1_d2_block`])
+/// over row tiles of `block_rows` samples cut at tie-group boundaries —
+/// per-column results bitwise equal to the scalar backend, wall-clock
+/// substantially better because the shared weight column stays cache-hot
+/// and each column owns an independent accumulator chain. Blocking and
+/// kernel choice depend on shape and explicit options only — never the
+/// thread count — so every `(backend, block_rows)` pair is bitwise
+/// thread-invariant.
+pub fn all_coord_d1_d2_opts(
+    problem: &CoxProblem,
+    state: &CoxState,
+    ws: &mut Workspace,
+    threads: usize,
+    backend: KernelBackend,
+    block_rows: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    ws.prepare_b(problem, state, backend);
     let p = problem.p();
     let ws_ref: &Workspace = ws;
-    if threads <= 1 || p < 2 * COL_BLOCK {
-        let mut d1 = vec![0.0; p];
-        let mut d2 = vec![0.0; p];
-        for l in 0..p {
-            let (a, b) = ws_ref.coord_d1_d2_from_cache(problem, state, l);
-            d1[l] = a;
-            d2[l] = b;
+    match backend {
+        KernelBackend::Scalar => {
+            if threads <= 1 || p < 2 * COL_BLOCK {
+                let mut d1 = vec![0.0; p];
+                let mut d2 = vec![0.0; p];
+                for l in 0..p {
+                    let (a, b) = ws_ref.coord_d1_d2_from_cache(problem, state, l);
+                    d1[l] = a;
+                    d2[l] = b;
+                }
+                return (d1, d2);
+            }
+            let nblocks = (p + COL_BLOCK - 1) / COL_BLOCK;
+            let blocks: Vec<usize> = (0..nblocks).collect();
+            let per_block = par_map_workers(&blocks, threads, |&b| {
+                let lo = b * COL_BLOCK;
+                let hi = (lo + COL_BLOCK).min(p);
+                (lo..hi)
+                    .map(|l| ws_ref.coord_d1_d2_from_cache(problem, state, l))
+                    .collect::<Vec<(f64, f64)>>()
+            });
+            let mut d1 = vec![0.0; p];
+            let mut d2 = vec![0.0; p];
+            for (b, vals) in per_block.into_iter().enumerate() {
+                for (j, (a, bb)) in vals.into_iter().enumerate() {
+                    d1[b * COL_BLOCK + j] = a;
+                    d2[b * COL_BLOCK + j] = bb;
+                }
+            }
+            (d1, d2)
         }
-        return (d1, d2);
-    }
-    let nblocks = (p + COL_BLOCK - 1) / COL_BLOCK;
-    let blocks: Vec<usize> = (0..nblocks).collect();
-    let per_block = par_map_workers(&blocks, threads, |&b| {
-        let lo = b * COL_BLOCK;
-        let hi = (lo + COL_BLOCK).min(p);
-        (lo..hi)
-            .map(|l| ws_ref.coord_d1_d2_from_cache(problem, state, l))
-            .collect::<Vec<(f64, f64)>>()
-    });
-    let mut d1 = vec![0.0; p];
-    let mut d2 = vec![0.0; p];
-    for (b, vals) in per_block.into_iter().enumerate() {
-        for (j, (a, bb)) in vals.into_iter().enumerate() {
-            d1[b * COL_BLOCK + j] = a;
-            d2[b * COL_BLOCK + j] = bb;
+        KernelBackend::Simd => {
+            let (inv_s0, gweight) = ws_ref.cache_parts();
+            let tile_cuts = kernels::row_tiles(&problem.groups, block_rows);
+            if threads <= 1 || p < 2 * COL_BLOCK {
+                let mut d1 = vec![0.0; p];
+                let mut d2 = vec![0.0; p];
+                kernels::batched_d1_d2_block(
+                    &problem.groups,
+                    &state.w,
+                    &problem.x,
+                    &problem.xt_delta,
+                    inv_s0,
+                    gweight,
+                    &tile_cuts,
+                    0,
+                    p,
+                    &mut d1,
+                    &mut d2,
+                );
+                return (d1, d2);
+            }
+            let nblocks = (p + COL_BLOCK - 1) / COL_BLOCK;
+            let blocks: Vec<usize> = (0..nblocks).collect();
+            let per_block = par_map_workers(&blocks, threads, |&b| {
+                let lo = b * COL_BLOCK;
+                let hi = (lo + COL_BLOCK).min(p);
+                let mut bd1 = vec![0.0; hi - lo];
+                let mut bd2 = vec![0.0; hi - lo];
+                kernels::batched_d1_d2_block(
+                    &problem.groups,
+                    &state.w,
+                    &problem.x,
+                    &problem.xt_delta,
+                    inv_s0,
+                    gweight,
+                    &tile_cuts,
+                    lo,
+                    hi,
+                    &mut bd1,
+                    &mut bd2,
+                );
+                (bd1, bd2)
+            });
+            let mut d1 = vec![0.0; p];
+            let mut d2 = vec![0.0; p];
+            for (b, (bd1, bd2)) in per_block.into_iter().enumerate() {
+                let lo = b * COL_BLOCK;
+                d1[lo..lo + bd1.len()].copy_from_slice(&bd1);
+                d2[lo..lo + bd2.len()].copy_from_slice(&bd2);
+            }
+            (d1, d2)
         }
     }
-    (d1, d2)
 }
 
 /// The seed's sequential batched pass (shared S0 prefix, one division
@@ -750,6 +957,121 @@ mod tests {
                 assert!((g2 - w2).abs() < 1e-10);
             }
             st.update_coord(&pr, round % pr.p(), 0.05);
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_columns_agree() {
+        use crate::util::compute::KernelBackend;
+        // Untied data: every tie group is a singleton, the SIMD arm takes
+        // the scalar path group by group — bitwise equality. Tied data:
+        // lane reassociation inside big groups — ≤1e-12 relative.
+        for &ties in &[false, true] {
+            let pr = random_problem(160, 7, 71, ties);
+            let mut rng = Rng::new(72);
+            let beta: Vec<f64> = (0..7).map(|_| rng.normal() * 0.3).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            for l in 0..pr.p() {
+                let col = pr.x.col(l);
+                let xd = pr.xt_delta[l];
+                let ds = coord_d1_col_b(KernelBackend::Scalar, &pr.groups, &st.w, col, xd);
+                let dv = coord_d1_col_b(KernelBackend::Simd, &pr.groups, &st.w, col, xd);
+                let (s1, s2) = coord_d1_d2_col_b(KernelBackend::Scalar, &pr.groups, &st.w, col, xd);
+                let (v1, v2) = coord_d1_d2_col_b(KernelBackend::Simd, &pr.groups, &st.w, col, xd);
+                let cs = coord_derivs_b(&pr, &st, l, KernelBackend::Scalar);
+                let cv = coord_derivs_b(&pr, &st, l, KernelBackend::Simd);
+                if !ties {
+                    assert_eq!(ds.to_bits(), dv.to_bits(), "l={l} d1 not bitwise");
+                    assert_eq!(s1.to_bits(), v1.to_bits());
+                    assert_eq!(s2.to_bits(), v2.to_bits());
+                    assert_eq!(cs.d1.to_bits(), cv.d1.to_bits());
+                    assert_eq!(cs.d2.to_bits(), cv.d2.to_bits());
+                    assert_eq!(cs.d3.to_bits(), cv.d3.to_bits());
+                } else {
+                    let tol = |a: f64| 1e-12 * a.abs().max(1.0);
+                    assert!((ds - dv).abs() <= tol(ds), "l={l}: {ds} vs {dv}");
+                    assert!((s1 - v1).abs() <= tol(s1));
+                    assert!((s2 - v2).abs() <= tol(s2));
+                    assert!((cs.d1 - cv.d1).abs() <= tol(cs.d1));
+                    assert!((cs.d2 - cv.d2).abs() <= tol(cs.d2));
+                    assert!((cs.d3 - cv.d3).abs() <= tol(cs.d3));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_backends_bitwise_across_threads_and_blocks() {
+        use crate::util::compute::KernelBackend;
+        // Within a backend, results are bitwise invariant to thread count
+        // and row-tile size (blocking lands on group boundaries and the
+        // per-column op order never changes). Across backends, untied data
+        // is bitwise too (identical caches, identical per-column order);
+        // with ties the lane-summed cache differs, so ≤1e-12 relative.
+        for &ties in &[false, true] {
+            let pr = random_problem(300, 23, 83, ties);
+            let mut rng = Rng::new(84);
+            let beta: Vec<f64> = (0..23).map(|_| rng.normal() * 0.3).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            let mut ws = Workspace::default();
+            let (r1, r2) =
+                all_coord_d1_d2_opts(&pr, &st, &mut ws, 1, KernelBackend::Scalar, 64);
+            for &threads in &[1usize, 2, 4] {
+                for &block_rows in &[64usize, 100, 4096] {
+                    for &backend in &[KernelBackend::Scalar, KernelBackend::Simd] {
+                        let mut ws2 = Workspace::default();
+                        let (d1, d2) = all_coord_d1_d2_opts(
+                            &pr, &st, &mut ws2, threads, backend, block_rows,
+                        );
+                        let bitwise = !ties || backend == KernelBackend::Scalar;
+                        for l in 0..pr.p() {
+                            if bitwise {
+                                assert_eq!(
+                                    d1[l].to_bits(),
+                                    r1[l].to_bits(),
+                                    "ties={ties} threads={threads} block={block_rows} l={l}"
+                                );
+                                assert_eq!(d2[l].to_bits(), r2[l].to_bits());
+                            } else {
+                                let tol = |a: f64| 1e-12 * a.abs().max(1.0);
+                                assert!(
+                                    (d1[l] - r1[l]).abs() <= tol(r1[l]),
+                                    "threads={threads} block={block_rows} l={l}: {} vs {}",
+                                    d1[l],
+                                    r1[l]
+                                );
+                                assert!((d2[l] - r2[l]).abs() <= tol(r2[l]));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_backend_switch_rebuilds_cache() {
+        use crate::util::compute::KernelBackend;
+        // A cache built by one backend must not be served to the other at
+        // the same η: with ties the prefixes differ slightly, and both
+        // backends must answer exactly as a fresh workspace would.
+        let pr = random_problem(90, 5, 87, true);
+        let st = CoxState::from_beta(&pr, &[0.2, -0.1, 0.3, 0.0, 0.1]);
+        let mut ws = Workspace::default();
+        for &backend in
+            &[KernelBackend::Simd, KernelBackend::Scalar, KernelBackend::Simd]
+        {
+            ws.prepare_b(&pr, &st, backend);
+            for l in 0..pr.p() {
+                let want = {
+                    let mut fresh = Workspace::default();
+                    fresh.prepare_b(&pr, &st, backend);
+                    fresh.coord_d1_d2_from_cache(&pr, &st, l)
+                };
+                let got = ws.coord_d1_d2_from_cache(&pr, &st, l);
+                assert_eq!(got.0.to_bits(), want.0.to_bits(), "backend={backend:?} l={l}");
+                assert_eq!(got.1.to_bits(), want.1.to_bits());
+            }
         }
     }
 

@@ -1,0 +1,379 @@
+//! Portable SIMD kernels: hand-unrolled multi-accumulator lanes for the
+//! Cox derivative hot path, in std-only Rust.
+//!
+//! Design contract (shared with the scalar reference kernels in
+//! [`super::derivatives`]):
+//!
+//! * **Per-column accumulation order is never changed.** The batched
+//!   multi-column kernel interleaves [`LANES`] columns per row so the
+//!   shared weight column is loaded once per lane group and each column
+//!   owns an independent accumulator chain (instruction-level
+//!   parallelism the latency-bound scalar chain cannot reach) — but
+//!   within a column the operation sequence is exactly the scalar cached
+//!   kernel's, so batched results are **bitwise** equal across backends
+//!   and thread counts.
+//! * **Reductions reassociate only inside tie groups** of at least
+//!   [`LANE_MIN`] samples (fixed lane count, fixed tree fold). On
+//!   continuous (untied) data every group is a singleton, the scalar
+//!   path runs, and single-column results are bitwise equal too; with
+//!   heavy ties the reassociated sums agree to ≤1e-12 relative.
+//! * **Blocking depends on problem shape only** (row-tile cuts land on
+//!   tie-group boundaries, sized by `block_rows`), never on the thread
+//!   count, preserving the crate-wide bitwise thread-invariance
+//!   contract.
+
+use super::problem::TieGroup;
+use crate::linalg::Matrix;
+use crate::util::compute::LANES;
+
+/// Minimum slice length before a lane-unrolled reduction pays (and the
+/// only place a reassociated sum is allowed to replace the scalar one).
+pub(crate) const LANE_MIN: usize = 8;
+
+/// Fixed tree fold of the lane accumulators — one deterministic order,
+/// independent of data or thread count.
+#[inline]
+fn fold_lanes(acc: [f64; LANES]) -> f64 {
+    (acc[0] + acc[2]) + (acc[1] + acc[3])
+}
+
+/// Σ w over a slice with [`LANES`] independent accumulator chains.
+#[inline]
+pub(crate) fn sum1(w: &[f64]) -> f64 {
+    let n = w.len();
+    let mut acc = [0.0_f64; LANES];
+    let whole = n - n % LANES;
+    let mut k = 0;
+    while k < whole {
+        for (j, a) in acc.iter_mut().enumerate() {
+            *a += w[k + j];
+        }
+        k += LANES;
+    }
+    let mut s = fold_lanes(acc);
+    for &v in &w[whole..] {
+        s += v;
+    }
+    s
+}
+
+/// (Σ w, Σ w·x) over a slice pair, lane-unrolled.
+#[inline]
+pub(crate) fn sum2(w: &[f64], x: &[f64]) -> (f64, f64) {
+    let n = w.len();
+    debug_assert_eq!(n, x.len());
+    let mut a0 = [0.0_f64; LANES];
+    let mut a1 = [0.0_f64; LANES];
+    let whole = n - n % LANES;
+    let mut k = 0;
+    while k < whole {
+        for j in 0..LANES {
+            let wk = w[k + j];
+            a0[j] += wk;
+            a1[j] += wk * x[k + j];
+        }
+        k += LANES;
+    }
+    let mut s0 = fold_lanes(a0);
+    let mut s1 = fold_lanes(a1);
+    for k in whole..n {
+        let wk = w[k];
+        s0 += wk;
+        s1 += wk * x[k];
+    }
+    (s0, s1)
+}
+
+/// (Σ w, Σ w·x, Σ w·x²) over a slice pair, lane-unrolled.
+#[inline]
+pub(crate) fn sum3(w: &[f64], x: &[f64]) -> (f64, f64, f64) {
+    let n = w.len();
+    debug_assert_eq!(n, x.len());
+    let mut a0 = [0.0_f64; LANES];
+    let mut a1 = [0.0_f64; LANES];
+    let mut a2 = [0.0_f64; LANES];
+    let whole = n - n % LANES;
+    let mut k = 0;
+    while k < whole {
+        for j in 0..LANES {
+            let wk = w[k + j];
+            let xv = x[k + j];
+            let wx = wk * xv;
+            a0[j] += wk;
+            a1[j] += wx;
+            a2[j] += wx * xv;
+        }
+        k += LANES;
+    }
+    let mut s0 = fold_lanes(a0);
+    let mut s1 = fold_lanes(a1);
+    let mut s2 = fold_lanes(a2);
+    for k in whole..n {
+        let wk = w[k];
+        let xv = x[k];
+        s0 += wk;
+        s1 += wk * xv;
+        s2 += wk * xv * xv;
+    }
+    (s0, s1, s2)
+}
+
+/// (Σ w, Σ w·x, Σ w·x², Σ w·x³) over a slice pair, lane-unrolled.
+#[inline]
+pub(crate) fn sum4(w: &[f64], x: &[f64]) -> (f64, f64, f64, f64) {
+    let n = w.len();
+    debug_assert_eq!(n, x.len());
+    let mut a0 = [0.0_f64; LANES];
+    let mut a1 = [0.0_f64; LANES];
+    let mut a2 = [0.0_f64; LANES];
+    let mut a3 = [0.0_f64; LANES];
+    let whole = n - n % LANES;
+    let mut k = 0;
+    while k < whole {
+        for j in 0..LANES {
+            let wk = w[k + j];
+            let xv = x[k + j];
+            let wx = wk * xv;
+            a0[j] += wk;
+            a1[j] += wx;
+            a2[j] += wx * xv;
+            a3[j] += wx * xv * xv;
+        }
+        k += LANES;
+    }
+    let mut s0 = fold_lanes(a0);
+    let mut s1 = fold_lanes(a1);
+    let mut s2 = fold_lanes(a2);
+    let mut s3 = fold_lanes(a3);
+    for k in whole..n {
+        let wk = w[k];
+        let xv = x[k];
+        let wx = wk * xv;
+        s0 += wk;
+        s1 += wx;
+        s2 += wx * xv;
+        s3 += wx * xv * xv;
+    }
+    (s0, s1, s2, s3)
+}
+
+/// Lane-unrolled `Σ_k w_k·x_k·suffix_a[group_of[k]]` — the cached d1
+/// pass of the ℓ1-sparse CD hot loop. Reassociates across rows (this
+/// reduction has no per-group emission to respect), so callers compare
+/// it to the scalar pass at ≤1e-12, not bitwise.
+pub(crate) fn weighted_suffix_dot(
+    w: &[f64],
+    x: &[f64],
+    group_of: &[usize],
+    suffix_a: &[f64],
+) -> f64 {
+    let n = w.len();
+    let mut acc = [0.0_f64; LANES];
+    let whole = n - n % LANES;
+    let mut k = 0;
+    while k < whole {
+        for (j, a) in acc.iter_mut().enumerate() {
+            let i = k + j;
+            *a += w[i] * x[i] * suffix_a[group_of[i]];
+        }
+        k += LANES;
+    }
+    let mut s = fold_lanes(acc);
+    for k in whole..n {
+        s += w[k] * x[k] * suffix_a[group_of[k]];
+    }
+    s
+}
+
+/// The scalar per-column cached (d1, d2) kernel — one source of truth
+/// shared by `Workspace::coord_d1_d2_from_cache`, the scalar batched
+/// pass, and the remainder columns of the SIMD batched pass. Per-column
+/// operation order here IS the bitwise contract the lane kernel below
+/// reproduces.
+pub(crate) fn cached_col_d1_d2(
+    groups: &[TieGroup],
+    w: &[f64],
+    col: &[f64],
+    xt_delta_l: f64,
+    group_inv_s0: &[f64],
+    group_weight: &[f64],
+) -> (f64, f64) {
+    let (mut s1, mut s2) = (0.0_f64, 0.0_f64);
+    let (mut a1, mut a2) = (0.0_f64, 0.0_f64);
+    for (gi, g) in groups.iter().enumerate() {
+        for k in g.start..g.end {
+            let wx = w[k] * col[k];
+            s1 += wx;
+            s2 += wx * col[k];
+        }
+        let gw = group_weight[gi];
+        if gw > 0.0 {
+            // gw·s1 = ne·m1 and gw·s2 − (gw·s1)·m1 = ne·(m2 − m1²).
+            let m1 = s1 * group_inv_s0[gi];
+            let t1 = gw * s1;
+            a1 += t1;
+            a2 += gw * s2 - t1 * m1;
+        }
+    }
+    (a1 - xt_delta_l, a2)
+}
+
+/// Row-tile cuts (as tie-group index boundaries) for the batched SIMD
+/// kernel: consecutive groups are folded into one tile until it holds at
+/// least `block_rows` samples. Cutting on group boundaries keeps the
+/// per-column accumulator state tile-independent; sizing from shape
+/// alone keeps results thread-count invariant.
+pub(crate) fn row_tiles(groups: &[TieGroup], block_rows: usize) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(4);
+    cuts.push(0);
+    let mut rows = 0usize;
+    for (gi, g) in groups.iter().enumerate() {
+        rows += g.end - g.start;
+        if rows >= block_rows && gi + 1 < groups.len() {
+            cuts.push(gi + 1);
+            rows = 0;
+        }
+    }
+    cuts.push(groups.len());
+    cuts
+}
+
+/// Batched (d1, d2) over columns `lo..hi` with the multi-column
+/// interleaved lane kernel: [`LANES`] columns advance together per row,
+/// the shared weight column is read once per lane group per tile (and
+/// stays cache-hot across the lane groups of a tile), and each column
+/// keeps an independent accumulator chain. Per-column operation order
+/// matches [`cached_col_d1_d2`] exactly — results are bitwise equal to
+/// the scalar backend. `tile_cuts` comes from [`row_tiles`]; `d1`/`d2`
+/// have length `hi - lo`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn batched_d1_d2_block(
+    groups: &[TieGroup],
+    w: &[f64],
+    x: &Matrix,
+    xt_delta: &[f64],
+    group_inv_s0: &[f64],
+    group_weight: &[f64],
+    tile_cuts: &[usize],
+    lo: usize,
+    hi: usize,
+    d1: &mut [f64],
+    d2: &mut [f64],
+) {
+    let ncols = hi - lo;
+    debug_assert_eq!(d1.len(), ncols);
+    debug_assert_eq!(d2.len(), ncols);
+    let full = ncols - ncols % LANES;
+    // Per-column accumulator state persists across row tiles.
+    let mut s1v = vec![0.0_f64; full];
+    let mut s2v = vec![0.0_f64; full];
+    let mut a1v = vec![0.0_f64; full];
+    let mut a2v = vec![0.0_f64; full];
+    let ntiles = tile_cuts.len().saturating_sub(1);
+    for t in 0..ntiles {
+        let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
+        let mut c0 = 0;
+        while c0 < full {
+            let cols: [&[f64]; LANES] = std::array::from_fn(|j| x.col(lo + c0 + j));
+            let mut s1 = [0.0_f64; LANES];
+            let mut s2 = [0.0_f64; LANES];
+            let mut a1 = [0.0_f64; LANES];
+            let mut a2 = [0.0_f64; LANES];
+            s1.copy_from_slice(&s1v[c0..c0 + LANES]);
+            s2.copy_from_slice(&s2v[c0..c0 + LANES]);
+            a1.copy_from_slice(&a1v[c0..c0 + LANES]);
+            a2.copy_from_slice(&a2v[c0..c0 + LANES]);
+            for gi in g_lo..g_hi {
+                let g = &groups[gi];
+                for k in g.start..g.end {
+                    let wk = w[k];
+                    for j in 0..LANES {
+                        let xv = cols[j][k];
+                        let wx = wk * xv;
+                        s1[j] += wx;
+                        s2[j] += wx * xv;
+                    }
+                }
+                let gw = group_weight[gi];
+                if gw > 0.0 {
+                    let inv = group_inv_s0[gi];
+                    for j in 0..LANES {
+                        let m1 = s1[j] * inv;
+                        let t1 = gw * s1[j];
+                        a1[j] += t1;
+                        a2[j] += gw * s2[j] - t1 * m1;
+                    }
+                }
+            }
+            s1v[c0..c0 + LANES].copy_from_slice(&s1);
+            s2v[c0..c0 + LANES].copy_from_slice(&s2);
+            a1v[c0..c0 + LANES].copy_from_slice(&a1);
+            a2v[c0..c0 + LANES].copy_from_slice(&a2);
+            c0 += LANES;
+        }
+    }
+    for c in 0..full {
+        d1[c] = a1v[c] - xt_delta[lo + c];
+        d2[c] = a2v[c];
+    }
+    // Remainder columns (< LANES of them): the scalar cached kernel.
+    for c in full..ncols {
+        let (a, b) = cached_col_d1_d2(
+            groups,
+            w,
+            x.col(lo + c),
+            xt_delta[lo + c],
+            group_inv_s0,
+            group_weight,
+        );
+        d1[c] = a;
+        d2[c] = b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_sums_match_sequential_reference() {
+        let n = 37; // exercises whole chunks + tail
+        let w: Vec<f64> = (0..n).map(|i| 0.25 + (i as f64) * 0.013).collect();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 % 11) as f64) - 5.0).collect();
+        let r0: f64 = w.iter().sum();
+        let r1: f64 = w.iter().zip(&x).map(|(&a, &b)| a * b).sum();
+        let r2: f64 = w.iter().zip(&x).map(|(&a, &b)| a * b * b).sum();
+        let r3: f64 = w.iter().zip(&x).map(|(&a, &b)| a * b * b * b).sum();
+        assert!((sum1(&w) - r0).abs() <= 1e-12 * r0.abs());
+        let (s0, s1) = sum2(&w, &x);
+        assert!((s0 - r0).abs() <= 1e-12 * r0.abs());
+        assert!((s1 - r1).abs() <= 1e-12 * r1.abs().max(1.0));
+        let (t0, t1, t2) = sum3(&w, &x);
+        assert!((t0 - r0).abs() <= 1e-12 * r0.abs());
+        assert!((t1 - r1).abs() <= 1e-12 * r1.abs().max(1.0));
+        assert!((t2 - r2).abs() <= 1e-12 * r2.abs().max(1.0));
+        let (u0, u1, u2, u3) = sum4(&w, &x);
+        assert!((u0 - r0).abs() <= 1e-12 * r0.abs());
+        assert!((u1 - r1).abs() <= 1e-12 * r1.abs().max(1.0));
+        assert!((u2 - r2).abs() <= 1e-12 * r2.abs().max(1.0));
+        assert!((u3 - r3).abs() <= 1e-12 * r3.abs().max(1.0));
+    }
+
+    #[test]
+    fn tiles_cover_all_groups_exactly_once() {
+        let groups: Vec<TieGroup> = (0..10)
+            .map(|i| TieGroup { start: i * 5, end: i * 5 + 5, n_events: 1 })
+            .collect();
+        for block_rows in [1usize, 7, 12, 25, 1000] {
+            let cuts = row_tiles(&groups, block_rows);
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap(), groups.len());
+            for pair in cuts.windows(2) {
+                assert!(pair[0] < pair[1], "cuts must strictly increase: {cuts:?}");
+            }
+        }
+        // Empty problems tile to a single empty span.
+        let cuts = row_tiles(&[], 1024);
+        assert_eq!(cuts, vec![0, 0]);
+    }
+}

@@ -10,6 +10,7 @@
 //! sum trick work.
 
 pub mod derivatives;
+pub mod kernels;
 pub mod lipschitz;
 pub mod loss;
 pub mod moments;

@@ -6,6 +6,7 @@
 //! Newton methods push η to ±hundreds (the paper's blow-up experiments).
 
 use super::problem::CoxProblem;
+use crate::util::compute::{default_backend, KernelBackend, LANES};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// How many incremental coordinate updates before a full recompute of w
@@ -141,11 +142,47 @@ impl CoxState {
     /// incremental update, so chunked and in-memory fits share every
     /// floating-point operation on this hot path.
     pub fn update_coord_col(&mut self, col: &[f64], binary: bool, l: usize, delta: f64) {
+        self.update_coord_col_b(default_backend(), col, binary, l, delta)
+    }
+
+    /// [`CoxState::update_coord_col`] with an explicit kernel backend.
+    /// The SIMD arm processes [`LANES`] samples per iteration with one
+    /// independent max-η tracker per lane; every per-element operation is
+    /// independent and the lane maxima fold with the same `>` comparisons
+    /// the scalar scan makes, so both backends are **bitwise** identical
+    /// on every input.
+    pub fn update_coord_col_b(
+        &mut self,
+        backend: KernelBackend,
+        col: &[f64],
+        binary: bool,
+        l: usize,
+        delta: f64,
+    ) {
         debug_assert_eq!(col.len(), self.eta.len());
         if delta == 0.0 {
             return;
         }
         self.beta[l] += delta;
+        let max_eta = match backend {
+            KernelBackend::Scalar => self.apply_coord_scalar(col, binary, delta),
+            KernelBackend::Simd => self.apply_coord_lanes(col, binary, delta),
+        };
+        self.updates_since_refresh += 1;
+        self.version = next_version();
+        // Rebase if η drifted far from the shift (overflow guard upward,
+        // w-underflow guard downward) or after many incremental
+        // multiplies (precision guard).
+        if max_eta - self.shift > 30.0
+            || max_eta - self.shift < -30.0
+            || self.updates_since_refresh >= REFRESH_EVERY
+        {
+            self.refresh_w();
+        }
+    }
+
+    /// The scalar re-exponentiation scan; returns the exact max η.
+    fn apply_coord_scalar(&mut self, col: &[f64], binary: bool, delta: f64) -> f64 {
         let mut max_eta = f64::NEG_INFINITY;
         if binary {
             // Binary column (the Sec-4.2 binarized regime): every nonzero
@@ -177,17 +214,87 @@ impl CoxState {
                 }
             }
         }
-        self.updates_since_refresh += 1;
-        self.version = next_version();
-        // Rebase if η drifted far from the shift (overflow guard upward,
-        // w-underflow guard downward) or after many incremental
-        // multiplies (precision guard).
-        if max_eta - self.shift > 30.0
-            || max_eta - self.shift < -30.0
-            || self.updates_since_refresh >= REFRESH_EVERY
-        {
-            self.refresh_w();
+        max_eta
+    }
+
+    /// Lane-unrolled re-exponentiation: [`LANES`] independent update
+    /// chains plus [`LANES`] max-η trackers folded at the end with the
+    /// same `>` comparisons the scalar scan makes (max is associative and
+    /// `>` never admits NaN in either order), so the result is bitwise
+    /// equal to [`CoxState::apply_coord_scalar`].
+    fn apply_coord_lanes(&mut self, col: &[f64], binary: bool, delta: f64) -> f64 {
+        let n = col.len();
+        let whole = n - n % LANES;
+        let mut maxes = [f64::NEG_INFINITY; LANES];
+        if binary {
+            let factor = delta.exp();
+            let mut k = 0;
+            while k < whole {
+                for (j, m) in maxes.iter_mut().enumerate() {
+                    let i = k + j;
+                    if col[i] != 0.0 {
+                        self.eta[i] += delta;
+                        self.w[i] *= factor;
+                    }
+                    if self.eta[i] > *m {
+                        *m = self.eta[i];
+                    }
+                }
+                k += LANES;
+            }
+            for i in whole..n {
+                if col[i] != 0.0 {
+                    self.eta[i] += delta;
+                    self.w[i] *= factor;
+                }
+                if self.eta[i] > maxes[0] {
+                    maxes[0] = self.eta[i];
+                }
+            }
+        } else {
+            let mut k = 0;
+            while k < whole {
+                for (j, m) in maxes.iter_mut().enumerate() {
+                    let i = k + j;
+                    let xkl = col[i];
+                    if xkl != 0.0 {
+                        let z = delta * xkl;
+                        self.eta[i] += z;
+                        self.w[i] *= if z.abs() < 1e-4 {
+                            1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
+                        } else {
+                            z.exp()
+                        };
+                    }
+                    if self.eta[i] > *m {
+                        *m = self.eta[i];
+                    }
+                }
+                k += LANES;
+            }
+            for i in whole..n {
+                let xkl = col[i];
+                if xkl != 0.0 {
+                    let z = delta * xkl;
+                    self.eta[i] += z;
+                    self.w[i] *= if z.abs() < 1e-4 {
+                        1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
+                    } else {
+                        z.exp()
+                    };
+                }
+                if self.eta[i] > maxes[0] {
+                    maxes[0] = self.eta[i];
+                }
+            }
         }
+        let mut max_eta = f64::NEG_INFINITY;
+        for &m in &maxes {
+            if m > max_eta {
+                max_eta = m;
+            }
+        }
+        max_eta
     }
 
     /// Replace β wholesale (full-vector methods like Newton), recomputing
@@ -290,6 +397,34 @@ mod tests {
         assert_eq!(a.w, b.w);
         assert_eq!(a.beta, b.beta);
         assert_eq!(a.shift, b.shift);
+    }
+
+    #[test]
+    fn backend_updates_are_bitwise_identical() {
+        // Bigger than the toy fixture so lane chunks + tail both run, with
+        // zeros sprinkled in (skip branch) and a binary column.
+        let n = 37;
+        let dense: Vec<f64> = (0..n)
+            .map(|i| if i % 5 == 0 { 0.0 } else { ((i * 3 % 13) as f64) / 6.0 - 1.0 })
+            .collect();
+        let bin: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let x = Matrix::from_columns(&[dense.clone(), bin.clone()]);
+        let time: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+        let event: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        let ds = SurvivalDataset::new(x, time, event, "b");
+        let p = CoxProblem::new(&ds);
+        let mut a = CoxState::zeros(&p);
+        let mut b = CoxState::zeros(&p);
+        // Mix tiny deltas (Taylor path), big deltas (exp path), and the
+        // binary column; include a delta large enough to trigger a rebase.
+        for (l, d) in [(0usize, 5e-5), (1, 0.8), (0, -0.4), (0, 35.0), (1, -0.2)] {
+            a.update_coord_col_b(KernelBackend::Scalar, p.x.col(l), p.col_binary[l], l, d);
+            b.update_coord_col_b(KernelBackend::Simd, p.x.col(l), p.col_binary[l], l, d);
+            assert_eq!(a.eta, b.eta, "l={l} d={d}");
+            assert_eq!(a.w, b.w, "l={l} d={d}");
+            assert_eq!(a.shift, b.shift);
+        }
+        assert_eq!(a.beta, b.beta);
     }
 
     #[test]

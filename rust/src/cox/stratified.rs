@@ -16,7 +16,8 @@ use super::state::CoxState;
 use crate::data::SurvivalDataset;
 use crate::optim::prox::{cubic_l1_step, cubic_step};
 use crate::optim::{Objective, Trace};
-use crate::util::parallel::{num_threads, par_for_each_mut, par_map_indices};
+use crate::util::compute::ResolvedCompute;
+use crate::util::parallel::{num_threads, par_for_each_mut_workers, par_map_workers};
 use std::time::Instant;
 
 /// Minimum total sample count before per-*sweep* work (loss, the
@@ -61,21 +62,41 @@ impl StratifiedCoxProblem {
     }
 
     /// Whether once-per-sweep fan-out pays for itself on this problem.
+    /// Reads the ambient thread count; fit loops hoist the decision via
+    /// [`Self::parallel_with`] instead of calling this per sweep.
     fn parallel(&self) -> bool {
-        self.strata.len() > 1 && self.total_n() >= PAR_MIN_N && num_threads() > 1
+        self.parallel_with(num_threads())
+    }
+
+    /// [`Self::parallel`] from an explicit thread budget (shape-only
+    /// decision once the caller resolved its `Compute`).
+    fn parallel_with(&self, threads: usize) -> bool {
+        self.strata.len() > 1 && self.total_n() >= PAR_MIN_N && threads > 1
     }
 
     /// Whether once-per-coordinate fan-out pays for itself (much higher
     /// bar: thread spawn cost recurs p times per sweep).
     fn parallel_coord(&self) -> bool {
-        self.strata.len() > 1 && self.total_n() >= PAR_COORD_MIN_N && num_threads() > 1
+        self.parallel_coord_with(num_threads())
+    }
+
+    /// [`Self::parallel_coord`] from an explicit thread budget.
+    fn parallel_coord_with(&self, threads: usize) -> bool {
+        self.strata.len() > 1 && self.total_n() >= PAR_COORD_MIN_N && threads > 1
     }
 
     /// Combined loss Σ_s ℓ_s(β) — per-stratum losses fanned across
     /// threads when the problem is big enough.
     pub fn loss(&self, states: &[CoxState]) -> f64 {
-        if self.parallel() {
-            par_map_indices(self.strata.len(), |s| loss(&self.strata[s], &states[s]))
+        self.loss_with(states, num_threads())
+    }
+
+    /// [`Self::loss`] with an explicit thread budget, for fit loops that
+    /// resolved their `Compute` once up front.
+    fn loss_with(&self, states: &[CoxState], threads: usize) -> f64 {
+        if self.parallel_with(threads) {
+            let idx: Vec<usize> = (0..self.strata.len()).collect();
+            par_map_workers(&idx, threads, |&s| loss(&self.strata[s], &states[s]))
                 .iter()
                 .sum()
         } else {
@@ -104,27 +125,29 @@ impl StratifiedCoxProblem {
         wss: &mut [Workspace],
         l: usize,
     ) -> (f64, f64) {
-        self.coord_d1_d2_ws_with(states, wss, l, self.parallel_coord())
+        let workers = if self.parallel_coord() { num_threads() } else { 1 };
+        self.coord_d1_d2_ws_with(states, wss, l, workers)
     }
 
     /// [`Self::coord_d1_d2_ws`] with the fan-out decision hoisted by the
-    /// caller (the fit loop evaluates it once, not per coordinate).
+    /// caller (the fit loop evaluates it once, not per coordinate);
+    /// `workers <= 1` runs sequentially.
     fn coord_d1_d2_ws_with(
         &self,
         states: &[CoxState],
         wss: &mut [Workspace],
         l: usize,
-        par_coord: bool,
+        workers: usize,
     ) -> (f64, f64) {
         assert_eq!(wss.len(), self.strata.len());
-        if par_coord {
+        if workers > 1 {
             struct Cell<'a> {
                 ws: &'a mut Workspace,
                 out: (f64, f64),
             }
             let mut cells: Vec<Cell> =
                 wss.iter_mut().map(|ws| Cell { ws, out: (0.0, 0.0) }).collect();
-            par_for_each_mut(&mut cells, |s, cell| {
+            par_for_each_mut_workers(&mut cells, workers, |s, cell| {
                 cell.out = coord_d1_d2_ws(&self.strata[s], &states[s], cell.ws, l);
             });
             cells.iter().fold((0.0, 0.0), |acc, c| (acc.0 + c.out.0, acc.1 + c.out.1))
@@ -194,11 +217,28 @@ impl StratifiedCoxProblem {
         max_sweeps: usize,
         tol: f64,
     ) -> (Vec<f64>, Trace) {
+        self.fit_with_compute(obj, max_sweeps, tol, &ResolvedCompute::ambient())
+    }
+
+    /// [`Self::fit`] with an explicitly resolved [`ResolvedCompute`]: the
+    /// thread budget is fixed here, once — the sweep and coordinate loops
+    /// below never consult the environment again (the old code re-read
+    /// `FASTSURVIVAL_THREADS` on every loss/derivative fan-out decision,
+    /// i.e. several times per sweep).
+    pub fn fit_with_compute(
+        &self,
+        obj: Objective,
+        max_sweeps: usize,
+        tol: f64,
+        compute: &ResolvedCompute,
+    ) -> (Vec<f64>, Trace) {
+        let threads = compute.threads;
         let mut states = self.zero_states();
         let mut wss = self.workspaces();
         let mut beta = vec![0.0; self.p];
-        let lip: Vec<LipschitzPair> = if self.parallel() {
-            par_map_indices(self.p, |l| self.lipschitz(l))
+        let lip: Vec<LipschitzPair> = if self.parallel_with(threads) {
+            let idx: Vec<usize> = (0..self.p).collect();
+            par_map_workers(&idx, threads, |&l| self.lipschitz(l))
         } else {
             (0..self.p).map(|l| self.lipschitz(l)).collect()
         };
@@ -206,11 +246,12 @@ impl StratifiedCoxProblem {
         let start = Instant::now();
         let mut prev = f64::INFINITY;
         // Loop-invariant fan-out decisions, hoisted out of the hot
-        // coordinate loop (each re-reads FASTSURVIVAL_THREADS).
-        let par_coord = self.parallel_coord();
+        // coordinate loop.
+        let coord_workers = if self.parallel_coord_with(threads) { threads } else { 1 };
         for sweep in 0..max_sweeps {
             for l in 0..self.p {
-                let (d1, d2) = self.coord_d1_d2_ws_with(&states, &mut wss, l, par_coord);
+                let (d1, d2) =
+                    self.coord_d1_d2_ws_with(&states, &mut wss, l, coord_workers);
                 let a = d1 + 2.0 * obj.l2 * beta[l];
                 let b = (d2 + 2.0 * obj.l2).max(0.0);
                 if b <= 0.0 && lip[l].l3 <= 0.0 {
@@ -225,8 +266,8 @@ impl StratifiedCoxProblem {
                     beta[l] += delta;
                     // update_coord also moves st.beta; keep it in sync
                     // (harmless — states' beta is not read here).
-                    if par_coord {
-                        par_for_each_mut(&mut states, |s, st| {
+                    if coord_workers > 1 {
+                        par_for_each_mut_workers(&mut states, coord_workers, |s, st| {
                             st.update_coord(&self.strata[s], l, delta);
                         });
                     } else {
@@ -236,7 +277,7 @@ impl StratifiedCoxProblem {
                     }
                 }
             }
-            let base = self.loss(&states);
+            let base = self.loss_with(&states, threads);
             let pen = obj.l1 * beta.iter().map(|b| b.abs()).sum::<f64>()
                 + obj.l2 * beta.iter().map(|b| b * b).sum::<f64>();
             let val = base + pen;

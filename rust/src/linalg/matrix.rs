@@ -165,6 +165,16 @@ impl Matrix {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
+    /// Round every cell through f32 in place (mixed-precision storage
+    /// semantics): after this, the matrix holds exactly the values an
+    /// f32-cell store would decode, while every kernel keeps accumulating
+    /// in f64. Idempotent — quantizing twice is a no-op.
+    pub fn quantize_f32(&mut self) {
+        for v in self.data.iter_mut() {
+            *v = *v as f32 as f64;
+        }
+    }
+
     /// Standardize columns in place to mean 0 / std 1; returns (means, stds).
     /// Constant columns keep std=1 so they become all-zero rather than NaN.
     pub fn standardize_columns(&mut self) -> (Vec<f64>, Vec<f64>) {
@@ -183,6 +193,53 @@ impl Matrix {
             stds.push(std);
         }
         (means, stds)
+    }
+}
+
+/// Dense column-major `rows x cols` matrix of f32 **cells** — the
+/// storage half of the mixed-precision path. Holding features as f32
+/// halves the memory footprint and bandwidth of a column scan; all
+/// arithmetic happens after widening each cell to f64, so accumulation
+/// precision is unchanged (fits agree with f64 storage to ≤1e-6 per
+/// coefficient, the storage quantization error).
+#[derive(Clone, Debug, PartialEq)]
+pub struct F32Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major storage: element (r, c) at `data[c * rows + r]`.
+    pub data: Vec<f32>,
+}
+
+impl F32Matrix {
+    /// Quantize an f64 matrix down to f32 cells.
+    pub fn from_matrix(m: &Matrix) -> Self {
+        F32Matrix {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Contiguous view of column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> &[f32] {
+        &self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    /// Widen column `c` into `out` (cleared first) for the f64 kernels.
+    pub fn widen_col_into(&self, c: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.col(c).iter().map(|&v| v as f64));
+    }
+
+    /// Widen the whole matrix back to f64. The result is exactly what
+    /// [`Matrix::quantize_f32`] produces from the original matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
     }
 }
 
@@ -239,5 +296,36 @@ mod tests {
         let m = Matrix::eye(4);
         let x = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn quantize_f32_matches_f32_round_trip_and_is_idempotent() {
+        let mut m = Matrix::from_columns(&[
+            vec![0.1, -2.7e10, 3.333_333_333_333, 0.0],
+            vec![1.0 / 3.0, f64::MIN_POSITIVE, 7.25, -0.1],
+        ]);
+        let quantized_ref: Vec<f64> = m.data.iter().map(|&v| v as f32 as f64).collect();
+        m.quantize_f32();
+        assert_eq!(m.data, quantized_ref);
+        let once = m.clone();
+        m.quantize_f32();
+        assert_eq!(m, once, "quantization must be idempotent");
+        // Values exactly representable in f32 pass through untouched.
+        assert_eq!(m.get(2, 1), 7.25);
+        assert_eq!(m.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn f32_matrix_round_trips_through_quantization() {
+        let mut m = Matrix::from_columns(&[vec![0.1, 0.2, -0.3], vec![1.5, -2.5, 3.5]]);
+        let f = F32Matrix::from_matrix(&m);
+        assert_eq!(f.rows, 3);
+        assert_eq!(f.cols, 2);
+        assert_eq!(f.col(1), &[1.5f32, -2.5, 3.5]);
+        let mut widened = Vec::new();
+        f.widen_col_into(0, &mut widened);
+        m.quantize_f32();
+        assert_eq!(widened.as_slice(), m.col(0));
+        assert_eq!(f.to_matrix(), m);
     }
 }

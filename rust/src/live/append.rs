@@ -21,7 +21,7 @@ use super::manifest::{
     SegmentEntry,
 };
 use crate::error::{FastSurvivalError, Result};
-use crate::store::{write_store, ChunkedDataset, CoxData, RowSource, StoreSummary};
+use crate::store::{write_store_with, ChunkedDataset, CoxData, RowSource, StoreSummary};
 use std::path::{Path, PathBuf};
 
 /// What a committed append looked like.
@@ -76,7 +76,9 @@ pub fn append_rows(
     let seg_path = segment_path(base, seq);
     let chunk_rows = if chunk_rows == 0 { header.chunk_rows } else { chunk_rows };
     let seg_name = format!("{base_name}.seg{seq:06}");
-    let summary = write_store(source, &seg_path, chunk_rows, &seg_name)?;
+    // Segments inherit the base store's cell precision so the merged
+    // view reads one uniform format and compaction round-trips it.
+    let summary = write_store_with(source, &seg_path, chunk_rows, &seg_name, header.precision)?;
 
     // Commit: the manifest rewrite is the only mutation readers see.
     m.segments.push(SegmentEntry { seq, n: summary.n, n_events: summary.n_events });
@@ -211,7 +213,8 @@ pub fn compact(base: &Path, chunk_rows: usize) -> Result<StoreSummary> {
     }
     let mut chain = ChainRows::new(sources);
     let merged_tmp = PathBuf::from(format!("{}.compact.tmp", base.display()));
-    let summary = write_store(&mut chain, &merged_tmp, chunk_rows, &base_name)?;
+    let summary =
+        write_store_with(&mut chain, &merged_tmp, chunk_rows, &base_name, header.precision)?;
     drop(chain); // release the base store's read handle before replacing it
 
     // Commit: the new base lands atomically; from here the old manifest
@@ -236,6 +239,7 @@ mod tests {
     use crate::data::synthetic::{generate, SyntheticConfig};
     use crate::data::SurvivalDataset;
     use crate::store::writer::DatasetRows;
+    use crate::store::write_store;
 
     fn temp_dir() -> PathBuf {
         let dir = std::env::temp_dir().join(format!("fs_live_append_{}", std::process::id()));
@@ -284,6 +288,26 @@ mod tests {
         // Compacting again is a no-op.
         let again = compact(&base, 0).unwrap();
         assert_eq!(again.n, 80);
+    }
+
+    #[test]
+    fn f32_base_appends_and_compacts_as_f32() {
+        use crate::util::compute::Precision;
+        let base = temp_dir().join("prec32.fsds");
+        let ds = gen(40, 41);
+        let mut rows = DatasetRows::new(&ds);
+        write_store_with(&mut rows, &base, 16, "p32", Precision::F32Storage).unwrap();
+        let extra = gen(9, 42);
+        let mut rows = DatasetRows::new(&extra);
+        let s = append_rows(&base, &mut rows, 0).unwrap();
+        // The committed segment inherits the base's v2 cell format.
+        let seg = ChunkedDataset::open(&s.segment).unwrap();
+        assert_eq!(seg.header().precision, Precision::F32Storage);
+        let merged = compact(&base, 0).unwrap();
+        assert_eq!(merged.n, 49);
+        let flat = ChunkedDataset::open(&base).unwrap();
+        assert_eq!(flat.header().precision, Precision::F32Storage);
+        assert_eq!(flat.meta().n, 49);
     }
 
     #[test]

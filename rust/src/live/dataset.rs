@@ -24,7 +24,7 @@ use crate::cox::problem::{build_tie_groups, descending_time_order};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
 use crate::linalg::Matrix;
-use crate::store::dataset::read_doubles_append;
+use crate::store::dataset::read_cells_append;
 use crate::store::format::StoreHeader;
 use crate::store::source::RunningStats;
 use crate::store::{ChunkedDataset, CoxData, StoreMeta};
@@ -259,11 +259,12 @@ impl LiveDataset {
         let src = &mut self.sources[s];
         let rows = src.header.rows_in_chunk(c);
         buf.clear();
-        read_doubles_append(
+        read_cells_append(
             &mut src.file,
             &mut self.bytebuf,
             src.header.col_segment_offset(c, 0),
             rows * src.header.p,
+            src.header.precision,
             buf,
         )
         .map(|()| (rows, c * src.header.chunk_rows))
@@ -403,11 +404,12 @@ fn read_col_range(
         let within = row - c * header.chunk_rows;
         let crows = header.rows_in_chunk(c);
         let take = (crows - within).min(end - row);
-        read_doubles_append(
+        read_cells_append(
             file,
             bytebuf,
-            header.col_segment_offset(c, l) + 8 * within as u64,
+            header.col_segment_offset(c, l) + header.cell_bytes() * within as u64,
             take,
+            header.precision,
             out,
         )?;
         row += take;

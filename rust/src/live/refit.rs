@@ -25,6 +25,7 @@ use crate::optim::cd::SurrogateKind;
 use crate::optim::{Objective, Trace};
 use crate::store::streaming::exact_chunked_cd;
 use crate::store::CoxData;
+use crate::util::compute::Compute;
 use crate::util::rng::Rng;
 
 /// Same annealing constant as the cold warmup: block t blends with
@@ -47,6 +48,8 @@ pub struct IncrementalRefit {
     pub warmup_passes: usize,
     /// Block-sampler seed (fixed seed = fixed refit).
     pub seed: u64,
+    /// Kernel backend / thread request, resolved once at refit start.
+    pub compute: Compute,
 }
 
 impl Default for IncrementalRefit {
@@ -58,6 +61,7 @@ impl Default for IncrementalRefit {
             stop_kkt: 1e-9,
             warmup_passes: 1,
             seed: 0,
+            compute: Compute::default(),
         }
     }
 }
@@ -119,6 +123,8 @@ impl IncrementalRefit {
             ));
         }
         let obj = self.objective;
+        // Resolved once; no env reads inside the sweep loops below.
+        let rc = self.compute.resolve()?;
         let mut beta = warm_beta.to_vec();
 
         // ---------------- Phase A: segment-block warmup. Only the
@@ -157,7 +163,7 @@ impl IncrementalRefit {
                 let mut bst = CoxState::from_beta(&bpr, &beta);
                 let mut ws = Workspace::new();
                 for l in 0..p {
-                    self.surrogate.step(&bpr, &mut bst, &mut ws, l, blip[l], bobj);
+                    self.surrogate.step_b(&bpr, &mut bst, &mut ws, l, blip[l], bobj, rc.backend);
                 }
                 let alpha = BLEND / (BLEND + t as f64);
                 for (bj, sj) in beta.iter_mut().zip(bst.beta.iter()) {
@@ -180,6 +186,7 @@ impl IncrementalRefit {
             0.0,
             self.stop_kkt,
             0.0,
+            rc,
         )?;
         let mut state = outcome.state;
         let beta = std::mem::take(&mut state.beta);

@@ -33,6 +33,7 @@ use crate::optim::Objective;
 use crate::serve::drift::{DriftReference, DriftRegistry};
 use crate::serve::ModelRegistry;
 use crate::store::CoxData;
+use crate::util::compute::Compute;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -117,6 +118,9 @@ pub struct Watcher {
     pub stop_kkt: f64,
     pub warmup_passes: usize,
     pub seed: u64,
+    /// Kernel backend / thread request forwarded to each cycle's refit,
+    /// resolved once per refit.
+    pub compute: Compute,
     /// Fraction of merged rows held out for validation.
     pub holdout_frac: f64,
     /// Seed for the holdout permutation — fixed per deployment so the
@@ -136,6 +140,7 @@ impl Watcher {
             stop_kkt: 1e-9,
             warmup_passes: 1,
             seed: 0,
+            compute: Compute::default(),
             holdout_frac: 0.1,
             holdout_seed: 17,
         }
@@ -171,6 +176,7 @@ impl Watcher {
             stop_kkt: self.stop_kkt,
             warmup_passes: self.warmup_passes,
             seed: self.seed,
+            compute: self.compute,
         }
         .refit(&mut live, &warm_beta)?;
         let refit_secs = t0.elapsed().as_secs_f64();

@@ -60,8 +60,9 @@ use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, Variabl
 use fastsurvival::serve::registry::ModelRegistry;
 use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
 use fastsurvival::serve::{serve, smoke, HttpClient, ServeConfig};
-use fastsurvival::store::{convert_csv, convert_synthetic, SyntheticRows};
+use fastsurvival::store::{convert_csv_with, convert_synthetic_with, SyntheticRows};
 use fastsurvival::util::args::Args;
+use fastsurvival::util::compute::{Compute, Precision};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -109,6 +110,12 @@ fn load_dataset(args: &Args) -> Result<SurvivalDataset> {
     })
 }
 
+/// Build the shared compute request from `--backend`, `--threads`,
+/// `--precision`, and `--block-rows` (see [`Compute::from_args`]).
+fn compute_from_args(args: &Args) -> Result<Compute> {
+    Compute::from_args(args)
+}
+
 /// The `fit` subcommand: one `CoxFit` builder call regardless of
 /// optimizer or engine; `--store <file.fsds>` routes to the out-of-core
 /// chunked fit instead of loading a dataset.
@@ -139,6 +146,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
         .max_iters(args.get_or("iters", 200))
         .tol(args.get_or("tol", 1e-9))
         .budget_secs(args.get_or("budget-secs", 0.0))
+        .compute(compute_from_args(args)?)
         .fit(&ds)?;
 
     let d = model.diagnostics();
@@ -201,6 +209,7 @@ fn cmd_fit_store(args: &Args, store: &str) -> Result<()> {
         .tol(args.get_or("tol", 1e-9))
         .stop_kkt(args.get_or("stop-kkt", 0.0))
         .budget_secs(args.get_or("budget-secs", 0.0))
+        .compute(compute_from_args(args)?)
         .fit_store(Path::new(store))?;
     let d = model.diagnostics();
     println!(
@@ -241,6 +250,12 @@ fn cmd_convert(args: &Args) -> Result<()> {
     })?;
     let out_path = Path::new(out);
     let chunk_rows = args.get_or("chunk-rows", 0usize); // 0 = format default
+    // --precision f32 writes a v2 store with f32 feature cells (half the
+    // feature payload); readers widen to f64 and accumulate in f64.
+    let precision = match args.get("precision") {
+        Some(p) => Precision::from_name(p)?,
+        None => Precision::F64,
+    };
     let t0 = Instant::now();
     let summary = if args.flag("synthetic") {
         let cfg = SyntheticConfig {
@@ -252,7 +267,7 @@ fn cmd_convert(args: &Args) -> Result<()> {
             seed: args.get_or("seed", 0),
         };
         println!("convert: streaming synthetic n={} p={} -> {out}", cfg.n, cfg.p);
-        convert_synthetic(&cfg, out_path, chunk_rows)?
+        convert_synthetic_with(&cfg, out_path, chunk_rows, precision)?
     } else if let Some(input) = args.get("input") {
         let input_path = Path::new(input);
         let name = args.str_or(
@@ -263,7 +278,7 @@ fn cmd_convert(args: &Args) -> Result<()> {
                 .unwrap_or_else(|| "csv".to_string()),
         );
         println!("convert: streaming {input} -> {out}");
-        convert_csv(input_path, out_path, chunk_rows, &name)?
+        convert_csv_with(input_path, out_path, chunk_rows, &name, precision)?
     } else {
         return Err(FastSurvivalError::InvalidConfig(
             "convert requires --input <data.csv> or --synthetic".into(),
@@ -290,13 +305,15 @@ fn cmd_path(args: &Args) -> Result<()> {
     let ds = load_dataset(args)?;
     let kind = args.str_or("kind", "l1");
     let optimizer = OptimizerKind::from_name(&args.str_or("method", "cubic"))?;
+    let compute = compute_from_args(args)?;
     let builder = CoxFit::new()
         .optimizer(optimizer)
         .n_lambdas(args.get_or("lambdas", 50))
         .lambda_min_ratio(args.get_or("min-ratio", 0.01))
         .l1_ratio(args.get_or("l1-ratio", 1.0))
         .max_iters(args.get_or("iters", 1000))
-        .tol(args.get_or("tol", 1e-9));
+        .tol(args.get_or("tol", 1e-9))
+        .compute(compute);
     let max_k = args.get_or("k", 10);
     println!(
         "path: dataset={} n={} p={} events={} kind={kind} optimizer={}",
@@ -371,6 +388,7 @@ fn cmd_path(args: &Args) -> Result<()> {
                     surrogate,
                     max_sweeps: args.get_or("iters", 1000),
                     stop_rel: args.get_or("stop-rel", 1e-6),
+                    backend: compute.resolve()?.backend,
                     ..Default::default()
                 };
                 cv_l1_path(&ds, &solver, folds, args.get_or("seed", 0), criterion)?
@@ -641,6 +659,7 @@ fn cmd_watch(args: &Args) -> Result<()> {
         }
     };
     watcher.stop_kkt = args.get_or("stop-kkt", 1e-9);
+    watcher.compute = compute_from_args(args)?;
     watcher.holdout_frac = args.get_or("holdout-frac", 0.1);
     watcher.holdout_seed = args.get_or("holdout-seed", 17);
     watcher.seed = args.get_or("seed", 0);
@@ -701,9 +720,9 @@ subcommands:\n\
   select       cardinality-constrained variable selection (--method --k)\n\
   experiment   regenerate a paper table/figure (--id --scale)\n\
   datasets     list datasets (Table 1 view)\n\
-  convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --chunk-rows)\n\
+  convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --precision f64|f32)\n\
   bigfit       out-of-core workload + RSS/parity gates → BENCH_bigfit.json (--quick)\n\
-  bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check)\n\
+  bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check --backend)\n\
   serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
   serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\
@@ -711,6 +730,11 @@ subcommands:\n\
   inspect      dump + verify a store (--store): header, checksums, segments\n\
   watch        online loop (--store --models --name --once --poll-secs --reload)\n\
   live-smoke   online-loop gates: ≥3× warm refit, ≤1e-8 parity → BENCH_live.json\n\n\
+compute options (fit, path, bigfit, watch, bench):\n\
+  --backend auto|scalar|simd   derivative kernel backend (default auto = simd)\n\
+  --threads N                  worker threads (default: FASTSURVIVAL_THREADS or cores)\n\
+  --precision f64|f32          feature-cell storage; f32 halves bandwidth, f64 accumulation\n\
+  --block-rows N               fixed cache-block row tile (default: auto-sized)\n\n\
 see README.md for endpoint schemas and examples";
 
 fn main() -> Result<()> {

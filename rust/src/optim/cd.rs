@@ -10,15 +10,18 @@
 //! the path solver and ABESS splicing need: a fit that starts where the
 //! previous one ended instead of re-deriving everything from zeros.
 
-use super::cubic::cubic_coord_step_ws;
+use super::cubic::cubic_coord_step_ws_b;
 use super::objective::{FitConfig, FitResult, Stopper};
 use super::prox::{cubic_l1_step, cubic_step, quad_l1_step, quad_step};
-use super::quadratic::quad_coord_step_ws;
+use super::quadratic::quad_coord_step_ws_b;
 use super::Objective;
-use crate::cox::derivatives::{coord_d1_col, coord_d1_d2_col, coord_d1_d2_ws, coord_d1_ws, Workspace};
+use crate::cox::derivatives::{
+    coord_d1_col_b, coord_d1_d2_col_b, coord_d1_d2_ws_b, coord_d1_ws_b, Workspace,
+};
 use crate::cox::lipschitz::LipschitzPair;
 use crate::cox::problem::TieGroup;
 use crate::cox::{CoxProblem, CoxState};
+use crate::util::compute::{default_backend, KernelBackend};
 
 /// Steps whose magnitude is below `STEP_SNAP · (1 + |β_l|)` are treated
 /// as exact no-ops by [`SurrogateKind::step_residual`]: a converged
@@ -56,9 +59,29 @@ impl SurrogateKind {
         lip: LipschitzPair,
         obj: Objective,
     ) -> f64 {
+        self.step_b(problem, state, ws, l, lip, obj, default_backend())
+    }
+
+    /// [`SurrogateKind::step`] with an explicit kernel backend.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_b(
+        self,
+        problem: &CoxProblem,
+        state: &mut CoxState,
+        ws: &mut Workspace,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        backend: KernelBackend,
+    ) -> f64 {
         match self {
-            SurrogateKind::Quadratic => quad_coord_step_ws(problem, state, ws, l, lip, obj),
-            SurrogateKind::Cubic => cubic_coord_step_ws(problem, state, ws, l, lip, obj),
+            SurrogateKind::Quadratic => {
+                quad_coord_step_ws_b(problem, state, ws, l, lip, obj, backend)
+            }
+            SurrogateKind::Cubic => {
+                cubic_coord_step_ws_b(problem, state, ws, l, lip, obj, backend)
+            }
         }
     }
 
@@ -86,6 +109,22 @@ impl SurrogateKind {
         obj: Objective,
         skip_below: f64,
     ) -> (f64, f64) {
+        self.step_residual_b(problem, state, ws, l, lip, obj, skip_below, default_backend())
+    }
+
+    /// [`SurrogateKind::step_residual`] with an explicit kernel backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_residual_b(
+        self,
+        problem: &CoxProblem,
+        state: &mut CoxState,
+        ws: &mut Workspace,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+        backend: KernelBackend,
+    ) -> (f64, f64) {
         let beta_l = state.beta[l];
         let (a, b) = match self {
             SurrogateKind::Quadratic => {
@@ -94,11 +133,11 @@ impl SurrogateKind {
                     // Flat (constant) coordinate: no information, no move.
                     return (0.0, 0.0);
                 }
-                let d1 = coord_d1_ws(problem, state, ws, l);
+                let d1 = coord_d1_ws_b(problem, state, ws, l, backend);
                 (d1 + 2.0 * obj.l2 * beta_l, b)
             }
             SurrogateKind::Cubic => {
-                let (d1, d2) = coord_d1_d2_ws(problem, state, ws, l);
+                let (d1, d2) = coord_d1_d2_ws_b(problem, state, ws, l, backend);
                 (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2)
             }
         };
@@ -129,7 +168,7 @@ impl SurrogateKind {
             }
         };
         let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
-        state.update_coord(problem, l, delta);
+        state.update_coord_col_b(backend, problem.x.col(l), problem.col_binary[l], l, delta);
         (delta, residual)
     }
 
@@ -157,6 +196,36 @@ impl SurrogateKind {
         obj: Objective,
         skip_below: f64,
     ) -> (f64, f64) {
+        self.step_residual_col_b(
+            groups,
+            xt_delta_l,
+            state,
+            col,
+            binary,
+            l,
+            lip,
+            obj,
+            skip_below,
+            default_backend(),
+        )
+    }
+
+    /// [`SurrogateKind::step_residual_col`] with an explicit kernel
+    /// backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_residual_col_b(
+        self,
+        groups: &[TieGroup],
+        xt_delta_l: f64,
+        state: &mut CoxState,
+        col: &[f64],
+        binary: bool,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+        backend: KernelBackend,
+    ) -> (f64, f64) {
         let beta_l = state.beta[l];
         let (a, b) = match self {
             SurrogateKind::Quadratic => {
@@ -165,11 +234,11 @@ impl SurrogateKind {
                     // Flat (constant) coordinate: no information, no move.
                     return (0.0, 0.0);
                 }
-                let d1 = coord_d1_col(groups, &state.w, col, xt_delta_l);
+                let d1 = coord_d1_col_b(backend, groups, &state.w, col, xt_delta_l);
                 (d1 + 2.0 * obj.l2 * beta_l, b)
             }
             SurrogateKind::Cubic => {
-                let (d1, d2) = coord_d1_d2_col(groups, &state.w, col, xt_delta_l);
+                let (d1, d2) = coord_d1_d2_col_b(backend, groups, &state.w, col, xt_delta_l);
                 (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2)
             }
         };
@@ -200,7 +269,7 @@ impl SurrogateKind {
             }
         };
         let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
-        state.update_coord_col(col, binary, l, delta);
+        state.update_coord_col_b(backend, col, binary, l, delta);
         (delta, residual)
     }
 }
@@ -219,11 +288,14 @@ pub fn fit_support_warm(
     ws: &mut Workspace,
 ) -> FitResult {
     let obj = config.objective;
+    // The backend was resolved once when the config was built; optimizer
+    // loops never consult the environment.
+    let backend = config.compute.backend;
     let mut stopper = Stopper::new();
     let mut iters = 0;
     for it in 0..config.max_iters {
         for &l in coords {
-            kind.step(problem, state, ws, l, lip[l], obj);
+            kind.step_b(problem, state, ws, l, lip[l], obj, backend);
         }
         iters = it + 1;
         let loss = obj.value(problem, state);

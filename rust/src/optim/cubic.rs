@@ -9,11 +9,12 @@
 use super::cd::{fit_support_with, SurrogateKind};
 use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer};
 use super::prox::{cubic_l1_step, cubic_step};
-use crate::cox::derivatives::{coord_d1_d2_ws, Workspace};
+use crate::cox::derivatives::{coord_d1_d2_ws_b, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::Result;
 use crate::runtime::engine::CoxEngine;
+use crate::util::compute::{default_backend, KernelBackend};
 
 /// The paper's second-order surrogate method.
 #[derive(Clone, Copy, Debug, Default)]
@@ -45,7 +46,23 @@ pub fn cubic_coord_step_ws(
     lip: LipschitzPair,
     obj: Objective,
 ) -> f64 {
-    let (d1, d2) = coord_d1_d2_ws(problem, state, ws, l);
+    cubic_coord_step_ws_b(problem, state, ws, l, lip, obj, default_backend())
+}
+
+/// [`cubic_coord_step_ws`] with an explicit kernel backend threaded into
+/// both the derivative pass and the incremental η/w update.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn cubic_coord_step_ws_b(
+    problem: &CoxProblem,
+    state: &mut CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    lip: LipschitzPair,
+    obj: Objective,
+    backend: KernelBackend,
+) -> f64 {
+    let (d1, d2) = coord_d1_d2_ws_b(problem, state, ws, l, backend);
     let a = d1 + 2.0 * obj.l2 * state.beta[l];
     let b = d2 + 2.0 * obj.l2;
     if b <= 0.0 && lip.l3 <= 0.0 {
@@ -56,7 +73,7 @@ pub fn cubic_coord_step_ws(
     } else {
         cubic_step(a, b, lip.l3)
     };
-    state.update_coord(problem, l, delta);
+    state.update_coord_col_b(backend, problem.x.col(l), problem.col_binary[l], l, delta);
     delta
 }
 

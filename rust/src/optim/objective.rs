@@ -12,6 +12,7 @@ use crate::cox::loss::penalized_loss;
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::{FastSurvivalError, Result};
 use crate::runtime::engine::{CoxEngine, NativeEngine};
+use crate::util::compute::ResolvedCompute;
 use std::time::Instant;
 
 /// The regularized objective ℓ(β) + λ1‖β‖₁ + λ2‖β‖₂².
@@ -49,6 +50,10 @@ pub struct FitConfig {
     pub budget_secs: f64,
     /// Record a loss-history trace (small overhead: one loss eval/iter).
     pub record_trace: bool,
+    /// Kernel backend / thread budget / blocking, resolved once before
+    /// the fit (see [`crate::util::compute::Compute`]); the environment
+    /// is never re-read inside optimizer loops.
+    pub compute: ResolvedCompute,
 }
 
 impl Default for FitConfig {
@@ -59,6 +64,7 @@ impl Default for FitConfig {
             tol: 1e-9,
             budget_secs: 0.0,
             record_trace: true,
+            compute: ResolvedCompute::ambient(),
         }
     }
 }

@@ -8,11 +8,12 @@
 use super::cd::{fit_support_with, SurrogateKind};
 use super::objective::{engine_cd_fit, FitConfig, FitResult, Objective, Optimizer};
 use super::prox::{quad_l1_step, quad_step};
-use crate::cox::derivatives::{coord_d1_ws, Workspace};
+use crate::cox::derivatives::{coord_d1_ws_b, Workspace};
 use crate::cox::lipschitz::{all_lipschitz, LipschitzPair};
 use crate::cox::{CoxProblem, CoxState};
 use crate::error::Result;
 use crate::runtime::engine::CoxEngine;
+use crate::util::compute::{default_backend, KernelBackend};
 
 /// The paper's first-order surrogate method.
 #[derive(Clone, Copy, Debug, Default)]
@@ -45,18 +46,34 @@ pub fn quad_coord_step_ws(
     lip: LipschitzPair,
     obj: Objective,
 ) -> f64 {
+    quad_coord_step_ws_b(problem, state, ws, l, lip, obj, default_backend())
+}
+
+/// [`quad_coord_step_ws`] with an explicit kernel backend threaded into
+/// both the derivative pass and the incremental η/w update.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn quad_coord_step_ws_b(
+    problem: &CoxProblem,
+    state: &mut CoxState,
+    ws: &mut Workspace,
+    l: usize,
+    lip: LipschitzPair,
+    obj: Objective,
+    backend: KernelBackend,
+) -> f64 {
     let b = lip.l2 + 2.0 * obj.l2;
     if b <= 0.0 {
         return 0.0;
     }
-    let d1 = coord_d1_ws(problem, state, ws, l);
+    let d1 = coord_d1_ws_b(problem, state, ws, l, backend);
     let a = d1 + 2.0 * obj.l2 * state.beta[l];
     let delta = if obj.l1 > 0.0 {
         quad_l1_step(a, b, state.beta[l], obj.l1)
     } else {
         quad_step(a, b)
     };
-    state.update_coord(problem, l, delta);
+    state.update_coord_col_b(backend, problem.x.col(l), problem.col_binary[l], l, delta);
     delta
 }
 

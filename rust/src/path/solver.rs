@@ -35,6 +35,7 @@ use crate::cox::{CoxProblem, CoxState};
 use crate::error::{FastSurvivalError, Result};
 use crate::optim::cd::SurrogateKind;
 use crate::optim::Objective;
+use crate::util::compute::{default_backend, KernelBackend};
 
 /// Configuration of the λ-path solve.
 #[derive(Clone, Debug)]
@@ -67,6 +68,9 @@ pub struct PathSolver {
     pub warm_start: bool,
     /// Safety cap on add-violators-and-resume rounds per point.
     pub max_kkt_rounds: usize,
+    /// Derivative kernel backend for every coordinate step on the path
+    /// (resolved by the caller; see [`crate::util::compute::Compute`]).
+    pub backend: KernelBackend,
 }
 
 impl Default for PathSolver {
@@ -82,6 +86,7 @@ impl Default for PathSolver {
             screen: true,
             warm_start: true,
             max_kkt_rounds: 50,
+            backend: default_backend(),
         }
     }
 }
@@ -268,8 +273,9 @@ impl PathSolver {
                     let mut max_res = 0.0_f64;
                     let mut moved = false;
                     for &l in &coords {
-                        let (delta, res) = self.surrogate.step_residual(
+                        let (delta, res) = self.surrogate.step_residual_b(
                             problem, &mut state, &mut ws, l, lip[l], obj, stop_eps,
+                            self.backend,
                         );
                         if res > max_res {
                             max_res = res;

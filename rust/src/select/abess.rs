@@ -75,6 +75,7 @@ impl Abess {
             tol: 1e-8,
             budget_secs: 0.0,
             record_trace: false,
+            ..Default::default()
         };
         fit_support_warm(problem, &mut st, support, &cfg, lip, SurrogateKind::Cubic, ws);
         let final_loss = loss(problem, &st);

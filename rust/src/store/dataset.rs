@@ -18,6 +18,7 @@ use crate::cox::problem::{build_tie_groups, TieGroup};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
 use crate::linalg::Matrix;
+use crate::util::compute::Precision;
 use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -217,13 +218,14 @@ impl CoxData for ChunkedDataset {
 
     fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize> {
         let rows = self.header.rows_in_chunk(c);
-        let doubles = rows * self.header.p;
+        let cells = rows * self.header.p;
         buf.clear();
-        read_doubles_append(
+        read_cells_append(
             &mut self.file,
             &mut self.bytebuf,
             self.header.col_segment_offset(c, 0),
-            doubles,
+            cells,
+            self.header.precision,
             buf,
         )?;
         Ok(rows)
@@ -237,11 +239,12 @@ impl CoxData for ChunkedDataset {
         buf.reserve(self.header.n);
         for c in 0..self.header.n_chunks() {
             let rows = self.header.rows_in_chunk(c);
-            read_doubles_append(
+            read_cells_append(
                 &mut self.file,
                 &mut self.bytebuf,
                 self.header.col_segment_offset(c, l),
                 rows,
+                self.header.precision,
                 buf,
             )?;
         }
@@ -249,19 +252,26 @@ impl CoxData for ChunkedDataset {
     }
 }
 
-/// Seek + read `count` doubles at `offset`, decoding them onto the end
-/// of `out` (the byte buffer is caller-owned and reused across reads).
-/// Shared with the live merged reader, which does per-source range
-/// reads over the same chunk geometry.
-pub(crate) fn read_doubles_append(
+/// Seek + read `count` feature cells at `offset`, decoding them onto
+/// the end of `out` (the byte buffer is caller-owned and reused across
+/// reads). v1 cells are f64; v2 cells are f32, widened to f64 here so
+/// every downstream kernel accumulates in full precision. Shared with
+/// the live merged reader, which does per-source range reads over the
+/// same chunk geometry.
+pub(crate) fn read_cells_append(
     file: &mut File,
     bytebuf: &mut Vec<u8>,
     offset: u64,
     count: usize,
+    precision: Precision,
     out: &mut Vec<f64>,
 ) -> Result<()> {
+    let cell = match precision {
+        Precision::F64 => 8,
+        Precision::F32Storage => 4,
+    };
     bytebuf.clear();
-    bytebuf.resize(count * 8, 0);
+    bytebuf.resize(count * cell, 0);
     file.seek(SeekFrom::Start(offset))
         .map_err(|e| FastSurvivalError::io("seeking store", e))?;
     file.read_exact(bytebuf).map_err(|e| {
@@ -272,8 +282,17 @@ pub(crate) fn read_doubles_append(
         }
     })?;
     out.reserve(count);
-    for chunk in bytebuf.chunks_exact(8) {
-        out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    match precision {
+        Precision::F64 => {
+            for chunk in bytebuf.chunks_exact(8) {
+                out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        }
+        Precision::F32Storage => {
+            for chunk in bytebuf.chunks_exact(4) {
+                out.push(f32::from_le_bytes(chunk.try_into().unwrap()) as f64);
+            }
+        }
     }
     Ok(())
 }
@@ -309,7 +328,14 @@ fn derive_column_stats(
     for c in 0..header.n_chunks() {
         let rows = header.rows_in_chunk(c);
         chunk.clear();
-        read_doubles_append(file, bytebuf, header.col_segment_offset(c, 0), rows * p, &mut chunk)?;
+        read_cells_append(
+            file,
+            bytebuf,
+            header.col_segment_offset(c, 0),
+            rows * p,
+            header.precision,
+            &mut chunk,
+        )?;
         let r0 = c * header.chunk_rows;
         for j in 0..p {
             let col = &chunk[j * rows..(j + 1) * rows];

@@ -5,7 +5,8 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"FSDS"
-//! 4       4     format version (u32) = 1
+//! 4       4     format version (u32): 1 = f64 feature cells,
+//!               2 = f32 feature cells (mixed-precision storage)
 //! 8       8     n   — number of samples (u64)
 //! 16      8     p   — number of feature columns (u64)
 //! 24      8     chunk_rows — rows per feature chunk (u64)
@@ -22,8 +23,16 @@
 //!               segment stored contiguously (column-major within the
 //!               chunk) — so one column of one chunk is a single
 //!               contiguous read, and a full-column scan over all chunks
-//!               costs exactly n·8 bytes of I/O.
+//!               costs exactly n·cell_bytes of I/O (8 for version 1,
+//!               4 for version 2).
 //! ```
+//!
+//! Version 2 stores feature cells as f32 (times stay f64, events u8, and
+//! every meta field stays f64): half the payload bytes and half the
+//! column-scan bandwidth. Readers widen each cell to f64 on decode, so
+//! all accumulation stays f64 — a v2 fit agrees with its v1 twin to the
+//! storage quantization (≤1e-6 per coefficient). Version 1 files are
+//! byte-identical to every prior release and remain the default.
 //!
 //! Rows are pre-sorted by the writer with the engine's canonical
 //! [`crate::cox::problem::descending_time_order`], so risk sets are
@@ -35,12 +44,16 @@
 //! [`FastSurvivalError::Store`].
 
 use crate::error::{FastSurvivalError, Result};
+use crate::util::compute::Precision;
 use std::io::Read;
 
 /// File magic.
 pub const MAGIC: [u8; 4] = *b"FSDS";
-/// Current format version.
+/// Format version for f64 feature cells (the default; byte-identical to
+/// every prior release).
 pub const FORMAT_VERSION: u32 = 1;
+/// Format version for f32 feature cells (mixed-precision storage).
+pub const FORMAT_VERSION_F32: u32 = 2;
 /// Fixed header length in bytes (before the meta block).
 pub const HEADER_LEN: usize = 48;
 /// Default rows per feature chunk: 8192 × p doubles per chunk keeps the
@@ -69,9 +82,20 @@ pub struct StoreHeader {
     pub chunk_rows: usize,
     /// Absolute offset where `time[]` starts (end of the meta block).
     pub payload_offset: u64,
+    /// Feature-cell storage precision, carried by the format version:
+    /// version 1 ⇔ [`Precision::F64`], version 2 ⇔
+    /// [`Precision::F32Storage`].
+    pub precision: Precision,
 }
 
 impl StoreHeader {
+    /// Bytes per feature cell (8 for v1/f64, 4 for v2/f32).
+    pub fn cell_bytes(&self) -> u64 {
+        match self.precision {
+            Precision::F64 => 8,
+            Precision::F32Storage => 4,
+        }
+    }
     /// Number of feature chunks.
     pub fn n_chunks(&self) -> usize {
         if self.n == 0 {
@@ -100,19 +124,23 @@ impl StoreHeader {
         debug_assert!(c < self.n_chunks() && j < self.p);
         let prefix = (c as u64) * (self.chunk_rows as u64) * (self.p as u64);
         let within = (j as u64) * (self.rows_in_chunk(c) as u64);
-        self.chunk_base() + 8 * (prefix + within)
+        self.chunk_base() + self.cell_bytes() * (prefix + within)
     }
 
     /// Total file length this header implies.
     pub fn expected_file_len(&self) -> u64 {
-        self.chunk_base() + 8 * (self.n as u64) * (self.p as u64)
+        self.chunk_base() + self.cell_bytes() * (self.n as u64) * (self.p as u64)
     }
 
     /// Encode the fixed header (checksum included).
     pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let version = match self.precision {
+            Precision::F64 => FORMAT_VERSION,
+            Precision::F32Storage => FORMAT_VERSION_F32,
+        };
         let mut buf = [0u8; HEADER_LEN];
         buf[0..4].copy_from_slice(&MAGIC);
-        buf[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf[4..8].copy_from_slice(&version.to_le_bytes());
         buf[8..16].copy_from_slice(&(self.n as u64).to_le_bytes());
         buf[16..24].copy_from_slice(&(self.p as u64).to_le_bytes());
         buf[24..32].copy_from_slice(&(self.chunk_rows as u64).to_le_bytes());
@@ -137,11 +165,16 @@ impl StoreHeader {
             )));
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
-        if version != FORMAT_VERSION {
-            return Err(FastSurvivalError::Store(format!(
-                "unsupported store format version {version} (this build reads {FORMAT_VERSION})"
-            )));
-        }
+        let precision = match version {
+            FORMAT_VERSION => Precision::F64,
+            FORMAT_VERSION_F32 => Precision::F32Storage,
+            _ => {
+                return Err(FastSurvivalError::Store(format!(
+                    "unsupported store format version {version} (this build reads \
+                     {FORMAT_VERSION} and {FORMAT_VERSION_F32})"
+                )))
+            }
+        };
         let crc_stored = u64::from_le_bytes(buf[40..48].try_into().unwrap());
         let crc = fnv1a(&buf[0..40]);
         if crc != crc_stored {
@@ -192,6 +225,7 @@ impl StoreHeader {
             p: p as usize,
             chunk_rows: chunk_rows as usize,
             payload_offset,
+            precision,
         })
     }
 }
@@ -272,16 +306,26 @@ pub(crate) fn encode_meta(
 mod tests {
     use super::*;
 
+    fn header(n: usize, p: usize, chunk_rows: usize, payload_offset: u64) -> StoreHeader {
+        StoreHeader { n, p, chunk_rows, payload_offset, precision: Precision::F64 }
+    }
+
     #[test]
     fn header_round_trips() {
-        let h = StoreHeader { n: 1_000_003, p: 117, chunk_rows: 8192, payload_offset: 321 };
+        let h = header(1_000_003, 117, 8192, 321);
         let enc = h.encode();
         assert_eq!(StoreHeader::decode(&enc).unwrap(), h);
+        // v2 (f32 cells) round-trips and is distinguished by version.
+        let h32 = StoreHeader { precision: Precision::F32Storage, ..h };
+        let enc32 = h32.encode();
+        assert_eq!(enc32[4], 2, "f32 stores carry format version 2");
+        assert_eq!(StoreHeader::decode(&enc32).unwrap(), h32);
+        assert_ne!(enc[4..8], enc32[4..8]);
     }
 
     #[test]
     fn geometry_arithmetic() {
-        let h = StoreHeader { n: 20, p: 3, chunk_rows: 8, payload_offset: 100 };
+        let h = header(20, 3, 8, 100);
         assert_eq!(h.n_chunks(), 3);
         assert_eq!(h.rows_in_chunk(0), 8);
         assert_eq!(h.rows_in_chunk(2), 4);
@@ -295,9 +339,26 @@ mod tests {
     }
 
     #[test]
+    fn f32_geometry_uses_four_byte_cells() {
+        let h = StoreHeader {
+            n: 20,
+            p: 3,
+            chunk_rows: 8,
+            payload_offset: 100,
+            precision: Precision::F32Storage,
+        };
+        assert_eq!(h.cell_bytes(), 4);
+        // The O(n) payload (time f64 + event u8) is unchanged; only the
+        // feature cells shrink.
+        assert_eq!(h.chunk_base(), 100 + 20 * 8 + 20);
+        assert_eq!(h.col_segment_offset(1, 2), h.chunk_base() + 4 * (8 * 3 + 2 * 8));
+        assert_eq!(h.expected_file_len(), h.chunk_base() + 4 * 60);
+    }
+
+    #[test]
     fn corrupt_headers_are_typed_errors() {
         use crate::error::FastSurvivalError;
-        let h = StoreHeader { n: 5, p: 2, chunk_rows: 4, payload_offset: 64 };
+        let h = header(5, 2, 4, 64);
         let good = h.encode();
         // Wrong magic.
         let mut bad = good;
@@ -325,9 +386,9 @@ mod tests {
         // A crafted header can always carry a valid FNV self-check; the
         // geometry caps must still reject it before any offset math.
         for h in [
-            StoreHeader { n: 1 << 60, p: 2, chunk_rows: 8, payload_offset: 64 },
-            StoreHeader { n: 1 << 30, p: 1 << 30, chunk_rows: 8, payload_offset: 64 },
-            StoreHeader { n: 8, p: 2, chunk_rows: 1 << 60, payload_offset: 64 },
+            header(1 << 60, 2, 8, 64),
+            header(1 << 30, 1 << 30, 8, 64),
+            header(8, 2, 1 << 60, 64),
         ] {
             let enc = h.encode();
             assert!(

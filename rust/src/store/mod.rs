@@ -39,6 +39,6 @@ pub use format::DEFAULT_CHUNK_ROWS;
 pub use source::{CoxData, MemoryCoxData, StoreMeta};
 pub use streaming::{reference_fit_kkt, StreamingFit, StreamingFitResult};
 pub use writer::{
-    convert_csv, convert_synthetic, write_store, DatasetRows, RowSource, StoreSummary,
-    SyntheticRows,
+    convert_csv, convert_csv_with, convert_synthetic, convert_synthetic_with, write_store,
+    write_store_with, DatasetRows, RowSource, StoreSummary, SyntheticRows,
 };

@@ -17,6 +17,7 @@ use crate::cox::CoxProblem;
 use crate::data::SurvivalDataset;
 use crate::error::Result;
 use crate::linalg::Matrix;
+use crate::util::compute::Precision;
 use std::sync::Arc;
 
 /// Everything the trainer holds in memory about a dataset: O(n) risk-set
@@ -144,6 +145,30 @@ impl MemoryCoxData {
     /// [`CoxProblem::try_new`], so the row order, tie groups, Xᵀδ, and
     /// Lipschitz constants are the engine's own).
     pub fn from_dataset(ds: &SurvivalDataset, chunk_rows: usize) -> Result<Self> {
+        Self::from_dataset_with(ds, chunk_rows, Precision::F64)
+    }
+
+    /// [`MemoryCoxData::from_dataset`] with an explicit cell precision:
+    /// under [`Precision::F32Storage`] every feature cell is rounded
+    /// through f32 before any derived constant is computed, so this
+    /// source serves exactly what a v2 `.fsds` store of the same data
+    /// decodes — the in-memory parity reference for mixed-precision
+    /// chunked fits.
+    pub fn from_dataset_with(
+        ds: &SurvivalDataset,
+        chunk_rows: usize,
+        precision: Precision,
+    ) -> Result<Self> {
+        let ds_quantized;
+        let ds = match precision {
+            Precision::F64 => ds,
+            Precision::F32Storage => {
+                let mut q = ds.clone();
+                q.x.quantize_f32();
+                ds_quantized = q;
+                &ds_quantized
+            }
+        };
         let pr = CoxProblem::try_new(ds)?;
         let lipschitz = all_lipschitz(&pr);
         let chunk_rows = chunk_rows.max(1);

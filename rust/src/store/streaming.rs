@@ -22,7 +22,7 @@
 use super::source::{CoxData, StoreMeta};
 use crate::cox::derivatives::Workspace;
 use crate::cox::lipschitz::all_lipschitz;
-use crate::cox::loss::loss_for_parts;
+use crate::cox::loss::loss_for_parts_b;
 use crate::cox::{CoxProblem, CoxState};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
@@ -30,6 +30,7 @@ use crate::linalg::Matrix;
 use crate::optim::cd::SurrogateKind;
 use crate::optim::objective::Stopper;
 use crate::optim::{FitConfig, Objective, Trace};
+use crate::util::compute::{Compute, ResolvedCompute};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -67,6 +68,10 @@ pub struct StreamingFit {
     pub sgd_blocks: Option<usize>,
     /// Seed for the block sampler (fixed seed = fixed fit).
     pub seed: u64,
+    /// Kernel backend / thread request, resolved once at fit start (the
+    /// store's own header decides cell precision — the `precision`
+    /// field here only affects in-memory sources built from it).
+    pub compute: Compute,
 }
 
 impl Default for StreamingFit {
@@ -80,6 +85,7 @@ impl Default for StreamingFit {
             budget_secs: 0.0,
             sgd_blocks: None,
             seed: 0,
+            compute: Compute::default(),
         }
     }
 }
@@ -138,6 +144,9 @@ impl StreamingFit {
             ));
         }
         let obj = self.objective;
+        // Resolve the compute request exactly once — no optimizer loop
+        // below ever re-reads the environment.
+        let rc = self.compute.resolve()?;
         // One wall clock over both phases: `budget_secs` must bound the
         // whole fit, not just the exact polish (the warmup alone is
         // n_chunks CD sweeps — minutes at the tracked scale).
@@ -183,7 +192,7 @@ impl StreamingFit {
                 let mut bst = CoxState::from_beta(&bpr, &beta);
                 let mut ws = Workspace::new();
                 for l in 0..p {
-                    self.surrogate.step(&bpr, &mut bst, &mut ws, l, blip[l], bobj);
+                    self.surrogate.step_b(&bpr, &mut bst, &mut ws, l, blip[l], bobj, rc.backend);
                 }
                 let alpha = BLEND / (BLEND + t as f64);
                 for (bj, sj) in beta.iter_mut().zip(bst.beta.iter()) {
@@ -213,6 +222,7 @@ impl StreamingFit {
             self.tol,
             self.stop_kkt,
             remaining,
+            rc,
         )?;
         let mut state = outcome.state;
         let beta = std::mem::take(&mut state.beta);
@@ -256,6 +266,7 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
     tol: f64,
     stop_kkt: f64,
     budget_secs: f64,
+    compute: ResolvedCompute,
 ) -> Result<ExactPhaseOutcome> {
     let (n, p) = (meta.n, meta.p);
     // η = Xβ accumulated chunk by chunk.
@@ -283,6 +294,7 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
         tol,
         budget_secs,
         record_trace: true,
+        compute,
     };
     let mut stopper = Stopper::new();
     let mut sweeps = 0usize;
@@ -296,7 +308,7 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
         let mut max_res = 0.0_f64;
         for l in 0..p {
             data.load_col(l, &mut colbuf)?;
-            let (_delta, residual) = surrogate.step_residual_col(
+            let (_delta, residual) = surrogate.step_residual_col_b(
                 &meta.groups,
                 meta.xt_delta[l],
                 &mut state,
@@ -306,14 +318,21 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
                 meta.lipschitz[l],
                 obj,
                 0.0,
+                compute.backend,
             );
             if residual > max_res {
                 max_res = residual;
             }
         }
         sweeps = it + 1;
-        let loss = loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
-            + obj.penalty(&state.beta);
+        let loss = loss_for_parts_b(
+            compute.backend,
+            &meta.groups,
+            &meta.delta,
+            &state.eta,
+            &state.w,
+            state.shift,
+        ) + obj.penalty(&state.beta);
         let stop_loss = stopper.step(it, loss, &config);
         let stopped_kkt = stop_kkt > 0.0 && max_res <= stop_kkt;
         if stopped_kkt {
@@ -323,9 +342,14 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
             break;
         }
     }
-    let objective_value =
-        loss_for_parts(&meta.groups, &meta.delta, &state.eta, &state.w, state.shift)
-            + obj.penalty(&state.beta);
+    let objective_value = loss_for_parts_b(
+        compute.backend,
+        &meta.groups,
+        &meta.delta,
+        &state.eta,
+        &state.w,
+        state.shift,
+    ) + obj.penalty(&state.beta);
     Ok(ExactPhaseOutcome { state, objective_value, sweeps, trace: stopper.trace })
 }
 

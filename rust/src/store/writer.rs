@@ -15,6 +15,7 @@
 use super::format::{self, StoreHeader, DEFAULT_CHUNK_ROWS, HEADER_LEN};
 use super::source::RunningStats;
 use crate::cox::problem::descending_time_order;
+use crate::util::compute::Precision;
 use crate::data::csv::SurvivalCsvReader;
 use crate::data::synthetic::{SyntheticConfig, SyntheticStream};
 use crate::data::SurvivalDataset;
@@ -153,7 +154,9 @@ pub struct StoreSummary {
 }
 
 /// Stream `source` into a sorted columnar store at `out`. `chunk_rows`
-/// of 0 selects [`DEFAULT_CHUNK_ROWS`].
+/// of 0 selects [`DEFAULT_CHUNK_ROWS`]. Writes format v1 (f64 cells) —
+/// byte-identical to every prior release; use [`write_store_with`] for
+/// mixed-precision (f32-cell) stores.
 ///
 /// The store is assembled at `{out}.partial.tmp` and renamed into place
 /// only on success, so an interrupted or failed conversion never leaves
@@ -165,10 +168,24 @@ pub fn write_store(
     chunk_rows: usize,
     name: &str,
 ) -> Result<StoreSummary> {
+    write_store_with(source, out, chunk_rows, name, Precision::F64)
+}
+
+/// [`write_store`] with an explicit feature-cell precision:
+/// [`Precision::F64`] writes format v1, [`Precision::F32Storage`]
+/// writes format v2 (f32 cells, half the feature payload and half the
+/// column-scan I/O; times, events, and meta stats stay f64).
+pub fn write_store_with(
+    source: &mut dyn RowSource,
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+) -> Result<StoreSummary> {
     let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
     let spill_path = PathBuf::from(format!("{}.rows.tmp", out.display()));
     let partial_path = PathBuf::from(format!("{}.partial.tmp", out.display()));
-    let result = write_store_inner(source, &partial_path, &spill_path, chunk_rows, name);
+    let result = write_store_inner(source, &partial_path, &spill_path, chunk_rows, name, precision);
     // The spill file is workspace either way; best-effort cleanup.
     let _ = std::fs::remove_file(&spill_path);
     match result {
@@ -194,6 +211,7 @@ fn write_store_inner(
     spill_path: &Path,
     chunk_rows: usize,
     name: &str,
+    precision: Precision,
 ) -> Result<StoreSummary> {
     let p = source.n_features();
     if p == 0 {
@@ -260,6 +278,7 @@ fn write_store_inner(
         p,
         chunk_rows,
         payload_offset: (HEADER_LEN + meta.len()) as u64,
+        precision,
     };
     let out_file = File::create(out)
         .map_err(|e| FastSurvivalError::io(format!("creating {}", out.display()), e))?;
@@ -304,8 +323,17 @@ fn write_store_inner(
                 chunk[j * rows + k] = v;
             }
         }
-        for &v in &chunk {
-            w.write_all(&v.to_le_bytes()).map_err(werr)?;
+        match precision {
+            Precision::F64 => {
+                for &v in &chunk {
+                    w.write_all(&v.to_le_bytes()).map_err(werr)?;
+                }
+            }
+            Precision::F32Storage => {
+                for &v in &chunk {
+                    w.write_all(&(v as f32).to_le_bytes()).map_err(werr)?;
+                }
+            }
         }
     }
     w.flush().map_err(werr)?;
@@ -320,21 +348,43 @@ fn write_store_inner(
     })
 }
 
-/// Convenience: stream a CSV file into a store.
+/// Convenience: stream a CSV file into a store (v1/f64 cells).
 pub fn convert_csv(input: &Path, out: &Path, chunk_rows: usize, name: &str) -> Result<StoreSummary> {
-    let mut reader = crate::data::csv::open_survival_csv(input)?;
-    write_store(&mut reader, out, chunk_rows, name)
+    convert_csv_with(input, out, chunk_rows, name, Precision::F64)
 }
 
-/// Convenience: stream the Appendix-C.2 generator into a store.
+/// [`convert_csv`] with an explicit feature-cell precision.
+pub fn convert_csv_with(
+    input: &Path,
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+) -> Result<StoreSummary> {
+    let mut reader = crate::data::csv::open_survival_csv(input)?;
+    write_store_with(&mut reader, out, chunk_rows, name, precision)
+}
+
+/// Convenience: stream the Appendix-C.2 generator into a store
+/// (v1/f64 cells).
 pub fn convert_synthetic(
     cfg: &SyntheticConfig,
     out: &Path,
     chunk_rows: usize,
 ) -> Result<StoreSummary> {
+    convert_synthetic_with(cfg, out, chunk_rows, Precision::F64)
+}
+
+/// [`convert_synthetic`] with an explicit feature-cell precision.
+pub fn convert_synthetic_with(
+    cfg: &SyntheticConfig,
+    out: &Path,
+    chunk_rows: usize,
+    precision: Precision,
+) -> Result<StoreSummary> {
     let mut rows = SyntheticRows::new(cfg);
     let name = format!("synthetic_stream_n{}_p{}_rho{}", cfg.n, cfg.p, cfg.rho);
-    write_store(&mut rows, out, chunk_rows, &name)
+    write_store_with(&mut rows, out, chunk_rows, &name, precision)
 }
 
 #[cfg(test)]
@@ -359,6 +409,35 @@ mod tests {
         assert_eq!(std::fs::metadata(&out).unwrap().len(), s.bytes);
         // Spill workspace is gone.
         assert!(!PathBuf::from(format!("{}.rows.tmp", out.display())).exists());
+    }
+
+    #[test]
+    fn f32_store_is_half_the_feature_payload_and_decodes_quantized() {
+        use crate::store::dataset::ChunkedDataset;
+        let ds = generate(&SyntheticConfig { n: 37, p: 4, rho: 0.3, k: 2, s: 0.1, seed: 13 });
+        let out64 = temp_store("prec64");
+        let out32 = temp_store("prec32");
+        let mut rows = DatasetRows::new(&ds);
+        let s64 = write_store_with(&mut rows, &out64, 16, "p", Precision::F64).unwrap();
+        let mut rows = DatasetRows::new(&ds);
+        let s32 = write_store_with(&mut rows, &out32, 16, "p", Precision::F32Storage).unwrap();
+        // Identical geometry, feature payload shrunk by exactly 4·n·p.
+        assert_eq!((s32.n, s32.p, s32.n_chunks), (s64.n, s64.p, s64.n_chunks));
+        assert_eq!(s64.bytes - s32.bytes, 4 * 37 * 4);
+        assert_eq!(std::fs::metadata(&out32).unwrap().len(), s32.bytes);
+        // The v2 store opens and serves columns equal to the f32
+        // round-trip of the v1 store's columns; times stay exact f64.
+        let mut st64 = ChunkedDataset::open(&out64).unwrap();
+        let mut st32 = ChunkedDataset::open(&out32).unwrap();
+        assert_eq!(st64.meta().time, st32.meta().time);
+        assert_eq!(st64.meta().event, st32.meta().event);
+        let (mut c64, mut c32) = (Vec::new(), Vec::new());
+        for l in 0..4 {
+            st64.load_col(l, &mut c64).unwrap();
+            st32.load_col(l, &mut c32).unwrap();
+            let quant: Vec<f64> = c64.iter().map(|&v| v as f32 as f64).collect();
+            assert_eq!(c32, quant, "column {l} must decode as the f32 round-trip");
+        }
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Unified compute configuration: kernel backend, thread count, feature
+//! precision, and cache-block sizing, resolved **once** per fit.
+//!
+//! Every scattered `FASTSURVIVAL_THREADS` lookup in the codebase funnels
+//! through [`Compute::resolve`]: the environment variable survives only as
+//! the default applied here, so a fit can never observe a mid-run change
+//! and parallel code stops paying an env lookup per sweep. Requesting an
+//! unknown backend or precision is a typed [`FastSurvivalError::Unknown`],
+//! never a silent fallback.
+
+use crate::error::{FastSurvivalError, Result};
+
+/// Number of interleaved accumulator lanes used by the SIMD kernels.
+///
+/// Four independent f64 chains are enough to hide FMA latency on every
+/// mainstream x86-64/aarch64 core while keeping the per-tile working set
+/// (LANES feature columns + the shared weight column) small enough to
+/// block for L2.
+pub const LANES: usize = 4;
+
+/// Requested kernel backend. `Auto` resolves to the best backend compiled
+/// into this build (always [`KernelBackend::Simd`] — the portable
+/// multi-accumulator kernels are std-only Rust and available everywhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pick the best available backend at resolve time.
+    Auto,
+    /// Reference scalar kernels (one accumulator chain per column).
+    Scalar,
+    /// Portable SIMD: hand-unrolled multi-accumulator lane kernels.
+    Simd,
+}
+
+impl Backend {
+    /// Parse a CLI/user-facing backend name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "auto" => Ok(Backend::Auto),
+            "scalar" => Ok(Backend::Scalar),
+            "simd" => Ok(Backend::Simd),
+            _ => Err(FastSurvivalError::Unknown {
+                kind: "backend",
+                name: name.to_string(),
+                expected: "auto|scalar|simd",
+            }),
+        }
+    }
+}
+
+/// Feature-matrix storage precision. Accumulation is always f64; this
+/// controls only how matrix *cells* are stored (in memory and on disk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 cells (default; bitwise-compatible with every prior release).
+    F64,
+    /// f32 cell storage with f64 accumulation: halves feature bandwidth.
+    /// Fits agree with F64 to ≤1e-6 per coefficient (storage quantization).
+    F32Storage,
+}
+
+impl Precision {
+    /// Parse a CLI/user-facing precision name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "f64" => Ok(Precision::F64),
+            "f32" => Ok(Precision::F32Storage),
+            _ => Err(FastSurvivalError::Unknown {
+                kind: "precision",
+                name: name.to_string(),
+                expected: "f64|f32",
+            }),
+        }
+    }
+
+    /// Stable display name (matches `from_name` input).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32Storage => "f32",
+        }
+    }
+}
+
+/// Cache-block row-tile size for the batched derivative kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockRows {
+    /// Size the row tile from the problem shape (targets ~256 KiB of hot
+    /// working set so the shared weight column stays L2-resident across
+    /// lane groups).
+    Auto,
+    /// Fixed row-tile size (floored at 64 rows).
+    Fixed(usize),
+}
+
+/// User-facing compute request. Build one, hand it to
+/// `CoxFit::compute(...)` (or the CLI `--backend/--threads/--precision`
+/// flags), and it is resolved exactly once when the fit starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compute {
+    pub backend: Backend,
+    /// `None` → the `FASTSURVIVAL_THREADS` env default (then core count).
+    pub threads: Option<usize>,
+    pub precision: Precision,
+    pub block_rows: BlockRows,
+}
+
+impl Default for Compute {
+    fn default() -> Self {
+        Compute {
+            backend: Backend::Auto,
+            threads: None,
+            precision: Precision::F64,
+            block_rows: BlockRows::Auto,
+        }
+    }
+}
+
+impl Compute {
+    /// Set the kernel backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Pin the worker-thread count (overrides the env default).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Set the feature-matrix storage precision.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Override the autotuned cache-block row-tile size.
+    pub fn block_rows(mut self, rows: usize) -> Self {
+        self.block_rows = BlockRows::Fixed(rows);
+        self
+    }
+
+    /// Build the shared compute request from the CLI flags `--backend`,
+    /// `--threads`, `--precision`, and `--block-rows`. Unknown names and
+    /// invalid counts surface as typed errors when the consuming engine
+    /// resolves the request — exactly once per fit, never a silent
+    /// fallback.
+    pub fn from_args(args: &crate::util::args::Args) -> Result<Self> {
+        let mut c = Compute::default();
+        if let Some(b) = args.get("backend") {
+            c = c.backend(Backend::from_name(b)?);
+        }
+        if args.get("threads").is_some() {
+            c = c.threads(args.get_or("threads", 0usize));
+        }
+        if let Some(p) = args.get("precision") {
+            c = c.precision(Precision::from_name(p)?);
+        }
+        if args.get("block-rows").is_some() {
+            c = c.block_rows(args.get_or("block-rows", 0usize));
+        }
+        Ok(c)
+    }
+
+    /// Resolve the request into concrete settings. This is the **only**
+    /// place in the crate that reads `FASTSURVIVAL_THREADS`.
+    pub fn resolve(&self) -> Result<ResolvedCompute> {
+        let backend = match self.backend {
+            // Both backends are compiled into every std-only build, so
+            // Auto always lands on the faster one. An unknown *name* is
+            // rejected upstream by `Backend::from_name`.
+            Backend::Auto | Backend::Simd => KernelBackend::Simd,
+            Backend::Scalar => KernelBackend::Scalar,
+        };
+        let threads = match self.threads {
+            Some(0) => {
+                return Err(FastSurvivalError::InvalidConfig(
+                    "compute.threads must be >= 1".to_string(),
+                ))
+            }
+            Some(n) => n,
+            None => env_threads(),
+        };
+        Ok(ResolvedCompute {
+            backend,
+            threads,
+            precision: self.precision,
+            block_rows: self.block_rows,
+        })
+    }
+}
+
+/// A concrete kernel backend (post-`Auto` resolution). Every hot-path
+/// kernel in `cox/` dispatches on this; both variants satisfy the same
+/// contract — per-column accumulation order is identical, so batched
+/// derivatives and coordinate updates are **bitwise** equal across
+/// backends, and the reassociated single-column reductions agree to
+/// ≤1e-12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    Scalar,
+    Simd,
+}
+
+impl KernelBackend {
+    /// Stable display name (bench rows, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+/// Fully resolved compute settings, captured once at fit start and
+/// threaded through every kernel call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolvedCompute {
+    pub backend: KernelBackend,
+    pub threads: usize,
+    pub precision: Precision,
+    pub block_rows: BlockRows,
+}
+
+impl ResolvedCompute {
+    /// Resolve the ambient default request (env-driven thread count, Auto
+    /// backend). Infallible: the default `Compute` has no invalid fields.
+    pub fn ambient() -> Self {
+        Compute::default().resolve().expect("default compute always resolves")
+    }
+
+    /// Concrete row-tile size for a problem with `n` rows.
+    pub fn block_rows_for(&self, n: usize) -> usize {
+        match self.block_rows {
+            BlockRows::Fixed(b) => b.max(64),
+            BlockRows::Auto => auto_block_rows(n),
+        }
+    }
+}
+
+/// Default kernel backend used by legacy (non-`Compute`-aware) call
+/// paths, so every default route runs one uniform backend and the
+/// cross-path bitwise contracts keep holding.
+pub fn default_backend() -> KernelBackend {
+    KernelBackend::Simd
+}
+
+/// Autotuned cache-block row-tile size: target ~256 KiB of hot working
+/// set per tile (LANES f64 feature columns + the shared weight column per
+/// row), clamped to [1024, 16384]. Depends only on the problem shape —
+/// never on thread count — so blocked results stay bitwise invariant
+/// across `threads`.
+pub fn auto_block_rows(n: usize) -> usize {
+    const TARGET_BYTES: usize = 256 * 1024;
+    const BYTES_PER_ROW: usize = (LANES + 1) * 8;
+    let tile = (TARGET_BYTES / BYTES_PER_ROW).clamp(1024, 16384);
+    tile.min(n.max(1))
+}
+
+/// Ambient worker-thread default: `FASTSURVIVAL_THREADS` if set and
+/// valid, else the machine's available parallelism. The env lookup lives
+/// here (and only here) so [`Compute::resolve`] is the one read site.
+pub(crate) fn env_threads() -> usize {
+    if let Ok(v) = std::env::var("FASTSURVIVAL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        assert_eq!(Backend::from_name("auto").unwrap(), Backend::Auto);
+        assert_eq!(Backend::from_name("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::from_name("simd").unwrap(), Backend::Simd);
+        let err = Backend::from_name("avx512").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("backend"), "typed error names the kind: {msg}");
+        assert!(msg.contains("avx512"), "typed error echoes the name: {msg}");
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        assert_eq!(Precision::from_name("f64").unwrap(), Precision::F64);
+        assert_eq!(Precision::from_name("f32").unwrap(), Precision::F32Storage);
+        assert!(Precision::from_name("f16").is_err());
+        assert_eq!(Precision::F32Storage.name(), "f32");
+    }
+
+    #[test]
+    fn resolve_applies_overrides() {
+        let rc = Compute::default()
+            .backend(Backend::Scalar)
+            .threads(3)
+            .precision(Precision::F32Storage)
+            .resolve()
+            .unwrap();
+        assert_eq!(rc.backend, KernelBackend::Scalar);
+        assert_eq!(rc.threads, 3);
+        assert_eq!(rc.precision, Precision::F32Storage);
+    }
+
+    #[test]
+    fn zero_threads_is_a_typed_error() {
+        let err = Compute::default().threads(0).resolve().unwrap_err();
+        assert!(matches!(err, FastSurvivalError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn auto_resolves_to_simd() {
+        let rc = Compute::default().resolve().unwrap();
+        assert_eq!(rc.backend, KernelBackend::Simd);
+        assert!(rc.threads >= 1);
+    }
+
+    #[test]
+    fn auto_block_rows_is_shape_only_and_clamped() {
+        assert_eq!(auto_block_rows(50_000), auto_block_rows(50_000));
+        assert!(auto_block_rows(1_000_000) <= 16_384);
+        assert!(auto_block_rows(1_000_000) >= 1024);
+        // Tiny problems never get a tile larger than the problem.
+        assert_eq!(auto_block_rows(100), 100);
+        assert_eq!(auto_block_rows(0), 1);
+    }
+
+    #[test]
+    fn fixed_block_rows_is_floored() {
+        let rc = Compute::default().block_rows(8).resolve().unwrap();
+        assert_eq!(rc.block_rows_for(1_000_000), 64);
+        let rc = Compute::default().block_rows(2048).resolve().unwrap();
+        assert_eq!(rc.block_rows_for(1_000_000), 2048);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod compute;
 pub mod mem;
 pub mod parallel;
 pub mod proptest;

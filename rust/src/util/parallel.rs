@@ -7,16 +7,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-/// Number of worker threads to use (respects `FASTSURVIVAL_THREADS`).
+/// Ambient worker-thread default. Delegates to `util::compute` — the one
+/// place allowed to read `FASTSURVIVAL_THREADS`. Prefer resolving a
+/// [`crate::util::compute::Compute`] once per fit over calling this in a
+/// loop.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("FASTSURVIVAL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    crate::util::compute::env_threads()
 }
 
 /// Map `f` over `items` in parallel, preserving input order in the output.
@@ -78,11 +74,22 @@ pub fn par_map_indices<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec
 /// stratified fit to advance every per-stratum state after a shared-β
 /// coordinate step.
 pub fn par_for_each_mut<T: Send, F: Fn(usize, &mut T) + Sync>(items: &mut [T], f: F) {
+    par_for_each_mut_workers(items, num_threads(), f)
+}
+
+/// [`par_for_each_mut`] with an explicit worker count, for callers that
+/// resolved their thread budget once up front (e.g. the stratified fit's
+/// `Compute`) and must not re-read the environment per invocation.
+pub fn par_for_each_mut_workers<T: Send, F: Fn(usize, &mut T) + Sync>(
+    items: &mut [T],
+    workers: usize,
+    f: F,
+) {
     let n = items.len();
     if n == 0 {
         return;
     }
-    let workers = num_threads().min(n);
+    let workers = workers.max(1).min(n);
     if workers <= 1 {
         for (i, item) in items.iter_mut().enumerate() {
             f(i, item);

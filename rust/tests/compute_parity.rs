@@ -1,0 +1,244 @@
+//! Compute backend contract, end to end: scalar and SIMD kernels land on
+//! the same fit across thread counts, f32 storage stays within 1e-6 of
+//! the f64 pipeline (in-memory fit, λ-path, chunked store fit), and the
+//! `.fsds` v2 encoding round-trips while v1 stores keep reading.
+
+use fastsurvival::api::CoxFit;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::error::FastSurvivalError;
+use fastsurvival::optim::{Objective, SurrogateKind};
+use fastsurvival::store::{
+    write_store, write_store_with, ChunkedDataset, CoxData, DatasetRows, MemoryCoxData,
+    StreamingFit,
+};
+use fastsurvival::util::compute::{Backend, Compute, Precision};
+use std::path::PathBuf;
+
+fn max_abs_gap(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn quantized(ds: &SurvivalDataset) -> SurvivalDataset {
+    let mut q = ds.clone();
+    q.x.quantize_f32();
+    q
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fs_compute_parity_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.fsds"))
+}
+
+/// A KKT-stopped streaming fitter: the certificate pins both runs within
+/// ~3e-9 of the unique λ₂=1 optimum, so cross-run gaps measure the
+/// pipeline, not the stopping rule.
+fn kkt_fitter(compute: Compute) -> StreamingFit {
+    StreamingFit {
+        objective: Objective { l1: 0.0, l2: 1.0 },
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 10_000,
+        tol: 0.0,
+        stop_kkt: 1e-9,
+        compute,
+        ..Default::default()
+    }
+}
+
+/// Tentpole parity property: the scalar reference and the SIMD lane
+/// kernels drive the full in-memory fit to the same coefficients at
+/// every worker count, and each backend is bitwise deterministic across
+/// worker counts (threads split work by column, never inside a
+/// reduction). Thread counts are pinned through `Compute`, not the env,
+/// so this runs race-free under libtest's concurrency.
+#[test]
+fn scalar_and_simd_fits_agree_across_thread_counts() {
+    let ds = generate(&SyntheticConfig { n: 300, p: 12, rho: 0.4, k: 3, s: 0.1, seed: 301 });
+    let mut per_backend: Vec<Vec<Vec<f64>>> = vec![Vec::new(), Vec::new()];
+    for threads in [1usize, 2, 4] {
+        let mut betas = Vec::new();
+        for (slot, backend) in [Backend::Scalar, Backend::Simd].into_iter().enumerate() {
+            let model = CoxFit::new()
+                .l2(0.5)
+                .compute(Compute::default().backend(backend).threads(threads))
+                .fit(&ds)
+                .unwrap();
+            per_backend[slot].push(model.beta().to_vec());
+            betas.push(model.beta().to_vec());
+        }
+        let gap = max_abs_gap(&betas[0], &betas[1]);
+        assert!(gap <= 1e-8, "threads={threads}: scalar vs simd max|Δβ| = {gap:.3e}");
+    }
+    for snapshots in &per_backend {
+        for later in &snapshots[1..] {
+            for (a, b) in snapshots[0].iter().zip(later) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "fit β not bitwise identical across thread counts"
+                );
+            }
+        }
+    }
+}
+
+/// f32 storage keeps the in-memory fit within 1e-6 of f64, and an
+/// explicit zero thread count is rejected as a typed config error when
+/// the request is resolved — never a silent fallback.
+#[test]
+fn f32_storage_fit_within_1e6_and_bad_compute_is_typed() {
+    let ds = generate(&SyntheticConfig { n: 250, p: 10, rho: 0.3, k: 3, s: 0.1, seed: 302 });
+    let f64_fit = CoxFit::new().l2(0.5).fit(&ds).unwrap();
+    let f32_fit = CoxFit::new()
+        .l2(0.5)
+        .compute(Compute::default().precision(Precision::F32Storage))
+        .fit(&ds)
+        .unwrap();
+    let gap = max_abs_gap(f64_fit.beta(), f32_fit.beta());
+    assert!(gap <= 1e-6, "f32 storage max|Δβ| = {gap:.3e}");
+
+    let err = CoxFit::new().compute(Compute::default().threads(0)).fit(&ds).unwrap_err();
+    assert!(matches!(err, FastSurvivalError::InvalidConfig(_)), "got {err}");
+}
+
+/// The λ-path under f32 storage tracks the f64 path: same grid, per-point
+/// train losses within 1e-6 relative, and the dense (λ_min) endpoint's
+/// coefficients within 1e-6. Backends must agree on the path too.
+#[test]
+fn l1_path_endpoints_match_across_precision_and_backends() {
+    let ds = generate(&SyntheticConfig { n: 220, p: 10, rho: 0.2, k: 3, s: 0.1, seed: 303 });
+    let base = CoxFit::new().n_lambdas(8);
+    let p64 = base.clone().l1_path(&ds).unwrap();
+    let p32 = base
+        .clone()
+        .compute(Compute::default().precision(Precision::F32Storage))
+        .l1_path(&ds)
+        .unwrap();
+    assert_eq!(p64.len(), p32.len());
+    // λ_max is data-derived, so the f32 grid may shift by the storage
+    // rounding — but no further.
+    for (a, b) in p64.lambdas().iter().zip(p32.lambdas().iter()) {
+        assert!((a - b).abs() / (1.0 + b.abs()) <= 1e-6, "grid drifted: {a} vs {b}");
+    }
+    for (a, b) in p64.points().iter().zip(p32.points().iter()) {
+        let gap = (a.train_loss - b.train_loss).abs() / (1.0 + b.train_loss.abs());
+        assert!(gap <= 1e-6, "λ={:?}: f64 vs f32 loss gap {gap:.3e}", a.lambda);
+    }
+    let dense64 = &p64.points()[p64.len() - 1].beta;
+    let dense32 = &p32.points()[p32.len() - 1].beta;
+    let gap = max_abs_gap(dense64, dense32);
+    assert!(gap <= 1e-6, "λ_min endpoint max|Δβ| = {gap:.3e}");
+
+    // Backend parity on the same path: identical supports and train
+    // losses within 1e-8 relative at every grid point (the convex
+    // objective has one optimum per λ).
+    let support = |beta: &[f64]| -> Vec<usize> {
+        beta.iter().enumerate().filter(|(_, b)| b.abs() > 1e-10).map(|(i, _)| i).collect()
+    };
+    let scalar = base
+        .clone()
+        .compute(Compute::default().backend(Backend::Scalar))
+        .l1_path(&ds)
+        .unwrap();
+    for (a, b) in p64.points().iter().zip(scalar.points().iter()) {
+        assert_eq!(
+            support(&a.beta),
+            support(&b.beta),
+            "λ={:?}: simd and scalar supports disagree",
+            a.lambda
+        );
+        let gap = (a.train_loss - b.train_loss).abs() / (1.0 + b.train_loss.abs());
+        assert!(gap <= 1e-8, "λ={:?}: simd vs scalar loss gap {gap:.3e}", a.lambda);
+    }
+}
+
+/// Chunked store fits: a v2 (f32-cell) store written from pre-quantized
+/// data is bitwise identical to the in-memory quantized source, and a v2
+/// store written from raw f64 data stays within 1e-6 of the v1 fit.
+#[test]
+fn f32_store_fit_matches_memory_source_and_f64_store() {
+    let ds = generate(&SyntheticConfig { n: 500, p: 8, rho: 0.3, k: 3, s: 0.1, seed: 304 });
+    let chunk_rows = 128;
+
+    // v1 (f64) reference fit.
+    let v1_path = temp_path("parity_v1");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &v1_path, chunk_rows, "parity").unwrap();
+    let mut v1 = ChunkedDataset::open(&v1_path).unwrap();
+    let from_v1 = kkt_fitter(Compute::default()).fit(&mut v1).unwrap();
+
+    // v2 from raw f64 data: the 1e-6 storage-precision contract.
+    let v2_raw_path = temp_path("parity_v2_raw");
+    let mut rows = DatasetRows::new(&ds);
+    write_store_with(&mut rows, &v2_raw_path, chunk_rows, "parity", Precision::F32Storage)
+        .unwrap();
+    let mut v2_raw = ChunkedDataset::open(&v2_raw_path).unwrap();
+    assert_eq!(v2_raw.header().precision, Precision::F32Storage);
+    let from_v2 = kkt_fitter(Compute::default()).fit(&mut v2_raw).unwrap();
+    let gap = max_abs_gap(&from_v1.beta, &from_v2.beta);
+    assert!(gap <= 1e-6, "v2 store vs v1 store max|Δβ| = {gap:.3e}");
+
+    // v2 from pre-quantized data vs the in-memory quantized source: both
+    // execute the same instructions on the same bits.
+    let qds = quantized(&ds);
+    let v2_q_path = temp_path("parity_v2_quant");
+    let mut rows = DatasetRows::new(&qds);
+    write_store_with(&mut rows, &v2_q_path, chunk_rows, "parity", Precision::F32Storage)
+        .unwrap();
+    let mut v2_q = ChunkedDataset::open(&v2_q_path).unwrap();
+    let from_store = kkt_fitter(Compute::default()).fit(&mut v2_q).unwrap();
+    let mut mem =
+        MemoryCoxData::from_dataset_with(&qds, chunk_rows, Precision::F32Storage).unwrap();
+    let from_mem = kkt_fitter(Compute::default()).fit(&mut mem).unwrap();
+    for (a, b) in from_store.beta.iter().zip(from_mem.beta.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "v2 store vs memory source must be bitwise");
+    }
+
+    // Backend parity holds through the chunked engine as well.
+    let mut v1 = ChunkedDataset::open(&v1_path).unwrap();
+    let scalar =
+        kkt_fitter(Compute::default().backend(Backend::Scalar)).fit(&mut v1).unwrap();
+    let gap = max_abs_gap(&from_v1.beta, &scalar.beta);
+    assert!(gap <= 1e-8, "chunked simd vs scalar max|Δβ| = {gap:.3e}");
+
+    for p in [&v1_path, &v2_raw_path, &v2_q_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// `.fsds` v2 round-trip: geometry, survival columns, and meta survive
+/// the f32 encoding; v1 stores written by the same build stay readable
+/// with exact f64 cells (backward compatibility at the fit level is
+/// covered above — here the raw columns are checked).
+#[test]
+fn fsds_v2_round_trips_and_v1_stays_readable() {
+    let ds = generate(&SyntheticConfig { n: 90, p: 5, rho: 0.3, k: 2, s: 0.1, seed: 305 });
+    let v1_path = temp_path("roundtrip_v1");
+    let v2_path = temp_path("roundtrip_v2");
+    let mut rows = DatasetRows::new(&ds);
+    write_store(&mut rows, &v1_path, 32, "rt").unwrap();
+    let mut rows = DatasetRows::new(&ds);
+    write_store_with(&mut rows, &v2_path, 32, "rt", Precision::F32Storage).unwrap();
+
+    let mut v1 = ChunkedDataset::open(&v1_path).unwrap();
+    let mut v2 = ChunkedDataset::open(&v2_path).unwrap();
+    assert_eq!(v1.header().precision, Precision::F64);
+    assert_eq!(v2.header().precision, Precision::F32Storage);
+    assert_eq!(v1.meta().n, v2.meta().n);
+    assert_eq!(v1.meta().p, v2.meta().p);
+    // Survival columns never change representation.
+    assert_eq!(v1.meta().time, v2.meta().time);
+    assert_eq!(v1.meta().event, v2.meta().event);
+
+    let (mut c1, mut c2) = (Vec::new(), Vec::new());
+    for j in 0..v1.meta().p {
+        v1.load_col(j, &mut c1).unwrap();
+        v2.load_col(j, &mut c2).unwrap();
+        let quant: Vec<f64> = c1.iter().map(|&v| v as f32 as f64).collect();
+        assert_eq!(c2, quant, "column {j}: v2 must decode as the f32 round-trip of v1");
+    }
+    let _ = std::fs::remove_file(&v1_path);
+    let _ = std::fs::remove_file(&v2_path);
+}
