@@ -1,5 +1,5 @@
 //! The `bigfit` CLI subcommand: the tracked out-of-core workload →
-//! `BENCH_bigfit.json`, with two machine-independent gates.
+//! `BENCH_bigfit.json`, with three gates.
 //!
 //! The workload streams an n=1,000,000 × p=100 Appendix-C.2 synthetic
 //! dataset into a `.fsds` store (never materializing the matrix), runs
@@ -13,8 +13,13 @@
 //!   over the on-disk store and over the in-memory reference source must
 //!   agree bit for bit, and the streamed optimum must match the classic
 //!   in-memory surrogate CD fit to ≤1e-8.
+//! - **shard gate** — the same workload written as a sharded store and
+//!   fit by the parallel engine must be bitwise identical to the
+//!   single-store fit (≤1e-8 under f32 storage) *and* at least 1.5×
+//!   faster at `--shard-workers` (default 2) workers than the identical
+//!   engine at 1 worker, timed in the same run on the same machine.
 //!
-//! `--quick` scales n down for the CI `bigfit-smoke` job; both gates are
+//! `--quick` scales n down for the CI `bigfit-smoke` job; all gates are
 //! enforced at every scale (nonzero exit on violation, JSON always
 //! written first — it is the diagnostic).
 
@@ -24,8 +29,9 @@ use crate::data::synthetic::{generate, SyntheticConfig};
 use crate::error::{FastSurvivalError, Result};
 use crate::optim::{Objective, SurrogateKind};
 use crate::store::{
-    convert_synthetic_with, reference_fit_kkt, write_store_with, ChunkedDataset, CoxData,
-    DatasetRows, MemoryCoxData, StreamingFit, DEFAULT_CHUNK_ROWS,
+    convert_synthetic_sharded, convert_synthetic_with, reference_fit_kkt, write_store_with,
+    ChunkedDataset, CoxData, DatasetRows, MemoryCoxData, ShardedDataset, StreamingFit,
+    DEFAULT_CHUNK_ROWS,
 };
 use crate::util::args::Args;
 use crate::util::compute::{Compute, Precision};
@@ -41,6 +47,41 @@ const PARITY_TOL: f64 = 1e-8;
 /// the gate leaves three orders of magnitude of headroom under the
 /// classic-parity tolerance.
 const CROSS_SOURCE_TOL: f64 = 1e-12;
+/// Minimum sharded-engine speedup at the tracked worker count (the
+/// timed fit at `--shard-workers`, default 2, vs the same engine at 1
+/// worker — same run, same machine, mirroring the `simd_gate`
+/// discipline).
+const SHARD_SPEEDUP_MIN: f64 = 1.5;
+
+/// The shard gate's evidence: exactness (sharded vs single-store fit)
+/// and the parallel speedup, both measured in this run.
+struct ShardReport {
+    n_shards: usize,
+    shard_workers: usize,
+    fit_secs_workers_1: f64,
+    fit_secs_workers_n: f64,
+    speedup: f64,
+    sharded_vs_single_max_abs: f64,
+    bitwise_identical: bool,
+    /// Under `--precision f32` the gate relaxes bitwise to ≤[`PARITY_TOL`].
+    f32_storage: bool,
+}
+
+impl ShardReport {
+    fn parity_ok(&self) -> bool {
+        if self.f32_storage {
+            self.sharded_vs_single_max_abs <= PARITY_TOL
+        } else {
+            self.bitwise_identical
+        }
+    }
+    fn speedup_ok(&self) -> bool {
+        self.speedup >= SHARD_SPEEDUP_MIN
+    }
+    fn ok(&self) -> bool {
+        self.parity_ok() && self.speedup_ok()
+    }
+}
 
 struct ParityReport {
     n: usize,
@@ -118,6 +159,83 @@ fn parity_gate(dir: &Path, compute: Compute) -> Result<ParityReport> {
     })
 }
 
+/// The shard gate: write the tracked workload as a sharded store, fit
+/// it with the parallel engine at 1 worker and at `shard_workers`
+/// workers, and compare both against the single-store fit of the same
+/// configuration. All three fits skip the (serial, shared) warmup so
+/// the timed phase is exactly the distributed exact CD the gate is
+/// about; exactness is unaffected (all three start from β = 0).
+#[allow(clippy::too_many_arguments)]
+fn shard_gate(
+    cfg: &SyntheticConfig,
+    sharded_path: &Path,
+    chunk_rows: usize,
+    base: &StreamingFit,
+    compute: Compute,
+    single: &mut ChunkedDataset,
+    shards: usize,
+    shard_workers: usize,
+    keep: bool,
+) -> Result<ShardReport> {
+    let fitter = StreamingFit { sgd_blocks: Some(0), ..base.clone() };
+    let summary =
+        convert_synthetic_sharded(cfg, sharded_path, chunk_rows, compute.precision, shards)?;
+    println!(
+        "bigfit: sharded store — {} shard(s), generation {}, {:.1} MB",
+        summary.n_shards,
+        summary.generation,
+        summary.bytes as f64 / 1e6
+    );
+    let single_ref = fitter.fit(single)?;
+    let mut sharded = ShardedDataset::open(sharded_path)?;
+    let t = Instant::now();
+    let r1 = fitter.fit_sharded(&mut sharded, 1)?;
+    let fit_secs_workers_1 = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let rn = fitter.fit_sharded(&mut sharded, shard_workers)?;
+    let fit_secs_workers_n = t.elapsed().as_secs_f64();
+
+    let mut max_abs = 0.0_f64;
+    let mut bitwise = true;
+    for res in [&r1, &rn] {
+        for (a, b) in res.beta.iter().zip(single_ref.beta.iter()) {
+            max_abs = max_abs.max((a - b).abs());
+            if a.to_bits() != b.to_bits() {
+                bitwise = false;
+            }
+        }
+    }
+
+    if !keep {
+        if let Some(parent) = summary.manifest_path.parent() {
+            for e in &sharded.manifest().shards {
+                let _ = std::fs::remove_file(parent.join(&e.file));
+            }
+        }
+        let _ = std::fs::remove_file(&summary.manifest_path);
+    } else {
+        println!(
+            "bigfit: kept sharded store at {}",
+            summary.manifest_path.display()
+        );
+    }
+    let speedup = if fit_secs_workers_n > 0.0 {
+        fit_secs_workers_1 / fit_secs_workers_n
+    } else {
+        f64::INFINITY
+    };
+    Ok(ShardReport {
+        n_shards: summary.n_shards,
+        shard_workers,
+        fit_secs_workers_1,
+        fit_secs_workers_n,
+        speedup,
+        sharded_vs_single_max_abs: max_abs,
+        bitwise_identical: bitwise,
+        f32_storage: compute.precision == Precision::F32Storage,
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn render_json(
     quick: bool,
@@ -135,6 +253,7 @@ fn render_json(
     converged: bool,
     objective_value: f64,
     parity: &ParityReport,
+    shard: &ShardReport,
     passed: bool,
 ) -> String {
     let mut out = String::with_capacity(2048);
@@ -186,6 +305,31 @@ fn render_json(
     out.push_str(",\n    \"tol\": ");
     json::write_f64(&mut out, PARITY_TOL);
     out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", parity.ok()));
+    out.push_str("  \"shard_gate\": {\n");
+    out.push_str(&format!(
+        "    \"n_shards\": {}, \"shard_workers\": {},\n",
+        shard.n_shards, shard.shard_workers
+    ));
+    out.push_str("    \"fit_secs_workers_1\": ");
+    json::write_f64(&mut out, shard.fit_secs_workers_1);
+    out.push_str(",\n    \"fit_secs_workers_n\": ");
+    json::write_f64(&mut out, shard.fit_secs_workers_n);
+    out.push_str(",\n    \"speedup\": ");
+    json::write_f64(&mut out, shard.speedup);
+    out.push_str(",\n    \"min_speedup\": ");
+    json::write_f64(&mut out, SHARD_SPEEDUP_MIN);
+    out.push_str(",\n    \"sharded_vs_single_max_abs\": ");
+    json::write_f64(&mut out, shard.sharded_vs_single_max_abs);
+    out.push_str(&format!(
+        ",\n    \"bitwise_identical\": {},\n    \"f32_storage\": {},\n",
+        shard.bitwise_identical, shard.f32_storage
+    ));
+    out.push_str(&format!(
+        "    \"parity_passed\": {}, \"speedup_passed\": {},\n",
+        shard.parity_ok(),
+        shard.speedup_ok()
+    ));
+    out.push_str(&format!("    \"passed\": {}\n  }},\n", shard.ok()));
     out.push_str(&format!("  \"passed\": {passed}\n}}\n"));
     out
 }
@@ -256,6 +400,38 @@ pub fn run(args: &Args) -> Result<()> {
         fit_secs, res.sgd_steps, res.sweeps, res.objective_value, res.trace.converged
     );
 
+    // Shard gate: same workload through the sharded parallel engine,
+    // exactness vs the single-store fit plus the 1-vs-N-worker speedup.
+    // Runs before the RSS read so the memory gate covers it too.
+    let shards = args.get_or("shards", 2usize);
+    let shard_workers = args.get_or("shard-workers", 2usize);
+    println!(
+        "bigfit: shard gate ({shards} shard(s), {shard_workers} vs 1 worker(s), \
+         no-warmup exact fits)..."
+    );
+    let sharded_path = dir.join(format!("bigfit_sharded_n{n}_p{p}.fsds"));
+    let shard = shard_gate(
+        &cfg,
+        &sharded_path,
+        chunk_rows,
+        &fitter,
+        compute,
+        &mut store,
+        shards,
+        shard_workers,
+        keep,
+    )?;
+    println!(
+        "bigfit: sharded fit {:.1}s at 1 worker -> {:.1}s at {} workers \
+         ({:.2}x, need >={SHARD_SPEEDUP_MIN}x); vs single max|Δβ| = {:.3e} (bitwise: {})",
+        shard.fit_secs_workers_1,
+        shard.fit_secs_workers_n,
+        shard.shard_workers,
+        shard.speedup,
+        shard.sharded_vs_single_max_abs,
+        shard.bitwise_identical
+    );
+
     // Memory gate.
     let rss_bound = dataset_bytes / 2;
     let peak_rss = peak_rss_bytes();
@@ -272,7 +448,7 @@ pub fn run(args: &Args) -> Result<()> {
         None => println!("bigfit: peak RSS unavailable on this platform — memory gate skipped"),
     }
 
-    let passed = rss_ok && parity.ok();
+    let passed = rss_ok && parity.ok() && shard.ok();
     let doc = render_json(
         quick,
         &cfg,
@@ -289,6 +465,7 @@ pub fn run(args: &Args) -> Result<()> {
         res.trace.converged,
         res.objective_value,
         &parity,
+        &shard,
         passed,
     );
     std::fs::write(&out_path, &doc)
@@ -322,6 +499,19 @@ pub fn run(args: &Args) -> Result<()> {
                 parity.vs_classic_max_abs
             ));
         }
+        if !shard.parity_ok() {
+            why.push(format!(
+                "sharded fit diverged from the single-store fit: max|Δβ| = {:.3e} \
+                 (bitwise: {})",
+                shard.sharded_vs_single_max_abs, shard.bitwise_identical
+            ));
+        }
+        if !shard.speedup_ok() {
+            why.push(format!(
+                "sharded speedup {:.2}x at {} workers below the {SHARD_SPEEDUP_MIN}x floor",
+                shard.speedup, shard.shard_workers
+            ));
+        }
         return Err(FastSurvivalError::PerfRegression(format!(
             "bigfit gate failed: {}",
             why.join("; ")
@@ -334,6 +524,19 @@ pub fn run(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
 
+    fn sample_shard_report() -> ShardReport {
+        ShardReport {
+            n_shards: 2,
+            shard_workers: 2,
+            fit_secs_workers_1: 4.0,
+            fit_secs_workers_n: 2.0,
+            speedup: 2.0,
+            sharded_vs_single_max_abs: 0.0,
+            bitwise_identical: true,
+            f32_storage: false,
+        }
+    }
+
     #[test]
     fn json_document_parses_and_carries_gates() {
         let parity = ParityReport {
@@ -344,10 +547,12 @@ mod tests {
             vs_classic_max_abs: 3.2e-10,
         };
         assert!(parity.ok());
+        let shard = sample_shard_report();
+        assert!(shard.ok());
         let cfg = SyntheticConfig { n: 1000, p: 10, rho: 0.2, k: 3, s: 0.1, seed: 42 };
         let doc = render_json(
             true, &cfg, 128, 80_000, 80_000, 40_000, Some(30_000), true, 1.5, 2.5, 6, 8,
-            true, 123.4, &parity, true,
+            true, 123.4, &parity, &shard, true,
         );
         let parsed = json::parse(&doc).unwrap();
         assert!(parsed.get("passed").unwrap().as_bool().unwrap());
@@ -357,14 +562,43 @@ mod tests {
         let pg = parsed.get("parity_gate").unwrap();
         assert!(pg.get("bitwise_identical").unwrap().as_bool().unwrap());
         assert!(pg.get("passed").unwrap().as_bool().unwrap());
+        let sg = parsed.get("shard_gate").unwrap();
+        assert_eq!(sg.get("n_shards").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sg.get("shard_workers").unwrap().as_usize().unwrap(), 2);
+        assert!((sg.get("speedup").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        assert!(
+            (sg.get("min_speedup").unwrap().as_f64().unwrap() - SHARD_SPEEDUP_MIN).abs()
+                < 1e-12
+        );
+        assert!(sg.get("bitwise_identical").unwrap().as_bool().unwrap());
+        assert!(sg.get("passed").unwrap().as_bool().unwrap());
         // An exceeded bound flips both gate and top-level verdicts.
         let doc = render_json(
             true, &cfg, 128, 80_000, 80_000, 40_000, Some(50_000), false, 1.5, 2.5, 6, 8,
-            true, 123.4, &parity, false,
+            true, 123.4, &parity, &shard, false,
         );
         let parsed = json::parse(&doc).unwrap();
         assert!(!parsed.get("passed").unwrap().as_bool().unwrap());
         assert!(!parsed.get("memory_gate").unwrap().get("passed").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn shard_report_gates_each_axis() {
+        let mut s = sample_shard_report();
+        assert!(s.ok());
+        // A sub-floor speedup fails even with perfect parity.
+        s.speedup = 1.2;
+        assert!(!s.ok() && s.parity_ok());
+        s.speedup = 2.0;
+        // f64 storage demands bitwise identity, not just ≤1e-8.
+        s.bitwise_identical = false;
+        s.sharded_vs_single_max_abs = 1e-12;
+        assert!(!s.parity_ok());
+        // f32 storage relaxes the gate to the ≤1e-8 tolerance.
+        s.f32_storage = true;
+        assert!(s.parity_ok() && s.ok());
+        s.sharded_vs_single_max_abs = 1e-6;
+        assert!(!s.parity_ok());
     }
 
     #[test]

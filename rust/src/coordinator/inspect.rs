@@ -3,10 +3,18 @@
 //! segment manifest, and any stray files a crash left behind. The
 //! read-only companion to `convert`/`append`: it never modifies the
 //! store, it only reports what a reader would (and would not) see.
+//!
+//! Sharded stores (written by `convert --shards N`) are inspected
+//! through their manifest instead: pass the `{out}.shards.json` path
+//! (or the `{out}` stem it sits next to) and every shard's header
+//! checksum and row count is verified against the manifest, then the
+//! assembled [`ShardedDataset`] view is opened with full validation.
 
 use crate::error::{FastSurvivalError, Result};
 use crate::live::manifest::{header_checksum, manifest_path, segment_path, Manifest};
-use crate::store::{ChunkedDataset, CoxData};
+use crate::store::{
+    shard_manifest_path, ChunkedDataset, CoxData, ShardEntry, ShardManifest, ShardedDataset,
+};
 use crate::util::args::Args;
 use std::path::{Path, PathBuf};
 
@@ -204,11 +212,195 @@ fn find_stray_files(store: &Path, committed: &[u64]) -> Result<Vec<PathBuf>> {
     Ok(stray)
 }
 
+/// One shard file's inspection row.
+#[derive(Clone, Debug)]
+pub struct ShardFileReport {
+    pub seq: usize,
+    pub path: PathBuf,
+    /// Rows the manifest claims for this shard.
+    pub rows: usize,
+    /// First sorted global row index the manifest claims.
+    pub row0: usize,
+    /// Header checksum verified (stored == computed == manifest entry),
+    /// the file opened with full validation, and its row count matches
+    /// the manifest.
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+/// Everything `inspect` establishes about a sharded store.
+#[derive(Clone, Debug)]
+pub struct ShardInspectReport {
+    pub manifest_path: PathBuf,
+    pub generation: u64,
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub precision: &'static str,
+    pub shards: Vec<ShardFileReport>,
+    /// The assembled [`ShardedDataset`] (all shards stitched back into
+    /// the global chunk geometry) opened with full validation.
+    pub assembled_ok: bool,
+    pub assembled_error: Option<String>,
+}
+
+impl ShardInspectReport {
+    /// Every shard verified and the assembled view opens cleanly.
+    pub fn healthy(&self) -> bool {
+        self.assembled_ok && self.shards.iter().all(|s| s.ok)
+    }
+}
+
+/// Verify one shard file against its manifest entry: header checksum
+/// (stored vs computed vs the manifest's copy), then a full-validation
+/// open cross-checking the row count the manifest claims.
+fn inspect_one_shard(path: &Path, entry: &ShardEntry) -> (bool, Option<String>) {
+    let (stored, computed) = match header_checksum(path) {
+        Ok(pair) => pair,
+        Err(e) => return (false, Some(e.to_string())),
+    };
+    if stored != computed {
+        return (
+            false,
+            Some(format!("header checksum stored {stored:#018x} != computed {computed:#018x}")),
+        );
+    }
+    if computed != entry.checksum {
+        return (
+            false,
+            Some(format!(
+                "header checksum {computed:#018x} != manifest entry {:#018x}",
+                entry.checksum
+            )),
+        );
+    }
+    match ChunkedDataset::open(path) {
+        Ok(ds) => {
+            let n = ds.meta().n;
+            if n == entry.rows {
+                (true, None)
+            } else {
+                (false, Some(format!("manifest says {} rows, file holds {n}", entry.rows)))
+            }
+        }
+        Err(e) => (false, Some(e.to_string())),
+    }
+}
+
+/// Inspect a sharded store (by its stem path, next to which the
+/// `.shards.json` manifest lives) without modifying anything on disk.
+pub fn inspect_shards(store: &Path) -> Result<ShardInspectReport> {
+    let mpath = shard_manifest_path(store);
+    let manifest = ShardManifest::load(&mpath)?.ok_or_else(|| {
+        FastSurvivalError::Store(format!("no shard manifest at {}", mpath.display()))
+    })?;
+    let parent = mpath.parent().unwrap_or_else(|| Path::new("."));
+    let shards: Vec<ShardFileReport> = manifest
+        .shards
+        .iter()
+        .map(|entry| {
+            let sp = parent.join(&entry.file);
+            let (ok, error) = inspect_one_shard(&sp, entry);
+            ShardFileReport {
+                seq: entry.seq,
+                path: sp,
+                rows: entry.rows,
+                row0: entry.row0,
+                ok,
+                error,
+            }
+        })
+        .collect();
+    // The assembled view pays the same O(n·p) stats pass a fit would,
+    // so a HEALTHY verdict means `bigfit --shards` will actually run.
+    let (assembled_ok, assembled_error) = match ShardedDataset::open(store) {
+        Ok(_) => (true, None),
+        Err(e) => (false, Some(e.to_string())),
+    };
+    Ok(ShardInspectReport {
+        manifest_path: mpath,
+        generation: manifest.generation,
+        name: manifest.name,
+        n: manifest.n,
+        p: manifest.p,
+        chunk_rows: manifest.chunk_rows,
+        precision: manifest.precision.name(),
+        shards,
+        assembled_ok,
+        assembled_error,
+    })
+}
+
+/// Print + verdict for a sharded store; nonzero exit on any unhealthy
+/// shard (or a broken assembled view).
+fn run_sharded(store: &Path) -> Result<()> {
+    let report = inspect_shards(store)?;
+    println!(
+        "sharded store: {} (generation {})",
+        report.manifest_path.display(),
+        report.generation
+    );
+    println!(
+        "geometry: n={} p={} chunk_rows={} precision={} name={:?} shards={}",
+        report.n,
+        report.p,
+        report.chunk_rows,
+        report.precision,
+        report.name,
+        report.shards.len()
+    );
+    for s in &report.shards {
+        match (&s.ok, &s.error) {
+            (true, _) => println!(
+                "  shard{:03}: rows {}..{} [OK] {}",
+                s.seq,
+                s.row0,
+                s.row0 + s.rows,
+                s.path.display()
+            ),
+            (false, e) => println!(
+                "  shard{:03}: rows {}..{} [FAILED: {}]",
+                s.seq,
+                s.row0,
+                s.row0 + s.rows,
+                e.as_deref().unwrap_or("unknown")
+            ),
+        }
+    }
+    match (&report.assembled_ok, &report.assembled_error) {
+        (true, _) => println!("assembled: opens cleanly ({} rows total)", report.n),
+        (false, Some(e)) => println!("assembled: FAILED validation — {e}"),
+        (false, None) => println!("assembled: FAILED validation"),
+    }
+    println!("verdict: {}", if report.healthy() { "HEALTHY" } else { "UNHEALTHY" });
+    if !report.healthy() {
+        return Err(FastSurvivalError::Store(format!(
+            "sharded store {} failed inspection",
+            report.manifest_path.display()
+        )));
+    }
+    Ok(())
+}
+
 /// The `inspect` CLI subcommand.
 pub fn run(args: &Args) -> Result<()> {
     let store = args.get("store").ok_or_else(|| {
-        FastSurvivalError::InvalidConfig("inspect requires --store <file.fsds>".into())
+        FastSurvivalError::InvalidConfig(
+            "inspect requires --store <file.fsds | file.fsds.shards.json>".into(),
+        )
     })?;
+    // A sharded store is addressed by its manifest path or by the stem
+    // the manifest sits next to (`convert --shards` writes no base file
+    // at the stem, so an absent stem with a manifest present is the
+    // sharded case, not a missing store).
+    if let Some(stem) = store.strip_suffix(".shards.json") {
+        return run_sharded(Path::new(stem));
+    }
+    let path = Path::new(store);
+    if !path.exists() && shard_manifest_path(path).exists() {
+        return run_sharded(path);
+    }
     let report = inspect(Path::new(store))?;
     println!("store: {} ({:.1} MB)", report.path.display(), report.file_bytes as f64 / 1e6);
     println!(
@@ -355,6 +547,80 @@ mod tests {
             Ok(r) => assert!(!r.healthy()),
             Err(_) => {}
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn seed_sharded_store(dir: &Path, shards: usize) -> PathBuf {
+        let out = dir.join("sh.fsds");
+        let ds =
+            generate(&SyntheticConfig { n: 120, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 11 });
+        let mut rows = DatasetRows::new(&ds);
+        crate::store::write_sharded_store(
+            &mut rows,
+            &out,
+            32,
+            "sh",
+            crate::util::compute::Precision::F64,
+            shards,
+        )
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn healthy_sharded_store_passes() {
+        let dir = temp_dir("shards_ok");
+        let out = seed_sharded_store(&dir, 3);
+        let r = inspect_shards(&out).unwrap();
+        assert!(r.healthy(), "{r:?}");
+        assert_eq!(r.n, 120);
+        assert_eq!(r.shards.len(), 3);
+        assert_eq!(r.shards.iter().map(|s| s.rows).sum::<usize>(), 120);
+        assert!(r.assembled_ok);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_shard_file_is_unhealthy() {
+        let dir = temp_dir("shards_bad");
+        let out = seed_sharded_store(&dir, 3);
+        let manifest = ShardManifest::load(&shard_manifest_path(&out)).unwrap().unwrap();
+        let victim = dir.join(&manifest.shards[1].file);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[9] ^= 0xFF; // inside the checksummed header area
+        std::fs::write(&victim, &bytes).unwrap();
+        let r = inspect_shards(&out).unwrap();
+        assert!(!r.healthy());
+        assert!(!r.shards[1].ok, "{:?}", r.shards[1]);
+        assert!(r.shards[0].ok && r.shards[2].ok, "only the tampered shard fails");
+        // A missing shard file is caught the same way.
+        std::fs::remove_file(&victim).unwrap();
+        let r = inspect_shards(&out).unwrap();
+        assert!(!r.shards[1].ok && !r.assembled_ok);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_row_count_mismatch_vs_manifest_is_unhealthy() {
+        let dir = temp_dir("shards_rows");
+        let out = seed_sharded_store(&dir, 2);
+        let mpath = shard_manifest_path(&out);
+        // Shrink the last shard's claim (and n, keeping the manifest
+        // structurally valid) so only the file-vs-manifest cross-check
+        // can catch the drift.
+        let mut manifest = ShardManifest::load(&mpath).unwrap().unwrap();
+        manifest.shards.last_mut().unwrap().rows -= 1;
+        manifest.n -= 1;
+        manifest.save(&mpath).unwrap();
+        let r = inspect_shards(&out).unwrap();
+        assert!(!r.healthy());
+        let last = r.shards.last().unwrap();
+        assert!(!last.ok);
+        assert!(
+            last.error.as_deref().unwrap_or("").contains("rows"),
+            "row-count mismatch should be named: {:?}",
+            last.error
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

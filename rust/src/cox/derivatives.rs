@@ -290,6 +290,217 @@ pub fn coord_d1_d2_col_b(
     (d1 - xt_delta_l, d2)
 }
 
+// --------------------------------------------------------------------
+// Mergeable tiled kernels: exact risk-set merging for sharded fitting.
+//
+// The flat kernels above carry one running prefix (S0, S1[, S2]) across
+// all n rows, so their floating-point result depends on every prior row
+// — a partition across shard workers cannot reproduce it bitwise. The
+// tiled kernels below fix a CANONICAL decomposition instead: tie-group-
+// aligned row tiles of [`MERGE_TILE_ROWS`] samples (data-derived only —
+// never shard count, worker count, or thread count). Per column:
+//
+//   Phase A (parallelizable per tile): per-group power-sum subtotals
+//     accumulated from zero, plus each tile's component-wise total.
+//   Carry fold (serial, O(#tiles)): exclusive prefix of tile totals in
+//     tile order — the only serial work, ~n/4096 additions.
+//   Phase B (parallelizable per tile): replay the running prefix inside
+//     the tile as carry + local prefix, emitting event-group
+//     contributions into per-tile accumulators from zero.
+//   Final fold (serial, O(#tiles)): per-tile emissions in tile order.
+//
+// Every operation is pinned to a tile or to the canonical tile order, so
+// ANY partition of whole tiles across workers — including the single-
+// store "one worker owns everything" case — produces bitwise-identical
+// derivatives. Versus the flat kernels the result differs only by
+// prefix reassociation (≤1e-12 relative; the vs-classic parity gates
+// are KKT-certified at 1e-8).
+
+/// Canonical tile size (rows) for the mergeable kernels. A constant —
+/// NOT the tunable `Compute::block_rows` — so sharded and single-store
+/// fits always agree on the decomposition.
+pub(crate) const MERGE_TILE_ROWS: usize = 4096;
+
+/// Canonical tile cuts (tie-group index boundaries) for a problem's
+/// groups: [`kernels::row_tiles`] at [`MERGE_TILE_ROWS`].
+pub(crate) fn merge_tiles(groups: &[TieGroup]) -> Vec<usize> {
+    kernels::row_tiles(groups, MERGE_TILE_ROWS)
+}
+
+/// One risk-set power-sum triple (Σw, Σw·x, Σw·x²) — a per-group or
+/// per-tile subtotal, and the mergeable carry between tiles.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct RiskPartials {
+    pub s0: f64,
+    pub s1: f64,
+    pub s2: f64,
+}
+
+/// Reusable per-column scratch for the tiled merged pass: per-group
+/// subtotals plus per-tile totals, sized on first use.
+#[derive(Default, Debug)]
+pub struct MergeScratch {
+    gs: Vec<RiskPartials>,
+    ts: Vec<RiskPartials>,
+}
+
+/// Phase A for one tile (groups `g_lo..g_hi`): per-group subtotals
+/// accumulated from zero into `gs` (indexed `gi - g_lo`), returning the
+/// tile's component-wise total in group order. `w`/`col` are slices
+/// whose index 0 is global row `row0` (a shard worker passes its own
+/// range; the single-store path passes the full column with `row0 = 0`).
+/// Backend contract matches the flat kernels: lane sums only inside tie
+/// groups of ≥ [`kernels::LANE_MIN`] samples.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile_scan_b(
+    backend: KernelBackend,
+    groups: &[TieGroup],
+    g_lo: usize,
+    g_hi: usize,
+    w: &[f64],
+    col: &[f64],
+    row0: usize,
+    need_s2: bool,
+    gs: &mut [RiskPartials],
+) -> RiskPartials {
+    debug_assert_eq!(gs.len(), g_hi - g_lo);
+    let mut total = RiskPartials::default();
+    for gi in g_lo..g_hi {
+        let g = &groups[gi];
+        let (a, b) = (g.start - row0, g.end - row0);
+        let mut part = RiskPartials::default();
+        if backend == KernelBackend::Simd && b - a >= kernels::LANE_MIN {
+            if need_s2 {
+                let (gs0, gs1, gs2) = kernels::sum3(&w[a..b], &col[a..b]);
+                part = RiskPartials { s0: gs0, s1: gs1, s2: gs2 };
+            } else {
+                let (gs0, gs1) = kernels::sum2(&w[a..b], &col[a..b]);
+                part = RiskPartials { s0: gs0, s1: gs1, s2: 0.0 };
+            }
+        } else if need_s2 {
+            for k in a..b {
+                let wk = w[k];
+                let x = col[k];
+                part.s0 += wk;
+                part.s1 += wk * x;
+                part.s2 += wk * x * x;
+            }
+        } else {
+            for k in a..b {
+                let wk = w[k];
+                part.s0 += wk;
+                part.s1 += wk * col[k];
+            }
+        }
+        gs[gi - g_lo] = part;
+        total.s0 += part.s0;
+        total.s1 += part.s1;
+        if need_s2 {
+            total.s2 += part.s2;
+        }
+    }
+    total
+}
+
+/// Phase B for one tile: replay the running prefix as `carry` + local
+/// per-group subtotals, accumulating the tile's event-group emissions
+/// `(Σ ne·m1, Σ ne·(m2 − m1²))` from zero in group order.
+pub(crate) fn tile_emit(
+    groups: &[TieGroup],
+    g_lo: usize,
+    g_hi: usize,
+    carry: RiskPartials,
+    gs: &[RiskPartials],
+    need_s2: bool,
+) -> (f64, f64) {
+    debug_assert_eq!(gs.len(), g_hi - g_lo);
+    let mut run = carry;
+    let (mut e1, mut e2) = (0.0_f64, 0.0_f64);
+    for gi in g_lo..g_hi {
+        let part = gs[gi - g_lo];
+        run.s0 += part.s0;
+        run.s1 += part.s1;
+        if need_s2 {
+            run.s2 += part.s2;
+        }
+        let g = &groups[gi];
+        if g.n_events > 0 {
+            let ne = g.n_events as f64;
+            let m1 = run.s1 / run.s0;
+            e1 += ne * m1;
+            if need_s2 {
+                let m2 = run.s2 / run.s0;
+                e2 += ne * (m2 - m1 * m1);
+            }
+        }
+    }
+    (e1, e2)
+}
+
+/// Exclusive prefix fold of per-tile totals in tile order — the serial
+/// carry chain between Phase A and Phase B. `carries[t]` is the risk-set
+/// prefix entering tile `t`; component-wise f64 adds in tile order.
+pub(crate) fn fold_carries(ts: &[RiskPartials], need_s2: bool) -> Vec<RiskPartials> {
+    let mut carries = Vec::with_capacity(ts.len());
+    let mut run = RiskPartials::default();
+    for t in ts {
+        carries.push(run);
+        run.s0 += t.s0;
+        run.s1 += t.s1;
+        if need_s2 {
+            run.s2 += t.s2;
+        }
+    }
+    carries
+}
+
+/// Merged-tile d1 (and d2 when `need_d2`) over one full column: the
+/// canonical tiled decomposition run serially by one caller. Bitwise
+/// identical to the same tiles fanned across any number of shard
+/// workers, because every float lands in a per-tile accumulator or the
+/// canonical tile-order folds. `tile_cuts` comes from [`merge_tiles`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn coord_d1_d2_col_merged_b(
+    backend: KernelBackend,
+    groups: &[TieGroup],
+    tile_cuts: &[usize],
+    w: &[f64],
+    col: &[f64],
+    xt_delta_l: f64,
+    need_d2: bool,
+    scratch: &mut MergeScratch,
+) -> (f64, f64) {
+    let ntiles = tile_cuts.len().saturating_sub(1);
+    scratch.gs.resize(groups.len(), RiskPartials::default());
+    scratch.ts.clear();
+    scratch.ts.reserve(ntiles);
+    for t in 0..ntiles {
+        let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
+        let total = tile_scan_b(
+            backend,
+            groups,
+            g_lo,
+            g_hi,
+            w,
+            col,
+            0,
+            need_d2,
+            &mut scratch.gs[g_lo..g_hi],
+        );
+        scratch.ts.push(total);
+    }
+    let carries = fold_carries(&scratch.ts, need_d2);
+    let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
+    for t in 0..ntiles {
+        let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
+        let (e1, e2) =
+            tile_emit(groups, g_lo, g_hi, carries[t], &scratch.gs[g_lo..g_hi], need_d2);
+        d1 += e1;
+        d2 += e2;
+    }
+    (d1 - xt_delta_l, d2)
+}
+
 /// Full first/second/third derivatives (Eqs. 7–9) in one O(n) pass.
 pub fn coord_derivs(problem: &CoxProblem, state: &CoxState, l: usize) -> CoordDerivs {
     coord_derivs_b(problem, state, l, default_backend())
@@ -1045,6 +1256,103 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn merged_tiles_match_flat_kernels() {
+        use crate::util::compute::KernelBackend;
+        // The canonical tiled decomposition reassociates the running
+        // prefix at tile boundaries only — ≤1e-12 of the flat kernels,
+        // for both backends, tied and untied data, d1-only and d1+d2.
+        for &ties in &[false, true] {
+            let pr = random_problem(700, 5, 97, ties);
+            let mut rng = Rng::new(98);
+            let beta: Vec<f64> = (0..5).map(|_| rng.normal() * 0.3).collect();
+            let st = CoxState::from_beta(&pr, &beta);
+            // Small tile size so the test exercises several tiles.
+            let cuts = kernels::row_tiles(&pr.groups, 64);
+            assert!(cuts.len() > 3, "want multiple tiles, got {cuts:?}");
+            let mut scratch = MergeScratch::default();
+            for &backend in &[KernelBackend::Scalar, KernelBackend::Simd] {
+                for l in 0..pr.p() {
+                    let col = pr.x.col(l);
+                    let xd = pr.xt_delta[l];
+                    let flat1 = coord_d1_col_b(backend, &pr.groups, &st.w, col, xd);
+                    let (m1, m2_zero) = coord_d1_d2_col_merged_b(
+                        backend, &pr.groups, &cuts, &st.w, col, xd, false, &mut scratch,
+                    );
+                    let tol = |a: f64| 1e-12 * a.abs().max(1.0);
+                    assert!((m1 - flat1).abs() <= tol(flat1), "l={l}: {m1} vs {flat1}");
+                    assert_eq!(m2_zero, 0.0);
+                    let (f1, f2) = coord_d1_d2_col_b(backend, &pr.groups, &st.w, col, xd);
+                    let (g1, g2) = coord_d1_d2_col_merged_b(
+                        backend, &pr.groups, &cuts, &st.w, col, xd, true, &mut scratch,
+                    );
+                    assert!((g1 - f1).abs() <= tol(f1), "l={l}: {g1} vs {f1}");
+                    assert!((g2 - f2).abs() <= tol(f2), "l={l}: {g2} vs {f2}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merged_tiles_are_partition_invariant() {
+        use crate::util::compute::KernelBackend;
+        // Splitting the SAME canonical tiles across simulated workers and
+        // folding carries/emissions in tile order must be bitwise equal
+        // to the serial merged pass — the property the sharded engine
+        // stands on.
+        let pr = random_problem(500, 3, 101, true);
+        let st = CoxState::from_beta(&pr, &[0.2, -0.1, 0.3]);
+        let cuts = kernels::row_tiles(&pr.groups, 48);
+        let ntiles = cuts.len() - 1;
+        assert!(ntiles >= 4);
+        let mut scratch = MergeScratch::default();
+        for l in 0..pr.p() {
+            let col = pr.x.col(l);
+            let xd = pr.xt_delta[l];
+            let serial = coord_d1_d2_col_merged_b(
+                KernelBackend::Simd, &pr.groups, &cuts, &st.w, col, xd, true, &mut scratch,
+            );
+            for workers in [1usize, 2, 3, 4] {
+                // Simulated fan-out: each "worker" owns a contiguous tile
+                // range and sees only its own row slice.
+                let mut gs = vec![RiskPartials::default(); pr.groups.len()];
+                let mut ts = vec![RiskPartials::default(); ntiles];
+                let per = ntiles.div_ceil(workers);
+                for wk in 0..workers {
+                    let (t_lo, t_hi) = (wk * per, ((wk + 1) * per).min(ntiles));
+                    for t in t_lo..t_hi {
+                        let (g_lo, g_hi) = (cuts[t], cuts[t + 1]);
+                        let row0 = pr.groups[g_lo].start;
+                        let row1 = pr.groups[g_hi - 1].end;
+                        ts[t] = tile_scan_b(
+                            KernelBackend::Simd,
+                            &pr.groups,
+                            g_lo,
+                            g_hi,
+                            &st.w[row0..row1],
+                            &col[row0..row1],
+                            row0,
+                            true,
+                            &mut gs[g_lo..g_hi],
+                        );
+                    }
+                }
+                let carries = fold_carries(&ts, true);
+                let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
+                for t in 0..ntiles {
+                    let (g_lo, g_hi) = (cuts[t], cuts[t + 1]);
+                    let (e1, e2) =
+                        tile_emit(&pr.groups, g_lo, g_hi, carries[t], &gs[g_lo..g_hi], true);
+                    d1 += e1;
+                    d2 += e2;
+                }
+                d1 -= xd;
+                assert_eq!(d1.to_bits(), serial.0.to_bits(), "workers={workers} l={l}");
+                assert_eq!(d2.to_bits(), serial.1.to_bits(), "workers={workers} l={l}");
             }
         }
     }

@@ -10,8 +10,15 @@ use crate::util::compute::{default_backend, KernelBackend, LANES};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// How many incremental coordinate updates before a full recompute of w
-/// from η (bounds multiplicative drift).
-const REFRESH_EVERY: usize = 512;
+/// from η (bounds multiplicative drift). `pub(crate)` so the sharded
+/// engine — which owns its η/w as worker-sliced vectors rather than a
+/// [`CoxState`] — replicates the identical rebase schedule.
+pub(crate) const REFRESH_EVERY: usize = 512;
+
+/// Rebase when |max η − shift| exceeds this span (overflow guard upward,
+/// w-underflow guard downward). Shared with the sharded engine for the
+/// same reason as [`REFRESH_EVERY`].
+pub(crate) const REBASE_SPAN: f64 = 30.0;
 
 /// Process-global monotone counter behind [`CoxState::version`]. Every
 /// mutation of any state takes a fresh value, so version tags never
@@ -173,8 +180,8 @@ impl CoxState {
         // Rebase if η drifted far from the shift (overflow guard upward,
         // w-underflow guard downward) or after many incremental
         // multiplies (precision guard).
-        if max_eta - self.shift > 30.0
-            || max_eta - self.shift < -30.0
+        if max_eta - self.shift > REBASE_SPAN
+            || max_eta - self.shift < -REBASE_SPAN
             || self.updates_since_refresh >= REFRESH_EVERY
         {
             self.refresh_w();
@@ -183,118 +190,14 @@ impl CoxState {
 
     /// The scalar re-exponentiation scan; returns the exact max η.
     fn apply_coord_scalar(&mut self, col: &[f64], binary: bool, delta: f64) -> f64 {
-        let mut max_eta = f64::NEG_INFINITY;
-        if binary {
-            // Binary column (the Sec-4.2 binarized regime): every nonzero
-            // entry shares one multiplicative factor exp(Δ) — one exp()
-            // for the whole update instead of one per sample.
-            let factor = delta.exp();
-            for (k, &xkl) in col.iter().enumerate() {
-                if xkl != 0.0 {
-                    self.eta[k] += delta;
-                    self.w[k] *= factor;
-                }
-                if self.eta[k] > max_eta {
-                    max_eta = self.eta[k];
-                }
-            }
-        } else {
-            for (k, &xkl) in col.iter().enumerate() {
-                if xkl != 0.0 {
-                    let z = delta * xkl;
-                    self.eta[k] += z;
-                    self.w[k] *= if z.abs() < 1e-4 {
-                        1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
-                    } else {
-                        z.exp()
-                    };
-                }
-                if self.eta[k] > max_eta {
-                    max_eta = self.eta[k];
-                }
-            }
-        }
-        max_eta
+        apply_coord_scalar_slice(col, binary, delta, &mut self.eta, &mut self.w)
     }
 
-    /// Lane-unrolled re-exponentiation: [`LANES`] independent update
-    /// chains plus [`LANES`] max-η trackers folded at the end with the
-    /// same `>` comparisons the scalar scan makes (max is associative and
-    /// `>` never admits NaN in either order), so the result is bitwise
-    /// equal to [`CoxState::apply_coord_scalar`].
+    /// Lane-unrolled re-exponentiation; bitwise equal to
+    /// [`CoxState::apply_coord_scalar`] (see
+    /// [`apply_coord_lanes_slice`]).
     fn apply_coord_lanes(&mut self, col: &[f64], binary: bool, delta: f64) -> f64 {
-        let n = col.len();
-        let whole = n - n % LANES;
-        let mut maxes = [f64::NEG_INFINITY; LANES];
-        if binary {
-            let factor = delta.exp();
-            let mut k = 0;
-            while k < whole {
-                for (j, m) in maxes.iter_mut().enumerate() {
-                    let i = k + j;
-                    if col[i] != 0.0 {
-                        self.eta[i] += delta;
-                        self.w[i] *= factor;
-                    }
-                    if self.eta[i] > *m {
-                        *m = self.eta[i];
-                    }
-                }
-                k += LANES;
-            }
-            for i in whole..n {
-                if col[i] != 0.0 {
-                    self.eta[i] += delta;
-                    self.w[i] *= factor;
-                }
-                if self.eta[i] > maxes[0] {
-                    maxes[0] = self.eta[i];
-                }
-            }
-        } else {
-            let mut k = 0;
-            while k < whole {
-                for (j, m) in maxes.iter_mut().enumerate() {
-                    let i = k + j;
-                    let xkl = col[i];
-                    if xkl != 0.0 {
-                        let z = delta * xkl;
-                        self.eta[i] += z;
-                        self.w[i] *= if z.abs() < 1e-4 {
-                            1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
-                        } else {
-                            z.exp()
-                        };
-                    }
-                    if self.eta[i] > *m {
-                        *m = self.eta[i];
-                    }
-                }
-                k += LANES;
-            }
-            for i in whole..n {
-                let xkl = col[i];
-                if xkl != 0.0 {
-                    let z = delta * xkl;
-                    self.eta[i] += z;
-                    self.w[i] *= if z.abs() < 1e-4 {
-                        1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
-                    } else {
-                        z.exp()
-                    };
-                }
-                if self.eta[i] > maxes[0] {
-                    maxes[0] = self.eta[i];
-                }
-            }
-        }
-        let mut max_eta = f64::NEG_INFINITY;
-        for &m in &maxes {
-            if m > max_eta {
-                max_eta = m;
-            }
-        }
-        max_eta
+        apply_coord_lanes_slice(col, binary, delta, &mut self.eta, &mut self.w)
     }
 
     /// Replace β wholesale (full-vector methods like Newton), recomputing
@@ -304,6 +207,159 @@ impl CoxState {
         self.eta = problem.x.matvec(beta);
         self.refresh_w();
     }
+}
+
+/// [`apply_coord_scalar_slice`]/[`apply_coord_lanes_slice`] behind a
+/// backend switch — the entry the sharded engine's workers call on the
+/// η/w slice ranges they own.
+pub(crate) fn apply_coord_slice_b(
+    backend: KernelBackend,
+    col: &[f64],
+    binary: bool,
+    delta: f64,
+    eta: &mut [f64],
+    w: &mut [f64],
+) -> f64 {
+    match backend {
+        KernelBackend::Scalar => apply_coord_scalar_slice(col, binary, delta, eta, w),
+        KernelBackend::Simd => apply_coord_lanes_slice(col, binary, delta, eta, w),
+    }
+}
+
+/// The scalar re-exponentiation scan over explicit η/w slices; returns
+/// the exact max η over the slice. Lifted out of [`CoxState`] so the
+/// sharded engine's workers can apply the identical update to the row
+/// ranges they own: every operation is elementwise and slice maxima
+/// fold with the same `>` comparisons a whole-array scan makes, so any
+/// partition of the rows into contiguous slices reproduces the
+/// whole-array update bitwise.
+fn apply_coord_scalar_slice(
+    col: &[f64],
+    binary: bool,
+    delta: f64,
+    eta: &mut [f64],
+    w: &mut [f64],
+) -> f64 {
+    let mut max_eta = f64::NEG_INFINITY;
+    if binary {
+        // Binary column (the Sec-4.2 binarized regime): every nonzero
+        // entry shares one multiplicative factor exp(Δ) — one exp()
+        // for the whole update instead of one per sample.
+        let factor = delta.exp();
+        for (k, &xkl) in col.iter().enumerate() {
+            if xkl != 0.0 {
+                eta[k] += delta;
+                w[k] *= factor;
+            }
+            if eta[k] > max_eta {
+                max_eta = eta[k];
+            }
+        }
+    } else {
+        for (k, &xkl) in col.iter().enumerate() {
+            if xkl != 0.0 {
+                let z = delta * xkl;
+                eta[k] += z;
+                w[k] *= if z.abs() < 1e-4 {
+                    1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
+                } else {
+                    z.exp()
+                };
+            }
+            if eta[k] > max_eta {
+                max_eta = eta[k];
+            }
+        }
+    }
+    max_eta
+}
+
+/// Lane-unrolled re-exponentiation over explicit η/w slices: [`LANES`]
+/// independent update chains plus [`LANES`] max-η trackers folded at the
+/// end with the same `>` comparisons the scalar scan makes (max is
+/// associative and `>` never admits NaN in either order), so the result
+/// is bitwise equal to [`apply_coord_scalar_slice`] — and, because the
+/// per-element work is independent of the lane grouping, bitwise
+/// invariant to how the rows are sliced across workers.
+fn apply_coord_lanes_slice(
+    col: &[f64],
+    binary: bool,
+    delta: f64,
+    eta: &mut [f64],
+    w: &mut [f64],
+) -> f64 {
+    let n = col.len();
+    let whole = n - n % LANES;
+    let mut maxes = [f64::NEG_INFINITY; LANES];
+    if binary {
+        let factor = delta.exp();
+        let mut k = 0;
+        while k < whole {
+            for (j, m) in maxes.iter_mut().enumerate() {
+                let i = k + j;
+                if col[i] != 0.0 {
+                    eta[i] += delta;
+                    w[i] *= factor;
+                }
+                if eta[i] > *m {
+                    *m = eta[i];
+                }
+            }
+            k += LANES;
+        }
+        for i in whole..n {
+            if col[i] != 0.0 {
+                eta[i] += delta;
+                w[i] *= factor;
+            }
+            if eta[i] > maxes[0] {
+                maxes[0] = eta[i];
+            }
+        }
+    } else {
+        let mut k = 0;
+        while k < whole {
+            for (j, m) in maxes.iter_mut().enumerate() {
+                let i = k + j;
+                let xkl = col[i];
+                if xkl != 0.0 {
+                    let z = delta * xkl;
+                    eta[i] += z;
+                    w[i] *= if z.abs() < 1e-4 {
+                        1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
+                    } else {
+                        z.exp()
+                    };
+                }
+                if eta[i] > *m {
+                    *m = eta[i];
+                }
+            }
+            k += LANES;
+        }
+        for i in whole..n {
+            let xkl = col[i];
+            if xkl != 0.0 {
+                let z = delta * xkl;
+                eta[i] += z;
+                w[i] *= if z.abs() < 1e-4 {
+                    1.0 + z * (1.0 + z * (0.5 + z * (1.0 / 6.0)))
+                } else {
+                    z.exp()
+                };
+            }
+            if eta[i] > maxes[0] {
+                maxes[0] = eta[i];
+            }
+        }
+    }
+    let mut max_eta = f64::NEG_INFINITY;
+    for &m in &maxes {
+        if m > max_eta {
+            max_eta = m;
+        }
+    }
+    max_eta
 }
 
 #[cfg(test)]
@@ -425,6 +481,53 @@ mod tests {
             assert_eq!(a.shift, b.shift);
         }
         assert_eq!(a.beta, b.beta);
+    }
+
+    #[test]
+    fn sliced_apply_is_partition_invariant() {
+        // Workers in the sharded engine apply a coordinate step to the
+        // η/w slice ranges they own; any contiguous partition must
+        // reproduce the whole-array update bitwise, including the folded
+        // max-η that drives the rebase guards.
+        let n = 53;
+        let dense: Vec<f64> = (0..n)
+            .map(|i| if i % 7 == 0 { 0.0 } else { ((i * 5 % 17) as f64) / 4.0 - 2.0 })
+            .collect();
+        let bin: Vec<f64> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+            for (col, binary, delta) in
+                [(&dense, false, 5e-5), (&dense, false, 0.9), (&bin, true, -0.6)]
+            {
+                let base_eta: Vec<f64> = (0..n).map(|i| (i as f64) * 0.01 - 0.2).collect();
+                let base_w: Vec<f64> = base_eta.iter().map(|e| e.exp()).collect();
+                let mut whole_eta = base_eta.clone();
+                let mut whole_w = base_w.clone();
+                let whole_max =
+                    apply_coord_slice_b(backend, col, binary, delta, &mut whole_eta, &mut whole_w);
+                for cuts in [vec![0, n], vec![0, 19, n], vec![0, 8, 8, 31, n]] {
+                    let mut eta = base_eta.clone();
+                    let mut w = base_w.clone();
+                    let mut max = f64::NEG_INFINITY;
+                    for pair in cuts.windows(2) {
+                        let (a, b) = (pair[0], pair[1]);
+                        let m = apply_coord_slice_b(
+                            backend,
+                            &col[a..b],
+                            binary,
+                            delta,
+                            &mut eta[a..b],
+                            &mut w[a..b],
+                        );
+                        if m > max {
+                            max = m;
+                        }
+                    }
+                    assert_eq!(eta, whole_eta, "{backend:?} cuts {cuts:?}");
+                    assert_eq!(w, whole_w, "{backend:?} cuts {cuts:?}");
+                    assert_eq!(max.to_bits(), whole_max.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

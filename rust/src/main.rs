@@ -25,7 +25,9 @@
 //!   fastsurvival fit --dataset synthetic --save artifacts/serving/churn@1.json
 //!   fastsurvival convert --input data/mydata.csv --out data/mydata.fsds
 //!   fastsurvival convert --synthetic --n 1000000 --p 100 --out data/big.fsds
+//!   fastsurvival convert --synthetic --n 1000000 --out data/big.fsds --shards 4
 //!   fastsurvival bigfit --quick --out BENCH_bigfit.json
+//!   fastsurvival inspect --store data/big.fsds.shards.json
 //!   fastsurvival path --dataset synthetic --lambdas 50 --save results/path.json
 //!   fastsurvival path --kind cardinality --k 10 --cv 5 --criterion cindex
 //!   fastsurvival select --dataset synthetic --method beam --k 15
@@ -60,7 +62,10 @@ use fastsurvival::select::{Abess, AdaptiveLasso, BeamSearch, CoxnetPath, Variabl
 use fastsurvival::serve::registry::ModelRegistry;
 use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
 use fastsurvival::serve::{serve, smoke, HttpClient, ServeConfig};
-use fastsurvival::store::{convert_csv_with, convert_synthetic_with, SyntheticRows};
+use fastsurvival::store::{
+    convert_csv_sharded, convert_csv_with, convert_synthetic_sharded, convert_synthetic_with,
+    SyntheticRows,
+};
 use fastsurvival::util::args::Args;
 use fastsurvival::util::compute::{Compute, Precision};
 use std::path::Path;
@@ -256,7 +261,14 @@ fn cmd_convert(args: &Args) -> Result<()> {
         Some(p) => Precision::from_name(p)?,
         None => Precision::F64,
     };
+    // --shards N writes a time-partitioned shard set under a versioned
+    // manifest instead of one monolithic store (see README, "Sharded
+    // training"); `bigfit --shards` and `fit_sharded` consume it.
+    let shards = args.get_or("shards", 0usize);
     let t0 = Instant::now();
+    if shards > 0 {
+        return cmd_convert_sharded(args, out_path, chunk_rows, precision, shards, &t0);
+    }
     let summary = if args.flag("synthetic") {
         let cfg = SyntheticConfig {
             n: args.get_or("n", 100_000),
@@ -292,6 +304,68 @@ fn cmd_convert(args: &Args) -> Result<()> {
         summary.p,
         summary.n_events,
         summary.n_chunks,
+        summary.chunk_rows,
+        summary.bytes as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `convert --shards N`: the sharded variant of [`cmd_convert`].
+fn cmd_convert_sharded(
+    args: &Args,
+    out_path: &Path,
+    chunk_rows: usize,
+    precision: Precision,
+    shards: usize,
+    t0: &Instant,
+) -> Result<()> {
+    let summary = if args.flag("synthetic") {
+        let cfg = SyntheticConfig {
+            n: args.get_or("n", 100_000),
+            p: args.get_or("p", 100),
+            rho: args.get_or("rho", 0.2),
+            k: args.get_or("true-k", 10),
+            s: 0.1,
+            seed: args.get_or("seed", 0),
+        };
+        println!(
+            "convert: streaming synthetic n={} p={} -> {} ({} shard(s))",
+            cfg.n,
+            cfg.p,
+            out_path.display(),
+            shards
+        );
+        convert_synthetic_sharded(&cfg, out_path, chunk_rows, precision, shards)?
+    } else if let Some(input) = args.get("input") {
+        let input_path = Path::new(input);
+        let name = args.str_or(
+            "name",
+            &input_path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "csv".to_string()),
+        );
+        println!(
+            "convert: streaming {input} -> {} ({} shard(s))",
+            out_path.display(),
+            shards
+        );
+        convert_csv_sharded(input_path, out_path, chunk_rows, &name, precision, shards)?
+    } else {
+        return Err(FastSurvivalError::InvalidConfig(
+            "convert requires --input <data.csv> or --synthetic".into(),
+        ));
+    };
+    println!(
+        "convert: wrote {} — n={} p={} events={} across {} shard(s) \
+         (generation {}, chunks of <={} rows, {:.1} MB) in {:.1}s",
+        summary.manifest_path.display(),
+        summary.n,
+        summary.p,
+        summary.n_events,
+        summary.n_shards,
+        summary.generation,
         summary.chunk_rows,
         summary.bytes as f64 / 1e6,
         t0.elapsed().as_secs_f64()
@@ -720,14 +794,14 @@ subcommands:\n\
   select       cardinality-constrained variable selection (--method --k)\n\
   experiment   regenerate a paper table/figure (--id --scale)\n\
   datasets     list datasets (Table 1 view)\n\
-  convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --precision f64|f32)\n\
-  bigfit       out-of-core workload + RSS/parity gates → BENCH_bigfit.json (--quick)\n\
+  convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --precision f64|f32 --shards N)\n\
+  bigfit       out-of-core workload + RSS/parity/shard gates → BENCH_bigfit.json (--quick --shards --shard-workers)\n\
   bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check --backend)\n\
   serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
   serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\
   append       rows → committed live segment (--store --input|--synthetic --compact)\n\
-  inspect      dump + verify a store (--store): header, checksums, segments\n\
+  inspect      dump + verify a store or shard set (--store file.fsds|file.fsds.shards.json)\n\
   watch        online loop (--store --models --name --once --poll-secs --reload)\n\
   live-smoke   online-loop gates: ≥3× warm refit, ≤1e-8 parity → BENCH_live.json\n\n\
 compute options (fit, path, bigfit, watch, bench):\n\

@@ -16,7 +16,8 @@ use super::prox::{cubic_l1_step, cubic_step, quad_l1_step, quad_step};
 use super::quadratic::quad_coord_step_ws_b;
 use super::Objective;
 use crate::cox::derivatives::{
-    coord_d1_col_b, coord_d1_d2_col_b, coord_d1_d2_ws_b, coord_d1_ws_b, Workspace,
+    coord_d1_col_b, coord_d1_d2_col_b, coord_d1_d2_col_merged_b, coord_d1_d2_ws_b, coord_d1_ws_b,
+    MergeScratch, Workspace,
 };
 use crate::cox::lipschitz::LipschitzPair;
 use crate::cox::problem::TieGroup;
@@ -227,6 +228,79 @@ impl SurrogateKind {
         backend: KernelBackend,
     ) -> (f64, f64) {
         let beta_l = state.beta[l];
+        if self == SurrogateKind::Quadratic && lip.l2 + 2.0 * obj.l2 <= 0.0 {
+            // Flat (constant) coordinate: no information, no move.
+            return (0.0, 0.0);
+        }
+        let (d1, d2) = match self {
+            SurrogateKind::Quadratic => {
+                (coord_d1_col_b(backend, groups, &state.w, col, xt_delta_l), 0.0)
+            }
+            SurrogateKind::Cubic => coord_d1_d2_col_b(backend, groups, &state.w, col, xt_delta_l),
+        };
+        let (delta, residual) = self.delta_residual_from(d1, d2, beta_l, lip, obj, skip_below);
+        state.update_coord_col_b(backend, col, binary, l, delta);
+        (delta, residual)
+    }
+
+    /// Tiled-merge sibling of [`SurrogateKind::step_residual_col_b`]:
+    /// derivatives come from the canonical tile decomposition
+    /// ([`coord_d1_d2_col_merged_b`]) instead of the flat fused pass, so
+    /// a fit stepping through here is bitwise reproducible no matter how
+    /// the tiles are later fanned out across shard workers — the
+    /// single-store chunked fit and the sharded engine both route their
+    /// per-coordinate step through this entry (or its distributed
+    /// equivalent, [`SurrogateKind::delta_residual_from`] over the same
+    /// tile partials), which is what makes sharded-vs-single parity a
+    /// bitwise identity rather than a tolerance.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_residual_col_merged_b(
+        self,
+        groups: &[TieGroup],
+        tile_cuts: &[usize],
+        scratch: &mut MergeScratch,
+        xt_delta_l: f64,
+        state: &mut CoxState,
+        col: &[f64],
+        binary: bool,
+        l: usize,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+        backend: KernelBackend,
+    ) -> (f64, f64) {
+        let beta_l = state.beta[l];
+        if self == SurrogateKind::Quadratic && lip.l2 + 2.0 * obj.l2 <= 0.0 {
+            // Flat (constant) coordinate: no information, no move.
+            return (0.0, 0.0);
+        }
+        let need_d2 = self == SurrogateKind::Cubic;
+        let (d1, d2) = coord_d1_d2_col_merged_b(
+            backend, groups, tile_cuts, &state.w, col, xt_delta_l, need_d2, scratch,
+        );
+        let (delta, residual) = self.delta_residual_from(d1, d2, beta_l, lip, obj, skip_below);
+        state.update_coord_col_b(backend, col, binary, l, delta);
+        (delta, residual)
+    }
+
+    /// The step semantics with the derivative pass and the η/w update
+    /// externalized: from already-assembled `(d1, d2)` compute the
+    /// applied Δ and the pre-step KKT residual. This is the single
+    /// source of truth for the residual formula, the prox dispatch, and
+    /// the [`STEP_SNAP`] no-op snap — the column-level steps above feed
+    /// it from their own derivative passes, and the sharded engine feeds
+    /// it from tile partials merged across workers (applying Δ on the
+    /// workers that own the η/w slices). `d2` is ignored for the
+    /// quadratic surrogate, whose curvature is the explicit `lip.l2`.
+    pub(crate) fn delta_residual_from(
+        self,
+        d1: f64,
+        d2: f64,
+        beta_l: f64,
+        lip: LipschitzPair,
+        obj: Objective,
+        skip_below: f64,
+    ) -> (f64, f64) {
         let (a, b) = match self {
             SurrogateKind::Quadratic => {
                 let b = lip.l2 + 2.0 * obj.l2;
@@ -234,13 +308,9 @@ impl SurrogateKind {
                     // Flat (constant) coordinate: no information, no move.
                     return (0.0, 0.0);
                 }
-                let d1 = coord_d1_col_b(backend, groups, &state.w, col, xt_delta_l);
                 (d1 + 2.0 * obj.l2 * beta_l, b)
             }
-            SurrogateKind::Cubic => {
-                let (d1, d2) = coord_d1_d2_col_b(backend, groups, &state.w, col, xt_delta_l);
-                (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2)
-            }
+            SurrogateKind::Cubic => (d1 + 2.0 * obj.l2 * beta_l, d2 + 2.0 * obj.l2),
         };
         let residual = if beta_l != 0.0 {
             (a + obj.l1 * beta_l.signum()).abs()
@@ -269,7 +339,6 @@ impl SurrogateKind {
             }
         };
         let delta = if delta.abs() <= STEP_SNAP * (1.0 + beta_l.abs()) { 0.0 } else { delta };
-        state.update_coord_col_b(backend, col, binary, l, delta);
         (delta, residual)
     }
 }
@@ -484,6 +553,64 @@ mod tests {
             }
             assert_eq!(sa.beta, sb.beta);
             assert_eq!(sa.eta, sb.eta);
+        }
+    }
+
+    #[test]
+    fn merged_step_tracks_flat_step() {
+        // The tiled-merge step reassociates the risk-set prefix sums
+        // (tile subtotals + carries instead of one running fold), so it
+        // is not bitwise against the flat column step — but whole
+        // sweeps must agree to well under any stopping tolerance.
+        use crate::cox::derivatives::{merge_tiles, MergeScratch};
+        let pr = random_problem(300, 5, 104);
+        let lip = all_lipschitz(&pr);
+        let obj = Objective { l1: 0.4, l2: 0.2 };
+        let cuts = merge_tiles(&pr.groups);
+        let backend = default_backend();
+        for kind in [SurrogateKind::Quadratic, SurrogateKind::Cubic] {
+            let mut flat = CoxState::zeros(&pr);
+            let mut merged = CoxState::zeros(&pr);
+            let mut scratch = MergeScratch::default();
+            for _sweep in 0..4 {
+                for l in 0..pr.p() {
+                    kind.step_residual_col_b(
+                        &pr.groups,
+                        pr.xt_delta[l],
+                        &mut flat,
+                        pr.x.col(l),
+                        pr.col_binary[l],
+                        l,
+                        lip[l],
+                        obj,
+                        0.0,
+                        backend,
+                    );
+                    let (dm, rm) = kind.step_residual_col_merged_b(
+                        &pr.groups,
+                        &cuts,
+                        &mut scratch,
+                        pr.xt_delta[l],
+                        &mut merged,
+                        pr.x.col(l),
+                        pr.col_binary[l],
+                        l,
+                        lip[l],
+                        obj,
+                        0.0,
+                        backend,
+                    );
+                    assert!(dm.is_finite() && rm.is_finite());
+                }
+            }
+            for l in 0..pr.p() {
+                assert!(
+                    (flat.beta[l] - merged.beta[l]).abs() < 1e-8,
+                    "{kind:?} l={l}: flat {} vs merged {}",
+                    flat.beta[l],
+                    merged.beta[l]
+                );
+            }
         }
     }
 

@@ -297,51 +297,58 @@ pub(crate) fn read_cells_append(
     Ok(())
 }
 
-/// One streaming pass over every chunk deriving Xᵀδ, the Lipschitz
-/// pairs, and the binary flags, with per-column carry state so each
-/// column accumulates in ascending row order — bit-identical to the
-/// in-memory `tr_matvec` / `coord_lipschitz` passes. Runs before the
-/// metadata is frozen behind its Arc.
-fn derive_column_stats(
-    file: &mut File,
-    bytebuf: &mut Vec<u8>,
-    header: &StoreHeader,
-    delta: &[f64],
-    groups: &[TieGroup],
-) -> Result<(Vec<f64>, Vec<LipschitzPair>, Vec<bool>)> {
-    let (n, p) = (header.n, header.p);
-    // ne of the group ending at each row (0.0 = not a group end, or
-    // an event-free group — both add nothing, matching the in-memory
-    // `if g.n_events > 0` skip).
-    let mut group_end_ne = vec![0.0_f64; n];
-    for g in groups {
-        if g.n_events > 0 {
-            group_end_ne[g.end - 1] = g.n_events as f64;
+/// The streaming per-column constants pass with externalized carry
+/// state: Xᵀδ, Theorem-3.4 Lipschitz pairs, and binary flags
+/// accumulate per column in ascending **global** row order, across any
+/// sequence of column-major chunk buffers. [`derive_column_stats`]
+/// drives it over one store's chunks; the sharded dataset drives the
+/// identical pass over every shard's chunks in shard order — the
+/// per-row floating-point sequence is the same either way, so the
+/// derived constants are bit-identical to the in-memory
+/// `tr_matvec` / `coord_lipschitz` passes regardless of how the rows
+/// are split into files.
+pub(crate) struct ColumnStatsPass {
+    /// ne of the group ending at each global row (0.0 = not a group
+    /// end, or an event-free group — both add nothing, matching the
+    /// in-memory `if g.n_events > 0` skip).
+    group_end_ne: Vec<f64>,
+    xt_delta: Vec<f64>,
+    lipschitz: Vec<LipschitzPair>,
+    col_binary: Vec<bool>,
+    hi: Vec<f64>,
+    lo: Vec<f64>,
+    p: usize,
+}
+
+impl ColumnStatsPass {
+    pub(crate) fn new(n: usize, p: usize, groups: &[TieGroup]) -> Self {
+        let mut group_end_ne = vec![0.0_f64; n];
+        for g in groups {
+            if g.n_events > 0 {
+                group_end_ne[g.end - 1] = g.n_events as f64;
+            }
+        }
+        ColumnStatsPass {
+            group_end_ne,
+            xt_delta: vec![0.0_f64; p],
+            lipschitz: vec![LipschitzPair::default(); p],
+            col_binary: vec![true; p],
+            hi: vec![f64::NEG_INFINITY; p],
+            lo: vec![f64::INFINITY; p],
+            p,
         }
     }
-    let mut xt_delta = vec![0.0_f64; p];
-    let mut lipschitz = vec![LipschitzPair::default(); p];
-    let mut col_binary = vec![true; p];
-    let mut hi = vec![f64::NEG_INFINITY; p];
-    let mut lo = vec![f64::INFINITY; p];
-    let mut chunk: Vec<f64> = Vec::new();
-    for c in 0..header.n_chunks() {
-        let rows = header.rows_in_chunk(c);
-        chunk.clear();
-        read_cells_append(
-            file,
-            bytebuf,
-            header.col_segment_offset(c, 0),
-            rows * p,
-            header.precision,
-            &mut chunk,
-        )?;
-        let r0 = c * header.chunk_rows;
-        for j in 0..p {
+
+    /// Fold one column-major chunk buffer (`rows` rows starting at
+    /// global row `r0`) into the carry state. Chunks must arrive in
+    /// ascending global row order; `delta` is the full sorted event
+    /// indicator column.
+    pub(crate) fn process_chunk(&mut self, chunk: &[f64], rows: usize, r0: usize, delta: &[f64]) {
+        for j in 0..self.p {
             let col = &chunk[j * rows..(j + 1) * rows];
-            let (mut xtd, mut h, mut l) = (xt_delta[j], hi[j], lo[j]);
-            let mut lip = lipschitz[j];
-            let mut binary = col_binary[j];
+            let (mut xtd, mut h, mut l) = (self.xt_delta[j], self.hi[j], self.lo[j]);
+            let mut lip = self.lipschitz[j];
+            let mut binary = self.col_binary[j];
             for (k, &x) in col.iter().enumerate() {
                 let global = r0 + k;
                 xtd += x * delta[global];
@@ -354,19 +361,51 @@ fn derive_column_stats(
                 if x != 0.0 && x != 1.0 {
                     binary = false;
                 }
-                let ne = group_end_ne[global];
+                let ne = self.group_end_ne[global];
                 if ne > 0.0 {
                     lip.add_group(ne, h - l);
                 }
             }
-            xt_delta[j] = xtd;
-            hi[j] = h;
-            lo[j] = l;
-            lipschitz[j] = lip;
-            col_binary[j] = binary;
+            self.xt_delta[j] = xtd;
+            self.hi[j] = h;
+            self.lo[j] = l;
+            self.lipschitz[j] = lip;
+            self.col_binary[j] = binary;
         }
     }
-    Ok((xt_delta, lipschitz, col_binary))
+
+    pub(crate) fn finish(self) -> (Vec<f64>, Vec<LipschitzPair>, Vec<bool>) {
+        (self.xt_delta, self.lipschitz, self.col_binary)
+    }
+}
+
+/// One streaming pass over every chunk of a single store deriving the
+/// per-column constants via [`ColumnStatsPass`]. Runs before the
+/// metadata is frozen behind its Arc.
+fn derive_column_stats(
+    file: &mut File,
+    bytebuf: &mut Vec<u8>,
+    header: &StoreHeader,
+    delta: &[f64],
+    groups: &[TieGroup],
+) -> Result<(Vec<f64>, Vec<LipschitzPair>, Vec<bool>)> {
+    let (n, p) = (header.n, header.p);
+    let mut pass = ColumnStatsPass::new(n, p, groups);
+    let mut chunk: Vec<f64> = Vec::new();
+    for c in 0..header.n_chunks() {
+        let rows = header.rows_in_chunk(c);
+        chunk.clear();
+        read_cells_append(
+            file,
+            bytebuf,
+            header.col_segment_offset(c, 0),
+            rows * p,
+            header.precision,
+            &mut chunk,
+        )?;
+        pass.process_chunk(&chunk, rows, c * header.chunk_rows, delta);
+    }
+    Ok(pass.finish())
 }
 
 #[cfg(test)]

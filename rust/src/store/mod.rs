@@ -25,17 +25,32 @@
 //!   which share every floating-point operation, so chunked and
 //!   in-memory fits agree bit for bit.
 //!
+//! - [`shard`]/[`shard_fit`] — sharded big-n training: a dataset split
+//!   into time-contiguous shard stores under a versioned manifest
+//!   ([`ShardManifest`], atomic publish like the live-model manifest),
+//!   an assembled [`ShardedDataset`] view serving the exact global
+//!   chunk geometry, and [`StreamingFit::fit_sharded`] — per-shard
+//!   derivative passes merged through exclusive prefix carries into
+//!   exact global risk-set quantities, bitwise identical to the
+//!   single-store fit at any shard/worker count.
+//!
 //! Entry points: `CoxFit::fit_store` in the public API, `convert` /
 //! `fit --store` / `bigfit` in the CLI.
 
 pub mod dataset;
 pub mod format;
+pub mod shard;
+pub mod shard_fit;
 pub mod source;
 pub mod streaming;
 pub mod writer;
 
 pub use dataset::ChunkedDataset;
 pub use format::DEFAULT_CHUNK_ROWS;
+pub use shard::{
+    convert_csv_sharded, convert_synthetic_sharded, shard_manifest_path, write_sharded_store,
+    ShardEntry, ShardManifest, ShardedDataset, ShardedSummary, SHARD_MANIFEST_VERSION,
+};
 pub use source::{CoxData, MemoryCoxData, StoreMeta};
 pub use streaming::{reference_fit_kkt, StreamingFit, StreamingFitResult};
 pub use writer::{

@@ -1,0 +1,990 @@
+//! Sharded `.fsds` layout: one logical big-n store split into
+//! time-contiguous row-range shards for parallel fitting.
+//!
+//! A sharded store is a set of complete, individually-valid `.fsds`
+//! files (`{out}.g{GGG}.shard{SSS}.fsds`) plus a versioned JSON
+//! manifest (`{out}.shards.json`). Shard `s` holds sorted global rows
+//! `[row0, row0 + rows)` of the canonical descending-time order, so the
+//! concatenation of the shard payloads in sequence order *is* the
+//! single-store payload: risk sets stay prefixes of the global order
+//! and every per-shard scan composes into the exact global quantities.
+//!
+//! Crash safety follows the PR-6 manifest discipline, with a
+//! generation twist: every rewrite bumps `generation`, which is
+//! embedded in the shard file names. New-generation shards are
+//! assembled under fresh names (`.partial.tmp`, then renamed), never
+//! touching the files the current manifest points at; the manifest
+//! rename is the single commit point that atomically flips readers to
+//! the new generation. Any crash before that leaves the previous view
+//! fully openable.
+//!
+//! Tie groups never straddle shards: the writer cuts only at tie-group
+//! ends, so each shard boundary is a strict time decrease. A manifest
+//! describing equal or overlapping time ranges across shards is a
+//! typed [`FastSurvivalError::Store`] error — such a split would break
+//! the prefix structure of risk sets.
+
+use super::dataset::{read_cells_append, ColumnStatsPass};
+use super::format::{self, fnv1a, StoreHeader, DEFAULT_CHUNK_ROWS, HEADER_LEN};
+use super::source::{CoxData, StoreMeta};
+use super::writer::{spill_rows, write_sorted_store, RowSource, SyntheticRows};
+use crate::api::json::{self, Json};
+use crate::cox::problem::{build_tie_groups, descending_time_order, TieGroup};
+use crate::data::synthetic::SyntheticConfig;
+use crate::error::{FastSurvivalError, Result};
+use crate::util::compute::Precision;
+use std::fs::File;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Shard-manifest schema version.
+pub const SHARD_MANIFEST_VERSION: usize = 1;
+
+/// `{out}.shards.json`.
+pub fn shard_manifest_path(out: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.shards.json", out.display()))
+}
+
+/// `{out}.g{generation:03}.shard{seq:03}.fsds` — generation-numbered so
+/// a rewrite never overwrites the files a live manifest points at.
+pub fn shard_file_path(out: &Path, generation: u64, seq: usize) -> PathBuf {
+    PathBuf::from(format!("{}.g{generation:03}.shard{seq:03}.fsds", out.display()))
+}
+
+/// One shard in the manifest: where it lives, which sorted global rows
+/// it holds, its time range, and its header's FNV self-check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    /// Position in the global row order (also embedded in the name).
+    pub seq: usize,
+    /// File *name* (no directory) — resolved against the manifest's
+    /// parent directory, so a sharded store can be moved as a unit.
+    pub file: String,
+    /// Rows this shard holds.
+    pub rows: usize,
+    /// First sorted global row index.
+    pub row0: usize,
+    /// Time of the shard's first (largest-time) row.
+    pub t_first: f64,
+    /// Time of the shard's last (smallest-time) row.
+    pub t_last: f64,
+    /// The shard header's stored FNV-1a self-check.
+    pub checksum: u64,
+}
+
+/// The parsed `{out}.shards.json`: global geometry plus the shard list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub generation: u64,
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub precision: Precision,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Structural validation: sequential shards, cumulative row ranges
+    /// summing to `n`, descending time within and strictly *decreasing*
+    /// across shards. Equal boundary times mean a tie group straddles
+    /// two shards; reversed ranges mean the shards overlap — both are
+    /// typed Store errors because either breaks the risk-set prefix
+    /// structure the sharded fit depends on.
+    pub fn validate(&self) -> Result<()> {
+        let err = |msg: String| Err(FastSurvivalError::Store(msg));
+        if self.n == 0 || self.p == 0 || self.chunk_rows == 0 {
+            return err(format!(
+                "degenerate shard-manifest geometry (n={}, p={}, chunk_rows={})",
+                self.n, self.p, self.chunk_rows
+            ));
+        }
+        if self.shards.is_empty() {
+            return err("shard manifest lists no shards".into());
+        }
+        let mut row0 = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.seq != i {
+                return err(format!("shard {i} carries sequence number {}", s.seq));
+            }
+            if s.rows == 0 {
+                return err(format!("shard {i} is empty"));
+            }
+            if s.row0 != row0 {
+                return err(format!(
+                    "shard {i} starts at row {} but the previous shards cover {row0} rows",
+                    s.row0
+                ));
+            }
+            if !s.t_first.is_finite() || !s.t_last.is_finite() || s.t_first < s.t_last {
+                return err(format!(
+                    "shard {i} time range is not descending ({} .. {})",
+                    s.t_first, s.t_last
+                ));
+            }
+            if i > 0 {
+                let prev = &self.shards[i - 1];
+                if prev.t_last == s.t_first {
+                    return err(format!(
+                        "tie group at time {} straddles shards {} and {i} — each tie group \
+                         must be owned by exactly one shard",
+                        s.t_first,
+                        i - 1
+                    ));
+                }
+                if prev.t_last < s.t_first {
+                    return err(format!(
+                        "shards {} and {i} have overlapping time ranges ({} .. {} then \
+                         {} .. {})",
+                        i - 1,
+                        prev.t_first,
+                        prev.t_last,
+                        s.t_first,
+                        s.t_last
+                    ));
+                }
+            }
+            row0 += s.rows;
+        }
+        if row0 != self.n {
+            return err(format!(
+                "shard rows sum to {row0} but the manifest says n={}",
+                self.n
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load a shard manifest if present. `Ok(None)` when no manifest
+    /// file exists; a malformed or structurally invalid manifest is a
+    /// typed Store error (it is our own atomic write).
+    pub fn load(path: &Path) -> Result<Option<ShardManifest>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(FastSurvivalError::io(format!("reading {}", path.display()), e))
+            }
+        };
+        let doc = json::parse(&text).map_err(|e| {
+            FastSurvivalError::Store(format!("malformed shard manifest {}: {e}", path.display()))
+        })?;
+        let version = doc.require("shard_manifest_version")?.as_usize()?;
+        if version != SHARD_MANIFEST_VERSION {
+            return Err(FastSurvivalError::Store(format!(
+                "unsupported shard manifest version {version} (this build reads \
+                 {SHARD_MANIFEST_VERSION})"
+            )));
+        }
+        let precision = Precision::from_name(doc.require("precision")?.as_str()?)?;
+        let mut shards = Vec::new();
+        for s in doc.require("shards")?.as_array()? {
+            let checksum_hex = s.require("checksum")?.as_str()?;
+            let checksum = u64::from_str_radix(checksum_hex.trim_start_matches("0x"), 16)
+                .map_err(|_| {
+                    FastSurvivalError::Store(format!(
+                        "bad shard checksum {checksum_hex:?} in manifest"
+                    ))
+                })?;
+            shards.push(ShardEntry {
+                seq: s.require("seq")?.as_usize()?,
+                file: s.require("file")?.as_str()?.to_string(),
+                rows: s.require("rows")?.as_usize()?,
+                row0: s.require("row0")?.as_usize()?,
+                t_first: s.require("t_first")?.as_f64()?,
+                t_last: s.require("t_last")?.as_f64()?,
+                checksum,
+            });
+        }
+        let manifest = ShardManifest {
+            generation: doc.require("generation")?.as_usize()? as u64,
+            name: doc.require("name")?.as_str()?.to_string(),
+            n: doc.require("n")?.as_usize()?,
+            p: doc.require("p")?.as_usize()?,
+            chunk_rows: doc.require("chunk_rows")?.as_usize()?,
+            precision,
+            shards,
+        };
+        manifest.validate()?;
+        Ok(Some(manifest))
+    }
+
+    /// Atomically write the manifest (temp file + rename) — the single
+    /// commit point that flips readers to this generation.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("seq".into(), Json::Num(s.seq as f64)),
+                    ("file".into(), Json::Str(s.file.clone())),
+                    ("rows".into(), Json::Num(s.rows as f64)),
+                    ("row0".into(), Json::Num(s.row0 as f64)),
+                    ("t_first".into(), Json::Num(s.t_first)),
+                    ("t_last".into(), Json::Num(s.t_last)),
+                    ("checksum".into(), Json::Str(format!("{:#018x}", s.checksum))),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("shard_manifest_version".into(), Json::Num(SHARD_MANIFEST_VERSION as f64)),
+            ("generation".into(), Json::Num(self.generation as f64)),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("n".into(), Json::Num(self.n as f64)),
+            ("p".into(), Json::Num(self.p as f64)),
+            ("chunk_rows".into(), Json::Num(self.chunk_rows as f64)),
+            ("precision".into(), Json::Str(self.precision.name().to_string())),
+            ("shards".into(), Json::Arr(shards)),
+        ]);
+        let tmp = PathBuf::from(format!("{}.partial.tmp", path.display()));
+        std::fs::write(&tmp, doc.to_json_string())
+            .map_err(|e| FastSurvivalError::io(format!("writing {}", tmp.display()), e))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            FastSurvivalError::io(format!("publishing {} -> {}", tmp.display(), path.display()), e)
+        })
+    }
+}
+
+/// What a completed sharded write looked like.
+#[derive(Clone, Debug)]
+pub struct ShardedSummary {
+    pub n: usize,
+    pub p: usize,
+    pub chunk_rows: usize,
+    pub n_events: usize,
+    /// Shards actually written (≤ the requested count when tie groups
+    /// or a small n leave fewer usable boundaries).
+    pub n_shards: usize,
+    pub generation: u64,
+    /// Total bytes across all shard files.
+    pub bytes: u64,
+    pub manifest_path: PathBuf,
+}
+
+/// Cut the sorted rows `0..n` into at most `shards` contiguous windows,
+/// cutting only at tie-group ends so no group straddles a boundary.
+/// Each requested boundary `s·n/shards` is snapped to the last group
+/// end at or before it (a straddling group is owned by the later
+/// shard); snaps that would produce an empty shard are dropped, so the
+/// actual shard count can be smaller than requested. Returns the full
+/// boundary list `[0, c1, .., n]`.
+fn shard_cuts(groups: &[TieGroup], n: usize, shards: usize) -> Vec<usize> {
+    let mut bounds = vec![0usize];
+    let mut gi = 0usize;
+    for s in 1..shards {
+        let target = s * n / shards;
+        let mut cut = *bounds.last().unwrap();
+        while gi < groups.len() && groups[gi].end <= target {
+            cut = groups[gi].end;
+            gi += 1;
+        }
+        if cut > *bounds.last().unwrap() && cut < n {
+            bounds.push(cut);
+        }
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// Stream `source` into a sharded store: one spill + sort pass, then
+/// one complete `.fsds` file per shard window, then the manifest as the
+/// atomic commit. The concatenated shard payloads are exactly the rows
+/// a single-store write of the same source would hold, in the same
+/// canonical descending-time order with the same global
+/// standardization stats.
+pub fn write_sharded_store(
+    source: &mut dyn RowSource,
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+    shards: usize,
+) -> Result<ShardedSummary> {
+    if shards == 0 {
+        return Err(FastSurvivalError::InvalidConfig(
+            "shard count must be at least 1".into(),
+        ));
+    }
+    let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+    let spill_path = PathBuf::from(format!("{}.rows.tmp", out.display()));
+    let result = write_sharded_inner(source, out, &spill_path, chunk_rows, name, precision, shards);
+    // The spill file is workspace either way; best-effort cleanup.
+    let _ = std::fs::remove_file(&spill_path);
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_sharded_inner(
+    source: &mut dyn RowSource,
+    out: &Path,
+    spill_path: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+    shards: usize,
+) -> Result<ShardedSummary> {
+    let spilled = spill_rows(source, spill_path)?;
+    let n = spilled.time.len();
+    let n_events = spilled.event.iter().filter(|&&e| e).count();
+    let order = descending_time_order(&spilled.time);
+    let stime: Vec<f64> = order.iter().map(|&i| spilled.time[i]).collect();
+    let sdelta: Vec<f64> =
+        order.iter().map(|&i| if spilled.event[i] { 1.0 } else { 0.0 }).collect();
+    let (groups, _group_of) = build_tie_groups(&stime, &sdelta);
+    let bounds = shard_cuts(&groups, n, shards);
+
+    // New generation: fresh file names, so the current manifest's view
+    // stays intact until the final rename below.
+    let manifest_path = shard_manifest_path(out);
+    let generation = match ShardManifest::load(&manifest_path)? {
+        Some(prev) => prev.generation + 1,
+        None => 0,
+    };
+
+    let mut entries = Vec::with_capacity(bounds.len() - 1);
+    let mut bytes = 0u64;
+    for (seq, win) in bounds.windows(2).enumerate() {
+        let (a, b) = (win[0], win[1]);
+        let shard_path = shard_file_path(out, generation, seq);
+        let partial = PathBuf::from(format!("{}.partial.tmp", shard_path.display()));
+        let header = match write_sorted_store(
+            &spilled,
+            spill_path,
+            &order[a..b],
+            &partial,
+            chunk_rows,
+            name,
+            precision,
+        ) {
+            Ok(h) => h,
+            Err(e) => {
+                let _ = std::fs::remove_file(&partial);
+                return Err(e);
+            }
+        };
+        std::fs::rename(&partial, &shard_path).map_err(|e| {
+            FastSurvivalError::io(
+                format!("publishing {} -> {}", partial.display(), shard_path.display()),
+                e,
+            )
+        })?;
+        bytes += header.expected_file_len();
+        let file = shard_path
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .expect("shard path always has a file name");
+        entries.push(ShardEntry {
+            seq,
+            file,
+            rows: b - a,
+            row0: a,
+            t_first: stime[a],
+            t_last: stime[b - 1],
+            checksum: fnv1a(&header.encode()[0..40]),
+        });
+    }
+
+    let manifest = ShardManifest {
+        generation,
+        name: name.to_string(),
+        n,
+        p: spilled.p,
+        chunk_rows,
+        precision,
+        shards: entries,
+    };
+    manifest.validate()?;
+    manifest.save(&manifest_path)?;
+    Ok(ShardedSummary {
+        n,
+        p: spilled.p,
+        chunk_rows,
+        n_events,
+        n_shards: manifest.shards.len(),
+        generation,
+        bytes,
+        manifest_path,
+    })
+}
+
+/// Convenience: stream the Appendix-C.2 generator into a sharded store.
+pub fn convert_synthetic_sharded(
+    cfg: &SyntheticConfig,
+    out: &Path,
+    chunk_rows: usize,
+    precision: Precision,
+    shards: usize,
+) -> Result<ShardedSummary> {
+    let mut rows = SyntheticRows::new(cfg);
+    let name = format!("synthetic_stream_n{}_p{}_rho{}", cfg.n, cfg.p, cfg.rho);
+    write_sharded_store(&mut rows, out, chunk_rows, &name, precision, shards)
+}
+
+/// Convenience: stream a CSV file into a sharded store.
+pub fn convert_csv_sharded(
+    input: &Path,
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+    shards: usize,
+) -> Result<ShardedSummary> {
+    let mut reader = crate::data::csv::open_survival_csv(input)?;
+    write_sharded_store(&mut reader, out, chunk_rows, name, precision, shards)
+}
+
+/// Read the *local* row range `[la, lb)` of column `j` from one shard
+/// file, walking its chunk geometry and appending decoded cells to
+/// `out`.
+pub(crate) fn read_local_col_range(
+    file: &mut File,
+    header: &StoreHeader,
+    j: usize,
+    la: usize,
+    lb: usize,
+    bytebuf: &mut Vec<u8>,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    let mut a = la;
+    while a < lb {
+        let c = a / header.chunk_rows;
+        let cstart = c * header.chunk_rows;
+        let cend = cstart + header.rows_in_chunk(c);
+        let b = lb.min(cend);
+        let offset =
+            header.col_segment_offset(c, j) + header.cell_bytes() * (a - cstart) as u64;
+        read_cells_append(file, bytebuf, offset, b - a, header.precision, out)?;
+        a = b;
+    }
+    Ok(())
+}
+
+/// One open shard file.
+struct ShardReader {
+    file: File,
+    header: StoreHeader,
+    path: PathBuf,
+    row0: usize,
+}
+
+/// An open sharded store: the manifest's shard set presented as one
+/// logical [`CoxData`] source with **global** chunk geometry — chunk
+/// `c` covers sorted global rows `[c·chunk_rows, ..)` even when that
+/// window straddles shard files, so warm-up sampling and η rebuilds
+/// are bitwise identical to the single-store path.
+pub struct ShardedDataset {
+    manifest: ShardManifest,
+    readers: Vec<ShardReader>,
+    meta: Arc<StoreMeta>,
+    /// Reusable byte buffer for cell reads.
+    iobuf: Vec<u8>,
+}
+
+impl ShardedDataset {
+    /// Open a sharded store. `path` is either the logical store path
+    /// (the manifest is looked up at `{path}.shards.json`) or the
+    /// manifest path itself. Every shard is fully validated: header
+    /// checksum against the manifest, row count, geometry, schema and
+    /// stats agreement, payload time ranges — any mismatch is a typed
+    /// [`FastSurvivalError::Store`] error.
+    pub fn open(path: &Path) -> Result<Self> {
+        let manifest_path = if path.to_string_lossy().ends_with(".shards.json") {
+            path.to_path_buf()
+        } else {
+            shard_manifest_path(path)
+        };
+        let manifest = ShardManifest::load(&manifest_path)?.ok_or_else(|| {
+            FastSurvivalError::Store(format!(
+                "no shard manifest at {}",
+                manifest_path.display()
+            ))
+        })?;
+        let dir = manifest_path
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+
+        let (n, p) = (manifest.n, manifest.p);
+        let mut readers = Vec::with_capacity(manifest.shards.len());
+        let mut time: Vec<f64> = Vec::with_capacity(n);
+        let mut event: Vec<bool> = Vec::with_capacity(n);
+        let mut schema: Option<(String, Vec<String>, Vec<f64>, Vec<f64>)> = None;
+        for entry in &manifest.shards {
+            let fpath = dir.join(&entry.file);
+            let serr = |msg: String| {
+                FastSurvivalError::Store(format!("shard {} ({}): {msg}", entry.seq, fpath.display()))
+            };
+            let mut file = File::open(&fpath)
+                .map_err(|e| FastSurvivalError::io(format!("opening {}", fpath.display()), e))?;
+            let file_len = file
+                .metadata()
+                .map_err(|e| FastSurvivalError::io(format!("stat {}", fpath.display()), e))?
+                .len();
+            let mut head = [0u8; HEADER_LEN];
+            format::read_exact(&mut file, &mut head, "shard header")?;
+            let header = StoreHeader::decode(&head)?;
+            let checksum = fnv1a(&header.encode()[0..40]);
+            if checksum != entry.checksum {
+                return Err(serr(format!(
+                    "header checksum {checksum:#018x} does not match the manifest's {:#018x}",
+                    entry.checksum
+                )));
+            }
+            if header.n != entry.rows {
+                return Err(serr(format!(
+                    "holds {} rows but the manifest records {}",
+                    header.n, entry.rows
+                )));
+            }
+            if header.p != p
+                || header.chunk_rows != manifest.chunk_rows
+                || header.precision != manifest.precision
+            {
+                return Err(serr(format!(
+                    "geometry (p={}, chunk_rows={}, precision={}) disagrees with the \
+                     manifest (p={p}, chunk_rows={}, precision={})",
+                    header.p,
+                    header.chunk_rows,
+                    header.precision.name(),
+                    manifest.chunk_rows,
+                    manifest.precision.name()
+                )));
+            }
+            if file_len != header.expected_file_len() {
+                return Err(serr(format!(
+                    "is {file_len} bytes but the header implies {} — truncated or corrupt",
+                    header.expected_file_len()
+                )));
+            }
+
+            // Meta block: every shard carries the same name, feature
+            // names, and global standardization stats.
+            let mut r = BufReader::new(&mut file);
+            let name = format::read_string(&mut r, "dataset name")?;
+            let n_names = format::read_u32(&mut r, "feature-name count")? as usize;
+            if n_names != p {
+                return Err(serr(format!(
+                    "meta block names {n_names} features, manifest says {p}"
+                )));
+            }
+            let mut feature_names = Vec::with_capacity(p);
+            for _ in 0..p {
+                feature_names.push(format::read_string(&mut r, "feature name")?);
+            }
+            let means = format::read_f64_vec(&mut r, p, "standardization means")?;
+            let stds = format::read_f64_vec(&mut r, p, "standardization stds")?;
+            let consumed = HEADER_LEN as u64
+                + 8
+                + name.len() as u64
+                + feature_names.iter().map(|f| 4 + f.len() as u64).sum::<u64>()
+                + 16 * p as u64;
+            if consumed != header.payload_offset {
+                return Err(serr(format!(
+                    "meta block ends at {consumed} but payload starts at {} — corrupt meta",
+                    header.payload_offset
+                )));
+            }
+            if name != manifest.name {
+                return Err(serr(format!(
+                    "dataset name {name:?} disagrees with the manifest's {:?}",
+                    manifest.name
+                )));
+            }
+            match &schema {
+                None => schema = Some((name, feature_names, means, stds)),
+                Some((_, f0, m0, s0)) => {
+                    if &feature_names != f0 || &means != m0 || &stds != s0 {
+                        return Err(serr(
+                            "feature schema or standardization stats disagree with shard 0"
+                                .into(),
+                        ));
+                    }
+                }
+            }
+
+            // Payload O(n) columns: validate and splice into the global
+            // time/event vectors.
+            if entry.row0 != time.len() {
+                return Err(serr(format!(
+                    "manifest places this shard at row {} but previous shards cover {} rows",
+                    entry.row0,
+                    time.len()
+                )));
+            }
+            let stime = format::read_f64_vec(&mut r, header.n, "time column")?;
+            for (k, &t) in stime.iter().enumerate() {
+                if !t.is_finite() {
+                    return Err(serr(format!("non-finite time {t} at shard row {k}")));
+                }
+                if k > 0 && t > stime[k - 1] {
+                    return Err(serr(format!(
+                        "times not sorted descending at shard row {k} ({} then {t})",
+                        stime[k - 1]
+                    )));
+                }
+            }
+            if stime[0] != entry.t_first || stime[header.n - 1] != entry.t_last {
+                return Err(serr(format!(
+                    "payload time range {} .. {} disagrees with the manifest's {} .. {}",
+                    stime[0],
+                    stime[header.n - 1],
+                    entry.t_first,
+                    entry.t_last
+                )));
+            }
+            let mut event_bytes = vec![0u8; header.n];
+            format::read_exact(&mut r, &mut event_bytes, "event column")?;
+            drop(r);
+            for (k, &b) in event_bytes.iter().enumerate() {
+                match b {
+                    0 => event.push(false),
+                    1 => event.push(true),
+                    other => {
+                        return Err(serr(format!("invalid event byte {other} at shard row {k}")))
+                    }
+                }
+            }
+            time.extend_from_slice(&stime);
+            readers.push(ShardReader { file, header, path: fpath, row0: entry.row0 });
+        }
+        // validate() guaranteed strictly decreasing ranges across
+        // shards and the per-shard payloads are descending, so the
+        // concatenation is globally descending.
+        let delta: Vec<f64> = event.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+        let (groups, _group_of) = build_tie_groups(&time, &delta);
+        let n_events = event.iter().filter(|&&e| e).count();
+
+        // The per-column constants pass runs over the shards in order —
+        // the same ascending-global-row floating-point sequence the
+        // single-store open produces, so the results are bitwise equal.
+        let mut pass = ColumnStatsPass::new(n, p, &groups);
+        let mut iobuf: Vec<u8> = Vec::new();
+        let mut chunk: Vec<f64> = Vec::new();
+        for reader in &mut readers {
+            for c in 0..reader.header.n_chunks() {
+                let rows = reader.header.rows_in_chunk(c);
+                chunk.clear();
+                read_cells_append(
+                    &mut reader.file,
+                    &mut iobuf,
+                    reader.header.col_segment_offset(c, 0),
+                    rows * p,
+                    reader.header.precision,
+                    &mut chunk,
+                )?;
+                pass.process_chunk(&chunk, rows, reader.row0 + c * reader.header.chunk_rows, &delta);
+            }
+        }
+        let (xt_delta, lipschitz, col_binary) = pass.finish();
+
+        let (name, feature_names, means, stds) = schema.expect("manifest has at least one shard");
+        let meta = StoreMeta {
+            n,
+            p,
+            chunk_rows: manifest.chunk_rows,
+            n_chunks: n.div_ceil(manifest.chunk_rows),
+            name,
+            feature_names,
+            means,
+            stds,
+            time,
+            delta,
+            event,
+            groups,
+            n_events,
+            xt_delta,
+            lipschitz,
+            col_binary,
+        };
+        Ok(ShardedDataset { manifest, readers, meta: Arc::new(meta), iobuf })
+    }
+
+    /// The validated manifest this dataset was opened from.
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    /// An independent column reader over the same shard files (fresh
+    /// file handles, so each fit worker gets its own seek position).
+    pub(crate) fn col_reader(&self) -> Result<ShardColReader> {
+        let mut shards = Vec::with_capacity(self.readers.len());
+        for r in &self.readers {
+            let file = File::open(&r.path)
+                .map_err(|e| FastSurvivalError::io(format!("opening {}", r.path.display()), e))?;
+            shards.push((file, r.header, r.row0));
+        }
+        Ok(ShardColReader { shards, bytebuf: Vec::new() })
+    }
+}
+
+impl CoxData for ShardedDataset {
+    fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    fn meta_arc(&self) -> Arc<StoreMeta> {
+        Arc::clone(&self.meta)
+    }
+
+    fn load_chunk(&mut self, c: usize, buf: &mut Vec<f64>) -> Result<usize> {
+        // Global chunk geometry: the window may straddle shard files,
+        // in which case each column is assembled from the shards'
+        // overlapping local ranges in order.
+        let g0 = c * self.meta.chunk_rows;
+        let g1 = self.meta.n.min(g0 + self.meta.chunk_rows);
+        let rows = g1 - g0;
+        buf.clear();
+        buf.reserve(rows * self.meta.p);
+        let iobuf = &mut self.iobuf;
+        for j in 0..self.meta.p {
+            for r in self.readers.iter_mut() {
+                let s_end = r.row0 + r.header.n;
+                if g1 <= r.row0 || g0 >= s_end {
+                    continue;
+                }
+                let la = g0.max(r.row0) - r.row0;
+                let lb = g1.min(s_end) - r.row0;
+                read_local_col_range(&mut r.file, &r.header, j, la, lb, iobuf, buf)?;
+            }
+        }
+        Ok(rows)
+    }
+
+    fn load_col(&mut self, l: usize, buf: &mut Vec<f64>) -> Result<()> {
+        buf.clear();
+        buf.reserve(self.meta.n);
+        let iobuf = &mut self.iobuf;
+        for r in self.readers.iter_mut() {
+            read_local_col_range(&mut r.file, &r.header, l, 0, r.header.n, iobuf, buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// A standalone shard-set column reader: global-row range reads over
+/// fresh file handles. Each sharded-fit worker owns one, scanning only
+/// its tile range's rows.
+pub(crate) struct ShardColReader {
+    /// `(file, header, row0)` per shard, in sequence order.
+    shards: Vec<(File, StoreHeader, usize)>,
+    bytebuf: Vec<u8>,
+}
+
+impl ShardColReader {
+    /// Read global sorted rows `[a, b)` of column `l` into `out`
+    /// (cleared first).
+    pub(crate) fn read_col_range(
+        &mut self,
+        l: usize,
+        a: usize,
+        b: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        out.clear();
+        out.reserve(b.saturating_sub(a));
+        for (file, header, row0) in self.shards.iter_mut() {
+            let s_end = *row0 + header.n;
+            if b <= *row0 || a >= s_end {
+                continue;
+            }
+            let la = a.max(*row0) - *row0;
+            let lb = b.min(s_end) - *row0;
+            read_local_col_range(file, header, l, la, lb, &mut self.bytebuf, out)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::store::dataset::ChunkedDataset;
+    use crate::store::writer::{write_store_with, DatasetRows};
+
+    fn temp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fs_store_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tied_dataset(n: usize, p: usize, group: usize) -> SurvivalDataset {
+        // Deterministic features, times tied in runs of `group` rows.
+        let cols: Vec<Vec<f64>> = (0..p)
+            .map(|j| (0..n).map(|i| ((i * 31 + j * 7) % 11) as f64 - 5.0).collect())
+            .collect();
+        let time: Vec<f64> = (0..n).map(|i| (i / group) as f64).collect();
+        let event: Vec<bool> = (0..n).map(|i| i % 3 != 0).collect();
+        SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "ties")
+    }
+
+    #[test]
+    fn sharded_store_matches_single_store_bitwise() {
+        let dir = temp_dir();
+        let ds = generate(&SyntheticConfig { n: 203, p: 4, rho: 0.3, k: 2, s: 0.1, seed: 17 });
+        let single = dir.join("single.fsds");
+        let sharded = dir.join("sharded.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        write_store_with(&mut rows, &single, 16, "t", Precision::F64).unwrap();
+        let mut rows = DatasetRows::new(&ds);
+        let summary =
+            write_sharded_store(&mut rows, &sharded, 16, "t", Precision::F64, 3).unwrap();
+        assert_eq!(summary.n, 203);
+        assert!(summary.n_shards >= 2 && summary.n_shards <= 3);
+        assert_eq!(summary.generation, 0);
+
+        let mut one = ChunkedDataset::open(&single).unwrap();
+        let mut many = ShardedDataset::open(&sharded).unwrap();
+        // Derived metadata is bitwise identical.
+        assert_eq!(many.meta().time, one.meta().time);
+        assert_eq!(many.meta().event, one.meta().event);
+        assert_eq!(many.meta().groups, one.meta().groups);
+        assert_eq!(many.meta().xt_delta, one.meta().xt_delta);
+        assert_eq!(many.meta().lipschitz, one.meta().lipschitz);
+        assert_eq!(many.meta().col_binary, one.meta().col_binary);
+        assert_eq!(many.meta().means, one.meta().means);
+        assert_eq!((many.meta().n_chunks, many.meta().chunk_rows), (13, 16));
+        // Column and global-chunk reads agree even where a global chunk
+        // straddles shard files.
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for l in 0..4 {
+            one.load_col(l, &mut a).unwrap();
+            many.load_col(l, &mut b).unwrap();
+            assert_eq!(a, b, "column {l}");
+        }
+        for c in 0..13 {
+            let ra = one.load_chunk(c, &mut a).unwrap();
+            let rb = many.load_chunk(c, &mut b).unwrap();
+            assert_eq!((ra, &a), (rb, &b), "global chunk {c}");
+        }
+        // Range reads compose the same columns.
+        let mut reader = many.col_reader().unwrap();
+        let mut piece = Vec::new();
+        one.load_col(2, &mut a).unwrap();
+        reader.read_col_range(2, 50, 160, &mut piece).unwrap();
+        assert_eq!(piece, a[50..160]);
+    }
+
+    #[test]
+    fn tie_groups_never_straddle_shards() {
+        let dir = temp_dir();
+        let ds = tied_dataset(90, 3, 7);
+        let out = dir.join("tied.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        let summary = write_sharded_store(&mut rows, &out, 8, "ties", Precision::F64, 4).unwrap();
+        let manifest = ShardManifest::load(&summary.manifest_path).unwrap().unwrap();
+        assert!(manifest.shards.len() >= 2);
+        for w in manifest.shards.windows(2) {
+            assert!(
+                w[0].t_last > w[1].t_first,
+                "boundary must be a strict time decrease: {} then {}",
+                w[0].t_last,
+                w[1].t_first
+            );
+        }
+        // And the assembled dataset still matches a single store.
+        let single = dir.join("tied_single.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        write_store_with(&mut rows, &single, 8, "ties", Precision::F64).unwrap();
+        let one = ChunkedDataset::open(&single).unwrap();
+        let many = ShardedDataset::open(&out).unwrap();
+        assert_eq!(many.meta().groups, one.meta().groups);
+        assert_eq!(many.meta().xt_delta, one.meta().xt_delta);
+    }
+
+    #[test]
+    fn rewrite_bumps_generation_and_crash_leftovers_are_harmless() {
+        let dir = temp_dir();
+        let ds = generate(&SyntheticConfig { n: 60, p: 3, rho: 0.2, k: 2, s: 0.1, seed: 3 });
+        let out = dir.join("regen.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        write_sharded_store(&mut rows, &out, 16, "g", Precision::F64, 2).unwrap();
+        let before = ShardedDataset::open(&out).unwrap().meta_arc();
+
+        // Simulate a crash mid-rewrite: a next-generation partial and a
+        // stray completed next-generation shard, manifest untouched.
+        let stray = shard_file_path(&out, 1, 0);
+        std::fs::write(&stray, b"incomplete next generation shard").unwrap();
+        let partial = PathBuf::from(format!(
+            "{}.partial.tmp",
+            shard_file_path(&out, 1, 1).display()
+        ));
+        std::fs::write(&partial, b"torn write").unwrap();
+        let after = ShardedDataset::open(&out).unwrap();
+        assert_eq!(after.manifest().generation, 0);
+        assert_eq!(after.meta().time, before.time);
+        std::fs::remove_file(&stray).unwrap();
+        std::fs::remove_file(&partial).unwrap();
+
+        // A completed rewrite flips to generation 1 atomically.
+        let mut rows = DatasetRows::new(&ds);
+        let summary = write_sharded_store(&mut rows, &out, 16, "g", Precision::F64, 2).unwrap();
+        assert_eq!(summary.generation, 1);
+        let after = ShardedDataset::open(&out).unwrap();
+        assert_eq!(after.manifest().generation, 1);
+        assert_eq!(after.meta().time, before.time);
+    }
+
+    #[test]
+    fn invalid_manifests_are_typed_errors() {
+        let dir = temp_dir();
+        let ds = generate(&SyntheticConfig { n: 50, p: 2, rho: 0.2, k: 1, s: 0.1, seed: 9 });
+        let out = dir.join("invalid.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        let summary = write_sharded_store(&mut rows, &out, 16, "v", Precision::F64, 2).unwrap();
+        let good = ShardManifest::load(&summary.manifest_path).unwrap().unwrap();
+
+        // Overlapping time ranges (reversed boundary) are rejected.
+        let mut bad = good.clone();
+        let hi = bad.shards[0].t_first;
+        bad.shards[1].t_first = hi + 1.0;
+        bad.save(&summary.manifest_path).unwrap();
+        let err = ShardManifest::load(&summary.manifest_path).unwrap_err();
+        assert!(matches!(err, FastSurvivalError::Store(_)));
+        assert!(err.to_string().contains("overlapping"), "got: {err}");
+
+        // An exactly-shared boundary time means a straddling tie group.
+        let mut bad = good.clone();
+        bad.shards[1].t_first = bad.shards[0].t_last;
+        bad.save(&summary.manifest_path).unwrap();
+        let err = ShardManifest::load(&summary.manifest_path).unwrap_err();
+        assert!(err.to_string().contains("tie group"), "got: {err}");
+
+        // Row-count drift is rejected.
+        let mut bad = good.clone();
+        bad.shards[1].rows += 1;
+        bad.n += 1;
+        bad.save(&summary.manifest_path).unwrap();
+        assert!(ShardedDataset::open(&out).is_err());
+
+        // Restore and confirm the happy path still opens.
+        good.save(&summary.manifest_path).unwrap();
+        ShardedDataset::open(&out).unwrap();
+
+        // Missing manifest: load says none, open is a typed error.
+        let missing = dir.join("never_written.fsds");
+        assert!(ShardManifest::load(&shard_manifest_path(&missing)).unwrap().is_none());
+        assert!(matches!(
+            ShardedDataset::open(&missing),
+            Err(FastSurvivalError::Store(_))
+        ));
+    }
+
+    #[test]
+    fn shard_cuts_snap_to_group_ends() {
+        // Groups of 7 over 60 rows; targets 15/30/45 snap to 14/28/42.
+        let time: Vec<f64> = (0..60).map(|i| -((i / 7) as f64)).collect();
+        let delta = vec![1.0; 60];
+        let (groups, _) = build_tie_groups(&time, &delta);
+        assert_eq!(shard_cuts(&groups, 60, 4), vec![0, 14, 28, 42, 60]);
+        // One giant tie group cannot be cut at all.
+        let (one, _) = build_tie_groups(&[5.0; 40], &[1.0; 40]);
+        assert_eq!(shard_cuts(&one, 40, 4), vec![0, 40]);
+        // shards=1 is the identity split.
+        assert_eq!(shard_cuts(&groups, 60, 1), vec![0, 60]);
+    }
+}

@@ -1,0 +1,656 @@
+//! The sharded parallel big-n fit engine: per-shard derivative passes
+//! with exact risk-set merging.
+//!
+//! Each worker owns a contiguous range of canonical merge tiles
+//! ([`merge_tiles`] — the same decomposition the single-store chunked
+//! fit replays) and, with it, the contiguous global-row span those tiles
+//! cover: its slice of η/w, and a private [`ShardColReader`] that reads
+//! only its rows of each column from the shard files. A coordinate step
+//! is a two-phase distributed scan:
+//!
+//! 1. **Scan** — every worker computes per-group risk-set subtotals for
+//!    its tiles *from zero* ([`tile_scan_b`]) and reports per-tile
+//!    totals.
+//! 2. **Merge + Emit** — the coordinator folds the per-tile totals into
+//!    exclusive prefix carries ([`fold_carries`]) in canonical tile
+//!    order, hands each worker its carry window, and the workers emit
+//!    per-tile derivative contributions ([`tile_emit`]) that the
+//!    coordinator folds — again in tile order — into the exact global
+//!    (d1, d2).
+//!
+//! Because every sum is associated identically to the single-store
+//! merged pass, the fold is *exact*, not approximate: the sharded fit
+//! and the single-store fit execute the same floating-point sequence
+//! per coordinate step, so their results are bitwise identical for any
+//! shard count and any worker count. The Δ-application, η-rebase
+//! schedule ([`REFRESH_EVERY`] / [`REBASE_SPAN`]), no-op snapping, and
+//! stopping logic all reuse the exact code or constants of the
+//! single-store path for the same reason.
+//!
+//! The protocol is plain `mpsc` over `std::thread::scope` — workers
+//! borrow their η/w slices (`split_at_mut`), so there is no copying of
+//! the O(n) state and no unsafe code.
+
+use super::shard::{ShardColReader, ShardedDataset};
+use super::source::{CoxData, StoreMeta};
+use super::streaming::{rebuild_eta, StreamingFit, StreamingFitResult};
+use crate::cox::derivatives::{fold_carries, merge_tiles, tile_emit, tile_scan_b, RiskPartials};
+use crate::cox::loss::loss_for_parts_b;
+use crate::cox::problem::TieGroup;
+use crate::cox::state::{apply_coord_slice_b, REBASE_SPAN, REFRESH_EVERY};
+use crate::error::{FastSurvivalError, Result};
+use crate::optim::cd::SurrogateKind;
+use crate::optim::objective::Stopper;
+use crate::optim::{FitConfig, Objective, Trace};
+use crate::util::compute::{KernelBackend, ResolvedCompute};
+use crate::util::parallel::contiguous_ranges;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One worker's ownership: a contiguous tile range, the tie-group range
+/// those tiles cover, and the contiguous global-row span of those
+/// groups. Consecutive workers cover consecutive spans, so the η/w
+/// vectors split cleanly into disjoint `&mut` slices.
+#[derive(Clone, Copy, Debug)]
+struct WorkerSpan {
+    t_lo: usize,
+    t_hi: usize,
+    g_lo: usize,
+    g_hi: usize,
+    row_a: usize,
+    row_b: usize,
+}
+
+/// Coordinator → worker commands, one round-trip per command.
+enum Cmd {
+    /// Read the worker's row range of column `l` and scan its tiles
+    /// from zero; reply with per-tile totals.
+    Scan { l: usize, need_d2: bool },
+    /// Emit per-tile (e1, e2) from the scanned subtotals, seeded with
+    /// the coordinator's exclusive prefix carries (one per owned tile).
+    Emit { carries: Vec<RiskPartials> },
+    /// Apply Δ to the worker's η/w slice using the column already in
+    /// its buffer from the preceding `Scan`; reply with the slice max η.
+    Apply { delta: f64, binary: bool },
+    /// Report the slice max η for a rebase decision (refresh-fold
+    /// semantics: `f64::max` from −∞, matching `CoxState::refresh_w`).
+    EtaMax,
+    /// Recompute `w = exp(η − m)` over the slice for the new shift.
+    Rebase { m: f64 },
+}
+
+/// Worker → coordinator replies, in 1:1 correspondence with [`Cmd`].
+enum Reply {
+    Tiles(Vec<RiskPartials>),
+    Emitted(Vec<(f64, f64)>),
+    Applied(f64),
+    EtaMax(f64),
+    Rebased,
+    Failed(FastSurvivalError),
+}
+
+fn worker_died() -> FastSurvivalError {
+    FastSurvivalError::Engine("a shard worker terminated unexpectedly".into())
+}
+
+fn protocol_violation() -> FastSurvivalError {
+    FastSurvivalError::Engine("shard worker replied out of protocol".into())
+}
+
+/// Send `cmd`, surfacing the worker's parting [`Reply::Failed`] if it
+/// already hung up.
+fn send_cmd(tx: &mpsc::Sender<Cmd>, rx: &mpsc::Receiver<Reply>, cmd: Cmd) -> Result<()> {
+    if tx.send(cmd).is_err() {
+        return Err(match rx.try_recv() {
+            Ok(Reply::Failed(e)) => e,
+            _ => worker_died(),
+        });
+    }
+    Ok(())
+}
+
+/// Receive one reply, converting worker faults into typed errors.
+fn recv_reply(rx: &mpsc::Receiver<Reply>) -> Result<Reply> {
+    match rx.recv() {
+        Ok(Reply::Failed(e)) => Err(e),
+        Ok(reply) => Ok(reply),
+        Err(_) => Err(worker_died()),
+    }
+}
+
+/// The worker loop: serve commands until the coordinator drops its
+/// sender (end of sweep) or a read fails. `eta`/`w` are this worker's
+/// exclusive slices of the global vectors, indexed from `span.row_a`.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<Reply>,
+    span: WorkerSpan,
+    groups: &[TieGroup],
+    tile_cuts: &[usize],
+    backend: KernelBackend,
+    reader: &mut ShardColReader,
+    colbuf: &mut Vec<f64>,
+    gs: &mut Vec<RiskPartials>,
+    eta: &mut [f64],
+    w: &mut [f64],
+) {
+    gs.resize(span.g_hi - span.g_lo, RiskPartials::default());
+    // Whether the last Scan requested s2 — Emit must mirror it.
+    let mut cur_need_s2 = false;
+    while let Ok(cmd) = rx.recv() {
+        let reply = match cmd {
+            Cmd::Scan { l, need_d2 } => {
+                cur_need_s2 = need_d2;
+                match reader.read_col_range(l, span.row_a, span.row_b, colbuf) {
+                    Ok(()) => {
+                        let mut totals = Vec::with_capacity(span.t_hi - span.t_lo);
+                        for t in span.t_lo..span.t_hi {
+                            let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
+                            totals.push(tile_scan_b(
+                                backend,
+                                groups,
+                                g_lo,
+                                g_hi,
+                                w,
+                                colbuf,
+                                span.row_a,
+                                need_d2,
+                                &mut gs[g_lo - span.g_lo..g_hi - span.g_lo],
+                            ));
+                        }
+                        Reply::Tiles(totals)
+                    }
+                    Err(e) => Reply::Failed(e),
+                }
+            }
+            Cmd::Emit { carries } => {
+                let mut emitted = Vec::with_capacity(span.t_hi - span.t_lo);
+                for (i, t) in (span.t_lo..span.t_hi).enumerate() {
+                    let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
+                    emitted.push(tile_emit(
+                        groups,
+                        g_lo,
+                        g_hi,
+                        carries[i],
+                        &gs[g_lo - span.g_lo..g_hi - span.g_lo],
+                        cur_need_s2,
+                    ));
+                }
+                Reply::Emitted(emitted)
+            }
+            Cmd::Apply { delta, binary } => {
+                Reply::Applied(apply_coord_slice_b(backend, colbuf, binary, delta, eta, w))
+            }
+            Cmd::EtaMax => {
+                Reply::EtaMax(eta.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+            }
+            Cmd::Rebase { m } => {
+                for (e, wk) in eta.iter().zip(w.iter_mut()) {
+                    *wk = (*e - m).exp();
+                }
+                Reply::Rebased
+            }
+        };
+        let failed = matches!(reply, Reply::Failed(_));
+        if tx.send(reply).is_err() || failed {
+            return;
+        }
+    }
+}
+
+/// What the sharded exact phase left behind (the distributed analogue
+/// of [`super::streaming::ExactPhaseOutcome`], with the state vectors
+/// owned directly — the engine never builds a `CoxState`, because the
+/// η/w vectors live sliced across workers during a sweep).
+pub(crate) struct ShardFitOutcome {
+    pub beta: Vec<f64>,
+    pub eta: Vec<f64>,
+    pub objective_value: f64,
+    pub sweeps: usize,
+    pub trace: Trace,
+}
+
+/// Exact surrogate CD over a sharded dataset with `shard_workers`
+/// parallel scan workers. Bitwise identical to
+/// [`super::streaming::exact_chunked_cd`] on the equivalent single
+/// store: same merge-tile decomposition, same per-coordinate
+/// (d1, d2) association, same Δ/residual formula
+/// ([`SurrogateKind::delta_residual_from`]), same η/w update kernels
+/// and rebase schedule, same stopper.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exact_sharded_cd(
+    data: &mut ShardedDataset,
+    meta: &StoreMeta,
+    beta: Vec<f64>,
+    surrogate: SurrogateKind,
+    obj: Objective,
+    max_sweeps: usize,
+    tol: f64,
+    stop_kkt: f64,
+    budget_secs: f64,
+    compute: ResolvedCompute,
+    shard_workers: usize,
+) -> Result<ShardFitOutcome> {
+    let p = meta.p;
+    let backend = compute.backend;
+    let groups: &[TieGroup] = &meta.groups;
+    let mut beta = beta;
+    let mut eta = rebuild_eta(data, meta, &beta)?;
+
+    // Replicate `CoxState::from_eta` → `refresh_w` exactly: shift to the
+    // max η (0 when non-finite), w = exp(η − shift), counter reset.
+    let m = eta.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut shift = if m.is_finite() { m } else { 0.0 };
+    let mut w: Vec<f64> = eta.iter().map(|&e| (e - shift).exp()).collect();
+    let mut updates_since_refresh = 0usize;
+
+    // Canonical tile decomposition, shared with the single-store path.
+    let tile_cuts = merge_tiles(groups);
+    let ntiles = tile_cuts.len().saturating_sub(1);
+    let workers = shard_workers.max(1).min(ntiles.max(1));
+    let spans: Vec<WorkerSpan> = contiguous_ranges(ntiles, workers)
+        .into_iter()
+        .map(|(t_lo, t_hi)| {
+            let (g_lo, g_hi) = (tile_cuts[t_lo], tile_cuts[t_hi]);
+            let (row_a, row_b) = if g_hi > g_lo {
+                (groups[g_lo].start, groups[g_hi - 1].end)
+            } else {
+                (0, 0)
+            };
+            WorkerSpan { t_lo, t_hi, g_lo, g_hi, row_a, row_b }
+        })
+        .collect();
+
+    // Per-worker resources persist across sweeps: independent column
+    // readers (own file handles and seek positions), column buffers,
+    // and per-group scratch.
+    let mut readers: Vec<ShardColReader> = Vec::with_capacity(spans.len());
+    for _ in &spans {
+        readers.push(data.col_reader()?);
+    }
+    let mut colbufs: Vec<Vec<f64>> = spans.iter().map(|_| Vec::new()).collect();
+    let mut gsbufs: Vec<Vec<RiskPartials>> = spans.iter().map(|_| Vec::new()).collect();
+
+    let config = FitConfig {
+        objective: obj,
+        max_iters: max_sweeps,
+        tol,
+        budget_secs,
+        record_trace: true,
+        compute,
+    };
+    let mut stopper = Stopper::new();
+    let mut sweeps = 0usize;
+    let need_d2 = surrogate == SurrogateKind::Cubic;
+
+    for it in 0..max_sweeps {
+        // One sweep: spawn the worker fleet over disjoint η/w slices,
+        // run every coordinate through the two-phase distributed step,
+        // then join (scope end) so the loss pass below sees the whole
+        // vectors again.
+        let max_res = std::thread::scope(|scope| -> Result<f64> {
+            let mut txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(spans.len());
+            let mut rxs: Vec<mpsc::Receiver<Reply>> = Vec::with_capacity(spans.len());
+            let mut eta_rest: &mut [f64] = &mut eta;
+            let mut w_rest: &mut [f64] = &mut w;
+            for ((span, reader), (colbuf, gs)) in spans
+                .iter()
+                .zip(readers.iter_mut())
+                .zip(colbufs.iter_mut().zip(gsbufs.iter_mut()))
+            {
+                let len = span.row_b - span.row_a;
+                let (eta_s, eta_tail) = std::mem::take(&mut eta_rest).split_at_mut(len);
+                let (w_s, w_tail) = std::mem::take(&mut w_rest).split_at_mut(len);
+                eta_rest = eta_tail;
+                w_rest = w_tail;
+                let (cmd_tx, cmd_rx) = mpsc::channel();
+                let (rep_tx, rep_rx) = mpsc::channel();
+                let span = *span;
+                let tc: &[usize] = &tile_cuts;
+                scope.spawn(move || {
+                    worker_loop(
+                        cmd_rx, rep_tx, span, groups, tc, backend, reader, colbuf, gs,
+                        eta_s, w_s,
+                    )
+                });
+                txs.push(cmd_tx);
+                rxs.push(rep_rx);
+            }
+
+            let mut max_res = 0.0_f64;
+            for l in 0..p {
+                let beta_l = beta[l];
+                let lip = meta.lipschitz[l];
+                if surrogate == SurrogateKind::Quadratic && lip.l2 + 2.0 * obj.l2 <= 0.0 {
+                    // Flat (constant) coordinate: no information, no
+                    // move — mirrors the merged step's early return
+                    // (residual 0, state untouched).
+                    continue;
+                }
+                // Phase A: distributed per-tile scan.
+                for (tx, rx) in txs.iter().zip(rxs.iter()) {
+                    send_cmd(tx, rx, Cmd::Scan { l, need_d2 })?;
+                }
+                let mut tile_totals: Vec<RiskPartials> = Vec::with_capacity(ntiles);
+                for rx in &rxs {
+                    match recv_reply(rx)? {
+                        Reply::Tiles(t) => tile_totals.extend(t),
+                        _ => return Err(protocol_violation()),
+                    }
+                }
+                // Merge: exclusive prefix carries in canonical tile
+                // order (workers are in tile order, so the extend above
+                // reassembled the canonical sequence).
+                let carries = fold_carries(&tile_totals, need_d2);
+                // Phase B: distributed emission, folded in tile order.
+                for ((tx, rx), span) in txs.iter().zip(rxs.iter()).zip(spans.iter()) {
+                    send_cmd(
+                        tx,
+                        rx,
+                        Cmd::Emit { carries: carries[span.t_lo..span.t_hi].to_vec() },
+                    )?;
+                }
+                let (mut d1, mut d2) = (0.0_f64, 0.0_f64);
+                for rx in &rxs {
+                    match recv_reply(rx)? {
+                        Reply::Emitted(es) => {
+                            for (e1, e2) in es {
+                                d1 += e1;
+                                d2 += e2;
+                            }
+                        }
+                        _ => return Err(protocol_violation()),
+                    }
+                }
+                let d1 = d1 - meta.xt_delta[l];
+                let (delta, residual) =
+                    surrogate.delta_residual_from(d1, d2, beta_l, lip, obj, 0.0);
+                if residual > max_res {
+                    max_res = residual;
+                }
+                if delta == 0.0 {
+                    // No state change, no refresh-counter bump —
+                    // mirrors `CoxState::update_coord_col_b`.
+                    continue;
+                }
+                beta[l] += delta;
+                for (tx, rx) in txs.iter().zip(rxs.iter()) {
+                    send_cmd(tx, rx, Cmd::Apply { delta, binary: meta.col_binary[l] })?;
+                }
+                let mut max_eta = f64::NEG_INFINITY;
+                for rx in &rxs {
+                    match recv_reply(rx)? {
+                        Reply::Applied(m) => {
+                            if m > max_eta {
+                                max_eta = m;
+                            }
+                        }
+                        _ => return Err(protocol_violation()),
+                    }
+                }
+                updates_since_refresh += 1;
+                if max_eta - shift > REBASE_SPAN
+                    || max_eta - shift < -REBASE_SPAN
+                    || updates_since_refresh >= REFRESH_EVERY
+                {
+                    // Distributed `refresh_w`: max-fold η across slices,
+                    // then rebase every w to the new shift.
+                    for (tx, rx) in txs.iter().zip(rxs.iter()) {
+                        send_cmd(tx, rx, Cmd::EtaMax)?;
+                    }
+                    let mut m = f64::NEG_INFINITY;
+                    for rx in &rxs {
+                        match recv_reply(rx)? {
+                            Reply::EtaMax(em) => m = m.max(em),
+                            _ => return Err(protocol_violation()),
+                        }
+                    }
+                    let m = if m.is_finite() { m } else { 0.0 };
+                    for (tx, rx) in txs.iter().zip(rxs.iter()) {
+                        send_cmd(tx, rx, Cmd::Rebase { m })?;
+                    }
+                    for rx in &rxs {
+                        match recv_reply(rx)? {
+                            Reply::Rebased => {}
+                            _ => return Err(protocol_violation()),
+                        }
+                    }
+                    shift = m;
+                    updates_since_refresh = 0;
+                }
+            }
+            Ok(max_res)
+            // txs drop here → workers drain and exit → scope joins.
+        })?;
+
+        sweeps = it + 1;
+        let loss = loss_for_parts_b(backend, groups, &meta.delta, &eta, &w, shift)
+            + obj.penalty(&beta);
+        let stop_loss = stopper.step(it, loss, &config);
+        let stopped_kkt = stop_kkt > 0.0 && max_res <= stop_kkt;
+        if stopped_kkt {
+            stopper.trace.converged = true;
+        }
+        if stop_loss || stopped_kkt {
+            break;
+        }
+    }
+    let objective_value =
+        loss_for_parts_b(backend, groups, &meta.delta, &eta, &w, shift) + obj.penalty(&beta);
+    Ok(ShardFitOutcome { beta, eta, objective_value, sweeps, trace: stopper.trace })
+}
+
+impl StreamingFit {
+    /// Run the two-phase fit over a sharded dataset with `shard_workers`
+    /// parallel exact-phase workers. Phase 1 (sampled-block warmup) is
+    /// the exact single-store code over the global chunk geometry the
+    /// sharded dataset serves; phase 2 is the distributed exact CD
+    /// ([`exact_sharded_cd`]). The result is bitwise identical to
+    /// [`StreamingFit::fit`] on the equivalent single store, for every
+    /// shard count and worker count.
+    pub fn fit_sharded(
+        &self,
+        data: &mut ShardedDataset,
+        shard_workers: usize,
+    ) -> Result<StreamingFitResult> {
+        let meta = data.meta_arc();
+        self.validate(&meta)?;
+        let rc = self.compute.resolve()?;
+        let fit_start = Instant::now();
+        let (beta, sgd_steps) = self.sampled_block_warmup(data, &meta, rc, &fit_start)?;
+        let remaining = if self.budget_secs > 0.0 {
+            (self.budget_secs - fit_start.elapsed().as_secs_f64()).max(1e-9)
+        } else {
+            0.0
+        };
+        let outcome = exact_sharded_cd(
+            data,
+            &meta,
+            beta,
+            self.surrogate,
+            self.objective,
+            self.max_sweeps,
+            self.tol,
+            self.stop_kkt,
+            remaining,
+            rc,
+            shard_workers,
+        )?;
+        Ok(StreamingFitResult {
+            beta: outcome.beta,
+            eta: outcome.eta,
+            objective_value: outcome.objective_value,
+            sweeps: outcome.sweeps,
+            sgd_steps,
+            trace: outcome.trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::data::SurvivalDataset;
+    use crate::linalg::Matrix;
+    use crate::store::dataset::ChunkedDataset;
+    use crate::store::shard::write_sharded_store;
+    use crate::store::writer::{write_store_with, DatasetRows};
+    use crate::util::compute::Precision;
+    use std::path::PathBuf;
+
+    fn temp_dir() -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fs_store_shard_fit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Write `ds` as both a single store and an `n_shards`-way sharded
+    /// store, fit both with `fit`, and require bitwise identity at
+    /// every requested worker count.
+    fn assert_sharded_parity(
+        ds: &SurvivalDataset,
+        chunk_rows: usize,
+        n_shards: usize,
+        fit: &StreamingFit,
+        worker_counts: &[usize],
+        tag: &str,
+    ) {
+        let dir = temp_dir();
+        let single = dir.join(format!("{tag}_single.fsds"));
+        let sharded = dir.join(format!("{tag}_sharded.fsds"));
+        let mut rows = DatasetRows::new(ds);
+        write_store_with(&mut rows, &single, chunk_rows, tag, Precision::F64).unwrap();
+        let mut rows = DatasetRows::new(ds);
+        write_sharded_store(&mut rows, &sharded, chunk_rows, tag, Precision::F64, n_shards)
+            .unwrap();
+
+        let mut one = ChunkedDataset::open(&single).unwrap();
+        let reference = fit.fit(&mut one).unwrap();
+        for &workers in worker_counts {
+            let mut many = ShardedDataset::open(&sharded).unwrap();
+            let res = fit.fit_sharded(&mut many, workers).unwrap();
+            assert_eq!(
+                bits(&res.beta),
+                bits(&reference.beta),
+                "{tag}: β must be bitwise identical at {workers} workers"
+            );
+            assert_eq!(
+                bits(&res.eta),
+                bits(&reference.eta),
+                "{tag}: η must be bitwise identical at {workers} workers"
+            );
+            assert_eq!(
+                res.objective_value.to_bits(),
+                reference.objective_value.to_bits(),
+                "{tag}: objective must be bitwise identical at {workers} workers"
+            );
+            assert_eq!(res.sweeps, reference.sweeps, "{tag}: same stopping point");
+            assert_eq!(res.sgd_steps, reference.sgd_steps, "{tag}: same warmup");
+        }
+    }
+
+    #[test]
+    fn sharded_fit_is_bitwise_identical_small() {
+        // n is far below one merge tile, so the engine clamps to one
+        // worker — the degenerate case must still be exact.
+        let ds = generate(&SyntheticConfig { n: 240, p: 5, rho: 0.3, k: 2, s: 0.1, seed: 11 });
+        let fit = StreamingFit {
+            objective: Objective { l1: 0.0, l2: 1.0 },
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 40,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        assert_sharded_parity(&ds, 32, 3, &fit, &[1, 4], "small");
+    }
+
+    #[test]
+    fn sharded_fit_is_bitwise_identical_multi_tile() {
+        // n spans several merge tiles, so 2 and 3 workers genuinely
+        // exercise the distributed scan/merge/emit protocol.
+        let ds =
+            generate(&SyntheticConfig { n: 9500, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 23 });
+        let fit = StreamingFit {
+            objective: Objective { l1: 0.0, l2: 1.0 },
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 6,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        assert_sharded_parity(&ds, 1024, 3, &fit, &[1, 2, 3], "multitile");
+    }
+
+    #[test]
+    fn cubic_and_l1_sharded_fits_stay_bitwise() {
+        let ds = generate(&SyntheticConfig { n: 300, p: 6, rho: 0.4, k: 3, s: 0.1, seed: 7 });
+        let cubic = StreamingFit {
+            objective: Objective { l1: 0.0, l2: 0.5 },
+            surrogate: SurrogateKind::Cubic,
+            max_sweeps: 30,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        assert_sharded_parity(&ds, 64, 2, &cubic, &[2], "cubic");
+        let lasso = StreamingFit {
+            objective: Objective { l1: 2.0, l2: 0.1 },
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 30,
+            tol: 1e-12,
+            stop_kkt: 1e-8,
+            ..Default::default()
+        };
+        assert_sharded_parity(&ds, 64, 4, &lasso, &[2], "lasso");
+    }
+
+    #[test]
+    fn heavy_ties_at_shard_boundaries_stay_bitwise() {
+        // Times tied in runs of 9: shard cuts must snap to group ends
+        // and the distributed emission must still match exactly.
+        let p = 4;
+        let n = 360;
+        let cols: Vec<Vec<f64>> = (0..p)
+            .map(|j| (0..n).map(|i| ((i * 13 + j * 5) % 7) as f64 - 3.0).collect())
+            .collect();
+        let time: Vec<f64> = (0..n).map(|i| (i / 9) as f64).collect();
+        let event: Vec<bool> = (0..n).map(|i| i % 4 != 0).collect();
+        let ds = SurvivalDataset::new(Matrix::from_columns(&cols), time, event, "ties");
+        let fit = StreamingFit {
+            objective: Objective { l1: 0.0, l2: 1.0 },
+            surrogate: SurrogateKind::Quadratic,
+            max_sweeps: 25,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        assert_sharded_parity(&ds, 48, 4, &fit, &[1, 2], "ties");
+    }
+
+    #[test]
+    fn fit_sharded_validates_like_fit() {
+        let dir = temp_dir();
+        let ds = generate(&SyntheticConfig { n: 80, p: 3, rho: 0.2, k: 2, s: 0.1, seed: 5 });
+        let out = dir.join("validate.fsds");
+        let mut rows = DatasetRows::new(&ds);
+        write_sharded_store(&mut rows, &out, 16, "v", Precision::F64, 2).unwrap();
+        let mut many = ShardedDataset::open(&out).unwrap();
+        let bad = StreamingFit { max_sweeps: 0, ..Default::default() };
+        assert!(matches!(
+            bad.fit_sharded(&mut many, 2),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+        let bad = StreamingFit {
+            objective: Objective { l1: -1.0, l2: 0.0 },
+            ..Default::default()
+        };
+        assert!(matches!(
+            bad.fit_sharded(&mut many, 2),
+            Err(FastSurvivalError::InvalidConfig(_))
+        ));
+    }
+}

@@ -20,7 +20,7 @@
 //! stays O(n + chunk·p).
 
 use super::source::{CoxData, StoreMeta};
-use crate::cox::derivatives::Workspace;
+use crate::cox::derivatives::{merge_tiles, MergeScratch, Workspace};
 use crate::cox::lipschitz::all_lipschitz;
 use crate::cox::loss::loss_for_parts_b;
 use crate::cox::{CoxProblem, CoxState};
@@ -116,8 +116,59 @@ impl StreamingFit {
         // resident byte): `data` stays mutably borrowable for the
         // chunk/column reads below.
         let meta = data.meta_arc();
-        let p = meta.p;
-        if p == 0 {
+        self.validate(&meta)?;
+        let obj = self.objective;
+        // Resolve the compute request exactly once — no optimizer loop
+        // below ever re-reads the environment.
+        let rc = self.compute.resolve()?;
+        // One wall clock over both phases: `budget_secs` must bound the
+        // whole fit, not just the exact polish (the warmup alone is
+        // n_chunks CD sweeps — minutes at the tracked scale).
+        let fit_start = Instant::now();
+
+        // ---------------- Phase 1: sampled-block surrogate warmup.
+        let (beta, sgd_steps) = self.sampled_block_warmup(data, &meta, rc, &fit_start)?;
+
+        // ---------------- Phase 2: exact chunked surrogate CD.
+        // The exact phase gets whatever the warmup left of the budget; a
+        // fully-spent budget still runs one sweep before the stopper
+        // fires and reports budget_exhausted — the same post-iteration
+        // check the in-memory fit makes.
+        let remaining = if self.budget_secs > 0.0 {
+            (self.budget_secs - fit_start.elapsed().as_secs_f64()).max(1e-9)
+        } else {
+            0.0
+        };
+        let outcome = exact_chunked_cd(
+            data,
+            &meta,
+            beta,
+            self.surrogate,
+            obj,
+            self.max_sweeps,
+            self.tol,
+            self.stop_kkt,
+            remaining,
+            rc,
+        )?;
+        let mut state = outcome.state;
+        let beta = std::mem::take(&mut state.beta);
+        let eta = std::mem::take(&mut state.eta);
+        Ok(StreamingFitResult {
+            beta,
+            eta,
+            objective_value: outcome.objective_value,
+            sweeps: outcome.sweeps,
+            sgd_steps,
+            trace: outcome.trace,
+        })
+    }
+
+    /// Input/config validation shared by [`StreamingFit::fit`] and the
+    /// sharded fit entry: bad data and bad configuration must surface as
+    /// the same typed errors on every path.
+    pub(crate) fn validate(&self, meta: &StoreMeta) -> Result<()> {
+        if meta.p == 0 {
             return Err(FastSurvivalError::InvalidData(
                 "store has no feature columns".into(),
             ));
@@ -143,18 +194,25 @@ impl StreamingFit {
                 "max_sweeps must be at least 1".into(),
             ));
         }
-        let obj = self.objective;
-        // Resolve the compute request exactly once — no optimizer loop
-        // below ever re-reads the environment.
-        let rc = self.compute.resolve()?;
-        // One wall clock over both phases: `budget_secs` must bound the
-        // whole fit, not just the exact polish (the warmup alone is
-        // n_chunks CD sweeps — minutes at the tracked scale).
-        let fit_start = Instant::now();
-        let over_budget =
-            |start: &Instant| self.budget_secs > 0.0 && start.elapsed().as_secs_f64() > self.budget_secs;
+        Ok(())
+    }
 
-        // ---------------- Phase 1: sampled-block surrogate warmup.
+    /// Phase 1: BigSurvSGD-style sampled-block surrogate warmup, shared
+    /// by the single-store and sharded fits. Because the sharded dataset
+    /// serves the *global* chunk geometry, both paths sample identical
+    /// blocks from an identical seed and return the identical β.
+    pub(crate) fn sampled_block_warmup<S: CoxData>(
+        &self,
+        data: &mut S,
+        meta: &StoreMeta,
+        rc: ResolvedCompute,
+        fit_start: &Instant,
+    ) -> Result<(Vec<f64>, usize)> {
+        let obj = self.objective;
+        let p = meta.p;
+        let over_budget = |start: &Instant| {
+            self.budget_secs > 0.0 && start.elapsed().as_secs_f64() > self.budget_secs
+        };
         let mut beta = vec![0.0_f64; p];
         let mut sgd_steps = 0usize;
         let blocks = self.sgd_blocks.unwrap_or(meta.n_chunks);
@@ -162,7 +220,7 @@ impl StreamingFit {
             let mut rng = Rng::new(self.seed);
             let mut chunkbuf: Vec<f64> = Vec::new();
             for t in 0..blocks {
-                if over_budget(&fit_start) {
+                if over_budget(fit_start) {
                     break;
                 }
                 let c = rng.below(meta.n_chunks);
@@ -201,41 +259,35 @@ impl StreamingFit {
                 sgd_steps += 1;
             }
         }
-
-        // ---------------- Phase 2: exact chunked surrogate CD.
-        // The exact phase gets whatever the warmup left of the budget; a
-        // fully-spent budget still runs one sweep before the stopper
-        // fires and reports budget_exhausted — the same post-iteration
-        // check the in-memory fit makes.
-        let remaining = if self.budget_secs > 0.0 {
-            (self.budget_secs - fit_start.elapsed().as_secs_f64()).max(1e-9)
-        } else {
-            0.0
-        };
-        let outcome = exact_chunked_cd(
-            data,
-            &meta,
-            beta,
-            self.surrogate,
-            obj,
-            self.max_sweeps,
-            self.tol,
-            self.stop_kkt,
-            remaining,
-            rc,
-        )?;
-        let mut state = outcome.state;
-        let beta = std::mem::take(&mut state.beta);
-        let eta = std::mem::take(&mut state.eta);
-        Ok(StreamingFitResult {
-            beta,
-            eta,
-            objective_value: outcome.objective_value,
-            sweeps: outcome.sweeps,
-            sgd_steps,
-            trace: outcome.trace,
-        })
+        Ok((beta, sgd_steps))
     }
+}
+
+/// η = Xβ accumulated chunk by chunk, skipping zero coefficients —
+/// shared by the single-store exact phase and the sharded engine (whose
+/// dataset serves the same global chunk geometry, so both rebuild the
+/// identical η bit for bit).
+pub(crate) fn rebuild_eta<S: CoxData>(
+    data: &mut S,
+    meta: &StoreMeta,
+    beta: &[f64],
+) -> Result<Vec<f64>> {
+    let mut eta = vec![0.0_f64; meta.n];
+    let mut chunkbuf: Vec<f64> = Vec::new();
+    for c in 0..meta.n_chunks {
+        let rows = data.load_chunk(c, &mut chunkbuf)?;
+        let r0 = c * meta.chunk_rows;
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj == 0.0 {
+                continue;
+            }
+            let col = &chunkbuf[j * rows..(j + 1) * rows];
+            for (k, &x) in col.iter().enumerate() {
+                eta[r0 + k] += x * bj;
+            }
+        }
+    }
+    Ok(eta)
 }
 
 /// What the exact chunked-CD phase left behind.
@@ -268,26 +320,14 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
     budget_secs: f64,
     compute: ResolvedCompute,
 ) -> Result<ExactPhaseOutcome> {
-    let (n, p) = (meta.n, meta.p);
-    // η = Xβ accumulated chunk by chunk.
-    let mut eta = vec![0.0_f64; n];
-    {
-        let mut chunkbuf: Vec<f64> = Vec::new();
-        for c in 0..meta.n_chunks {
-            let rows = data.load_chunk(c, &mut chunkbuf)?;
-            let r0 = c * meta.chunk_rows;
-            for (j, &bj) in beta.iter().enumerate() {
-                if bj == 0.0 {
-                    continue;
-                }
-                let col = &chunkbuf[j * rows..(j + 1) * rows];
-                for (k, &x) in col.iter().enumerate() {
-                    eta[r0 + k] += x * bj;
-                }
-            }
-        }
-    }
+    let p = meta.p;
+    let eta = rebuild_eta(data, meta, &beta)?;
     let mut state = CoxState::from_eta(beta, eta);
+    // The canonical merge-tile decomposition: data-derived only, shared
+    // with the sharded engine so single-store and sharded fits replay
+    // the identical per-tile floating-point sequence.
+    let tile_cuts = merge_tiles(&meta.groups);
+    let mut scratch = MergeScratch::default();
     let config = FitConfig {
         objective: obj,
         max_iters: max_sweeps,
@@ -301,15 +341,17 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
     let mut colbuf: Vec<f64> = Vec::new();
     for it in 0..max_sweeps {
         // Largest pre-step KKT residual seen this sweep, reported by
-        // the engine's own parts-level step
-        // ([`SurrogateKind::step_residual_col`] — one source of
-        // truth with the in-memory `step_residual`, STEP_SNAP
+        // the engine's merged parts-level step
+        // ([`SurrogateKind::step_residual_col_merged_b`] — one source
+        // of truth with the sharded engine's distributed step, STEP_SNAP
         // no-op snapping included).
         let mut max_res = 0.0_f64;
         for l in 0..p {
             data.load_col(l, &mut colbuf)?;
-            let (_delta, residual) = surrogate.step_residual_col_b(
+            let (_delta, residual) = surrogate.step_residual_col_merged_b(
                 &meta.groups,
+                &tile_cuts,
+                &mut scratch,
                 meta.xt_delta[l],
                 &mut state,
                 &colbuf,

@@ -205,14 +205,23 @@ pub fn write_store_with(
     }
 }
 
-fn write_store_inner(
-    source: &mut dyn RowSource,
-    out: &Path,
-    spill_path: &Path,
-    chunk_rows: usize,
-    name: &str,
-    precision: Precision,
-) -> Result<StoreSummary> {
+/// Pass-1 output: the O(n) columns and one-pass stats collected while
+/// the n×p payload was spilled row-major to disk. The sharded writer
+/// reuses this so every shard shares one spill pass and one set of
+/// global standardization stats.
+pub(crate) struct SpilledRows {
+    pub p: usize,
+    pub feature_names: Vec<String>,
+    pub time: Vec<f64>,
+    pub event: Vec<bool>,
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+}
+
+/// Drain `source` once: spill raw rows (f64 LE, row-major) to
+/// `spill_path`, validating every value, and collect the time/event
+/// columns plus Welford standardization stats.
+pub(crate) fn spill_rows(source: &mut dyn RowSource, spill_path: &Path) -> Result<SpilledRows> {
     let p = source.n_features();
     if p == 0 {
         return Err(FastSurvivalError::InvalidData(
@@ -220,8 +229,6 @@ fn write_store_inner(
         ));
     }
     let feature_names = source.feature_names();
-
-    // ---- Pass 1: spill raw rows, collect O(n) columns + stats.
     let spill = File::create(spill_path)
         .map_err(|e| FastSurvivalError::io(format!("creating {}", spill_path.display()), e))?;
     let mut spill_w = BufWriter::new(spill);
@@ -257,22 +264,33 @@ fn write_store_inner(
         event.push(e);
     }
     spill_w.flush().map_err(|e| FastSurvivalError::io("flushing row spill", e))?;
-    drop(spill_w);
-    let n = time.len();
-    if n == 0 {
+    if time.is_empty() {
         return Err(FastSurvivalError::InvalidData("row source produced no rows".into()));
     }
-
     // One-pass standardization stats (shared Welford convention: see
     // `source::RunningStats`).
     let (means, stds) = stats.finish();
+    Ok(SpilledRows { p, feature_names, time, event, means, stds })
+}
 
-    // ---- Sort: the engine's canonical descending-time order.
-    let order = descending_time_order(&time);
-    let n_events = event.iter().filter(|&&e| e).count();
-
-    // ---- Pass 2: header + meta + sorted O(n) columns + gathered chunks.
-    let meta = format::encode_meta(name, &feature_names, &means, &stds);
+/// Pass-2: assemble one complete store at `out` holding the spilled
+/// rows `order[..]` in that order (a window of a full
+/// `descending_time_order` for shard writes; the whole order for a
+/// single store). Gathers rows from the spill file one column-major
+/// chunk at a time and returns the header so callers can size and
+/// checksum the result.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn write_sorted_store(
+    spilled: &SpilledRows,
+    spill_path: &Path,
+    order: &[usize],
+    out: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+) -> Result<StoreHeader> {
+    let (n, p) = (order.len(), spilled.p);
+    let meta = format::encode_meta(name, &spilled.feature_names, &spilled.means, &spilled.stds);
     let header = StoreHeader {
         n,
         p,
@@ -286,11 +304,11 @@ fn write_store_inner(
     let werr = |e| FastSurvivalError::io(format!("writing {}", out.display()), e);
     w.write_all(&header.encode()).map_err(werr)?;
     w.write_all(&meta).map_err(werr)?;
-    for &i in &order {
-        w.write_all(&time[i].to_le_bytes()).map_err(werr)?;
+    for &i in order {
+        w.write_all(&spilled.time[i].to_le_bytes()).map_err(werr)?;
     }
-    for &i in &order {
-        w.write_all(&[event[i] as u8]).map_err(werr)?;
+    for &i in order {
+        w.write_all(&[spilled.event[i] as u8]).map_err(werr)?;
     }
 
     // Gather rows from the spill in sorted order, one chunk at a time.
@@ -337,10 +355,30 @@ fn write_store_inner(
         }
     }
     w.flush().map_err(werr)?;
+    Ok(header)
+}
+
+fn write_store_inner(
+    source: &mut dyn RowSource,
+    out: &Path,
+    spill_path: &Path,
+    chunk_rows: usize,
+    name: &str,
+    precision: Precision,
+) -> Result<StoreSummary> {
+    // ---- Pass 1: spill raw rows, collect O(n) columns + stats.
+    let spilled = spill_rows(source, spill_path)?;
+
+    // ---- Sort: the engine's canonical descending-time order.
+    let order = descending_time_order(&spilled.time);
+    let n_events = spilled.event.iter().filter(|&&e| e).count();
+
+    // ---- Pass 2: header + meta + sorted O(n) columns + gathered chunks.
+    let header = write_sorted_store(&spilled, spill_path, &order, out, chunk_rows, name, precision)?;
 
     Ok(StoreSummary {
-        n,
-        p,
+        n: spilled.time.len(),
+        p: spilled.p,
         chunk_rows,
         n_chunks: header.n_chunks(),
         n_events,

@@ -109,6 +109,28 @@ pub fn par_for_each_mut_workers<T: Send, F: Fn(usize, &mut T) + Sync>(
     });
 }
 
+/// Split `0..total` into at most `workers` contiguous, near-even,
+/// non-empty half-open ranges covering the whole span in order. Used by
+/// the sharded fit engine to hand each worker an ownership range of
+/// merge tiles; results there are partition-invariant, so the exact
+/// split only affects load balance, never the answer. `total == 0`
+/// yields a single empty range.
+pub(crate) fn contiguous_ranges(total: usize, workers: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return vec![(0, 0)];
+    }
+    let workers = workers.max(1).min(total);
+    let (base, extra) = (total / workers, total % workers);
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0;
+    for r in 0..workers {
+        let len = base + usize::from(r < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    ranges
+}
+
 /// A long-lived pool of named worker threads consuming boxed jobs from a
 /// shared queue. Unlike the fork-join helpers above (which spawn scoped
 /// threads per call), the pool amortizes thread startup across many
@@ -218,6 +240,26 @@ mod tests {
         // Empty slice is a no-op, not a panic.
         let mut empty: Vec<usize> = Vec::new();
         par_for_each_mut(&mut empty, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn contiguous_ranges_cover_and_balance() {
+        for (total, workers) in [(10usize, 3usize), (7, 7), (5, 9), (1, 4), (16, 4)] {
+            let ranges = contiguous_ranges(total, workers);
+            assert!(ranges.len() <= workers.max(1));
+            let mut next = 0;
+            for &(a, b) in &ranges {
+                assert_eq!(a, next, "total={total} workers={workers}");
+                assert!(b > a, "ranges must be non-empty");
+                next = b;
+            }
+            assert_eq!(next, total);
+            let (min, max) = ranges
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), &(a, b)| (lo.min(b - a), hi.max(b - a)));
+            assert!(max - min <= 1, "near-even split");
+        }
+        assert_eq!(contiguous_ranges(0, 4), vec![(0, 0)]);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! End-to-end sharded big-n training properties:
+//!
+//! 1. The sharded parallel fit is **bitwise identical** to the
+//!    single-store fit across shard counts {1, 2, 4} × thread /
+//!    shard-worker counts {1, 2, 4} — the merge-tile prefix carries
+//!    make the distributed risk-set scan partition-invariant.
+//! 2. Heavy ties quantized onto shard boundaries don't move a bit:
+//!    the shard cutter keeps every tie group whole.
+//! 3. A crash-interrupted shard rewrite (stray next-generation shard
+//!    files, temp leftovers) leaves the previously published manifest
+//!    view openable and its fit unchanged.
+//! 4. Tampered manifests (overlapping time ranges) surface as typed
+//!    `FastSurvivalError::Store`; `inspect` cross-checks every shard
+//!    against the manifest and flags missing files.
+
+use fastsurvival::coordinator::inspect::inspect_shards;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::data::SurvivalDataset;
+use fastsurvival::error::FastSurvivalError;
+use fastsurvival::optim::{Objective, SurrogateKind};
+use fastsurvival::store::shard::shard_file_path;
+use fastsurvival::store::{
+    shard_manifest_path, write_sharded_store, write_store, ChunkedDataset, DatasetRows,
+    ShardManifest, ShardedDataset, StreamingFit, StreamingFitResult,
+};
+use fastsurvival::util::compute::{Compute, Precision};
+use std::path::{Path, PathBuf};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fs_shard_integration_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fitter(threads: usize) -> StreamingFit {
+    StreamingFit {
+        objective: Objective { l1: 0.0, l2: 1.0 },
+        surrogate: SurrogateKind::Quadratic,
+        max_sweeps: 4000,
+        tol: 0.0,
+        stop_kkt: 1e-8,
+        compute: Compute::default().threads(threads),
+        ..Default::default()
+    }
+}
+
+fn assert_bitwise(a: &StreamingFitResult, b: &StreamingFitResult, tag: &str) {
+    assert_eq!(a.sweeps, b.sweeps, "{tag}: sweep counts diverged");
+    assert_eq!(
+        a.objective_value.to_bits(),
+        b.objective_value.to_bits(),
+        "{tag}: objective diverged ({} vs {})",
+        a.objective_value,
+        b.objective_value
+    );
+    for (l, (x, y)) in a.beta.iter().zip(b.beta.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: beta[{l}] {x} vs {y}");
+    }
+    for (k, (x, y)) in a.eta.iter().zip(b.eta.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: eta[{k}] {x} vs {y}");
+    }
+}
+
+/// Write both views of `ds`, fit the single store once, then demand the
+/// sharded fit reproduce it bit for bit at every (shards × workers)
+/// combination. Thread counts are pinned through `Compute` (never the
+/// env — libtest runs tests concurrently).
+fn check_parity(
+    ds: &SurvivalDataset,
+    dir: &Path,
+    chunk_rows: usize,
+    shard_counts: &[usize],
+    worker_counts: &[usize],
+) {
+    let single_path = dir.join("single.fsds");
+    let mut rows = DatasetRows::new(ds);
+    write_store(&mut rows, &single_path, chunk_rows, "single").unwrap();
+    let mut single = ChunkedDataset::open(&single_path).unwrap();
+    let reference = fitter(1).fit(&mut single).unwrap();
+
+    for &shards in shard_counts {
+        let out = dir.join(format!("sharded{shards}.fsds"));
+        let mut rows = DatasetRows::new(ds);
+        let summary =
+            write_sharded_store(&mut rows, &out, chunk_rows, "sharded", Precision::F64, shards)
+                .unwrap();
+        assert!(summary.n_shards >= 1 && summary.n_shards <= shards);
+        for &workers in worker_counts {
+            let mut sharded = ShardedDataset::open(&out).unwrap();
+            let got = fitter(workers).fit_sharded(&mut sharded, workers).unwrap();
+            assert_bitwise(&reference, &got, &format!("shards={shards} workers={workers}"));
+        }
+    }
+}
+
+#[test]
+fn sharded_fit_is_bitwise_identical_across_shards_and_workers() {
+    let dir = temp_dir("parity");
+    let ds = generate(&SyntheticConfig { n: 900, p: 6, rho: 0.3, k: 3, s: 0.1, seed: 71 });
+    check_parity(&ds, &dir, 128, &[1, 2, 4], &[1, 2, 4]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn heavy_ties_at_shard_boundaries_stay_bitwise() {
+    let dir = temp_dir("ties");
+    let mut ds =
+        generate(&SyntheticConfig { n: 480, p: 5, rho: 0.2, k: 2, s: 0.1, seed: 83 });
+    // Quantize times onto a coarse grid: long runs of exact ties that
+    // the shard cutter must keep whole wherever the boundaries land.
+    for t in ds.time.iter_mut() {
+        *t = (*t * 3.0).ceil().max(1.0) / 3.0;
+    }
+    check_parity(&ds, &dir, 64, &[2, 4], &[1, 2]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interrupted_rewrite_leaves_published_generation_readable() {
+    let dir = temp_dir("crash");
+    let ds = generate(&SyntheticConfig { n: 300, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 97 });
+    let out = dir.join("crash.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_sharded_store(&mut rows, &out, 64, "crash", Precision::F64, 3).unwrap();
+    let before = {
+        let mut sharded = ShardedDataset::open(&out).unwrap();
+        fitter(1).fit_sharded(&mut sharded, 2).unwrap()
+    };
+
+    // A rewrite that died mid-flight: next-generation shard files (one
+    // complete-looking, one partial temp) exist, but the manifest was
+    // never republished. Readers must keep seeing the old generation.
+    let generation = ShardManifest::load(&shard_manifest_path(&out)).unwrap().unwrap().generation;
+    std::fs::write(shard_file_path(&out, generation + 1, 0), b"half-written junk").unwrap();
+    std::fs::write(
+        format!("{}.partial.tmp", shard_file_path(&out, generation + 1, 1).display()),
+        b"junk",
+    )
+    .unwrap();
+
+    let report = inspect_shards(&out).unwrap();
+    assert!(report.healthy(), "published generation must stay healthy: {report:?}");
+    let mut sharded = ShardedDataset::open(&out).unwrap();
+    let after = fitter(1).fit_sharded(&mut sharded, 2).unwrap();
+    assert_bitwise(&before, &after, "pre/post interrupted rewrite");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_manifests_and_missing_shards_are_caught() {
+    let dir = temp_dir("tamper");
+    let ds = generate(&SyntheticConfig { n: 300, p: 4, rho: 0.2, k: 2, s: 0.1, seed: 101 });
+    let out = dir.join("tamper.fsds");
+    let mut rows = DatasetRows::new(&ds);
+    write_sharded_store(&mut rows, &out, 64, "tamper", Precision::F64, 3).unwrap();
+    let mpath = shard_manifest_path(&out);
+    let good = ShardManifest::load(&mpath).unwrap().unwrap();
+
+    // Overlapping time ranges (shard 0 claims to reach past shard 1's
+    // start) break the risk-set prefix structure: typed Store error at
+    // open, before any fit can run.
+    let mut bad = good.clone();
+    bad.shards[0].t_last = bad.shards[1].t_first - 1e-9;
+    bad.save(&mpath).unwrap();
+    assert!(matches!(ShardedDataset::open(&out), Err(FastSurvivalError::Store(_))));
+    assert!(matches!(inspect_shards(&out), Err(FastSurvivalError::Store(_))));
+
+    // Restore, then delete a shard file: inspect names the hole and the
+    // verdict goes unhealthy; the assembled open fails too.
+    good.save(&mpath).unwrap();
+    std::fs::remove_file(dir.join(&good.shards[1].file)).unwrap();
+    let report = inspect_shards(&out).unwrap();
+    assert!(!report.healthy());
+    assert!(!report.shards[1].ok);
+    assert!(!report.assembled_ok);
+    assert!(matches!(
+        ShardedDataset::open(&out),
+        Err(FastSurvivalError::Store(_) | FastSurvivalError::Io { .. })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
