@@ -22,6 +22,7 @@ use crate::cox::{CoxProblem, CoxState};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
 use crate::metrics::BreslowBaseline;
+use crate::obs::{obs_snapshot, FitReport, ObsSnapshot};
 use crate::optim::{FitConfig, Objective, Optimizer, SurrogateKind};
 use crate::path::{CardinalityPath, CardinalitySolver, PathSolver};
 use crate::runtime::engine::CoxEngine;
@@ -250,6 +251,7 @@ impl CoxFit {
             compute: rc,
         };
 
+        let obs_before = obs_snapshot();
         let t0 = Instant::now();
         let state = CoxState::zeros(&problem);
         let res = optimizer.fit_from(&problem, state, &config, engine.as_ref())?;
@@ -278,6 +280,7 @@ impl CoxFit {
             n_events: ds.n_events(),
             wall_secs,
             trace: res.trace,
+            report: capture_report(&obs_before),
         };
         Ok(CoxModel::from_parts(
             ds.feature_names.clone(),
@@ -346,6 +349,7 @@ impl CoxFit {
             compute: self.compute,
             ..Default::default()
         };
+        let obs_before = obs_snapshot();
         let t0 = Instant::now();
         let res = fitter.fit(&mut data)?;
         let wall_secs = t0.elapsed().as_secs_f64();
@@ -373,6 +377,7 @@ impl CoxFit {
             n_events: meta.n_events,
             wall_secs,
             trace: res.trace,
+            report: capture_report(&obs_before),
         };
         Ok(CoxModel::from_parts(
             meta.feature_names.clone(),
@@ -441,6 +446,7 @@ impl CoxFit {
             backend: rc.backend,
             ..Default::default()
         };
+        let obs_before = obs_snapshot();
         let t0 = Instant::now();
         let path = solver.run(&problem)?;
         let wall_secs = t0.elapsed().as_secs_f64();
@@ -462,7 +468,7 @@ impl CoxFit {
                 }
             })
             .collect();
-        Ok(CoxPath::from_parts(
+        let mut out = CoxPath::from_parts(
             PathKind::L1,
             ds.feature_names.clone(),
             points,
@@ -470,7 +476,9 @@ impl CoxFit {
             ds.n(),
             ds.n_events(),
             wall_secs,
-        ))
+        );
+        out.set_report(capture_report(&obs_before));
+        Ok(out)
     }
 
     /// Fit the cardinality path k = 1..=`max_k` with the paper's beam
@@ -502,6 +510,7 @@ impl CoxFit {
         let ds = dataset_for(ds, rc.precision);
         let ds = ds.as_ref();
         let problem = CoxProblem::try_new(ds)?;
+        let obs_before = obs_snapshot();
         let t0 = Instant::now();
         let path: CardinalityPath = solver.run(&problem, max_k);
         let wall_secs = t0.elapsed().as_secs_f64();
@@ -528,7 +537,7 @@ impl CoxFit {
                 }
             })
             .collect();
-        Ok(CoxPath::from_parts(
+        let mut out = CoxPath::from_parts(
             PathKind::Cardinality,
             ds.feature_names.clone(),
             points,
@@ -536,7 +545,21 @@ impl CoxFit {
             ds.n(),
             ds.n_events(),
             wall_secs,
-        ))
+        );
+        out.set_report(capture_report(&obs_before));
+        Ok(out)
+    }
+}
+
+/// Diff the observability sink against a pre-fit snapshot: `Some` only
+/// when tracing was enabled and the fit actually recorded spans or
+/// counters, so untraced runs serialize `"report": null` unchanged.
+fn capture_report(before: &ObsSnapshot) -> Option<FitReport> {
+    let report = FitReport::capture_since(before);
+    if report.is_empty() {
+        None
+    } else {
+        Some(report)
     }
 }
 

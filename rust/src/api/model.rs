@@ -2,11 +2,13 @@
 //! the fitted Breslow baseline, fit diagnostics, prediction, evaluation,
 //! and JSON persistence.
 
-use super::json;
+use super::json::{self, Json};
 use crate::data::SurvivalDataset;
 use crate::error::{FastSurvivalError, Result};
 use crate::linalg::Matrix;
 use crate::metrics::{concordance_index, BreslowBaseline};
+use crate::obs::FitReport;
+use crate::optim::objective::TracePoint;
 use crate::optim::Trace;
 use std::path::Path;
 
@@ -37,8 +39,82 @@ pub struct FitDiagnostics {
     pub n_events: usize,
     /// Wall-clock fit time in seconds.
     pub wall_secs: f64,
-    /// Full loss history (empty on loaded models — it is not persisted).
+    /// Full loss history with per-point sweep counts and KKT residuals.
+    /// Persisted in the saved JSON (models saved by older builds load
+    /// with an empty trace).
     pub trace: Trace,
+    /// Observability report for the fit: per-phase span timings and
+    /// engine counters, captured only when tracing was enabled
+    /// ([`crate::obs::set_enabled`]). Persisted when present.
+    pub report: Option<FitReport>,
+}
+
+/// Serialize a loss trace — shared by the model and path documents.
+pub(crate) fn write_trace_json(out: &mut String, t: &Trace) {
+    out.push_str("{\"diverged\": ");
+    out.push_str(if t.diverged { "true" } else { "false" });
+    out.push_str(", \"converged\": ");
+    out.push_str(if t.converged { "true" } else { "false" });
+    out.push_str(", \"budget_exhausted\": ");
+    out.push_str(if t.budget_exhausted { "true" } else { "false" });
+    out.push_str(", \"points\": [");
+    for (i, pt) in t.points.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{{\"iter\": {}, \"secs\": ", pt.iter));
+        json::write_f64(out, pt.secs);
+        out.push_str(", \"loss\": ");
+        json::write_f64(out, pt.loss);
+        out.push_str(&format!(", \"sweeps\": {}, \"kkt\": ", pt.sweeps));
+        match pt.kkt {
+            Some(v) => json::write_f64(out, v),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+}
+
+/// Rebuild a loss trace from [`write_trace_json`] output.
+pub(crate) fn trace_from_json(v: &Json) -> Result<Trace> {
+    let points_json = v.require("points")?.as_array()?;
+    let mut points = Vec::with_capacity(points_json.len());
+    for pt in points_json {
+        points.push(TracePoint {
+            iter: pt.require("iter")?.as_usize()?,
+            secs: pt.require("secs")?.as_f64()?,
+            loss: pt.require("loss")?.as_f64()?,
+            sweeps: pt.require("sweeps")?.as_usize()?,
+            kkt: match pt.require("kkt")? {
+                Json::Null => None,
+                other => Some(other.as_f64()?),
+            },
+        });
+    }
+    Ok(Trace {
+        points,
+        diverged: v.require("diverged")?.as_bool()?,
+        converged: v.require("converged")?.as_bool()?,
+        budget_exhausted: v.require("budget_exhausted")?.as_bool()?,
+    })
+}
+
+/// Write an optional fit report as its JSON object or `null`.
+pub(crate) fn write_report_field(out: &mut String, report: &Option<FitReport>) {
+    match report {
+        Some(r) => r.write_json(out),
+        None => out.push_str("null"),
+    }
+}
+
+/// Read the optional `report` field of a diagnostics object — absent
+/// (older files) and `null` both load as `None`.
+pub(crate) fn report_from_json(d: &Json) -> Result<Option<FitReport>> {
+    match d.get("report") {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(FitReport::from_json(v)?)),
+    }
 }
 
 /// One coefficient keyed by its original feature index and name — the
@@ -219,12 +295,18 @@ impl CoxModel {
         out.push_str(&format!(", \"n_events\": {}", d.n_events));
         out.push_str(", \"wall_secs\": ");
         json::write_f64(&mut out, d.wall_secs);
+        out.push_str(", \"trace\": ");
+        write_trace_json(&mut out, &d.trace);
+        out.push_str(", \"report\": ");
+        write_report_field(&mut out, &d.report);
         out.push_str("}\n}\n");
         out
     }
 
     /// Rebuild a model from [`CoxModel::to_json`] output. The loss trace
-    /// is not persisted; `diagnostics.trace` comes back empty.
+    /// (with per-point sweep counts and KKT residuals) and the optional
+    /// observability report round-trip; files saved by older builds load
+    /// with an empty trace and no report.
     pub fn from_json(text: &str) -> Result<Self> {
         let doc = json::parse(text)?;
         let version = doc.require("format_version")?.as_usize()?;
@@ -265,7 +347,11 @@ impl CoxModel {
             n_train: d.require("n_train")?.as_usize()?,
             n_events: d.require("n_events")?.as_usize()?,
             wall_secs: d.require("wall_secs")?.as_f64()?,
-            trace: Trace::default(),
+            trace: match d.get("trace") {
+                Some(v) => trace_from_json(v)?,
+                None => Trace::default(),
+            },
+            report: report_from_json(d)?,
         };
         Ok(CoxModel { feature_names, beta, baseline, diagnostics })
     }
@@ -316,7 +402,22 @@ mod tests {
                 n_train: 4,
                 n_events: 3,
                 wall_secs: 0.01,
-                trace: Trace::default(),
+                trace: Trace {
+                    points: vec![
+                        TracePoint { iter: 0, secs: 0.001, loss: 4.0, sweeps: 1, kkt: None },
+                        TracePoint {
+                            iter: 1,
+                            secs: 0.002,
+                            loss: 3.5,
+                            sweeps: 2,
+                            kkt: Some(1.25e-7),
+                        },
+                    ],
+                    diverged: false,
+                    converged: true,
+                    budget_exhausted: false,
+                },
+                report: None,
             },
         )
     }
@@ -334,6 +435,37 @@ mod tests {
         assert_eq!(d.converged, e.converged);
         assert_eq!(d.optimizer, e.optimizer);
         assert_eq!(d.objective_value, e.objective_value);
+        // The loss trace round-trips point for point, including the
+        // per-point sweep counts and optional KKT residuals.
+        assert_eq!(d.trace.points.len(), e.trace.points.len());
+        for (a, b) in d.trace.points.iter().zip(e.trace.points.iter()) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.sweeps, b.sweeps);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.kkt, b.kkt);
+        }
+        assert_eq!(d.trace.converged, e.trace.converged);
+        assert!(e.report.is_none());
+    }
+
+    #[test]
+    fn fit_report_round_trips_on_the_model() {
+        let mut m = toy_model();
+        m.diagnostics.report = Some(FitReport {
+            phases: vec![crate::obs::report::PhaseReport {
+                phase: "cd_sweep".into(),
+                count: 7,
+                total_ns: 9000,
+                self_ns: 8000,
+            }],
+            counters: crate::obs::CounterSnapshot {
+                kernel_simd: 42,
+                workspace_hits: 3,
+                ..Default::default()
+            },
+        });
+        let r = CoxModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(r.diagnostics.report, m.diagnostics.report);
     }
 
     #[test]

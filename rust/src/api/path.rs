@@ -10,9 +10,10 @@
 //! through the same in-repo JSON layer as single models.
 
 use super::json;
-use super::model::{CoxModel, FitDiagnostics};
+use super::model::{report_from_json, write_report_field, CoxModel, FitDiagnostics};
 use crate::error::{FastSurvivalError, Result};
 use crate::metrics::BreslowBaseline;
+use crate::obs::FitReport;
 use crate::optim::Trace;
 use std::path::Path;
 
@@ -77,6 +78,9 @@ pub struct CoxPath {
     n_train: usize,
     n_events: usize,
     wall_secs: f64,
+    /// Observability report for the whole path solve, captured when
+    /// tracing was enabled ([`crate::obs::set_enabled`]).
+    report: Option<FitReport>,
 }
 
 impl CoxPath {
@@ -90,7 +94,26 @@ impl CoxPath {
         n_events: usize,
         wall_secs: f64,
     ) -> Self {
-        CoxPath { kind, feature_names, points, optimizer, n_train, n_events, wall_secs }
+        CoxPath {
+            kind,
+            feature_names,
+            points,
+            optimizer,
+            n_train,
+            n_events,
+            wall_secs,
+            report: None,
+        }
+    }
+
+    /// Per-phase span timings and engine counters for the whole path
+    /// solve (None unless tracing was enabled during the fit).
+    pub fn report(&self) -> Option<&FitReport> {
+        self.report.as_ref()
+    }
+
+    pub(crate) fn set_report(&mut self, report: Option<FitReport>) {
+        self.report = report;
     }
 
     pub fn kind(&self) -> PathKind {
@@ -142,6 +165,7 @@ impl CoxPath {
             n_events: self.n_events,
             wall_secs: self.wall_secs,
             trace: Trace::default(),
+            report: None,
         }
     }
 
@@ -219,6 +243,8 @@ impl CoxPath {
         out.push_str(&format!(",\n  \"n_events\": {}", self.n_events));
         out.push_str(",\n  \"wall_secs\": ");
         json::write_f64(&mut out, self.wall_secs);
+        out.push_str(",\n  \"report\": ");
+        write_report_field(&mut out, &self.report);
         out.push_str(",\n  \"feature_names\": ");
         json::write_str_array(&mut out, &self.feature_names);
         out.push_str(",\n  \"points\": [\n");
@@ -264,6 +290,7 @@ impl CoxPath {
         let n_train = doc.require("n_train")?.as_usize()?;
         let n_events = doc.require("n_events")?.as_usize()?;
         let wall_secs = doc.require("wall_secs")?.as_f64()?;
+        let report = report_from_json(&doc)?;
         let mut points = Vec::new();
         for p in doc.require("points")?.as_array()? {
             let lambda = match p.require("lambda")? {
@@ -299,7 +326,16 @@ impl CoxPath {
                 baseline,
             });
         }
-        Ok(CoxPath { kind, feature_names, points, optimizer, n_train, n_events, wall_secs })
+        Ok(CoxPath {
+            kind,
+            feature_names,
+            points,
+            optimizer,
+            n_train,
+            n_events,
+            wall_secs,
+            report,
+        })
     }
 
     /// Save to a JSON file (parent directories are created).
@@ -380,6 +416,27 @@ mod tests {
             assert_eq!(a.baseline.times, b.baseline.times);
             assert_eq!(a.baseline.cumhaz, b.baseline.cumhaz);
         }
+        assert!(r.report().is_none());
+    }
+
+    #[test]
+    fn fit_report_round_trips_on_the_path() {
+        let mut p = toy_path();
+        p.set_report(Some(FitReport {
+            phases: vec![crate::obs::report::PhaseReport {
+                phase: "path_screen".into(),
+                count: 12,
+                total_ns: 4000,
+                self_ns: 4000,
+            }],
+            counters: crate::obs::CounterSnapshot {
+                screened_skips: 30,
+                kkt_repair_rounds: 2,
+                ..Default::default()
+            },
+        }));
+        let r = CoxPath::from_json(&p.to_json()).unwrap();
+        assert_eq!(r.report(), p.report());
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod cv;
 pub mod experiments;
 pub mod inspect;
 pub mod perf;
+pub mod profile;
 
 pub use cv::{
     cv_cardinality_path, cv_l1_path, cv_selector, CvRow, PathCvResult, SelectionCriterion,

@@ -54,6 +54,12 @@ const PATH_ENDPOINT_TOL: f64 = 1e-8;
 /// machine, so it is machine-independent.
 const REQUIRED_SIMD_SPEEDUP: f64 = 1.3;
 
+/// Maximum slowdown the telemetry layer may impose on the tracked
+/// batched workload when spans and counters are enabled, in percent.
+/// Like the path and SIMD gates, the ratio compares two timings from
+/// one run on one machine, so it is machine-independent.
+const MAX_OBS_OVERHEAD_PCT: f64 = 1.0;
+
 /// Default slow-down tolerance for `--check`, in percent.
 const DEFAULT_TOLERANCE_PCT: f64 = 25.0;
 
@@ -323,6 +329,84 @@ fn bench_backend_sweep(
     })
 }
 
+/// Everything the telemetry-overhead gate tracks for one run.
+struct ObsGateInfo {
+    tracked: String,
+    reference: String,
+    threads: usize,
+    /// (enabled min / disabled min − 1) × 100 on the tracked workload.
+    overhead_pct: f64,
+}
+
+impl ObsGateInfo {
+    fn passed(&self) -> bool {
+        self.overhead_pct <= MAX_OBS_OVERHEAD_PCT
+    }
+}
+
+/// Benchmark the batched derivative pass with telemetry disabled (the
+/// default: every span and counter short-circuits on one relaxed atomic
+/// load) and then enabled, same run, same workload. min_ns is compared
+/// rather than the median: the gate asks whether instrumentation adds
+/// work to the hot path, and the minimum is the cleanest estimate of
+/// the undisturbed cost on a noisy runner.
+fn bench_obs_gate(
+    entries: &mut Vec<Entry>,
+    b: &mut Bencher,
+    n: usize,
+    p: usize,
+    seed: u64,
+    threads: usize,
+) -> ObsGateInfo {
+    let pr = synthetic_problem(n, p, seed, false);
+    let st = bench_state(&pr, seed ^ 0x5eed);
+    let off_name = format!("batched_obs_off_t{threads}_n{n}_p{p}");
+    let on_name = format!("batched_obs_on_t{threads}_n{n}_p{p}");
+    let mut ws = Workspace::default();
+    b.bench(&off_name, || {
+        black_box(all_coord_d1_d2_with_threads(&pr, &st, &mut ws, threads));
+    });
+    push_entry(
+        entries,
+        b,
+        off_name.clone(),
+        "all_coord_d1_d2_blocked",
+        n,
+        p,
+        false,
+        1,
+        threads,
+        seed,
+    );
+    let off_min = entries.last().expect("just pushed").min_ns;
+    crate::obs::set_enabled(true);
+    crate::obs::reset();
+    b.bench(&on_name, || {
+        black_box(all_coord_d1_d2_with_threads(&pr, &st, &mut ws, threads));
+    });
+    crate::obs::set_enabled(false);
+    crate::obs::reset();
+    push_entry(
+        entries,
+        b,
+        on_name.clone(),
+        "all_coord_d1_d2_blocked_traced",
+        n,
+        p,
+        false,
+        1,
+        threads,
+        seed,
+    );
+    let on_min = entries.last().expect("just pushed").min_ns;
+    ObsGateInfo {
+        tracked: on_name,
+        reference: off_name,
+        threads,
+        overhead_pct: (on_min / off_min - 1.0) * 100.0,
+    }
+}
+
 /// Everything the path gate tracks for one run.
 struct PathGateInfo {
     tracked: String,
@@ -494,6 +578,17 @@ pub fn run(args: &Args) -> Result<()> {
         &sweep_backends,
     );
 
+    // --- Telemetry overhead on the tracked workload: spans + counters
+    // disabled vs enabled (the obs_gate ratio). ------------------------
+    let obs_gate = bench_obs_gate(
+        &mut entries,
+        &mut b,
+        sizes.n_main,
+        sizes.p_main,
+        42,
+        sweep_threads,
+    );
+
     // --- Tied times. --------------------------------------------------
     bench_batched_pair(&mut entries, &mut b, sizes.n_ties, sizes.p_ties, 43, true, "_ties");
 
@@ -638,6 +733,13 @@ pub fn run(args: &Args) -> Result<()> {
         ),
         None => println!("simd gate: skipped (--backend restricted the sweep to one backend)"),
     }
+    println!(
+        "obs gate: {} vs {}: overhead {:.2}% (max {MAX_OBS_OVERHEAD_PCT:.1}%) — {}",
+        obs_gate.tracked,
+        obs_gate.reference,
+        obs_gate.overhead_pct,
+        if obs_gate.passed() { "OK" } else { "ABOVE BUDGET" }
+    );
 
     let doc = render_json(
         quick,
@@ -648,6 +750,7 @@ pub fn run(args: &Args) -> Result<()> {
         gate_speedup,
         &path_gate,
         simd_gate.as_ref(),
+        &obs_gate,
     );
     std::fs::write(&out_path, &doc)
         .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
@@ -659,6 +762,7 @@ pub fn run(args: &Args) -> Result<()> {
             gate_speedup,
             &path_gate,
             simd_gate.as_ref(),
+            &obs_gate,
             Path::new(baseline),
         )?;
     }
@@ -675,6 +779,7 @@ fn render_json(
     gate_speedup: f64,
     path_gate: &PathGateInfo,
     simd_gate: Option<&SimdGateInfo>,
+    obs_gate: &ObsGateInfo,
 ) -> String {
     let mut out = String::with_capacity(4096);
     out.push_str("{\n");
@@ -730,6 +835,17 @@ fn render_json(
         json::write_f64(&mut out, REQUIRED_SIMD_SPEEDUP);
         out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", sg.passed()));
     }
+    out.push_str("  \"obs_gate\": {\n");
+    out.push_str("    \"tracked\": ");
+    json::write_str(&mut out, &obs_gate.tracked);
+    out.push_str(",\n    \"reference\": ");
+    json::write_str(&mut out, &obs_gate.reference);
+    out.push_str(&format!(",\n    \"threads\": {}", obs_gate.threads));
+    out.push_str(",\n    \"overhead_pct\": ");
+    json::write_f64(&mut out, obs_gate.overhead_pct);
+    out.push_str(",\n    \"max_overhead_pct\": ");
+    json::write_f64(&mut out, MAX_OBS_OVERHEAD_PCT);
+    out.push_str(&format!(",\n    \"passed\": {}\n  }},\n", obs_gate.passed()));
     out.push_str("  \"entries\": [\n");
     for (i, e) in entries.iter().enumerate() {
         out.push_str("    {\"name\": ");
@@ -773,6 +889,7 @@ fn check_against_baseline(
     gate_speedup: f64,
     path_gate: &PathGateInfo,
     simd_gate: Option<&SimdGateInfo>,
+    obs_gate: &ObsGateInfo,
     baseline_path: &Path,
 ) -> Result<()> {
     let text = match std::fs::read_to_string(baseline_path) {
@@ -895,6 +1012,33 @@ fn check_against_baseline(
             }
         }
     }
+    // The telemetry-overhead gate: enabled-vs-disabled ratio from this
+    // run, armed by the baseline's `obs_gate.enforce` like the gates
+    // above. NaN (degenerate timings) fails rather than passing silently.
+    if let Some(og_base) = doc.get("obs_gate") {
+        let enforce =
+            og_base.get("enforce").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false);
+        let max_pct = og_base
+            .get("max_overhead_pct")
+            .map(|v| v.as_f64().unwrap_or(MAX_OBS_OVERHEAD_PCT))
+            .unwrap_or(MAX_OBS_OVERHEAD_PCT);
+        if obs_gate.overhead_pct.is_nan() || obs_gate.overhead_pct > max_pct {
+            let msg = format!(
+                "enabled telemetry slows the tracked batched pass by {:.2}% \
+                 (budget {max_pct:.1}%)",
+                obs_gate.overhead_pct
+            );
+            if enforce {
+                return Err(FastSurvivalError::PerfRegression(msg));
+            }
+            println!("perf gate: obs gate advisory (enforce=false): {msg}");
+        } else {
+            println!(
+                "perf gate: telemetry overhead {:.2}% (budget {max_pct:.1}%) — ok",
+                obs_gate.overhead_pct
+            );
+        }
+    }
     let baseline_entries = match doc.get("entries") {
         Some(arr) => arr.as_array()?.to_vec(),
         None => Vec::new(),
@@ -968,6 +1112,15 @@ mod tests {
         }
     }
 
+    fn og(overhead_pct: f64) -> ObsGateInfo {
+        ObsGateInfo {
+            tracked: "batched_obs_on_t4_n2000_p24".into(),
+            reference: "batched_obs_off_t4_n2000_p24".into(),
+            threads: 4,
+            overhead_pct,
+        }
+    }
+
     #[test]
     fn path_gate_enforced_only_when_baseline_opts_in() {
         let dir = std::env::temp_dir().join("fs_perf_path_gate_test");
@@ -981,19 +1134,21 @@ mod tests {
         )
         .unwrap();
         // Healthy run passes (bootstrap does not disarm the ratio gate).
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &armed)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &armed)
             .expect("healthy path gate");
         // Too-slow warm path fails.
-        let err = check_against_baseline(&[], 2.0, &pg(1.5, 1e-12), Some(&sg(2.0)), &armed)
-            .unwrap_err();
+        let err =
+            check_against_baseline(&[], 2.0, &pg(1.5, 1e-12), Some(&sg(2.0)), &og(0.2), &armed)
+                .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // Endpoint drift fails.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-3), Some(&sg(2.0)), &armed)
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-3), Some(&sg(2.0)), &og(0.2), &armed)
             .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // NaN drift (corrupt losses) fails rather than passing silently.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, f64::NAN), Some(&sg(2.0)), &armed)
-            .unwrap_err();
+        let err =
+            check_against_baseline(&[], 2.0, &pg(8.0, f64::NAN), Some(&sg(2.0)), &og(0.2), &armed)
+                .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // Without enforce, the same shortfall is advisory.
         let advisory = dir.join("advisory.json");
@@ -1002,12 +1157,12 @@ mod tests {
             "{\"bootstrap\": true, \"entries\": [], \"path_gate\": {\"enforce\": false}}",
         )
         .unwrap();
-        check_against_baseline(&[], 2.0, &pg(1.5, 1e-3), Some(&sg(2.0)), &advisory)
+        check_against_baseline(&[], 2.0, &pg(1.5, 1e-3), Some(&sg(2.0)), &og(0.2), &advisory)
             .expect("advisory path gate must not fail");
         // A baseline with no path_gate object skips the check entirely.
         let silent = dir.join("silent.json");
         std::fs::write(&silent, "{\"bootstrap\": true, \"entries\": []}").unwrap();
-        check_against_baseline(&[], 2.0, &pg(0.5, 1.0), Some(&sg(2.0)), &silent)
+        check_against_baseline(&[], 2.0, &pg(0.5, 1.0), Some(&sg(2.0)), &og(0.2), &silent)
             .expect("no path gate");
     }
 
@@ -1023,18 +1178,21 @@ mod tests {
         )
         .unwrap();
         // Healthy SIMD speedup passes.
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.5)), &armed)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.5)), &og(0.2), &armed)
             .expect("healthy simd gate");
         // Too-slow SIMD kernels fail.
         let err =
-            check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &armed).unwrap_err();
+            check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &og(0.2), &armed)
+                .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // NaN ratio (degenerate timings) fails rather than passing silently.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(f64::NAN)), &armed)
-            .unwrap_err();
+        let err =
+            check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(f64::NAN)), &og(0.2), &armed)
+                .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // A run that skipped the sweep (--backend restricted it) fails an armed gate.
-        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &armed).unwrap_err();
+        let err = check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &og(0.2), &armed)
+            .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
         // Without enforce, the same shortfall is advisory.
         let advisory = dir.join("advisory.json");
@@ -1043,15 +1201,64 @@ mod tests {
             "{\"bootstrap\": true, \"entries\": [], \"simd_gate\": {\"enforce\": false}}",
         )
         .unwrap();
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &advisory)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(1.1)), &og(0.2), &advisory)
             .expect("advisory simd gate must not fail");
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &advisory)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), None, &og(0.2), &advisory)
             .expect("advisory simd gate tolerates a skipped sweep");
         // A baseline with no simd_gate object skips the check entirely.
         let silent = dir.join("silent.json");
         std::fs::write(&silent, "{\"bootstrap\": true, \"entries\": []}").unwrap();
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(0.2)), &silent)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(0.2)), &og(0.2), &silent)
             .expect("no simd gate");
+    }
+
+    #[test]
+    fn obs_gate_enforced_only_when_baseline_opts_in() {
+        let dir = std::env::temp_dir().join("fs_perf_obs_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let armed = dir.join("armed.json");
+        std::fs::write(
+            &armed,
+            "{\"bootstrap\": true, \"entries\": [], \
+              \"obs_gate\": {\"enforce\": true, \"max_overhead_pct\": 1.0}}",
+        )
+        .unwrap();
+        // Overhead within budget passes (bootstrap does not disarm the ratio gate).
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.5), &armed)
+            .expect("healthy obs gate");
+        // Negative overhead (enabled run landed faster — pure noise) passes.
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(-0.3), &armed)
+            .expect("negative overhead is within budget");
+        // Over-budget overhead fails.
+        let err =
+            check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(4.0), &armed)
+                .unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
+        // NaN overhead (degenerate timings) fails rather than passing silently.
+        let err = check_against_baseline(
+            &[],
+            2.0,
+            &pg(8.0, 1e-12),
+            Some(&sg(2.0)),
+            &og(f64::NAN),
+            &armed,
+        )
+        .unwrap_err();
+        assert!(matches!(err, FastSurvivalError::PerfRegression(_)), "got {err}");
+        // Without enforce, the same overrun is advisory.
+        let advisory = dir.join("advisory.json");
+        std::fs::write(
+            &advisory,
+            "{\"bootstrap\": true, \"entries\": [], \"obs_gate\": {\"enforce\": false}}",
+        )
+        .unwrap();
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(4.0), &advisory)
+            .expect("advisory obs gate must not fail");
+        // A baseline with no obs_gate object skips the check entirely.
+        let silent = dir.join("silent.json");
+        std::fs::write(&silent, "{\"bootstrap\": true, \"entries\": []}").unwrap();
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(50.0), &silent)
+            .expect("no obs gate");
     }
 
     #[test]
@@ -1083,6 +1290,7 @@ mod tests {
             2.5,
             &pg(6.5, 2e-12),
             Some(&sg(1.8)),
+            &og(0.4),
         );
         let parsed = json::parse(&doc).expect("self-emitted JSON must parse");
         assert_eq!(parsed.require("schema_version").unwrap().as_usize().unwrap(), 1);
@@ -1103,6 +1311,15 @@ mod tests {
         );
         assert_eq!(sgate.require("threads").unwrap().as_usize().unwrap(), 4);
         assert!(sgate.require("passed").unwrap().as_bool().unwrap());
+        let ogate = parsed.require("obs_gate").unwrap();
+        assert!((ogate.require("overhead_pct").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-12);
+        assert!(
+            (ogate.require("max_overhead_pct").unwrap().as_f64().unwrap()
+                - MAX_OBS_OVERHEAD_PCT)
+                .abs()
+                < 1e-12
+        );
+        assert!(ogate.require("passed").unwrap().as_bool().unwrap());
         let arr = parsed.require("entries").unwrap().as_array().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].require("n").unwrap().as_usize().unwrap(), 100);
@@ -1116,19 +1333,19 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("armed_baseline.json");
         std::fs::write(&path, "{\"bootstrap\": false, \"entries\": []}").unwrap();
-        let err = check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+        let err = check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &path)
             .unwrap_err();
         assert!(
             matches!(err, FastSurvivalError::PerfRegression(_)),
             "expected PerfRegression, got {err}"
         );
         // Marginal shortfalls stay within the noise floor and pass.
-        check_against_baseline(&[], 0.9, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+        check_against_baseline(&[], 0.9, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &path)
             .expect("within INVARIANT_MIN_SPEEDUP slack");
         // A bootstrap baseline downgrades even a clear shortfall to advisory.
         let boot = dir.join("bootstrap_baseline.json");
         std::fs::write(&boot, "{\"bootstrap\": true, \"entries\": []}").unwrap();
-        check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &boot)
+        check_against_baseline(&[], 0.5, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &boot)
             .expect("bootstrap invariant is advisory");
     }
 
@@ -1137,9 +1354,9 @@ mod tests {
         // Recording-only mode: no baseline means nothing to compare, even
         // the invariant (there is no armed gate to protect yet).
         let missing = Path::new("/nonexistent/baseline.json");
-        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), missing)
+        check_against_baseline(&[], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), missing)
             .expect("missing baseline must degrade to recording-only");
-        check_against_baseline(&[], 0.5, &pg(0.5, 1.0), Some(&sg(0.8)), missing)
+        check_against_baseline(&[], 0.5, &pg(0.5, 1.0), Some(&sg(0.8)), &og(0.8), missing)
             .expect("missing baseline skips the invariant too");
     }
 
@@ -1173,12 +1390,18 @@ mod tests {
             gate: true,
         };
         // Within tolerance: 20% slower passes.
-        check_against_baseline(&[mk(1200.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+        check_against_baseline(&[mk(1200.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &path)
             .expect("within tolerance");
         // Past tolerance: 50% slower fails.
-        let err =
-            check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
-                .unwrap_err();
+        let err = check_against_baseline(
+            &[mk(1500.0)],
+            2.0,
+            &pg(8.0, 1e-12),
+            Some(&sg(2.0)),
+            &og(0.2),
+            &path,
+        )
+        .unwrap_err();
         assert!(matches!(err, FastSurvivalError::PerfRegression(_)));
         // A bootstrap baseline downgrades the same failure to advisory.
         std::fs::write(
@@ -1187,7 +1410,7 @@ mod tests {
               {\"name\": \"k\", \"median_ns\": 1000.0, \"gate\": true}]}",
         )
         .unwrap();
-        check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &path)
+        check_against_baseline(&[mk(1500.0)], 2.0, &pg(8.0, 1e-12), Some(&sg(2.0)), &og(0.2), &path)
             .expect("bootstrap is advisory");
     }
 }

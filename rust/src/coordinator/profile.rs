@@ -1,0 +1,185 @@
+//! The `profile` subcommand: read a `--trace-out` JSONL file and print
+//! a self-time-sorted phase table, a wall-clock reconciliation, and the
+//! engine counters.
+//!
+//! Self-time is what the table ranks by: a phase's total minus the time
+//! spent inside nested instrumented phases, so the column sums to the
+//! run's wall clock instead of double-counting parents and children.
+//! Parallel phases (the sharded worker legs) accumulate across worker
+//! threads concurrently, so their self-time can legitimately exceed the
+//! wall clock — they are reconciled and listed separately.
+
+use crate::error::{FastSurvivalError, Result};
+use crate::obs::hist::quantile_from_counts;
+use crate::obs::{parse_trace_jsonl, TraceDoc};
+use crate::util::args::Args;
+
+/// Largest tolerated |serial self-sum − wall| / wall before the
+/// reconciliation line flags the trace as incomplete.
+const RECONCILE_TOL: f64 = 0.05;
+
+/// One row of the rendered table, precomputed from a phase line.
+struct Row {
+    phase: String,
+    parallel: bool,
+    count: u64,
+    total_ms: f64,
+    self_ms: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+/// Render the profile report for a parsed trace document.
+pub fn render(doc: &TraceDoc) -> String {
+    let mut rows: Vec<Row> = doc
+        .phases
+        .iter()
+        .map(|p| Row {
+            phase: p.phase.clone(),
+            parallel: p.parallel,
+            count: p.count,
+            total_ms: p.total_ns as f64 / 1e6,
+            self_ms: p.self_ns as f64 / 1e6,
+            p50_us: quantile_from_counts(&p.buckets_us_log2, 0.50),
+            p99_us: quantile_from_counts(&p.buckets_us_log2, 0.99),
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.self_ms.partial_cmp(&a.self_ms).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let wall_ms = doc.wall_secs * 1e3;
+    let serial_self_ms: f64 =
+        rows.iter().filter(|r| !r.parallel).map(|r| r.self_ms).sum();
+    let parallel_self_ms: f64 =
+        rows.iter().filter(|r| r.parallel).map(|r| r.self_ms).sum();
+
+    let mut out = String::with_capacity(2048);
+    out.push_str(&format!(
+        "profile: cmd={} wall={:.1} ms threads={}\n\n",
+        doc.cmd, wall_ms, doc.threads
+    ));
+    out.push_str(&format!(
+        "{:<20} {:>10} {:>12} {:>12} {:>7} {:>10} {:>10}\n",
+        "phase", "count", "total ms", "self ms", "self %", "p50 us", "p99 us"
+    ));
+    for r in rows.iter().filter(|r| !r.parallel) {
+        let pct = if wall_ms > 0.0 { 100.0 * r.self_ms / wall_ms } else { 0.0 };
+        out.push_str(&format!(
+            "{:<20} {:>10} {:>12.3} {:>12.3} {:>6.1}% {:>10.1} {:>10.1}\n",
+            r.phase, r.count, r.total_ms, r.self_ms, pct, r.p50_us, r.p99_us
+        ));
+    }
+    let par_rows: Vec<&Row> = rows.iter().filter(|r| r.parallel).collect();
+    if !par_rows.is_empty() {
+        out.push_str("\nparallel phases (summed across worker threads):\n");
+        for r in &par_rows {
+            out.push_str(&format!(
+                "{:<20} {:>10} {:>12.3} {:>12.3} {:>7} {:>10.1} {:>10.1}\n",
+                r.phase, r.count, r.total_ms, r.self_ms, "", r.p50_us, r.p99_us
+            ));
+        }
+    }
+
+    let gap = if wall_ms > 0.0 {
+        (serial_self_ms - wall_ms).abs() / wall_ms
+    } else {
+        0.0
+    };
+    out.push_str(&format!(
+        "\nreconciliation: serial self-time {:.1} ms vs wall {:.1} ms ({:.1}% gap{}{})\n",
+        serial_self_ms,
+        wall_ms,
+        gap * 100.0,
+        if parallel_self_ms > 0.0 {
+            format!("; +{parallel_self_ms:.1} ms parallel worker time")
+        } else {
+            String::new()
+        },
+        if gap > RECONCILE_TOL { "; WARNING: trace looks incomplete" } else { "" }
+    ));
+
+    let c = &doc.counters;
+    out.push_str("\ncounters:\n");
+    for (name, value) in c.fields() {
+        if value > 0 {
+            out.push_str(&format!("  {name:<20} {value}\n"));
+        }
+    }
+    out
+}
+
+/// `fastsurvival profile --trace trace.jsonl` (the file may also be
+/// passed positionally).
+pub fn run(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.get(1).cloned())
+        .ok_or_else(|| {
+            FastSurvivalError::InvalidConfig(
+                "profile requires --trace <trace.jsonl> (written by \
+                 fit/path/bigfit/watch --trace-out)"
+                    .into(),
+            )
+        })?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| FastSurvivalError::io(format!("reading trace from {path}"), e))?;
+    let doc = parse_trace_jsonl(&text)?;
+    print!("{}", render(&doc));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{render_trace_jsonl, reset, set_enabled, Phase, SpanTimer};
+
+    #[test]
+    fn render_sorts_by_self_time_and_reconciles() {
+        let _guard = crate::obs::span::test_support::obs_test_guard();
+        set_enabled(true);
+        reset();
+        {
+            let _fit = SpanTimer::start(Phase::Fit);
+            for _ in 0..3 {
+                let _sweep = SpanTimer::start(Phase::CdSweep);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let jsonl = render_trace_jsonl("fit", 0.006, 1);
+        set_enabled(false);
+        reset();
+
+        let doc = parse_trace_jsonl(&jsonl).unwrap();
+        let report = render(&doc);
+        // cd_sweep holds the sleeps, so it must outrank the fit root.
+        let sweep_at = report.find("cd_sweep").unwrap();
+        let fit_at = report.find("\nfit ").unwrap();
+        assert!(sweep_at < fit_at, "self-time sort broken:\n{report}");
+        assert!(report.contains("reconciliation:"), "{report}");
+        // Root span covers the whole run, so the serial self-sum tracks
+        // the wall we passed and no incompleteness warning fires.
+        assert!(!report.contains("WARNING"), "{report}");
+    }
+
+    #[test]
+    fn parallel_phases_are_listed_separately() {
+        let doc = parse_trace_jsonl(concat!(
+            "{\"schema_version\": 1, \"cmd\": \"bigfit\", \"wall_secs\": 0.001, ",
+            "\"threads\": 2}\n",
+            "{\"event\": \"phase\", \"phase\": \"shard_scan\", \"parallel\": true, ",
+            "\"count\": 4, \"total_ns\": 2000000, \"self_ns\": 2000000, ",
+            "\"buckets_us_log2\": [0, 0, 0, 0, 0, 0, 0, 0, 0, 4]}\n",
+            "{\"event\": \"phase\", \"phase\": \"fit\", \"parallel\": false, ",
+            "\"count\": 1, \"total_ns\": 1000000, \"self_ns\": 1000000, ",
+            "\"buckets_us_log2\": [0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1]}\n",
+        ))
+        .unwrap();
+        let report = render(&doc);
+        assert!(report.contains("parallel phases"), "{report}");
+        // shard_scan's 2 ms across 2 workers exceeds the 1 ms wall, but
+        // only the serial phase counts toward reconciliation.
+        assert!(!report.contains("WARNING"), "{report}");
+    }
+}

@@ -93,8 +93,11 @@ impl Workspace {
     /// on continuous data — take the scalar path bit for bit.
     pub fn prepare_b(&mut self, problem: &CoxProblem, state: &CoxState, backend: KernelBackend) {
         if self.is_fresh_b(state, backend) {
+            crate::obs::counters::workspace_cache(true);
             return;
         }
+        crate::obs::counters::workspace_cache(false);
+        let _span = crate::obs::SpanTimer::start(crate::obs::Phase::WorkspacePrepare);
         let ngroups = problem.groups.len();
         self.group_inv_s0.clear();
         self.group_inv_s0.reserve(ngroups);
@@ -677,8 +680,10 @@ pub fn all_coord_d1_d2_opts(
     backend: KernelBackend,
     block_rows: usize,
 ) -> (Vec<f64>, Vec<f64>) {
+    let _span = crate::obs::SpanTimer::start(crate::obs::Phase::DerivativePass);
     ws.prepare_b(problem, state, backend);
     let p = problem.p();
+    crate::obs::counters::kernel_calls(backend == KernelBackend::Simd, p as u64);
     let ws_ref: &Workspace = ws;
     match backend {
         KernelBackend::Scalar => {

@@ -28,6 +28,10 @@
 //!   goes through [`live`]: crash-safe segment appends over a base
 //!   store, incremental warm refits carrying a KKT parity certificate,
 //!   and a watch → validate → publish loop into the serving registry.
+//!   Every engine reports where its time and sweeps go through [`obs`]:
+//!   span timing over a fixed phase taxonomy, engine counters, per-fit
+//!   reports in model diagnostics, JSONL traces (`--trace-out` /
+//!   `profile`), and training gauges surfaced by `/metrics`.
 
 pub mod api;
 pub mod baselines;
@@ -38,6 +42,7 @@ pub mod error;
 pub mod linalg;
 pub mod live;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod path;
 pub mod runtime;

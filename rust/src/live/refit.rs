@@ -134,6 +134,7 @@ impl IncrementalRefit {
         let blocks = live.segment_blocks();
         let mut warmup_blocks = 0usize;
         if self.warmup_passes > 0 && !blocks.is_empty() {
+            let _span = crate::obs::SpanTimer::start(crate::obs::Phase::RefitWarmup);
             let mut rng = Rng::new(self.seed);
             let mut chunkbuf: Vec<f64> = Vec::new();
             let total = self.warmup_passes * blocks.len();
@@ -176,6 +177,7 @@ impl IncrementalRefit {
         // ---------------- Phase B: exact chunked CD over the merged
         // view, loss stopping disabled (tol = 0) — only the KKT
         // residual may declare convergence.
+        let exact_span = crate::obs::SpanTimer::start(crate::obs::Phase::RefitExact);
         let outcome = exact_chunked_cd(
             live,
             &meta,
@@ -188,6 +190,7 @@ impl IncrementalRefit {
             0.0,
             rc,
         )?;
+        drop(exact_span);
         let mut state = outcome.state;
         let beta = std::mem::take(&mut state.beta);
         let eta = std::mem::take(&mut state.eta);

@@ -230,6 +230,7 @@ impl Watcher {
                 ),
             )
         };
+        crate::obs::record_watch_cycle(refit_secs, refit.sweeps, published.is_some());
         Ok(CycleReport {
             refit_secs,
             sweeps: refit.sweeps,
@@ -267,6 +268,7 @@ impl Watcher {
             n_events,
             wall_secs,
             trace: refit.trace.clone(),
+            report: None,
         };
         let model = CoxModel::from_parts(
             feature_names.to_vec(),

@@ -9,6 +9,7 @@
 //!   convert      stream a CSV or the synthetic generator into a .fsds store
 //!   bigfit       tracked out-of-core workload + gates → BENCH_bigfit.json
 //!   bench        fixed-seed hot-path benchmarks → BENCH_optim.json
+//!   profile      self-time phase table from a --trace-out JSONL trace
 //!   serve        HTTP scoring server over a model-artifact directory
 //!   score        offline batch scoring: CSV in → CSV out, streamed
 //!   serve-smoke  end-to-end serving burst + gate → BENCH_serve.json
@@ -119,6 +120,40 @@ fn load_dataset(args: &Args) -> Result<SurvivalDataset> {
 /// `--precision`, and `--block-rows` (see [`Compute::from_args`]).
 fn compute_from_args(args: &Args) -> Result<Compute> {
     Compute::from_args(args)
+}
+
+/// Run a subcommand under an optional `--trace-out <file>` tracing
+/// session: arm the span sink, wrap the whole run in a root `fit` span
+/// (so the serial self-time table reconciles against the wall clock),
+/// and write the aggregate JSONL trace when the command finishes. With
+/// no `--trace-out`, tracing stays disabled and the only overhead per
+/// span site is one relaxed atomic load.
+fn with_trace<F: FnOnce(&Args) -> Result<()>>(
+    cmd: &'static str,
+    args: &Args,
+    f: F,
+) -> Result<()> {
+    let Some(path) = args.get("trace-out").map(|s| s.to_string()) else {
+        return f(args);
+    };
+    fastsurvival::obs::set_enabled(true);
+    fastsurvival::obs::reset();
+    let t0 = Instant::now();
+    let res = {
+        let _root = fastsurvival::obs::SpanTimer::start(fastsurvival::obs::Phase::Fit);
+        f(args)
+    };
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let threads = compute_from_args(args)
+        .and_then(|c| c.resolve())
+        .map(|rc| rc.threads)
+        .unwrap_or(1);
+    let written = fastsurvival::obs::write_trace_jsonl(&path, cmd, wall_secs, threads);
+    fastsurvival::obs::set_enabled(false);
+    res?;
+    written?;
+    println!("trace: wrote {path} (inspect with: fastsurvival profile --trace {path})");
+    Ok(())
 }
 
 /// The `fit` subcommand: one `CoxFit` builder call regardless of
@@ -797,6 +832,7 @@ subcommands:\n\
   convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --precision f64|f32 --shards N)\n\
   bigfit       out-of-core workload + RSS/parity/shard gates → BENCH_bigfit.json (--quick --shards --shard-workers)\n\
   bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check --backend)\n\
+  profile      self-time phase table from a --trace-out JSONL file (--trace trace.jsonl)\n\
   serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
   serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\
@@ -809,25 +845,31 @@ compute options (fit, path, bigfit, watch, bench):\n\
   --threads N                  worker threads (default: FASTSURVIVAL_THREADS or cores)\n\
   --precision f64|f32          feature-cell storage; f32 halves bandwidth, f64 accumulation\n\
   --block-rows N               fixed cache-block row tile (default: auto-sized)\n\n\
+observability (fit, path, bigfit, watch):\n\
+  --trace-out FILE             arm span tracing, write an aggregate JSONL trace on exit;\n\
+                               read it back with `fastsurvival profile --trace FILE`\n\n\
 see README.md for endpoint schemas and examples";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
-        Some("fit") => cmd_fit(&args),
-        Some("path") => cmd_path(&args),
+        Some("fit") => with_trace("fit", &args, cmd_fit),
+        Some("path") => with_trace("path", &args, cmd_path),
         Some("select") => cmd_select(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("convert") => cmd_convert(&args),
-        Some("bigfit") => fastsurvival::coordinator::bigfit::run(&args),
+        Some("bigfit") => {
+            with_trace("bigfit", &args, fastsurvival::coordinator::bigfit::run)
+        }
         Some("bench") => fastsurvival::coordinator::perf::run(&args),
+        Some("profile") => fastsurvival::coordinator::profile::run(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
         Some("serve-smoke") => smoke::run(&args),
         Some("append") => cmd_append(&args),
         Some("inspect") => fastsurvival::coordinator::inspect::run(&args),
-        Some("watch") => cmd_watch(&args),
+        Some("watch") => with_trace("watch", &args, cmd_watch),
         Some("live-smoke") => live::smoke::run(&args),
         // `--help` never lands in positional (Args routes "--" tokens
         // to flags), so bare invocation or the flag both reach None.
@@ -838,8 +880,8 @@ fn main() -> Result<()> {
         Some(other) => Err(FastSurvivalError::Unknown {
             kind: "subcommand",
             name: other.to_string(),
-            expected: "fit|path|select|experiment|datasets|convert|bigfit|bench|serve|score|\
-                       serve-smoke|append|inspect|watch|live-smoke",
+            expected: "fit|path|select|experiment|datasets|convert|bigfit|bench|profile|serve|\
+                       score|serve-smoke|append|inspect|watch|live-smoke",
         }),
     }
 }

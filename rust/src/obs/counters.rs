@@ -1,0 +1,298 @@
+//! Engine counters (relaxed atomics) and the training-side gauges the
+//! serving `/metrics` document exposes.
+//!
+//! Counter recording is gated on [`super::span::enabled`] — the same
+//! one-atomic-load fast path as spans — and every site increments at a
+//! coarse chokepoint (once per pass, per λ point, or per shard
+//! command), never per row. Training gauges are different: they are
+//! always-on serving state updated once per watch cycle, so an
+//! in-process scoring server (the live smoke harness, tests, embedded
+//! deployments) can report refit/publish health without tracing being
+//! enabled.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static WORKSPACE_HITS: AtomicU64 = AtomicU64::new(0);
+static WORKSPACE_MISSES: AtomicU64 = AtomicU64::new(0);
+static KERNEL_SCALAR: AtomicU64 = AtomicU64::new(0);
+static KERNEL_SIMD: AtomicU64 = AtomicU64::new(0);
+static SCREENED_SKIPS: AtomicU64 = AtomicU64::new(0);
+static KKT_REPAIR_ROUNDS: AtomicU64 = AtomicU64::new(0);
+static SHARD_SCAN_CMDS: AtomicU64 = AtomicU64::new(0);
+static SHARD_EMIT_CMDS: AtomicU64 = AtomicU64::new(0);
+static SHARD_APPLY_CMDS: AtomicU64 = AtomicU64::new(0);
+static SHARD_CTL_CMDS: AtomicU64 = AtomicU64::new(0);
+
+/// Workspace derivative-cache outcome, keyed on `CoxState::version()`:
+/// a hit reuses the cached risk-set prefix sums, a miss rebuilds them.
+#[inline]
+pub fn workspace_cache(hit: bool) {
+    if !super::span::enabled() {
+        return;
+    }
+    let c = if hit { &WORKSPACE_HITS } else { &WORKSPACE_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `n` derivative-kernel invocations on the given backend (one per
+/// column of a batched pass, or one per single-column step).
+#[inline]
+pub fn kernel_calls(simd: bool, n: u64) {
+    if !super::span::enabled() {
+        return;
+    }
+    let c = if simd { &KERNEL_SIMD } else { &KERNEL_SCALAR };
+    c.fetch_add(n, Ordering::Relaxed);
+}
+
+/// `n` coordinates the strong rule screened out of one λ point's
+/// candidate set (work the solver never had to do).
+#[inline]
+pub fn screened_skips(n: u64) {
+    if !super::span::enabled() {
+        return;
+    }
+    SCREENED_SKIPS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// `n` KKT repair rounds (re-sweeps after a violation check found
+/// screened-out coordinates that wanted in).
+#[inline]
+pub fn kkt_repair_rounds(n: u64) {
+    if !super::span::enabled() {
+        return;
+    }
+    KKT_REPAIR_ROUNDS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Shard-protocol command classes, counted at the coordinator's send.
+#[derive(Clone, Copy, Debug)]
+pub enum ShardCmdKind {
+    Scan,
+    Emit,
+    Apply,
+    /// Control-plane commands (EtaMax, Rebase).
+    Ctl,
+}
+
+/// One shard-protocol command broadcast by the coordinator.
+#[inline]
+pub fn shard_cmd(kind: ShardCmdKind) {
+    if !super::span::enabled() {
+        return;
+    }
+    let c = match kind {
+        ShardCmdKind::Scan => &SHARD_SCAN_CMDS,
+        ShardCmdKind::Emit => &SHARD_EMIT_CMDS,
+        ShardCmdKind::Apply => &SHARD_APPLY_CMDS,
+        ShardCmdKind::Ctl => &SHARD_CTL_CMDS,
+    };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A read-only copy of every engine counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub workspace_hits: u64,
+    pub workspace_misses: u64,
+    pub kernel_scalar: u64,
+    pub kernel_simd: u64,
+    pub screened_skips: u64,
+    pub kkt_repair_rounds: u64,
+    pub shard_scan_cmds: u64,
+    pub shard_emit_cmds: u64,
+    pub shard_apply_cmds: u64,
+    pub shard_ctl_cmds: u64,
+}
+
+impl CounterSnapshot {
+    /// Field-wise difference (`self` − `before`), for diffing two
+    /// snapshots around one fit.
+    pub fn since(&self, before: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            workspace_hits: self.workspace_hits - before.workspace_hits,
+            workspace_misses: self.workspace_misses - before.workspace_misses,
+            kernel_scalar: self.kernel_scalar - before.kernel_scalar,
+            kernel_simd: self.kernel_simd - before.kernel_simd,
+            screened_skips: self.screened_skips - before.screened_skips,
+            kkt_repair_rounds: self.kkt_repair_rounds - before.kkt_repair_rounds,
+            shard_scan_cmds: self.shard_scan_cmds - before.shard_scan_cmds,
+            shard_emit_cmds: self.shard_emit_cmds - before.shard_emit_cmds,
+            shard_apply_cmds: self.shard_apply_cmds - before.shard_apply_cmds,
+            shard_ctl_cmds: self.shard_ctl_cmds - before.shard_ctl_cmds,
+        }
+    }
+
+    /// `(name, value)` pairs in a stable order — one loop serves JSON,
+    /// JSONL, and the profile table.
+    pub fn fields(&self) -> [(&'static str, u64); 10] {
+        [
+            ("workspace_hits", self.workspace_hits),
+            ("workspace_misses", self.workspace_misses),
+            ("kernel_scalar", self.kernel_scalar),
+            ("kernel_simd", self.kernel_simd),
+            ("screened_skips", self.screened_skips),
+            ("kkt_repair_rounds", self.kkt_repair_rounds),
+            ("shard_scan_cmds", self.shard_scan_cmds),
+            ("shard_emit_cmds", self.shard_emit_cmds),
+            ("shard_apply_cmds", self.shard_apply_cmds),
+            ("shard_ctl_cmds", self.shard_ctl_cmds),
+        ]
+    }
+
+    /// Build from `(name, value)` pairs (unknown names ignored) — the
+    /// inverse of [`CounterSnapshot::fields`] for deserialization.
+    pub fn from_fields<'a>(pairs: impl Iterator<Item = (&'a str, u64)>) -> CounterSnapshot {
+        let mut c = CounterSnapshot::default();
+        for (name, v) in pairs {
+            match name {
+                "workspace_hits" => c.workspace_hits = v,
+                "workspace_misses" => c.workspace_misses = v,
+                "kernel_scalar" => c.kernel_scalar = v,
+                "kernel_simd" => c.kernel_simd = v,
+                "screened_skips" => c.screened_skips = v,
+                "kkt_repair_rounds" => c.kkt_repair_rounds = v,
+                "shard_scan_cmds" => c.shard_scan_cmds = v,
+                "shard_emit_cmds" => c.shard_emit_cmds = v,
+                "shard_apply_cmds" => c.shard_apply_cmds = v,
+                "shard_ctl_cmds" => c.shard_ctl_cmds = v,
+                _ => {}
+            }
+        }
+        c
+    }
+}
+
+/// Snapshot every engine counter.
+pub fn counter_snapshot() -> CounterSnapshot {
+    CounterSnapshot {
+        workspace_hits: WORKSPACE_HITS.load(Ordering::Relaxed),
+        workspace_misses: WORKSPACE_MISSES.load(Ordering::Relaxed),
+        kernel_scalar: KERNEL_SCALAR.load(Ordering::Relaxed),
+        kernel_simd: KERNEL_SIMD.load(Ordering::Relaxed),
+        screened_skips: SCREENED_SKIPS.load(Ordering::Relaxed),
+        kkt_repair_rounds: KKT_REPAIR_ROUNDS.load(Ordering::Relaxed),
+        shard_scan_cmds: SHARD_SCAN_CMDS.load(Ordering::Relaxed),
+        shard_emit_cmds: SHARD_EMIT_CMDS.load(Ordering::Relaxed),
+        shard_apply_cmds: SHARD_APPLY_CMDS.load(Ordering::Relaxed),
+        shard_ctl_cmds: SHARD_CTL_CMDS.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero every engine counter (called by [`super::span::reset`]).
+pub(crate) fn reset_counters() {
+    for c in [
+        &WORKSPACE_HITS,
+        &WORKSPACE_MISSES,
+        &KERNEL_SCALAR,
+        &KERNEL_SIMD,
+        &SCREENED_SKIPS,
+        &KKT_REPAIR_ROUNDS,
+        &SHARD_SCAN_CMDS,
+        &SHARD_EMIT_CMDS,
+        &SHARD_APPLY_CMDS,
+        &SHARD_CTL_CMDS,
+    ] {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+// ------------------------------------------------- training gauges
+
+static LAST_REFIT_US: AtomicU64 = AtomicU64::new(0);
+static LAST_SWEEPS: AtomicU64 = AtomicU64::new(0);
+static PUBLISHES: AtomicU64 = AtomicU64::new(0);
+static REJECTS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one watch-mode cycle: refit wall time, exact-phase sweeps,
+/// and the publish-gate outcome. Always on (not gated on tracing).
+pub fn record_watch_cycle(refit_secs: f64, sweeps: usize, published: bool) {
+    LAST_REFIT_US.store((refit_secs * 1e6) as u64, Ordering::Relaxed);
+    LAST_SWEEPS.store(sweeps as u64, Ordering::Relaxed);
+    let c = if published { &PUBLISHES } else { &REJECTS };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Training-side gauges for the `/metrics` document.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainingGauges {
+    /// Wall seconds of the most recent warm refit (0 before the first).
+    pub last_refit_secs: f64,
+    /// Exact-phase sweeps of the most recent refit.
+    pub last_sweeps: u64,
+    /// Watch cycles whose candidate was published.
+    pub publishes: u64,
+    /// Watch cycles whose candidate the gate rejected.
+    pub rejects: u64,
+}
+
+/// Snapshot the training gauges.
+pub fn training_gauges() -> TrainingGauges {
+    TrainingGauges {
+        last_refit_secs: LAST_REFIT_US.load(Ordering::Relaxed) as f64 / 1e6,
+        last_sweeps: LAST_SWEEPS.load(Ordering::Relaxed),
+        publishes: PUBLISHES.load(Ordering::Relaxed),
+        rejects: REJECTS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::test_support::obs_test_guard;
+    use super::super::span::{reset, set_enabled};
+    use super::*;
+
+    #[test]
+    fn counters_gate_on_enabled_and_diff_cleanly() {
+        let _g = obs_test_guard();
+        set_enabled(false);
+        reset();
+        workspace_cache(true);
+        kernel_calls(true, 10);
+        assert_eq!(counter_snapshot(), CounterSnapshot::default());
+
+        set_enabled(true);
+        let before = counter_snapshot();
+        workspace_cache(true);
+        workspace_cache(false);
+        kernel_calls(true, 10);
+        kernel_calls(false, 3);
+        screened_skips(7);
+        kkt_repair_rounds(2);
+        shard_cmd(ShardCmdKind::Scan);
+        shard_cmd(ShardCmdKind::Emit);
+        shard_cmd(ShardCmdKind::Apply);
+        shard_cmd(ShardCmdKind::Ctl);
+        let diff = counter_snapshot().since(&before);
+        set_enabled(false);
+        assert_eq!(diff.workspace_hits, 1);
+        assert_eq!(diff.workspace_misses, 1);
+        assert_eq!(diff.kernel_simd, 10);
+        assert_eq!(diff.kernel_scalar, 3);
+        assert_eq!(diff.screened_skips, 7);
+        assert_eq!(diff.kkt_repair_rounds, 2);
+        assert_eq!(diff.shard_scan_cmds, 1);
+        assert_eq!(diff.shard_emit_cmds, 1);
+        assert_eq!(diff.shard_apply_cmds, 1);
+        assert_eq!(diff.shard_ctl_cmds, 1);
+        // fields() / from_fields() are inverse.
+        let rebuilt = CounterSnapshot::from_fields(diff.fields().into_iter());
+        assert_eq!(rebuilt, diff);
+        reset();
+        assert_eq!(counter_snapshot(), CounterSnapshot::default());
+    }
+
+    #[test]
+    fn training_gauges_track_cycles_without_tracing() {
+        let _g = obs_test_guard();
+        set_enabled(false);
+        let before = training_gauges();
+        record_watch_cycle(0.25, 6, true);
+        record_watch_cycle(0.125, 2, false);
+        let g = training_gauges();
+        assert!((g.last_refit_secs - 0.125).abs() < 1e-9);
+        assert_eq!(g.last_sweeps, 2);
+        assert_eq!(g.publishes, before.publishes + 1);
+        assert_eq!(g.rejects, before.rejects + 1);
+    }
+}

@@ -1,0 +1,240 @@
+//! The crate's one log₂-bucketed duration histogram, shared by the
+//! serving metrics (`serve/stats.rs`) and the training-side span
+//! tracer (`obs/span.rs`).
+//!
+//! Bucket semantics (the single source of truth — the serving and
+//! training paths must agree on what a bucket means):
+//!
+//! - bucket `0` holds exact zeros (a sub-microsecond duration truncates
+//!   to 0 µs),
+//! - bucket `i` for `1 ≤ i ≤ 38` covers `[2^(i−1), 2^i)` microseconds,
+//! - bucket `39` is the open-ended top bucket, absorbing everything
+//!   from 2³⁸ µs (~3.2 days) up.
+//!
+//! Quantile estimates interpolate to the **arithmetic midpoint** of the
+//! selected bucket (`1.5·2^(i−1)` µs), so the reported value is within
+//! a factor of 1.5 of the true sample in either direction — against the
+//! old upper-bound estimate, whose error reached the full bucket width
+//! of 2×. Everything is a relaxed atomic: recording is three
+//! `fetch_add`s, and readers observe a consistent-enough snapshot
+//! without blocking writers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets (see the module docs for the edge semantics).
+pub const N_BUCKETS: usize = 40;
+
+/// Bucket index for a duration in microseconds.
+pub fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of bucket `i` in microseconds.
+pub fn bucket_lower_us(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Exclusive upper bound of bucket `i` in microseconds (the top bucket
+/// reports its lower bound — it has no finite width).
+pub fn bucket_upper_us(i: usize) -> u64 {
+    if i >= N_BUCKETS - 1 {
+        1u64 << (N_BUCKETS - 2)
+    } else {
+        1u64 << i
+    }
+}
+
+/// The midpoint a quantile estimate reports for bucket `i`: 0 for the
+/// zero bucket, the lower bound for the unbounded top bucket, and the
+/// arithmetic midpoint `1.5·2^(i−1)` everywhere else.
+pub fn bucket_midpoint_us(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else if i >= N_BUCKETS - 1 {
+        (1u64 << (N_BUCKETS - 2)) as f64
+    } else {
+        1.5 * (1u64 << (i - 1)) as f64
+    }
+}
+
+/// Midpoint-interpolated quantile over a raw bucket-count array — the
+/// `profile` subcommand estimates quantiles from counts deserialized
+/// out of a trace file, where no live histogram exists. `q` in [0, 1];
+/// returns 0 for an empty array.
+pub fn quantile_from_counts(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return bucket_midpoint_us(i);
+        }
+    }
+    bucket_midpoint_us(counts.len().saturating_sub(1))
+}
+
+/// Log₂-bucketed duration histogram over microseconds.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Const constructor so histograms can live in `static` phase
+    /// tables (the span tracer's per-phase stats are a static array).
+    pub const fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LatencyHistogram {
+            buckets: [ZERO; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total recorded microseconds (the Prometheus `_sum` series).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean duration in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    /// Snapshot of the raw per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; N_BUCKETS] {
+        let mut out = [0u64; N_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Midpoint-interpolated quantile estimate in microseconds (0 when
+    /// empty). `q` in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        quantile_from_counts(&self.bucket_counts(), q)
+    }
+
+    /// Zero every counter (the span tracer resets between traced runs).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_exact() {
+        // The zero bucket holds exactly {0}; 1 µs starts bucket 1.
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        // 2^k − 1 is the last value of bucket k; 2^k opens bucket k+1.
+        for k in [1usize, 2, 5, 10, 20, 37] {
+            assert_eq!(bucket_of((1u64 << k) - 1), k, "2^{k}-1");
+            assert_eq!(bucket_of(1u64 << k), k + 1, "2^{k}");
+        }
+        // Top-bucket overflow: 2^38 and everything above land in 39.
+        assert_eq!(bucket_of((1u64 << 38) - 1), N_BUCKETS - 2);
+        assert_eq!(bucket_of(1u64 << 38), N_BUCKETS - 1);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+        // Bounds agree with bucket_of on both edges.
+        for i in 1..N_BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_lower_us(i)), i);
+            assert_eq!(bucket_of(bucket_upper_us(i) - 1), i);
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_to_bucket_midpoints() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram");
+        // A lone sample of 100 µs sits in bucket 7 = [64, 128): the
+        // midpoint estimate is 96, within 1.5× of the true value —
+        // the old upper-bound estimate reported 128 (1.28×, and up to
+        // 2× in the worst case).
+        h.record(100);
+        assert_eq!(h.quantile_us(0.5), 96.0);
+        let ratio = h.quantile_us(0.5) / 100.0;
+        assert!((0.666..=1.5).contains(&ratio));
+        // Zeros report zero, the top bucket reports its lower bound.
+        let h = LatencyHistogram::default();
+        h.record(0);
+        assert_eq!(h.quantile_us(0.99), 0.0);
+        let h = LatencyHistogram::default();
+        h.record(u64::MAX);
+        assert_eq!(h.quantile_us(0.5), (1u64 << 38) as f64);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_cover_the_spread() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 1000, 5000] {
+            h.record(us);
+        }
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        // Median sample 80 → bucket [64,128) midpoint 96; max sample
+        // 5000 → bucket [4096,8192) midpoint 6144.
+        assert_eq!(p50, 96.0);
+        assert_eq!(p99, 6144.0);
+        assert_eq!(h.count(), 7);
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.sum_us(), 6310);
+    }
+
+    #[test]
+    fn reset_and_counts_round_trip() {
+        let h = LatencyHistogram::default();
+        h.record(3);
+        h.record(1024);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[bucket_of(3)], 1);
+        assert_eq!(counts[bucket_of(1024)], 1);
+        assert_eq!(quantile_from_counts(&counts, 0.0), bucket_midpoint_us(2));
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Crate-wide training telemetry: span timing, engine counters, and
+//! emission into model diagnostics, JSONL trace files, and `/metrics`.
+//!
+//! Layout:
+//!
+//! - [`hist`] — the one log₂ duration histogram, shared with serving
+//!   (`serve/stats.rs` re-exports it for its endpoint latency stats);
+//! - [`span`] — the fixed phase taxonomy ([`Phase`]), the RAII
+//!   [`SpanTimer`], and the process-global sink (static relaxed
+//!   atomics; disabled fast path is one atomic load per span);
+//! - [`counters`] — engine counters (Workspace cache hits, kernel
+//!   invocations per backend, screening skips, KKT repair rounds,
+//!   shard-protocol commands) plus the always-on training gauges the
+//!   `/metrics` document serves;
+//! - [`report`] — per-fit [`FitReport`] diffs attached to
+//!   `CoxModel`/`CoxPath` diagnostics, and the `--trace-out` JSONL
+//!   format with its parser (the `profile` subcommand's input).
+//!
+//! Everything is std-only and compiled in unconditionally; recording is
+//! switched on per-process with [`set_enabled`] (the CLI does this when
+//! `--trace-out` is given). Tracing never touches the optimizer's
+//! floating-point stream — a traced fit is bitwise identical to an
+//! untraced one.
+
+pub mod counters;
+pub mod hist;
+pub mod report;
+pub mod span;
+
+pub use counters::{
+    counter_snapshot, record_watch_cycle, training_gauges, CounterSnapshot, ShardCmdKind,
+    TrainingGauges,
+};
+pub use report::{
+    obs_snapshot, parse_trace_jsonl, render_trace_jsonl, write_trace_jsonl, FitReport,
+    ObsSnapshot, TraceDoc,
+};
+pub use span::{enabled, reset, set_enabled, snapshot_phases, Phase, SpanTimer};

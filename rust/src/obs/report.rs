@@ -1,0 +1,371 @@
+//! Emission: whole-process snapshots, per-fit [`FitReport`]s attached to
+//! model diagnostics, and the `--trace-out` JSONL trace stream.
+//!
+//! A [`FitReport`] is a *diff*: the API builder snapshots the global
+//! sink before a fit and captures everything accumulated since, so
+//! reports stay per-fit even when several fits run in one process (the
+//! watch loop). The JSONL trace is aggregate-per-phase, not
+//! per-span-event — one `meta` line, one `phase` line per non-empty
+//! phase (with its log₂ bucket counts), and one `counters` line — which
+//! keeps writes off the hot path entirely: the file is written once,
+//! after the run.
+
+use super::counters::{counter_snapshot, CounterSnapshot};
+use super::span::{snapshot_phases, Phase, PhaseSnapshot};
+use crate::api::json::{self, Json};
+use crate::error::{FastSurvivalError, Result};
+
+/// Schema version stamped on the `meta` line of every trace file.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// A point-in-time copy of the whole sink (every phase + every
+/// counter), used as the "before" edge of a [`FitReport`] diff.
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    pub phases: Vec<PhaseSnapshot>,
+    pub counters: CounterSnapshot,
+}
+
+/// Snapshot the global sink.
+pub fn obs_snapshot() -> ObsSnapshot {
+    ObsSnapshot { phases: snapshot_phases(), counters: counter_snapshot() }
+}
+
+/// One phase's share of a [`FitReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PhaseReport {
+    /// Stable snake_case phase name ([`Phase::name`]).
+    pub phase: String,
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+/// Per-fit telemetry summary, serialized into `CoxModel`/`CoxPath`
+/// diagnostics. Empty (no phases, zero counters) when tracing was off.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FitReport {
+    /// Non-empty phases only, in stats-table order.
+    pub phases: Vec<PhaseReport>,
+    pub counters: CounterSnapshot,
+}
+
+impl FitReport {
+    /// Diff the sink against a snapshot taken before the fit, keeping
+    /// only phases that recorded at least one span since.
+    pub fn capture_since(before: &ObsSnapshot) -> FitReport {
+        let now = obs_snapshot();
+        let phases = now
+            .phases
+            .iter()
+            .zip(before.phases.iter())
+            .filter(|(n, b)| n.count > b.count)
+            .map(|(n, b)| PhaseReport {
+                phase: n.phase.name().to_string(),
+                count: n.count - b.count,
+                total_ns: n.total_ns.saturating_sub(b.total_ns),
+                self_ns: n.self_ns.saturating_sub(b.self_ns),
+            })
+            .collect();
+        FitReport { phases, counters: now.counters.since(&before.counters) }
+    }
+
+    /// True when nothing was recorded (tracing off for the whole fit).
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty() && self.counters == CounterSnapshot::default()
+    }
+
+    fn to_json_value(&self) -> Json {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("phase".to_string(), Json::Str(p.phase.clone())),
+                    ("count".to_string(), num(p.count)),
+                    ("total_ns".to_string(), num(p.total_ns)),
+                    ("self_ns".to_string(), num(p.self_ns)),
+                ])
+            })
+            .collect();
+        let counters = self
+            .counters
+            .fields()
+            .iter()
+            .map(|&(k, v)| (k.to_string(), num(v)))
+            .collect();
+        Json::Obj(vec![
+            ("phases".to_string(), Json::Arr(phases)),
+            ("counters".to_string(), Json::Obj(counters)),
+        ])
+    }
+
+    /// Append this report as a compact JSON object. Counts are stored
+    /// as JSON numbers (f64-exact up to 2⁵³ — ~104 days of nanoseconds,
+    /// far past any fit this records).
+    pub fn write_json(&self, out: &mut String) {
+        self.to_json_value().write_to(out);
+    }
+
+    /// Parse a report written by [`FitReport::write_json`].
+    pub fn from_json(doc: &Json) -> Result<FitReport> {
+        let mut phases = Vec::new();
+        for p in doc.require("phases")?.as_array()? {
+            phases.push(PhaseReport {
+                phase: p.require("phase")?.as_str()?.to_string(),
+                count: p.require("count")?.as_f64()? as u64,
+                total_ns: p.require("total_ns")?.as_f64()? as u64,
+                self_ns: p.require("self_ns")?.as_f64()? as u64,
+            });
+        }
+        let counters = match doc.require("counters")? {
+            Json::Obj(fields) => CounterSnapshot::from_fields(
+                fields
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().ok().map(|x| (k.as_str(), x as u64))),
+            ),
+            other => {
+                return Err(FastSurvivalError::Persist(format!(
+                    "expected counters object, found {other:?}"
+                )))
+            }
+        };
+        Ok(FitReport { phases, counters })
+    }
+}
+
+/// Render the current sink as a JSONL trace document (see the module
+/// docs for the line schema). `cmd` names the CLI command that ran;
+/// `wall_secs`/`threads` go on the `meta` line so `profile` can
+/// reconcile phase self-times against the wall clock.
+pub fn render_trace_jsonl(cmd: &str, wall_secs: f64, threads: usize) -> String {
+    let mut out = String::new();
+    Json::Obj(vec![
+        ("event".to_string(), Json::Str("meta".to_string())),
+        ("schema_version".to_string(), num(TRACE_SCHEMA_VERSION)),
+        ("cmd".to_string(), Json::Str(cmd.to_string())),
+        ("wall_secs".to_string(), Json::Num(wall_secs)),
+        ("threads".to_string(), num(threads as u64)),
+    ])
+    .write_to(&mut out);
+    out.push('\n');
+    for snap in snapshot_phases() {
+        if snap.count == 0 {
+            continue;
+        }
+        let buckets = snap.buckets.iter().map(|&b| num(b)).collect();
+        Json::Obj(vec![
+            ("event".to_string(), Json::Str("phase".to_string())),
+            ("phase".to_string(), Json::Str(snap.phase.name().to_string())),
+            ("parallel".to_string(), Json::Bool(snap.phase.is_parallel())),
+            ("count".to_string(), num(snap.count)),
+            ("total_ns".to_string(), num(snap.total_ns)),
+            ("self_ns".to_string(), num(snap.self_ns)),
+            ("buckets_us_log2".to_string(), Json::Arr(buckets)),
+        ])
+        .write_to(&mut out);
+        out.push('\n');
+    }
+    let mut counter_fields = vec![("event".to_string(), Json::Str("counters".to_string()))];
+    for (k, v) in counter_snapshot().fields() {
+        counter_fields.push((k.to_string(), num(v)));
+    }
+    Json::Obj(counter_fields).write_to(&mut out);
+    out.push('\n');
+    out
+}
+
+/// Write the current sink to `path` as a JSONL trace file.
+pub fn write_trace_jsonl(path: &str, cmd: &str, wall_secs: f64, threads: usize) -> Result<()> {
+    std::fs::write(path, render_trace_jsonl(cmd, wall_secs, threads))
+        .map_err(|e| FastSurvivalError::Persist(format!("writing trace {path}: {e}")))
+}
+
+/// One `phase` line parsed back out of a trace file.
+#[derive(Clone, Debug)]
+pub struct TracePhaseLine {
+    pub phase: String,
+    pub parallel: bool,
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+    pub buckets_us_log2: Vec<u64>,
+}
+
+/// A parsed trace document (the `profile` subcommand's input).
+#[derive(Clone, Debug, Default)]
+pub struct TraceDoc {
+    pub cmd: String,
+    pub wall_secs: f64,
+    pub threads: u64,
+    pub phases: Vec<TracePhaseLine>,
+    pub counters: CounterSnapshot,
+}
+
+/// Parse JSONL trace text (as written by [`write_trace_jsonl`]). Blank
+/// lines are skipped; unknown event kinds are ignored so the schema can
+/// grow without breaking old readers.
+pub fn parse_trace_jsonl(text: &str) -> Result<TraceDoc> {
+    let mut doc = TraceDoc::default();
+    let mut saw_meta = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| {
+            FastSurvivalError::Persist(format!("trace line {}: {e}", lineno + 1))
+        })?;
+        match v.require("event")?.as_str()? {
+            "meta" => {
+                saw_meta = true;
+                doc.cmd = v.require("cmd")?.as_str()?.to_string();
+                doc.wall_secs = v.require("wall_secs")?.as_f64()?;
+                doc.threads = v.require("threads")?.as_f64()? as u64;
+            }
+            "phase" => {
+                let name = v.require("phase")?.as_str()?.to_string();
+                // The parallel flag is authoritative from the file, but
+                // fall back to the compiled-in taxonomy when absent.
+                let parallel = match v.get("parallel") {
+                    Some(b) => b.as_bool()?,
+                    None => Phase::from_name(&name).is_some_and(Phase::is_parallel),
+                };
+                let buckets = v
+                    .require("buckets_us_log2")?
+                    .as_f64_vec()?
+                    .into_iter()
+                    .map(|x| x as u64)
+                    .collect();
+                doc.phases.push(TracePhaseLine {
+                    phase: name,
+                    parallel,
+                    count: v.require("count")?.as_f64()? as u64,
+                    total_ns: v.require("total_ns")?.as_f64()? as u64,
+                    self_ns: v.require("self_ns")?.as_f64()? as u64,
+                    buckets_us_log2: buckets,
+                });
+            }
+            "counters" => {
+                if let Json::Obj(fields) = &v {
+                    doc.counters = CounterSnapshot::from_fields(
+                        fields
+                            .iter()
+                            .filter(|(k, _)| k != "event")
+                            .filter_map(|(k, v)| {
+                                v.as_f64().ok().map(|x| (k.as_str(), x as u64))
+                            }),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    if !saw_meta {
+        return Err(FastSurvivalError::Persist(
+            "trace file has no meta line (is this a --trace-out file?)".to_string(),
+        ));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::test_support::obs_test_guard;
+    use super::super::span::{reset, set_enabled, SpanTimer};
+    use super::super::counters;
+    use super::*;
+
+    #[test]
+    fn fit_report_diffs_the_sink_and_round_trips_through_json() {
+        let _g = obs_test_guard();
+        set_enabled(true);
+        reset();
+        // Pre-existing noise the diff must exclude.
+        {
+            let _t = SpanTimer::start(Phase::CdSweep);
+        }
+        counters::kernel_calls(false, 5);
+        let before = obs_snapshot();
+        {
+            let _fit = SpanTimer::start(Phase::Fit);
+            let _t = SpanTimer::start(Phase::DerivativePass);
+            counters::kernel_calls(true, 8);
+            counters::workspace_cache(true);
+        }
+        let report = FitReport::capture_since(&before);
+        set_enabled(false);
+        assert!(!report.is_empty());
+        let names: Vec<&str> = report.phases.iter().map(|p| p.phase.as_str()).collect();
+        assert_eq!(names, vec!["fit", "derivative_pass"], "diff keeps only new phases");
+        assert!(report.phases.iter().all(|p| p.count == 1));
+        assert_eq!(report.counters.kernel_simd, 8);
+        assert_eq!(report.counters.kernel_scalar, 0, "pre-snapshot counts excluded");
+        assert_eq!(report.counters.workspace_hits, 1);
+
+        let mut text = String::new();
+        report.write_json(&mut text);
+        let parsed = FitReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, report);
+        reset();
+    }
+
+    #[test]
+    fn empty_report_when_tracing_is_off() {
+        let _g = obs_test_guard();
+        set_enabled(false);
+        reset();
+        let before = obs_snapshot();
+        {
+            let _t = SpanTimer::start(Phase::Fit);
+            counters::kernel_calls(true, 8);
+        }
+        let report = FitReport::capture_since(&before);
+        assert!(report.is_empty());
+    }
+
+    #[test]
+    fn trace_jsonl_round_trips() {
+        let _g = obs_test_guard();
+        set_enabled(true);
+        reset();
+        {
+            let _fit = SpanTimer::start(Phase::Fit);
+            {
+                let _t = SpanTimer::start(Phase::StreamExactSweep);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let _t = SpanTimer::start(Phase::ShardScan);
+        }
+        counters::shard_cmd(counters::ShardCmdKind::Scan);
+        let text = render_trace_jsonl("bigfit", 1.25, 4);
+        set_enabled(false);
+        reset();
+
+        let doc = parse_trace_jsonl(&text).unwrap();
+        assert_eq!(doc.cmd, "bigfit");
+        assert_eq!(doc.wall_secs, 1.25);
+        assert_eq!(doc.threads, 4);
+        assert_eq!(doc.counters.shard_scan_cmds, 1);
+        let sweep = doc.phases.iter().find(|p| p.phase == "stream_exact_sweep").unwrap();
+        assert!(!sweep.parallel);
+        assert_eq!(sweep.count, 1);
+        assert!(sweep.total_ns >= 1_000_000);
+        assert_eq!(sweep.buckets_us_log2.iter().sum::<u64>(), 1);
+        let scan = doc.phases.iter().find(|p| p.phase == "shard_scan").unwrap();
+        assert!(scan.parallel);
+        // Zero-count phases are omitted from the file.
+        assert!(doc.phases.iter().all(|p| p.count > 0));
+        assert!(!doc.phases.iter().any(|p| p.phase == "cd_sweep"));
+    }
+
+    #[test]
+    fn trace_parser_rejects_garbage_and_missing_meta() {
+        assert!(parse_trace_jsonl("not json\n").is_err());
+        assert!(parse_trace_jsonl("{\"event\":\"phase\"}\n").is_err());
+        assert!(parse_trace_jsonl("").is_err());
+    }
+}

@@ -1,0 +1,369 @@
+//! Span timing: named phases, RAII scope timers, and the process-global
+//! trace sink.
+//!
+//! The design goal is *compiled-in but free when off*: instrumentation
+//! lives permanently in every engine's hot loop, and the disabled fast
+//! path is exactly one relaxed atomic load per span ([`enabled`]) — no
+//! clock read, no thread-local access, no allocation. The `obs_gate`
+//! bench row enforces this (≤1% overhead with tracing *enabled* on the
+//! tracked derivative workload; spans only wrap sweep/pass-granularity
+//! work, never per-coordinate steps).
+//!
+//! When enabled, each [`SpanTimer`] records into a static per-phase slot
+//! of relaxed atomics: invocation count, total wall nanoseconds, *self*
+//! nanoseconds (total minus time spent in same-thread child spans — the
+//! quantity a profile sorts by), and a log₂ duration histogram shared
+//! with the serving metrics ([`super::hist`]). Self-time bookkeeping
+//! uses a thread-local running child-time cell, so spans recorded on
+//! shard worker threads never subtract from the coordinator's phases;
+//! such phases are flagged [`Phase::is_parallel`] and excluded from the
+//! wall-clock reconciliation the `profile` subcommand prints.
+//!
+//! Determinism invariant: tracing touches clocks and counters only —
+//! never the optimizer's floating-point stream. A traced fit is bitwise
+//! identical to an untraced one (`tests/obs.rs` enforces this across
+//! thread counts).
+
+use super::hist::LatencyHistogram;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Every named phase the engines record. The set is closed on purpose:
+/// a fixed enum indexes a static stats array, so recording needs no map
+/// lookup and no locking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Root span a CLI command opens around its whole run; its total is
+    /// the wall clock the profile reconciles against.
+    Fit,
+    /// `Workspace::prepare` — the risk-set prefix-sum rebuild.
+    WorkspacePrepare,
+    /// One batched all-coordinate d1/d2 derivative pass.
+    DerivativePass,
+    /// One full coordinate-descent sweep of the in-memory engine.
+    CdSweep,
+    /// Strong-rule screening (candidate-set construction) per λ point.
+    PathScreen,
+    /// KKT repair rounds per λ point (re-sweeps after violations).
+    PathKktRepair,
+    /// Sampled-block warmup phase of the streaming fit.
+    StreamWarmup,
+    /// One exact chunked-CD sweep of the streaming fit.
+    StreamExactSweep,
+    /// Shard-worker Scan leg (per-coordinate derivative scan).
+    ShardScan,
+    /// Shard-worker Emit leg (carry emission for the merge tiles).
+    ShardEmit,
+    /// Shard-worker Apply leg (coordinate delta application).
+    ShardApply,
+    /// Segment-block warmup passes of the incremental live refit.
+    RefitWarmup,
+    /// Exact chunked-CD polish of the incremental live refit.
+    RefitExact,
+}
+
+/// Number of phases (the static stats table's length).
+pub const N_PHASES: usize = 13;
+
+impl Phase {
+    /// All phases, in stats-table order.
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Fit,
+        Phase::WorkspacePrepare,
+        Phase::DerivativePass,
+        Phase::CdSweep,
+        Phase::PathScreen,
+        Phase::PathKktRepair,
+        Phase::StreamWarmup,
+        Phase::StreamExactSweep,
+        Phase::ShardScan,
+        Phase::ShardEmit,
+        Phase::ShardApply,
+        Phase::RefitWarmup,
+        Phase::RefitExact,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Fit => 0,
+            Phase::WorkspacePrepare => 1,
+            Phase::DerivativePass => 2,
+            Phase::CdSweep => 3,
+            Phase::PathScreen => 4,
+            Phase::PathKktRepair => 5,
+            Phase::StreamWarmup => 6,
+            Phase::StreamExactSweep => 7,
+            Phase::ShardScan => 8,
+            Phase::ShardEmit => 9,
+            Phase::ShardApply => 10,
+            Phase::RefitWarmup => 11,
+            Phase::RefitExact => 12,
+        }
+    }
+
+    /// Stable snake_case name used in trace files and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Fit => "fit",
+            Phase::WorkspacePrepare => "workspace_prepare",
+            Phase::DerivativePass => "derivative_pass",
+            Phase::CdSweep => "cd_sweep",
+            Phase::PathScreen => "path_screen",
+            Phase::PathKktRepair => "path_kkt_repair",
+            Phase::StreamWarmup => "stream_warmup",
+            Phase::StreamExactSweep => "stream_exact_sweep",
+            Phase::ShardScan => "shard_scan",
+            Phase::ShardEmit => "shard_emit",
+            Phase::ShardApply => "shard_apply",
+            Phase::RefitWarmup => "refit_warmup",
+            Phase::RefitExact => "refit_exact",
+        }
+    }
+
+    /// Inverse of [`Phase::name`] (trace-file parsing).
+    pub fn from_name(name: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == name)
+    }
+
+    /// Phases recorded on worker threads *concurrently* with the
+    /// coordinator. Their self-time is thread-time, not wall time, so
+    /// the profile's wall-clock reconciliation excludes them and lists
+    /// them separately.
+    pub fn is_parallel(self) -> bool {
+        matches!(self, Phase::ShardScan | Phase::ShardEmit | Phase::ShardApply)
+    }
+}
+
+/// One phase's accumulated stats — all relaxed atomics, recorded
+/// lock-free from any thread.
+struct PhaseStat {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    self_ns: AtomicU64,
+    hist: LatencyHistogram,
+}
+
+impl PhaseStat {
+    const fn new() -> Self {
+        PhaseStat {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            self_ns: AtomicU64::new(0),
+            hist: LatencyHistogram::new(),
+        }
+    }
+}
+
+/// The one global on/off switch — the only thing a disabled span loads.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+const PHASE_STAT_INIT: PhaseStat = PhaseStat::new();
+static STATS: [PhaseStat; N_PHASES] = [PHASE_STAT_INIT; N_PHASES];
+
+thread_local! {
+    /// Nanoseconds consumed by already-closed child spans of the
+    /// innermost open span *on this thread* — what a closing span
+    /// subtracts from its total to get self-time.
+    static CHILD_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Is span recording on? One relaxed load; inlined into every span and
+/// counter site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span/counter recording on or off (process-global).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Zero every phase stat and engine counter (training gauges persist —
+/// they are serving-side gauges, not per-run trace state).
+pub fn reset() {
+    for s in &STATS {
+        s.count.store(0, Ordering::Relaxed);
+        s.total_ns.store(0, Ordering::Relaxed);
+        s.self_ns.store(0, Ordering::Relaxed);
+        s.hist.reset();
+    }
+    super::counters::reset_counters();
+}
+
+struct ActiveSpan {
+    phase: Phase,
+    start: Instant,
+    /// The outer span's accumulated child time, restored (plus this
+    /// span's total) when this span closes.
+    outer_child_ns: u64,
+}
+
+/// RAII scope timer: construct at phase entry, record on drop. When
+/// recording is disabled the constructor returns an inert timer after a
+/// single atomic load.
+pub struct SpanTimer(Option<ActiveSpan>);
+
+impl SpanTimer {
+    #[inline]
+    pub fn start(phase: Phase) -> SpanTimer {
+        if !enabled() {
+            return SpanTimer(None);
+        }
+        let outer_child_ns = CHILD_NS.with(|c| {
+            let v = c.get();
+            c.set(0);
+            v
+        });
+        SpanTimer(Some(ActiveSpan { phase, start: Instant::now(), outer_child_ns }))
+    }
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        let Some(span) = self.0.take() else { return };
+        let total_ns = span.start.elapsed().as_nanos() as u64;
+        let child_ns = CHILD_NS.with(|c| {
+            let own_children = c.get();
+            // This whole span is a child of whatever encloses it.
+            c.set(span.outer_child_ns.saturating_add(total_ns));
+            own_children
+        });
+        let stat = &STATS[span.phase.index()];
+        stat.count.fetch_add(1, Ordering::Relaxed);
+        stat.total_ns.fetch_add(total_ns, Ordering::Relaxed);
+        stat.self_ns.fetch_add(total_ns.saturating_sub(child_ns), Ordering::Relaxed);
+        stat.hist.record(total_ns / 1_000);
+    }
+}
+
+/// A read-only copy of one phase's stats.
+#[derive(Clone, Debug)]
+pub struct PhaseSnapshot {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+    pub buckets: [u64; super::hist::N_BUCKETS],
+}
+
+/// Snapshot every phase (including zero-count ones, so two snapshots
+/// can be diffed index-for-index).
+pub fn snapshot_phases() -> Vec<PhaseSnapshot> {
+    Phase::ALL
+        .iter()
+        .map(|&phase| {
+            let s = &STATS[phase.index()];
+            PhaseSnapshot {
+                phase,
+                count: s.count.load(Ordering::Relaxed),
+                total_ns: s.total_ns.load(Ordering::Relaxed),
+                self_ns: s.self_ns.load(Ordering::Relaxed),
+                buckets: s.hist.bucket_counts(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use std::sync::{Mutex, MutexGuard};
+
+    /// Serializes tests that flip the global [`super::enabled`] switch
+    /// or read/reset the global stats, across all obs test modules.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    pub fn obs_test_guard() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::obs_test_guard;
+    use super::*;
+
+    #[test]
+    fn phase_names_round_trip_and_index_the_table() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Phase::from_name(p.name()), Some(*p));
+        }
+        assert_eq!(Phase::from_name("nope"), None);
+        assert!(Phase::ShardScan.is_parallel() && !Phase::CdSweep.is_parallel());
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = obs_test_guard();
+        set_enabled(false);
+        reset();
+        {
+            let _t = SpanTimer::start(Phase::CdSweep);
+        }
+        let snap = snapshot_phases();
+        assert_eq!(snap[Phase::CdSweep.index()].count, 0);
+    }
+
+    #[test]
+    fn nested_spans_split_total_into_self_times() {
+        let _g = obs_test_guard();
+        set_enabled(true);
+        reset();
+        {
+            let _outer = SpanTimer::start(Phase::Fit);
+            std::thread::sleep(std::time::Duration::from_millis(4));
+            {
+                let _inner = SpanTimer::start(Phase::CdSweep);
+                std::thread::sleep(std::time::Duration::from_millis(4));
+            }
+        }
+        let snap = snapshot_phases();
+        set_enabled(false);
+        let outer = &snap[Phase::Fit.index()];
+        let inner = &snap[Phase::CdSweep.index()];
+        assert_eq!(outer.count, 1);
+        assert_eq!(inner.count, 1);
+        // The inner span is undivided; the outer's self-time excludes it.
+        assert_eq!(inner.self_ns, inner.total_ns);
+        assert!(outer.total_ns >= inner.total_ns);
+        assert!(
+            outer.self_ns <= outer.total_ns - inner.total_ns,
+            "outer self {} must exclude inner total {} (outer total {})",
+            outer.self_ns,
+            inner.total_ns,
+            outer.total_ns
+        );
+        // Self-times of all phases sum to the root's total (single
+        // thread, everything nested under Fit) — the invariant the
+        // profile's wall reconciliation rests on.
+        let self_sum: u64 = snap.iter().map(|s| s.self_ns).sum();
+        assert_eq!(self_sum, outer.total_ns);
+        assert_eq!(inner.buckets.iter().sum::<u64>(), 1);
+        reset();
+        assert_eq!(snapshot_phases()[Phase::Fit.index()].count, 0);
+    }
+
+    #[test]
+    fn sibling_spans_restore_the_parent_child_accumulator() {
+        let _g = obs_test_guard();
+        set_enabled(true);
+        reset();
+        {
+            let _outer = SpanTimer::start(Phase::Fit);
+            for _ in 0..3 {
+                let _inner = SpanTimer::start(Phase::DerivativePass);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        let snap = snapshot_phases();
+        set_enabled(false);
+        let outer = &snap[Phase::Fit.index()];
+        let inner = &snap[Phase::DerivativePass.index()];
+        assert_eq!(inner.count, 3);
+        // All three siblings subtract from the parent exactly once.
+        assert!(outer.self_ns <= outer.total_ns.saturating_sub(inner.total_ns));
+        reset();
+    }
+}

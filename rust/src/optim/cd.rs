@@ -275,6 +275,7 @@ impl SurrogateKind {
             return (0.0, 0.0);
         }
         let need_d2 = self == SurrogateKind::Cubic;
+        crate::obs::counters::kernel_calls(backend == KernelBackend::Simd, 1);
         let (d1, d2) = coord_d1_d2_col_merged_b(
             backend, groups, tile_cuts, &state.w, col, xt_delta_l, need_d2, scratch,
         );
@@ -363,6 +364,7 @@ pub fn fit_support_warm(
     let mut stopper = Stopper::new();
     let mut iters = 0;
     for it in 0..config.max_iters {
+        let _span = crate::obs::SpanTimer::start(crate::obs::Phase::CdSweep);
         for &l in coords {
             kind.step_b(problem, state, ws, l, lip[l], obj, backend);
         }

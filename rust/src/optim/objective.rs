@@ -69,12 +69,20 @@ impl Default for FitConfig {
     }
 }
 
-/// One trace point: (iteration index, seconds since fit start, loss).
+/// One trace point: (iteration index, seconds since fit start, loss),
+/// plus per-point solver effort — sweeps completed and the max KKT
+/// residual when the engine computes one (exact streamed/sharded CD
+/// does; plain loss-tolerance engines record `None`).
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
     pub iter: usize,
     pub secs: f64,
     pub loss: f64,
+    /// Coordinate sweeps completed when this point was recorded (for
+    /// one-sweep-per-iteration engines this is `iter + 1`).
+    pub sweeps: usize,
+    /// Max KKT residual over coordinates at this point, if computed.
+    pub kkt: Option<f64>,
 }
 
 /// Loss history with divergence bookkeeping.
@@ -90,7 +98,26 @@ pub struct Trace {
 
 impl Trace {
     pub fn push(&mut self, iter: usize, start: Instant, loss: f64) {
-        self.points.push(TracePoint { iter, secs: start.elapsed().as_secs_f64(), loss });
+        self.push_full(iter, start, loss, iter + 1, None);
+    }
+
+    /// [`Trace::push`] with explicit solver effort: cumulative sweep
+    /// count and the iteration's max KKT residual (if computed).
+    pub fn push_full(
+        &mut self,
+        iter: usize,
+        start: Instant,
+        loss: f64,
+        sweeps: usize,
+        kkt: Option<f64>,
+    ) {
+        self.points.push(TracePoint {
+            iter,
+            secs: start.elapsed().as_secs_f64(),
+            loss,
+            sweeps,
+            kkt,
+        });
     }
 
     /// True if the loss ever increased from one record to the next by more
@@ -221,8 +248,21 @@ impl Stopper {
     /// Record the end-of-iteration loss; returns true if fitting should
     /// stop (converged, diverged, or out of budget).
     pub fn step(&mut self, iter: usize, loss: f64, config: &FitConfig) -> bool {
+        self.step_with(iter, loss, None, config)
+    }
+
+    /// [`Stopper::step`] for engines that also compute a per-iteration
+    /// max KKT residual, so the trace records optimality progress
+    /// alongside loss decrease.
+    pub fn step_with(
+        &mut self,
+        iter: usize,
+        loss: f64,
+        kkt: Option<f64>,
+        config: &FitConfig,
+    ) -> bool {
         if config.record_trace {
-            self.trace.push(iter, self.start, loss);
+            self.trace.push_full(iter, self.start, loss, iter + 1, kkt);
         }
         if !loss.is_finite() || loss > 1e300 {
             self.trace.diverged = true;
@@ -258,6 +298,23 @@ mod tests {
         t.push(3, start, 4.2);
         assert!(t.ever_increased(1e-12));
         assert_eq!(t.final_loss(), 4.2);
+    }
+
+    #[test]
+    fn trace_points_carry_sweeps_and_kkt() {
+        let mut t = Trace::default();
+        let start = Instant::now();
+        t.push(0, start, 5.0);
+        t.push_full(1, start, 4.0, 7, Some(1e-3));
+        assert_eq!(t.points[0].sweeps, 1);
+        assert!(t.points[0].kkt.is_none());
+        assert_eq!(t.points[1].sweeps, 7);
+        assert_eq!(t.points[1].kkt, Some(1e-3));
+
+        let mut s = Stopper::new();
+        let cfg = FitConfig::default();
+        assert!(!s.step_with(0, 10.0, Some(0.5), &cfg));
+        assert_eq!(s.trace.points[0].kkt, Some(0.5));
     }
 
     #[test]

@@ -242,6 +242,7 @@ impl PathSolver {
 
             // Candidate set: the strong rule plus everything already active.
             let (mut active, mut coords) = if self.screen {
+                let _span = crate::obs::SpanTimer::start(crate::obs::Phase::PathScreen);
                 let thr = (2.0 * obj.l1 - prev_l1).max(0.0);
                 let mut active = vec![false; p];
                 let mut coords: Vec<usize> = Vec::new();
@@ -256,6 +257,7 @@ impl PathSolver {
                 (vec![true; p], (0..p).collect::<Vec<usize>>())
             };
             let screened = coords.len();
+            crate::obs::counters::screened_skips((p - screened) as u64);
 
             let mut sweeps = 0;
             let mut kkt_rounds = 0;
@@ -293,6 +295,8 @@ impl PathSolver {
                 // set with |∇_l| > λ1 was wrongly discarded — repair and
                 // resume. (Candidates with β = 0 are already being swept,
                 // so only non-candidates can violate.)
+                let kkt_span =
+                    crate::obs::SpanTimer::start(crate::obs::Phase::PathKktRepair);
                 grad = beta_gradient_ws(problem, &state, &mut ws);
                 let mut violations = 0;
                 for l in 0..p {
@@ -302,9 +306,11 @@ impl PathSolver {
                         violations += 1;
                     }
                 }
+                drop(kkt_span);
                 if violations == 0 || kkt_rounds >= self.max_kkt_rounds {
                     break;
                 }
+                crate::obs::counters::kkt_repair_rounds(1);
             }
             let objective_value = obj.value(problem, &state);
 

@@ -19,7 +19,10 @@
 //! | `GET /v1/models` | —                                        | `{"models": [{name, version, features, nonzero, latest}…]}` |
 //! | `POST /v1/reload`| —                                        | `{"reloaded", "artifacts", "names"}` |
 //! | `GET /healthz`   | —                                        | `{"status": "ok", "artifacts", "generation", "models": […]}` |
-//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles + per-model drift |
+//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles + training gauges + per-model drift |
+//!
+//! `GET /metrics?format=prometheus` returns the same snapshot as
+//! Prometheus text exposition (`text/plain`) instead of JSON.
 
 use super::drift::DriftRegistry;
 use super::registry::{parse_spec, ModelRegistry};
@@ -252,6 +255,8 @@ impl ByteBuf {
 struct Request {
     method: String,
     path: String,
+    /// Raw query string (no leading `?`; empty when absent).
+    query: String,
     body: Vec<u8>,
     keep_alive: bool,
 }
@@ -309,7 +314,10 @@ fn read_request(
         .next()
         .ok_or_else(|| ReadErr::Malformed("missing request target".into()))?;
     let version = parts.next().unwrap_or("HTTP/1.1");
-    let path = target.split('?').next().unwrap_or(target).to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
 
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
@@ -361,7 +369,15 @@ fn read_request(
         }
     }
     let body = buf.take(content_length);
-    Ok(Some(Request { method, path, body, keep_alive }))
+    Ok(Some(Request { method, path, query, body, keep_alive }))
+}
+
+/// Value of `key` in a raw query string (`a=1&b=2`), if present.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+        (k == key).then_some(v)
+    })
 }
 
 fn reason_phrase(status: u16) -> &'static str {
@@ -376,14 +392,21 @@ fn reason_phrase(status: u16) -> &'static str {
     }
 }
 
+/// Content-Type of almost every response body.
+const CT_JSON: &str = "application/json";
+
+/// Content-Type of the Prometheus text exposition.
+const CT_PROM: &str = "text/plain; version=0.0.4";
+
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
     body: &str,
+    content_type: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         reason_phrase(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
@@ -414,11 +437,11 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
             Ok(None) => break,
             Err(ReadErr::TooLarge) => {
                 let body = error_body("request body exceeds the configured limit");
-                let _ = write_response(&mut stream, 413, &body, false);
+                let _ = write_response(&mut stream, 413, &body, CT_JSON, false);
                 break;
             }
             Err(ReadErr::Malformed(msg)) => {
-                let _ = write_response(&mut stream, 400, &error_body(&msg), false);
+                let _ = write_response(&mut stream, 400, &error_body(&msg), CT_JSON, false);
                 break;
             }
             Err(ReadErr::Io) => break, // includes keep-alive idle timeout
@@ -428,10 +451,10 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
             && served < MAX_REQUESTS_PER_CONN
             && !ctx.shutdown.load(Ordering::Acquire);
         let started = Instant::now();
-        let (status, body, endpoint, rows) = route(ctx, &request);
+        let (status, body, content_type, endpoint, rows) = route(ctx, &request);
         let us = started.elapsed().as_micros() as u64;
         ctx.metrics.endpoint(endpoint).record(status < 400, rows, us);
-        if write_response(&mut stream, status, &body, keep_alive).is_err() {
+        if write_response(&mut stream, status, &body, content_type, keep_alive).is_err() {
             break;
         }
         if !keep_alive {
@@ -440,17 +463,18 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
     }
 }
 
-/// Dispatch one request → `(status, body, metrics key, rows scored)`.
-fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
+/// Dispatch one request → `(status, body, content type, metrics key,
+/// rows scored)`.
+fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, &'static str, u64) {
     let method = request.method.as_str();
     match request.path.as_str() {
         "/healthz" => match method {
-            "GET" => (200, healthz_body(ctx), "healthz", 0),
-            _ => (405, error_body("healthz is GET-only"), "healthz", 0),
+            "GET" => (200, healthz_body(ctx), CT_JSON, "healthz", 0),
+            _ => (405, error_body("healthz is GET-only"), CT_JSON, "healthz", 0),
         },
         "/v1/models" => match method {
-            "GET" => (200, models_body(ctx), "models", 0),
-            _ => (405, error_body("models is GET-only"), "models", 0),
+            "GET" => (200, models_body(ctx), CT_JSON, "models", 0),
+            _ => (405, error_body("models is GET-only"), CT_JSON, "models", 0),
         },
         "/v1/reload" => match method {
             "POST" => match ctx.registry.reload() {
@@ -462,28 +486,43 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, u64) {
                         ("artifacts".into(), Json::Num(report.artifacts as f64)),
                         ("names".into(), Json::Arr(names)),
                     ]);
-                    (200, doc.to_json_string(), "reload", 0)
+                    (200, doc.to_json_string(), CT_JSON, "reload", 0)
                 }
                 // The previous state is still serving (atomic swap), so
                 // a failed reload is an error reply, not an outage.
-                Err(e) => (500, error_body(&e.to_string()), "reload", 0),
+                Err(e) => (500, error_body(&e.to_string()), CT_JSON, "reload", 0),
             },
-            _ => (405, error_body("reload is POST-only"), "reload", 0),
+            _ => (405, error_body("reload is POST-only"), CT_JSON, "reload", 0),
         },
         "/v1/score" => match method {
             "POST" => {
                 let (status, body, rows) = handle_score(ctx, &request.body);
-                (status, body, "score", rows)
+                (status, body, CT_JSON, "score", rows)
             }
-            _ => (405, error_body("score is POST-only"), "score", 0),
+            _ => (405, error_body("score is POST-only"), CT_JSON, "score", 0),
         },
         "/metrics" => match method {
-            "GET" => (200, metrics_body(ctx), "metrics", 0),
-            _ => (405, error_body("metrics is GET-only"), "metrics", 0),
+            "GET" => match query_param(&request.query, "format") {
+                Some("prometheus") => {
+                    (200, ctx.metrics.to_prometheus(), CT_PROM, "metrics", 0)
+                }
+                Some(other) => (
+                    400,
+                    error_body(&format!(
+                        "unknown metrics format {other:?} (try \"prometheus\")"
+                    )),
+                    CT_JSON,
+                    "metrics",
+                    0,
+                ),
+                None => (200, metrics_body(ctx), CT_JSON, "metrics", 0),
+            },
+            _ => (405, error_body("metrics is GET-only"), CT_JSON, "metrics", 0),
         },
         other => (
             404,
             error_body(&format!("no such endpoint {other:?}")),
+            CT_JSON,
             "other",
             0,
         ),
@@ -802,6 +841,15 @@ mod tests {
         for status in [200u16, 400, 404, 405, 413, 500] {
             assert_ne!(reason_phrase(status), "Unknown");
         }
+    }
+
+    #[test]
+    fn query_params_parse() {
+        assert_eq!(query_param("format=prometheus", "format"), Some("prometheus"));
+        assert_eq!(query_param("a=1&format=prometheus&b", "format"), Some("prometheus"));
+        assert_eq!(query_param("flag", "flag"), Some(""));
+        assert_eq!(query_param("", "format"), None);
+        assert_eq!(query_param("formatx=1", "format"), None);
     }
 
     #[test]

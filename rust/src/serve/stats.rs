@@ -1,88 +1,23 @@
 //! Lock-free serving metrics: per-endpoint request/error/row counters
 //! and log₂-bucketed latency histograms, surfaced as the JSON document
-//! behind `GET /metrics`.
+//! behind `GET /metrics` and as Prometheus text exposition behind
+//! `GET /metrics?format=prometheus`.
 //!
 //! Everything is atomic — recording a request is a handful of relaxed
 //! fetch-adds on the hot path, and readers (the `/metrics` handler)
 //! observe a consistent-enough snapshot without ever blocking scorers.
-//! Quantiles come from the histogram buckets, so p50/p99 are upper
-//! bounds within a factor of 2 (the bucket width) of the true value.
+//! The histogram type lives in [`crate::obs::hist`] — one
+//! implementation shared between serving latency and training span
+//! timing, with midpoint-interpolated quantiles (within 1.5× of the
+//! true sample). The document also carries the training-side gauges
+//! ([`crate::obs::training_gauges`]): last refit duration/sweeps and
+//! publish/reject counts, live when a watch loop runs in this process.
 
 use crate::api::json;
+use crate::obs::hist::{bucket_upper_us, LatencyHistogram, N_BUCKETS};
+use crate::obs::{training_gauges, TrainingGauges};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
-
-/// Number of log₂ latency buckets: bucket `i` covers `[2^(i−1), 2^i)`
-/// microseconds; the open-ended top bucket absorbs everything from
-/// 2³⁸ µs (~3.2 days) up.
-const N_BUCKETS: usize = 40;
-
-/// Log₂-bucketed latency histogram over microseconds.
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_us: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-}
-
-fn bucket_of(us: u64) -> usize {
-    if us == 0 {
-        0
-    } else {
-        (64 - us.leading_zeros() as usize).min(N_BUCKETS - 1)
-    }
-}
-
-impl LatencyHistogram {
-    pub fn record(&self, us: u64) {
-        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Mean latency in microseconds (0 when empty).
-    pub fn mean_us(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
-        }
-    }
-
-    /// Quantile estimate in microseconds: the upper bound of the bucket
-    /// containing the q-th sample (0 when empty). `q` in [0, 1].
-    pub fn quantile_us(&self, q: f64) -> f64 {
-        let counts: Vec<u64> =
-            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut cum = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return (1u64 << i) as f64;
-            }
-        }
-        (1u64 << (N_BUCKETS - 1)) as f64
-    }
-}
 
 /// Counters for one endpoint.
 pub struct EndpointStats {
@@ -100,7 +35,7 @@ impl EndpointStats {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rows: AtomicU64::new(0),
-            hist: LatencyHistogram::default(),
+            hist: LatencyHistogram::new(),
         }
     }
 
@@ -199,6 +134,7 @@ impl ServeMetrics {
     pub fn to_json(&self) -> String {
         let uptime = self.started.elapsed().as_secs_f64();
         let rows: u64 = self.score.rows();
+        let g = training_gauges();
         let mut out = String::with_capacity(1024);
         out.push_str("{\"uptime_secs\": ");
         json::write_f64(&mut out, uptime);
@@ -206,6 +142,8 @@ impl ServeMetrics {
         out.push_str(&rows.to_string());
         out.push_str(", \"rows_per_sec\": ");
         json::write_f64(&mut out, if uptime > 0.0 { rows as f64 / uptime } else { 0.0 });
+        out.push_str(", \"training\": ");
+        write_training_json(&mut out, &g);
         out.push_str(", \"endpoints\": {");
         for (i, ep) in self.endpoints().iter().enumerate() {
             if i > 0 {
@@ -218,37 +156,106 @@ impl ServeMetrics {
         out.push_str("}}");
         out
     }
+
+    /// The `GET /metrics?format=prometheus` response: the same snapshot
+    /// as [`ServeMetrics::to_json`] in Prometheus text exposition —
+    /// per-endpoint counters, cumulative latency histograms (`le` in
+    /// microseconds), and the training gauges.
+    pub fn to_prometheus(&self) -> String {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let g = training_gauges();
+        let mut out = String::with_capacity(4096);
+        out.push_str("# TYPE fastsurvival_uptime_seconds gauge\n");
+        out.push_str(&format!("fastsurvival_uptime_seconds {uptime}\n"));
+        out.push_str("# TYPE fastsurvival_rows_scored_total counter\n");
+        out.push_str(&format!("fastsurvival_rows_scored_total {}\n", self.score.rows()));
+        out.push_str("# TYPE fastsurvival_requests_total counter\n");
+        for ep in self.endpoints() {
+            out.push_str(&format!(
+                "fastsurvival_requests_total{{endpoint=\"{}\"}} {}\n",
+                ep.name,
+                ep.requests()
+            ));
+        }
+        out.push_str("# TYPE fastsurvival_errors_total counter\n");
+        for ep in self.endpoints() {
+            out.push_str(&format!(
+                "fastsurvival_errors_total{{endpoint=\"{}\"}} {}\n",
+                ep.name,
+                ep.errors()
+            ));
+        }
+        out.push_str("# TYPE fastsurvival_rows_total counter\n");
+        for ep in self.endpoints() {
+            out.push_str(&format!(
+                "fastsurvival_rows_total{{endpoint=\"{}\"}} {}\n",
+                ep.name,
+                ep.rows()
+            ));
+        }
+        out.push_str("# TYPE fastsurvival_request_latency_us histogram\n");
+        for ep in self.endpoints() {
+            let counts = ep.hist.bucket_counts();
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                // Compact cumulative exposition: only buckets that hold
+                // samples, plus the mandatory +Inf. Recorded values are
+                // integer µs, so bucket i's inclusive upper bound is
+                // 2^i − 1 (0 for the zero bucket); the open-ended top
+                // bucket is covered by +Inf alone.
+                if c == 0 || i == N_BUCKETS - 1 {
+                    continue;
+                }
+                let le = if i == 0 { 0 } else { bucket_upper_us(i) - 1 };
+                out.push_str(&format!(
+                    "fastsurvival_request_latency_us_bucket{{endpoint=\"{}\",le=\"{}\"}} {}\n",
+                    ep.name, le, cum
+                ));
+            }
+            out.push_str(&format!(
+                "fastsurvival_request_latency_us_bucket{{endpoint=\"{}\",le=\"+Inf\"}} {}\n",
+                ep.name,
+                ep.hist.count()
+            ));
+            out.push_str(&format!(
+                "fastsurvival_request_latency_us_sum{{endpoint=\"{}\"}} {}\n",
+                ep.name,
+                ep.hist.sum_us()
+            ));
+            out.push_str(&format!(
+                "fastsurvival_request_latency_us_count{{endpoint=\"{}\"}} {}\n",
+                ep.name,
+                ep.hist.count()
+            ));
+        }
+        out.push_str("# TYPE fastsurvival_last_refit_seconds gauge\n");
+        out.push_str(&format!("fastsurvival_last_refit_seconds {}\n", g.last_refit_secs));
+        out.push_str("# TYPE fastsurvival_last_refit_sweeps gauge\n");
+        out.push_str(&format!("fastsurvival_last_refit_sweeps {}\n", g.last_sweeps));
+        out.push_str("# TYPE fastsurvival_publishes_total counter\n");
+        out.push_str(&format!("fastsurvival_publishes_total {}\n", g.publishes));
+        out.push_str("# TYPE fastsurvival_rejects_total counter\n");
+        out.push_str(&format!("fastsurvival_rejects_total {}\n", g.rejects));
+        out
+    }
+}
+
+fn write_training_json(out: &mut String, g: &TrainingGauges) {
+    out.push_str("{\"last_refit_secs\": ");
+    json::write_f64(out, g.last_refit_secs);
+    out.push_str(", \"last_refit_sweeps\": ");
+    out.push_str(&g.last_sweeps.to_string());
+    out.push_str(", \"publishes\": ");
+    out.push_str(&g.publishes.to_string());
+    out.push_str(", \"rejects\": ");
+    out.push_str(&g.rejects.to_string());
+    out.push('}');
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn buckets_cover_the_range() {
-        assert_eq!(bucket_of(0), 0);
-        assert_eq!(bucket_of(1), 1);
-        assert_eq!(bucket_of(2), 2);
-        assert_eq!(bucket_of(3), 2);
-        assert_eq!(bucket_of(1024), 11);
-        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
-    }
-
-    #[test]
-    fn quantiles_are_monotone_upper_bounds() {
-        let h = LatencyHistogram::default();
-        assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram");
-        for us in [10u64, 20, 40, 80, 160, 1000, 5000] {
-            h.record(us);
-        }
-        let p50 = h.quantile_us(0.50);
-        let p99 = h.quantile_us(0.99);
-        assert!(p50 <= p99);
-        assert!(p50 >= 40.0, "p50 bucket must cover the median sample");
-        assert!(p99 >= 5000.0, "p99 bucket must cover the max sample");
-        assert!(h.mean_us() > 0.0);
-        assert_eq!(h.count(), 7);
-    }
 
     #[test]
     fn metrics_document_is_valid_json() {
@@ -263,7 +270,52 @@ mod tests {
         assert_eq!(score.require("errors").unwrap().as_usize().unwrap(), 1);
         assert_eq!(score.require("rows").unwrap().as_usize().unwrap(), 64);
         assert!(doc.require("rows_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+        // The training block is always present (zeros before any watch
+        // cycle runs in this process).
+        let training = doc.require("training").unwrap();
+        assert!(training.require("publishes").unwrap().as_usize().is_ok());
+        assert!(training.require("last_refit_secs").unwrap().as_f64().is_ok());
         // Unknown routing keys fall back to "other".
         assert_eq!(m.endpoint("nope").name, "other");
+    }
+
+    #[test]
+    fn prometheus_exposition_matches_the_json_snapshot() {
+        let m = ServeMetrics::default();
+        m.score.record(true, 64, 1200);
+        m.score.record(false, 0, 300);
+        m.reload.record(true, 0, 50);
+        let doc = json::parse(&m.to_json()).unwrap();
+        let text = m.to_prometheus();
+        // Counters agree with the JSON document, endpoint by endpoint.
+        for ep in ["score", "models", "reload", "healthz", "metrics", "other"] {
+            let js = doc.require("endpoints").unwrap().require(ep).unwrap();
+            for (series, field) in [
+                ("fastsurvival_requests_total", "requests"),
+                ("fastsurvival_errors_total", "errors"),
+                ("fastsurvival_rows_total", "rows"),
+            ] {
+                let want = js.require(field).unwrap().as_usize().unwrap();
+                let line = format!("{series}{{endpoint=\"{ep}\"}} {want}");
+                assert!(text.contains(&line), "missing {line:?} in:\n{text}");
+            }
+        }
+        // Histogram series: +Inf equals _count equals request count.
+        let hist_lines = [
+            "fastsurvival_request_latency_us_bucket{endpoint=\"score\",le=\"+Inf\"} 2",
+            "fastsurvival_request_latency_us_count{endpoint=\"score\"} 2",
+            "fastsurvival_request_latency_us_sum{endpoint=\"score\"} 1500",
+            // Non-empty buckets appear with integer-µs inclusive
+            // bounds: 1200 µs → bucket [1024, 2048) → le="2047";
+            // 300 µs → bucket [256, 512) → le="511".
+            "fastsurvival_request_latency_us_bucket{endpoint=\"score\",le=\"511\"} 1",
+            "fastsurvival_request_latency_us_bucket{endpoint=\"score\",le=\"2047\"} 2",
+        ];
+        for line in hist_lines {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+        // Training gauges are present in both formats.
+        assert!(text.contains("fastsurvival_publishes_total "));
+        assert!(doc.require("training").is_ok());
     }
 }

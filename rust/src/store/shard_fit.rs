@@ -100,6 +100,12 @@ fn protocol_violation() -> FastSurvivalError {
 /// Send `cmd`, surfacing the worker's parting [`Reply::Failed`] if it
 /// already hung up.
 fn send_cmd(tx: &mpsc::Sender<Cmd>, rx: &mpsc::Receiver<Reply>, cmd: Cmd) -> Result<()> {
+    crate::obs::counters::shard_cmd(match cmd {
+        Cmd::Scan { .. } => crate::obs::ShardCmdKind::Scan,
+        Cmd::Emit { .. } => crate::obs::ShardCmdKind::Emit,
+        Cmd::Apply { .. } => crate::obs::ShardCmdKind::Apply,
+        Cmd::EtaMax | Cmd::Rebase { .. } => crate::obs::ShardCmdKind::Ctl,
+    });
     if tx.send(cmd).is_err() {
         return Err(match rx.try_recv() {
             Ok(Reply::Failed(e)) => e,
@@ -141,6 +147,7 @@ fn worker_loop(
     while let Ok(cmd) = rx.recv() {
         let reply = match cmd {
             Cmd::Scan { l, need_d2 } => {
+                let _span = crate::obs::SpanTimer::start(crate::obs::Phase::ShardScan);
                 cur_need_s2 = need_d2;
                 match reader.read_col_range(l, span.row_a, span.row_b, colbuf) {
                     Ok(()) => {
@@ -165,6 +172,7 @@ fn worker_loop(
                 }
             }
             Cmd::Emit { carries } => {
+                let _span = crate::obs::SpanTimer::start(crate::obs::Phase::ShardEmit);
                 let mut emitted = Vec::with_capacity(span.t_hi - span.t_lo);
                 for (i, t) in (span.t_lo..span.t_hi).enumerate() {
                     let (g_lo, g_hi) = (tile_cuts[t], tile_cuts[t + 1]);
@@ -180,6 +188,7 @@ fn worker_loop(
                 Reply::Emitted(emitted)
             }
             Cmd::Apply { delta, binary } => {
+                let _span = crate::obs::SpanTimer::start(crate::obs::Phase::ShardApply);
                 Reply::Applied(apply_coord_slice_b(backend, colbuf, binary, delta, eta, w))
             }
             Cmd::EtaMax => {
@@ -427,7 +436,7 @@ pub(crate) fn exact_sharded_cd(
         sweeps = it + 1;
         let loss = loss_for_parts_b(backend, groups, &meta.delta, &eta, &w, shift)
             + obj.penalty(&beta);
-        let stop_loss = stopper.step(it, loss, &config);
+        let stop_loss = stopper.step_with(it, loss, Some(max_res), &config);
         let stopped_kkt = stop_kkt > 0.0 && max_res <= stop_kkt;
         if stopped_kkt {
             stopper.trace.converged = true;

@@ -217,6 +217,7 @@ impl StreamingFit {
         let mut sgd_steps = 0usize;
         let blocks = self.sgd_blocks.unwrap_or(meta.n_chunks);
         if blocks > 0 && meta.n_chunks > 1 {
+            let _span = crate::obs::SpanTimer::start(crate::obs::Phase::StreamWarmup);
             let mut rng = Rng::new(self.seed);
             let mut chunkbuf: Vec<f64> = Vec::new();
             for t in 0..blocks {
@@ -340,6 +341,7 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
     let mut sweeps = 0usize;
     let mut colbuf: Vec<f64> = Vec::new();
     for it in 0..max_sweeps {
+        let _span = crate::obs::SpanTimer::start(crate::obs::Phase::StreamExactSweep);
         // Largest pre-step KKT residual seen this sweep, reported by
         // the engine's merged parts-level step
         // ([`SurrogateKind::step_residual_col_merged_b`] — one source
@@ -375,7 +377,7 @@ pub(crate) fn exact_chunked_cd<S: CoxData>(
             &state.w,
             state.shift,
         ) + obj.penalty(&state.beta);
-        let stop_loss = stopper.step(it, loss, &config);
+        let stop_loss = stopper.step_with(it, loss, Some(max_res), &config);
         let stopped_kkt = stop_kkt > 0.0 && max_res <= stop_kkt;
         if stopped_kkt {
             stopper.trace.converged = true;

@@ -1,0 +1,112 @@
+//! Telemetry contract, end to end: enabling span tracing and engine
+//! counters must never perturb the numerics. A traced fit lands on
+//! bitwise-identical coefficients to an untraced fit at every worker
+//! count, the traced model carries a populated `FitReport`, and the
+//! untraced model carries none. The same holds for the λ-path solver,
+//! whose traced run additionally records screening phases and workspace
+//! cache traffic.
+//!
+//! The obs sink is process-global, so everything lives in one `#[test]`
+//! — libtest would otherwise interleave enable/disable flips across
+//! test threads inside this binary.
+
+use fastsurvival::api::CoxFit;
+use fastsurvival::data::synthetic::{generate, SyntheticConfig};
+use fastsurvival::obs;
+use fastsurvival::util::compute::Compute;
+
+#[test]
+fn tracing_never_perturbs_the_fit_and_reports_ride_the_artifacts() {
+    let ds = generate(&SyntheticConfig { n: 400, p: 16, rho: 0.4, k: 4, s: 0.1, seed: 901 });
+
+    // --- Single fit: bitwise parity at every worker count. ------------
+    for threads in [1usize, 2, 4] {
+        let fit = || {
+            CoxFit::new()
+                .l1(0.1)
+                .l2(0.5)
+                .compute(Compute::default().threads(threads))
+                .fit(&ds)
+                .unwrap()
+        };
+
+        // Untraced reference: telemetry disabled (the default).
+        assert!(!obs::enabled(), "telemetry must start disabled");
+        let plain = fit();
+        assert!(
+            plain.diagnostics().report.is_none(),
+            "threads={threads}: untraced fit must not attach a report"
+        );
+
+        // Traced run of the exact same problem and config.
+        obs::set_enabled(true);
+        obs::reset();
+        let traced = fit();
+        obs::set_enabled(false);
+        obs::reset();
+
+        assert_eq!(plain.beta().len(), traced.beta().len());
+        for (j, (a, b)) in plain.beta().iter().zip(traced.beta()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads}, coord {j}: tracing changed β ({a} vs {b})"
+            );
+        }
+
+        let report = traced
+            .diagnostics()
+            .report
+            .as_ref()
+            .unwrap_or_else(|| panic!("threads={threads}: traced fit must attach a report"));
+        assert!(!report.is_empty(), "threads={threads}: report must not be empty");
+        let sweep = report
+            .phases
+            .iter()
+            .find(|p| p.phase == "cd_sweep")
+            .unwrap_or_else(|| panic!("threads={threads}: cd_sweep phase missing"));
+        assert!(sweep.count > 0, "threads={threads}: cd_sweep never fired");
+        assert!(
+            sweep.self_ns <= sweep.total_ns,
+            "threads={threads}: cd_sweep self-time exceeds its total"
+        );
+    }
+
+    // --- λ-path: same contract through the screening solver. ----------
+    let builder = CoxFit::new().n_lambdas(8);
+    let plain_path = builder.clone().l1_path(&ds).unwrap();
+    assert!(plain_path.report().is_none(), "untraced path must not attach a report");
+
+    obs::set_enabled(true);
+    obs::reset();
+    let traced_path = builder.clone().l1_path(&ds).unwrap();
+    obs::set_enabled(false);
+    obs::reset();
+
+    assert_eq!(plain_path.len(), traced_path.len());
+    for (a, b) in plain_path.points().iter().zip(traced_path.points().iter()) {
+        for (x, y) in a.beta.iter().zip(b.beta.iter()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "λ={:?}: tracing changed the path solution",
+                a.lambda
+            );
+        }
+    }
+
+    let report = traced_path.report().expect("traced path must attach a report");
+    assert!(
+        report.phases.iter().any(|p| p.phase == "path_screen" && p.count > 0),
+        "screening phase missing from the path report"
+    );
+    assert!(
+        report.phases.iter().any(|p| p.phase == "cd_sweep" && p.count > 0),
+        "inner CD sweeps missing from the path report"
+    );
+    let c = &report.counters;
+    assert!(
+        c.workspace_hits + c.workspace_misses > 0,
+        "workspace cache traffic must be counted along the path"
+    );
+}

@@ -292,6 +292,91 @@ fn concurrent_burst_with_midburst_reload_keeps_bitwise_parity() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ------------------------------------------- metrics expositions
+
+/// Value of a Prometheus sample line `name{labels} value` (or
+/// `name value`) in an exposition body.
+fn prom_value(body: &str, line_prefix: &str) -> f64 {
+    body.lines()
+        .find(|l| l.starts_with(line_prefix))
+        .unwrap_or_else(|| panic!("no sample starting with {line_prefix:?} in:\n{body}"))
+        .rsplit(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn metrics_json_and_prometheus_render_the_same_snapshot() {
+    let server = start_server("prom", 8 << 20, 4);
+    let addr = server.handle.local_addr();
+
+    // Put known traffic on the score endpoint first.
+    let mut client = HttpClient::connect(addr).unwrap();
+    let body = format!("{{\"model\": \"m@1\", \"rows\": {}}}", rows_json(&server.ds.x, &[0, 1, 2]));
+    for _ in 0..3 {
+        assert_eq!(client.post("/v1/score", &body).unwrap().status, 200);
+    }
+
+    // JSON first, then Prometheus: the score counters sit still between
+    // the two reads (only the metrics endpoint's own counter moves).
+    let json_resp = client.get("/metrics").unwrap();
+    assert_eq!(json_resp.status, 200);
+    let doc = json::parse(&json_resp.body).unwrap();
+    let score = doc.require("endpoints").unwrap().require("score").unwrap();
+    let requests = score.require("requests").unwrap().as_usize().unwrap();
+    let rows = score.require("rows").unwrap().as_usize().unwrap();
+    assert_eq!(requests, 3);
+    assert_eq!(rows, 9);
+    let training = doc.require("training").unwrap();
+    let publishes = training.require("publishes").unwrap().as_usize().unwrap();
+    let rejects = training.require("rejects").unwrap().as_usize().unwrap();
+
+    let prom_resp = client.get("/metrics?format=prometheus").unwrap();
+    assert_eq!(prom_resp.status, 200);
+    let prom = &prom_resp.body;
+    assert!(prom.starts_with("# TYPE fastsurvival_uptime_seconds gauge"), "{prom}");
+    assert_eq!(
+        prom_value(prom, "fastsurvival_requests_total{endpoint=\"score\"}") as usize,
+        requests,
+        "prometheus and JSON disagree on score requests"
+    );
+    assert_eq!(
+        prom_value(prom, "fastsurvival_rows_total{endpoint=\"score\"}") as usize,
+        rows,
+        "prometheus and JSON disagree on score rows"
+    );
+    assert_eq!(
+        prom_value(prom, "fastsurvival_rows_scored_total ") as usize,
+        rows,
+        "prometheus and JSON disagree on total rows scored"
+    );
+    assert_eq!(
+        prom_value(prom, "fastsurvival_errors_total{endpoint=\"score\"}") as usize,
+        0
+    );
+    // Training gauges render in both expositions from the same
+    // process-global snapshot.
+    assert_eq!(prom_value(prom, "fastsurvival_publishes_total ") as usize, publishes);
+    assert_eq!(prom_value(prom, "fastsurvival_rejects_total ") as usize, rejects);
+    // The latency histogram's +Inf cumulative count equals the
+    // endpoint's request count, as the exposition format requires.
+    assert_eq!(
+        prom_value(prom, "fastsurvival_request_latency_us_bucket{endpoint=\"score\",le=\"+Inf\"}")
+            as usize,
+        requests
+    );
+
+    // An unknown format is a client error, not a silent JSON fallback.
+    assert_eq!(client.get("/metrics?format=xml").unwrap().status, 400);
+
+    drop(client);
+    let dir = server.dir.clone();
+    server.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // -------------------------------------------------- CSV round trip
 
 #[test]
