@@ -1,16 +1,28 @@
-//! The `profile` subcommand: read a `--trace-out` JSONL file and print
-//! a self-time-sorted phase table, a wall-clock reconciliation, and the
-//! engine counters.
+//! The `profile` subcommand: read a telemetry file and print the right
+//! report for what it holds.
 //!
-//! Self-time is what the table ranks by: a phase's total minus the time
-//! spent inside nested instrumented phases, so the column sums to the
-//! run's wall clock instead of double-counting parents and children.
-//! Parallel phases (the sharded worker legs) accumulate across worker
-//! threads concurrently, so their self-time can legitimately exceed the
-//! wall clock — they are reconciled and listed separately.
+//! Two input kinds are auto-detected:
+//!
+//! * a **training trace** (`fit/path/bigfit/watch --trace-out` JSONL) —
+//!   rendered as a self-time-sorted phase table, a wall-clock
+//!   reconciliation, and the engine counters;
+//! * **serve request records** (an access-log JSONL or a `/debug/trace`
+//!   flight-recorder dump) — rendered as per-endpoint stage tables with
+//!   exact p50/p99 per lifecycle stage and the queue-wait share of
+//!   total request time.
+//!
+//! Self-time is what the training table ranks by: a phase's total minus
+//! the time spent inside nested instrumented phases, so the column sums
+//! to the run's wall clock instead of double-counting parents and
+//! children. Parallel phases (the sharded worker legs) accumulate
+//! across worker threads concurrently, so their self-time can
+//! legitimately exceed the wall clock — they are reconciled and listed
+//! separately.
 
+use crate::api::json;
 use crate::error::{FastSurvivalError, Result};
 use crate::obs::hist::quantile_from_counts;
+use crate::obs::recorder::{parse_request_records, ParsedRequest, Stage};
 use crate::obs::{parse_trace_jsonl, TraceDoc};
 use crate::util::args::Args;
 
@@ -109,8 +121,102 @@ pub fn render(doc: &TraceDoc) -> String {
     out
 }
 
-/// `fastsurvival profile --trace trace.jsonl` (the file may also be
-/// passed positionally).
+/// Does this text hold serve request records (access-log JSONL or a
+/// `/debug/trace` dump) rather than a training trace? Probes the first
+/// non-empty line: request records carry `id` + `endpoint` per line, a
+/// dump wraps them in a `records` array, and a training trace leads
+/// with its `cmd` header.
+fn looks_like_request_records(text: &str) -> bool {
+    let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("").trim();
+    match json::parse(first) {
+        Ok(j) => {
+            j.get("records").is_some() || (j.get("endpoint").is_some() && j.get("id").is_some())
+        }
+        // A pretty-printed dump spans multiple lines; only the whole
+        // text parses.
+        Err(_) => json::parse(text).map(|j| j.get("records").is_some()).unwrap_or(false),
+    }
+}
+
+/// Exact ceil-rank quantile of an ascending-sorted microsecond sample.
+fn q_us(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[i - 1] as f64
+}
+
+/// Render the per-endpoint stage report for serve request records.
+pub fn render_requests(records: &[ParsedRequest]) -> String {
+    use std::collections::BTreeMap;
+    let mut by_endpoint: BTreeMap<&str, Vec<&ParsedRequest>> = BTreeMap::new();
+    for r in records {
+        by_endpoint.entry(r.endpoint.as_str()).or_default().push(r);
+    }
+    let mut out = String::with_capacity(2048);
+    out.push_str(&format!(
+        "profile: {} request records across {} endpoint(s)\n",
+        records.len(),
+        by_endpoint.len()
+    ));
+    for (endpoint, rs) in &by_endpoint {
+        let errors = rs.iter().filter(|r| r.status >= 400).count();
+        let rows: u64 = rs.iter().map(|r| r.rows).sum();
+        let total_sum_us: u64 = rs.iter().map(|r| r.total_us).sum();
+        out.push_str(&format!(
+            "\nendpoint {endpoint}: {} requests · {errors} errors · {rows} rows · \
+             {:.1} ms total\n",
+            rs.len(),
+            total_sum_us as f64 / 1e3
+        ));
+        out.push_str(&format!(
+            "  {:<12} {:>12} {:>8} {:>10} {:>10}\n",
+            "stage", "total ms", "share %", "p50 us", "p99 us"
+        ));
+        for st in Stage::ALL {
+            let mut vals: Vec<u64> = rs.iter().map(|r| r.stage_us[st.index()]).collect();
+            vals.sort_unstable();
+            let sum: u64 = vals.iter().sum();
+            let share = if total_sum_us > 0 {
+                100.0 * sum as f64 / total_sum_us as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  {:<12} {:>12.3} {:>7.1}% {:>10.1} {:>10.1}\n",
+                st.name(),
+                sum as f64 / 1e3,
+                share,
+                q_us(&vals, 0.50),
+                q_us(&vals, 0.99)
+            ));
+        }
+        let mut totals: Vec<u64> = rs.iter().map(|r| r.total_us).collect();
+        totals.sort_unstable();
+        out.push_str(&format!(
+            "  {:<12} {:>12.3} {:>7.1}% {:>10.1} {:>10.1}\n",
+            "total",
+            total_sum_us as f64 / 1e3,
+            100.0,
+            q_us(&totals, 0.50),
+            q_us(&totals, 0.99)
+        ));
+    }
+    let queue_us: u64 =
+        records.iter().map(|r| r.stage_us[Stage::QueueWait.index()]).sum();
+    let total_us: u64 = records.iter().map(|r| r.total_us).sum();
+    out.push_str(&format!(
+        "\nqueue wait: {:.1} ms — {:.1}% of total request time\n",
+        queue_us as f64 / 1e3,
+        if total_us > 0 { 100.0 * queue_us as f64 / total_us as f64 } else { 0.0 }
+    ));
+    out
+}
+
+/// `fastsurvival profile --trace <file>` (the file may also be passed
+/// positionally): a training trace, an access log, or a flight-recorder
+/// dump — the kind is detected from the content.
 pub fn run(args: &Args) -> Result<()> {
     let path = args
         .get("trace")
@@ -118,13 +224,18 @@ pub fn run(args: &Args) -> Result<()> {
         .or_else(|| args.positional.get(1).cloned())
         .ok_or_else(|| {
             FastSurvivalError::InvalidConfig(
-                "profile requires --trace <trace.jsonl> (written by \
-                 fit/path/bigfit/watch --trace-out)"
+                "profile requires --trace <file> (a fit/path/bigfit/watch --trace-out \
+                 trace, a serve access log, or a /debug/trace dump)"
                     .into(),
             )
         })?;
     let text = std::fs::read_to_string(&path)
         .map_err(|e| FastSurvivalError::io(format!("reading trace from {path}"), e))?;
+    if looks_like_request_records(&text) {
+        let records = parse_request_records(&text)?;
+        print!("{}", render_requests(&records));
+        return Ok(());
+    }
     let doc = parse_trace_jsonl(&text)?;
     print!("{}", render(&doc));
     Ok(())
@@ -161,6 +272,74 @@ mod tests {
         // Root span covers the whole run, so the serial self-sum tracks
         // the wall we passed and no incompleteness warning fires.
         assert!(!report.contains("WARNING"), "{report}");
+    }
+
+    #[test]
+    fn request_records_render_per_endpoint_stage_tables() {
+        use crate::obs::recorder::{write_record_json, RequestRecord, N_STAGES};
+        let mut jsonl = String::new();
+        let mut push = |rec: &RequestRecord| {
+            write_record_json(rec, &mut jsonl);
+            jsonl.push('\n');
+        };
+        let base = RequestRecord {
+            seq: 0,
+            id: String::new(),
+            endpoint: "score",
+            model: "risk@1".into(),
+            rows: 64,
+            status: 200,
+            stage_us: [5, 100, 300, 800, 50, 10],
+            total_us: 1_265,
+        };
+        for (i, queue) in [300u64, 500, 100].iter().enumerate() {
+            let mut r = base.clone();
+            r.id = format!("s{i}");
+            r.stage_us[2] = *queue;
+            r.total_us = r.stage_us.iter().sum();
+            push(&r);
+        }
+        let health = RequestRecord {
+            seq: 3,
+            id: "h0".into(),
+            endpoint: "healthz",
+            model: String::new(),
+            rows: 0,
+            status: 200,
+            stage_us: [2, 0, 0, 0, 15, 3],
+            total_us: 20,
+        };
+        push(&health);
+        assert!(looks_like_request_records(&jsonl));
+        let records = parse_request_records(&jsonl).unwrap();
+        assert_eq!(records.len(), 4);
+        assert_eq!(records[0].stage_us.len(), N_STAGES);
+        let report = render_requests(&records);
+        assert!(report.contains("endpoint score: 3 requests"), "{report}");
+        assert!(report.contains("endpoint healthz: 1 requests"), "{report}");
+        for stage in ["read", "parse", "queue_wait", "batch_score", "serialize", "write"]
+        {
+            assert!(report.contains(stage), "missing stage {stage}:\n{report}");
+        }
+        // Queue-wait share: 900 µs of queue over 3795 µs of score time
+        // plus 20 µs of healthz → 900/3815 ≈ 23.6%.
+        assert!(report.contains("queue wait: 0.9 ms"), "{report}");
+        assert!(report.contains("23.6% of total request time"), "{report}");
+    }
+
+    #[test]
+    fn input_kind_detection_routes_traces_and_records() {
+        // A training trace leads with its cmd header — not request
+        // records.
+        let trace = "{\"schema_version\": 1, \"cmd\": \"fit\", \"wall_secs\": 0.1, \
+                     \"threads\": 1}\n";
+        assert!(!looks_like_request_records(trace));
+        // A /debug/trace dump wraps records in one object.
+        let dump = "{\"capacity\": 8, \"recorded\": 0, \"slow_threshold_us\": 0, \
+                    \"records\": [], \"slow\": []}";
+        assert!(looks_like_request_records(dump));
+        // Garbage is neither.
+        assert!(!looks_like_request_records("not json at all"));
     }
 
     #[test]

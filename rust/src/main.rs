@@ -9,10 +9,11 @@
 //!   convert      stream a CSV or the synthetic generator into a .fsds store
 //!   bigfit       tracked out-of-core workload + gates → BENCH_bigfit.json
 //!   bench        fixed-seed hot-path benchmarks → BENCH_optim.json
-//!   profile      self-time phase table from a --trace-out JSONL trace
+//!   profile      phase table from a training trace, or per-endpoint stage
+//!                table from a serve access log / /debug/trace dump
 //!   serve        HTTP scoring server over a model-artifact directory
 //!   score        offline batch scoring: CSV in → CSV out, streamed
-//!   serve-smoke  end-to-end serving burst + gate → BENCH_serve.json
+//!   serve-smoke  off/on serving burst + obs gates → BENCH_serve.json
 //!   append       append rows to a .fsds store as a committed live segment
 //!   inspect      dump + verify a .fsds store (header, meta, segments)
 //!   watch        online loop: detect appends, warm-refit, gated publish
@@ -621,6 +622,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if state.n_artifacts() == 0 {
         println!("  (empty — drop <name>@<version>.json artifacts in and POST /v1/reload)");
     }
+    let access_log = args.get("access-log").map(|s| s.to_string());
+    let slow_ms = args.get_or("slow-ms", 0u64);
+    // Any request-obs sink being asked for turns the recording layer on
+    // (it can also be armed independently via --trace-out tracing).
+    if access_log.is_some() || slow_ms > 0 || args.flag("request-obs") {
+        fastsurvival::obs::set_enabled(true);
+    }
     let cfg = ServeConfig {
         addr: args.str_or("addr", "127.0.0.1:7878"),
         workers: args.get_or("workers", ServeConfig::default_workers()),
@@ -629,13 +637,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch_rows: args.get_or("batch-rows", 4096),
             max_wait_us: args.get_or("batch-wait-us", 150),
         },
+        access_log: access_log.clone(),
+        slow_ms,
+        recorder_capacity: args.get_or("recorder-capacity", 512usize),
     };
     let handle = serve(registry, &cfg)?;
     println!("serve: listening on http://{}", handle.local_addr());
     println!(
         "serve: POST /v1/score · GET /v1/models · POST /v1/reload · GET /healthz · \
-         GET /metrics"
+         GET /metrics · GET /debug/trace"
     );
+    if let Some(path) = &access_log {
+        println!("serve: access log → {path} (inspect with: fastsurvival profile --trace {path})");
+    }
     let max_secs = args.get_or("max-secs", 0.0_f64);
     if max_secs > 0.0 {
         std::thread::sleep(Duration::from_secs_f64(max_secs));
@@ -832,10 +846,13 @@ subcommands:\n\
   convert      CSV or synthetic stream → .fsds store (--input|--synthetic --out --precision f64|f32 --shards N)\n\
   bigfit       out-of-core workload + RSS/parity/shard gates → BENCH_bigfit.json (--quick --shards --shard-workers)\n\
   bench        fixed-seed hot-path benchmarks → BENCH_optim.json (--quick --check --backend)\n\
-  profile      self-time phase table from a --trace-out JSONL file (--trace trace.jsonl)\n\
-  serve        HTTP scoring server (--models --addr --workers --max-secs)\n\
+  profile      phase table from a training trace, or per-endpoint stage table\n\
+               from a serve access log / /debug/trace dump (--trace FILE)\n\
+  serve        HTTP scoring server (--models --addr --workers --max-secs\n\
+               --access-log FILE --slow-ms N --recorder-capacity N --request-obs)\n\
   score        batch CSV scoring (--model --input --output --horizons --chunk)\n\
-  serve-smoke  concurrent serving burst + parity gate → BENCH_serve.json\n\
+  serve-smoke  off/on serving burst + parity/overhead/reconciliation gates →\n\
+               BENCH_serve.json (--obs-reps --slow-ms --access-log --trace-dump --check)\n\
   append       rows → committed live segment (--store --input|--synthetic --compact)\n\
   inspect      dump + verify a store or shard set (--store file.fsds|file.fsds.shards.json)\n\
   watch        online loop (--store --models --name --once --poll-secs --reload)\n\
@@ -848,6 +865,11 @@ compute options (fit, path, bigfit, watch, bench):\n\
 observability (fit, path, bigfit, watch):\n\
   --trace-out FILE             arm span tracing, write an aggregate JSONL trace on exit;\n\
                                read it back with `fastsurvival profile --trace FILE`\n\n\
+request observability (serve):\n\
+  --access-log FILE            structured JSONL access log, one line per request\n\
+  --slow-ms N                  pin requests slower than N ms into the slow ring\n\
+  --request-obs                enable recording without an access log\n\
+                               (flight recorder + sliced metrics + /debug/trace)\n\n\
 see README.md for endpoint schemas and examples";
 
 fn main() -> Result<()> {

@@ -85,6 +85,40 @@ pub fn quantile_from_counts(counts: &[u64], q: f64) -> f64 {
     bucket_midpoint_us(counts.len().saturating_sub(1))
 }
 
+/// Append one conformant Prometheus cumulative histogram to `out`:
+/// every finite bucket boundary (`le` = the bucket's inclusive integer
+/// upper bound, `2^i − 1`, with `0` for the zero bucket), the mandatory
+/// `+Inf` bucket, and the `_sum`/`_count` series. The boundary set is
+/// fixed per metric — empty buckets are emitted too, so `le` label sets
+/// never vary between scrapes (rate() over `_bucket` series needs
+/// stable boundaries). `labels` is the label set without `le` (may be
+/// empty); `count`/`sum` must come from the same snapshot as `buckets`.
+pub fn write_prom_cumulative(
+    out: &mut String,
+    metric: &str,
+    labels: &str,
+    buckets: &[u64; N_BUCKETS],
+    count: u64,
+    sum: u64,
+) {
+    use std::fmt::Write as _;
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate().take(N_BUCKETS - 1) {
+        cum += c;
+        let le = if i == 0 { 0 } else { bucket_upper_us(i) - 1 };
+        let _ = writeln!(out, "{metric}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{metric}_bucket{{{labels}{sep}le=\"+Inf\"}} {count}");
+    if labels.is_empty() {
+        let _ = writeln!(out, "{metric}_sum {sum}");
+        let _ = writeln!(out, "{metric}_count {count}");
+    } else {
+        let _ = writeln!(out, "{metric}_sum{{{labels}}} {sum}");
+        let _ = writeln!(out, "{metric}_count{{{labels}}} {count}");
+    }
+}
+
 /// Log₂-bucketed duration histogram over microseconds.
 pub struct LatencyHistogram {
     buckets: [AtomicU64; N_BUCKETS],
@@ -222,6 +256,42 @@ mod tests {
         assert_eq!(h.count(), 7);
         assert!(h.mean_us() > 0.0);
         assert_eq!(h.sum_us(), 6310);
+    }
+
+    #[test]
+    fn prometheus_cumulative_exposition_has_fixed_boundaries() {
+        let h = LatencyHistogram::default();
+        h.record(300); // bucket [256, 512) → le="511"
+        h.record(1200); // bucket [1024, 2048) → le="2047"
+        let mut out = String::new();
+        write_prom_cumulative(
+            &mut out,
+            "t_us",
+            "endpoint=\"score\"",
+            &h.bucket_counts(),
+            h.count(),
+            h.sum_us(),
+        );
+        for line in [
+            "t_us_bucket{endpoint=\"score\",le=\"0\"} 0",
+            "t_us_bucket{endpoint=\"score\",le=\"255\"} 0",
+            "t_us_bucket{endpoint=\"score\",le=\"511\"} 1",
+            "t_us_bucket{endpoint=\"score\",le=\"1023\"} 1",
+            "t_us_bucket{endpoint=\"score\",le=\"2047\"} 2",
+            "t_us_bucket{endpoint=\"score\",le=\"+Inf\"} 2",
+            "t_us_sum{endpoint=\"score\"} 1500",
+            "t_us_count{endpoint=\"score\"} 2",
+        ] {
+            assert!(out.contains(line), "missing {line:?} in:\n{out}");
+        }
+        // Every finite boundary appears exactly once (fixed le set),
+        // plus +Inf: N_BUCKETS lines of _bucket in total.
+        assert_eq!(out.matches("t_us_bucket{").count(), N_BUCKETS);
+        // Unlabeled metrics still get a syntactically valid le set.
+        let mut bare = String::new();
+        write_prom_cumulative(&mut bare, "b_us", "", &h.bucket_counts(), 2, 1500);
+        assert!(bare.contains("b_us_bucket{le=\"0\"} 0"), "{bare}");
+        assert!(bare.contains("b_us_sum 1500"), "{bare}");
     }
 
     #[test]

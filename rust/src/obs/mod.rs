@@ -14,7 +14,13 @@
 //!   `/metrics` document serves;
 //! - [`report`] — per-fit [`FitReport`] diffs attached to
 //!   `CoxModel`/`CoxPath` diagnostics, and the `--trace-out` JSONL
-//!   format with its parser (the `profile` subcommand's input).
+//!   format with its parser (the `profile` subcommand's input);
+//! - [`recorder`] — request-level serving telemetry: the six-stage
+//!   request-lifecycle taxonomy ([`Stage`]), the [`FlightRecorder`]
+//!   ring of completed request records (plus a pinned slow-request
+//!   ring), and [`SlicedMetrics`] keyed by endpoint × model@version ×
+//!   batch-size bucket. `serve/http.rs` records into it; the
+//!   `/debug/trace` endpoint and the access log render out of it.
 //!
 //! Everything is std-only and compiled in unconditionally; recording is
 //! switched on per-process with [`set_enabled`] (the CLI does this when
@@ -24,12 +30,18 @@
 
 pub mod counters;
 pub mod hist;
+pub mod recorder;
 pub mod report;
 pub mod span;
 
 pub use counters::{
     counter_snapshot, record_watch_cycle, training_gauges, CounterSnapshot, ShardCmdKind,
     TrainingGauges,
+};
+pub use recorder::{
+    batch_bucket, parse_request_records, render_debug_trace, render_sliced_prometheus,
+    write_record_json, write_sliced_json, FlightRecorder, ParsedRequest, RequestRecord,
+    SliceSnapshot, SlicedMetrics, Stage, N_STAGES,
 };
 pub use report::{
     obs_snapshot, parse_trace_jsonl, render_trace_jsonl, write_trace_jsonl, FitReport,

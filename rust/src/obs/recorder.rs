@@ -1,0 +1,796 @@
+//! Request-level serving telemetry: the request-lifecycle stage
+//! taxonomy, the flight recorder (a fixed-capacity ring of completed
+//! request records plus a separately pinned slow-request ring), and
+//! sliced SLO metrics keyed by endpoint × model@version × batch-size
+//! bucket.
+//!
+//! The lifecycle taxonomy is the serving twin of the training-side
+//! [`crate::obs::Phase`] set: every HTTP request decomposes into six
+//! stages — `read` (socket → framed request), `parse` (JSON body →
+//! validated rows), `queue_wait` (enqueue → micro-batch claim),
+//! `batch_score` (claim → scores delivered), `serialize` (response
+//! body build), `write` (response → socket). The stages partition the
+//! request's wall clock: their sum reconciles with `total_us` up to
+//! integer-microsecond truncation and a few nanoseconds of routing
+//! glue.
+//!
+//! The flight recorder is written on the request hot path, so it must
+//! never serialize concurrent connection handlers: a writer claims a
+//! slot index with one `fetch_add` on the head counter (lock-free), and
+//! is then the slot's only writer until the ring wraps all the way
+//! around. The per-slot mutex exists solely for that wraparound case
+//! and for readers (`/debug/trace`) — in steady state it is always
+//! uncontended. A stale writer that loses a wraparound race is dropped
+//! by sequence comparison rather than overwriting a newer record.
+//!
+//! One JSON schema covers both sinks: an access-log line and a
+//! `/debug/trace` record are the same flat object, so the `profile`
+//! subcommand parses either with [`parse_request_records`].
+
+use crate::api::json::{self, Json};
+use crate::error::{FastSurvivalError, Result};
+use crate::obs::hist::{quantile_from_counts, write_prom_cumulative, LatencyHistogram, N_BUCKETS};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Number of request-lifecycle stages.
+pub const N_STAGES: usize = 6;
+
+/// One stage of the request lifecycle, in wall-clock order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Socket bytes → one framed request (head + body buffered).
+    Read = 0,
+    /// JSON body parse, spec/row validation, model resolution.
+    Parse = 1,
+    /// Enqueue into the micro-batcher → batch claim (includes linger).
+    QueueWait = 2,
+    /// Batch claim → scores delivered back to the handler.
+    BatchScore = 3,
+    /// Response body construction.
+    Serialize = 4,
+    /// Response bytes → socket (including flush).
+    Write = 5,
+}
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Read,
+        Stage::Parse,
+        Stage::QueueWait,
+        Stage::BatchScore,
+        Stage::Serialize,
+        Stage::Write,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Human-readable stage name (the taxonomy in docs and tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Read => "read",
+            Stage::Parse => "parse",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchScore => "batch_score",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+
+    /// JSON field key carrying this stage's microseconds.
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::Read => "read_us",
+            Stage::Parse => "parse_us",
+            Stage::QueueWait => "queue_wait_us",
+            Stage::BatchScore => "batch_score_us",
+            Stage::Serialize => "serialize_us",
+            Stage::Write => "write_us",
+        }
+    }
+}
+
+/// One completed request, as the flight recorder stores it.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    /// Global completion sequence, assigned by
+    /// [`FlightRecorder::record`] (0 until then).
+    pub seq: u64,
+    /// Request ID: the client's `x-request-id` header, or a generated
+    /// `fs-<n>` from the server's atomic counter.
+    pub id: String,
+    /// Routing key (`score`, `healthz`, …) — same vocabulary as the
+    /// per-endpoint stats.
+    pub endpoint: &'static str,
+    /// `name@version` of the model that served the request; empty for
+    /// non-scoring endpoints.
+    pub model: String,
+    /// Rows scored (0 for non-scoring endpoints).
+    pub rows: u64,
+    /// HTTP status of the response.
+    pub status: u16,
+    /// Per-stage microseconds, indexed by [`Stage::index`].
+    pub stage_us: [u64; N_STAGES],
+    /// End-to-end wall microseconds (first byte read → response flushed).
+    pub total_us: u64,
+}
+
+impl RequestRecord {
+    /// Sum of the stage micros — reconciles with `total_us` up to
+    /// truncation (each stage rounds down independently).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.stage_us.iter().sum()
+    }
+}
+
+/// Fixed-capacity ring of the last N completed requests, plus a
+/// separate ring pinned to slow requests so a burst of fast traffic
+/// can never evict the outliers worth debugging.
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<RequestRecord>>>,
+    head: AtomicU64,
+    slow_slots: Vec<Mutex<Option<RequestRecord>>>,
+    slow_head: AtomicU64,
+    slow_threshold_us: u64,
+}
+
+impl FlightRecorder {
+    /// `slow_threshold_us == 0` disables the slow ring (nothing is ever
+    /// pinned); the main ring always records.
+    pub fn new(capacity: usize, slow_capacity: usize, slow_threshold_us: u64) -> Self {
+        let capacity = capacity.max(1);
+        let slow_capacity = slow_capacity.max(1);
+        FlightRecorder {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            slow_slots: (0..slow_capacity).map(|_| Mutex::new(None)).collect(),
+            slow_head: AtomicU64::new(0),
+            slow_threshold_us,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever written (monotonic; exceeds `capacity()` once
+    /// the ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us
+    }
+
+    /// Claim the next completion sequence number (one lock-free
+    /// `fetch_add`). Callers that need the sequence before committing —
+    /// e.g. to stamp an access-log line — claim here, set
+    /// `rec.seq`, and [`commit`](FlightRecorder::commit) afterwards.
+    pub fn begin(&self) -> u64 {
+        self.head.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Store one completed request. The slot index comes from a single
+    /// lock-free `fetch_add`; the claimed slot's mutex is uncontended
+    /// unless the ring wraps a full revolution mid-write, in which case
+    /// the sequence comparison keeps the newest record.
+    pub fn record(&self, mut rec: RequestRecord) {
+        rec.seq = self.begin();
+        self.commit(rec);
+    }
+
+    /// Store a record whose `seq` was already claimed with
+    /// [`begin`](FlightRecorder::begin).
+    pub fn commit(&self, rec: RequestRecord) {
+        let seq = rec.seq;
+        if self.slow_threshold_us > 0 && rec.total_us >= self.slow_threshold_us {
+            let s = self.slow_head.fetch_add(1, Ordering::Relaxed);
+            let idx = (s % self.slow_slots.len() as u64) as usize;
+            let mut slot = self.slow_slots[idx].lock().unwrap();
+            if slot.as_ref().map_or(true, |old| old.seq <= seq) {
+                *slot = Some(rec.clone());
+            }
+        }
+        let idx = (seq % self.slots.len() as u64) as usize;
+        let mut slot = self.slots[idx].lock().unwrap();
+        if slot.as_ref().map_or(true, |old| old.seq <= seq) {
+            *slot = Some(rec);
+        }
+    }
+
+    /// The last `k` completed records, oldest first.
+    pub fn last(&self, k: usize) -> Vec<RequestRecord> {
+        let mut all: Vec<RequestRecord> =
+            self.slots.iter().filter_map(|s| s.lock().unwrap().clone()).collect();
+        all.sort_by_key(|r| r.seq);
+        if all.len() > k {
+            all.drain(..all.len() - k);
+        }
+        all
+    }
+
+    /// Every pinned slow request, oldest first.
+    pub fn slow(&self) -> Vec<RequestRecord> {
+        let mut all: Vec<RequestRecord> =
+            self.slow_slots.iter().filter_map(|s| s.lock().unwrap().clone()).collect();
+        all.sort_by_key(|r| r.seq);
+        all
+    }
+}
+
+/// Serialize one record as the flat JSON object shared by the access
+/// log (one line per request) and the `/debug/trace` dump.
+pub fn write_record_json(r: &RequestRecord, out: &mut String) {
+    out.push_str("{\"seq\": ");
+    out.push_str(&r.seq.to_string());
+    out.push_str(", \"id\": ");
+    json::write_str(out, &r.id);
+    out.push_str(", \"endpoint\": ");
+    json::write_str(out, r.endpoint);
+    out.push_str(", \"model\": ");
+    json::write_str(out, &r.model);
+    let _ = write!(out, ", \"rows\": {}, \"status\": {}", r.rows, r.status);
+    for st in Stage::ALL {
+        let _ = write!(out, ", \"{}\": {}", st.key(), r.stage_us[st.index()]);
+    }
+    let _ = write!(out, ", \"total_us\": {}}}", r.total_us);
+}
+
+/// The `/debug/trace?n=K` response body: the last K completed records
+/// plus everything pinned in the slow ring.
+pub fn render_debug_trace(rec: &FlightRecorder, n: usize) -> String {
+    let records = rec.last(n);
+    let slow = rec.slow();
+    let mut out = String::with_capacity(256 + 192 * (records.len() + slow.len()));
+    let _ = write!(
+        out,
+        "{{\"capacity\": {}, \"recorded\": {}, \"slow_threshold_us\": {}, \"records\": [",
+        rec.capacity(),
+        rec.recorded(),
+        rec.slow_threshold_us()
+    );
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        write_record_json(r, &mut out);
+    }
+    out.push_str("], \"slow\": [");
+    for (i, r) in slow.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        write_record_json(r, &mut out);
+    }
+    out.push_str("]}");
+    out
+}
+
+/// A request record parsed back out of an access log or `/debug/trace`
+/// dump (endpoint/model become owned strings off the wire).
+#[derive(Clone, Debug)]
+pub struct ParsedRequest {
+    pub id: String,
+    pub endpoint: String,
+    pub model: String,
+    pub rows: u64,
+    pub status: u16,
+    pub stage_us: [u64; N_STAGES],
+    pub total_us: u64,
+}
+
+impl ParsedRequest {
+    pub fn stage_sum_us(&self) -> u64 {
+        self.stage_us.iter().sum()
+    }
+}
+
+fn parse_one_record(doc: &Json) -> Result<ParsedRequest> {
+    let u64_field = |key: &str| -> Result<u64> {
+        let v = doc.require(key)?.as_f64()?;
+        if !(v.is_finite() && v >= 0.0) {
+            return Err(FastSurvivalError::InvalidData(format!(
+                "request record field {key:?} must be a non-negative number, got {v}"
+            )));
+        }
+        Ok(v as u64)
+    };
+    let mut stage_us = [0u64; N_STAGES];
+    for st in Stage::ALL {
+        stage_us[st.index()] = u64_field(st.key())?;
+    }
+    Ok(ParsedRequest {
+        id: doc.require("id")?.as_str()?.to_string(),
+        endpoint: doc.require("endpoint")?.as_str()?.to_string(),
+        model: doc.require("model")?.as_str()?.to_string(),
+        rows: u64_field("rows")?,
+        status: u64_field("status")?.min(u16::MAX as u64) as u16,
+        stage_us,
+        total_us: u64_field("total_us")?,
+    })
+}
+
+/// Parse request records from either serve telemetry format:
+///
+/// * an access-log file — JSONL, one flat record object per line;
+/// * a `/debug/trace` dump — one JSON object whose `records` array
+///   holds the same objects (the pinned `slow` ring is skipped: its
+///   entries are copies of main-ring records and would double-count).
+pub fn parse_request_records(text: &str) -> Result<Vec<ParsedRequest>> {
+    let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("").trim();
+    if first.is_empty() {
+        return Err(FastSurvivalError::InvalidData(
+            "empty request-record input (expected access-log JSONL or a /debug/trace dump)"
+                .into(),
+        ));
+    }
+    // A dump is a single object spanning the whole text; an access log
+    // has one complete object per line. Probe the first line: if it
+    // parses on its own, treat the input as JSONL.
+    if json::parse(first).is_err() {
+        let doc = json::parse(text)?;
+        let records = doc.require("records")?.as_array()?;
+        return records.iter().map(parse_one_record).collect();
+    }
+    let probe = json::parse(first)?;
+    if probe.get("records").is_some() {
+        // Single-line dump.
+        let records = probe.require("records")?.as_array()?;
+        return records.iter().map(parse_one_record).collect();
+    }
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| parse_one_record(&json::parse(l)?))
+        .collect()
+}
+
+// ------------------------------------------------------- sliced metrics
+
+/// Batch-size bucket label for a scored row count (log₂ ranges, capped
+/// at `4096+` — the micro-batcher's default row budget).
+pub fn batch_bucket(rows: u64) -> &'static str {
+    match rows {
+        0 => "0",
+        1 => "1",
+        2..=3 => "2-3",
+        4..=7 => "4-7",
+        8..=15 => "8-15",
+        16..=31 => "16-31",
+        32..=63 => "32-63",
+        64..=127 => "64-127",
+        128..=255 => "128-255",
+        256..=511 => "256-511",
+        512..=1023 => "512-1023",
+        1024..=2047 => "1024-2047",
+        2048..=4095 => "2048-4095",
+        _ => "4096+",
+    }
+}
+
+/// Atomic counters for one (endpoint, model@version, batch bucket)
+/// slice — same lock-free recording discipline as the endpoint stats.
+struct SliceStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    rows: AtomicU64,
+    stage_us: [AtomicU64; N_STAGES],
+    hist: LatencyHistogram,
+}
+
+impl SliceStats {
+    fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        SliceStats {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            stage_us: [ZERO; N_STAGES],
+            hist: LatencyHistogram::new(),
+        }
+    }
+}
+
+struct SliceKey {
+    endpoint: &'static str,
+    model: String,
+    batch: &'static str,
+}
+
+/// Per-(endpoint × model@version × batch-size-bucket) SLO metrics.
+///
+/// The slice table is append-only and tiny (endpoints × loaded models ×
+/// ~14 buckets), so the hot path is a read-lock scan plus relaxed
+/// fetch-adds; the write lock is taken once per new slice, ever.
+#[derive(Default)]
+pub struct SlicedMetrics {
+    slices: RwLock<Vec<(SliceKey, Arc<SliceStats>)>>,
+}
+
+impl SlicedMetrics {
+    pub fn new() -> Self {
+        SlicedMetrics::default()
+    }
+
+    fn slot(&self, endpoint: &'static str, model: &str, batch: &'static str) -> Arc<SliceStats> {
+        {
+            let slices = self.slices.read().unwrap();
+            if let Some((_, stats)) = slices.iter().find(|(k, _)| {
+                k.endpoint == endpoint && k.model == model && k.batch == batch
+            }) {
+                return Arc::clone(stats);
+            }
+        }
+        let mut slices = self.slices.write().unwrap();
+        if let Some((_, stats)) = slices
+            .iter()
+            .find(|(k, _)| k.endpoint == endpoint && k.model == model && k.batch == batch)
+        {
+            return Arc::clone(stats);
+        }
+        let stats = Arc::new(SliceStats::new());
+        slices.push((
+            SliceKey { endpoint, model: model.to_string(), batch },
+            Arc::clone(&stats),
+        ));
+        stats
+    }
+
+    /// Fold one completed request into its slice.
+    pub fn record(&self, rec: &RequestRecord) {
+        let stats = self.slot(rec.endpoint, &rec.model, batch_bucket(rec.rows));
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        if rec.status >= 400 {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if rec.rows > 0 {
+            stats.rows.fetch_add(rec.rows, Ordering::Relaxed);
+        }
+        for (slot, &us) in stats.stage_us.iter().zip(rec.stage_us.iter()) {
+            if us > 0 {
+                slot.fetch_add(us, Ordering::Relaxed);
+            }
+        }
+        stats.hist.record(rec.total_us);
+    }
+
+    pub fn snapshot(&self) -> Vec<SliceSnapshot> {
+        let slices = self.slices.read().unwrap();
+        slices
+            .iter()
+            .map(|(k, s)| {
+                let mut stage_us = [0u64; N_STAGES];
+                for (o, a) in stage_us.iter_mut().zip(s.stage_us.iter()) {
+                    *o = a.load(Ordering::Relaxed);
+                }
+                SliceSnapshot {
+                    endpoint: k.endpoint,
+                    model: k.model.clone(),
+                    batch: k.batch,
+                    requests: s.requests.load(Ordering::Relaxed),
+                    errors: s.errors.load(Ordering::Relaxed),
+                    rows: s.rows.load(Ordering::Relaxed),
+                    stage_us,
+                    latency_buckets: s.hist.bucket_counts(),
+                    latency_count: s.hist.count(),
+                    latency_sum_us: s.hist.sum_us(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// A point-in-time copy of one slice's counters.
+#[derive(Clone, Debug)]
+pub struct SliceSnapshot {
+    pub endpoint: &'static str,
+    pub model: String,
+    pub batch: &'static str,
+    pub requests: u64,
+    pub errors: u64,
+    pub rows: u64,
+    pub stage_us: [u64; N_STAGES],
+    pub latency_buckets: [u64; N_BUCKETS],
+    pub latency_count: u64,
+    pub latency_sum_us: u64,
+}
+
+impl SliceSnapshot {
+    pub fn p50_us(&self) -> f64 {
+        quantile_from_counts(&self.latency_buckets, 0.50)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        quantile_from_counts(&self.latency_buckets, 0.99)
+    }
+}
+
+/// Append the sliced-metrics array to a JSON document under
+/// construction (the `/metrics` handler).
+pub fn write_sliced_json(slices: &[SliceSnapshot], out: &mut String) {
+    out.push('[');
+    for (i, s) in slices.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str("{\"endpoint\": ");
+        json::write_str(out, s.endpoint);
+        out.push_str(", \"model\": ");
+        json::write_str(out, &s.model);
+        out.push_str(", \"batch\": ");
+        json::write_str(out, s.batch);
+        let _ = write!(
+            out,
+            ", \"requests\": {}, \"errors\": {}, \"rows\": {}",
+            s.requests, s.errors, s.rows
+        );
+        out.push_str(", \"p50_ms\": ");
+        json::write_f64(out, s.p50_us() / 1e3);
+        out.push_str(", \"p99_ms\": ");
+        json::write_f64(out, s.p99_us() / 1e3);
+        for st in Stage::ALL {
+            let _ = write!(out, ", \"{}\": {}", st.key(), s.stage_us[st.index()]);
+        }
+        out.push('}');
+    }
+    out.push(']');
+}
+
+/// Escape a label value for Prometheus text exposition.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Sliced series as Prometheus text exposition: request/error/row
+/// counters, per-stage cumulative micros, and a conformant cumulative
+/// latency histogram per slice.
+pub fn render_sliced_prometheus(slices: &[SliceSnapshot]) -> String {
+    let mut out = String::with_capacity(512 + slices.len() * 2048);
+    if slices.is_empty() {
+        return out;
+    }
+    let labels: Vec<String> = slices
+        .iter()
+        .map(|s| {
+            format!(
+                "endpoint=\"{}\",model=\"{}\",batch=\"{}\"",
+                s.endpoint,
+                escape_label(&s.model),
+                s.batch
+            )
+        })
+        .collect();
+    out.push_str("# TYPE fastsurvival_sliced_requests_total counter\n");
+    for (s, l) in slices.iter().zip(&labels) {
+        let _ = writeln!(out, "fastsurvival_sliced_requests_total{{{l}}} {}", s.requests);
+    }
+    out.push_str("# TYPE fastsurvival_sliced_errors_total counter\n");
+    for (s, l) in slices.iter().zip(&labels) {
+        let _ = writeln!(out, "fastsurvival_sliced_errors_total{{{l}}} {}", s.errors);
+    }
+    out.push_str("# TYPE fastsurvival_sliced_rows_total counter\n");
+    for (s, l) in slices.iter().zip(&labels) {
+        let _ = writeln!(out, "fastsurvival_sliced_rows_total{{{l}}} {}", s.rows);
+    }
+    out.push_str("# TYPE fastsurvival_sliced_stage_us_total counter\n");
+    for (s, l) in slices.iter().zip(&labels) {
+        for st in Stage::ALL {
+            let _ = writeln!(
+                out,
+                "fastsurvival_sliced_stage_us_total{{{l},stage=\"{}\"}} {}",
+                st.name(),
+                s.stage_us[st.index()]
+            );
+        }
+    }
+    out.push_str("# TYPE fastsurvival_sliced_latency_us histogram\n");
+    for (s, l) in slices.iter().zip(&labels) {
+        write_prom_cumulative(
+            &mut out,
+            "fastsurvival_sliced_latency_us",
+            l,
+            &s.latency_buckets,
+            s.latency_count,
+            s.latency_sum_us,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: &str, endpoint: &'static str, rows: u64, total_us: u64) -> RequestRecord {
+        let mut stage_us = [0u64; N_STAGES];
+        // A deterministic per-record stage pattern the torn-record test
+        // can verify: stage k carries total + k.
+        for (k, s) in stage_us.iter_mut().enumerate() {
+            *s = total_us + k as u64;
+        }
+        RequestRecord {
+            seq: 0,
+            id: id.to_string(),
+            endpoint,
+            model: "risk@1".into(),
+            rows,
+            status: 200,
+            stage_us,
+            total_us,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_records() {
+        let fr = FlightRecorder::new(8, 4, 0);
+        for i in 0..20u64 {
+            fr.record(rec(&format!("r{i}"), "score", i, i * 10));
+        }
+        assert_eq!(fr.recorded(), 20);
+        assert_eq!(fr.capacity(), 8);
+        let last = fr.last(8);
+        assert_eq!(last.len(), 8);
+        let seqs: Vec<u64> = last.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<u64>>(), "oldest-first, post-wrap");
+        assert_eq!(last[7].id, "r19");
+        // Asking for fewer returns the newest k.
+        let tail = fr.last(3);
+        assert_eq!(tail.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![17, 18, 19]);
+        // Slow ring disabled at threshold 0: nothing pinned.
+        assert!(fr.slow().is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_records() {
+        // 4 writer threads (the scoring-thread shape), a ring small
+        // enough to wrap many times under the race. Every stored record
+        // must be internally consistent: id, rows, total, and the
+        // stage pattern all derive from the same value.
+        let fr = Arc::new(FlightRecorder::new(16, 8, 1_000));
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let fr = Arc::clone(&fr);
+                scope.spawn(move || {
+                    for i in 0..500u64 {
+                        let v = t * 10_000 + i;
+                        fr.record(rec(&format!("v{v}"), "score", v, v));
+                    }
+                });
+            }
+        });
+        assert_eq!(fr.recorded(), 2000);
+        let check = |r: &RequestRecord| {
+            let v = r.total_us;
+            assert_eq!(r.id, format!("v{v}"), "torn id vs total");
+            assert_eq!(r.rows, v, "torn rows vs total");
+            for (k, &s) in r.stage_us.iter().enumerate() {
+                assert_eq!(s, v + k as u64, "torn stage {k}");
+            }
+        };
+        let last = fr.last(16);
+        assert_eq!(last.len(), 16);
+        for r in &last {
+            check(r);
+        }
+        // Sequences strictly increase (no duplicate or regressed slot).
+        for w in last.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+        }
+        for r in &fr.slow() {
+            check(r);
+            assert!(r.total_us >= 1_000);
+        }
+    }
+
+    #[test]
+    fn slow_ring_survives_a_fast_burst() {
+        let fr = FlightRecorder::new(4, 8, 5_000);
+        for i in 0..3u64 {
+            fr.record(rec(&format!("slow{i}"), "score", 64, 9_000 + i));
+        }
+        // A burst of fast requests wraps the 4-slot main ring many
+        // times over; the slow ring must still hold all three outliers.
+        for i in 0..100u64 {
+            fr.record(rec(&format!("fast{i}"), "score", 1, 50));
+        }
+        let main_ids: Vec<&str> = fr.last(4).iter().map(|r| r.id.as_str()).collect();
+        assert!(main_ids.iter().all(|id| id.starts_with("fast")), "{main_ids:?}");
+        let slow = fr.slow();
+        assert_eq!(slow.len(), 3, "fast burst evicted pinned slow records");
+        for (i, r) in slow.iter().enumerate() {
+            assert_eq!(r.id, format!("slow{i}"));
+            assert_eq!(r.total_us, 9_000 + i as u64);
+        }
+    }
+
+    #[test]
+    fn debug_trace_and_access_log_share_one_parseable_schema() {
+        let fr = FlightRecorder::new(8, 4, 2_000);
+        fr.record(rec("a", "score", 64, 500));
+        fr.record(rec("b", "score", 64, 3_000)); // pinned slow
+        fr.record(rec("c", "healthz", 0, 20));
+        // Dump form.
+        let dump = render_debug_trace(&fr, 2);
+        let doc = json::parse(&dump).unwrap();
+        assert_eq!(doc.require("capacity").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(doc.require("recorded").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.require("slow_threshold_us").unwrap().as_usize().unwrap(), 2_000);
+        assert_eq!(doc.require("records").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(doc.require("slow").unwrap().as_array().unwrap().len(), 1);
+        let parsed = parse_request_records(&dump).unwrap();
+        assert_eq!(parsed.len(), 2, "slow ring must not double-count");
+        assert_eq!(parsed[0].id, "b");
+        assert_eq!(parsed[1].id, "c");
+        assert_eq!(parsed[1].endpoint, "healthz");
+        assert_eq!(parsed[0].stage_us[Stage::QueueWait.index()], 3_002);
+        // JSONL form: one line per record, same schema.
+        let mut jsonl = String::new();
+        for r in fr.last(8) {
+            write_record_json(&r, &mut jsonl);
+            jsonl.push('\n');
+        }
+        let lines = parse_request_records(&jsonl).unwrap();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].id, "a");
+        assert_eq!(lines[0].total_us, 500);
+        assert_eq!(lines[0].stage_sum_us(), 500 * 6 + 15);
+        // Garbage rejects instead of silently dropping.
+        assert!(parse_request_records("{\"nope\": 1}\n").is_err());
+        assert!(parse_request_records("").is_err());
+    }
+
+    #[test]
+    fn batch_buckets_cover_and_order() {
+        assert_eq!(batch_bucket(0), "0");
+        assert_eq!(batch_bucket(1), "1");
+        assert_eq!(batch_bucket(64), "64-127");
+        assert_eq!(batch_bucket(4095), "2048-4095");
+        assert_eq!(batch_bucket(4096), "4096+");
+        assert_eq!(batch_bucket(u64::MAX), "4096+");
+    }
+
+    #[test]
+    fn sliced_metrics_aggregate_and_expose() {
+        let sliced = SlicedMetrics::new();
+        let mut a = rec("a", "score", 64, 1_200);
+        a.stage_us = [10, 100, 150, 800, 120, 20];
+        sliced.record(&a);
+        sliced.record(&a);
+        let mut b = rec("b", "score", 64, 900);
+        b.status = 400;
+        sliced.record(&b);
+        let mut c = rec("c", "healthz", 0, 30);
+        c.model = String::new();
+        sliced.record(&c);
+        let snap = sliced.snapshot();
+        assert_eq!(snap.len(), 2, "one slice per (endpoint, model, batch)");
+        let score = snap.iter().find(|s| s.endpoint == "score").unwrap();
+        assert_eq!(score.model, "risk@1");
+        assert_eq!(score.batch, "64-127");
+        assert_eq!(score.requests, 3);
+        assert_eq!(score.errors, 1);
+        assert_eq!(score.rows, 192);
+        assert_eq!(score.stage_us[Stage::QueueWait.index()], 150 + 150 + 902);
+        assert!(score.p50_us() > 0.0 && score.p50_us() <= score.p99_us());
+        // JSON block parses.
+        let mut js = String::new();
+        write_sliced_json(&snap, &mut js);
+        let doc = json::parse(&js).unwrap();
+        assert_eq!(doc.as_array().unwrap().len(), 2);
+        // Prometheus exposition carries the full label set and a
+        // conformant histogram.
+        let prom = render_sliced_prometheus(&snap);
+        let l = "endpoint=\"score\",model=\"risk@1\",batch=\"64-127\"";
+        assert!(prom.contains(&format!("fastsurvival_sliced_requests_total{{{l}}} 3")));
+        assert!(prom.contains(&format!("fastsurvival_sliced_errors_total{{{l}}} 1")));
+        assert!(prom
+            .contains(&format!("fastsurvival_sliced_stage_us_total{{{l},stage=\"queue_wait\"}}")));
+        assert!(prom.contains(&format!("fastsurvival_sliced_latency_us_bucket{{{l},le=\"+Inf\"}} 3")));
+        assert!(prom.contains(&format!("fastsurvival_sliced_latency_us_count{{{l}}} 3")));
+        // Empty snapshot renders nothing (no dangling TYPE headers).
+        assert!(render_sliced_prometheus(&[]).is_empty());
+    }
+}

@@ -19,10 +19,20 @@
 //! | `GET /v1/models` | —                                        | `{"models": [{name, version, features, nonzero, latest}…]}` |
 //! | `POST /v1/reload`| —                                        | `{"reloaded", "artifacts", "names"}` |
 //! | `GET /healthz`   | —                                        | `{"status": "ok", "artifacts", "generation", "models": […]}` |
-//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles + training gauges + per-model drift |
+//! | `GET /metrics`   | —                                        | per-endpoint counters + latency quantiles + training gauges + per-model drift + batcher gauges + sliced SLO series |
+//! | `GET /debug/trace?n=K` | —                                  | last K completed request records + pinned slow requests from the flight recorder |
 //!
 //! `GET /metrics?format=prometheus` returns the same snapshot as
 //! Prometheus text exposition (`text/plain`) instead of JSON.
+//!
+//! Request-level observability: every request carries an ID (the
+//! client's `x-request-id`, echoed back, or a generated `fs-<n>`) and a
+//! six-stage lifecycle breakdown — `read`, `parse`, `queue_wait`,
+//! `batch_score`, `serialize`, `write` (see [`crate::obs::Stage`]).
+//! Clock reads and ID plumbing are always-on; the recording sinks (the
+//! flight recorder, sliced metrics, and the optional JSONL access log)
+//! sit behind the process-wide obs flag — one relaxed atomic load per
+//! request when disabled.
 
 use super::drift::DriftRegistry;
 use super::registry::{parse_spec, ModelRegistry};
@@ -30,11 +40,16 @@ use super::scorer::{BatchConfig, MicroBatcher};
 use super::stats::ServeMetrics;
 use crate::api::json::{self, Json};
 use crate::error::{FastSurvivalError, Result};
+use crate::obs::hist::write_prom_cumulative;
+use crate::obs::recorder::{
+    render_debug_trace, render_sliced_prometheus, write_record_json, write_sliced_json,
+    FlightRecorder, RequestRecord, SlicedMetrics, Stage, N_STAGES,
+};
 use crate::util::parallel::{num_threads, WorkerPool};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Cap on request-head size (request line + headers).
@@ -49,6 +64,11 @@ const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
 /// over-provisioned default worker count) bounds how long persistent
 /// clients can monopolize the pool while new connections queue.
 const MAX_REQUESTS_PER_CONN: usize = 256;
+
+/// Slots in the flight recorder's pinned slow-request ring. Kept small
+/// and separate from the main ring so a burst of fast requests can
+/// never evict the outliers worth debugging.
+const SLOW_RING_CAP: usize = 64;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -65,6 +85,15 @@ pub struct ServeConfig {
     pub max_body_bytes: usize,
     /// Micro-batching knobs for the scoring queue.
     pub batch: BatchConfig,
+    /// Structured JSONL access log path; `None` disables the log.
+    /// Lines are only written while the obs flag is on.
+    pub access_log: Option<String>,
+    /// Requests slower than this (total lifecycle) are pinned into the
+    /// flight recorder's slow ring; 0 disables slow capture.
+    pub slow_ms: u64,
+    /// Main flight-recorder ring capacity (completed request records
+    /// retrievable via `/debug/trace`).
+    pub recorder_capacity: usize,
 }
 
 impl ServeConfig {
@@ -85,6 +114,9 @@ impl Default for ServeConfig {
             workers: ServeConfig::default_workers(),
             max_body_bytes: 8 << 20,
             batch: BatchConfig::default(),
+            access_log: None,
+            slow_ms: 0,
+            recorder_capacity: 512,
         }
     }
 }
@@ -98,6 +130,13 @@ struct Ctx {
     /// Drift counters live here, beside the registry handle rather than
     /// inside the hot-swapped state, so a `/v1/reload` never resets them.
     drift: Arc<DriftRegistry>,
+    recorder: Arc<FlightRecorder>,
+    sliced: Arc<SlicedMetrics>,
+    /// One line per completed request while obs is on; the mutex
+    /// serializes whole lines so concurrent workers never interleave.
+    access_log: Option<Arc<Mutex<std::fs::File>>>,
+    /// Source of generated `fs-<n>` request IDs.
+    next_request_id: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
     max_body: usize,
 }
@@ -110,6 +149,8 @@ pub struct ServerHandle {
     metrics: Arc<ServeMetrics>,
     registry: Arc<ModelRegistry>,
     drift: Arc<DriftRegistry>,
+    recorder: Arc<FlightRecorder>,
+    sliced: Arc<SlicedMetrics>,
 }
 
 impl ServerHandle {
@@ -128,6 +169,14 @@ impl ServerHandle {
 
     pub fn drift(&self) -> &Arc<DriftRegistry> {
         &self.drift
+    }
+
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    pub fn sliced(&self) -> &Arc<SlicedMetrics> {
+        &self.sliced
     }
 
     /// Graceful shutdown: stop accepting, let in-flight requests
@@ -173,12 +222,33 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: &ServeConfig) -> Result<ServerHa
         .map_err(|e| FastSurvivalError::io("resolving bound address".to_string(), e))?;
     let metrics = Arc::new(ServeMetrics::default());
     let drift = Arc::new(DriftRegistry::new(registry.root()));
+    let recorder = Arc::new(FlightRecorder::new(
+        cfg.recorder_capacity,
+        SLOW_RING_CAP,
+        cfg.slow_ms.saturating_mul(1_000),
+    ));
+    let sliced = Arc::new(SlicedMetrics::new());
+    let access_log = match &cfg.access_log {
+        None => None,
+        Some(path) => {
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map_err(|e| FastSurvivalError::io(format!("opening access log {path}"), e))?;
+            Some(Arc::new(Mutex::new(file)))
+        }
+    };
     let shutdown = Arc::new(AtomicBool::new(false));
     let ctx = Ctx {
         registry: Arc::clone(&registry),
         batcher: Arc::new(MicroBatcher::new(cfg.batch.clone())),
         metrics: Arc::clone(&metrics),
         drift: Arc::clone(&drift),
+        recorder: Arc::clone(&recorder),
+        sliced: Arc::clone(&sliced),
+        access_log,
+        next_request_id: Arc::new(AtomicU64::new(1)),
         shutdown: Arc::clone(&shutdown),
         max_body: cfg.max_body_bytes,
     };
@@ -210,7 +280,16 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: &ServeConfig) -> Result<ServerHa
             // pool drops here: queued connections drain, workers join.
         })
         .map_err(|e| FastSurvivalError::io("spawning accept thread".to_string(), e))?;
-    Ok(ServerHandle { addr, shutdown, accept: Some(accept), metrics, registry, drift })
+    Ok(ServerHandle {
+        addr,
+        shutdown,
+        accept: Some(accept),
+        metrics,
+        registry,
+        drift,
+        recorder,
+        sliced,
+    })
 }
 
 // -------------------------------------------------------- wire plumbing
@@ -259,6 +338,13 @@ struct Request {
     query: String,
     body: Vec<u8>,
     keep_alive: bool,
+    /// Client-supplied `x-request-id`, if any.
+    request_id: Option<String>,
+    /// When this request's first bytes were available — the lifecycle
+    /// clock's zero.
+    started: Instant,
+    /// Microseconds of the `read` stage (first bytes → framed body).
+    read_us: u64,
 }
 
 enum ReadErr {
@@ -283,6 +369,10 @@ fn read_request(
     buf: &mut ByteBuf,
     max_body: usize,
 ) -> std::result::Result<Option<Request>, ReadErr> {
+    // The lifecycle clock starts when this request's first bytes exist:
+    // immediately for pipelined leftovers, otherwise at the first
+    // successful socket read (idle keep-alive wait is not request time).
+    let mut started = if buf.is_empty() { None } else { Some(Instant::now()) };
     let head_end = loop {
         if let Some(pos) = buf.find_double_crlf() {
             break pos;
@@ -297,7 +387,9 @@ fn read_request(
             }
             return Err(ReadErr::Malformed("connection closed mid-request".into()));
         }
+        started.get_or_insert_with(Instant::now);
     };
+    let started = started.unwrap_or_else(Instant::now);
     let head = buf.take(head_end + 4);
     let head = std::str::from_utf8(&head)
         .map_err(|_| ReadErr::Malformed("request head is not UTF-8".into()))?;
@@ -322,6 +414,7 @@ fn read_request(
     let mut content_length = 0usize;
     let mut keep_alive = version != "HTTP/1.0";
     let mut expect_continue = false;
+    let mut request_id: Option<String> = None;
     for line in lines {
         if line.is_empty() {
             continue; // the terminator splits into trailing empties
@@ -354,6 +447,11 @@ fn read_request(
             "expect" => {
                 expect_continue = value.eq_ignore_ascii_case("100-continue");
             }
+            "x-request-id" => {
+                if !value.is_empty() {
+                    request_id = Some(value.to_string());
+                }
+            }
             _ => {}
         }
     }
@@ -369,7 +467,17 @@ fn read_request(
         }
     }
     let body = buf.take(content_length);
-    Ok(Some(Request { method, path, query, body, keep_alive }))
+    let read_us = started.elapsed().as_micros() as u64;
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        body,
+        keep_alive,
+        request_id,
+        started,
+        read_us,
+    }))
 }
 
 /// Value of `key` in a raw query string (`a=1&b=2`), if present.
@@ -404,13 +512,22 @@ fn write_response(
     body: &str,
     content_type: &str,
     keep_alive: bool,
+    request_id: Option<&str>,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         reason_phrase(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
     );
+    if let Some(id) = request_id {
+        // Echo (or assign) the request ID so clients can correlate
+        // responses with access-log lines and /debug/trace records.
+        head.push_str("x-request-id: ");
+        head.push_str(id);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
@@ -437,11 +554,12 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
             Ok(None) => break,
             Err(ReadErr::TooLarge) => {
                 let body = error_body("request body exceeds the configured limit");
-                let _ = write_response(&mut stream, 413, &body, CT_JSON, false);
+                let _ = write_response(&mut stream, 413, &body, CT_JSON, false, None);
                 break;
             }
             Err(ReadErr::Malformed(msg)) => {
-                let _ = write_response(&mut stream, 400, &error_body(&msg), CT_JSON, false);
+                let _ =
+                    write_response(&mut stream, 400, &error_body(&msg), CT_JSON, false, None);
                 break;
             }
             Err(ReadErr::Io) => break, // includes keep-alive idle timeout
@@ -450,31 +568,122 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
         let keep_alive = request.keep_alive
             && served < MAX_REQUESTS_PER_CONN
             && !ctx.shutdown.load(Ordering::Acquire);
-        let started = Instant::now();
-        let (status, body, content_type, endpoint, rows) = route(ctx, &request);
-        let us = started.elapsed().as_micros() as u64;
-        ctx.metrics.endpoint(endpoint).record(status < 400, rows, us);
-        if write_response(&mut stream, status, &body, content_type, keep_alive).is_err() {
-            break;
+        let request_id = request.request_id.clone().unwrap_or_else(|| {
+            format!("fs-{}", ctx.next_request_id.fetch_add(1, Ordering::Relaxed))
+        });
+        let routed = route(ctx, &request);
+        let write_started = Instant::now();
+        let write_ok = write_response(
+            &mut stream,
+            routed.status,
+            &routed.body,
+            routed.content_type,
+            keep_alive,
+            Some(&request_id),
+        )
+        .is_ok();
+        let write_us = write_started.elapsed().as_micros() as u64;
+        let total_us = request.started.elapsed().as_micros() as u64;
+        // Endpoint latency covers the full lifecycle (first byte read →
+        // response flushed), matching the flight recorder's totals.
+        ctx.metrics
+            .endpoint(routed.endpoint)
+            .record(routed.status < 400, routed.rows, total_us);
+        if crate::obs::enabled() {
+            let mut stage_us = [0u64; N_STAGES];
+            stage_us[Stage::Read.index()] = request.read_us;
+            stage_us[Stage::Parse.index()] = routed.parse_us;
+            stage_us[Stage::QueueWait.index()] = routed.queue_us;
+            stage_us[Stage::BatchScore.index()] = routed.score_us;
+            stage_us[Stage::Serialize.index()] = routed.serialize_us;
+            stage_us[Stage::Write.index()] = write_us;
+            let record = RequestRecord {
+                seq: ctx.recorder.begin(),
+                id: request_id,
+                endpoint: routed.endpoint,
+                model: routed.model,
+                rows: routed.rows,
+                status: routed.status,
+                stage_us,
+                total_us,
+            };
+            ctx.sliced.record(&record);
+            if let Some(log) = &ctx.access_log {
+                let mut line = String::with_capacity(256);
+                write_record_json(&record, &mut line);
+                line.push('\n');
+                // One write_all per line under the mutex: a single
+                // syscall, and concurrent workers never interleave.
+                let mut file = log.lock().unwrap();
+                let _ = file.write_all(line.as_bytes());
+            }
+            ctx.recorder.commit(record);
         }
-        if !keep_alive {
+        if !(write_ok && keep_alive) {
             break;
         }
     }
 }
 
-/// Dispatch one request → `(status, body, content type, metrics key,
-/// rows scored)`.
-fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, &'static str, u64) {
+/// One dispatched request: the response plus everything the
+/// observability layer records about it.
+struct Routed {
+    status: u16,
+    body: String,
+    content_type: &'static str,
+    /// Metrics key (`score`, `healthz`, …).
+    endpoint: &'static str,
+    /// Rows scored (0 off the scoring path).
+    rows: u64,
+    /// `name@version` that served the request; empty off the scoring
+    /// path or before model resolution.
+    model: String,
+    parse_us: u64,
+    queue_us: u64,
+    score_us: u64,
+    serialize_us: u64,
+}
+
+impl Routed {
+    /// A non-scoring response whose whole handler duration counts as
+    /// the `serialize` stage (there is nothing to parse, queue, or
+    /// score).
+    fn plain(
+        status: u16,
+        body: String,
+        content_type: &'static str,
+        endpoint: &'static str,
+        serialize_us: u64,
+    ) -> Routed {
+        Routed {
+            status,
+            body,
+            content_type,
+            endpoint,
+            rows: 0,
+            model: String::new(),
+            parse_us: 0,
+            queue_us: 0,
+            score_us: 0,
+            serialize_us,
+        }
+    }
+}
+
+/// Dispatch one request.
+fn route(ctx: &Ctx, request: &Request) -> Routed {
+    let t0 = Instant::now();
     let method = request.method.as_str();
-    match request.path.as_str() {
+    // Non-scoring arms produce `(status, body, content type, endpoint)`
+    // and count their whole handler duration as the serialize stage.
+    let (status, body, content_type, endpoint) = match request.path.as_str() {
         "/healthz" => match method {
-            "GET" => (200, healthz_body(ctx), CT_JSON, "healthz", 0),
-            _ => (405, error_body("healthz is GET-only"), CT_JSON, "healthz", 0),
+            "GET" => (200, healthz_body(ctx), CT_JSON, "healthz"),
+            _ => (405, error_body("healthz is GET-only"), CT_JSON, "healthz"),
         },
         "/v1/models" => match method {
-            "GET" => (200, models_body(ctx), CT_JSON, "models", 0),
-            _ => (405, error_body("models is GET-only"), CT_JSON, "models", 0),
+            "GET" => (200, models_body(ctx), CT_JSON, "models"),
+            _ => (405, error_body("models is GET-only"), CT_JSON, "models"),
         },
         "/v1/reload" => match method {
             "POST" => match ctx.registry.reload() {
@@ -486,26 +695,21 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, &'static s
                         ("artifacts".into(), Json::Num(report.artifacts as f64)),
                         ("names".into(), Json::Arr(names)),
                     ]);
-                    (200, doc.to_json_string(), CT_JSON, "reload", 0)
+                    (200, doc.to_json_string(), CT_JSON, "reload")
                 }
                 // The previous state is still serving (atomic swap), so
                 // a failed reload is an error reply, not an outage.
-                Err(e) => (500, error_body(&e.to_string()), CT_JSON, "reload", 0),
+                Err(e) => (500, error_body(&e.to_string()), CT_JSON, "reload"),
             },
-            _ => (405, error_body("reload is POST-only"), CT_JSON, "reload", 0),
+            _ => (405, error_body("reload is POST-only"), CT_JSON, "reload"),
         },
         "/v1/score" => match method {
-            "POST" => {
-                let (status, body, rows) = handle_score(ctx, &request.body);
-                (status, body, CT_JSON, "score", rows)
-            }
-            _ => (405, error_body("score is POST-only"), CT_JSON, "score", 0),
+            "POST" => return handle_score(ctx, &request.body, t0),
+            _ => (405, error_body("score is POST-only"), CT_JSON, "score"),
         },
         "/metrics" => match method {
             "GET" => match query_param(&request.query, "format") {
-                Some("prometheus") => {
-                    (200, ctx.metrics.to_prometheus(), CT_PROM, "metrics", 0)
-                }
+                Some("prometheus") => (200, prometheus_body(ctx), CT_PROM, "metrics"),
                 Some(other) => (
                     400,
                     error_body(&format!(
@@ -513,20 +717,38 @@ fn route(ctx: &Ctx, request: &Request) -> (u16, String, &'static str, &'static s
                     )),
                     CT_JSON,
                     "metrics",
-                    0,
                 ),
-                None => (200, metrics_body(ctx), CT_JSON, "metrics", 0),
+                None => (200, metrics_body(ctx), CT_JSON, "metrics"),
             },
-            _ => (405, error_body("metrics is GET-only"), CT_JSON, "metrics", 0),
+            _ => (405, error_body("metrics is GET-only"), CT_JSON, "metrics"),
+        },
+        "/debug/trace" => match method {
+            "GET" => {
+                let n = match query_param(&request.query, "n") {
+                    None => Ok(50usize),
+                    Some(v) => v.parse::<usize>().map_err(|_| v.to_string()),
+                };
+                match n {
+                    Ok(n) => (200, render_debug_trace(&ctx.recorder, n), CT_JSON, "trace"),
+                    Err(bad) => (
+                        400,
+                        error_body(&format!("bad trace count n={bad:?}")),
+                        CT_JSON,
+                        "trace",
+                    ),
+                }
+            }
+            _ => (405, error_body("debug/trace is GET-only"), CT_JSON, "trace"),
         },
         other => (
             404,
             error_body(&format!("no such endpoint {other:?}")),
             CT_JSON,
             "other",
-            0,
         ),
-    }
+    };
+    let serialize_us = t0.elapsed().as_micros() as u64;
+    Routed::plain(status, body, content_type, endpoint, serialize_us)
 }
 
 /// `/healthz`: liveness plus what is actually being served — every
@@ -554,15 +776,56 @@ fn healthz_body(ctx: &Ctx) -> String {
 }
 
 /// `/metrics`: the endpoint counters document with the per-model drift
-/// block appended.
+/// block, batcher gauges, and sliced SLO series appended.
 fn metrics_body(ctx: &Ctx) -> String {
+    use std::fmt::Write as _;
     let mut body = ctx.metrics.to_json();
     debug_assert!(body.ends_with('}'));
     body.pop();
     body.push_str(", \"drift\": ");
     ctx.drift.write_json(&mut body);
+    let g = ctx.batcher.gauges();
+    let _ = write!(
+        body,
+        ", \"batcher\": {{\"queue_depth_hwm\": {}, \"flushes\": {}, \"flushed_requests\": {}",
+        g.queue_depth_hwm, g.flushes, g.flushed_requests
+    );
+    body.push_str(", \"mean_requests_per_flush\": ");
+    json::write_f64(&mut body, g.mean_requests_per_flush());
+    body.push_str(", \"flush_rows_p50\": ");
+    json::write_f64(&mut body, g.flush_rows_p50());
+    body.push_str(", \"flush_rows_p99\": ");
+    json::write_f64(&mut body, g.flush_rows_p99());
+    body.push('}');
+    body.push_str(", \"slices\": ");
+    write_sliced_json(&ctx.sliced.snapshot(), &mut body);
     body.push('}');
     body
+}
+
+/// `/metrics?format=prometheus`: endpoint counters and histograms, then
+/// batcher gauges, then the sliced SLO series.
+fn prometheus_body(ctx: &Ctx) -> String {
+    use std::fmt::Write as _;
+    let mut out = ctx.metrics.to_prometheus();
+    let g = ctx.batcher.gauges();
+    out.push_str("# TYPE fastsurvival_batch_queue_depth_hwm gauge\n");
+    let _ = writeln!(out, "fastsurvival_batch_queue_depth_hwm {}", g.queue_depth_hwm);
+    out.push_str("# TYPE fastsurvival_batch_flushes_total counter\n");
+    let _ = writeln!(out, "fastsurvival_batch_flushes_total {}", g.flushes);
+    out.push_str("# TYPE fastsurvival_batch_flushed_requests_total counter\n");
+    let _ = writeln!(out, "fastsurvival_batch_flushed_requests_total {}", g.flushed_requests);
+    out.push_str("# TYPE fastsurvival_batch_flush_rows histogram\n");
+    write_prom_cumulative(
+        &mut out,
+        "fastsurvival_batch_flush_rows",
+        "",
+        &g.flush_rows_buckets,
+        g.flush_rows_count,
+        g.flush_rows_sum,
+    );
+    out.push_str(&render_sliced_prometheus(&ctx.sliced.snapshot()));
+    out
 }
 
 fn models_body(ctx: &Ctx) -> String {
@@ -586,38 +849,60 @@ fn models_body(ctx: &Ctx) -> String {
     Json::Obj(vec![("models".into(), Json::Arr(items))]).to_json_string()
 }
 
-fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
+/// A failed scoring request: everything before the failure counts as
+/// parse time (validation is the parse stage).
+fn score_fail(status: u16, message: &str, model: String, t0: Instant) -> Routed {
+    Routed {
+        status,
+        body: error_body(message),
+        content_type: CT_JSON,
+        endpoint: "score",
+        rows: 0,
+        model,
+        parse_us: t0.elapsed().as_micros() as u64,
+        queue_us: 0,
+        score_us: 0,
+        serialize_us: 0,
+    }
+}
+
+fn handle_score(ctx: &Ctx, body: &[u8], t0: Instant) -> Routed {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return (400, error_body("request body is not UTF-8"), 0),
+        Err(_) => return score_fail(400, "request body is not UTF-8", String::new(), t0),
     };
     let doc = match json::parse(text) {
         Ok(d) => d,
-        Err(e) => return (400, error_body(&format!("malformed JSON body: {e}")), 0),
+        Err(e) => {
+            return score_fail(400, &format!("malformed JSON body: {e}"), String::new(), t0)
+        }
     };
     let spec = match doc.get("model") {
         None => "",
         Some(v) => match v.as_str() {
             Ok(s) => s,
-            Err(_) => return (400, error_body("\"model\" must be a string"), 0),
+            Err(_) => return score_fail(400, "\"model\" must be a string", String::new(), t0),
         },
     };
     // A syntactically bad spec is the client's error (400); only a
     // well-formed spec that names nothing deserves 404.
     if let Err(e) = parse_spec(spec) {
-        return (400, error_body(&e.to_string()), 0);
+        return score_fail(400, &e.to_string(), String::new(), t0);
     }
     let model = match ctx.registry.resolve(spec) {
         Ok(m) => m,
-        Err(e) => return (404, error_body(&e.to_string()), 0),
+        Err(e) => return score_fail(404, &e.to_string(), String::new(), t0),
     };
+    let model_spec = model.spec();
     let rows_json = match doc.get("rows") {
         Some(r) => r,
-        None => return (400, error_body("missing \"rows\""), 0),
+        None => return score_fail(400, "missing \"rows\"", model_spec, t0),
     };
     let row_values = match rows_json.as_array() {
         Ok(a) => a,
-        Err(_) => return (400, error_body("\"rows\" must be an array of arrays"), 0),
+        Err(_) => {
+            return score_fail(400, "\"rows\" must be an array of arrays", model_spec, t0)
+        }
     };
     let p = model.p();
     let n_rows = row_values.len();
@@ -630,28 +915,35 @@ fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
         let values = match row.as_f64_vec() {
             Ok(v) => v,
             Err(_) => {
-                return (400, error_body(&format!("row {i} is not a numeric array")), 0)
+                return score_fail(
+                    400,
+                    &format!("row {i} is not a numeric array"),
+                    model_spec,
+                    t0,
+                )
             }
         };
         // Overflowing literals (1e999 → inf) and nulls (→ NaN) would
         // turn the response's risk array into nulls, breaking the
         // documented numeric schema — reject them like bad horizons.
         if values.iter().any(|v| !v.is_finite()) {
-            return (
+            return score_fail(
                 400,
-                error_body(&format!("row {i} contains a non-finite value")),
-                0,
+                &format!("row {i} contains a non-finite value"),
+                model_spec,
+                t0,
             );
         }
         if values.len() != p {
-            return (
+            return score_fail(
                 400,
-                error_body(&format!(
+                &format!(
                     "row {i} has {} features, model {} expects {p}",
                     values.len(),
-                    model.spec()
-                )),
-                0,
+                    model_spec
+                ),
+                model_spec.clone(),
+                t0,
             );
         }
         flat.extend_from_slice(&values);
@@ -661,28 +953,58 @@ fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
         Some(h) => match h.as_f64_vec() {
             Ok(v) => {
                 if let Some(bad) = v.iter().find(|x| !x.is_finite()) {
-                    return (
+                    return score_fail(
                         400,
-                        error_body(&format!("horizons must be finite, got {bad}")),
-                        0,
+                        &format!("horizons must be finite, got {bad}"),
+                        model_spec,
+                        t0,
                     );
                 }
                 Some(v)
             }
-            Err(_) => return (400, error_body("\"horizons\" must be a numeric array"), 0),
+            Err(_) => {
+                return score_fail(
+                    400,
+                    "\"horizons\" must be a numeric array",
+                    model_spec,
+                    t0,
+                )
+            }
         },
     };
     let echo_horizons = horizons.clone();
+    // Parse stage ends here: the request is validated and handed to the
+    // micro-batcher.
+    let t_submit = Instant::now();
+    let parse_us = t_submit.saturating_duration_since(t0).as_micros() as u64;
     let receiver = ctx.batcher.submit(Arc::clone(&model), flat, n_rows, horizons);
-    let output = match receiver.recv() {
+    let recv = receiver.recv();
+    let t_scored = Instant::now();
+    // submit → result covers queue_wait + batch_score. The batcher
+    // reports exact queue time (enqueue → claim); the remainder —
+    // sweep, result routing, channel wake — is scoring.
+    let wait_us = t_scored.saturating_duration_since(t_submit).as_micros() as u64;
+    let output = match recv {
         Ok(Ok(o)) => o,
-        Ok(Err(e)) => return (400, error_body(&e.to_string()), 0),
-        Err(_) => return (500, error_body("scoring queue dropped the request"), 0),
+        Ok(Err(e)) => {
+            let mut r = score_fail(400, &e.to_string(), model_spec, t0);
+            r.parse_us = parse_us;
+            r.score_us = wait_us;
+            return r;
+        }
+        Err(_) => {
+            let mut r = score_fail(500, "scoring queue dropped the request", model_spec, t0);
+            r.parse_us = parse_us;
+            r.score_us = wait_us;
+            return r;
+        }
     };
-    ctx.drift.tracker(&model.spec()).record_all(&output.risk);
+    let queue_us = output.queue_us.min(wait_us);
+    let score_us = wait_us - queue_us;
+    ctx.drift.tracker(&model_spec).record_all(&output.risk);
     let mut body = String::with_capacity(64 + output.risk.len() * 20);
     body.push_str("{\"model\": ");
-    json::write_str(&mut body, &model.spec());
+    json::write_str(&mut body, &model_spec);
     body.push_str(", \"n\": ");
     body.push_str(&n_rows.to_string());
     body.push_str(", \"risk\": ");
@@ -700,7 +1022,19 @@ fn handle_score(ctx: &Ctx, body: &[u8]) -> (u16, String, u64) {
         body.push(']');
     }
     body.push('}');
-    (200, body, n_rows as u64)
+    let serialize_us = t_scored.elapsed().as_micros() as u64;
+    Routed {
+        status: 200,
+        body,
+        content_type: CT_JSON,
+        endpoint: "score",
+        rows: n_rows as u64,
+        model: model_spec,
+        parse_us,
+        queue_us,
+        score_us,
+        serialize_us,
+    }
 }
 
 // ------------------------------------------------------------ tiny client
@@ -722,6 +1056,9 @@ pub struct ClientResponse {
     /// the per-connection request cap) — reconnect before the next
     /// request instead of writing into a dying socket.
     pub close: bool,
+    /// The server's `x-request-id` response header (echoed from the
+    /// request, or server-generated).
+    pub request_id: Option<String>,
 }
 
 impl HttpClient {
@@ -739,9 +1076,24 @@ impl HttpClient {
         path: &str,
         body: Option<&str>,
     ) -> std::io::Result<ClientResponse> {
+        self.request_with(method, path, body, &[])
+    }
+
+    /// Send one request with extra headers (e.g. `x-request-id`) and
+    /// read its response.
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(&str, &str)],
+    ) -> std::io::Result<ClientResponse> {
         let mut req = format!(
             "{method} {path} HTTP/1.1\r\nHost: fastsurvival\r\nConnection: keep-alive\r\n"
         );
+        for (k, v) in extra_headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
         if let Some(b) = body {
             req.push_str(&format!(
                 "Content-Type: application/json\r\nContent-Length: {}\r\n",
@@ -795,6 +1147,7 @@ impl HttpClient {
             .ok_or_else(|| malformed("bad status line"))?;
         let mut content_length = 0usize;
         let mut close = false;
+        let mut request_id: Option<String> = None;
         for line in lines {
             if let Some((k, v)) = line.split_once(':') {
                 let k = k.trim();
@@ -805,6 +1158,8 @@ impl HttpClient {
                         .map_err(|_| malformed("bad content-length"))?;
                 } else if k.eq_ignore_ascii_case("connection") {
                     close = v.trim().to_ascii_lowercase().contains("close");
+                } else if k.eq_ignore_ascii_case("x-request-id") {
+                    request_id = Some(v.trim().to_string());
                 }
             }
         }
@@ -816,7 +1171,7 @@ impl HttpClient {
         let body = self.buf.take(content_length);
         let body =
             String::from_utf8(body).map_err(|_| malformed("non-UTF-8 response body"))?;
-        Ok(ClientResponse { status, body, close })
+        Ok(ClientResponse { status, body, close, request_id })
     }
 }
 

@@ -17,12 +17,22 @@
 //! * [`http`] — a hand-rolled multi-threaded HTTP/1.1 server
 //!   (keep-alive, pipelining, content-length framing, graceful
 //!   shutdown) exposing `/v1/score`, `/v1/models`, `/v1/reload`,
-//!   `/healthz`, and `/metrics` (per-endpoint latency/throughput
-//!   counters from [`stats`]).
+//!   `/healthz`, `/metrics` (per-endpoint latency/throughput counters
+//!   from [`stats`], batcher gauges, sliced SLO series), and
+//!   `/debug/trace` (the flight recorder's last-K request records).
+//!
+//! Request-level observability rides the HTTP layer: every request gets
+//! an ID (`x-request-id` in, echoed out) and a six-stage lifecycle
+//! breakdown (`read`/`parse`/`queue_wait`/`batch_score`/`serialize`/
+//! `write`, see [`crate::obs::recorder`]) recorded — behind the
+//! process-wide obs flag — into the flight recorder, sliced metrics,
+//! and an optional JSONL access log.
 //!
 //! [`smoke`] drives all of it end to end for CI: concurrent burst,
-//! mid-burst hot reload, bitwise parity with the in-process API, and
-//! `BENCH_serve.json` throughput/latency numbers.
+//! mid-burst hot reload, bitwise parity with the in-process API,
+//! `BENCH_serve.json` throughput/latency numbers, plus the request-obs
+//! gates (off/on overhead ≤ the baseline's `serve_obs_gate`, server-vs-
+//! client latency reconciliation, access-log schema validation).
 //!
 //! The training-side counterpart is [`crate::api`]; serving reuses its
 //! JSON parser and the exact same arithmetic (scores are bit-for-bit
@@ -36,7 +46,9 @@ pub mod smoke;
 pub mod stats;
 
 pub use drift::{DriftReference, DriftRegistry, DriftTracker};
-pub use http::{serve, HttpClient, ServeConfig, ServerHandle};
+pub use http::{serve, ClientResponse, HttpClient, ServeConfig, ServerHandle};
 pub use registry::{ModelRegistry, RegistryState, ReloadReport};
-pub use scorer::{score_csv, BatchConfig, CompiledModel, MicroBatcher, ScoreOutput};
+pub use scorer::{
+    score_csv, BatchConfig, BatchGaugesSnapshot, CompiledModel, MicroBatcher, ScoreOutput,
+};
 pub use stats::ServeMetrics;

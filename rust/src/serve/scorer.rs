@@ -26,13 +26,14 @@ use crate::api::CoxModel;
 use crate::data::csv::split_csv_line;
 use crate::error::{FastSurvivalError, Result};
 use crate::metrics::BreslowBaseline;
+use crate::obs::hist::{quantile_from_counts, LatencyHistogram, N_BUCKETS};
 use crate::util::parallel::par_map_indices;
 use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::io::{BufRead, Write};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How many horizon grids each model memoizes H₀ for.
 const HORIZON_CACHE_CAP: usize = 32;
@@ -63,6 +64,10 @@ pub struct ScoreOutput {
     /// Survival probabilities per row at each requested horizon (in the
     /// request's horizon order); `None` when no horizons were asked for.
     pub survival: Option<Vec<Vec<f64>>>,
+    /// Microseconds this request spent queued in the micro-batcher
+    /// (enqueue → batch claim, linger included). 0 on the direct
+    /// [`CompiledModel::score_rows`] path — it never queues.
+    pub queue_us: u64,
 }
 
 impl CompiledModel {
@@ -200,7 +205,7 @@ impl CompiledModel {
         } else {
             None
         };
-        Ok(ScoreOutput { risk, survival })
+        Ok(ScoreOutput { risk, survival, queue_us: 0 })
     }
 }
 
@@ -229,12 +234,63 @@ struct Pending {
     n_rows: usize,
     horizons: Option<Vec<f64>>,
     tx: mpsc::Sender<Result<ScoreOutput>>,
+    /// When `submit` enqueued the request — the start of its
+    /// `queue_wait` stage.
+    enqueued: Instant,
+}
+
+/// Always-on batcher gauges: cheap relaxed atomics, updated on every
+/// enqueue and flush regardless of the obs flag (same discipline as the
+/// per-endpoint stats).
+struct BatchGauges {
+    /// High-water mark of the queue depth (requests), observed at
+    /// enqueue time.
+    queue_depth_hwm: AtomicU64,
+    /// Completed flush sweeps.
+    flushes: AtomicU64,
+    /// Requests drained across all flushes — `flushed_requests /
+    /// flushes` is the mean linger occupancy.
+    flushed_requests: AtomicU64,
+    /// Distribution of rows per flush sweep.
+    flush_rows: LatencyHistogram,
+}
+
+/// Point-in-time copy of the batcher gauges.
+#[derive(Clone, Debug)]
+pub struct BatchGaugesSnapshot {
+    pub queue_depth_hwm: u64,
+    pub flushes: u64,
+    pub flushed_requests: u64,
+    pub flush_rows_count: u64,
+    pub flush_rows_sum: u64,
+    pub flush_rows_buckets: [u64; N_BUCKETS],
+}
+
+impl BatchGaugesSnapshot {
+    /// Mean requests merged per flush sweep — how well the linger
+    /// window is amortizing concurrent arrivals.
+    pub fn mean_requests_per_flush(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.flushed_requests as f64 / self.flushes as f64
+        }
+    }
+
+    pub fn flush_rows_p50(&self) -> f64 {
+        quantile_from_counts(&self.flush_rows_buckets, 0.50)
+    }
+
+    pub fn flush_rows_p99(&self) -> f64 {
+        quantile_from_counts(&self.flush_rows_buckets, 0.99)
+    }
 }
 
 struct BatchShared {
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    gauges: BatchGauges,
 }
 
 /// The micro-batching queue: many small concurrent requests amortize
@@ -255,6 +311,12 @@ impl MicroBatcher {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            gauges: BatchGauges {
+                queue_depth_hwm: AtomicU64::new(0),
+                flushes: AtomicU64::new(0),
+                flushed_requests: AtomicU64::new(0),
+                flush_rows: LatencyHistogram::new(),
+            },
         });
         let loop_shared = Arc::clone(&shared);
         let thread = std::thread::Builder::new()
@@ -275,12 +337,34 @@ impl MicroBatcher {
         horizons: Option<Vec<f64>>,
     ) -> mpsc::Receiver<Result<ScoreOutput>> {
         let (tx, rx) = mpsc::channel();
-        {
+        let depth = {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Pending { model, rows, n_rows, horizons, tx });
-        }
+            q.push_back(Pending {
+                model,
+                rows,
+                n_rows,
+                horizons,
+                tx,
+                enqueued: Instant::now(),
+            });
+            q.len() as u64
+        };
+        self.shared.gauges.queue_depth_hwm.fetch_max(depth, Ordering::Relaxed);
         self.shared.cv.notify_one();
         rx
+    }
+
+    /// Snapshot the always-on batcher gauges (feeds `/metrics`).
+    pub fn gauges(&self) -> BatchGaugesSnapshot {
+        let g = &self.shared.gauges;
+        BatchGaugesSnapshot {
+            queue_depth_hwm: g.queue_depth_hwm.load(Ordering::Relaxed),
+            flushes: g.flushes.load(Ordering::Relaxed),
+            flushed_requests: g.flushed_requests.load(Ordering::Relaxed),
+            flush_rows_count: g.flush_rows.count(),
+            flush_rows_sum: g.flush_rows.sum_us(),
+            flush_rows_buckets: g.flush_rows.bucket_counts(),
+        }
     }
 }
 
@@ -320,6 +404,7 @@ fn batcher_loop(shared: &BatchShared, cfg: &BatchConfig) {
         }
         // Claim up to max_rows worth of requests.
         let mut batch: Vec<Pending> = Vec::new();
+        let mut batch_rows = 0u64;
         {
             let mut q = shared.queue.lock().unwrap();
             let mut rows = 0usize;
@@ -333,10 +418,17 @@ fn batcher_loop(shared: &BatchShared, cfg: &BatchConfig) {
                 }
                 let p = q.pop_front().unwrap();
                 rows += p.n_rows.max(1);
+                batch_rows += p.n_rows as u64;
                 batch.push(p);
             }
         }
         if !batch.is_empty() {
+            shared.gauges.flushes.fetch_add(1, Ordering::Relaxed);
+            shared
+                .gauges
+                .flushed_requests
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            shared.gauges.flush_rows.record(batch_rows);
             process_batch(batch);
         }
     }
@@ -353,12 +445,17 @@ struct Work {
 }
 
 fn process_batch(batch: Vec<Pending>) {
+    // Every request in this sweep stops waiting now — its queue_wait
+    // stage ends at the claim, before validation and scoring begin.
+    let claimed = Instant::now();
     // Resolve hazard grids and validate shapes up front; failures are
     // answered immediately and excluded from the sweep.
     let mut works: Vec<Work> = Vec::with_capacity(batch.len());
     let mut txs: Vec<mpsc::Sender<Result<ScoreOutput>>> = Vec::with_capacity(batch.len());
+    let mut queue_uss: Vec<u64> = Vec::with_capacity(batch.len());
     for pending in batch {
-        let Pending { model, rows, n_rows, horizons, tx } = pending;
+        let Pending { model, rows, n_rows, horizons, tx, enqueued } = pending;
+        let queue_us = claimed.saturating_duration_since(enqueued).as_micros() as u64;
         if rows.len() != n_rows * model.p() {
             let _ = tx.send(Err(FastSurvivalError::InvalidData(format!(
                 "row buffer has {} values, expected {} ({} rows × {} features)",
@@ -381,6 +478,7 @@ fn process_batch(batch: Vec<Pending>) {
         };
         works.push(Work { model, rows, n_rows, h0 });
         txs.push(tx);
+        queue_uss.push(queue_us);
     }
     // One flattened parallel sweep over every row of every request.
     let mut jobs: Vec<(usize, usize)> = Vec::new();
@@ -404,7 +502,7 @@ fn process_batch(batch: Vec<Pending>) {
     // Hand results back per request, moving each survival curve out of
     // the sweep's output (no per-row clones on the hot path).
     let mut results = per_row.into_iter();
-    for (work, tx) in works.iter().zip(&txs) {
+    for ((work, tx), queue_us) in works.iter().zip(&txs).zip(queue_uss) {
         let mut risk = Vec::with_capacity(work.n_rows);
         let mut curves = Vec::with_capacity(if work.h0.is_some() { work.n_rows } else { 0 });
         for _ in 0..work.n_rows {
@@ -415,7 +513,7 @@ fn process_batch(batch: Vec<Pending>) {
             }
         }
         let survival = if work.h0.is_some() { Some(curves) } else { None };
-        let _ = tx.send(Ok(ScoreOutput { risk, survival }));
+        let _ = tx.send(Ok(ScoreOutput { risk, survival, queue_us }));
     }
 }
 
@@ -704,6 +802,40 @@ mod tests {
         // Bad shapes are answered per-request, not dropped.
         let rx = batcher.submit(Arc::clone(&compiled), vec![1.0; 3], 1, None);
         assert!(rx.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn batcher_gauges_and_queue_wait_are_recorded() {
+        let (ds, model) = fitted();
+        let compiled = Arc::new(CompiledModel::compile(&model, "m", 1));
+        let batcher = MicroBatcher::new(BatchConfig { max_batch_rows: 64, max_wait_us: 500 });
+        let n_requests = 12usize;
+        let outs: Vec<ScoreOutput> = (0..n_requests)
+            .map(|i| {
+                let rows = row_major(&ds.x, &[i % ds.n()]);
+                batcher
+                    .submit(Arc::clone(&compiled), rows, 1, None)
+                    .recv()
+                    .unwrap()
+                    .unwrap()
+            })
+            .collect();
+        // Queue wait spans enqueue → claim, so the 500µs linger is a
+        // floor for every batched request; the direct path reports 0.
+        for out in &outs {
+            assert!(out.queue_us >= 400, "linger not reflected: {}", out.queue_us);
+        }
+        let direct = compiled.score_rows(&row_major(&ds.x, &[0]), 1, None).unwrap();
+        assert_eq!(direct.queue_us, 0);
+        let g = batcher.gauges();
+        assert!(g.queue_depth_hwm >= 1);
+        assert!(g.flushes >= 1 && g.flushes <= n_requests as u64);
+        assert_eq!(g.flushed_requests, n_requests as u64);
+        assert_eq!(g.flush_rows_count, g.flushes);
+        assert_eq!(g.flush_rows_sum, n_requests as u64, "one row per request");
+        assert!(g.mean_requests_per_flush() >= 1.0);
+        assert!(g.flush_rows_p50() > 0.0);
+        assert!(g.flush_rows_p50() <= g.flush_rows_p99());
     }
 
     #[test]

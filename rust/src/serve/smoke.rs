@@ -1,17 +1,35 @@
 //! The `serve-smoke` CLI subcommand: an end-to-end serving benchmark
 //! and correctness gate, CI's proof that the scoring server holds up
-//! under concurrent load.
+//! under concurrent load — and that watching it costs (almost) nothing.
 //!
 //! One run: fit a p-feature model on synthetic data, publish it to a
 //! temp artifact directory, start the HTTP server on an OS-assigned
-//! port, fire a concurrent multi-client scoring burst (keep-alive
-//! connections, fixed-size row batches), POST `/v1/reload` several
-//! times mid-burst, and assert that every response is a 200 whose risk
-//! vector is **bitwise** equal to in-process `CoxModel::predict_risk`
-//! on the same rows. Throughput (rows/sec) and exact client-side
-//! p50/p99 latencies land in `BENCH_serve.json`; any HTTP error,
-//! parity mismatch, or failed reload makes the run exit nonzero, so CI
-//! can gate on it directly.
+//! port, and fire the same concurrent multi-client scoring burst
+//! (keep-alive connections, fixed-size row batches, `/v1/reload`
+//! hot-swaps riding the first burst of each phase) twice over:
+//!
+//! 1. **obs off** — request-level observability disabled, `--obs-reps`
+//!    repetitions, best-of throughput is the baseline;
+//! 2. **obs on** — flight recorder + sliced metrics + access log all
+//!    recording, same repetitions, best-of throughput is the treatment.
+//!
+//! Every response must be a 200 whose risk vector is **bitwise** equal
+//! to in-process `CoxModel::predict_risk` on the same rows. On top of
+//! the classic burst gates, three request-obs gates ride the run:
+//!
+//! * **overhead** — `(off − on) / off` throughput loss, checked against
+//!   the committed `serve_obs_gate` when `--check ci/bench_baseline.json`
+//!   is passed (same-run off/on, so machine speed cancels);
+//! * **reconciliation** — server-side p50/p99 from the flight
+//!   recorder's exact per-request totals (`/debug/trace`) must agree
+//!   with the client-side quantiles within `--recon-tol-pct`;
+//! * **access log** — exactly one well-formed JSONL line per scoring
+//!   request, unique request IDs, and per-line stage micros that sum to
+//!   the recorded total within 5% (or 25 µs on tiny requests).
+//!
+//! Throughput, latency quantiles, and the whole request-obs block land
+//! in `BENCH_serve.json`; any failed gate makes the run exit nonzero,
+//! so CI can gate on it directly.
 
 use super::http::{serve, HttpClient, ServeConfig};
 use super::registry::ModelRegistry;
@@ -20,8 +38,11 @@ use crate::api::json;
 use crate::api::CoxFit;
 use crate::data::synthetic::{generate, SyntheticConfig};
 use crate::error::{FastSurvivalError, Result};
+use crate::obs::recorder::parse_request_records;
 use crate::util::args::Args;
 use crate::util::parallel::num_threads;
+use std::collections::BTreeSet;
+use std::net::SocketAddr;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,6 +55,50 @@ struct ClientOutcome {
     io_errors: usize,
 }
 
+/// One full multi-client burst, aggregated.
+struct BurstResult {
+    latencies_ms: Vec<f64>,
+    non_200: usize,
+    parity_failures: usize,
+    io_errors: usize,
+    reload_failures: usize,
+    wall_secs: f64,
+}
+
+/// Exact ceil-rank quantile of an ascending-sorted sample.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[i - 1]
+}
+
+/// The committed `serve_obs_gate` block of a `--check` baseline file.
+struct ServeObsGate {
+    enforce: bool,
+    max_overhead_pct: f64,
+}
+
+/// Parse `serve_obs_gate` out of `ci/bench_baseline.json`; `Ok(None)`
+/// when the file has no such block (older baselines stay compatible).
+fn load_serve_obs_gate(path: &str) -> Result<Option<ServeObsGate>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| FastSurvivalError::io(format!("reading baseline {path}"), e))?;
+    let doc = json::parse(&text)?;
+    let gate = match doc.get("serve_obs_gate") {
+        None => return Ok(None),
+        Some(g) => g,
+    };
+    Ok(Some(ServeObsGate {
+        enforce: gate.get("enforce").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false),
+        max_overhead_pct: gate
+            .get("max_overhead_pct")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(1.0),
+    }))
+}
+
 pub fn run(args: &Args) -> Result<()> {
     let p = args.get_or("p", 500usize);
     let batch_rows = args.get_or("batch-rows", 64usize);
@@ -41,7 +106,12 @@ pub fn run(args: &Args) -> Result<()> {
     let requests = args.get_or("requests", 25usize).max(1);
     let reloads = args.get_or("reloads", 4usize);
     let seed = args.get_or("seed", 7u64);
+    let obs_reps = args.get_or("obs-reps", 2usize).max(1);
+    let slow_ms = args.get_or("slow-ms", 250u64);
+    let recon_tol_pct = args.get_or("recon-tol-pct", 10.0f64);
     let out_path = args.str_or("out", "BENCH_serve.json");
+    let trace_dump = args.get("trace-dump").map(|s| s.to_string());
+    let check = args.get("check").map(|s| s.to_string());
 
     // 1. Train a model at the tracked workload shape. Accuracy is
     // irrelevant here — the burst measures the serving path — so a few
@@ -51,17 +121,28 @@ pub fn run(args: &Args) -> Result<()> {
     let model = CoxFit::new().l2(1.0).max_iters(6).tol(1e-4).fit(&ds)?;
     println!(
         "serve-smoke: model p={p} nonzero={} · {clients} clients × {requests} requests \
-         × {batch_rows} rows · {reloads} mid-burst reloads",
+         × {batch_rows} rows · {reloads} mid-burst reloads · {obs_reps} reps per obs phase",
         model.nonzero_coefficients(0.0).len()
     );
 
-    // 2. Publish to a temp artifact directory and start the server.
+    // 2. Publish to a temp artifact directory and start the server with
+    // the full request-obs stack wired up: access log, slow capture,
+    // and a flight recorder big enough to hold every obs-on request.
     let dir = std::env::temp_dir().join(format!("fs_serve_smoke_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir)
         .map_err(|e| FastSurvivalError::io(format!("creating {dir:?}"), e))?;
     model.save(&dir.join("risk@1.json"))?;
     let registry = Arc::new(ModelRegistry::open(&dir)?);
+    let access_log_path = args
+        .get("access-log")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| dir.join("access_log.jsonl").to_string_lossy().into_owned());
+    // The server appends; start from a clean file so line counts are
+    // exact across reruns.
+    let _ = std::fs::remove_file(&access_log_path);
+    let burst_requests = clients * requests;
+    let recorder_capacity = obs_reps * burst_requests + reloads + 64;
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
         // One worker per client connection plus slack for the reloader,
@@ -69,10 +150,13 @@ pub fn run(args: &Args) -> Result<()> {
         workers: args.get_or("workers", clients + 2).max(num_threads()),
         max_body_bytes: 32 << 20,
         batch: BatchConfig::default(),
+        access_log: Some(access_log_path.clone()),
+        slow_ms,
+        recorder_capacity,
     };
     let handle = serve(Arc::clone(&registry), &cfg)?;
     let addr = handle.local_addr();
-    println!("serve-smoke: listening on http://{addr}");
+    println!("serve-smoke: listening on http://{addr} · access log {access_log_path}");
 
     // 3. Distinct row batch + expected (bitwise) risks per client.
     let mut bodies: Vec<String> = Vec::with_capacity(clients);
@@ -94,16 +178,270 @@ pub fn run(args: &Args) -> Result<()> {
         bodies.push(body);
     }
 
-    // 4. The burst: every client hammers its batch over one keep-alive
-    // connection while the reloader hot-swaps the registry mid-flight.
+    // 4. The A/B phases: identical burst workloads with request-level
+    // observability off, then on. The reloader rides the first burst of
+    // each phase so both phases pay the same hot-swap traffic.
+    let per_burst_rps = |b: &BurstResult, tag: &str, rep: usize| -> f64 {
+        let ok = b.latencies_ms.len().saturating_sub(b.non_200);
+        let rps =
+            if b.wall_secs > 0.0 { (ok * batch_rows) as f64 / b.wall_secs } else { 0.0 };
+        println!(
+            "serve-smoke: [{tag}] burst {}/{obs_reps}: {} responses in {:.2}s · {rps:.0} rows/s",
+            rep + 1,
+            b.latencies_ms.len(),
+            b.wall_secs
+        );
+        rps
+    };
+    crate::obs::set_enabled(false);
+    let mut off_bursts: Vec<BurstResult> = Vec::with_capacity(obs_reps);
+    let mut off_best = 0.0f64;
+    for rep in 0..obs_reps {
+        let b = one_burst(addr, &bodies, &expected, requests, if rep == 0 { reloads } else { 0 });
+        off_best = off_best.max(per_burst_rps(&b, "obs off", rep));
+        off_bursts.push(b);
+    }
+    crate::obs::set_enabled(true);
+    let mut on_bursts: Vec<BurstResult> = Vec::with_capacity(obs_reps);
+    let mut on_best = 0.0f64;
+    for rep in 0..obs_reps {
+        let b = one_burst(addr, &bodies, &expected, requests, if rep == 0 { reloads } else { 0 });
+        on_best = on_best.max(per_burst_rps(&b, "obs on", rep));
+        on_bursts.push(b);
+    }
+    let overhead_pct =
+        if off_best > 0.0 { (off_best - on_best) / off_best * 100.0 } else { f64::NAN };
+
+    // 5. Aggregate. Error counters span both phases; the reported
+    // latency quantiles come from the obs-on phase (what production
+    // runs), which is also what the server-side records cover.
+    let mut on_latencies: Vec<f64> = Vec::new();
+    let mut total_responses = 0usize;
+    let mut non_200 = 0usize;
+    let mut parity_failures = 0usize;
+    let mut io_errors = 0usize;
+    let mut reload_failures = 0usize;
+    let mut wall_secs = 0.0f64;
+    for b in off_bursts.iter().chain(on_bursts.iter()) {
+        total_responses += b.latencies_ms.len();
+        non_200 += b.non_200;
+        parity_failures += b.parity_failures;
+        io_errors += b.io_errors;
+        reload_failures += b.reload_failures;
+        wall_secs += b.wall_secs;
+    }
+    for b in &on_bursts {
+        on_latencies.extend_from_slice(&b.latencies_ms);
+    }
+    on_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let client_p50 = quantile(&on_latencies, 0.50);
+    let client_p99 = quantile(&on_latencies, 0.99);
+    let rows_per_sec = on_best;
+
+    // 6. Server-side truth: the flight recorder holds exact per-request
+    // lifecycle totals for every obs-on request, so its score-request
+    // quantiles must reconcile with what the clients measured.
+    let trace_body = HttpClient::connect(addr)
+        .and_then(|mut cl| cl.get(&format!("/debug/trace?n={recorder_capacity}")))
+        .map(|r| r.body)
+        .unwrap_or_default();
+    if let Some(path) = &trace_dump {
+        std::fs::write(Path::new(path), &trace_body)
+            .map_err(|e| FastSurvivalError::io(format!("writing {path}"), e))?;
+        println!("serve-smoke: wrote flight-recorder dump to {path}");
+    }
+    let slow_records = match json::parse(&trace_body) {
+        Ok(doc) => doc
+            .require("slow")
+            .ok()
+            .and_then(|s| s.as_array().ok().map(|a| a.len()))
+            .unwrap_or(0),
+        Err(_) => 0,
+    };
+    let server_records = parse_request_records(&trace_body).unwrap_or_default();
+    let mut server_score_ms: Vec<f64> = server_records
+        .iter()
+        .filter(|r| r.endpoint == "score" && r.status == 200)
+        .map(|r| r.total_us as f64 / 1e3)
+        .collect();
+    server_score_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let server_p50 = quantile(&server_score_ms, 0.50);
+    let server_p99 = quantile(&server_score_ms, 0.99);
+    let delta_pct = |server: f64, client: f64| -> f64 {
+        if client > 0.0 { ((server - client) / client * 100.0).abs() } else { f64::NAN }
+    };
+    let recon_d50 = delta_pct(server_p50, client_p50);
+    let recon_d99 = delta_pct(server_p99, client_p99);
+    let recon_ok = !server_score_ms.is_empty()
+        && recon_d50.is_finite()
+        && recon_d50 <= recon_tol_pct
+        && recon_d99.is_finite()
+        && recon_d99 <= recon_tol_pct;
+
+    // 7. Server metrics snapshot rides along for diagnosis, then shut
+    // down — which joins every worker, so the access log is complete.
+    let server_metrics = HttpClient::connect(addr)
+        .and_then(|mut cl| cl.get("/metrics"))
+        .map(|r| r.body)
+        .unwrap_or_else(|_| "null".into());
+    handle.shutdown();
+
+    // 8. Access-log validation: exactly one line per obs-on scoring
+    // response, unique IDs, stage micros that sum to each total.
+    let expected_score_lines: usize = on_bursts.iter().map(|b| b.latencies_ms.len()).sum();
+    let log_text = std::fs::read_to_string(&access_log_path).unwrap_or_default();
+    let log_records = parse_request_records(&log_text).unwrap_or_default();
+    let score_lines = log_records.iter().filter(|r| r.endpoint == "score").count();
+    let unique_ids: BTreeSet<&str> = log_records.iter().map(|r| r.id.as_str()).collect();
+    let mut stage_sum_bad = 0usize;
+    for r in &log_records {
+        let sum = r.stage_sum_us() as i64;
+        let total = r.total_us as i64;
+        let tol = ((total as f64 * 0.05) as i64).max(25);
+        if (sum - total).abs() > tol {
+            stage_sum_bad += 1;
+        }
+    }
+    let access_log_ok = !log_records.is_empty()
+        && score_lines == expected_score_lines
+        && unique_ids.len() == log_records.len()
+        && stage_sum_bad == 0;
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // 9. Gates.
+    let all_200 = non_200 == 0 && io_errors == 0;
+    let parity_ok = parity_failures == 0;
+    let reloads_ok = reload_failures == 0;
+    let gate_cfg = match &check {
+        None => None,
+        Some(path) => load_serve_obs_gate(path)?,
+    };
+    let max_overhead = gate_cfg.as_ref().map(|g| g.max_overhead_pct).unwrap_or(1.0);
+    let obs_overhead_ok = overhead_pct.is_finite() && overhead_pct <= max_overhead;
+
+    println!(
+        "serve-smoke: {total_responses} responses in {wall_secs:.2}s · obs-on best \
+         {rows_per_sec:.0} rows/s · p50 {client_p50:.2} ms · p99 {client_p99:.2} ms · \
+         non-200 {non_200} · io errors {io_errors} · parity failures {parity_failures} · \
+         reload failures {reload_failures}"
+    );
+    println!(
+        "serve-smoke: request-obs overhead {overhead_pct:.2}% (off {off_best:.0} vs on \
+         {on_best:.0} rows/s) · server p50/p99 {server_p50:.2}/{server_p99:.2} ms vs \
+         client {client_p50:.2}/{client_p99:.2} ms (Δ {recon_d50:.1}%/{recon_d99:.1}%, \
+         tol {recon_tol_pct}%) · access log {} lines ({score_lines} score, \
+         {stage_sum_bad} bad stage sums) · {slow_records} slow records",
+        log_records.len()
+    );
+
+    // 10. Emit BENCH_serve.json.
+    let mut out = String::with_capacity(2048);
+    out.push_str("{\n  \"schema_version\": 2,\n  \"bench\": \"serve\",\n  \"workload\": {");
+    out.push_str(&format!(
+        "\"p\": {p}, \"batch_rows\": {batch_rows}, \"clients\": {clients}, \
+         \"requests_per_client\": {requests}, \"reloads\": {reloads}, \"seed\": {seed}, \
+         \"obs_reps\": {obs_reps}, \"slow_ms\": {slow_ms}, \"threads\": {}",
+        num_threads()
+    ));
+    out.push_str("},\n  \"results\": {\"rows_per_sec\": ");
+    json::write_f64(&mut out, rows_per_sec);
+    out.push_str(", \"p50_ms\": ");
+    json::write_f64(&mut out, client_p50);
+    out.push_str(", \"p99_ms\": ");
+    json::write_f64(&mut out, client_p99);
+    out.push_str(", \"wall_secs\": ");
+    json::write_f64(&mut out, wall_secs);
+    out.push_str(&format!(
+        ", \"requests\": {total_responses}, \"non_200\": {non_200}, \
+         \"io_errors\": {io_errors}, \"parity_failures\": {parity_failures}, \
+         \"reload_failures\": {reload_failures}"
+    ));
+    out.push_str("},\n  \"request_obs\": {\"off_rows_per_sec_best\": ");
+    json::write_f64(&mut out, off_best);
+    out.push_str(", \"on_rows_per_sec_best\": ");
+    json::write_f64(&mut out, on_best);
+    out.push_str(", \"overhead_pct\": ");
+    json::write_f64(&mut out, overhead_pct);
+    out.push_str(", \"server_p50_ms\": ");
+    json::write_f64(&mut out, server_p50);
+    out.push_str(", \"server_p99_ms\": ");
+    json::write_f64(&mut out, server_p99);
+    out.push_str(", \"client_p50_ms\": ");
+    json::write_f64(&mut out, client_p50);
+    out.push_str(", \"client_p99_ms\": ");
+    json::write_f64(&mut out, client_p99);
+    out.push_str(", \"recon_delta_p50_pct\": ");
+    json::write_f64(&mut out, recon_d50);
+    out.push_str(", \"recon_delta_p99_pct\": ");
+    json::write_f64(&mut out, recon_d99);
+    out.push_str(", \"recon_tol_pct\": ");
+    json::write_f64(&mut out, recon_tol_pct);
+    out.push_str(&format!(
+        ", \"server_score_records\": {}, \"access_log_lines\": {}, \
+         \"access_log_score_lines\": {score_lines}, \"slow_records\": {slow_records}",
+        server_score_ms.len(),
+        log_records.len()
+    ));
+    out.push_str("},\n  \"gate\": {");
+    out.push_str(&format!(
+        "\"all_200\": {all_200}, \"bitwise_parity\": {parity_ok}, \
+         \"reloads_ok\": {reloads_ok}, \"recon_ok\": {recon_ok}, \
+         \"access_log_ok\": {access_log_ok}, \"obs_overhead_ok\": {obs_overhead_ok}"
+    ));
+    out.push_str("},\n  \"server_metrics\": ");
+    out.push_str(&server_metrics);
+    out.push_str("\n}\n");
+    std::fs::write(Path::new(&out_path), &out)
+        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
+    println!("serve-smoke: wrote {out_path}");
+
+    // Leave the process-wide flag the way a fresh process starts.
+    crate::obs::set_enabled(false);
+
+    if !(all_200 && parity_ok && reloads_ok && recon_ok && access_log_ok) {
+        return Err(FastSurvivalError::Serve(format!(
+            "smoke gate failed: non_200={non_200} io_errors={io_errors} \
+             parity_failures={parity_failures} reload_failures={reload_failures} \
+             recon_ok={recon_ok} (Δp50 {recon_d50:.1}% Δp99 {recon_d99:.1}% vs tol \
+             {recon_tol_pct}%) access_log_ok={access_log_ok} ({score_lines} score lines, \
+             expected {expected_score_lines}, {stage_sum_bad} bad stage sums)"
+        )));
+    }
+    if let Some(g) = &gate_cfg {
+        if !obs_overhead_ok {
+            let msg = format!(
+                "serve_obs_gate: request-obs overhead {overhead_pct:.2}% exceeds \
+                 {max_overhead:.2}% (off {off_best:.0} rows/s vs on {on_best:.0} rows/s)"
+            );
+            if g.enforce {
+                return Err(FastSurvivalError::PerfRegression(msg));
+            }
+            println!("serve-smoke: advisory (enforce=false): {msg}");
+        } else {
+            println!(
+                "serve-smoke: serve_obs_gate ok ({overhead_pct:.2}% ≤ {max_overhead:.2}%)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One full burst: every client hammers its batch over one keep-alive
+/// connection; when `reloads > 0` a reloader thread hot-swaps the
+/// registry mid-flight.
+fn one_burst(
+    addr: SocketAddr,
+    bodies: &[String],
+    expected: &[Vec<f64>],
+    requests: usize,
+    reloads: usize,
+) -> BurstResult {
     let wall_start = Instant::now();
-    let mut outcomes: Vec<ClientOutcome> = Vec::with_capacity(clients);
+    let mut outcomes: Vec<ClientOutcome> = Vec::with_capacity(bodies.len());
     let mut reload_failures = 0usize;
     std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(clients);
-        for c in 0..clients {
-            let body = &bodies[c];
-            let expect = &expected[c];
+        let mut handles = Vec::with_capacity(bodies.len());
+        for (body, expect) in bodies.iter().zip(expected) {
             handles.push(scope.spawn(move || client_burst(addr, body, expect, requests)));
         }
         let reloader = scope.spawn(move || {
@@ -126,94 +464,21 @@ pub fn run(args: &Args) -> Result<()> {
         reload_failures = reloader.join().expect("reloader thread panicked");
     });
     let wall_secs = wall_start.elapsed().as_secs_f64();
-
-    // 5. Aggregate.
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut non_200 = 0usize;
-    let mut parity_failures = 0usize;
-    let mut io_errors = 0usize;
-    for o in &outcomes {
-        latencies.extend_from_slice(&o.latencies_ms);
-        non_200 += o.non_200;
-        parity_failures += o.parity_failures;
-        io_errors += o.io_errors;
-    }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let quantile = |q: f64| -> f64 {
-        if latencies.is_empty() {
-            return 0.0;
-        }
-        let i = ((q * latencies.len() as f64).ceil() as usize).clamp(1, latencies.len());
-        latencies[i - 1]
+    let mut out = BurstResult {
+        latencies_ms: Vec::new(),
+        non_200: 0,
+        parity_failures: 0,
+        io_errors: 0,
+        reload_failures,
+        wall_secs,
     };
-    let ok_requests = latencies.len() - non_200.min(latencies.len());
-    let rows_per_sec = if wall_secs > 0.0 {
-        (ok_requests * batch_rows) as f64 / wall_secs
-    } else {
-        0.0
-    };
-    let all_200 = non_200 == 0 && io_errors == 0;
-    let parity_ok = parity_failures == 0;
-    let reloads_ok = reload_failures == 0;
-
-    println!(
-        "serve-smoke: {} requests in {wall_secs:.2}s · {rows_per_sec:.0} rows/s · \
-         p50 {:.2} ms · p99 {:.2} ms · non-200 {non_200} · io errors {io_errors} · \
-         parity failures {parity_failures} · reload failures {reload_failures}",
-        latencies.len(),
-        quantile(0.50),
-        quantile(0.99),
-    );
-
-    // 6. Server-side metrics snapshot rides along for diagnosis.
-    let server_metrics = HttpClient::connect(addr)
-        .and_then(|mut cl| cl.get("/metrics"))
-        .map(|r| r.body)
-        .unwrap_or_else(|_| "null".into());
-    handle.shutdown();
-    let _ = std::fs::remove_dir_all(&dir);
-
-    // 7. Emit BENCH_serve.json.
-    let mut out = String::with_capacity(1024);
-    out.push_str("{\n  \"schema_version\": 1,\n  \"bench\": \"serve\",\n  \"workload\": {");
-    out.push_str(&format!(
-        "\"p\": {p}, \"batch_rows\": {batch_rows}, \"clients\": {clients}, \
-         \"requests_per_client\": {requests}, \"reloads\": {reloads}, \"seed\": {seed}, \
-         \"threads\": {}",
-        num_threads()
-    ));
-    out.push_str("},\n  \"results\": {\"rows_per_sec\": ");
-    json::write_f64(&mut out, rows_per_sec);
-    out.push_str(", \"p50_ms\": ");
-    json::write_f64(&mut out, quantile(0.50));
-    out.push_str(", \"p99_ms\": ");
-    json::write_f64(&mut out, quantile(0.99));
-    out.push_str(", \"wall_secs\": ");
-    json::write_f64(&mut out, wall_secs);
-    out.push_str(&format!(
-        ", \"requests\": {}, \"non_200\": {non_200}, \"io_errors\": {io_errors}, \
-         \"parity_failures\": {parity_failures}, \"reload_failures\": {reload_failures}",
-        latencies.len()
-    ));
-    out.push_str("},\n  \"gate\": {");
-    out.push_str(&format!(
-        "\"all_200\": {all_200}, \"bitwise_parity\": {parity_ok}, \
-         \"reloads_ok\": {reloads_ok}"
-    ));
-    out.push_str("},\n  \"server_metrics\": ");
-    out.push_str(&server_metrics);
-    out.push_str("\n}\n");
-    std::fs::write(Path::new(&out_path), &out)
-        .map_err(|e| FastSurvivalError::io(format!("writing {out_path}"), e))?;
-    println!("serve-smoke: wrote {out_path}");
-
-    if !(all_200 && parity_ok && reloads_ok) {
-        return Err(FastSurvivalError::Serve(format!(
-            "smoke gate failed: non_200={non_200} io_errors={io_errors} \
-             parity_failures={parity_failures} reload_failures={reload_failures}"
-        )));
+    for o in outcomes {
+        out.latencies_ms.extend_from_slice(&o.latencies_ms);
+        out.non_200 += o.non_200;
+        out.parity_failures += o.parity_failures;
+        out.io_errors += o.io_errors;
     }
-    Ok(())
+    out
 }
 
 /// One client's share of the burst: sequential keep-alive requests,
@@ -298,7 +563,11 @@ mod tests {
     #[test]
     fn quick_smoke_end_to_end() {
         // A scaled-down run of the real harness: tiny model, few
-        // clients, but the full server + burst + reload + gate path.
+        // clients, but the full server + off/on burst + reload + gate
+        // path. The guard serializes the process-wide obs flag with the
+        // other obs-global tests; the reconciliation tolerance is wide
+        // because sub-millisecond requests are fixed-overhead-dominated.
+        let _guard = crate::obs::span::test_support::obs_test_guard();
         let out = std::env::temp_dir()
             .join(format!("BENCH_serve_test_{}.json", std::process::id()));
         let args = Args::parse(
@@ -314,6 +583,12 @@ mod tests {
                 "4".into(),
                 "--reloads".into(),
                 "1".into(),
+                "--obs-reps".into(),
+                "1".into(),
+                "--slow-ms".into(),
+                "1".into(),
+                "--recon-tol-pct".into(),
+                "500".into(),
                 "--out".into(),
                 out.to_str().unwrap().to_string(),
             ]
@@ -325,6 +600,15 @@ mod tests {
         let gate = doc.require("gate").unwrap();
         assert!(gate.require("all_200").unwrap().as_bool().unwrap());
         assert!(gate.require("bitwise_parity").unwrap().as_bool().unwrap());
+        assert!(gate.require("recon_ok").unwrap().as_bool().unwrap());
+        assert!(gate.require("access_log_ok").unwrap().as_bool().unwrap());
+        let obs = doc.require("request_obs").unwrap();
+        assert!(obs.require("server_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        // 1 obs-on rep × 2 clients × 4 requests, all landing in the log.
+        assert_eq!(
+            obs.require("access_log_score_lines").unwrap().as_usize().unwrap(),
+            8
+        );
         assert!(
             doc.require("results")
                 .unwrap()
@@ -335,5 +619,31 @@ mod tests {
                 > 0.0
         );
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn serve_obs_gate_parses_and_enforces() {
+        let path = std::env::temp_dir()
+            .join(format!("fs_serve_obs_gate_{}.json", std::process::id()));
+        let path_str = path.to_str().unwrap();
+        std::fs::write(
+            &path,
+            "{\"serve_obs_gate\": {\"enforce\": true, \"max_overhead_pct\": 1.5}}",
+        )
+        .unwrap();
+        let g = load_serve_obs_gate(path_str).unwrap().unwrap();
+        assert!(g.enforce);
+        assert_eq!(g.max_overhead_pct, 1.5);
+        // No block → None (older baselines are compatible).
+        std::fs::write(&path, "{\"tolerance_pct\": 25}").unwrap();
+        assert!(load_serve_obs_gate(path_str).unwrap().is_none());
+        // enforce defaults to false, threshold to 1.0.
+        std::fs::write(&path, "{\"serve_obs_gate\": {}}").unwrap();
+        let g = load_serve_obs_gate(path_str).unwrap().unwrap();
+        assert!(!g.enforce);
+        assert_eq!(g.max_overhead_pct, 1.0);
+        // A missing file is an error, not a silent pass.
+        let _ = std::fs::remove_file(&path);
+        assert!(load_serve_obs_gate(path_str).is_err());
     }
 }

@@ -14,7 +14,7 @@
 //! publish/reject counts, live when a watch loop runs in this process.
 
 use crate::api::json;
-use crate::obs::hist::{bucket_upper_us, LatencyHistogram, N_BUCKETS};
+use crate::obs::hist::{write_prom_cumulative, LatencyHistogram};
 use crate::obs::{training_gauges, TrainingGauges};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -89,6 +89,7 @@ pub struct ServeMetrics {
     pub reload: EndpointStats,
     pub healthz: EndpointStats,
     pub metrics_ep: EndpointStats,
+    pub trace: EndpointStats,
     pub other: EndpointStats,
 }
 
@@ -101,6 +102,7 @@ impl Default for ServeMetrics {
             reload: EndpointStats::new("reload"),
             healthz: EndpointStats::new("healthz"),
             metrics_ep: EndpointStats::new("metrics"),
+            trace: EndpointStats::new("trace"),
             other: EndpointStats::new("other"),
         }
     }
@@ -115,17 +117,19 @@ impl ServeMetrics {
             "reload" => &self.reload,
             "healthz" => &self.healthz,
             "metrics" => &self.metrics_ep,
+            "trace" => &self.trace,
             _ => &self.other,
         }
     }
 
-    fn endpoints(&self) -> [&EndpointStats; 6] {
+    fn endpoints(&self) -> [&EndpointStats; 7] {
         [
             &self.score,
             &self.models,
             &self.reload,
             &self.healthz,
             &self.metrics_ep,
+            &self.trace,
             &self.other,
         ]
     }
@@ -195,39 +199,17 @@ impl ServeMetrics {
         }
         out.push_str("# TYPE fastsurvival_request_latency_us histogram\n");
         for ep in self.endpoints() {
-            let counts = ep.hist.bucket_counts();
-            let mut cum = 0u64;
-            for (i, &c) in counts.iter().enumerate() {
-                cum += c;
-                // Compact cumulative exposition: only buckets that hold
-                // samples, plus the mandatory +Inf. Recorded values are
-                // integer µs, so bucket i's inclusive upper bound is
-                // 2^i − 1 (0 for the zero bucket); the open-ended top
-                // bucket is covered by +Inf alone.
-                if c == 0 || i == N_BUCKETS - 1 {
-                    continue;
-                }
-                let le = if i == 0 { 0 } else { bucket_upper_us(i) - 1 };
-                out.push_str(&format!(
-                    "fastsurvival_request_latency_us_bucket{{endpoint=\"{}\",le=\"{}\"}} {}\n",
-                    ep.name, le, cum
-                ));
-            }
-            out.push_str(&format!(
-                "fastsurvival_request_latency_us_bucket{{endpoint=\"{}\",le=\"+Inf\"}} {}\n",
-                ep.name,
-                ep.hist.count()
-            ));
-            out.push_str(&format!(
-                "fastsurvival_request_latency_us_sum{{endpoint=\"{}\"}} {}\n",
-                ep.name,
-                ep.hist.sum_us()
-            ));
-            out.push_str(&format!(
-                "fastsurvival_request_latency_us_count{{endpoint=\"{}\"}} {}\n",
-                ep.name,
-                ep.hist.count()
-            ));
+            // Conformant cumulative exposition with a fixed `le`
+            // boundary set: every finite bucket appears on every scrape
+            // (empty ones included), so scrapers see stable series.
+            write_prom_cumulative(
+                &mut out,
+                "fastsurvival_request_latency_us",
+                &format!("endpoint=\"{}\"", ep.name),
+                &ep.hist.bucket_counts(),
+                ep.hist.count(),
+                ep.hist.sum_us(),
+            );
         }
         out.push_str("# TYPE fastsurvival_last_refit_seconds gauge\n");
         out.push_str(&format!("fastsurvival_last_refit_seconds {}\n", g.last_refit_secs));
@@ -288,7 +270,7 @@ mod tests {
         let doc = json::parse(&m.to_json()).unwrap();
         let text = m.to_prometheus();
         // Counters agree with the JSON document, endpoint by endpoint.
-        for ep in ["score", "models", "reload", "healthz", "metrics", "other"] {
+        for ep in ["score", "models", "reload", "healthz", "metrics", "trace", "other"] {
             let js = doc.require("endpoints").unwrap().require(ep).unwrap();
             for (series, field) in [
                 ("fastsurvival_requests_total", "requests"),
@@ -314,6 +296,11 @@ mod tests {
         for line in hist_lines {
             assert!(text.contains(line), "missing {line:?} in:\n{text}");
         }
+        // Fixed boundary set: empty buckets are emitted too, so every
+        // scrape exposes the same `le` series (here: nothing was ever
+        // recorded for "other", yet its zero bucket is present).
+        assert!(text
+            .contains("fastsurvival_request_latency_us_bucket{endpoint=\"other\",le=\"0\"} 0"));
         // Training gauges are present in both formats.
         assert!(text.contains("fastsurvival_publishes_total "));
         assert!(doc.require("training").is_ok());

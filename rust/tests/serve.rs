@@ -2,13 +2,21 @@
 //! atomicity under concurrent scoring, HTTP request-framing edge cases
 //! (pipelining, oversized bodies, malformed JSON), bitwise parity
 //! between HTTP-scored and in-process-scored results under a concurrent
-//! burst with mid-burst reloads, and offline CSV round-trip parity.
+//! burst with mid-burst reloads, request-level observability (request
+//! IDs, `/debug/trace`, the JSONL access log), and offline CSV
+//! round-trip parity.
+//!
+//! Tests that need request-obs recording turn the process-wide obs flag
+//! on and deliberately never turn it off — tests run concurrently, and
+//! a disable would race another test's recording window. The flag being
+//! on is harmless to the non-obs tests.
 
 use fastsurvival::api::json;
 use fastsurvival::api::{CoxFit, CoxModel};
 use fastsurvival::data::synthetic::{generate, SyntheticConfig};
 use fastsurvival::data::SurvivalDataset;
 use fastsurvival::linalg::Matrix;
+use fastsurvival::obs::parse_request_records;
 use fastsurvival::serve::http::{serve, HttpClient, ServeConfig};
 use fastsurvival::serve::registry::ModelRegistry;
 use fastsurvival::serve::scorer::{score_csv, BatchConfig, CompiledModel};
@@ -124,20 +132,32 @@ struct TestServer {
     model: CoxModel,
 }
 
-fn start_server(tag: &str, max_body: usize, workers: usize) -> TestServer {
+fn start_server_cfg(
+    tag: &str,
+    cfg_fn: impl FnOnce(&std::path::Path, &mut ServeConfig),
+) -> TestServer {
     let ds = dataset(33);
     let model = train(&ds, 1.0);
     let dir = unique_dir(tag);
     model.save(&dir.join("m@1.json")).unwrap();
     let registry = Arc::new(ModelRegistry::open(&dir).unwrap());
-    let cfg = ServeConfig {
+    let mut cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
-        workers,
-        max_body_bytes: max_body,
+        workers: 4,
+        max_body_bytes: 8 << 20,
         batch: BatchConfig::default(),
+        ..ServeConfig::default()
     };
+    cfg_fn(&dir, &mut cfg);
     let handle = serve(registry, &cfg).unwrap();
     TestServer { handle, dir, ds, model }
+}
+
+fn start_server(tag: &str, max_body: usize, workers: usize) -> TestServer {
+    start_server_cfg(tag, |_, cfg| {
+        cfg.max_body_bytes = max_body;
+        cfg.workers = workers;
+    })
 }
 
 #[test]
@@ -374,6 +394,134 @@ fn metrics_json_and_prometheus_render_the_same_snapshot() {
     drop(client);
     let dir = server.dir.clone();
     server.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------- request observability
+
+#[test]
+fn request_ids_round_trip_and_debug_trace_exposes_lifecycle() {
+    fastsurvival::obs::set_enabled(true);
+    let server = start_server_cfg("trace", |_, cfg| {
+        cfg.recorder_capacity = 64;
+    });
+    let addr = server.handle.local_addr();
+    let mut client = HttpClient::connect(addr).unwrap();
+    let body = format!(
+        "{{\"model\": \"m@1\", \"rows\": {}}}",
+        rows_json(&server.ds.x, &[0, 1])
+    );
+
+    // A caller-supplied x-request-id echoes back on the response.
+    let resp = client
+        .request_with("POST", "/v1/score", Some(&body), &[("x-request-id", "it-trace-1")])
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.request_id.as_deref(), Some("it-trace-1"));
+
+    // Without the header the server mints an id of its own.
+    let resp2 = client.post("/v1/score", &body).unwrap();
+    assert_eq!(resp2.status, 200);
+    let minted = resp2.request_id.expect("server-minted request id");
+    assert!(minted.starts_with("fs-"), "unexpected id shape: {minted}");
+
+    // The flight recorder committed both records before the same
+    // connection's next request is read, so the dump is deterministic.
+    let trace = client.get("/debug/trace?n=50").unwrap();
+    assert_eq!(trace.status, 200);
+    let doc = json::parse(&trace.body).unwrap();
+    assert!(doc.require("capacity").unwrap().as_usize().unwrap() >= 64);
+    assert!(doc.require("recorded").unwrap().as_usize().unwrap() >= 2);
+    doc.require("slow_threshold_us").unwrap();
+    doc.require("slow").unwrap();
+    let records = parse_request_records(&trace.body).unwrap();
+    let rec = records
+        .iter()
+        .find(|r| r.id == "it-trace-1")
+        .expect("tagged request in flight-recorder dump");
+    assert_eq!(rec.endpoint, "score");
+    assert_eq!(rec.status, 200);
+    assert_eq!(rec.rows, 2);
+    assert!(rec.total_us > 0);
+    // The six-stage breakdown accounts for the measured total: stage
+    // boundaries are adjacent clock reads, so only µs-level glue between
+    // them may go missing.
+    let sum = rec.stage_sum_us();
+    let tol = (rec.total_us / 20).max(25);
+    assert!(
+        sum.abs_diff(rec.total_us) <= tol,
+        "stage sum {sum} vs total {} (tol {tol})",
+        rec.total_us
+    );
+    assert!(records.iter().any(|r| r.id == minted));
+
+    // Sliced metrics picked the traffic up under the score endpoint.
+    let metrics = client.get("/metrics").unwrap();
+    let mdoc = json::parse(&metrics.body).unwrap();
+    let slices = mdoc.require("slices").unwrap().as_array().unwrap();
+    assert!(
+        slices
+            .iter()
+            .any(|s| s.get("endpoint").and_then(|e| e.as_str().ok()) == Some("score")),
+        "no score slice in {}",
+        metrics.body
+    );
+
+    // A malformed count is a client error, not a default.
+    assert_eq!(client.get("/debug/trace?n=abc").unwrap().status, 400);
+
+    drop(client);
+    let dir = server.dir.clone();
+    server.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn access_log_writes_one_valid_line_per_request() {
+    fastsurvival::obs::set_enabled(true);
+    let server = start_server_cfg("alog", |dir, cfg| {
+        cfg.access_log = Some(dir.join("access.jsonl").to_string_lossy().into_owned());
+    });
+    let addr = server.handle.local_addr();
+    let mut client = HttpClient::connect(addr).unwrap();
+    let body = format!(
+        "{{\"model\": \"m@1\", \"rows\": {}}}",
+        rows_json(&server.ds.x, &[0, 1, 2])
+    );
+    let mut ids = Vec::new();
+    for i in 0..5 {
+        let resp = client
+            .request_with(
+                "POST",
+                "/v1/score",
+                Some(&body),
+                &[("x-request-id", &format!("it-alog-{i}"))],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        ids.push(resp.request_id.expect("echoed id"));
+    }
+    assert_eq!(client.get("/healthz").unwrap().status, 200);
+
+    // shutdown joins every worker, and each worker appends its log line
+    // before looping for the next request, so the file is complete here.
+    drop(client);
+    let dir = server.dir.clone();
+    server.handle.shutdown();
+
+    let text = std::fs::read_to_string(dir.join("access.jsonl")).unwrap();
+    let records = parse_request_records(&text).unwrap();
+    assert_eq!(records.len(), 6, "one line per request:\n{text}");
+    let score: Vec<_> = records.iter().filter(|r| r.endpoint == "score").collect();
+    assert_eq!(score.len(), 5);
+    for (i, rec) in score.iter().enumerate() {
+        assert_eq!(rec.id, ids[i], "ids round-trip in request order");
+        assert_eq!(rec.status, 200);
+        assert_eq!(rec.rows, 3);
+        let tol = (rec.total_us / 20).max(25);
+        assert!(rec.stage_sum_us().abs_diff(rec.total_us) <= tol);
+    }
+    assert!(records.iter().any(|r| r.endpoint == "healthz"));
     let _ = std::fs::remove_dir_all(&dir);
 }
 
